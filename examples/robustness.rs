@@ -1,0 +1,46 @@
+//! §V.B robustness & scalability: the four stress experiments.
+//!
+//! ```sh
+//! cargo run --release --example robustness
+//! ```
+
+use agentsrv::repro;
+
+fn main() {
+    println!("== 3x demand overload (§V.B) ==");
+    let ov = repro::overload_experiment(3.0);
+    println!("  latency 1x      : {:>8.1} s", ov.baseline_latency_s);
+    println!("  latency 3x      : {:>8.1} s  ({:+.0}%)",
+             ov.overload_latency_s, ov.degradation_pct);
+    println!("  min agent tput  : {:>8.1} rps (1x) -> {:>6.1} rps (3x)",
+             ov.baseline_min_throughput, ov.overload_min_throughput);
+    println!("  starvation      : {}",
+             if ov.overload_min_throughput > 0.0 { "prevented" }
+             else { "OCCURRED" });
+
+    println!("\n== 10x arrival spike, 10 ms resolution (§V.B) ==");
+    let sp = repro::spike_experiment();
+    println!("  pre-spike alloc : {:>8.3}", sp.pre_spike_alloc);
+    println!("  post-spike alloc: {:>8.3}", sp.post_spike_alloc);
+    println!("  adaptation time : {:>8.1} ms (paper: within 100 ms)",
+             sp.adaptation_ms);
+
+    println!("\n== 90% single-agent dominance (§V.B) ==");
+    let dm = repro::dominance_experiment(0.9);
+    println!("  {:<14} {:>14} {:>11}", "agent", "request share",
+             "GPU share");
+    for (name, req, gpu) in &dm.agents {
+        println!("  {name:<14} {:>13.1}% {:>10.1}%", req * 100.0,
+                 gpu * 100.0);
+    }
+    println!("  monopolization  : {}",
+             if dm.dominant_gpu_share < 0.55 { "prevented" }
+             else { "OCCURRED" });
+
+    println!("\n== allocator O(N) scaling (§V.B: < 1 ms) ==");
+    for p in repro::scaling_experiment(&[4, 16, 64, 256, 1024, 4096]) {
+        println!("  N={:<6} {:>10.0} ns/allocation  ({})", p.n_agents,
+                 p.ns_per_call,
+                 if p.ns_per_call < 1e6 { "< 1 ms OK" } else { "SLOW" });
+    }
+}

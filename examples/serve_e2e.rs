@@ -1,0 +1,166 @@
+//! End-to-end serving driver — the full three-layer system on a real
+//! workload.
+//!
+//! Loads the four AOT-compiled agent models (JAX+Pallas → HLO text → PJRT),
+//! starts the serving stack, then:
+//!
+//!   1. drives an open-loop Poisson request stream with the paper's §IV.A
+//!      per-agent arrival mix for a fixed duration, and
+//!   2. runs a batch of collaborative reasoning workflows
+//!      (coordinator → specialists → coordinator),
+//!
+//! reporting per-agent latency quantiles, achieved throughput, dynamic
+//! batching behavior, and the GPU shares the adaptive allocator produced.
+//! Results are recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_e2e [-- \
+//!     --policy adaptive --rps 200 --seconds 5 --workflows 20]
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use agentsrv::agents::AgentProfile;
+use agentsrv::coordinator::{ReasoningPipeline, TaskKind};
+use agentsrv::metrics::Histogram;
+use agentsrv::runtime::Manifest;
+use agentsrv::server::{AgentServer, ServerConfig};
+use agentsrv::util::Rng;
+
+fn arg(args: &[String], key: &str, default: &str) -> String {
+    args.iter().position(|a| a == key)
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let policy = arg(&args, "--policy", "adaptive");
+    let rps: f64 = arg(&args, "--rps", "200").parse().expect("--rps");
+    let seconds: f64 =
+        arg(&args, "--seconds", "5").parse().expect("--seconds");
+    let n_workflows: u64 =
+        arg(&args, "--workflows", "20").parse().expect("--workflows");
+    let artifacts = arg(&args, "--artifacts", "artifacts");
+
+    let manifest = Manifest::load(artifacts.as_ref())
+        .expect("artifacts missing — run `make artifacts` first");
+    let seq = manifest.seq_len;
+    let vocabs: Vec<(String, usize)> = manifest.agents.iter()
+        .map(|a| (a.name.clone(), a.vocab)).collect();
+    let names: Vec<String> =
+        vocabs.iter().map(|(n, _)| n.clone()).collect();
+
+    println!("loading + compiling {} agents (PJRT CPU) ...",
+             manifest.agents.len());
+    let t0 = Instant::now();
+    let mut cfg = ServerConfig::new(&artifacts);
+    cfg.policy = policy.clone();
+    let server = Arc::new(AgentServer::start(cfg).expect("server"));
+    println!("ready in {:.1?}\n", t0.elapsed());
+
+    // ---- Phase 1: open-loop Poisson stream, paper arrival mix ---------
+    println!("phase 1: open-loop load, {rps:.0} rps total for \
+              {seconds:.0}s (policy: {policy})");
+    let rates = AgentProfile::paper_arrival_rates();
+    let total_rate: f64 = rates.iter().sum();
+
+    let mut rng = Rng::new(42);
+    let start = Instant::now();
+    let mut next = start;
+    let mut pending = Vec::new();
+    let mut submitted: u64 = 0;
+    while start.elapsed().as_secs_f64() < seconds {
+        // Exponential inter-arrival at the aggregate rate.
+        next += Duration::from_secs_f64(rng.exponential(rps));
+        let now = Instant::now();
+        if next > now {
+            std::thread::sleep(next - now);
+        }
+        // Pick agent ∝ paper rates.
+        let mut pick = rng.uniform() * total_rate;
+        let mut agent = 0usize;
+        for (j, r) in rates.iter().enumerate() {
+            if pick < *r {
+                agent = j;
+                break;
+            }
+            pick -= r;
+        }
+        let vocab = vocabs[agent].1;
+        let tokens: Vec<i32> = (0..seq)
+            .map(|k| ((submitted * 131 + k as u64 * 7 + 3)
+                      % vocab as u64) as i32)
+            .collect();
+        pending.push((agent, server.submit(&names[agent], tokens)
+                      .expect("submit")));
+        submitted += 1;
+    }
+
+    // Drain: latencies were measured server-side at completion time, so a
+    // post-hoc sequential drain loses nothing.
+    let mut per_agent_hist: Vec<Histogram> =
+        (0..names.len()).map(|_| Histogram::latency_seconds()).collect();
+    let mut completed = 0u64;
+    for (agent, rx) in pending {
+        let done = rx.recv().expect("serving thread alive")
+            .expect("request served");
+        per_agent_hist[agent].record(done.latency.as_secs_f64());
+        completed += 1;
+    }
+    let phase_elapsed = start.elapsed().as_secs_f64();
+
+    println!("  submitted {submitted}, completed {completed} in \
+              {phase_elapsed:.2}s  => {:.1} req/s served",
+             completed as f64 / phase_elapsed);
+    println!("  {:<14} {:>7} {:>12} {:>12}", "agent", "n", "p50", "p99");
+    for (i, h) in per_agent_hist.iter().enumerate() {
+        if h.count() > 0 {
+            println!("  {:<14} {:>7} {:>11.2}ms {:>11.2}ms", names[i],
+                     h.count(), h.p50() * 1e3, h.p99() * 1e3);
+        }
+    }
+
+    // ---- Phase 2: collaborative reasoning workflows --------------------
+    println!("\nphase 2: {n_workflows} collaborative workflows");
+    let pipeline = ReasoningPipeline::new(&server, vocabs.clone());
+    let mut rng = Rng::new(7);
+    let mut by_kind: HashMap<String, (u64, f64)> = HashMap::new();
+    let wf_start = Instant::now();
+    for i in 0..n_workflows {
+        let kind = TaskKind::sample(&mut rng);
+        let wf = pipeline.run(&server, kind, i).expect("workflow");
+        let e = by_kind.entry(format!("{kind:?}")).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += wf.total.as_secs_f64();
+    }
+    let wf_elapsed = wf_start.elapsed().as_secs_f64();
+    let mut kinds: Vec<_> = by_kind.iter().collect();
+    kinds.sort_by_key(|(k, _)| (*k).clone());
+    for (kind, (n, total)) in kinds {
+        println!("  {:<14} n={:<3} mean total {:.2} ms", kind, n,
+                 total / *n as f64 * 1e3);
+    }
+    println!("  workflow throughput: {:.1} tasks/s",
+             n_workflows as f64 / wf_elapsed);
+
+    // ---- Final stats ----------------------------------------------------
+    let server = Arc::try_unwrap(server).ok().expect("sole owner");
+    let stats = server.shutdown();
+    println!("\nserver stats:");
+    println!("  {:<14} {:>9} {:>12} {:>12} {:>11} {:>10}", "agent",
+             "completed", "p50", "p99", "mean batch", "gpu share");
+    for (name, n, p50, p99, batch, share) in &stats.per_agent {
+        println!("  {name:<14} {n:>9} {:>11.2}ms {:>11.2}ms {batch:>11.2} \
+                  {:>9.1}%",
+                 p50 * 1e3, p99 * 1e3, share * 100.0);
+    }
+    println!("  totals: {} completed, {} errors, GPU busy {:.2}s",
+             stats.total_completed, stats.total_errors,
+             stats.gpu_busy_seconds);
+    println!("  final allocation: {:?}",
+             stats.last_allocation.iter()
+                 .map(|g| format!("{g:.3}")).collect::<Vec<_>>());
+}

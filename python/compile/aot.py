@@ -1,0 +1,136 @@
+"""AOT pipeline: lower every (agent, batch) model variant to HLO text.
+
+Emits, under ``artifacts/``:
+
+* ``<agent>_b<batch>.hlo.txt`` — HLO **text** for one forward-pass variant.
+  Text, not ``.serialize()``: jax >= 0.5 emits HloModuleProto with 64-bit
+  instruction ids which xla_extension 0.5.1 (the version the Rust ``xla``
+  crate links) rejects; the text parser reassigns ids and round-trips
+  cleanly. See /opt/xla-example/load_hlo/.
+* ``<agent>.params.bin`` — all parameters, concatenated little-endian f32 in
+  lowering order. Parameters are runtime *arguments*, not baked constants,
+  so HLO stays small and one params file serves every batch variant.
+* ``manifest.json`` — everything the Rust runtime needs: per-agent
+  hyperparameters, Table I characteristics, parameter entry shapes/offsets,
+  HLO paths per batch variant, FLOP estimates for the GPU governor, and
+  golden test vectors (greedy next-token + logit L2) for the Rust
+  integration tests.
+
+This is the only place Python runs: once, at ``make artifacts`` time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import AGENTS, BATCH_VARIANTS, SEQ_LEN, forward, init_params
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def test_tokens(batch: int, vocab: int) -> np.ndarray:
+    """Deterministic golden input, reproduced verbatim on the Rust side."""
+    flat = (np.arange(batch * SEQ_LEN, dtype=np.int64) * 7 + 3) % vocab
+    return flat.reshape(batch, SEQ_LEN).astype(np.int32)
+
+
+def flops_per_forward(spec, batch: int, n_params: int) -> int:
+    """~2*params per token plus attention's 4*seq*d per token, per batch."""
+    per_token = 2 * n_params + 4 * SEQ_LEN * spec.d_model * spec.n_layers
+    return int(per_token * SEQ_LEN * batch)
+
+
+def build_agent(spec, out_dir: pathlib.Path, batches) -> dict:
+    """Lower one agent's variants; return its manifest entry."""
+    seed = int.from_bytes(hashlib.sha256(spec.name.encode()).digest()[:4],
+                          "little") % (2 ** 31)
+    params = init_params(spec, seed=seed)
+    arrays = [np.asarray(arr, dtype=np.float32) for _, arr in params]
+
+    params_file = f"{spec.name}.params.bin"
+    entries, offset = [], 0
+    with open(out_dir / params_file, "wb") as f:
+        for (name, _), arr in zip(params, arrays):
+            f.write(arr.tobytes())  # little-endian f32, C order
+            entries.append({"name": name, "shape": list(arr.shape),
+                            "offset": offset, "len": int(arr.size)})
+            offset += int(arr.size)
+
+    n_params = sum(a.size for a in arrays)
+
+    def fn(param_arrays, tokens):
+        plist = [(name, arr) for (name, _), arr in zip(params, param_arrays)]
+        return forward(spec, plist, tokens, use_kernels=True)
+
+    jit_fn = jax.jit(fn)
+    param_specs = tuple(jax.ShapeDtypeStruct(a.shape, jnp.float32)
+                        for a in arrays)
+
+    variants, vectors = {}, {}
+    for batch in batches:
+        tok_spec = jax.ShapeDtypeStruct((batch, SEQ_LEN), jnp.int32)
+        lowered = jit_fn.lower(param_specs, tok_spec)
+        hlo_name = f"{spec.name}_b{batch}.hlo.txt"
+        (out_dir / hlo_name).write_text(to_hlo_text(lowered))
+        variants[str(batch)] = hlo_name
+
+        toks = test_tokens(batch, spec.vocab)
+        next_tok, logits = jit_fn([jnp.asarray(a) for a in arrays],
+                                  jnp.asarray(toks))
+        vectors[str(batch)] = {
+            "expected_next": np.asarray(next_tok).tolist(),
+            "logits_l2": float(jnp.sqrt(jnp.sum(logits ** 2))),
+        }
+        print(f"  {spec.name} b{batch}: hlo={hlo_name} "
+              f"next={np.asarray(next_tok).tolist()}")
+
+    return {
+        "d_model": spec.d_model, "n_layers": spec.n_layers,
+        "n_heads": spec.n_heads, "d_ff": spec.d_ff, "vocab": spec.vocab,
+        "model_mb": spec.model_mb, "base_tput": spec.base_tput,
+        "min_gpu": spec.min_gpu, "priority": spec.priority,
+        "param_count": int(n_params), "params_file": params_file,
+        "param_entries": entries, "variants": variants,
+        "flops_per_forward": {str(b): flops_per_forward(spec, b, n_params)
+                              for b in batches},
+        "test_vectors": vectors,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--agents", nargs="*", default=list(AGENTS))
+    ap.add_argument("--batches", nargs="*", type=int,
+                    default=list(BATCH_VARIANTS))
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {"seq_len": SEQ_LEN, "format": "hlo-text-v1", "agents": {}}
+    for name in args.agents:
+        print(f"lowering agent '{name}'")
+        manifest["agents"][name] = build_agent(AGENTS[name], out_dir,
+                                               args.batches)
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {out_dir / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+# L1: Pallas kernels for the agents' compute hot-spots (interpret=True).
+from .attention import attention, attention_flash
+from .layernorm import layernorm
+from .mlp import mlp
+from . import ref
+
+__all__ = ["attention", "attention_flash", "layernorm", "mlp", "ref"]

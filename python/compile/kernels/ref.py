@@ -1,0 +1,50 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every kernel in this package has a reference implementation here written in
+plain ``jax.numpy``. The pytest/hypothesis suites sweep shapes and dtypes and
+``assert_allclose`` kernel output against these — this is the CORE
+correctness signal for Layer 1 (the Pallas kernels run interpret=True on
+CPU, so numerics, not wallclock, is what we validate).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def layernorm_ref(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+                  eps: float = 1e-5) -> jax.Array:
+    """LayerNorm over the last axis. x: (..., d); gamma/beta: (d,)."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    return (x - mean) * inv * gamma + beta
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True) -> jax.Array:
+    """Scaled dot-product attention.
+
+    q, k, v: (heads, seq, head_dim) — one batch element, all heads.
+    Returns (heads, seq, head_dim).
+    """
+    head_dim = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim, q.dtype))
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    if causal:
+        seq_q, seq_k = scores.shape[-2], scores.shape[-1]
+        mask = jnp.tril(jnp.ones((seq_q, seq_k), bool), k=seq_k - seq_q)
+        scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)
+
+
+def mlp_ref(x: jax.Array, w1: jax.Array, b1: jax.Array,
+            w2: jax.Array, b2: jax.Array) -> jax.Array:
+    """Fused transformer MLP: gelu(x @ w1 + b1) @ w2 + b2.
+
+    x: (rows, d); w1: (d, h); b1: (h,); w2: (h, d); b2: (d,).
+    """
+    hidden = jax.nn.gelu(x @ w1 + b1, approximate=True)
+    return hidden @ w2 + b2

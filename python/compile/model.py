@@ -1,0 +1,195 @@
+"""Layer 2 — the agents' JAX models (build-time only).
+
+Four heterogeneous decoder-only transformers mirror the paper's Table I
+agents (coordinator + NLP/vision/reasoning specialists). Parameter counts
+scale proportionally to the paper's 500/2000/1500/3000 MB model sizes so the
+serving-side compute heterogeneity is real, while staying small enough for
+CPU-PJRT execution.
+
+The forward pass calls the Layer-1 Pallas kernels (attention / fused MLP /
+layernorm); ``use_kernels=False`` swaps in the pure-jnp oracles from
+``kernels.ref`` so pytest can assert the full model is kernel-invariant.
+
+``python/compile/aot.py`` lowers ``forward`` once per (agent, batch) to HLO
+text; parameters are *runtime arguments* (not baked constants) so the HLO
+stays small and the Rust side feeds them from ``<agent>.params.bin``.
+Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref as kref
+
+SEQ_LEN = 32  # fixed context window for all agents
+
+
+@dataclasses.dataclass(frozen=True)
+class AgentSpec:
+    """Static description of one agent (Table I row + model hyperparams)."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    # Paper Table I characteristics (used by the Rust coordinator).
+    model_mb: int
+    base_tput: float   # requests/sec at 100% GPU
+    min_gpu: float     # minimum GPU fraction
+    priority: int      # 1=high, 2=medium, 3=low
+
+
+#: The paper's four agents. d_model must divide n_heads; head_dim stays 32.
+AGENTS: Dict[str, AgentSpec] = {
+    spec.name: spec
+    for spec in [
+        AgentSpec("coordinator", d_model=64, n_layers=2, n_heads=2,
+                  d_ff=128, vocab=256, model_mb=500, base_tput=100.0,
+                  min_gpu=0.10, priority=1),
+        AgentSpec("nlp", d_model=128, n_layers=4, n_heads=4,
+                  d_ff=256, vocab=512, model_mb=2000, base_tput=50.0,
+                  min_gpu=0.30, priority=2),
+        AgentSpec("vision", d_model=128, n_layers=3, n_heads=4,
+                  d_ff=256, vocab=512, model_mb=1500, base_tput=60.0,
+                  min_gpu=0.25, priority=2),
+        AgentSpec("reasoning", d_model=160, n_layers=5, n_heads=5,
+                  d_ff=320, vocab=512, model_mb=3000, base_tput=30.0,
+                  min_gpu=0.35, priority=1),
+    ]
+}
+
+#: Batch-size variants compiled per agent; the Rust dynamic batcher picks
+#: the largest variant that the queue fills.
+BATCH_VARIANTS: Tuple[int, ...] = (1, 2, 4, 8)
+
+
+def init_params(spec: AgentSpec, seed: int = 0) -> List[Tuple[str, jax.Array]]:
+    """Deterministic parameter list (name, array) in lowering order.
+
+    A flat *ordered list* (not a dict) so the AOT manifest and the Rust
+    loader agree on argument order by construction.
+    """
+    key = jax.random.PRNGKey(seed)
+    params: List[Tuple[str, jax.Array]] = []
+
+    def draw(name: str, shape, scale: float):
+        nonlocal key
+        key, sub = jax.random.split(key)
+        params.append((name, (jax.random.normal(sub, shape, jnp.float32)
+                              * scale)))
+
+    d, h, v = spec.d_model, spec.d_ff, spec.vocab
+    draw("embed", (v, d), 0.02)
+    draw("pos_embed", (SEQ_LEN, d), 0.02)
+    for layer in range(spec.n_layers):
+        p = f"layer{layer}."
+        draw(p + "ln1_gamma", (d,), 0.0)
+        draw(p + "ln1_beta", (d,), 0.0)
+        draw(p + "wq", (d, d), d ** -0.5)
+        draw(p + "wk", (d, d), d ** -0.5)
+        draw(p + "wv", (d, d), d ** -0.5)
+        draw(p + "wo", (d, d), d ** -0.5)
+        draw(p + "ln2_gamma", (d,), 0.0)
+        draw(p + "ln2_beta", (d,), 0.0)
+        draw(p + "w1", (d, h), d ** -0.5)
+        draw(p + "b1", (h,), 0.0)
+        draw(p + "w2", (h, d), h ** -0.5)
+        draw(p + "b2", (d,), 0.0)
+    draw("lnf_gamma", (d,), 0.0)
+    draw("lnf_beta", (d,), 0.0)
+
+    # gammas are offsets from 1.0 so the zero-init above means identity.
+    fixed = []
+    for name, arr in params:
+        if "gamma" in name:
+            arr = arr + 1.0
+        fixed.append((name, arr))
+    return fixed
+
+
+def param_count(spec: AgentSpec) -> int:
+    """Total trainable parameters for one agent."""
+    return int(sum(arr.size for _, arr in init_params(spec)))
+
+
+def _ln(x2d, gamma, beta, use_kernels: bool):
+    if use_kernels:
+        return kernels.layernorm(x2d, gamma, beta)
+    return kref.layernorm_ref(x2d, gamma, beta)
+
+
+def _attn(q, k, v, use_kernels: bool, flash: bool):
+    if use_kernels:
+        fn = kernels.attention_flash if flash else kernels.attention
+        return fn(q, k, v, causal=True)
+    return kref.attention_ref(q, k, v, causal=True)
+
+
+def _mlp(x2d, w1, b1, w2, b2, use_kernels: bool):
+    if use_kernels:
+        return kernels.mlp(x2d, w1, b1, w2, b2)
+    return kref.mlp_ref(x2d, w1, b1, w2, b2)
+
+
+def forward(spec: AgentSpec, param_list, tokens: jax.Array,
+            use_kernels: bool = True, flash: bool = False):
+    """Decoder-only transformer forward pass.
+
+    tokens: int32 (batch, SEQ_LEN). Returns
+    ``(next_token int32 (batch,), last_logits f32 (batch, vocab))`` — the
+    greedy next-token id plus the full last-position logits so the Rust
+    integration tests can check numerics end-to-end.
+    """
+    p = dict(param_list)
+    batch, seq = tokens.shape
+    d, heads = spec.d_model, spec.n_heads
+    head_dim = d // heads
+
+    x = p["embed"][tokens] + p["pos_embed"][None, :seq, :]
+
+    def flat(x3d):
+        return x3d.reshape(batch * seq, d)
+
+    def unflat(x2d):
+        return x2d.reshape(batch, seq, d)
+
+    for layer in range(spec.n_layers):
+        pre = f"layer{layer}."
+        # Attention block
+        hidden = unflat(_ln(flat(x), p[pre + "ln1_gamma"],
+                            p[pre + "ln1_beta"], use_kernels))
+        q = hidden @ p[pre + "wq"]
+        k = hidden @ p[pre + "wk"]
+        v = hidden @ p[pre + "wv"]
+
+        def split(t):
+            # (batch, seq, d) -> (batch*heads, seq, head_dim)
+            return (t.reshape(batch, seq, heads, head_dim)
+                    .transpose(0, 2, 1, 3)
+                    .reshape(batch * heads, seq, head_dim))
+
+        attn = _attn(split(q), split(k), split(v), use_kernels, flash)
+        attn = (attn.reshape(batch, heads, seq, head_dim)
+                .transpose(0, 2, 1, 3)
+                .reshape(batch, seq, d))
+        x = x + attn @ p[pre + "wo"]
+
+        # MLP block
+        hidden2 = _ln(flat(x), p[pre + "ln2_gamma"], p[pre + "ln2_beta"],
+                      use_kernels)
+        x = x + unflat(_mlp(hidden2, p[pre + "w1"], p[pre + "b1"],
+                            p[pre + "w2"], p[pre + "b2"], use_kernels))
+
+    x = unflat(_ln(flat(x), p["lnf_gamma"], p["lnf_beta"], use_kernels))
+    last = x[:, -1, :]                             # (batch, d)
+    logits = last @ p["embed"].T                   # tied embeddings
+    next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_token, logits

@@ -1,0 +1,115 @@
+"""AOT pipeline tests: HLO emission, manifest integrity, golden vectors.
+
+These run the *compile path* (Layer 2 → HLO text) end-to-end on the
+smallest agent so `pytest` validates what `make artifacts` will produce,
+without paying for all 16 variants.
+"""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.model import AGENTS, SEQ_LEN, forward, init_params
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_test_tokens_deterministic_and_in_range():
+    t1 = aot.test_tokens(4, 256)
+    t2 = aot.test_tokens(4, 256)
+    np.testing.assert_array_equal(t1, t2)
+    assert t1.shape == (4, SEQ_LEN)
+    assert t1.dtype == np.int32
+    assert t1.min() >= 0 and t1.max() < 256
+    # Row-major flattening contract shared with the Rust verifier:
+    # token[b, i] == ((b*SEQ+i)*7 + 3) % vocab.
+    flat = t1.reshape(-1)
+    for idx in [0, 1, 63, 100]:
+        assert flat[idx] == (idx * 7 + 3) % 256
+
+
+def test_flops_estimate_scales_with_batch_and_size():
+    coord = AGENTS["coordinator"]
+    reasoning = AGENTS["reasoning"]
+    n_c = sum(a.size for _, a in init_params(coord))
+    n_r = sum(a.size for _, a in init_params(reasoning))
+    f1 = aot.flops_per_forward(coord, 1, n_c)
+    f4 = aot.flops_per_forward(coord, 4, n_c)
+    assert f4 == 4 * f1
+    assert aot.flops_per_forward(reasoning, 1, n_r) > 3 * f1
+
+
+def test_to_hlo_text_emits_parseable_module():
+    spec = AGENTS["coordinator"]
+    params = init_params(spec, seed=1)
+    arrays = [jnp.asarray(a) for _, a in params]
+
+    def fn(param_arrays, tokens):
+        plist = [(n, a) for (n, _), a in zip(params, param_arrays)]
+        return forward(spec, plist, tokens, use_kernels=True)
+
+    lowered = jax.jit(fn).lower(
+        tuple(jax.ShapeDtypeStruct(a.shape, jnp.float32) for a in arrays),
+        jax.ShapeDtypeStruct((1, SEQ_LEN), jnp.int32))
+    text = aot.to_hlo_text(lowered)
+    # HLO text essentials the Rust loader depends on.
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # Tuple return (next_token, logits): the root is a 2-tuple.
+    assert "(s32[1]" in text.replace(" ", "")[:20000] or "s32[1]" in text
+    assert "f32[1,256]" in text.replace(" ", "") or "f32[1,256]" in text
+
+
+def test_build_agent_writes_consistent_artifacts(tmp_path):
+    spec = AGENTS["coordinator"]
+    entry = aot.build_agent(spec, pathlib.Path(tmp_path), batches=[1, 2])
+
+    # Params file length == declared param count * 4 bytes.
+    pfile = tmp_path / entry["params_file"]
+    assert pfile.exists()
+    assert pfile.stat().st_size == entry["param_count"] * 4
+
+    # Entries tile the file exactly, in order, without gaps.
+    offset = 0
+    for e in entry["param_entries"]:
+        assert e["offset"] == offset
+        assert e["len"] == int(np.prod(e["shape"]))
+        offset += e["len"]
+    assert offset == entry["param_count"]
+
+    # Every variant exists and is nontrivial HLO.
+    for b, fname in entry["variants"].items():
+        text = (tmp_path / fname).read_text()
+        assert text.startswith("HloModule"), fname
+        assert f"s32[{b},{SEQ_LEN}]" in text.replace(" ", "")
+
+    # Golden vectors: batch-1 prefix of batch-2 (same test inputs).
+    v1 = entry["test_vectors"]["1"]["expected_next"]
+    v2 = entry["test_vectors"]["2"]["expected_next"]
+    assert v2[0] == v1[0]
+    assert all(0 <= t < spec.vocab for t in v2)
+    assert entry["test_vectors"]["1"]["logits_l2"] > 0
+
+
+def test_repo_manifest_is_fresh_if_present():
+    """If artifacts/ exists, it must match the current model code
+    (guards against stale-artifact drift between python and rust)."""
+    art = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+    mpath = art / "manifest.json"
+    if not mpath.exists():
+        pytest.skip("artifacts not built")
+    manifest = json.loads(mpath.read_text())
+    assert manifest["seq_len"] == SEQ_LEN
+    assert set(manifest["agents"]) == set(AGENTS)
+    for name, spec in AGENTS.items():
+        entry = manifest["agents"][name]
+        assert entry["d_model"] == spec.d_model
+        assert entry["vocab"] == spec.vocab
+        assert entry["model_mb"] == spec.model_mb
+        n_params = sum(a.size for _, a in init_params(spec))
+        assert entry["param_count"] == n_params

@@ -1,0 +1,83 @@
+"""Layer-2 structural/perf validation on the lowered HLO.
+
+DESIGN.md §6 L2 target: "no redundant recomputation, fused where XLA can
+fuse". interpret-mode wallclock is meaningless, so we assert *structure*:
+the op census of the lowered module matches the model's analytic count —
+any accidental recomputation (e.g. re-running a projection per head, or
+lowering the Pallas kernel twice per layer) shows up as extra dots.
+"""
+
+import re
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.aot import to_hlo_text
+from compile.model import AGENTS, SEQ_LEN, forward, init_params
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def lower_agent(name, batch=1):
+    spec = AGENTS[name]
+    params = init_params(spec, seed=0)
+    arrays = [jnp.asarray(a) for _, a in params]
+
+    def fn(param_arrays, tokens):
+        plist = [(n, a) for (n, _), a in zip(params, param_arrays)]
+        return forward(spec, plist, tokens, use_kernels=True)
+
+    lowered = jax.jit(fn).lower(
+        tuple(jax.ShapeDtypeStruct(a.shape, jnp.float32) for a in arrays),
+        jax.ShapeDtypeStruct((batch, SEQ_LEN), jnp.int32))
+    return spec, to_hlo_text(lowered)
+
+
+def count_op(hlo: str, op: str) -> int:
+    # Opcode occurrences on instruction lines: "%x = f32[...] dot(...)".
+    return len(re.findall(rf"= [^ ]+ {op}\(", hlo))
+
+
+@pytest.mark.parametrize("name", ["coordinator", "reasoning"])
+def test_dot_census_matches_analytic_count(name):
+    spec, hlo = lower_agent(name)
+    dots = count_op(hlo, "dot")
+    # Per layer: q,k,v,o projections (4) + attention scores & weighted sum
+    # (2, inside the Pallas kernel) + MLP (2, inside the fused kernel).
+    # Plus the tied-embedding logits matmul (1).
+    expected = spec.n_layers * 8 + 1
+    assert dots == expected, f"{dots} dots != {expected} — " \
+        "redundant recomputation or lost fusion in the lowered module"
+
+
+def test_no_while_loops_in_unrolled_model():
+    # The model unrolls layers at trace time (inference-depth models are
+    # small); a `while` would mean an accidental scan + per-step dispatch.
+    _, hlo = lower_agent("coordinator")
+    assert count_op(hlo, "while") == 0
+
+
+def test_parameters_stay_runtime_arguments():
+    # Params must lower as entry parameters, not baked constants: one
+    # params.bin serves every batch variant and HLO stays small.
+    spec, hlo = lower_agent("coordinator")
+    n_leaves = len(init_params(spec))
+    entry = hlo[hlo.index("ENTRY"):]
+    params_in_entry = len(re.findall(r"parameter\(\d+\)", entry))
+    # +1 for the token input.
+    assert params_in_entry == n_leaves + 1
+
+    # And no embedding-sized f32 constant blobs.
+    d, v = spec.d_model, spec.vocab
+    assert f"constant(f32[{v},{d}]" not in hlo
+
+
+def test_batch_variants_share_op_structure():
+    # Lowering b1 vs b4 must change shapes only, not the op census —
+    # guards the dynamic batcher's assumption that variants are the same
+    # program at different widths.
+    _, h1 = lower_agent("coordinator", batch=1)
+    _, h4 = lower_agent("coordinator", batch=4)
+    for op in ["dot", "exponential", "rsqrt", "reduce"]:
+        assert count_op(h1, op) == count_op(h4, op), op

@@ -1,0 +1,186 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes and asserts allclose against kernels/ref.py
+— the core correctness signal for the kernels (interpret=True, so numerics
+is exactly what ships in the lowered HLO).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+F32_TOL = dict(rtol=2e-5, atol=2e-5)
+BF16_TOL = dict(rtol=2e-2, atol=2e-2)
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------- layernorm
+
+@settings(max_examples=30, deadline=None)
+@given(rows=st.integers(1, 200), d=st.integers(4, 256),
+       seed=st.integers(0, 2 ** 31 - 1))
+def test_layernorm_matches_ref(rows, d, seed):
+    kx, kg, kb = _keys(seed, 3)
+    x = _rand(kx, (rows, d))
+    gamma = 1.0 + _rand(kg, (d,), scale=0.1)
+    beta = _rand(kb, (d,), scale=0.1)
+    got = kernels.layernorm(x, gamma, beta)
+    want = ref.layernorm_ref(x, gamma, beta)
+    np.testing.assert_allclose(got, want, **F32_TOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.integers(1, 64), d=st.sampled_from([8, 32, 128]),
+       seed=st.integers(0, 2 ** 31 - 1))
+def test_layernorm_bf16(rows, d, seed):
+    kx, kg, kb = _keys(seed, 3)
+    x = _rand(kx, (rows, d), jnp.bfloat16)
+    gamma = (1.0 + _rand(kg, (d,), scale=0.1)).astype(jnp.bfloat16)
+    beta = _rand(kb, (d,), scale=0.1, dtype=jnp.bfloat16)
+    got = kernels.layernorm(x, gamma, beta).astype(jnp.float32)
+    want = ref.layernorm_ref(x.astype(jnp.float32),
+                             gamma.astype(jnp.float32),
+                             beta.astype(jnp.float32))
+    np.testing.assert_allclose(got, want, **BF16_TOL)
+
+
+def test_layernorm_constant_rows():
+    # Zero-variance rows must not produce NaNs (eps guards rsqrt).
+    x = jnp.ones((4, 16)) * 3.0
+    out = kernels.layernorm(x, jnp.ones(16), jnp.zeros(16))
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_allclose(out, 0.0, atol=1e-4)
+
+
+def test_layernorm_ragged_tail_block():
+    # rows not divisible by block_rows exercises Pallas tail masking.
+    kx, kg, kb = _keys(7, 3)
+    x = _rand(kx, (130, 32))
+    gamma, beta = 1.0 + _rand(kg, (32,), scale=0.1), _rand(kb, (32,))
+    got = kernels.layernorm(x, gamma, beta, block_rows=128)
+    np.testing.assert_allclose(got, ref.layernorm_ref(x, gamma, beta),
+                               **F32_TOL)
+
+
+# ---------------------------------------------------------------- attention
+
+@settings(max_examples=25, deadline=None)
+@given(heads=st.integers(1, 5), seq=st.sampled_from([8, 16, 32, 64]),
+       head_dim=st.sampled_from([8, 16, 32]), causal=st.booleans(),
+       seed=st.integers(0, 2 ** 31 - 1))
+def test_attention_matches_ref(heads, seq, head_dim, causal, seed):
+    kq, kk, kv = _keys(seed, 3)
+    q = _rand(kq, (heads, seq, head_dim))
+    k = _rand(kk, (heads, seq, head_dim))
+    v = _rand(kv, (heads, seq, head_dim))
+    got = kernels.attention(q, k, v, causal=causal)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, **F32_TOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(heads=st.integers(1, 4), seq=st.sampled_from([16, 32, 64]),
+       head_dim=st.sampled_from([8, 32]), causal=st.booleans(),
+       block_q=st.sampled_from([8, 16]), block_k=st.sampled_from([8, 16]),
+       seed=st.integers(0, 2 ** 31 - 1))
+def test_attention_flash_matches_ref(heads, seq, head_dim, causal, block_q,
+                                     block_k, seed):
+    kq, kk, kv = _keys(seed, 3)
+    q = _rand(kq, (heads, seq, head_dim))
+    k = _rand(kk, (heads, seq, head_dim))
+    v = _rand(kv, (heads, seq, head_dim))
+    got = kernels.attention_flash(q, k, v, causal=causal,
+                                  block_q=block_q, block_k=block_k)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, **F32_TOL)
+
+
+def test_attention_flash_equals_blocked_kernel():
+    kq, kk, kv = _keys(11, 3)
+    q = _rand(kq, (4, 32, 16))
+    k = _rand(kk, (4, 32, 16))
+    v = _rand(kv, (4, 32, 16))
+    a = kernels.attention(q, k, v)
+    b = kernels.attention_flash(q, k, v)
+    np.testing.assert_allclose(a, b, **F32_TOL)
+
+
+def test_attention_causality():
+    # Future tokens must not influence earlier outputs.
+    kq, kk, kv = _keys(3, 3)
+    q = _rand(kq, (2, 16, 8))
+    k = _rand(kk, (2, 16, 8))
+    v = _rand(kv, (2, 16, 8))
+    base = kernels.attention(q, k, v, causal=True)
+    k2 = k.at[:, -1, :].set(99.0)
+    v2 = v.at[:, -1, :].set(-99.0)
+    pert = kernels.attention(q, k2, v2, causal=True)
+    np.testing.assert_allclose(base[:, :-1], pert[:, :-1], **F32_TOL)
+
+
+def test_attention_flash_rejects_ragged_block_k():
+    kq, kk, kv = _keys(5, 3)
+    q = _rand(kq, (1, 24, 8))
+    with pytest.raises(ValueError):
+        kernels.attention_flash(q, q, q, block_k=16)
+
+
+def test_attention_uniform_values():
+    # softmax over identical scores must average V exactly.
+    q = jnp.zeros((1, 8, 4))
+    k = jnp.zeros((1, 8, 4))
+    v = jnp.arange(32, dtype=jnp.float32).reshape(1, 8, 4)
+    out = kernels.attention(q, k, v, causal=False)
+    want = jnp.broadcast_to(v.mean(axis=1, keepdims=True), v.shape)
+    np.testing.assert_allclose(out, want, **F32_TOL)
+
+
+# ---------------------------------------------------------------------- mlp
+
+@settings(max_examples=30, deadline=None)
+@given(rows=st.integers(1, 128), d=st.sampled_from([8, 32, 64]),
+       h=st.sampled_from([16, 64, 128]), seed=st.integers(0, 2 ** 31 - 1))
+def test_mlp_matches_ref(rows, d, h, seed):
+    kx, k1, k2, kb1, kb2 = _keys(seed, 5)
+    x = _rand(kx, (rows, d))
+    w1 = _rand(k1, (d, h), scale=d ** -0.5)
+    b1 = _rand(kb1, (h,), scale=0.1)
+    w2 = _rand(k2, (h, d), scale=h ** -0.5)
+    b2 = _rand(kb2, (d,), scale=0.1)
+    got = kernels.mlp(x, w1, b1, w2, b2)
+    want = ref.mlp_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_mlp_block_rows_invariant():
+    # Output must not depend on the tiling choice.
+    kx, k1, k2 = _keys(13, 3)
+    x = _rand(kx, (100, 32))
+    w1 = _rand(k1, (32, 64), scale=0.2)
+    w2 = _rand(k2, (64, 32), scale=0.2)
+    b1, b2 = jnp.zeros(64), jnp.zeros(32)
+    a = kernels.mlp(x, w1, b1, w2, b2, block_rows=16)
+    b = kernels.mlp(x, w1, b1, w2, b2, block_rows=64)
+    np.testing.assert_allclose(a, b, **F32_TOL)
+
+
+def test_mlp_zero_input_gives_bias_path():
+    x = jnp.zeros((4, 8))
+    w1, w2 = jnp.ones((8, 16)), jnp.ones((16, 8))
+    b1, b2 = jnp.zeros(16), jnp.full((8,), 2.5)
+    out = kernels.mlp(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(out, 2.5, **F32_TOL)

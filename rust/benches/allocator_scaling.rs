@@ -1,0 +1,62 @@
+//! Bench: §V.B O(N) scaling — allocator cost vs agent count, and the
+//! "< 1 ms" claim. Also covers the baseline and extension policies so the
+//! adaptive overhead is in context. Run: `cargo bench --bench
+//! allocator_scaling`.
+
+use agentsrv::allocator::{all_policies, AllocContext};
+use agentsrv::repro::synthetic_registry;
+use agentsrv::util::bench::Harness;
+
+fn main() {
+    let mut h = Harness::from_args();
+
+    h.section("Algorithm 1 (adaptive) allocate() vs N — O(N), < 1 ms");
+    for n in [4usize, 16, 64, 256, 1024, 4096] {
+        let reg = synthetic_registry(n);
+        let rates: Vec<f64> =
+            (0..n).map(|i| 10.0 + (i % 7) as f64).collect();
+        let queues = vec![0.0; n];
+        let mut out = vec![0.0; n];
+        let mut policy =
+            agentsrv::allocator::AdaptivePolicy::default();
+        use agentsrv::allocator::AllocationPolicy;
+        h.bench(&format!("adaptive/N={n}"), || {
+            let ctx = AllocContext {
+                registry: &reg,
+                arrival_rates: &rates,
+                queue_depths: &queues,
+                step: 0,
+                capacity: 1.0,
+            };
+            policy.allocate(&ctx, &mut out);
+            out[0]
+        });
+    }
+
+    h.section("all policies at the paper's N = 4");
+    let reg = synthetic_registry(4);
+    let rates = [80.0, 40.0, 45.0, 25.0];
+    let queues = [10.0, 5.0, 7.0, 3.0];
+    for mut policy in all_policies() {
+        let mut out = vec![0.0; 4];
+        let name = policy.name().to_string();
+        h.bench(&format!("{name}/N=4"), || {
+            let ctx = AllocContext {
+                registry: &reg,
+                arrival_rates: &rates,
+                queue_depths: &queues,
+                step: 0,
+                capacity: 1.0,
+            };
+            policy.allocate(&ctx, &mut out);
+            out[0]
+        });
+    }
+
+    // Verdict against the paper's claim.
+    let worst = h.results().iter()
+        .map(|r| r.median_ns)
+        .fold(0.0f64, f64::max);
+    println!("\nworst median: {:.0} ns — paper claim '< 1 ms': {}",
+             worst, if worst < 1e6 { "HOLDS" } else { "VIOLATED" });
+}

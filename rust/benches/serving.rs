@@ -1,0 +1,87 @@
+//! Bench: the real serving path — PJRT execution per agent and batch
+//! size, batching amortization, and full server round-trips (including a
+//! collaborative workflow). Requires `make artifacts`; skips gracefully
+//! otherwise. Run: `cargo bench --bench serving`.
+
+use std::path::Path;
+
+use agentsrv::coordinator::{ReasoningPipeline, TaskKind};
+use agentsrv::runtime::{InferenceEngine, Manifest};
+use agentsrv::server::{AgentServer, ServerConfig};
+use agentsrv::util::bench::Harness;
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP serving bench: artifacts/ not built \
+                  (run `make artifacts`)");
+        return;
+    }
+    let mut h = Harness::from_args();
+
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let seq = manifest.seq_len;
+    let vocabs: Vec<(String, usize)> = manifest.agents.iter()
+        .map(|a| (a.name.clone(), a.vocab)).collect();
+
+    // ---- Engine-level: per-agent, per-batch execute latency -----------
+    println!("loading engine (compiling 16 variants) ...");
+    let mut engine = InferenceEngine::load(&dir).expect("engine");
+
+    let prompt = |vocab: usize, s: u64| -> Vec<i32> {
+        (0..seq).map(|i| ((s * 131 + i as u64 * 7 + 3) % vocab as u64)
+                 as i32).collect()
+    };
+
+    h.section("PJRT execute latency per agent (batch 1 vs 8)");
+    for (name, vocab) in &vocabs {
+        for batch in [1usize, 8] {
+            let rows: Vec<Vec<i32>> =
+                (0..batch).map(|s| prompt(*vocab, s as u64)).collect();
+            h.bench(&format!("execute/{name}/b{batch}"), || {
+                engine.infer(name, &rows).expect("infer").next_tokens[0]
+            });
+        }
+    }
+
+    h.section("batching amortization (coordinator, ns per request)");
+    {
+        let vocab = vocabs[0].1;
+        for batch in [1usize, 2, 4, 8] {
+            let rows: Vec<Vec<i32>> =
+                (0..batch).map(|s| prompt(vocab, s as u64)).collect();
+            h.bench(&format!("per_request/coordinator/b{batch}"), || {
+                engine.infer("coordinator", &rows).expect("infer");
+                batch
+            });
+        }
+        println!("(divide the b{{N}} medians by N: dynamic batching \
+                  amortizes fixed dispatch cost)");
+    }
+
+    // ---- Server-level: full round trip ---------------------------------
+    println!("\nstarting server for round-trip benches ...");
+    let server = AgentServer::start(ServerConfig::new(&dir))
+        .expect("server");
+
+    h.section("server round-trip (submit -> complete)");
+    for (name, vocab) in &vocabs {
+        let toks = prompt(*vocab, 3);
+        h.bench(&format!("roundtrip/{name}"), || {
+            server.submit_blocking(name, toks.clone())
+                .expect("served").next_token
+        });
+    }
+
+    h.section("collaborative workflow end-to-end");
+    let pipeline = ReasoningPipeline::new(&server, vocabs.clone());
+    for kind in [TaskKind::Nlp, TaskKind::MultiDomain] {
+        h.bench(&format!("workflow/{kind:?}"), || {
+            pipeline.run(&server, kind, 5).expect("workflow").answer()
+        });
+    }
+
+    let stats = server.shutdown();
+    println!("\nserver processed {} requests, gpu busy {:.2}s",
+             stats.total_completed, stats.gpu_busy_seconds);
+}

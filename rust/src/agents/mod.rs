@@ -1,0 +1,7 @@
+//! Agent descriptions: the paper's Table I profiles and a runtime registry.
+
+mod profile;
+mod registry;
+
+pub use profile::{AgentId, AgentProfile, Priority};
+pub use registry::AgentRegistry;

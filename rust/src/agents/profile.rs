@@ -1,0 +1,200 @@
+//! Agent profiles — the paper's Table I characterization.
+//!
+//! Each agent is described by model size `M_i`, base throughput `T_i`
+//! (requests/second at 100 % GPU), minimum GPU fraction `R_i`, and priority
+//! `P_i` (1 = high). Throughput scales proportionally with the allocated
+//! GPU fraction (§IV.A), which is what makes the allocation problem a pure
+//! fraction-assignment problem.
+
+use crate::error::{Error, Result};
+
+/// Index of an agent within a deployment (dense, 0-based).
+pub type AgentId = usize;
+
+/// Scheduling priority (paper: 1 = high, 2 = medium, 3 = low).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    High,
+    Medium,
+    Low,
+}
+
+impl Priority {
+    /// The numeric weight used by Algorithm 1's demand term (d ∝ 1/P).
+    pub fn weight(self) -> f64 {
+        match self {
+            Priority::High => 1.0,
+            Priority::Medium => 2.0,
+            Priority::Low => 3.0,
+        }
+    }
+}
+
+impl TryFrom<u8> for Priority {
+    type Error = String;
+    fn try_from(v: u8) -> std::result::Result<Self, String> {
+        match v {
+            1 => Ok(Priority::High),
+            2 => Ok(Priority::Medium),
+            3 => Ok(Priority::Low),
+            other => Err(format!("priority must be 1..=3, got {other}")),
+        }
+    }
+}
+
+impl From<Priority> for u8 {
+    fn from(p: Priority) -> u8 {
+        match p {
+            Priority::High => 1,
+            Priority::Medium => 2,
+            Priority::Low => 3,
+        }
+    }
+}
+
+/// One agent's static characteristics (a Table I row).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgentProfile {
+    /// Human-readable name ("coordinator", "nlp", ...).
+    pub name: String,
+    /// Model size in megabytes (`M_i`).
+    pub model_mb: u32,
+    /// Base throughput in requests/second at full GPU allocation (`T_i`).
+    pub base_tput: f64,
+    /// Minimum GPU fraction required (`R_i`, in [0, 1]).
+    pub min_gpu: f64,
+    /// Scheduling priority (`P_i`).
+    pub priority: Priority,
+}
+
+impl AgentProfile {
+    /// Validate invariants a profile must satisfy.
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            return Err(Error::Config("agent name must be non-empty".into()));
+        }
+        if !(self.base_tput > 0.0) {
+            return Err(Error::Config(format!(
+                "agent '{}': base_tput must be > 0, got {}",
+                self.name, self.base_tput
+            )));
+        }
+        if !(0.0..=1.0).contains(&self.min_gpu) {
+            return Err(Error::Config(format!(
+                "agent '{}': min_gpu must be in [0,1], got {}",
+                self.name, self.min_gpu
+            )));
+        }
+        Ok(())
+    }
+
+    /// Throughput (requests/sec) at GPU fraction `g` — proportional
+    /// scaling per §IV.A.
+    pub fn throughput_at(&self, g: f64) -> f64 {
+        self.base_tput * g.clamp(0.0, 1.0)
+    }
+
+    /// The paper's four agents, exactly as in Table I.
+    pub fn paper_agents() -> Vec<AgentProfile> {
+        vec![
+            AgentProfile {
+                name: "coordinator".into(),
+                model_mb: 500,
+                base_tput: 100.0,
+                min_gpu: 0.10,
+                priority: Priority::High,
+            },
+            AgentProfile {
+                name: "nlp".into(),
+                model_mb: 2000,
+                base_tput: 50.0,
+                min_gpu: 0.30,
+                priority: Priority::Medium,
+            },
+            AgentProfile {
+                name: "vision".into(),
+                model_mb: 1500,
+                base_tput: 60.0,
+                min_gpu: 0.25,
+                priority: Priority::Medium,
+            },
+            AgentProfile {
+                name: "reasoning".into(),
+                model_mb: 3000,
+                base_tput: 30.0,
+                min_gpu: 0.35,
+                priority: Priority::High,
+            },
+        ]
+    }
+
+    /// The paper's §IV.A steady arrival rates (rps), in the same order as
+    /// [`AgentProfile::paper_agents`].
+    pub fn paper_arrival_rates() -> Vec<f64> {
+        vec![80.0, 40.0, 45.0, 25.0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_agents_match_table1() {
+        let agents = AgentProfile::paper_agents();
+        assert_eq!(agents.len(), 4);
+        assert_eq!(agents[0].name, "coordinator");
+        assert_eq!(agents[0].model_mb, 500);
+        assert_eq!(agents[0].base_tput, 100.0);
+        assert_eq!(agents[0].min_gpu, 0.10);
+        assert_eq!(agents[0].priority, Priority::High);
+        assert_eq!(agents[3].model_mb, 3000);
+        assert_eq!(agents[3].min_gpu, 0.35);
+        // Table I minimums sum to exactly 1.0 — the system is exactly
+        // at capacity when every agent sits at its floor.
+        let total_min: f64 = agents.iter().map(|a| a.min_gpu).sum();
+        assert!((total_min - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_scales_proportionally() {
+        let a = &AgentProfile::paper_agents()[0];
+        assert_eq!(a.throughput_at(1.0), 100.0);
+        assert_eq!(a.throughput_at(0.25), 25.0);
+        assert_eq!(a.throughput_at(0.0), 0.0);
+        // Clamped outside [0,1].
+        assert_eq!(a.throughput_at(1.5), 100.0);
+        assert_eq!(a.throughput_at(-0.5), 0.0);
+    }
+
+    #[test]
+    fn priority_weights() {
+        assert_eq!(Priority::High.weight(), 1.0);
+        assert_eq!(Priority::Medium.weight(), 2.0);
+        assert_eq!(Priority::Low.weight(), 3.0);
+    }
+
+    #[test]
+    fn priority_u8_roundtrip() {
+        for v in 1u8..=3 {
+            let p = Priority::try_from(v).unwrap();
+            assert_eq!(u8::from(p), v);
+        }
+        assert!(Priority::try_from(0).is_err());
+        assert!(Priority::try_from(9).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_profiles() {
+        let mut a = AgentProfile::paper_agents()[0].clone();
+        a.min_gpu = 1.5;
+        assert!(a.validate().is_err());
+        let mut b = AgentProfile::paper_agents()[0].clone();
+        b.base_tput = 0.0;
+        assert!(b.validate().is_err());
+        let mut c = AgentProfile::paper_agents()[0].clone();
+        c.name.clear();
+        assert!(c.validate().is_err());
+        assert!(AgentProfile::paper_agents()[0].validate().is_ok());
+    }
+}

@@ -1,0 +1,132 @@
+//! Runtime registry of deployed agents.
+//!
+//! Owns the validated profile set, provides id/name lookup, and caches the
+//! derived quantities the allocator hot path needs (priority weights,
+//! minimum fractions) in dense arrays so `allocate()` touches no maps.
+
+use crate::agents::{AgentId, AgentProfile};
+use crate::error::{Error, Result};
+
+/// Immutable, validated set of agents for one deployment.
+#[derive(Debug, Clone)]
+pub struct AgentRegistry {
+    profiles: Vec<AgentProfile>,
+    // Dense caches for the allocator hot path.
+    min_gpu: Vec<f64>,
+    priority_weight: Vec<f64>,
+    base_tput: Vec<f64>,
+}
+
+impl AgentRegistry {
+    /// Build a registry from profiles, validating each and the set.
+    pub fn new(profiles: Vec<AgentProfile>) -> Result<Self> {
+        if profiles.is_empty() {
+            return Err(Error::Config("registry needs >= 1 agent".into()));
+        }
+        for p in &profiles {
+            p.validate()?;
+        }
+        let mut names: Vec<&str> =
+            profiles.iter().map(|p| p.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != profiles.len() {
+            return Err(Error::Config("duplicate agent names".into()));
+        }
+        let min_gpu = profiles.iter().map(|p| p.min_gpu).collect();
+        let priority_weight =
+            profiles.iter().map(|p| p.priority.weight()).collect();
+        let base_tput = profiles.iter().map(|p| p.base_tput).collect();
+        Ok(AgentRegistry { profiles, min_gpu, priority_weight, base_tput })
+    }
+
+    /// The paper's Table I deployment.
+    pub fn paper() -> Self {
+        AgentRegistry::new(AgentProfile::paper_agents())
+            .expect("paper agents are valid")
+    }
+
+    /// Number of agents (the paper's N).
+    pub fn len(&self) -> usize {
+        self.profiles.len()
+    }
+
+    /// True if the registry is empty (never true post-construction).
+    pub fn is_empty(&self) -> bool {
+        self.profiles.is_empty()
+    }
+
+    /// Profile by dense id.
+    pub fn profile(&self, id: AgentId) -> &AgentProfile {
+        &self.profiles[id]
+    }
+
+    /// All profiles in id order.
+    pub fn profiles(&self) -> &[AgentProfile] {
+        &self.profiles
+    }
+
+    /// Dense id for a name.
+    pub fn id_of(&self, name: &str) -> Option<AgentId> {
+        self.profiles.iter().position(|p| p.name == name)
+    }
+
+    /// Dense min-GPU fractions (allocator hot path).
+    pub fn min_gpu(&self) -> &[f64] {
+        &self.min_gpu
+    }
+
+    /// Dense priority weights (allocator hot path).
+    pub fn priority_weight(&self) -> &[f64] {
+        &self.priority_weight
+    }
+
+    /// Dense base throughputs.
+    pub fn base_tput(&self) -> &[f64] {
+        &self.base_tput
+    }
+
+    /// Whether the minimum requirements alone are feasible (Σ R_i <= cap).
+    pub fn minimums_feasible(&self, capacity: f64) -> bool {
+        self.min_gpu.iter().sum::<f64>() <= capacity + 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::Priority;
+
+    #[test]
+    fn paper_registry() {
+        let r = AgentRegistry::paper();
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.id_of("vision"), Some(2));
+        assert_eq!(r.id_of("nope"), None);
+        assert_eq!(r.profile(3).name, "reasoning");
+        assert!(r.minimums_feasible(1.0));
+        assert!(!r.minimums_feasible(0.9));
+        assert_eq!(r.priority_weight(), &[1.0, 2.0, 2.0, 1.0]);
+        assert_eq!(r.base_tput(), &[100.0, 50.0, 60.0, 30.0]);
+    }
+
+    #[test]
+    fn rejects_duplicates_and_empty() {
+        let mut agents = AgentProfile::paper_agents();
+        agents[1].name = "coordinator".into();
+        assert!(AgentRegistry::new(agents).is_err());
+        assert!(AgentRegistry::new(vec![]).is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_profile() {
+        let agents = vec![AgentProfile {
+            name: "x".into(),
+            model_mb: 1,
+            base_tput: -3.0,
+            min_gpu: 0.1,
+            priority: Priority::Low,
+        }];
+        assert!(AgentRegistry::new(agents).is_err());
+    }
+}

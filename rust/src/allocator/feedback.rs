@@ -1,0 +1,136 @@
+//! Queue-feedback extension: Algorithm 1's demand augmented with a
+//! backpressure term proportional to the standing queue depth.
+//!
+//! `d_i = (λ_i + κ · Q_i) · R_i / P_i`
+//!
+//! With κ = 0 this is exactly the paper's Algorithm 1; κ > 0 shifts
+//! capacity toward agents with standing backlog so bursts drain faster.
+//! §III.D motivates this ("real-time monitoring of queue lengths ... drives
+//! allocation adaptation"); the paper's evaluated algorithm uses only λ, so
+//! this ships as an extension policy and is ablated in the robustness
+//! bench.
+
+use crate::allocator::{normalize_to_capacity, AllocContext, AllocationPolicy};
+
+/// Backpressure-augmented Algorithm 1.
+#[derive(Debug, Clone)]
+pub struct FeedbackPolicy {
+    /// Queue weight κ (per-second⁻¹): how strongly backlog inflates demand.
+    kappa: f64,
+}
+
+impl Default for FeedbackPolicy {
+    fn default() -> Self {
+        FeedbackPolicy { kappa: 0.05 }
+    }
+}
+
+impl FeedbackPolicy {
+    /// Create with an explicit backpressure gain.
+    pub fn new(kappa: f64) -> Self {
+        FeedbackPolicy { kappa: kappa.max(0.0) }
+    }
+}
+
+impl AllocationPolicy for FeedbackPolicy {
+    fn name(&self) -> &'static str {
+        "feedback"
+    }
+
+    fn allocate(&mut self, ctx: &AllocContext<'_>, out: &mut [f64]) {
+        let n = ctx.registry.len();
+        let min_gpu = ctx.registry.min_gpu();
+        let weight = ctx.registry.priority_weight();
+
+        let mut d_total = 0.0;
+        for i in 0..n {
+            let pressure = ctx.arrival_rates[i]
+                + self.kappa * ctx.queue_depths[i];
+            let d = pressure * min_gpu[i] / weight[i];
+            out[i] = d;
+            d_total += d;
+        }
+        if d_total <= 0.0 {
+            out.fill(0.0);
+            return;
+        }
+        let scale = ctx.capacity / d_total;
+        for i in 0..n {
+            out[i] = (out[i] * scale).max(min_gpu[i]);
+        }
+        normalize_to_capacity(out, ctx.capacity);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::AgentRegistry;
+    use crate::allocator::AdaptivePolicy;
+
+    #[test]
+    fn zero_kappa_equals_adaptive() {
+        let reg = AgentRegistry::paper();
+        let rates = [80.0, 40.0, 45.0, 25.0];
+        let queues = [500.0, 100.0, 0.0, 900.0];
+        let ctx = AllocContext {
+            registry: &reg,
+            arrival_rates: &rates,
+            queue_depths: &queues,
+            step: 0,
+            capacity: 1.0,
+        };
+        let mut a = vec![0.0; 4];
+        let mut b = vec![0.0; 4];
+        FeedbackPolicy::new(0.0).allocate(&ctx, &mut a);
+        AdaptivePolicy::default().allocate(&ctx, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn backlog_shifts_allocation_toward_queued_agent() {
+        let reg = AgentRegistry::paper();
+        let rates = [80.0, 40.0, 45.0, 25.0];
+        let no_queue = [0.0; 4];
+        let nlp_backlog = [0.0, 5000.0, 0.0, 0.0];
+        let mut base = vec![0.0; 4];
+        let mut shifted = vec![0.0; 4];
+        let ctx_a = AllocContext {
+            registry: &reg,
+            arrival_rates: &rates,
+            queue_depths: &no_queue,
+            step: 0,
+            capacity: 1.0,
+        };
+        let ctx_b = AllocContext {
+            registry: &reg,
+            arrival_rates: &rates,
+            queue_depths: &nlp_backlog,
+            step: 0,
+            capacity: 1.0,
+        };
+        FeedbackPolicy::default().allocate(&ctx_a, &mut base);
+        FeedbackPolicy::default().allocate(&ctx_b, &mut shifted);
+        assert!(shifted[1] > base[1],
+                "backlogged agent should gain share: {base:?} {shifted:?}");
+        let total: f64 = shifted.iter().sum();
+        assert!(total <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn idle_with_no_backlog_allocates_nothing() {
+        let reg = AgentRegistry::paper();
+        let ctx = AllocContext {
+            registry: &reg,
+            arrival_rates: &[0.0; 4],
+            queue_depths: &[0.0; 4],
+            step: 0,
+            capacity: 1.0,
+        };
+        let mut out = vec![1.0; 4];
+        FeedbackPolicy::default().allocate(&ctx, &mut out);
+        assert_eq!(out, vec![0.0; 4]);
+    }
+}

@@ -1,0 +1,144 @@
+//! GPU-fraction allocation policies — the paper's contribution (§III).
+//!
+//! The central abstraction is [`AllocationPolicy`]: given the current
+//! workload observation (arrival rates, queue depths) and the static agent
+//! registry, write a GPU fraction per agent into a caller-provided buffer.
+//! Policies are `&mut self` so stateful strategies (round-robin rotation,
+//! EMA predictors) work without interior mutability, and the buffer is
+//! caller-owned so the per-step hot path allocates nothing.
+//!
+//! Implemented policies:
+//!
+//! * [`AdaptivePolicy`] — the paper's Algorithm 1 (demand-proportional with
+//!   priority weighting, minimum-floor enforcement, and capacity
+//!   normalization). O(N), allocation-free.
+//! * [`StaticEqualPolicy`] — baseline: capacity / N for every agent.
+//! * [`RoundRobinPolicy`] — baseline: 100 % of the GPU to one agent per
+//!   step, rotating ("100 % sequential" in §IV.A).
+//! * [`PredictivePolicy`] — extension (paper §VI future work): Algorithm 1
+//!   driven by an EMA forecast of arrival rates instead of the instant
+//!   observation.
+//! * [`FeedbackPolicy`] — extension: demand augmented with a queue-depth
+//!   backpressure term, so backlog drains faster after bursts.
+
+mod adaptive;
+mod feedback;
+mod predictive;
+mod round_robin;
+mod static_equal;
+
+pub use adaptive::AdaptivePolicy;
+pub use feedback::FeedbackPolicy;
+pub use predictive::PredictivePolicy;
+pub use round_robin::RoundRobinPolicy;
+pub use static_equal::StaticEqualPolicy;
+
+use crate::agents::AgentRegistry;
+
+/// Everything a policy may observe when allocating for one timestep.
+#[derive(Debug)]
+pub struct AllocContext<'a> {
+    /// Static agent characteristics (Table I).
+    pub registry: &'a AgentRegistry,
+    /// Observed arrival rate per agent over the last step (λ_i(t), rps).
+    pub arrival_rates: &'a [f64],
+    /// Current queue depth per agent (requests waiting).
+    pub queue_depths: &'a [f64],
+    /// Discrete timestep index.
+    pub step: u64,
+    /// Total GPU capacity to distribute (the paper normalizes to 1.0).
+    pub capacity: f64,
+}
+
+/// A GPU-fraction allocation policy.
+pub trait AllocationPolicy: Send {
+    /// Stable identifier used in reports and CSV output.
+    fn name(&self) -> &'static str;
+
+    /// Write one GPU fraction per agent into `out`.
+    ///
+    /// Contract (checked by the proptest suite for every implementation):
+    /// `out.len() == registry.len()`, every `out[i] >= 0`, and
+    /// `Σ out[i] <= capacity + ε`.
+    fn allocate(&mut self, ctx: &AllocContext<'_>, out: &mut [f64]);
+
+    /// Reset any internal state (rotation counters, EMA history) so a
+    /// policy instance can be reused across independent runs.
+    fn reset(&mut self) {}
+}
+
+/// Scale `out` in place so it sums to at most `capacity` (Algorithm 1's
+/// normalization phase). No-op when already within capacity or all-zero.
+pub fn normalize_to_capacity(out: &mut [f64], capacity: f64) {
+    let total: f64 = out.iter().sum();
+    if total > capacity && total > 0.0 {
+        let scale = capacity / total;
+        for g in out.iter_mut() {
+            *g *= scale;
+        }
+    }
+}
+
+/// Construct every policy this crate ships, for comparison harnesses.
+pub fn all_policies() -> Vec<Box<dyn AllocationPolicy>> {
+    vec![
+        Box::new(StaticEqualPolicy),
+        Box::new(RoundRobinPolicy::default()),
+        Box::new(AdaptivePolicy::default()),
+        Box::new(PredictivePolicy::default()),
+        Box::new(FeedbackPolicy::default()),
+    ]
+}
+
+/// Construct a policy by its CLI/report name.
+pub fn policy_by_name(name: &str) -> Option<Box<dyn AllocationPolicy>> {
+    match name {
+        "static" | "static_equal" => Some(Box::new(StaticEqualPolicy)),
+        "round_robin" | "rr" => Some(Box::new(RoundRobinPolicy::default())),
+        "adaptive" => Some(Box::new(AdaptivePolicy::default())),
+        "predictive" => Some(Box::new(PredictivePolicy::default())),
+        "feedback" => Some(Box::new(FeedbackPolicy::default())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_scales_only_when_over() {
+        let mut g = vec![0.5, 0.5, 0.5];
+        normalize_to_capacity(&mut g, 1.0);
+        let total: f64 = g.iter().sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        // Relative proportions preserved.
+        assert!((g[0] - g[1]).abs() < 1e-12);
+
+        let mut h = vec![0.2, 0.3];
+        normalize_to_capacity(&mut h, 1.0);
+        assert_eq!(h, vec![0.2, 0.3]); // under capacity: untouched
+
+        let mut z = vec![0.0, 0.0];
+        normalize_to_capacity(&mut z, 1.0);
+        assert_eq!(z, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn policy_by_name_resolves_aliases() {
+        for n in ["static", "static_equal", "rr", "round_robin", "adaptive",
+                  "predictive", "feedback"] {
+            assert!(policy_by_name(n).is_some(), "{n}");
+        }
+        assert!(policy_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn all_policies_have_unique_names() {
+        let ps = all_policies();
+        let mut names: Vec<&str> = ps.iter().map(|p| p.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), ps.len());
+    }
+}

@@ -1,0 +1,141 @@
+//! Predictive extension (paper §VI "future work"): Algorithm 1 driven by an
+//! exponential-moving-average forecast of arrival rates instead of the raw
+//! instantaneous observation.
+//!
+//! Under steady load this converges to exactly the adaptive allocation;
+//! under bursty load it trades a slower reaction for smoother allocation
+//! curves (less thrash for platforms where reallocation has a cost). The
+//! `robustness` bench quantifies the trade-off on the 10× spike workload.
+
+use crate::allocator::{AdaptivePolicy, AllocContext, AllocationPolicy};
+
+/// EMA-forecasting wrapper around [`AdaptivePolicy`].
+#[derive(Debug, Clone)]
+pub struct PredictivePolicy {
+    /// EMA smoothing factor in (0, 1]; 1.0 degenerates to adaptive.
+    alpha: f64,
+    ema: Vec<f64>,
+    inner: AdaptivePolicy,
+    forecast: Vec<f64>,
+}
+
+impl Default for PredictivePolicy {
+    fn default() -> Self {
+        PredictivePolicy::new(0.3)
+    }
+}
+
+impl PredictivePolicy {
+    /// Create with a given EMA factor (clamped into (0, 1]).
+    pub fn new(alpha: f64) -> Self {
+        PredictivePolicy {
+            alpha: alpha.clamp(1e-6, 1.0),
+            ema: Vec::new(),
+            inner: AdaptivePolicy::default(),
+            forecast: Vec::new(),
+        }
+    }
+
+    /// Current forecast (empty before the first observation).
+    pub fn forecast(&self) -> &[f64] {
+        &self.ema
+    }
+}
+
+impl AllocationPolicy for PredictivePolicy {
+    fn name(&self) -> &'static str {
+        "predictive"
+    }
+
+    fn allocate(&mut self, ctx: &AllocContext<'_>, out: &mut [f64]) {
+        let n = ctx.arrival_rates.len();
+        if self.ema.len() != n {
+            // First observation seeds the EMA directly.
+            self.ema = ctx.arrival_rates.to_vec();
+            self.forecast = vec![0.0; n];
+        } else {
+            for i in 0..n {
+                self.ema[i] += self.alpha * (ctx.arrival_rates[i]
+                    - self.ema[i]);
+            }
+        }
+        self.forecast.copy_from_slice(&self.ema);
+        let fctx = AllocContext {
+            registry: ctx.registry,
+            arrival_rates: &self.forecast,
+            queue_depths: ctx.queue_depths,
+            step: ctx.step,
+            capacity: ctx.capacity,
+        };
+        self.inner.allocate(&fctx, out);
+    }
+
+    fn reset(&mut self) {
+        self.ema.clear();
+        self.forecast.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::AgentRegistry;
+
+    fn run_steps(p: &mut PredictivePolicy, rates: &[f64], steps: u64)
+                 -> Vec<f64> {
+        let reg = AgentRegistry::paper();
+        let queues = vec![0.0; 4];
+        let mut out = vec![0.0; 4];
+        for step in 0..steps {
+            let ctx = AllocContext {
+                registry: &reg,
+                arrival_rates: rates,
+                queue_depths: &queues,
+                step,
+                capacity: 1.0,
+            };
+            p.allocate(&ctx, &mut out);
+        }
+        out
+    }
+
+    #[test]
+    fn steady_state_matches_adaptive() {
+        let rates = [80.0, 40.0, 45.0, 25.0];
+        let mut pred = PredictivePolicy::default();
+        let got = run_steps(&mut pred, &rates, 50);
+
+        let reg = AgentRegistry::paper();
+        let queues = vec![0.0; 4];
+        let ctx = AllocContext {
+            registry: &reg,
+            arrival_rates: &rates,
+            queue_depths: &queues,
+            step: 0,
+            capacity: 1.0,
+        };
+        let mut want = vec![0.0; 4];
+        AdaptivePolicy::default().allocate(&ctx, &mut want);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn smooths_spikes() {
+        // After one spiked observation the EMA moves only alpha of the way.
+        let mut p = PredictivePolicy::new(0.3);
+        run_steps(&mut p, &[80.0, 40.0, 45.0, 25.0], 100);
+        run_steps(&mut p, &[800.0, 40.0, 45.0, 25.0], 1);
+        let f = p.forecast();
+        assert!((f[0] - (80.0 + 0.3 * 720.0)).abs() < 1e-6, "{f:?}");
+    }
+
+    #[test]
+    fn reset_forgets_history() {
+        let mut p = PredictivePolicy::default();
+        run_steps(&mut p, &[800.0, 0.0, 0.0, 0.0], 10);
+        p.reset();
+        assert!(p.forecast().is_empty());
+    }
+}

@@ -1,0 +1,59 @@
+//! Static equal-share baseline (§IV.A): capacity / N to every agent,
+//! regardless of workload. The paper's strongest baseline on latency.
+
+use crate::allocator::{AllocContext, AllocationPolicy};
+
+/// Equal static split of the GPU.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StaticEqualPolicy;
+
+impl AllocationPolicy for StaticEqualPolicy {
+    fn name(&self) -> &'static str {
+        "static_equal"
+    }
+
+    fn allocate(&mut self, ctx: &AllocContext<'_>, out: &mut [f64]) {
+        let share = ctx.capacity / ctx.registry.len() as f64;
+        out.fill(share);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::AgentRegistry;
+
+    #[test]
+    fn equal_quarter_shares_for_paper_agents() {
+        let reg = AgentRegistry::paper();
+        let rates = [80.0, 40.0, 45.0, 25.0];
+        let queues = [0.0; 4];
+        let ctx = AllocContext {
+            registry: &reg,
+            arrival_rates: &rates,
+            queue_depths: &queues,
+            step: 17,
+            capacity: 1.0,
+        };
+        let mut out = vec![0.0; 4];
+        StaticEqualPolicy.allocate(&ctx, &mut out);
+        assert_eq!(out, vec![0.25; 4]);
+    }
+
+    #[test]
+    fn respects_reduced_capacity() {
+        let reg = AgentRegistry::paper();
+        let rates = [1.0; 4];
+        let queues = [0.0; 4];
+        let ctx = AllocContext {
+            registry: &reg,
+            arrival_rates: &rates,
+            queue_depths: &queues,
+            step: 0,
+            capacity: 0.5,
+        };
+        let mut out = vec![0.0; 4];
+        StaticEqualPolicy.allocate(&ctx, &mut out);
+        assert_eq!(out, vec![0.125; 4]);
+    }
+}

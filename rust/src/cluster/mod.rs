@@ -1,0 +1,28 @@
+//! Multi-GPU, hierarchical allocation — the paper's §VI future work,
+//! built out: "multi-GPU scheduling with inter-GPU communication overhead
+//! modeling, and hierarchical allocation strategies across cluster and
+//! node levels".
+//!
+//! Two levels:
+//!
+//! * **Cluster level** ([`placement`]): agents are packed onto GPUs by
+//!   first-fit-decreasing over their minimum fractions; a rebalancer
+//!   migrates an agent when inter-GPU demand imbalance exceeds a
+//!   threshold, paying a model-size-dependent transfer penalty during
+//!   which the agent cannot serve (the "inter-GPU communication
+//!   overhead" model).
+//! * **Node level** ([`ClusterAllocator`]): the paper's Algorithm 1 runs
+//!   independently *within* each GPU over the agents placed there.
+//!
+//! [`ClusterSimulator`] extends the §IV.B discrete-time methodology to M
+//! GPUs so placement/migration policies can be evaluated with the same
+//! metrics as the single-GPU experiments (bench `robustness` prints the
+//! comparison; `cluster_sim.rs` integration tests assert the invariants).
+
+mod hierarchical;
+mod placement;
+mod sim;
+
+pub use hierarchical::ClusterAllocator;
+pub use placement::{first_fit_decreasing, Placement};
+pub use sim::{ClusterResult, ClusterSimulator, MigrationModel};

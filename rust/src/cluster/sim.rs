@@ -1,0 +1,289 @@
+//! Cluster-level discrete-time simulation (multi-GPU §VI extension).
+
+use crate::agents::AgentRegistry;
+use crate::cluster::{first_fit_decreasing, ClusterAllocator};
+use crate::error::Result;
+use crate::metrics::Streaming;
+use crate::serverless::BillingMeter;
+use crate::sim::SimConfig;
+use crate::workload::WorkloadGenerator;
+
+/// Inter-GPU migration cost model (the §VI "inter-GPU communication
+/// overhead"): transferring a checkpoint takes `model_mb / mb_per_s`
+/// seconds, during which the agent serves nothing.
+#[derive(Debug, Clone)]
+pub struct MigrationModel {
+    /// Effective transfer bandwidth (NVLink/PCIe), MB/s.
+    pub mb_per_s: f64,
+    /// Demand-imbalance ratio (max/min GPU demand) that triggers a
+    /// rebalance attempt.
+    pub imbalance_threshold: f64,
+    /// Minimum seconds between migrations — prevents thrash when the
+    /// imbalance persists structurally (e.g. one dominant agent).
+    pub cooldown_s: f64,
+}
+
+impl Default for MigrationModel {
+    fn default() -> Self {
+        // ~12 GB/s effective PCIe gen4 x16.
+        MigrationModel {
+            mb_per_s: 12_000.0,
+            imbalance_threshold: 2.0,
+            cooldown_s: 10.0,
+        }
+    }
+}
+
+/// Result of one cluster simulation run.
+#[derive(Debug, Clone)]
+pub struct ClusterResult {
+    /// GPUs simulated.
+    pub n_gpus: usize,
+    /// Mean backlog-wait latency per agent (same estimator as §IV.B).
+    pub agent_latencies: Vec<f64>,
+    /// Mean throughput per agent (rps).
+    pub agent_throughputs: Vec<f64>,
+    /// Per-GPU mean utilization (processed / allocated capacity).
+    pub gpu_utilization: Vec<f64>,
+    /// Migrations performed.
+    pub migrations: u64,
+    /// Total seconds of serving lost to migrations.
+    pub migration_stall_s: f64,
+    /// Billed cost (all GPUs).
+    pub cost_dollars: f64,
+}
+
+impl ClusterResult {
+    /// Mean of per-agent mean latencies.
+    pub fn mean_latency(&self) -> f64 {
+        crate::util::mean(&self.agent_latencies)
+    }
+
+    /// Aggregate throughput.
+    pub fn total_throughput(&self) -> f64 {
+        self.agent_throughputs.iter().sum()
+    }
+}
+
+/// Multi-GPU simulator: FFD placement, per-GPU Algorithm 1, optional
+/// imbalance-triggered migration with transfer stalls.
+#[derive(Debug, Clone)]
+pub struct ClusterSimulator {
+    cfg: SimConfig,
+    registry: AgentRegistry,
+    n_gpus: usize,
+    capacity_per_gpu: f64,
+    migration: Option<MigrationModel>,
+}
+
+impl ClusterSimulator {
+    /// Build; errors if the agents cannot be placed.
+    pub fn new(cfg: SimConfig, registry: AgentRegistry, n_gpus: usize,
+               capacity_per_gpu: f64, migration: Option<MigrationModel>)
+               -> Result<ClusterSimulator> {
+        // Validate placement feasibility up front.
+        first_fit_decreasing(&registry, n_gpus, capacity_per_gpu)?;
+        Ok(ClusterSimulator {
+            cfg, registry, n_gpus, capacity_per_gpu, migration,
+        })
+    }
+
+    /// Run the hierarchical allocator over the configured workload.
+    pub fn run(&self) -> Result<ClusterResult> {
+        let n = self.registry.len();
+        let cfg = &self.cfg;
+        let placement = first_fit_decreasing(
+            &self.registry, self.n_gpus, self.capacity_per_gpu)?;
+        let mut allocator =
+            ClusterAllocator::new(&self.registry, placement);
+        let mut workload = WorkloadGenerator::new(
+            cfg.arrival_rates.clone(), cfg.workload_kind.clone(),
+            cfg.arrival_process, cfg.seed);
+        let mut billing = BillingMeter::new(cfg.pricing);
+
+        let mut queues = vec![0.0f64; n];
+        let mut rates = vec![0.0f64; n];
+        let mut counts = vec![0.0f64; n];
+        let mut observed = vec![0.0f64; n];
+        let mut alloc = vec![0.0f64; n];
+        // Agent is stalled (migrating) until this sim-time.
+        let mut stalled_until = vec![0.0f64; n];
+        let base_tput = self.registry.base_tput();
+
+        let mut latency: Vec<Streaming> =
+            (0..n).map(|_| Streaming::new()).collect();
+        let mut throughput: Vec<Streaming> =
+            (0..n).map(|_| Streaming::new()).collect();
+        let mut gpu_util: Vec<Streaming> =
+            (0..self.n_gpus).map(|_| Streaming::new()).collect();
+        let mut migrations = 0u64;
+        let mut migration_stall_s = 0.0f64;
+        let mut last_migration_at = f64::NEG_INFINITY;
+
+        for step in 0..cfg.steps {
+            let now = step as f64 * cfg.dt;
+            workload.step(step, cfg.dt, &mut rates, &mut counts);
+            for i in 0..n {
+                queues[i] += counts[i];
+                observed[i] = counts[i] / cfg.dt;
+            }
+
+            // Cluster-level rebalance: migrate the hottest agent off the
+            // most demand-loaded GPU when imbalance exceeds threshold.
+            let cooled_down = self.migration.as_ref().is_some_and(|m| {
+                now >= last_migration_at + m.cooldown_s
+                    || migrations == 0
+            });
+            if let (Some(mig), true) = (&self.migration, cooled_down) {
+                let mut demand = vec![0.0f64; self.n_gpus];
+                for i in 0..n {
+                    demand[allocator.placement().gpu_of[i]] +=
+                        observed[i] / base_tput[i];
+                }
+                let (max_g, max_d) = demand.iter().cloned().enumerate()
+                    .fold((0, f64::MIN), |acc, (g, d)| {
+                        if d > acc.1 { (g, d) } else { acc }
+                    });
+                let (min_g, min_d) = demand.iter().cloned().enumerate()
+                    .fold((0, f64::MAX), |acc, (g, d)| {
+                        if d < acc.1 { (g, d) } else { acc }
+                    });
+                if max_d > mig.imbalance_threshold * min_d.max(1e-9)
+                    && max_g != min_g {
+                    // Smallest-min agent on the hot GPU that still fits.
+                    let candidates = allocator.placement().agents_on(max_g);
+                    let target_load: f64 = allocator.placement()
+                        .agents_on(min_g).iter()
+                        .map(|i| self.registry.min_gpu()[*i]).sum();
+                    let movable = candidates.into_iter()
+                        .filter(|i| candidates_fit(
+                            self.registry.min_gpu()[*i], target_load,
+                            self.capacity_per_gpu))
+                        .min_by(|a, b| self.registry.min_gpu()[*a]
+                                .partial_cmp(&self.registry.min_gpu()[*b])
+                                .expect("finite"));
+                    if let Some(agent) = movable {
+                        let transfer_s = self.registry.profile(agent)
+                            .model_mb as f64 / mig.mb_per_s;
+                        stalled_until[agent] = now + transfer_s;
+                        migration_stall_s += transfer_s;
+                        migrations += 1;
+                        last_migration_at = now;
+                        allocator.migrate(&self.registry, agent, min_g);
+                    }
+                }
+            }
+
+            allocator.allocate(&self.registry, &observed, &queues, step,
+                               self.capacity_per_gpu, &mut alloc);
+
+            let mut gpu_cap = vec![0.0f64; self.n_gpus];
+            let mut gpu_done = vec![0.0f64; self.n_gpus];
+            let mut total_alloc = 0.0;
+            for i in 0..n {
+                let mut g = alloc[i];
+                if now < stalled_until[i] {
+                    g = 0.0; // migrating: model is in flight
+                }
+                total_alloc += g;
+                let rate = base_tput[i] * g;
+                let cap = rate * cfg.dt;
+                let processed = queues[i].min(cap);
+                queues[i] -= processed;
+                let w = if rate > 0.0 {
+                    (queues[i] / rate).min(cfg.latency_cap_s)
+                } else if queues[i] > 0.0 {
+                    cfg.latency_cap_s
+                } else {
+                    0.0
+                };
+                latency[i].push(w);
+                throughput[i].push(processed / cfg.dt);
+                let gpu = allocator.placement().gpu_of[i];
+                gpu_cap[gpu] += cap;
+                gpu_done[gpu] += processed;
+            }
+            for g in 0..self.n_gpus {
+                if gpu_cap[g] > 0.0 {
+                    gpu_util[g].push(gpu_done[g] / gpu_cap[g]);
+                }
+            }
+            billing.charge(total_alloc, cfg.dt);
+        }
+
+        Ok(ClusterResult {
+            n_gpus: self.n_gpus,
+            agent_latencies: latency.iter().map(Streaming::mean).collect(),
+            agent_throughputs:
+                throughput.iter().map(Streaming::mean).collect(),
+            gpu_utilization: gpu_util.iter().map(Streaming::mean).collect(),
+            migrations,
+            migration_stall_s,
+            cost_dollars: billing.total_cost(),
+        })
+    }
+}
+
+fn candidates_fit(min_gpu: f64, target_load: f64, capacity: f64) -> bool {
+    target_load + min_gpu <= capacity + 1e-9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_cluster(n_gpus: usize, cap: f64) -> ClusterSimulator {
+        ClusterSimulator::new(SimConfig::paper(), AgentRegistry::paper(),
+                              n_gpus, cap, None).unwrap()
+    }
+
+    #[test]
+    fn one_gpu_cluster_matches_single_gpu_simulator() {
+        let cluster = paper_cluster(1, 1.0).run().unwrap();
+        let single = crate::sim::Simulator::new(
+            SimConfig::paper(),
+            crate::agents::AgentProfile::paper_agents())
+            .run(&mut crate::allocator::AdaptivePolicy::default());
+        assert!((cluster.mean_latency() - single.mean_latency()).abs()
+                < 1e-9);
+        assert!((cluster.total_throughput()
+                 - single.total_throughput()).abs() < 1e-9);
+        assert!((cluster.cost_dollars - single.cost_dollars).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_gpus_cut_latency_and_raise_throughput() {
+        let one = paper_cluster(1, 1.0).run().unwrap();
+        let two = paper_cluster(2, 1.0).run().unwrap();
+        assert!(two.total_throughput() > 1.5 * one.total_throughput(),
+                "{} vs {}", two.total_throughput(), one.total_throughput());
+        assert!(two.mean_latency() < 0.7 * one.mean_latency(),
+                "{} vs {}", two.mean_latency(), one.mean_latency());
+        // Cost doubles with the second device at full allocation.
+        assert!(two.cost_dollars > 1.8 * one.cost_dollars);
+    }
+
+    #[test]
+    fn migration_triggers_under_skew_and_costs_stall_time() {
+        let mut cfg = SimConfig::paper();
+        // Skew all demand onto agent 0 mid-run.
+        cfg.workload_kind = crate::workload::WorkloadKind::Dominance {
+            agent: 0, share: 0.9,
+        };
+        let sim = ClusterSimulator::new(
+            cfg, AgentRegistry::paper(), 2, 1.0,
+            Some(MigrationModel::default())).unwrap();
+        let r = sim.run().unwrap();
+        assert!(r.migrations >= 1, "no migration under 90% skew");
+        assert!(r.migration_stall_s > 0.0);
+        // System keeps serving everyone.
+        assert!(r.agent_throughputs.iter().all(|t| *t > 0.0));
+    }
+
+    #[test]
+    fn infeasible_cluster_is_rejected_at_construction() {
+        assert!(ClusterSimulator::new(
+            SimConfig::paper(), AgentRegistry::paper(), 2, 0.3, None)
+                .is_err());
+    }
+}

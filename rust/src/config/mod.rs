@@ -1,0 +1,12 @@
+//! Deployment configuration: JSON-backed, validated.
+//!
+//! A deployment file describes the platform (capacity, pricing, latency
+//! cap), the agents (Table I rows), the workload, and the policy — enough
+//! to reproduce any experiment from a single file. `configs/paper.json`
+//! ships the paper's §IV setup; `agentsrv simulate --config <file>` runs
+//! any variant.
+
+mod schema;
+
+pub use schema::{AgentConfig, DeploymentConfig, PlatformConfig,
+                 WorkloadConfig};

@@ -1,0 +1,375 @@
+//! Configuration schema + JSON loading + validation.
+//!
+//! Deployment files are JSON (the offline image has no TOML parser; the
+//! in-tree JSON module in `util::json` serves both this and the AOT
+//! manifest). `configs/paper.json` ships the paper's §IV setup.
+
+use std::path::Path;
+
+use crate::agents::{AgentProfile, Priority};
+use crate::error::{Error, Result};
+use crate::serverless::GpuPricing;
+use crate::sim::SimConfig;
+use crate::util::json::{self, Value};
+use crate::workload::{ArrivalProcess, WorkloadKind};
+
+/// One agent row in a deployment file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgentConfig {
+    /// Agent name (unique within the deployment).
+    pub name: String,
+    /// Model size in MB.
+    pub model_mb: u32,
+    /// Base throughput (rps at 100 % GPU).
+    pub base_tput: f64,
+    /// Minimum GPU fraction.
+    pub min_gpu: f64,
+    /// Priority: 1 high .. 3 low.
+    pub priority: u8,
+    /// Mean arrival rate (rps) for the simulated workload.
+    pub arrival_rate: f64,
+}
+
+/// Platform-wide knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlatformConfig {
+    /// Total GPU capacity distributed by the allocator.
+    pub capacity: f64,
+    /// $/GPU-hour.
+    pub dollars_per_hour: f64,
+    /// Latency estimator cap in seconds.
+    pub latency_cap_s: f64,
+}
+
+impl Default for PlatformConfig {
+    fn default() -> Self {
+        PlatformConfig {
+            capacity: 1.0,
+            dollars_per_hour: 0.72,
+            latency_cap_s: 1000.0,
+        }
+    }
+}
+
+/// Workload shape knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadConfig {
+    /// Steps to simulate.
+    pub steps: u64,
+    /// Step length (seconds).
+    pub dt: f64,
+    /// "deterministic" or "poisson".
+    pub process: String,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            steps: 100,
+            dt: 1.0,
+            process: "deterministic".into(),
+            seed: 42,
+        }
+    }
+}
+
+/// A full deployment description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeploymentConfig {
+    /// Allocation policy name ("adaptive", "static_equal", ...).
+    pub policy: String,
+    /// Platform knobs.
+    pub platform: PlatformConfig,
+    /// Workload knobs.
+    pub workload: WorkloadConfig,
+    /// Agent rows (>= 1 required).
+    pub agents: Vec<AgentConfig>,
+}
+
+fn f64_field(v: &Value, key: &str, default: Option<f64>) -> Result<f64> {
+    match v.get(key) {
+        Some(x) => x.as_f64().ok_or_else(|| Error::Config(format!(
+            "field '{key}' must be a number"))),
+        None => default.ok_or_else(|| Error::Config(format!(
+            "missing required field '{key}'"))),
+    }
+}
+
+fn u64_field(v: &Value, key: &str, default: Option<u64>) -> Result<u64> {
+    match v.get(key) {
+        Some(x) => x.as_u64().ok_or_else(|| Error::Config(format!(
+            "field '{key}' must be a non-negative integer"))),
+        None => default.ok_or_else(|| Error::Config(format!(
+            "missing required field '{key}'"))),
+    }
+}
+
+fn str_field(v: &Value, key: &str, default: Option<&str>) -> Result<String> {
+    match v.get(key) {
+        Some(x) => x.as_str().map(str::to_string).ok_or_else(
+            || Error::Config(format!("field '{key}' must be a string"))),
+        None => default.map(str::to_string).ok_or_else(
+            || Error::Config(format!("missing required field '{key}'"))),
+    }
+}
+
+impl DeploymentConfig {
+    /// The paper's §IV deployment.
+    pub fn paper() -> Self {
+        let profiles = AgentProfile::paper_agents();
+        let rates = AgentProfile::paper_arrival_rates();
+        DeploymentConfig {
+            policy: "adaptive".into(),
+            platform: PlatformConfig::default(),
+            workload: WorkloadConfig::default(),
+            agents: profiles.iter().zip(rates).map(|(p, r)| AgentConfig {
+                name: p.name.clone(),
+                model_mb: p.model_mb,
+                base_tput: p.base_tput,
+                min_gpu: p.min_gpu,
+                priority: p.priority.into(),
+                arrival_rate: r,
+            }).collect(),
+        }
+    }
+
+    /// Parse and validate a JSON deployment file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let cfg = Self::from_json_text(&text)
+            .map_err(|e| Error::Config(format!("{}: {e}", path.display())))?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Parse from JSON text (unvalidated — call [`Self::validate`]).
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let v = Value::parse(text)?;
+        let platform = match v.get("platform") {
+            Some(p) => PlatformConfig {
+                capacity: f64_field(p, "capacity", Some(1.0))?,
+                dollars_per_hour:
+                    f64_field(p, "dollars_per_hour", Some(0.72))?,
+                latency_cap_s: f64_field(p, "latency_cap_s", Some(1000.0))?,
+            },
+            None => PlatformConfig::default(),
+        };
+        let workload = match v.get("workload") {
+            Some(w) => WorkloadConfig {
+                steps: u64_field(w, "steps", Some(100))?,
+                dt: f64_field(w, "dt", Some(1.0))?,
+                process: str_field(w, "process", Some("deterministic"))?,
+                seed: u64_field(w, "seed", Some(42))?,
+            },
+            None => WorkloadConfig::default(),
+        };
+        let agents_v = v.require("agents")?.as_array().ok_or_else(
+            || Error::Config("'agents' must be an array".into()))?;
+        let agents = agents_v.iter().map(|a| Ok(AgentConfig {
+            name: str_field(a, "name", None)?,
+            model_mb: u64_field(a, "model_mb", None)? as u32,
+            base_tput: f64_field(a, "base_tput", None)?,
+            min_gpu: f64_field(a, "min_gpu", None)?,
+            priority: u64_field(a, "priority", None)? as u8,
+            arrival_rate: f64_field(a, "arrival_rate", None)?,
+        })).collect::<Result<Vec<_>>>()?;
+        Ok(DeploymentConfig {
+            policy: str_field(&v, "policy", Some("adaptive"))?,
+            platform,
+            workload,
+            agents,
+        })
+    }
+
+    /// Serialize to pretty JSON text.
+    pub fn to_json_text(&self) -> String {
+        json::obj(vec![
+            ("policy", json::s(&self.policy)),
+            ("platform", json::obj(vec![
+                ("capacity", json::num(self.platform.capacity)),
+                ("dollars_per_hour",
+                 json::num(self.platform.dollars_per_hour)),
+                ("latency_cap_s", json::num(self.platform.latency_cap_s)),
+            ])),
+            ("workload", json::obj(vec![
+                ("steps", json::num(self.workload.steps as f64)),
+                ("dt", json::num(self.workload.dt)),
+                ("process", json::s(&self.workload.process)),
+                ("seed", json::num(self.workload.seed as f64)),
+            ])),
+            ("agents", Value::Array(self.agents.iter().map(|a| {
+                json::obj(vec![
+                    ("name", json::s(&a.name)),
+                    ("model_mb", json::num(a.model_mb as f64)),
+                    ("base_tput", json::num(a.base_tput)),
+                    ("min_gpu", json::num(a.min_gpu)),
+                    ("priority", json::num(a.priority as f64)),
+                    ("arrival_rate", json::num(a.arrival_rate)),
+                ])
+            }).collect())),
+        ]).to_string_pretty()
+    }
+
+    /// Structural validation beyond per-field type checks.
+    pub fn validate(&self) -> Result<()> {
+        if self.agents.is_empty() {
+            return Err(Error::Config("at least one agent required".into()));
+        }
+        if crate::allocator::policy_by_name(&self.policy).is_none() {
+            return Err(Error::Config(format!(
+                "unknown policy '{}'", self.policy)));
+        }
+        match self.workload.process.as_str() {
+            "deterministic" | "poisson" => {}
+            other => return Err(Error::Config(format!(
+                "workload.process must be deterministic|poisson, got \
+                 '{other}'"))),
+        }
+        if !(self.platform.capacity > 0.0) {
+            return Err(Error::Config("platform.capacity must be > 0".into()));
+        }
+        for a in &self.agents {
+            self.profile_of(a)?.validate()?;
+            if a.arrival_rate < 0.0 {
+                return Err(Error::Config(format!(
+                    "agent '{}': arrival_rate must be >= 0", a.name)));
+            }
+        }
+        Ok(())
+    }
+
+    fn profile_of(&self, a: &AgentConfig) -> Result<AgentProfile> {
+        let priority = Priority::try_from(a.priority)
+            .map_err(Error::Config)?;
+        Ok(AgentProfile {
+            name: a.name.clone(),
+            model_mb: a.model_mb,
+            base_tput: a.base_tput,
+            min_gpu: a.min_gpu,
+            priority,
+        })
+    }
+
+    /// Agent profiles in file order.
+    pub fn profiles(&self) -> Result<Vec<AgentProfile>> {
+        self.agents.iter().map(|a| self.profile_of(a)).collect()
+    }
+
+    /// Arrival rates in file order.
+    pub fn arrival_rates(&self) -> Vec<f64> {
+        self.agents.iter().map(|a| a.arrival_rate).collect()
+    }
+
+    /// Lower into the simulator configuration.
+    pub fn sim_config(&self) -> Result<SimConfig> {
+        let process = match self.workload.process.as_str() {
+            "poisson" => ArrivalProcess::Poisson,
+            _ => ArrivalProcess::Deterministic,
+        };
+        Ok(SimConfig {
+            steps: self.workload.steps,
+            dt: self.workload.dt,
+            capacity: self.platform.capacity,
+            latency_cap_s: self.platform.latency_cap_s,
+            pricing: GpuPricing {
+                dollars_per_hour: self.platform.dollars_per_hour,
+                billing_quantum_s: 0.0,
+            },
+            arrival_rates: self.arrival_rates(),
+            workload_kind: WorkloadKind::Steady,
+            arrival_process: process,
+            seed: self.workload.seed,
+            record_timelines: false,
+            scale_to_zero_after_s: None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    #[test]
+    fn paper_config_valid_and_roundtrips() {
+        let cfg = DeploymentConfig::paper();
+        cfg.validate().unwrap();
+        let text = cfg.to_json_text();
+        let back = DeploymentConfig::from_json_text(&text).unwrap();
+        back.validate().unwrap();
+        assert_eq!(back, cfg);
+        assert_eq!(back.agents.len(), 4);
+        assert_eq!(back.policy, "adaptive");
+        assert_eq!(back.agents[3].model_mb, 3000);
+    }
+
+    #[test]
+    fn defaults_fill_missing_sections() {
+        let cfg = DeploymentConfig::from_json_text(
+            r#"{"agents": [{"name": "a", "model_mb": 100,
+                 "base_tput": 10, "min_gpu": 0.1, "priority": 1,
+                 "arrival_rate": 5}]}"#).unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.policy, "adaptive");
+        assert_eq!(cfg.workload.steps, 100);
+        assert_eq!(cfg.platform.dollars_per_hour, 0.72);
+    }
+
+    #[test]
+    fn load_rejects_bad_policy_and_process() {
+        let mut cfg = DeploymentConfig::paper();
+        cfg.policy = "nope".into();
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = DeploymentConfig::paper();
+        cfg.workload.process = "quantum".into();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn load_rejects_bad_agent_fields() {
+        let mut cfg = DeploymentConfig::paper();
+        cfg.agents[0].priority = 7;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = DeploymentConfig::paper();
+        cfg.agents[0].min_gpu = 2.0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = DeploymentConfig::paper();
+        cfg.agents[0].arrival_rate = -1.0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = DeploymentConfig::paper();
+        cfg.agents.clear();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn missing_required_agent_field_errors() {
+        let err = DeploymentConfig::from_json_text(
+            r#"{"agents": [{"name": "a"}]}"#).unwrap_err();
+        assert!(err.to_string().contains("model_mb"), "{err}");
+    }
+
+    #[test]
+    fn sim_config_lowering() {
+        let cfg = DeploymentConfig::paper();
+        let sc = cfg.sim_config().unwrap();
+        assert_eq!(sc.steps, 100);
+        assert_eq!(sc.arrival_rates, vec![80.0, 40.0, 45.0, 25.0]);
+        assert_eq!(sc.pricing.dollars_per_hour, 0.72);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = TempDir::new("cfg").unwrap();
+        let p = dir.path().join("d.json");
+        std::fs::write(&p, DeploymentConfig::paper().to_json_text())
+            .unwrap();
+        let cfg = DeploymentConfig::load(&p).unwrap();
+        assert_eq!(cfg.agents[0].name, "coordinator");
+    }
+}

@@ -1,0 +1,20 @@
+//! Multi-agent collaborative reasoning on top of the serving stack.
+//!
+//! The paper's motivating workload (§I): a lightweight coordinator
+//! orchestrates domain specialists. [`ReasoningPipeline`] implements that
+//! workflow as a three-stage DAG per task —
+//!
+//! ```text
+//!   coordinator (plan) ──► specialist(s) (solve, fan-out) ──► coordinator
+//!                                                             (aggregate)
+//! ```
+//!
+//! — where every stage is a real PJRT inference through [`crate::server`].
+//! Rapid agent interaction is exactly why the paper's round-robin baseline
+//! collapses: each hop waits for its agent's turn. The serving bench
+//! measures this end-to-end.
+
+mod workflow;
+
+pub use workflow::{ReasoningPipeline, StageResult, TaskKind,
+                   WorkflowResult};

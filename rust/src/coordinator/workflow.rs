@@ -1,0 +1,221 @@
+//! The coordinator → specialists → coordinator workflow.
+
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::server::AgentServer;
+use crate::util::Rng;
+
+/// What kind of collaborative task a request is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Route to the NLP specialist.
+    Nlp,
+    /// Route to the vision specialist.
+    Vision,
+    /// Route to the reasoning specialist.
+    Reasoning,
+    /// Fan out to all three specialists and aggregate.
+    MultiDomain,
+}
+
+impl TaskKind {
+    /// Specialists this kind involves, in execution order.
+    pub fn specialists(self) -> &'static [&'static str] {
+        match self {
+            TaskKind::Nlp => &["nlp"],
+            TaskKind::Vision => &["vision"],
+            TaskKind::Reasoning => &["reasoning"],
+            TaskKind::MultiDomain => &["nlp", "vision", "reasoning"],
+        }
+    }
+
+    /// Deterministic task mix used by examples/benches: a realistic blend
+    /// skewed toward single-specialist tasks.
+    pub fn sample(rng: &mut Rng) -> TaskKind {
+        match rng.below(10) {
+            0..=3 => TaskKind::Nlp,
+            4..=6 => TaskKind::Vision,
+            7..=8 => TaskKind::Reasoning,
+            _ => TaskKind::MultiDomain,
+        }
+    }
+}
+
+/// One completed stage of a workflow.
+#[derive(Debug, Clone)]
+pub struct StageResult {
+    /// Agent that ran the stage.
+    pub agent: String,
+    /// The stage's greedy next-token output.
+    pub next_token: i32,
+    /// Enqueue → completion time for this stage.
+    pub latency: Duration,
+    /// Batch the stage rode in.
+    pub batch_size: usize,
+}
+
+/// A completed collaborative task.
+#[derive(Debug, Clone)]
+pub struct WorkflowResult {
+    /// Task kind executed.
+    pub kind: TaskKind,
+    /// Per-stage results: plan, specialist(s), aggregate.
+    pub stages: Vec<StageResult>,
+    /// End-to-end wall time.
+    pub total: Duration,
+}
+
+impl WorkflowResult {
+    /// Sum of per-stage serving latencies (excludes client-side gaps).
+    pub fn serving_latency(&self) -> Duration {
+        self.stages.iter().map(|s| s.latency).sum()
+    }
+
+    /// The final aggregated answer token.
+    pub fn answer(&self) -> i32 {
+        self.stages.last().map(|s| s.next_token).unwrap_or(-1)
+    }
+}
+
+/// Runs collaborative tasks through an [`AgentServer`].
+#[derive(Debug)]
+pub struct ReasoningPipeline {
+    seq_len: usize,
+    /// Per-agent vocab sizes, used to clamp tokens between stages.
+    vocabs: Vec<(String, usize)>,
+}
+
+impl ReasoningPipeline {
+    /// Build over a running server.
+    pub fn new(server: &AgentServer, vocabs: Vec<(String, usize)>)
+               -> ReasoningPipeline {
+        ReasoningPipeline { seq_len: server.seq_len(), vocabs }
+    }
+
+    fn vocab_of(&self, agent: &str) -> Result<usize> {
+        self.vocabs.iter().find(|(n, _)| n == agent).map(|(_, v)| *v)
+            .ok_or_else(|| Error::Serving(format!(
+                "agent '{agent}' missing from pipeline vocab table")))
+    }
+
+    /// Build a prompt for `agent` from a task seed plus upstream stage
+    /// outputs: deterministic filler tokens with the upstream answers
+    /// spliced into the tail (folded into the agent's vocab).
+    pub fn prompt(&self, agent_vocab: usize, seed: u64, upstream: &[i32])
+                  -> Vec<i32> {
+        let mut tokens: Vec<i32> = (0..self.seq_len).map(|i| {
+            ((seed.wrapping_mul(31).wrapping_add(i as u64 * 7 + 3))
+             % agent_vocab as u64) as i32
+        }).collect();
+        let tail = self.seq_len.saturating_sub(upstream.len());
+        for (slot, tok) in tokens[tail..].iter_mut().zip(upstream) {
+            *slot = tok.rem_euclid(agent_vocab as i32);
+        }
+        tokens
+    }
+
+    /// Execute one collaborative task: coordinator plan → specialist
+    /// fan-out → coordinator aggregation.
+    pub fn run(&self, server: &AgentServer, kind: TaskKind, seed: u64)
+               -> Result<WorkflowResult> {
+        let start = Instant::now();
+        let mut stages = Vec::with_capacity(kind.specialists().len() + 2);
+
+        // Stage 1: the coordinator plans.
+        let coord_vocab = self.vocab_of("coordinator")?;
+        let plan_prompt = self.prompt(coord_vocab, seed, &[]);
+        let plan = server.submit_blocking("coordinator", plan_prompt)?;
+        let plan_token = plan.next_token;
+        stages.push(StageResult {
+            agent: plan.agent,
+            next_token: plan_token,
+            latency: plan.latency,
+            batch_size: plan.batch_size,
+        });
+
+        // Stage 2: specialists solve. Fan out concurrently: submit all,
+        // then collect (the server's governor interleaves them under the
+        // allocator's shares).
+        let mut pending = Vec::new();
+        for name in kind.specialists() {
+            let vocab = self.vocab_of(name)?;
+            let prompt = self.prompt(vocab, seed ^ 0x5eed, &[plan_token]);
+            pending.push((name, server.submit(name, prompt)?));
+        }
+        let mut specialist_tokens = Vec::with_capacity(pending.len());
+        for (name, rx) in pending {
+            let done = rx.recv().map_err(|_| Error::Serving(
+                format!("{name} stage dropped")))??;
+            specialist_tokens.push(done.next_token);
+            stages.push(StageResult {
+                agent: done.agent,
+                next_token: done.next_token,
+                latency: done.latency,
+                batch_size: done.batch_size,
+            });
+        }
+
+        // Stage 3: the coordinator aggregates specialist answers.
+        let mut upstream = vec![plan_token];
+        upstream.extend(&specialist_tokens);
+        let agg_prompt = self.prompt(coord_vocab, seed ^ 0xa99, &upstream);
+        let agg = server.submit_blocking("coordinator", agg_prompt)?;
+        stages.push(StageResult {
+            agent: agg.agent,
+            next_token: agg.next_token,
+            latency: agg.latency,
+            batch_size: agg.batch_size,
+        });
+
+        Ok(WorkflowResult { kind, stages, total: start.elapsed() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_kinds_route_to_expected_specialists() {
+        assert_eq!(TaskKind::Nlp.specialists(), ["nlp"]);
+        assert_eq!(TaskKind::MultiDomain.specialists(),
+                   ["nlp", "vision", "reasoning"]);
+    }
+
+    #[test]
+    fn task_mix_is_deterministic_and_covers_all_kinds() {
+        let mut rng = Rng::new(7);
+        let kinds: Vec<TaskKind> =
+            (0..200).map(|_| TaskKind::sample(&mut rng)).collect();
+        let mut rng2 = Rng::new(7);
+        let again: Vec<TaskKind> =
+            (0..200).map(|_| TaskKind::sample(&mut rng2)).collect();
+        assert_eq!(kinds, again);
+        for kind in [TaskKind::Nlp, TaskKind::Vision, TaskKind::Reasoning,
+                     TaskKind::MultiDomain] {
+            assert!(kinds.contains(&kind), "{kind:?} never sampled");
+        }
+    }
+
+    #[test]
+    fn prompt_respects_vocab_and_splices_upstream() {
+        let p = ReasoningPipeline {
+            seq_len: 16,
+            vocabs: vec![("coordinator".into(), 256)],
+        };
+        let prompt = p.prompt(256, 42, &[1000, -3]);
+        assert_eq!(prompt.len(), 16);
+        assert!(prompt.iter().all(|t| (0..256).contains(t)));
+        // Upstream answers occupy the tail, folded into vocab.
+        assert_eq!(prompt[14], 1000 % 256);
+        assert_eq!(prompt[15], (-3i32).rem_euclid(256));
+    }
+
+    #[test]
+    fn prompt_is_deterministic_per_seed() {
+        let p = ReasoningPipeline { seq_len: 8, vocabs: vec![] };
+        assert_eq!(p.prompt(512, 1, &[5]), p.prompt(512, 1, &[5]));
+        assert_ne!(p.prompt(512, 1, &[]), p.prompt(512, 2, &[]));
+    }
+}

@@ -1,0 +1,77 @@
+//! Crate-wide error type.
+//!
+//! A small hand-rolled enum (no `thiserror` dependency) covering the three
+//! failure domains: configuration, artifact loading / PJRT execution, and
+//! serving-time faults. Everything converts into [`Error`] so public APIs
+//! return a single [`Result`] type.
+
+use std::fmt;
+
+/// Errors produced by any agentsrv subsystem.
+#[derive(Debug)]
+pub enum Error {
+    /// Invalid or inconsistent configuration (file or programmatic).
+    Config(String),
+    /// Artifact manifest / params / HLO loading problems.
+    Artifact(String),
+    /// PJRT compile/execute failures surfaced by the `xla` crate.
+    Xla(String),
+    /// Serving-time faults (queue overflow, closed channels, timeouts).
+    Serving(String),
+    /// Workload trace parsing problems.
+    Trace(String),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Xla(m) => write!(f, "xla/pjrt error: {m}"),
+            Error::Serving(m) => write!(f, "serving error: {m}"),
+            Error::Trace(m) => write!(f, "trace error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_are_stable() {
+        let e = Error::Config("bad".into());
+        assert_eq!(e.to_string(), "config error: bad");
+        let e = Error::Xla("compile".into());
+        assert_eq!(e.to_string(), "xla/pjrt error: compile");
+    }
+
+    #[test]
+    fn io_error_converts_and_sources() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

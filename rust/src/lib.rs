@@ -1,0 +1,57 @@
+//! # agentsrv — adaptive GPU allocation for multi-agent serving
+//!
+//! Production-shaped reproduction of *"Adaptive GPU Resource Allocation for
+//! Multi-Agent Collaborative Reasoning in Serverless Environments"*
+//! (Zhang, Guo, Tan — CS.DC 2025) as a three-layer Rust + JAX + Pallas
+//! serving framework.
+//!
+//! ## Layers
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: the O(N) adaptive
+//!   GPU-fraction allocator ([`allocator`]), embedded in both a
+//!   paper-faithful discrete-time simulator ([`sim`]) that regenerates every
+//!   table/figure of the evaluation, and a real serving stack
+//!   ([`server`], [`coordinator`], [`runtime`]) that executes the four agent
+//!   models through PJRT.
+//! * **Layer 2 (build-time JAX)** — four heterogeneous transformer agents,
+//!   AOT-lowered to HLO text under `artifacts/` (see `python/compile/`).
+//! * **Layer 1 (build-time Pallas)** — attention / fused-MLP / layernorm
+//!   kernels the models call (see `python/compile/kernels/`).
+//!
+//! Python never runs on the request path: the [`runtime`] module loads the
+//! HLO artifacts once and executes them natively via the `xla` crate
+//! (PJRT CPU client).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use agentsrv::agents::AgentProfile;
+//! use agentsrv::allocator::{AdaptivePolicy, AllocationPolicy};
+//! use agentsrv::sim::{SimConfig, Simulator};
+//!
+//! let agents = AgentProfile::paper_agents();        // Table I
+//! let cfg = SimConfig::paper();                     // §IV setup
+//! let result = Simulator::new(cfg, agents)
+//!     .run(&mut AdaptivePolicy::default());
+//! println!("mean latency: {:.1}s", result.mean_latency());
+//! ```
+//!
+//! See `examples/` for the end-to-end drivers and `rust/benches/` for the
+//! per-table/per-figure regeneration harnesses.
+
+pub mod agents;
+pub mod allocator;
+pub mod config;
+pub mod cluster;
+pub mod coordinator;
+pub mod error;
+pub mod metrics;
+pub mod repro;
+pub mod runtime;
+pub mod server;
+pub mod serverless;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+pub use error::{Error, Result};

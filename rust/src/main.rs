@@ -1,0 +1,354 @@
+//! agentsrv CLI — the launcher.
+//!
+//! ```text
+//! agentsrv simulate [--config f.json] [--policy p] [--steps N]
+//!                   [--poisson] [--seed N] [--timelines out.csv]
+//! agentsrv repro    [--out DIR] [--exp ID]      regenerate tables/figures
+//! agentsrv serve    [--artifacts DIR] [--policy p] [--requests N]
+//!                   [--workflows N]             end-to-end PJRT serving
+//! agentsrv verify   [--artifacts DIR]           golden-vector check
+//! agentsrv config   [--out FILE]                dump the paper config
+//! ```
+//!
+//! Arg parsing is hand-rolled (the image is offline; no clap).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use agentsrv::agents::AgentProfile;
+use agentsrv::allocator::policy_by_name;
+use agentsrv::config::DeploymentConfig;
+use agentsrv::coordinator::{ReasoningPipeline, TaskKind};
+use agentsrv::error::{Error, Result};
+use agentsrv::metrics::export;
+use agentsrv::repro;
+use agentsrv::runtime::{InferenceEngine, Manifest};
+use agentsrv::server::{AgentServer, ServerConfig};
+use agentsrv::sim::Simulator;
+use agentsrv::util::Rng;
+use agentsrv::workload::ArrivalProcess;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else {
+        eprintln!("{USAGE}");
+        return ExitCode::FAILURE;
+    };
+    let opts = match Opts::parse(rest) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match cmd.as_str() {
+        "simulate" => cmd_simulate(&opts),
+        "repro" => cmd_repro(&opts),
+        "serve" => cmd_serve(&opts),
+        "verify" => cmd_verify(&opts),
+        "config" => cmd_config(&opts),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown command '{other}'"))),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const USAGE: &str = "\
+agentsrv — adaptive GPU allocation for multi-agent serving
+
+USAGE:
+  agentsrv simulate [--config FILE] [--policy NAME] [--steps N]
+                    [--poisson] [--seed N] [--timelines FILE.csv]
+  agentsrv repro    [--out DIR] [--exp table1|table2|fig2a|fig2b|fig2c|
+                                       fig2d|overload|spike|dominance|
+                                       scaling|all]
+  agentsrv serve    [--artifacts DIR] [--policy NAME] [--requests N]
+                    [--workflows N] [--seed N]
+  agentsrv verify   [--artifacts DIR]
+  agentsrv config   [--out FILE]
+
+POLICIES: adaptive (paper Alg. 1) | static_equal | round_robin |
+          predictive | feedback";
+
+/// Parsed `--key value` / `--flag` options.
+struct Opts {
+    values: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Opts {
+    fn parse(args: &[String]) -> Result<Opts> {
+        let mut values = HashMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            let Some(key) = a.strip_prefix("--") else {
+                return Err(Error::Config(format!(
+                    "unexpected argument '{a}'")));
+            };
+            // Flags that take no value.
+            if matches!(key, "poisson" | "quick") {
+                flags.push(key.to_string());
+                i += 1;
+                continue;
+            }
+            let Some(value) = args.get(i + 1) else {
+                return Err(Error::Config(format!(
+                    "--{key} requires a value")));
+            };
+            values.insert(key.to_string(), value.clone());
+            i += 2;
+        }
+        Ok(Opts { values, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| Error::Config(format!(
+                "--{key} must be an integer, got '{v}'"))),
+        }
+    }
+}
+
+fn print_table2_style(rows: &[agentsrv::sim::SummaryRow]) {
+    println!("{:<14} {:>14} {:>17} {:>10} {:>16}", "policy",
+             "avg latency(s)", "total tput(rps)", "cost($)",
+             "latency std(s)");
+    for r in rows {
+        println!("{:<14} {:>14.1} {:>17.1} {:>10.3} {:>16.1}",
+                 r.policy, r.avg_latency_s, r.total_throughput_rps,
+                 r.cost_dollars, r.latency_std_s);
+    }
+}
+
+fn cmd_simulate(opts: &Opts) -> Result<()> {
+    let deployment = match opts.get("config") {
+        Some(path) => DeploymentConfig::load(&PathBuf::from(path))?,
+        None => DeploymentConfig::paper(),
+    };
+    let mut cfg = deployment.sim_config()?;
+    cfg.steps = opts.u64_or("steps", cfg.steps)?;
+    cfg.seed = opts.u64_or("seed", cfg.seed)?;
+    if opts.flag("poisson") {
+        cfg.arrival_process = ArrivalProcess::Poisson;
+    }
+    let timelines_out = opts.get("timelines").map(PathBuf::from);
+    cfg.record_timelines = timelines_out.is_some();
+
+    let policy_name = opts.get("policy").unwrap_or(&deployment.policy);
+    let mut policy = policy_by_name(policy_name).ok_or_else(
+        || Error::Config(format!("unknown policy '{policy_name}'")))?;
+
+    let sim = Simulator::new(cfg, deployment.profiles()?);
+    let result = sim.run(policy.as_mut());
+
+    println!("policy: {}   steps: {}   dt: {}s", result.policy,
+             result.steps, result.dt);
+    println!("{:<14} {:>12} {:>12} {:>12} {:>12} {:>12}", "agent",
+             "latency(s)", "tput(rps)", "queue", "alloc", "util");
+    for a in &result.per_agent {
+        println!("{:<14} {:>12.1} {:>12.1} {:>12.0} {:>12.3} {:>12.2}",
+                 a.name, a.latency.mean(), a.throughput.mean(),
+                 a.queue.mean(), a.allocation.mean(),
+                 a.utilization.mean());
+    }
+    println!("\nmean latency  : {:>10.1} s", result.mean_latency());
+    println!("total tput    : {:>10.1} rps", result.total_throughput());
+    println!("cost          : {:>10.4} $", result.cost_dollars);
+    println!("latency std   : {:>10.1} s", result.latency_std());
+
+    if let (Some(path), Some(tl)) = (timelines_out, &result.timelines) {
+        export::timeseries_csv(&tl.allocation, &path)?;
+        println!("allocation timeline -> {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_repro(opts: &Opts) -> Result<()> {
+    let out = PathBuf::from(opts.get("out").unwrap_or("results"));
+    let exp = opts.get("exp").unwrap_or("all");
+    std::fs::create_dir_all(&out)?;
+    match exp {
+        "all" => {
+            repro::write_all(&out)?;
+            println!("Table II (reproduced):");
+            print_table2_style(&repro::table2());
+            println!("\nall experiment CSVs -> {}/", out.display());
+        }
+        "table1" => {
+            for (name, vals) in repro::table1() {
+                println!("{name:<14} {vals:?}");
+            }
+        }
+        "table2" => print_table2_style(&repro::table2()),
+        "fig2a" => {
+            for s in repro::fig2a() {
+                println!("{:<14} {:?}", s.policy, s.values);
+            }
+        }
+        "fig2b" => {
+            for s in repro::fig2b() {
+                println!("{:<14} {:?}", s.policy, s.values);
+            }
+        }
+        "fig2c" => {
+            let ts = repro::fig2c();
+            let path = out.join("fig2c_allocation.csv");
+            export::timeseries_csv(&ts, &path)?;
+            println!("allocation timeline -> {}", path.display());
+        }
+        "fig2d" => {
+            for p in repro::fig2d() {
+                println!("{:<14} latency {:>7.1}s tput {:>5.1}rps \
+                          cost ${:.3}",
+                         p.policy, p.avg_latency_s,
+                         p.total_throughput_rps, p.cost_dollars);
+            }
+        }
+        "overload" => {
+            let r = repro::overload_experiment(3.0);
+            println!("{r:#?}");
+        }
+        "spike" => {
+            let r = repro::spike_experiment();
+            println!("{r:#?}");
+        }
+        "dominance" => {
+            let r = repro::dominance_experiment(0.9);
+            println!("{r:#?}");
+        }
+        "scaling" => {
+            for p in repro::scaling_experiment(&[4, 16, 64, 256, 1024,
+                                                 4096]) {
+                println!("N={:<6} {:>12.0} ns/allocation",
+                         p.n_agents, p.ns_per_call);
+            }
+        }
+        other => return Err(Error::Config(format!(
+            "unknown experiment '{other}'"))),
+    }
+    Ok(())
+}
+
+fn cmd_serve(opts: &Opts) -> Result<()> {
+    let dir = PathBuf::from(opts.get("artifacts").unwrap_or("artifacts"));
+    let policy = opts.get("policy").unwrap_or("adaptive").to_string();
+    let n_requests = opts.u64_or("requests", 64)?;
+    let n_workflows = opts.u64_or("workflows", 8)?;
+    let seed = opts.u64_or("seed", 42)?;
+
+    let manifest = Manifest::load(&dir)?;
+    let vocabs: Vec<(String, usize)> = manifest.agents.iter()
+        .map(|a| (a.name.clone(), a.vocab)).collect();
+    let seq = manifest.seq_len;
+
+    println!("starting server (policy: {policy}) ...");
+    let mut cfg = ServerConfig::new(&dir);
+    cfg.policy = policy;
+    let server = AgentServer::start(cfg)?;
+
+    // Direct per-agent load, weighted like the paper's arrival mix.
+    let mut rng = Rng::new(seed);
+    let rates = AgentProfile::paper_arrival_rates();
+    let total_rate: f64 = rates.iter().sum();
+    let names: Vec<String> =
+        vocabs.iter().map(|(n, _)| n.clone()).collect();
+    let mut pending = Vec::new();
+    for i in 0..n_requests {
+        // Sample an agent proportional to the paper's rates.
+        let mut pick = rng.uniform() * total_rate;
+        let mut agent = 0usize;
+        for (j, r) in rates.iter().enumerate() {
+            if pick < *r {
+                agent = j;
+                break;
+            }
+            pick -= r;
+        }
+        let vocab = vocabs[agent].1;
+        let tokens: Vec<i32> = (0..seq)
+            .map(|k| ((i * 31 + k as u64 * 7 + 3) % vocab as u64) as i32)
+            .collect();
+        pending.push(server.submit(&names[agent], tokens)?);
+    }
+    let mut completed = 0u64;
+    for rx in pending {
+        rx.recv().map_err(|_| Error::Serving(
+            "request dropped".into()))??;
+        completed += 1;
+    }
+    println!("direct requests completed: {completed}");
+
+    // Collaborative workflows.
+    let pipeline = ReasoningPipeline::new(&server, vocabs);
+    for i in 0..n_workflows {
+        let kind = TaskKind::sample(&mut rng);
+        let wf = pipeline.run(&server, kind, i)?;
+        println!("workflow {i:>3} {:<12} stages {} answer {:>4} \
+                  total {:>8.2?}",
+                 format!("{:?}", wf.kind), wf.stages.len(), wf.answer(),
+                 wf.total);
+    }
+
+    let stats = server.shutdown();
+    println!("\n{:<14} {:>9} {:>12} {:>12} {:>10} {:>10}", "agent",
+             "completed", "p50", "p99", "mean batch", "gpu share");
+    for (name, completed, p50, p99, batch, share) in &stats.per_agent {
+        println!("{name:<14} {completed:>9} {:>12} {:>12} {batch:>10.2} \
+                  {share:>10.3}",
+                 format!("{:.2}ms", p50 * 1e3),
+                 format!("{:.2}ms", p99 * 1e3));
+    }
+    println!("\ntotal completed: {}   errors: {}   gpu busy: {:.2}s",
+             stats.total_completed, stats.total_errors,
+             stats.gpu_busy_seconds);
+    println!("last allocation: {:?}",
+             stats.last_allocation.iter().map(|g| (g * 1e3).round() / 1e3)
+                 .collect::<Vec<_>>());
+    Ok(())
+}
+
+fn cmd_verify(opts: &Opts) -> Result<()> {
+    let dir = PathBuf::from(opts.get("artifacts").unwrap_or("artifacts"));
+    let mut engine = InferenceEngine::load(&dir)?;
+    println!("platform: {}", engine.platform());
+    let verified = engine.verify_golden()?;
+    for (agent, batch) in &verified {
+        println!("golden OK: {agent} b{batch}");
+    }
+    println!("{} (agent, batch) variants verified bit-exact against JAX",
+             verified.len());
+    Ok(())
+}
+
+fn cmd_config(opts: &Opts) -> Result<()> {
+    let text = DeploymentConfig::paper().to_json_text();
+    match opts.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            println!("paper config -> {path}");
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! CSV/JSON writers used by the `repro` CLI and the bench harnesses.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::error::Result;
+use crate::metrics::TimeSeries;
+use crate::util::json::Value;
+
+/// Write a time series as CSV with a `step` column.
+pub fn timeseries_csv(ts: &TimeSeries, path: &Path) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "step,{}", ts.names().join(","))?;
+    for (t, row) in ts.rows().enumerate() {
+        let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        writeln!(f, "{t},{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+/// Write a generic table: header + rows of (label, values...).
+pub fn table_csv(path: &Path, header: &[&str],
+                 rows: &[(String, Vec<f64>)]) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for (label, vals) in rows {
+        let cells: Vec<String> = vals.iter().map(|v| format!("{v}")).collect();
+        writeln!(f, "{label},{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+/// Write a JSON value pretty-printed.
+pub fn json_file(value: &Value, path: &Path) -> Result<()> {
+    std::fs::write(path, value.to_string_pretty())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+    use crate::util::TempDir;
+
+    #[test]
+    fn timeseries_roundtrips_as_csv_text() {
+        let mut ts = TimeSeries::new(vec!["x".into(), "y".into()]);
+        ts.push_row(&[1.5, 2.5]);
+        let dir = TempDir::new("exp").unwrap();
+        let p = dir.path().join("ts.csv");
+        timeseries_csv(&ts, &p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "step,x,y\n0,1.5,2.5\n");
+    }
+
+    #[test]
+    fn table_and_json_write() {
+        let dir = TempDir::new("exp").unwrap();
+        let p = dir.path().join("t.csv");
+        table_csv(&p, &["policy", "latency"],
+                  &[("adaptive".into(), vec![111.9])]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("adaptive,111.9"));
+
+        let j = dir.path().join("v.json");
+        json_file(&json::obj(vec![("a", json::num(1.0))]), &j).unwrap();
+        assert!(std::fs::read_to_string(&j).unwrap().contains("\"a\": 1"));
+    }
+}

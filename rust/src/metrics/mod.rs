@@ -1,0 +1,17 @@
+//! Metrics: streaming statistics, latency histograms, time series, export.
+//!
+//! Everything the evaluation section reports flows through this module:
+//! per-agent latency/throughput/queue statistics ([`Streaming`]), latency
+//! distributions for the serving path ([`Histogram`] with p50/p99), the
+//! allocation timelines behind Fig 2(c) ([`TimeSeries`]), and CSV/JSON
+//! writers ([`export`]) used by the `repro` CLI and the benches.
+
+mod histogram;
+mod streaming;
+mod timeseries;
+
+pub mod export;
+
+pub use histogram::Histogram;
+pub use streaming::Streaming;
+pub use timeseries::TimeSeries;

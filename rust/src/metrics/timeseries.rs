@@ -1,0 +1,84 @@
+//! Named time series — the allocation/queue/latency timelines behind
+//! Fig 2(c) and the robustness plots.
+
+/// A set of equally-sampled named series.
+#[derive(Debug, Clone, Default)]
+pub struct TimeSeries {
+    names: Vec<String>,
+    /// values[series][step]
+    values: Vec<Vec<f64>>,
+}
+
+impl TimeSeries {
+    /// Create with the given series names.
+    pub fn new(names: Vec<String>) -> Self {
+        let n = names.len();
+        TimeSeries { names, values: vec![Vec::new(); n] }
+    }
+
+    /// Append one sample per series (lengths must match).
+    pub fn push_row(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.values.len(), "row width mismatch");
+        for (series, &v) in self.values.iter_mut().zip(row) {
+            series.push(v);
+        }
+    }
+
+    /// Series names in column order.
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// One series by index.
+    pub fn series(&self, idx: usize) -> &[f64] {
+        &self.values[idx]
+    }
+
+    /// One series by name.
+    pub fn series_by_name(&self, name: &str) -> Option<&[f64]> {
+        self.names.iter().position(|n| n == name)
+            .map(|i| self.values[i].as_slice())
+    }
+
+    /// Number of samples per series.
+    pub fn len(&self) -> usize {
+        self.values.first().map_or(0, Vec::len)
+    }
+
+    /// True when no samples have been pushed.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Iterate rows (step-major) for CSV export.
+    pub fn rows(&self) -> impl Iterator<Item = Vec<f64>> + '_ {
+        (0..self.len()).map(move |t| {
+            self.values.iter().map(|s| s[t]).collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_lookup() {
+        let mut ts = TimeSeries::new(vec!["a".into(), "b".into()]);
+        ts.push_row(&[1.0, 2.0]);
+        ts.push_row(&[3.0, 4.0]);
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts.series(0), &[1.0, 3.0]);
+        assert_eq!(ts.series_by_name("b"), Some(&[2.0, 4.0][..]));
+        assert_eq!(ts.series_by_name("c"), None);
+        let rows: Vec<Vec<f64>> = ts.rows().collect();
+        assert_eq!(rows, vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn mismatched_row_panics() {
+        let mut ts = TimeSeries::new(vec!["a".into()]);
+        ts.push_row(&[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,152 @@
+//! Experiment drivers: one function per paper table/figure (§IV–§V).
+//!
+//! Each driver returns structured data; [`write_all`] exports everything as
+//! CSV under a results directory. The CLI (`agentsrv repro`), the examples,
+//! and the criterion benches all call through here so every consumer sees
+//! identical numbers.
+
+mod experiments;
+mod robustness;
+
+pub use experiments::{fig2a, fig2b, fig2c, fig2d, table1, table2,
+                      CostPerfPoint, PerAgentSeries};
+pub use robustness::{dominance_experiment, overload_experiment,
+                     scaling_experiment, spike_experiment,
+                     synthetic_registry, DominanceReport, OverloadReport,
+                     ScalingPoint, SpikeReport};
+
+use std::path::Path;
+
+use crate::error::Result;
+use crate::metrics::export;
+
+/// Run every experiment and write its CSV into `dir`.
+///
+/// Produces: `table1.csv`, `table2.csv`, `fig2a_latency.csv`,
+/// `fig2b_throughput.csv`, `fig2c_allocation.csv`, `fig2d_cost_perf.csv`,
+/// `robustness_overload.csv`, `robustness_spike.csv`,
+/// `robustness_dominance.csv`, `allocator_scaling.csv`.
+pub fn write_all(dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+
+    // Table I — agent characteristics.
+    let t1 = table1();
+    export::table_csv(
+        &dir.join("table1.csv"),
+        &["agent", "model_mb", "base_tput_rps", "min_gpu", "priority"],
+        &t1,
+    )?;
+
+    // Table II — policy comparison.
+    let rows = table2();
+    export::table_csv(
+        &dir.join("table2.csv"),
+        &["policy", "avg_latency_s", "total_throughput_rps", "cost_dollars",
+          "latency_std_s", "mean_utilization"],
+        &rows.iter().map(|r| (r.policy.clone(), vec![
+            r.avg_latency_s, r.total_throughput_rps, r.cost_dollars,
+            r.latency_std_s, r.mean_utilization,
+        ])).collect::<Vec<_>>(),
+    )?;
+
+    // Fig 2(a) — per-agent latency.
+    let a = fig2a();
+    export::table_csv(
+        &dir.join("fig2a_latency.csv"),
+        &["policy", "coordinator", "nlp", "vision", "reasoning"],
+        &a.iter().map(|s| (s.policy.clone(), s.values.clone())).collect::<Vec<_>>(),
+    )?;
+
+    // Fig 2(b) — per-agent + total throughput.
+    let b = fig2b();
+    export::table_csv(
+        &dir.join("fig2b_throughput.csv"),
+        &["policy", "coordinator", "nlp", "vision", "reasoning", "total"],
+        &b.iter().map(|s| {
+            let mut v = s.values.clone();
+            v.push(s.values.iter().sum());
+            (s.policy.clone(), v)
+        }).collect::<Vec<_>>(),
+    )?;
+
+    // Fig 2(c) — adaptive allocation timeline (Poisson, seed 42).
+    let c = fig2c();
+    export::timeseries_csv(&c, &dir.join("fig2c_allocation.csv"))?;
+
+    // Fig 2(d) — cost/latency/throughput points.
+    let d = fig2d();
+    export::table_csv(
+        &dir.join("fig2d_cost_perf.csv"),
+        &["policy", "avg_latency_s", "total_throughput_rps", "cost_dollars"],
+        &d.iter().map(|p| (p.policy.clone(), vec![
+            p.avg_latency_s, p.total_throughput_rps, p.cost_dollars,
+        ])).collect::<Vec<_>>(),
+    )?;
+
+    // §V.B robustness.
+    let ov = overload_experiment(3.0);
+    export::table_csv(
+        &dir.join("robustness_overload.csv"),
+        &["factor", "avg_latency_s", "min_agent_throughput_rps",
+          "latency_degradation_pct"],
+        &[
+            ("1x".into(), vec![ov.baseline_latency_s,
+                               ov.baseline_min_throughput, 0.0]),
+            (format!("{}x", ov.factor), vec![
+                ov.overload_latency_s, ov.overload_min_throughput,
+                ov.degradation_pct]),
+        ],
+    )?;
+
+    let sp = spike_experiment();
+    export::table_csv(
+        &dir.join("robustness_spike.csv"),
+        &["metric", "value"],
+        &[
+            ("adaptation_ms".into(), vec![sp.adaptation_ms]),
+            ("spike_factor".into(), vec![sp.factor]),
+            ("pre_spike_alloc".into(), vec![sp.pre_spike_alloc]),
+            ("post_spike_alloc".into(), vec![sp.post_spike_alloc]),
+        ],
+    )?;
+
+    let dm = dominance_experiment(0.9);
+    export::table_csv(
+        &dir.join("robustness_dominance.csv"),
+        &["agent", "request_share", "gpu_share"],
+        &dm.agents.iter().map(|(name, req, gpu)| {
+            (name.clone(), vec![*req, *gpu])
+        }).collect::<Vec<_>>(),
+    )?;
+
+    // §V.B O(N) scaling.
+    let sc = scaling_experiment(&[4, 16, 64, 256, 1024, 4096]);
+    export::table_csv(
+        &dir.join("allocator_scaling.csv"),
+        &["n_agents", "ns_per_allocation"],
+        &sc.iter().map(|p| (p.n_agents.to_string(),
+                            vec![p.ns_per_call])).collect::<Vec<_>>(),
+    )?;
+
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_all_produces_every_artifact() {
+        let dir = crate::util::TempDir::new("t").unwrap();
+        write_all(dir.path()).unwrap();
+        for f in ["table1.csv", "table2.csv", "fig2a_latency.csv",
+                  "fig2b_throughput.csv", "fig2c_allocation.csv",
+                  "fig2d_cost_perf.csv", "robustness_overload.csv",
+                  "robustness_spike.csv", "robustness_dominance.csv",
+                  "allocator_scaling.csv"] {
+            let p = dir.path().join(f);
+            assert!(p.exists(), "{f} missing");
+            assert!(std::fs::metadata(&p).unwrap().len() > 0, "{f} empty");
+        }
+    }
+}

@@ -1,0 +1,290 @@
+//! The PJRT inference engine: compile once, execute batches.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::runtime::{AgentManifest, Manifest};
+
+fn xerr(context: &str, e: xla::Error) -> Error {
+    Error::Xla(format!("{context}: {e}"))
+}
+
+/// One agent, loaded: parameter device buffers plus one compiled
+/// executable per batch variant.
+struct LoadedAgent {
+    manifest: AgentManifest,
+    /// Parameters uploaded once; reused by every execution (the perf-
+    /// relevant choice — see EXPERIMENTS.md §Perf L3).
+    param_buffers: Vec<xla::PjRtBuffer>,
+    /// batch size -> compiled executable.
+    executables: Vec<(usize, xla::PjRtLoadedExecutable)>,
+}
+
+/// Output of one batched forward pass.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferenceOutput {
+    /// Greedy next-token id per request.
+    pub next_tokens: Vec<i32>,
+    /// Full last-position logits, row-major (batch × vocab).
+    pub logits: Vec<f32>,
+    /// Vocabulary size (logits row width).
+    pub vocab: usize,
+    /// Batch variant actually executed (>= requested batch).
+    pub executed_batch: usize,
+}
+
+/// Cumulative execution statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ExecutionStats {
+    /// Forward passes executed.
+    pub executions: u64,
+    /// Requests served (sum of real batch sizes).
+    pub requests: u64,
+    /// Padding waste: executed slots minus real requests.
+    pub padded_slots: u64,
+    /// Total wall time in PJRT execute calls (seconds).
+    pub execute_seconds: f64,
+}
+
+/// Loads `artifacts/` and executes agent forward passes on the PJRT CPU
+/// client. Not `Send` (PJRT handles are raw pointers): own it from one
+/// thread — [`crate::server::Executor`] wraps it accordingly.
+pub struct InferenceEngine {
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    agents: HashMap<String, LoadedAgent>,
+    stats: ExecutionStats,
+    /// Reusable flat token buffer (perf: the serving loop calls
+    /// infer() per batch; this removes a per-call allocation).
+    token_scratch: Vec<i32>,
+}
+
+impl InferenceEngine {
+    /// Load every agent in the manifest: read params, upload buffers,
+    /// compile all batch variants.
+    pub fn load(artifacts_dir: &Path) -> Result<InferenceEngine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| xerr("create PJRT CPU client", e))?;
+
+        let mut agents = HashMap::new();
+        for am in &manifest.agents {
+            let loaded = Self::load_agent(&client, artifacts_dir, am)?;
+            agents.insert(am.name.clone(), loaded);
+        }
+        Ok(InferenceEngine {
+            manifest,
+            client,
+            agents,
+            stats: ExecutionStats::default(),
+            token_scratch: Vec::new(),
+        })
+    }
+
+    fn load_agent(client: &xla::PjRtClient, dir: &Path, am: &AgentManifest)
+                  -> Result<LoadedAgent> {
+        // Parameters: one flat little-endian f32 file, sliced per entry.
+        let raw = std::fs::read(dir.join(&am.params_file))?;
+        if raw.len() % 4 != 0 {
+            return Err(Error::Artifact(format!(
+                "{}: params file not f32-aligned", am.name)));
+        }
+        let floats: Vec<f32> = raw.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        let mut param_buffers = Vec::with_capacity(am.param_entries.len());
+        for entry in &am.param_entries {
+            let end = entry.offset + entry.len;
+            if end > floats.len() {
+                return Err(Error::Artifact(format!(
+                    "{}: param '{}' overruns params file",
+                    am.name, entry.name)));
+            }
+            let buf = client.buffer_from_host_buffer::<f32>(
+                &floats[entry.offset..end], &entry.shape, None)
+                .map_err(|e| xerr(&format!("upload param {}", entry.name),
+                                  e))?;
+            param_buffers.push(buf);
+        }
+
+        let mut executables = Vec::with_capacity(am.variants.len());
+        for (batch, file) in &am.variants {
+            let proto = xla::HloModuleProto::from_text_file(dir.join(file))
+                .map_err(|e| xerr(&format!("parse HLO {file}"), e))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)
+                .map_err(|e| xerr(&format!("compile {file}"), e))?;
+            executables.push((*batch, exe));
+        }
+
+        Ok(LoadedAgent {
+            manifest: am.clone(),
+            param_buffers,
+            executables,
+        })
+    }
+
+    /// The loaded manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Cumulative execution statistics.
+    pub fn stats(&self) -> &ExecutionStats {
+        &self.stats
+    }
+
+    /// Run one batched forward pass for `agent` (owned-row convenience;
+    /// see [`InferenceEngine::infer_rows`] for the zero-copy hot path).
+    pub fn infer(&mut self, agent: &str, token_rows: &[Vec<i32>])
+                 -> Result<InferenceOutput> {
+        let refs: Vec<&[i32]> =
+            token_rows.iter().map(Vec::as_slice).collect();
+        self.infer_rows(agent, &refs)
+    }
+
+    /// Run one batched forward pass for `agent`.
+    ///
+    /// `token_rows` is one row of `seq_len` token ids per request (1 to
+    /// max-batch rows), borrowed — the serving loop passes queue-owned
+    /// slices without cloning. The engine picks the smallest compiled
+    /// variant that fits, pads with the last row, executes, and returns
+    /// only the real rows' outputs.
+    pub fn infer_rows(&mut self, agent: &str, token_rows: &[&[i32]])
+                      -> Result<InferenceOutput> {
+        // Split-borrow the engine so the scratch buffer and the agent
+        // table can be used simultaneously.
+        let Self { manifest, client, agents, stats, token_scratch } =
+            self;
+        let seq = manifest.seq_len;
+        let la = agents.get(agent).ok_or_else(|| Error::Serving(
+            format!("unknown agent '{agent}'")))?;
+        if token_rows.is_empty() {
+            return Err(Error::Serving("empty batch".into()));
+        }
+        let n = token_rows.len();
+        let max_batch = la.manifest.max_batch();
+        if n > max_batch {
+            return Err(Error::Serving(format!(
+                "batch {n} exceeds max compiled variant {max_batch}")));
+        }
+        for (i, row) in token_rows.iter().enumerate() {
+            if row.len() != seq {
+                return Err(Error::Serving(format!(
+                    "request {i}: expected {seq} tokens, got {}",
+                    row.len())));
+            }
+            let vocab = la.manifest.vocab as i32;
+            if row.iter().any(|t| *t < 0 || *t >= vocab) {
+                return Err(Error::Serving(format!(
+                    "request {i}: token id out of range [0, {vocab})")));
+            }
+        }
+
+        let batch = la.manifest.variant_for(n);
+        let exe = la.executables.iter()
+            .find(|(b, _)| *b == batch)
+            .map(|(_, e)| e)
+            .ok_or_else(|| Error::Serving(format!(
+                "no executable for batch {batch}")))?;
+
+        // Flatten + pad with the last real row, into the reusable
+        // scratch buffer (no per-call allocation once warm).
+        let flat = token_scratch;
+        flat.clear();
+        flat.reserve(batch * seq);
+        for row in token_rows {
+            flat.extend_from_slice(row);
+        }
+        let last = token_rows.last().expect("nonempty");
+        for _ in n..batch {
+            flat.extend_from_slice(last);
+        }
+        let token_buf = client
+            .buffer_from_host_buffer::<i32>(flat, &[batch, seq], None)
+            .map_err(|e| xerr("upload tokens", e))?;
+
+        // Argument order matches aot.py's fn(params, tokens) flattening:
+        // params in manifest order, then tokens.
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(la.param_buffers.len() + 1);
+        args.extend(la.param_buffers.iter());
+        args.push(&token_buf);
+
+        let start = Instant::now();
+        let result = exe.execute_b(&args)
+            .map_err(|e| xerr(&format!("execute {agent} b{batch}"), e))?;
+        let elapsed = start.elapsed().as_secs_f64();
+
+        let out = result[0][0].to_literal_sync()
+            .map_err(|e| xerr("fetch output", e))?;
+        // aot.py lowers with return_tuple=True: (next_token, logits).
+        let (next_lit, logits_lit) = out.to_tuple2()
+            .map_err(|e| xerr("untuple output", e))?;
+        let mut next_tokens = next_lit.to_vec::<i32>()
+            .map_err(|e| xerr("read next tokens", e))?;
+        let mut logits = logits_lit.to_vec::<f32>()
+            .map_err(|e| xerr("read logits", e))?;
+        let vocab = la.manifest.vocab;
+        next_tokens.truncate(n);
+        logits.truncate(n * vocab);
+
+        stats.executions += 1;
+        stats.requests += n as u64;
+        stats.padded_slots += (batch - n) as u64;
+        stats.execute_seconds += elapsed;
+
+        Ok(InferenceOutput {
+            next_tokens,
+            logits,
+            vocab,
+            executed_batch: batch,
+        })
+    }
+
+    /// Run every agent's golden test vector; returns (agent, batch) pairs
+    /// verified. Used by integration tests and `agentsrv verify`.
+    pub fn verify_golden(&mut self) -> Result<Vec<(String, usize)>> {
+        let mut verified = Vec::new();
+        let agents: Vec<String> =
+            self.manifest.agents.iter().map(|a| a.name.clone()).collect();
+        for name in agents {
+            let (vocab, vectors, seq) = {
+                let am = self.manifest.agent(&name).expect("agent exists");
+                (am.vocab, am.test_vectors.clone(), self.manifest.seq_len)
+            };
+            for tv in vectors {
+                let rows: Vec<Vec<i32>> = (0..tv.batch).map(|b| {
+                    (0..seq).map(|i| {
+                        (((b * seq + i) as i64 * 7 + 3)
+                         % vocab as i64) as i32
+                    }).collect()
+                }).collect();
+                let out = self.infer(&name, &rows)?;
+                if out.next_tokens != tv.expected_next {
+                    return Err(Error::Artifact(format!(
+                        "{name} b{}: next tokens {:?} != golden {:?}",
+                        tv.batch, out.next_tokens, tv.expected_next)));
+                }
+                let l2: f64 = out.logits.iter()
+                    .map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt();
+                let rel = (l2 - tv.logits_l2).abs() / tv.logits_l2.max(1e-9);
+                if rel > 1e-3 {
+                    return Err(Error::Artifact(format!(
+                        "{name} b{}: logits L2 {l2} != golden {} \
+                         (rel err {rel})", tv.batch, tv.logits_l2)));
+                }
+                verified.push((name.clone(), tv.batch));
+            }
+        }
+        Ok(verified)
+    }
+}

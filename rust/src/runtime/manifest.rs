@@ -1,0 +1,350 @@
+//! The AOT artifact manifest (`artifacts/manifest.json`).
+//!
+//! Written by `python/compile/aot.py`; parsed here with the in-tree JSON
+//! module. The manifest fully describes each agent: model hyperparameters,
+//! Table I characteristics, parameter layout (name/shape/offset into the
+//! params.bin), HLO file per batch variant, FLOP estimates for the GPU
+//! governor, and golden test vectors for end-to-end numeric checks.
+
+use std::path::{Path, PathBuf};
+
+use crate::agents::{AgentProfile, Priority};
+use crate::error::{Error, Result};
+use crate::util::json::Value;
+
+/// One parameter tensor's layout inside `<agent>.params.bin`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamEntry {
+    /// Parameter name (e.g. "layer0.wq").
+    pub name: String,
+    /// Tensor shape.
+    pub shape: Vec<usize>,
+    /// Offset into the params file, in f32 elements.
+    pub offset: usize,
+    /// Element count.
+    pub len: usize,
+}
+
+/// Golden input/output pair recorded at AOT time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TestVector {
+    /// Batch size this vector was recorded for.
+    pub batch: usize,
+    /// Expected greedy next-token ids for the canonical test input.
+    pub expected_next: Vec<i32>,
+    /// L2 norm of the last-position logits (coarse numeric fingerprint).
+    pub logits_l2: f64,
+}
+
+/// Everything the runtime needs to serve one agent.
+#[derive(Debug, Clone)]
+pub struct AgentManifest {
+    /// Agent name.
+    pub name: String,
+    /// Model width.
+    pub d_model: usize,
+    /// Transformer layer count.
+    pub n_layers: usize,
+    /// Attention heads.
+    pub n_heads: usize,
+    /// MLP hidden width.
+    pub d_ff: usize,
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Total trainable parameters.
+    pub param_count: usize,
+    /// Params file name (relative to the artifacts dir).
+    pub params_file: String,
+    /// Parameter layout in lowering order.
+    pub param_entries: Vec<ParamEntry>,
+    /// batch size -> HLO text file name.
+    pub variants: Vec<(usize, String)>,
+    /// batch size -> estimated FLOPs per forward pass.
+    pub flops_per_forward: Vec<(usize, u64)>,
+    /// Golden vectors per batch size.
+    pub test_vectors: Vec<TestVector>,
+    /// Table I characteristics.
+    pub profile: AgentProfile,
+}
+
+impl AgentManifest {
+    /// Largest compiled batch size.
+    pub fn max_batch(&self) -> usize {
+        self.variants.iter().map(|(b, _)| *b).max().unwrap_or(1)
+    }
+
+    /// Smallest compiled variant that fits `n` requests (or the largest
+    /// variant if `n` exceeds all).
+    pub fn variant_for(&self, n: usize) -> usize {
+        self.variants.iter().map(|(b, _)| *b)
+            .filter(|b| *b >= n)
+            .min()
+            .unwrap_or_else(|| self.max_batch())
+    }
+
+    /// HLO file for a batch size.
+    pub fn hlo_file(&self, batch: usize) -> Option<&str> {
+        self.variants.iter().find(|(b, _)| *b == batch)
+            .map(|(_, f)| f.as_str())
+    }
+
+    /// Estimated FLOPs for one forward at `batch`.
+    pub fn flops(&self, batch: usize) -> u64 {
+        self.flops_per_forward.iter().find(|(b, _)| *b == batch)
+            .map(|(_, f)| *f)
+            .unwrap_or(0)
+    }
+}
+
+/// The parsed artifacts manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Directory the manifest was loaded from (file paths are relative).
+    pub dir: PathBuf,
+    /// Context window length all models were compiled for.
+    pub seq_len: usize,
+    /// Agents in manifest order.
+    pub agents: Vec<AgentManifest>,
+}
+
+impl Manifest {
+    /// Load and parse `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = Value::parse(text)?;
+        let seq_len = v.require("seq_len")?.as_u64()
+            .ok_or_else(|| Error::Artifact("seq_len not integer".into()))?
+            as usize;
+        let format = v.require("format")?.as_str().unwrap_or("");
+        if format != "hlo-text-v1" {
+            return Err(Error::Artifact(format!(
+                "unsupported artifact format '{format}'")));
+        }
+        let agents_obj = v.require("agents")?.as_object()
+            .ok_or_else(|| Error::Artifact("agents not object".into()))?;
+
+        let mut agents = Vec::with_capacity(agents_obj.len());
+        for (name, a) in agents_obj {
+            agents.push(Self::parse_agent(name, a)?);
+        }
+        if agents.is_empty() {
+            return Err(Error::Artifact("manifest has no agents".into()));
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), seq_len, agents })
+    }
+
+    fn parse_agent(name: &str, a: &Value) -> Result<AgentManifest> {
+        let usize_of = |key: &str| -> Result<usize> {
+            a.require(key)?.as_u64()
+                .map(|x| x as usize)
+                .ok_or_else(|| Error::Artifact(format!(
+                    "agent '{name}': '{key}' not an integer")))
+        };
+        let f64_of = |key: &str| -> Result<f64> {
+            a.require(key)?.as_f64().ok_or_else(|| Error::Artifact(
+                format!("agent '{name}': '{key}' not a number")))
+        };
+
+        let entries = a.require("param_entries")?.as_array()
+            .ok_or_else(|| Error::Artifact("param_entries not array".into()))?
+            .iter().map(|e| {
+                Ok(ParamEntry {
+                    name: e.require("name")?.as_str().unwrap_or("").into(),
+                    shape: e.require("shape")?.as_array()
+                        .ok_or_else(|| Error::Artifact(
+                            "shape not array".into()))?
+                        .iter()
+                        .map(|d| d.as_u64().map(|x| x as usize)
+                             .ok_or_else(|| Error::Artifact(
+                                 "bad shape dim".into())))
+                        .collect::<Result<Vec<_>>>()?,
+                    offset: e.require("offset")?.as_u64().unwrap_or(0)
+                        as usize,
+                    len: e.require("len")?.as_u64().unwrap_or(0) as usize,
+                })
+            }).collect::<Result<Vec<_>>>()?;
+
+        let mut variants: Vec<(usize, String)> = a.require("variants")?
+            .as_object()
+            .ok_or_else(|| Error::Artifact("variants not object".into()))?
+            .iter().map(|(b, f)| {
+                let batch = b.parse::<usize>().map_err(|_| Error::Artifact(
+                    format!("bad batch key '{b}'")))?;
+                let file = f.as_str().ok_or_else(|| Error::Artifact(
+                    "variant file not string".into()))?;
+                Ok((batch, file.to_string()))
+            }).collect::<Result<Vec<_>>>()?;
+        variants.sort_unstable_by_key(|(b, _)| *b);
+        if variants.is_empty() {
+            return Err(Error::Artifact(format!(
+                "agent '{name}' has no compiled variants")));
+        }
+
+        let flops = match a.get("flops_per_forward") {
+            Some(f) => f.as_object().unwrap_or(&[]).iter()
+                .filter_map(|(b, v)| {
+                    Some((b.parse::<usize>().ok()?, v.as_u64()?))
+                }).collect(),
+            None => Vec::new(),
+        };
+
+        let vectors = match a.get("test_vectors") {
+            Some(tv) => tv.as_object().unwrap_or(&[]).iter().map(|(b, v)| {
+                Ok(TestVector {
+                    batch: b.parse::<usize>().map_err(|_| Error::Artifact(
+                        format!("bad test vector batch '{b}'")))?,
+                    expected_next: v.require("expected_next")?.as_array()
+                        .unwrap_or(&[])
+                        .iter().filter_map(|x| x.as_f64())
+                        .map(|x| x as i32).collect(),
+                    logits_l2: v.require("logits_l2")?.as_f64()
+                        .unwrap_or(0.0),
+                })
+            }).collect::<Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
+
+        let priority = Priority::try_from(usize_of("priority")? as u8)
+            .map_err(Error::Artifact)?;
+        let profile = AgentProfile {
+            name: name.to_string(),
+            model_mb: usize_of("model_mb")? as u32,
+            base_tput: f64_of("base_tput")?,
+            min_gpu: f64_of("min_gpu")?,
+            priority,
+        };
+
+        Ok(AgentManifest {
+            name: name.to_string(),
+            d_model: usize_of("d_model")?,
+            n_layers: usize_of("n_layers")?,
+            n_heads: usize_of("n_heads")?,
+            d_ff: usize_of("d_ff")?,
+            vocab: usize_of("vocab")?,
+            param_count: usize_of("param_count")?,
+            params_file: a.require("params_file")?.as_str()
+                .unwrap_or("").to_string(),
+            param_entries: entries,
+            variants,
+            flops_per_forward: flops,
+            test_vectors: vectors,
+            profile,
+        })
+    }
+
+    /// Agent entry by name.
+    pub fn agent(&self, name: &str) -> Option<&AgentManifest> {
+        self.agents.iter().find(|a| a.name == name)
+    }
+
+    /// Profiles of all agents (for building a registry).
+    pub fn profiles(&self) -> Vec<AgentProfile> {
+        self.agents.iter().map(|a| a.profile.clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_text() -> &'static str {
+        r#"{
+          "seq_len": 32, "format": "hlo-text-v1",
+          "agents": {
+            "coordinator": {
+              "d_model": 64, "n_layers": 2, "n_heads": 2, "d_ff": 128,
+              "vocab": 256, "model_mb": 500, "base_tput": 100.0,
+              "min_gpu": 0.1, "priority": 1, "param_count": 84992,
+              "params_file": "coordinator.params.bin",
+              "param_entries": [
+                {"name": "embed", "shape": [256, 64], "offset": 0,
+                 "len": 16384}],
+              "variants": {"1": "coordinator_b1.hlo.txt",
+                           "4": "coordinator_b4.hlo.txt",
+                           "2": "coordinator_b2.hlo.txt"},
+              "flops_per_forward": {"1": 5439488, "2": 10878976,
+                                    "4": 21757952},
+              "test_vectors": {"1": {"expected_next": [42],
+                                     "logits_l2": 11.25}}
+            }
+          }
+        }"#
+    }
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(sample_text(), Path::new("/tmp/x")).unwrap();
+        assert_eq!(m.seq_len, 32);
+        assert_eq!(m.agents.len(), 1);
+        let a = m.agent("coordinator").unwrap();
+        assert_eq!(a.param_entries[0].len, 16384);
+        assert_eq!(a.profile.base_tput, 100.0);
+        assert_eq!(a.profile.priority, Priority::High);
+        // Variants sorted by batch.
+        assert_eq!(a.variants.iter().map(|(b, _)| *b).collect::<Vec<_>>(),
+                   vec![1, 2, 4]);
+        assert_eq!(a.test_vectors[0].expected_next, vec![42]);
+        assert_eq!(a.flops(2), 10878976);
+        assert!(m.agent("nope").is_none());
+    }
+
+    #[test]
+    fn variant_selection() {
+        let m = Manifest::parse(sample_text(), Path::new("/tmp/x")).unwrap();
+        let a = m.agent("coordinator").unwrap();
+        assert_eq!(a.variant_for(1), 1);
+        assert_eq!(a.variant_for(2), 2);
+        assert_eq!(a.variant_for(3), 4);
+        assert_eq!(a.variant_for(4), 4);
+        assert_eq!(a.variant_for(99), 4); // saturates at max batch
+        assert_eq!(a.max_batch(), 4);
+        assert_eq!(a.hlo_file(2), Some("coordinator_b2.hlo.txt"));
+        assert_eq!(a.hlo_file(3), None);
+    }
+
+    #[test]
+    fn rejects_wrong_format_or_missing_fields() {
+        let bad = r#"{"seq_len": 32, "format": "other", "agents": {}}"#;
+        assert!(Manifest::parse(bad, Path::new("/tmp")).is_err());
+        let empty = r#"{"seq_len": 32, "format": "hlo-text-v1",
+                        "agents": {}}"#;
+        assert!(Manifest::parse(empty, Path::new("/tmp")).is_err());
+        let missing = r#"{"format": "hlo-text-v1", "agents": {}}"#;
+        assert!(Manifest::parse(missing, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        // Integration: when `make artifacts` has run, the real manifest
+        // must parse and agree with Table I.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.seq_len, 32);
+        assert_eq!(m.agents.len(), 4);
+        let reasoning = m.agent("reasoning").unwrap();
+        assert_eq!(reasoning.profile.model_mb, 3000);
+        assert_eq!(reasoning.profile.min_gpu, 0.35);
+        assert!(reasoning.param_count > 1_000_000);
+        for a in &m.agents {
+            assert!(!a.test_vectors.is_empty(), "{} has no vectors", a.name);
+            for (_, f) in &a.variants {
+                assert!(dir.join(f).exists(), "missing {f}");
+            }
+            assert!(dir.join(&a.params_file).exists());
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! PJRT runtime: load the AOT artifacts and execute agent models natively.
+//!
+//! The build-time pipeline (`python/compile/aot.py`) lowers each agent's
+//! JAX forward pass (which calls the Pallas kernels) to **HLO text** under
+//! `artifacts/`, plus a `manifest.json` and per-agent `*.params.bin`. This
+//! module is the request-path half: parse the manifest ([`Manifest`]), load
+//! params once as device buffers, compile one PJRT executable per
+//! (agent, batch-size) variant, and execute batches ([`InferenceEngine`]).
+//!
+//! HLO *text* is the interchange format because the image's xla_extension
+//! 0.5.1 rejects jax≥0.5's 64-bit-instruction-id protos; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! PJRT handles are raw C pointers (not `Send`), so the serving stack runs
+//! the engine on a dedicated executor thread (see [`crate::server`]) — which
+//! also happens to model the serialized GPU command queue faithfully.
+
+mod engine;
+mod manifest;
+
+pub use engine::{ExecutionStats, InferenceEngine, InferenceOutput};
+pub use manifest::{AgentManifest, Manifest, ParamEntry, TestVector};

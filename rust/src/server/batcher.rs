@@ -1,0 +1,106 @@
+//! Per-agent FIFO queues and dynamic batch formation.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+use crate::error::Result;
+use crate::server::CompletedRequest;
+
+/// One queued inference request.
+#[derive(Debug)]
+pub struct QueuedRequest {
+    /// Token ids (seq_len of them).
+    pub tokens: Vec<i32>,
+    /// Enqueue timestamp (latency measurement starts here).
+    pub enqueued: Instant,
+    /// Reply channel resolved by the serving thread.
+    pub reply: Sender<Result<CompletedRequest>>,
+}
+
+/// FIFO queue for one agent, with arrival accounting for the allocator.
+#[derive(Debug, Default)]
+pub struct AgentQueue {
+    queue: VecDeque<QueuedRequest>,
+    /// Arrivals since the last allocator window rollover.
+    pub window_arrivals: u64,
+    /// Total arrivals ever.
+    pub total_arrivals: u64,
+}
+
+impl AgentQueue {
+    /// Empty queue.
+    pub fn new() -> Self {
+        AgentQueue::default()
+    }
+
+    /// Enqueue one request.
+    pub fn push(&mut self, req: QueuedRequest) {
+        self.queue.push_back(req);
+        self.window_arrivals += 1;
+        self.total_arrivals += 1;
+    }
+
+    /// Current depth.
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// True when no requests wait.
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Pop up to `max_batch` requests (dynamic batching: take whatever is
+    /// waiting, bounded by the largest compiled variant).
+    pub fn pop_batch(&mut self, max_batch: usize) -> Vec<QueuedRequest> {
+        let n = self.queue.len().min(max_batch);
+        self.queue.drain(..n).collect()
+    }
+
+    /// Read-and-reset the window arrival counter (allocator input).
+    pub fn take_window_arrivals(&mut self) -> u64 {
+        std::mem::take(&mut self.window_arrivals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn req() -> QueuedRequest {
+        let (tx, _rx) = channel();
+        QueuedRequest {
+            tokens: vec![0; 8],
+            enqueued: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn fifo_batching() {
+        let mut q = AgentQueue::new();
+        for _ in 0..5 {
+            q.push(req());
+        }
+        assert_eq!(q.len(), 5);
+        let b = q.pop_batch(4);
+        assert_eq!(b.len(), 4);
+        assert_eq!(q.len(), 1);
+        let b = q.pop_batch(4);
+        assert_eq!(b.len(), 1);
+        assert!(q.is_empty());
+        assert_eq!(q.pop_batch(4).len(), 0);
+    }
+
+    #[test]
+    fn window_arrivals_reset() {
+        let mut q = AgentQueue::new();
+        q.push(req());
+        q.push(req());
+        assert_eq!(q.take_window_arrivals(), 2);
+        assert_eq!(q.take_window_arrivals(), 0);
+        assert_eq!(q.total_arrivals, 2);
+    }
+}

@@ -1,0 +1,177 @@
+//! Weighted-share GPU governor: stride scheduling over allocation
+//! fractions.
+//!
+//! The allocator emits GPU fractions g_i; on real hardware those map to
+//! MIG slices or time-slicing ratios. Here each agent carries a virtual
+//! clock ("pass"). The governor always runs the backlogged agent with the
+//! smallest pass, then advances that clock by `cost / g_i`. Standard
+//! stride-scheduling argument: long-run compute share → g_i / Σg.
+
+/// Stride scheduler over dynamic weights.
+#[derive(Debug, Clone)]
+pub struct GpuGovernor {
+    weights: Vec<f64>,
+    pass: Vec<f64>,
+    /// Floor so zero-weight agents still make (very slow) progress instead
+    /// of starving — the paper's minimum-requirement philosophy.
+    min_weight: f64,
+}
+
+impl GpuGovernor {
+    /// Create for `n` agents with equal initial weights.
+    pub fn new(n: usize) -> Self {
+        GpuGovernor {
+            weights: vec![1.0 / n.max(1) as f64; n],
+            pass: vec![0.0; n],
+            min_weight: 1e-3,
+        }
+    }
+
+    /// Replace the weights with a fresh allocation (fractions, needn't be
+    /// normalized). Passes are preserved so re-weighting is incremental.
+    pub fn set_weights(&mut self, alloc: &[f64]) {
+        assert_eq!(alloc.len(), self.weights.len());
+        self.weights.copy_from_slice(alloc);
+    }
+
+    /// Current weight of an agent.
+    pub fn weight(&self, agent: usize) -> f64 {
+        self.weights[agent]
+    }
+
+    /// Pick the next agent to run among those with backlog. Returns None
+    /// when `backlogged` is all-false.
+    pub fn pick(&self, backlogged: &[bool]) -> Option<usize> {
+        debug_assert_eq!(backlogged.len(), self.pass.len());
+        let mut best: Option<usize> = None;
+        for i in 0..self.pass.len() {
+            if !backlogged[i] {
+                continue;
+            }
+            match best {
+                None => best = Some(i),
+                Some(b) if self.pass[i] < self.pass[b] => best = Some(i),
+                _ => {}
+            }
+        }
+        best
+    }
+
+    /// Charge `agent` for `cost` seconds of GPU time.
+    pub fn charge(&mut self, agent: usize, cost: f64) {
+        let w = self.weights[agent].max(self.min_weight);
+        self.pass[agent] += cost.max(0.0) / w;
+    }
+
+    /// Re-anchor all passes near zero (prevents unbounded growth on
+    /// long-running servers; relative order is preserved).
+    pub fn rebase(&mut self) {
+        if let Some(min) = self.pass.iter().cloned().reduce(f64::min) {
+            if min > 1e6 {
+                for p in &mut self.pass {
+                    *p -= min;
+                }
+            }
+        }
+    }
+
+    /// When an idle agent becomes backlogged its stale (tiny) pass would
+    /// let it monopolize the GPU while it catches up; snap it forward to
+    /// the minimum pass among backlogged peers.
+    pub fn on_wakeup(&mut self, agent: usize, backlogged: &[bool]) {
+        let floor = (0..self.pass.len())
+            .filter(|i| backlogged[*i] && *i != agent)
+            .map(|i| self.pass[i])
+            .fold(f64::INFINITY, f64::min);
+        if floor.is_finite() && self.pass[agent] < floor {
+            self.pass[agent] = floor;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Simulate always-backlogged agents with unit-cost batches and check
+    /// the long-run share converges to the weights.
+    fn share_after(weights: &[f64], rounds: usize) -> Vec<f64> {
+        let mut gov = GpuGovernor::new(weights.len());
+        gov.set_weights(weights);
+        let backlogged = vec![true; weights.len()];
+        let mut runs = vec![0usize; weights.len()];
+        for _ in 0..rounds {
+            let a = gov.pick(&backlogged).unwrap();
+            runs[a] += 1;
+            gov.charge(a, 0.01);
+        }
+        runs.iter().map(|r| *r as f64 / rounds as f64).collect()
+    }
+
+    #[test]
+    fn shares_converge_to_weights() {
+        let shares = share_after(&[0.75, 0.25], 4000);
+        assert!((shares[0] - 0.75).abs() < 0.02, "{shares:?}");
+
+        let shares = share_after(&[0.2386, 0.2538, 0.2115, 0.2961], 8000);
+        for (s, w) in shares.iter().zip([0.2386, 0.2538, 0.2115, 0.2961]) {
+            assert!((s - w).abs() < 0.02, "{shares:?}");
+        }
+    }
+
+    #[test]
+    fn pick_skips_idle_agents() {
+        let mut gov = GpuGovernor::new(3);
+        gov.set_weights(&[0.1, 0.8, 0.1]);
+        assert_eq!(gov.pick(&[false, false, true]), Some(2));
+        assert_eq!(gov.pick(&[false, false, false]), None);
+    }
+
+    #[test]
+    fn zero_weight_agent_does_not_starve() {
+        let mut gov = GpuGovernor::new(2);
+        gov.set_weights(&[1.0, 0.0]);
+        let backlogged = [true, true];
+        let mut ran1 = 0;
+        for _ in 0..100_000 {
+            let a = gov.pick(&backlogged).unwrap();
+            if a == 1 {
+                ran1 += 1;
+            }
+            gov.charge(a, 0.001);
+        }
+        assert!(ran1 > 0, "zero-weight agent starved");
+        assert!(ran1 < 1000, "zero-weight agent ran too much: {ran1}");
+    }
+
+    #[test]
+    fn wakeup_prevents_catchup_monopoly() {
+        let mut gov = GpuGovernor::new(2);
+        gov.set_weights(&[0.5, 0.5]);
+        // Agent 0 runs alone for a while.
+        for _ in 0..1000 {
+            gov.charge(0, 0.01);
+        }
+        // Agent 1 wakes with pass 0 — snap it forward.
+        gov.on_wakeup(1, &[true, true]);
+        // Now shares should be balanced going forward, not 100% agent 1.
+        let backlogged = [true, true];
+        let mut runs = [0usize; 2];
+        for _ in 0..1000 {
+            let a = gov.pick(&backlogged).unwrap();
+            runs[a] += 1;
+            gov.charge(a, 0.01);
+        }
+        assert!(runs[0] > 300, "{runs:?}");
+    }
+
+    #[test]
+    fn rebase_preserves_order() {
+        let mut gov = GpuGovernor::new(2);
+        gov.set_weights(&[0.5, 0.5]);
+        gov.charge(0, 1e7);
+        gov.charge(1, 2e7);
+        gov.rebase();
+        assert_eq!(gov.pick(&[true, true]), Some(0));
+    }
+}

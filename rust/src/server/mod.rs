@@ -1,0 +1,32 @@
+//! The serving stack: request router, per-agent queues, dynamic batcher,
+//! and the weighted-share GPU governor driven by the allocation policy.
+//!
+//! Architecture (no async runtime — the image is offline, and a dedicated
+//! serving thread models the serialized GPU command queue faithfully):
+//!
+//! ```text
+//!  client threads ──submit()──► per-agent FIFO queues (Mutex+Condvar)
+//!                                        │
+//!                        serving thread (owns InferenceEngine):
+//!                          1. window stats → AllocationPolicy → g_i
+//!                          2. GpuGovernor (stride scheduling over g_i)
+//!                             picks the next agent with backlog
+//!                          3. dynamic batcher pops ≤ max-variant requests
+//!                          4. PJRT execute; per-request latency recorded
+//!                          5. responses delivered via channels
+//! ```
+//!
+//! The GPU fraction `g_i` the paper's allocator produces is enforced as a
+//! *compute-time share*: the governor charges each agent's virtual clock
+//! `elapsed / g_i` per executed batch, so over any window the GPU time an
+//! agent receives converges to its allocated fraction (DESIGN.md §4,
+//! hardware adaptation of MIG/time-slicing).
+
+mod batcher;
+mod governor;
+#[allow(clippy::module_inception)]
+mod server;
+
+pub use batcher::{AgentQueue, QueuedRequest};
+pub use governor::GpuGovernor;
+pub use server::{AgentServer, CompletedRequest, ServerConfig, ServerStats};

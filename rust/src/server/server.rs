@@ -1,0 +1,397 @@
+//! The multi-agent inference server.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::agents::AgentRegistry;
+use crate::allocator::{policy_by_name, AllocContext};
+use crate::error::{Error, Result};
+use crate::metrics::Histogram;
+use crate::runtime::{InferenceEngine, Manifest};
+use crate::server::{AgentQueue, GpuGovernor, QueuedRequest};
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Directory holding `manifest.json` + HLO + params artifacts.
+    pub artifacts_dir: PathBuf,
+    /// Allocation policy name (see [`crate::allocator::policy_by_name`]).
+    pub policy: String,
+    /// How often the allocator re-runs over windowed arrival stats.
+    pub alloc_window: Duration,
+    /// Total GPU capacity handed to the policy (paper: 1.0).
+    pub capacity: f64,
+}
+
+impl ServerConfig {
+    /// Defaults: `artifacts/`, adaptive policy, 100 ms window.
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Self {
+        ServerConfig {
+            artifacts_dir: artifacts_dir.into(),
+            policy: "adaptive".into(),
+            alloc_window: Duration::from_millis(100),
+            capacity: 1.0,
+        }
+    }
+}
+
+/// A finished request, delivered on the submit channel.
+#[derive(Debug, Clone)]
+pub struct CompletedRequest {
+    /// Agent that served the request.
+    pub agent: String,
+    /// Greedy next-token prediction.
+    pub next_token: i32,
+    /// Enqueue → completion wall time.
+    pub latency: Duration,
+    /// Size of the batch this request rode in.
+    pub batch_size: usize,
+}
+
+#[derive(Debug)]
+struct AgentStatsInner {
+    completed: u64,
+    errors: u64,
+    latency: Histogram,
+    batch_sum: u64,
+    batches: u64,
+    gpu_seconds: f64,
+}
+
+impl AgentStatsInner {
+    fn new() -> Self {
+        AgentStatsInner {
+            completed: 0,
+            errors: 0,
+            latency: Histogram::latency_seconds(),
+            batch_sum: 0,
+            batches: 0,
+            gpu_seconds: 0.0,
+        }
+    }
+}
+
+/// Snapshot of server statistics.
+#[derive(Debug, Clone)]
+pub struct ServerStats {
+    /// Per agent: (name, completed, p50 s, p99 s, mean batch, gpu share).
+    pub per_agent: Vec<(String, u64, f64, f64, f64, f64)>,
+    /// Total completed requests.
+    pub total_completed: u64,
+    /// Total failed requests.
+    pub total_errors: u64,
+    /// Sum of PJRT execute time (seconds).
+    pub gpu_busy_seconds: f64,
+    /// Latest allocation the policy produced.
+    pub last_allocation: Vec<f64>,
+}
+
+struct Shared {
+    queues: Mutex<Vec<AgentQueue>>,
+    work_cv: Condvar,
+    shutdown: AtomicBool,
+    stats: Mutex<Vec<AgentStatsInner>>,
+    last_alloc: Mutex<Vec<f64>>,
+}
+
+/// Multi-agent inference server. `submit` is thread-safe; one serving
+/// thread owns the PJRT engine and enforces the allocator's GPU shares
+/// via stride scheduling.
+pub struct AgentServer {
+    shared: Arc<Shared>,
+    registry: AgentRegistry,
+    seq_len: usize,
+    vocab: Vec<usize>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl AgentServer {
+    /// Load artifacts, start the serving thread, return the handle.
+    pub fn start(cfg: ServerConfig) -> Result<AgentServer> {
+        // Parse the manifest on the caller thread so submit() can validate
+        // without waiting for compilation to finish.
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let registry = AgentRegistry::new(manifest.profiles())?;
+        let seq_len = manifest.seq_len;
+        let vocab = manifest.agents.iter().map(|a| a.vocab).collect();
+        let n = registry.len();
+
+        let shared = Arc::new(Shared {
+            queues: Mutex::new((0..n).map(|_| AgentQueue::new()).collect()),
+            work_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            stats: Mutex::new((0..n).map(|_| AgentStatsInner::new())
+                              .collect()),
+            last_alloc: Mutex::new(vec![0.0; n]),
+        });
+
+        let mut policy = policy_by_name(&cfg.policy).ok_or_else(
+            || Error::Config(format!("unknown policy '{}'", cfg.policy)))?;
+
+        // The engine is built *inside* the serving thread (PJRT handles
+        // are not Send). Compilation errors are reported through a
+        // one-shot channel so start() fails loudly.
+        let (init_tx, init_rx) = channel::<Result<()>>();
+        let thread_shared = Arc::clone(&shared);
+        let thread_registry = registry.clone();
+        let handle = std::thread::Builder::new()
+            .name("agentsrv-gpu".into())
+            .spawn(move || {
+                let mut engine = match InferenceEngine::load(
+                    &cfg.artifacts_dir) {
+                    Ok(e) => {
+                        let _ = init_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                serve_loop(&thread_shared, &thread_registry, &mut engine,
+                           policy.as_mut(), &cfg);
+            })
+            .map_err(|e| Error::Serving(format!("spawn: {e}")))?;
+
+        match init_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                let _ = handle.join();
+                return Err(e);
+            }
+            Err(_) => {
+                let _ = handle.join();
+                return Err(Error::Serving(
+                    "serving thread died during init".into()));
+            }
+        }
+
+        Ok(AgentServer {
+            shared,
+            registry,
+            seq_len,
+            vocab,
+            handle: Some(handle),
+        })
+    }
+
+    /// The agent registry being served.
+    pub fn registry(&self) -> &AgentRegistry {
+        &self.registry
+    }
+
+    /// Context window length of the compiled models.
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    /// Submit a request; returns a channel that yields the completion.
+    pub fn submit(&self, agent: &str, tokens: Vec<i32>)
+                  -> Result<Receiver<Result<CompletedRequest>>> {
+        let id = self.registry.id_of(agent).ok_or_else(
+            || Error::Serving(format!("unknown agent '{agent}'")))?;
+        if tokens.len() != self.seq_len {
+            return Err(Error::Serving(format!(
+                "expected {} tokens, got {}", self.seq_len, tokens.len())));
+        }
+        let vocab = self.vocab[id] as i32;
+        if tokens.iter().any(|t| *t < 0 || *t >= vocab) {
+            return Err(Error::Serving(format!(
+                "token id out of range [0, {vocab})")));
+        }
+        if self.shared.shutdown.load(Ordering::Acquire) {
+            return Err(Error::Serving("server shutting down".into()));
+        }
+        let (tx, rx) = channel();
+        {
+            let mut queues = self.shared.queues.lock().expect("queues lock");
+            queues[id].push(QueuedRequest {
+                tokens,
+                enqueued: Instant::now(),
+                reply: tx,
+            });
+        }
+        self.shared.work_cv.notify_one();
+        Ok(rx)
+    }
+
+    /// Submit and wait for the result.
+    pub fn submit_blocking(&self, agent: &str, tokens: Vec<i32>)
+                           -> Result<CompletedRequest> {
+        let rx = self.submit(agent, tokens)?;
+        rx.recv().map_err(|_| Error::Serving(
+            "serving thread dropped the request".into()))?
+    }
+
+    /// Snapshot of server statistics.
+    pub fn stats(&self) -> ServerStats {
+        let stats = self.shared.stats.lock().expect("stats lock");
+        let total_gpu: f64 =
+            stats.iter().map(|s| s.gpu_seconds).sum::<f64>().max(1e-12);
+        let per_agent = stats.iter().enumerate().map(|(i, s)| {
+            (
+                self.registry.profile(i).name.clone(),
+                s.completed,
+                s.latency.p50(),
+                s.latency.p99(),
+                if s.batches == 0 {
+                    0.0
+                } else {
+                    s.batch_sum as f64 / s.batches as f64
+                },
+                s.gpu_seconds / total_gpu,
+            )
+        }).collect();
+        ServerStats {
+            per_agent,
+            total_completed: stats.iter().map(|s| s.completed).sum(),
+            total_errors: stats.iter().map(|s| s.errors).sum(),
+            gpu_busy_seconds: stats.iter().map(|s| s.gpu_seconds).sum(),
+            last_allocation:
+                self.shared.last_alloc.lock().expect("alloc lock").clone(),
+        }
+    }
+
+    /// Drain outstanding work and stop the serving thread.
+    pub fn shutdown(mut self) -> ServerStats {
+        self.shutdown_inner();
+        self.stats()
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.work_cv.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for AgentServer {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// The serving loop: allocate → pick → batch → execute → respond.
+fn serve_loop(shared: &Shared, registry: &AgentRegistry,
+              engine: &mut InferenceEngine,
+              policy: &mut dyn crate::allocator::AllocationPolicy,
+              cfg: &ServerConfig) {
+    let n = registry.len();
+    let mut governor = GpuGovernor::new(n);
+    let mut alloc = vec![1.0 / n as f64; n];
+    let mut rates = vec![0.0f64; n];
+    let mut depths = vec![0.0f64; n];
+    let mut backlogged = vec![false; n];
+    let mut prev_backlogged = vec![false; n];
+    let mut window_start = Instant::now();
+    let mut step: u64 = 0;
+    let max_batches: Vec<usize> = registry.profiles().iter().map(|p| {
+        engine.manifest().agent(&p.name).map_or(1, |a| a.max_batch())
+    }).collect();
+
+    loop {
+        // Collect a batch under the queue lock.
+        let (agent_id, batch) = {
+            let mut queues = shared.queues.lock().expect("queues lock");
+            loop {
+                let shutting_down = shared.shutdown.load(Ordering::Acquire);
+                let any = queues.iter().any(|q| !q.is_empty());
+                if any {
+                    break;
+                }
+                if shutting_down {
+                    return; // drained + shutdown
+                }
+                let (q, _timeout) = shared.work_cv
+                    .wait_timeout(queues, cfg.alloc_window)
+                    .expect("cv wait");
+                queues = q;
+            }
+
+            // Window rollover: feed the allocator observed rates + depths.
+            let elapsed = window_start.elapsed();
+            if elapsed >= cfg.alloc_window {
+                let secs = elapsed.as_secs_f64().max(1e-9);
+                for (i, q) in queues.iter_mut().enumerate() {
+                    rates[i] = q.take_window_arrivals() as f64 / secs;
+                    depths[i] = q.len() as f64;
+                }
+                let ctx = AllocContext {
+                    registry,
+                    arrival_rates: &rates,
+                    queue_depths: &depths,
+                    step,
+                    capacity: cfg.capacity,
+                };
+                policy.allocate(&ctx, &mut alloc);
+                governor.set_weights(&alloc);
+                governor.rebase();
+                *shared.last_alloc.lock().expect("alloc lock") =
+                    alloc.clone();
+                window_start = Instant::now();
+                step += 1;
+            }
+
+            for (i, q) in queues.iter().enumerate() {
+                backlogged[i] = !q.is_empty();
+                if backlogged[i] && !prev_backlogged[i] {
+                    governor.on_wakeup(i, &backlogged);
+                }
+            }
+            prev_backlogged.copy_from_slice(&backlogged);
+
+            let Some(agent_id) = governor.pick(&backlogged) else {
+                continue;
+            };
+            let batch = queues[agent_id].pop_batch(max_batches[agent_id]);
+            (agent_id, batch)
+        };
+        if batch.is_empty() {
+            continue;
+        }
+
+        // Execute outside the lock so submitters are never blocked on
+        // PJRT.
+        let name = &registry.profile(agent_id).name;
+        let rows: Vec<&[i32]> =
+            batch.iter().map(|r| r.tokens.as_slice()).collect();
+        let start = Instant::now();
+        let result = engine.infer_rows(name, &rows);
+        let elapsed = start.elapsed().as_secs_f64();
+        governor.charge(agent_id, elapsed);
+
+        let mut stats = shared.stats.lock().expect("stats lock");
+        let st = &mut stats[agent_id];
+        match result {
+            Ok(out) => {
+                st.batches += 1;
+                st.batch_sum += batch.len() as u64;
+                st.gpu_seconds += elapsed;
+                for (i, req) in batch.into_iter().enumerate() {
+                    let latency = req.enqueued.elapsed();
+                    st.completed += 1;
+                    st.latency.record(latency.as_secs_f64());
+                    let _ = req.reply.send(Ok(CompletedRequest {
+                        agent: name.clone(),
+                        next_token: out.next_tokens[i],
+                        latency,
+                        batch_size: out.next_tokens.len(),
+                    }));
+                }
+            }
+            Err(e) => {
+                st.errors += batch.len() as u64;
+                for req in batch {
+                    let _ = req.reply.send(Err(Error::Serving(
+                        format!("execution failed: {e}"))));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Scale-to-zero autoscaler for agent instances.
+//!
+//! Keeps an agent's container warm while it has traffic or backlog, scales
+//! to zero after an idle timeout, and triggers warm-up when demand returns.
+//! This is the serverless elasticity substrate (§II.B / §III.D) the
+//! allocation policies run on top of; the paper's evaluation holds all
+//! agents warm, which corresponds to `idle_timeout_s = ∞`.
+
+use crate::serverless::{ColdStartModel, InstanceState};
+use crate::util::Rng;
+
+/// What the autoscaler decided for one agent this step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AutoscaleDecision {
+    /// Keep the current state.
+    Hold,
+    /// Begin warming a cold instance (cold start sampled).
+    ScaleUp { ready_at: f64 },
+    /// Tear the instance down (idle timeout hit).
+    ScaleToZero,
+}
+
+/// Per-agent scale-to-zero controller.
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    cold_start: ColdStartModel,
+    idle_timeout_s: f64,
+    /// Per-agent: state and seconds of continuous idleness.
+    states: Vec<InstanceState>,
+    idle_for: Vec<f64>,
+}
+
+impl Autoscaler {
+    /// Create for `n` agents, all initially warm (the paper's setup).
+    pub fn all_warm(n: usize, cold_start: ColdStartModel,
+                    idle_timeout_s: f64) -> Self {
+        Autoscaler {
+            cold_start,
+            idle_timeout_s,
+            states: vec![InstanceState::Warm; n],
+            idle_for: vec![0.0; n],
+        }
+    }
+
+    /// Current state of an agent's instance.
+    pub fn state(&self, agent: usize) -> InstanceState {
+        self.states[agent]
+    }
+
+    /// Whether the agent can serve requests right now.
+    pub fn is_warm(&self, agent: usize) -> bool {
+        matches!(self.states[agent], InstanceState::Warm)
+    }
+
+    /// Advance one step: observe demand (arrivals + backlog) for each
+    /// agent at time `now` and return the decision taken per agent.
+    pub fn step(&mut self, now: f64, dt: f64, demand: &[f64],
+                model_mb: &[u32], rng: &mut Rng) -> Vec<AutoscaleDecision> {
+        let mut out = Vec::with_capacity(self.states.len());
+        for i in 0..self.states.len() {
+            let busy = demand[i] > 0.0;
+            let decision = match self.states[i] {
+                InstanceState::Warm => {
+                    if busy {
+                        self.idle_for[i] = 0.0;
+                        AutoscaleDecision::Hold
+                    } else {
+                        self.idle_for[i] += dt;
+                        if self.idle_for[i] >= self.idle_timeout_s {
+                            self.states[i] = InstanceState::Cold;
+                            AutoscaleDecision::ScaleToZero
+                        } else {
+                            AutoscaleDecision::Hold
+                        }
+                    }
+                }
+                InstanceState::Cold => {
+                    if busy {
+                        let ready_at =
+                            now + self.cold_start.sample(model_mb[i], rng);
+                        self.states[i] = InstanceState::Warming { ready_at };
+                        self.idle_for[i] = 0.0;
+                        AutoscaleDecision::ScaleUp { ready_at }
+                    } else {
+                        AutoscaleDecision::Hold
+                    }
+                }
+                InstanceState::Warming { ready_at } => {
+                    if now >= ready_at {
+                        self.states[i] = InstanceState::Warm;
+                        self.idle_for[i] = 0.0;
+                    }
+                    AutoscaleDecision::Hold
+                }
+            };
+            out.push(decision);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scaler(timeout: f64) -> (Autoscaler, Rng) {
+        (Autoscaler::all_warm(2, ColdStartModel::default_platform(),
+                              timeout),
+         Rng::new(9))
+    }
+
+    #[test]
+    fn scales_to_zero_after_idle_timeout() {
+        let (mut a, mut rng) = scaler(3.0);
+        let mb = [500u32, 3000];
+        for t in 0..3 {
+            a.step(t as f64, 1.0, &[0.0, 5.0], &mb, &mut rng);
+        }
+        assert!(!a.is_warm(0), "idle agent should be cold");
+        assert!(a.is_warm(1), "busy agent must stay warm");
+    }
+
+    #[test]
+    fn warms_up_on_demand_and_becomes_ready() {
+        let (mut a, mut rng) = scaler(1.0);
+        let mb = [500u32, 3000];
+        // Go cold.
+        a.step(0.0, 1.0, &[0.0, 0.0], &mb, &mut rng);
+        assert!(!a.is_warm(0));
+        // Demand returns -> warming with a future ready time.
+        let d = a.step(1.0, 1.0, &[10.0, 0.0], &mb, &mut rng);
+        let ready_at = match d[0] {
+            AutoscaleDecision::ScaleUp { ready_at } => ready_at,
+            other => panic!("expected ScaleUp, got {other:?}"),
+        };
+        assert!(ready_at > 1.0);
+        assert!(!a.is_warm(0));
+        // After the cold start elapses it serves again.
+        a.step(ready_at + 0.1, 1.0, &[10.0, 0.0], &mb, &mut rng);
+        assert!(a.is_warm(0));
+    }
+
+    #[test]
+    fn busy_agent_never_scales_down() {
+        let (mut a, mut rng) = scaler(2.0);
+        let mb = [500u32, 3000];
+        for t in 0..50 {
+            a.step(t as f64, 1.0, &[1.0, 1.0], &mb, &mut rng);
+        }
+        assert!(a.is_warm(0) && a.is_warm(1));
+    }
+}

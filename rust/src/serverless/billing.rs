@@ -1,0 +1,96 @@
+//! Pay-per-use GPU billing.
+//!
+//! The paper models an NVIDIA T4 at $0.72/hour with fractional allocation
+//! billed by GPU-fraction × time (all three policies allocate the full GPU
+//! and therefore cost exactly $0.020 per 100 s — Table II's cost row).
+
+/// Hourly pricing for one GPU class.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuPricing {
+    /// Dollars per GPU-hour for the whole device.
+    pub dollars_per_hour: f64,
+    /// Smallest billable time quantum in seconds (serverless platforms
+    /// bill per 100 ms or finer; the paper's numbers imply continuous).
+    pub billing_quantum_s: f64,
+}
+
+impl GpuPricing {
+    /// The paper's platform: NVIDIA T4, 16 GB, $0.72/hour (§IV.A).
+    pub fn t4() -> Self {
+        GpuPricing { dollars_per_hour: 0.72, billing_quantum_s: 0.0 }
+    }
+
+    /// Cost of running `fraction` of the GPU for `seconds`.
+    pub fn cost(&self, fraction: f64, seconds: f64) -> f64 {
+        let billed = if self.billing_quantum_s > 0.0 {
+            (seconds / self.billing_quantum_s).ceil() * self.billing_quantum_s
+        } else {
+            seconds
+        };
+        self.dollars_per_hour / 3600.0 * fraction.max(0.0) * billed.max(0.0)
+    }
+}
+
+/// Accumulates cost over a run.
+#[derive(Debug, Clone)]
+pub struct BillingMeter {
+    pricing: GpuPricing,
+    total: f64,
+    gpu_seconds: f64,
+}
+
+impl BillingMeter {
+    /// New meter over the given pricing.
+    pub fn new(pricing: GpuPricing) -> Self {
+        BillingMeter { pricing, total: 0.0, gpu_seconds: 0.0 }
+    }
+
+    /// Charge one interval: total allocated `fraction` for `seconds`.
+    pub fn charge(&mut self, fraction: f64, seconds: f64) {
+        self.total += self.pricing.cost(fraction, seconds);
+        self.gpu_seconds += fraction.max(0.0) * seconds.max(0.0);
+    }
+
+    /// Accumulated dollars.
+    pub fn total_cost(&self) -> f64 {
+        self.total
+    }
+
+    /// Accumulated GPU-seconds (fraction-weighted).
+    pub fn gpu_seconds(&self) -> f64 {
+        self.gpu_seconds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_cost_is_two_cents_per_100s() {
+        // Full GPU for 100 s at T4 pricing = $0.02 — Table II's cost row.
+        let mut m = BillingMeter::new(GpuPricing::t4());
+        for _ in 0..100 {
+            m.charge(1.0, 1.0);
+        }
+        assert!((m.total_cost() - 0.02).abs() < 1e-12,
+                "cost={}", m.total_cost());
+        assert!((m.gpu_seconds() - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fractional_billing_scales_linearly() {
+        let p = GpuPricing::t4();
+        assert!((p.cost(0.5, 3600.0) - 0.36).abs() < 1e-12);
+        assert_eq!(p.cost(-1.0, 10.0), 0.0);
+        assert_eq!(p.cost(1.0, -10.0), 0.0);
+    }
+
+    #[test]
+    fn quantum_rounds_up() {
+        let p = GpuPricing { dollars_per_hour: 3600.0,
+                             billing_quantum_s: 0.1 };
+        // 0.25 s bills as 0.3 s at $1/s.
+        assert!((p.cost(1.0, 0.25) - 0.3).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,87 @@
+//! Container/model cold-start model.
+//!
+//! Serverless platforms spin agent containers up and down; a cold start
+//! costs a model-size-dependent load time (checkpoint loading, §III.D).
+//! The paper's evaluation pre-loads all models (sub-second platform cold
+//! starts are cited in §I), so the paper-mode simulator keeps instances
+//! warm; the serving stack and the ablation benches exercise the full
+//! warm/cold lifecycle.
+
+use crate::util::Rng;
+
+/// Lifecycle state of one agent's container instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InstanceState {
+    /// No instance provisioned (scale-to-zero).
+    Cold,
+    /// Instance starting; ready at the stored step-time (seconds).
+    Warming { ready_at: f64 },
+    /// Instance serving.
+    Warm,
+}
+
+/// Cold-start latency model: base platform delay plus model-load time
+/// proportional to checkpoint size, with multiplicative jitter.
+#[derive(Debug, Clone)]
+pub struct ColdStartModel {
+    /// Fixed platform provisioning delay (seconds).
+    pub base_s: f64,
+    /// Seconds per megabyte of model checkpoint (PCIe/NVMe load rate).
+    pub s_per_mb: f64,
+    /// Jitter amplitude (0.1 = ±10 %).
+    pub jitter: f64,
+}
+
+impl ColdStartModel {
+    /// Representative serverless GPU platform (§I cites sub-second platform
+    /// cold starts; checkpoint loading dominates for multi-GB models):
+    /// 200 ms base + 1 GB/s effective load rate.
+    pub fn default_platform() -> Self {
+        ColdStartModel { base_s: 0.2, s_per_mb: 0.001, jitter: 0.1 }
+    }
+
+    /// Sample a cold-start duration for a model of `model_mb` megabytes.
+    pub fn sample(&self, model_mb: u32, rng: &mut Rng) -> f64 {
+        let nominal = self.base_s + self.s_per_mb * model_mb as f64;
+        let j = 1.0 + self.jitter * (2.0 * rng.uniform() - 1.0);
+        (nominal * j).max(0.0)
+    }
+
+    /// Deterministic nominal duration (no jitter) — used by tests and by
+    /// capacity planning in the autoscaler.
+    pub fn nominal(&self, model_mb: u32) -> f64 {
+        self.base_s + self.s_per_mb * model_mb as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bigger_models_start_slower() {
+        let m = ColdStartModel::default_platform();
+        assert!(m.nominal(3000) > m.nominal(500));
+        // 3 GB model ≈ 0.2 + 3.0 = 3.2 s.
+        assert!((m.nominal(3000) - 3.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jitter_bounded() {
+        let m = ColdStartModel::default_platform();
+        let mut rng = Rng::new(5);
+        let nominal = m.nominal(2000);
+        for _ in 0..1000 {
+            let s = m.sample(2000, &mut rng);
+            assert!(s >= nominal * 0.899 && s <= nominal * 1.101,
+                    "s={s} nominal={nominal}");
+        }
+    }
+
+    #[test]
+    fn state_transitions_are_plain_data() {
+        let s = InstanceState::Warming { ready_at: 3.5 };
+        assert_ne!(s, InstanceState::Warm);
+        assert_eq!(InstanceState::Cold, InstanceState::Cold);
+    }
+}

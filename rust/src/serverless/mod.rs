@@ -1,0 +1,15 @@
+//! Serverless GPU platform model (§III.D / §IV.A substrate).
+//!
+//! Models the platform characteristics the paper assumes: fine-grained
+//! fractional GPU billing ([`billing`]), container cold starts
+//! ([`coldstart`]), and scale-to-zero autoscaling ([`autoscale`]). The
+//! simulator and the serving stack both consume these, so cost numbers and
+//! cold-start penalties are computed identically everywhere.
+
+mod autoscale;
+mod billing;
+mod coldstart;
+
+pub use autoscale::{AutoscaleDecision, Autoscaler};
+pub use billing::{BillingMeter, GpuPricing};
+pub use coldstart::{ColdStartModel, InstanceState};

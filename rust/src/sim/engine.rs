@@ -1,0 +1,366 @@
+//! The simulation loop (§IV.B methodology).
+
+use crate::agents::{AgentProfile, AgentRegistry};
+use crate::allocator::{AllocContext, AllocationPolicy};
+use crate::metrics::TimeSeries;
+use crate::serverless::{Autoscaler, BillingMeter, ColdStartModel};
+use crate::sim::{AgentStats, SimConfig, SimResult, Timelines};
+use crate::util::Rng;
+use crate::workload::WorkloadGenerator;
+
+/// Discrete-time simulator over one agent registry.
+#[derive(Debug, Clone)]
+pub struct Simulator {
+    cfg: SimConfig,
+    registry: AgentRegistry,
+}
+
+impl Simulator {
+    /// Build from profiles (panics on invalid profiles — use
+    /// [`Simulator::with_registry`] for fallible construction).
+    pub fn new(cfg: SimConfig, agents: Vec<AgentProfile>) -> Self {
+        let registry = AgentRegistry::new(agents).expect("valid agents");
+        Simulator::with_registry(cfg, registry)
+    }
+
+    /// Build from an already-validated registry.
+    pub fn with_registry(cfg: SimConfig, registry: AgentRegistry) -> Self {
+        assert_eq!(cfg.arrival_rates.len(), registry.len(),
+                   "arrival_rates must cover every agent");
+        Simulator { cfg, registry }
+    }
+
+    /// The agent registry simulated over.
+    pub fn registry(&self) -> &AgentRegistry {
+        &self.registry
+    }
+
+    /// Run one policy over the configured workload.
+    ///
+    /// The policy is `reset()` first so instances can be reused across
+    /// runs. The per-step hot path performs no heap allocation.
+    pub fn run(&self, policy: &mut dyn AllocationPolicy) -> SimResult {
+        let mut workload = WorkloadGenerator::new(
+            self.cfg.arrival_rates.clone(), self.cfg.workload_kind.clone(),
+            self.cfg.arrival_process, self.cfg.seed);
+        self.run_inner(policy, &mut |step, dt, rates, counts| {
+            workload.step(step, dt, rates, counts);
+        }, self.cfg.steps)
+    }
+
+    /// Run one policy over a recorded arrival [`Trace`] instead of the
+    /// configured generator — bit-exact replay of a production (or
+    /// previously recorded) workload. The trace's `dt` and length
+    /// override the config's.
+    pub fn run_trace(&self, policy: &mut dyn AllocationPolicy,
+                     trace: &crate::workload::trace::Trace) -> SimResult {
+        assert_eq!(trace.agents.len(), self.registry.len(),
+                   "trace agent count must match registry");
+        let dt = trace.dt;
+        let counts_by_step = &trace.counts;
+        let mut cfg_dt_guard = self.clone();
+        cfg_dt_guard.cfg.dt = dt;
+        cfg_dt_guard.run_inner(policy, &mut |step, dt_s, rates, counts| {
+            let row = &counts_by_step[step as usize];
+            counts.copy_from_slice(row);
+            for (r, c) in rates.iter_mut().zip(row) {
+                *r = c / dt_s;
+            }
+        }, trace.counts.len() as u64)
+    }
+
+    fn run_inner(&self, policy: &mut dyn AllocationPolicy,
+                 next_arrivals: &mut dyn FnMut(u64, f64, &mut [f64],
+                                               &mut [f64]),
+                 steps: u64) -> SimResult {
+        let n = self.registry.len();
+        let cfg = &self.cfg;
+        policy.reset();
+
+        let mut stats: Vec<AgentStats> = self.registry.profiles().iter()
+            .map(|p| AgentStats::new(p.name.clone()))
+            .collect();
+        let mut billing = BillingMeter::new(cfg.pricing);
+
+        let names: Vec<String> = self.registry.profiles().iter()
+            .map(|p| p.name.clone()).collect();
+        let mut timelines = cfg.record_timelines.then(|| Timelines {
+            allocation: TimeSeries::new(names.clone()),
+            queue: TimeSeries::new(names.clone()),
+            latency: TimeSeries::new(names.clone()),
+            throughput: TimeSeries::new(names),
+        });
+
+        // Dense per-step buffers — reused, zero allocation in the loop.
+        let mut queues = vec![0.0f64; n];
+        let mut rates = vec![0.0f64; n];
+        let mut counts = vec![0.0f64; n];
+        let mut observed = vec![0.0f64; n];
+        let mut alloc = vec![0.0f64; n];
+        let mut lat_row = vec![0.0f64; n];
+        let mut tput_row = vec![0.0f64; n];
+        let base_tput = self.registry.base_tput();
+
+        // Optional serverless lifecycle: scale-to-zero + cold starts.
+        let model_mb: Vec<u32> = self.registry.profiles().iter()
+            .map(|p| p.model_mb).collect();
+        let mut lifecycle = cfg.scale_to_zero_after_s.map(|timeout| {
+            (Autoscaler::all_warm(n, ColdStartModel::default_platform(),
+                                  timeout),
+             Rng::new(cfg.seed ^ 0xC01D))
+        });
+
+        for step in 0..steps {
+            // 1. Arrivals join their agent's queue.
+            next_arrivals(step, cfg.dt, &mut rates, &mut counts);
+            for i in 0..n {
+                queues[i] += counts[i];
+                stats[i].arrived_total += counts[i];
+                // Policies observe the realized arrival *rate* (rps).
+                observed[i] = counts[i] / cfg.dt;
+            }
+
+            // 2. The policy distributes GPU fractions.
+            let ctx = AllocContext {
+                registry: &self.registry,
+                arrival_rates: &observed,
+                queue_depths: &queues,
+                step,
+                capacity: cfg.capacity,
+            };
+            policy.allocate(&ctx, &mut alloc);
+
+            // 2b. Serverless lifecycle: cold agents cannot process this
+            //     step (their allocation is forfeited, not billed), and
+            //     demand triggers warm-up with a model-size-dependent
+            //     cold-start delay.
+            if let Some((scaler, rng)) = lifecycle.as_mut() {
+                let now = step as f64 * cfg.dt;
+                scaler.step(now, cfg.dt, &queues, &model_mb, rng);
+                for i in 0..n {
+                    if !scaler.is_warm(i) {
+                        alloc[i] = 0.0;
+                    }
+                }
+            }
+
+            // 3. Agents process proportionally to their allocation; record
+            //    metrics on the post-processing queue (§IV.B ordering —
+            //    this ordering is what Table II's closed forms assume).
+            let mut total_alloc = 0.0;
+            for i in 0..n {
+                let g = alloc[i];
+                total_alloc += g;
+                let rate = base_tput[i] * g; // rps at this allocation
+                let cap = rate * cfg.dt;
+                let processed = queues[i].min(cap);
+                queues[i] -= processed;
+
+                let latency = if rate > 0.0 {
+                    (queues[i] / rate).min(cfg.latency_cap_s)
+                } else if queues[i] > 0.0 {
+                    cfg.latency_cap_s
+                } else {
+                    0.0
+                };
+                let tput = processed / cfg.dt;
+
+                stats[i].latency.push(latency);
+                stats[i].throughput.push(tput);
+                stats[i].queue.push(queues[i]);
+                stats[i].allocation.push(g);
+                if cap > 0.0 {
+                    stats[i].utilization.push(processed / cap);
+                }
+                stats[i].processed_total += processed;
+                lat_row[i] = latency;
+                tput_row[i] = tput;
+            }
+
+            // 4. Billing: pay for what was allocated this step.
+            billing.charge(total_alloc, cfg.dt);
+
+            if let Some(tl) = timelines.as_mut() {
+                tl.allocation.push_row(&alloc);
+                tl.queue.push_row(&queues);
+                tl.latency.push_row(&lat_row);
+                tl.throughput.push_row(&tput_row);
+            }
+        }
+
+        for i in 0..n {
+            stats[i].final_queue = queues[i];
+        }
+
+        SimResult {
+            policy: policy.name().to_string(),
+            steps,
+            dt: cfg.dt,
+            per_agent: stats,
+            cost_dollars: billing.total_cost(),
+            gpu_seconds: billing.gpu_seconds(),
+            timelines,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocator::{AdaptivePolicy, RoundRobinPolicy,
+                           StaticEqualPolicy};
+    use crate::workload::WorkloadKind;
+
+    fn paper_sim() -> Simulator {
+        Simulator::new(SimConfig::paper(), AgentProfile::paper_agents())
+    }
+
+    #[test]
+    fn static_equal_reproduces_table2_row() {
+        let r = paper_sim().run(&mut StaticEqualPolicy);
+        // Paper: 110.3 s, 60.0 rps, $0.020.
+        assert!((r.mean_latency() - 110.3).abs() < 0.5,
+                "latency={}", r.mean_latency());
+        assert!((r.total_throughput() - 60.0).abs() < 0.3,
+                "tput={}", r.total_throughput());
+        assert!((r.cost_dollars - 0.020).abs() < 1e-6,
+                "cost={}", r.cost_dollars);
+    }
+
+    #[test]
+    fn adaptive_reproduces_table2_row() {
+        let r = paper_sim().run(&mut AdaptivePolicy::default());
+        // Paper: 111.9 s, 58.1 rps, $0.020.
+        assert!((r.mean_latency() - 111.9).abs() < 0.6,
+                "latency={}", r.mean_latency());
+        assert!((r.total_throughput() - 58.1).abs() < 0.3,
+                "tput={}", r.total_throughput());
+        assert!((r.cost_dollars - 0.020).abs() < 1e-6);
+        // Per-agent: reasoning lowest (91.6 s), vision highest (128.6 s).
+        let lat = r.agent_latencies();
+        assert!((lat[3] - 91.7).abs() < 0.6, "reasoning={}", lat[3]);
+        assert!((lat[2] - 128.6).abs() < 0.7, "vision={}", lat[2]);
+        let min = lat.iter().cloned().fold(f64::MAX, f64::min);
+        let max = lat.iter().cloned().fold(f64::MIN, f64::max);
+        assert_eq!(min, lat[3]);
+        assert_eq!(max, lat[2]);
+    }
+
+    #[test]
+    fn round_robin_reproduces_table2_row() {
+        let r = paper_sim().run(&mut RoundRobinPolicy::default());
+        // Paper: 756.1 s mean, std 0.5, 60.0 rps, $0.020.
+        assert!((r.mean_latency() - 756.1).abs() < 2.0,
+                "latency={}", r.mean_latency());
+        assert!(r.latency_std() < 1.5, "std={}", r.latency_std());
+        assert!((r.total_throughput() - 60.0).abs() < 0.5,
+                "tput={}", r.total_throughput());
+        assert!((r.cost_dollars - 0.020).abs() < 1e-6);
+    }
+
+    #[test]
+    fn headline_claim_85_percent_latency_reduction() {
+        let sim = paper_sim();
+        let adaptive = sim.run(&mut AdaptivePolicy::default());
+        let rr = sim.run(&mut RoundRobinPolicy::default());
+        let reduction = 1.0 - adaptive.mean_latency() / rr.mean_latency();
+        assert!(reduction > 0.83 && reduction < 0.87,
+                "reduction={reduction}");
+    }
+
+    #[test]
+    fn conservation_holds_for_all_policies() {
+        let sim = paper_sim();
+        for mut p in crate::allocator::all_policies() {
+            let r = sim.run(p.as_mut());
+            assert!(r.conservation_error() < 1e-6,
+                    "{}: {}", r.policy, r.conservation_error());
+        }
+    }
+
+    #[test]
+    fn timelines_recorded_when_requested() {
+        let mut cfg = SimConfig::paper_poisson();
+        cfg.record_timelines = true;
+        let sim = Simulator::new(cfg, AgentProfile::paper_agents());
+        let r = sim.run(&mut AdaptivePolicy::default());
+        let tl = r.timelines.expect("timelines");
+        assert_eq!(tl.allocation.len(), 100);
+        assert_eq!(tl.queue.len(), 100);
+        // Allocation rows sum to <= capacity.
+        for row in tl.allocation.rows() {
+            let total: f64 = row.iter().sum();
+            assert!(total <= 1.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn poisson_run_is_reproducible() {
+        let cfg = SimConfig::paper_poisson();
+        let sim = Simulator::new(cfg, AgentProfile::paper_agents());
+        let a = sim.run(&mut AdaptivePolicy::default());
+        let b = sim.run(&mut AdaptivePolicy::default());
+        assert_eq!(a.mean_latency(), b.mean_latency());
+        assert_eq!(a.total_throughput(), b.total_throughput());
+    }
+
+    #[test]
+    fn scale_to_zero_saves_money_on_idle_agents() {
+        // Under static-equal, an idle agent still holds (and bills) 25%
+        // of the GPU — unless scale-to-zero tears its instance down.
+        let mut cfg = SimConfig::paper();
+        cfg.arrival_rates = vec![80.0, 0.0, 0.0, 0.0]; // only coordinator
+        let warm_sim = Simulator::new(cfg.clone(),
+                                      AgentProfile::paper_agents());
+        let warm = warm_sim.run(&mut StaticEqualPolicy);
+
+        cfg.scale_to_zero_after_s = Some(5.0);
+        let s2z_sim = Simulator::new(cfg, AgentProfile::paper_agents());
+        let s2z = s2z_sim.run(&mut StaticEqualPolicy);
+
+        assert!(s2z.cost_dollars < warm.cost_dollars * 0.5,
+                "scale-to-zero {} vs always-warm {}",
+                s2z.cost_dollars, warm.cost_dollars);
+        // The busy agent is unaffected.
+        assert!((s2z.per_agent[0].throughput.mean()
+                 - warm.per_agent[0].throughput.mean()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cold_start_delays_processing_after_burst() {
+        // Agent 1 idles long enough to scale to zero, then a burst
+        // arrives: its first post-burst steps process nothing (warming),
+        // unlike the always-warm run.
+        let mut cfg = SimConfig::paper();
+        cfg.arrival_rates = vec![80.0, 0.0, 45.0, 25.0];
+        cfg.workload_kind = WorkloadKind::Spike {
+            agent: 1, factor: 1.0, start: 50, end: 100,
+        };
+        // Spike with base 0 stays 0; use Dominance-free approach: give
+        // agent 1 rate via spike factor on a tiny base instead.
+        cfg.arrival_rates[1] = 0.004; // ~0 for 50s (deterministic 0.004/s)
+        cfg.workload_kind = WorkloadKind::Spike {
+            agent: 1, factor: 10_000.0, start: 50, end: 100,
+        };
+        cfg.scale_to_zero_after_s = Some(3.0);
+        let sim = Simulator::new(cfg, AgentProfile::paper_agents());
+        let r = sim.run(&mut AdaptivePolicy::default());
+        // NLP (3GB... 2GB model → ~2.2s cold start) loses at least one
+        // full step of processing right after the burst begins.
+        let nlp = &r.per_agent[1];
+        assert!(nlp.processed_total > 0.0, "burst eventually served");
+        assert!(nlp.processed_total < nlp.arrived_total,
+                "cold start must cost some processing");
+    }
+
+    #[test]
+    fn idle_workload_costs_nothing_under_adaptive() {
+        let mut cfg = SimConfig::paper();
+        cfg.arrival_rates = vec![0.0; 4];
+        let sim = Simulator::new(cfg, AgentProfile::paper_agents());
+        let r = sim.run(&mut AdaptivePolicy::default());
+        assert_eq!(r.cost_dollars, 0.0);
+        assert_eq!(r.mean_latency(), 0.0);
+        assert_eq!(r.total_throughput(), 0.0);
+    }
+}

@@ -1,0 +1,141 @@
+//! Simulation outputs: per-agent statistics, aggregates, and timelines.
+
+use crate::metrics::{Streaming, TimeSeries};
+use crate::sim::SummaryRow;
+use crate::util;
+
+/// Accumulated statistics for one agent over a run.
+#[derive(Debug, Clone)]
+pub struct AgentStats {
+    /// Agent name (Table I).
+    pub name: String,
+    /// Estimated backlog-wait latency per step (s).
+    pub latency: Streaming,
+    /// Processed requests per second, per step.
+    pub throughput: Streaming,
+    /// Queue depth after processing, per step.
+    pub queue: Streaming,
+    /// GPU fraction allocated, per step.
+    pub allocation: Streaming,
+    /// processed / allocated-capacity per step (in [0,1]).
+    pub utilization: Streaming,
+    /// Total requests processed.
+    pub processed_total: f64,
+    /// Total requests that arrived.
+    pub arrived_total: f64,
+    /// Queue depth at the end of the run.
+    pub final_queue: f64,
+}
+
+impl AgentStats {
+    pub(crate) fn new(name: String) -> Self {
+        AgentStats {
+            name,
+            latency: Streaming::new(),
+            throughput: Streaming::new(),
+            queue: Streaming::new(),
+            allocation: Streaming::new(),
+            utilization: Streaming::new(),
+            processed_total: 0.0,
+            arrived_total: 0.0,
+            final_queue: 0.0,
+        }
+    }
+}
+
+/// Optional full per-step traces (Fig 2(c) and robustness plots).
+#[derive(Debug, Clone)]
+pub struct Timelines {
+    /// GPU fraction per agent per step.
+    pub allocation: TimeSeries,
+    /// Queue depth per agent per step.
+    pub queue: TimeSeries,
+    /// Latency estimate per agent per step.
+    pub latency: TimeSeries,
+    /// Throughput per agent per step.
+    pub throughput: TimeSeries,
+}
+
+/// Everything one simulation run produced.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Policy that produced this run.
+    pub policy: String,
+    /// Steps simulated and step length.
+    pub steps: u64,
+    /// Step length (seconds).
+    pub dt: f64,
+    /// Per-agent statistics in agent-id order.
+    pub per_agent: Vec<AgentStats>,
+    /// Billed cost over the run (dollars).
+    pub cost_dollars: f64,
+    /// Fraction-weighted GPU-seconds consumed.
+    pub gpu_seconds: f64,
+    /// Full timelines when requested.
+    pub timelines: Option<Timelines>,
+}
+
+impl SimResult {
+    /// Table II "Avg Latency": mean of per-agent mean latencies.
+    pub fn mean_latency(&self) -> f64 {
+        util::mean(&self.agent_latencies())
+    }
+
+    /// Table II "Latency Std Dev": std across per-agent mean latencies.
+    pub fn latency_std(&self) -> f64 {
+        util::std_dev(&self.agent_latencies())
+    }
+
+    /// Table II "Total Throughput": sum of per-agent mean throughputs.
+    pub fn total_throughput(&self) -> f64 {
+        self.per_agent.iter().map(|a| a.throughput.mean()).sum()
+    }
+
+    /// Mean utilization across agents.
+    pub fn mean_utilization(&self) -> f64 {
+        let us: Vec<f64> =
+            self.per_agent.iter().map(|a| a.utilization.mean()).collect();
+        util::mean(&us)
+    }
+
+    /// Per-agent mean latencies in agent order (Fig 2(a)).
+    pub fn agent_latencies(&self) -> Vec<f64> {
+        self.per_agent.iter().map(|a| a.latency.mean()).collect()
+    }
+
+    /// Per-agent mean throughputs in agent order (Fig 2(b)).
+    pub fn agent_throughputs(&self) -> Vec<f64> {
+        self.per_agent.iter().map(|a| a.throughput.mean()).collect()
+    }
+
+    /// Conservation check: arrivals == processed + final queue, per agent.
+    /// (Invariant behind the proptest suite.)
+    pub fn conservation_error(&self) -> f64 {
+        self.per_agent.iter()
+            .map(|a| (a.arrived_total - a.processed_total - a.final_queue)
+                 .abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// The paper's Eq. 2 objective: `α·L + β·C − γ·H` (lower is better).
+    ///
+    /// L = mean latency (s), C = cost ($), H = total throughput (rps).
+    /// The weights are application-specific (§III.A); defaults used by
+    /// the sweep example are (1, 100, 1).
+    pub fn objective(&self, alpha: f64, beta: f64, gamma: f64) -> f64 {
+        alpha * self.mean_latency() + beta * self.cost_dollars
+            - gamma * self.total_throughput()
+    }
+
+    /// Flatten into the serializable summary row used by reports/CSV.
+    pub fn summary(&self) -> SummaryRow {
+        SummaryRow {
+            policy: self.policy.clone(),
+            avg_latency_s: self.mean_latency(),
+            total_throughput_rps: self.total_throughput(),
+            cost_dollars: self.cost_dollars,
+            latency_std_s: self.latency_std(),
+            mean_utilization: self.mean_utilization(),
+        }
+    }
+}

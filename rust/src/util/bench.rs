@@ -1,0 +1,187 @@
+//! Micro-benchmark harness (offline stand-in for `criterion`).
+//!
+//! Each `[[bench]]` target is a plain binary using [`Harness`]: it
+//! calibrates iteration counts to a target measurement time, reports
+//! mean/median/p95 per-iteration wall time, and honors the conventional
+//! `cargo bench -- <filter>` argument plus `--quick` for CI. Results can
+//! also be appended to a CSV for the EXPERIMENTS.md perf log.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's measured statistics (nanoseconds per iteration).
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    /// Benchmark name.
+    pub name: String,
+    /// Iterations per sample.
+    pub iters_per_sample: u64,
+    /// Samples taken.
+    pub samples: usize,
+    /// Mean ns/iter.
+    pub mean_ns: f64,
+    /// Median ns/iter.
+    pub median_ns: f64,
+    /// 95th percentile ns/iter.
+    pub p95_ns: f64,
+}
+
+impl BenchStats {
+    /// Human-readable time with unit scaling.
+    pub fn fmt_ns(ns: f64) -> String {
+        if ns < 1e3 {
+            format!("{ns:.1} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.3} s", ns / 1e9)
+        }
+    }
+}
+
+/// Bench runner configured from CLI args.
+pub struct Harness {
+    filter: Option<String>,
+    target_sample: Duration,
+    samples: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Harness {
+    /// Parse `cargo bench` style args: optional name filter, `--quick`.
+    pub fn from_args() -> Harness {
+        let args: Vec<String> = std::env::args().skip(1)
+            .filter(|a| a != "--bench") // cargo passes this through
+            .collect();
+        let quick = args.iter().any(|a| a == "--quick");
+        let filter = args.into_iter().find(|a| !a.starts_with("--"));
+        Harness {
+            filter,
+            target_sample: if quick {
+                Duration::from_millis(20)
+            } else {
+                Duration::from_millis(150)
+            },
+            samples: if quick { 5 } else { 15 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Run one benchmark: `f` is the measured unit of work. The return
+    /// value is folded into a black-box sink so the optimizer cannot
+    /// remove the work.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) {
+        if let Some(filter) = &self.filter {
+            if !name.contains(filter.as_str()) {
+                return;
+            }
+        }
+
+        // Calibrate: how many iterations fill one target sample?
+        let mut iters = 1u64;
+        loop {
+            let start = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            let elapsed = start.elapsed();
+            if elapsed >= self.target_sample / 4 || iters > (1 << 30) {
+                let scale = self.target_sample.as_secs_f64()
+                    / elapsed.as_secs_f64().max(1e-9);
+                iters = ((iters as f64 * scale).ceil() as u64).max(1);
+                break;
+            }
+            iters *= 8;
+        }
+
+        let mut per_iter: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let start = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            per_iter.push(start.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = per_iter.iter().sum::<f64>() / per_iter.len() as f64;
+        let median = per_iter[per_iter.len() / 2];
+        let p95_idx = ((per_iter.len() as f64 * 0.95) as usize)
+            .min(per_iter.len() - 1);
+        let p95 = per_iter[p95_idx];
+
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters_per_sample: iters,
+            samples: per_iter.len(),
+            mean_ns: mean,
+            median_ns: median,
+            p95_ns: p95,
+        };
+        println!(
+            "{:<44} median {:>12}   mean {:>12}   p95 {:>12}   ({} iters x {} samples)",
+            stats.name,
+            BenchStats::fmt_ns(stats.median_ns),
+            BenchStats::fmt_ns(stats.mean_ns),
+            BenchStats::fmt_ns(stats.p95_ns),
+            stats.iters_per_sample,
+            stats.samples,
+        );
+        self.results.push(stats);
+    }
+
+    /// Print a section header.
+    pub fn section(&self, title: &str) {
+        println!("\n=== {title} ===");
+    }
+
+    /// All recorded results.
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_reasonable() {
+        let mut h = Harness {
+            filter: None,
+            target_sample: Duration::from_millis(2),
+            samples: 3,
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        h.bench("spin", || {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1);
+            acc
+        });
+        assert_eq!(h.results().len(), 1);
+        let r = &h.results()[0];
+        assert!(r.median_ns > 0.0 && r.median_ns < 1e6, "{}", r.median_ns);
+    }
+
+    #[test]
+    fn filter_skips_nonmatching() {
+        let mut h = Harness {
+            filter: Some("yes".into()),
+            target_sample: Duration::from_millis(1),
+            samples: 2,
+            results: Vec::new(),
+        };
+        h.bench("no_match", || 1);
+        assert!(h.results().is_empty());
+        h.bench("yes_match", || 1);
+        assert_eq!(h.results().len(), 1);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(BenchStats::fmt_ns(12.3), "12.3 ns");
+        assert_eq!(BenchStats::fmt_ns(12_300.0), "12.30 µs");
+        assert_eq!(BenchStats::fmt_ns(12_300_000.0), "12.30 ms");
+        assert_eq!(BenchStats::fmt_ns(2_500_000_000.0), "2.500 s");
+    }
+}

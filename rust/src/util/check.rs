@@ -1,0 +1,69 @@
+//! Tiny property-based testing harness (offline stand-in for `proptest`).
+//!
+//! [`forall`] runs a property over many generated cases from a seeded
+//! [`Rng`]; on failure it panics with the case index, the seed, and the
+//! failing case's debug representation, so counterexamples are trivially
+//! reproducible (re-run with the printed seed).
+
+use crate::util::Rng;
+
+/// Run `prop` over `cases` inputs drawn by `gen`. Panics on the first
+/// failing case with enough context to reproduce it.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: u32,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> std::result::Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {seed}): {msg}\n\
+                 input: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Draw a vector of `len` uniform f64s in [lo, hi).
+pub fn vec_uniform(rng: &mut Rng, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+    (0..len).map(|_| lo + rng.uniform() * (hi - lo)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        forall(1, 100, |rng| rng.uniform(), |x| {
+            if (0.0..1.0).contains(x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_context() {
+        forall(2, 100, |rng| rng.below(10), |x| {
+            if *x < 5 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn vec_uniform_bounds() {
+        let mut rng = Rng::new(3);
+        let v = vec_uniform(&mut rng, 50, -2.0, 3.0);
+        assert_eq!(v.len(), 50);
+        assert!(v.iter().all(|x| (-2.0..3.0).contains(x)));
+    }
+}

@@ -1,0 +1,48 @@
+//! Small shared utilities: deterministic RNG, JSON, micro-bench harness,
+//! property-testing helper, temp dirs, float helpers.
+//!
+//! The build image is fully offline, so the conventional helper crates
+//! (serde_json, criterion, proptest, tempfile) are reimplemented here at
+//! the scale this project needs.
+
+pub mod bench;
+pub mod check;
+pub mod json;
+pub mod rng;
+pub mod tempdir;
+
+pub use rng::Rng;
+pub use tempdir::TempDir;
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation of a slice (0.0 for < 2 elements).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64)
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert_eq!(std_dev(&[5.0]), 0.0);
+        let s = std_dev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s - 2.0).abs() < 1e-12);
+    }
+}

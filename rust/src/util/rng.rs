@@ -1,0 +1,163 @@
+//! Deterministic PRNG for reproducible simulations.
+//!
+//! xorshift64* — tiny, fast, and dependency-free. The paper fixes a random
+//! seed for reproducibility (§IV.B); every stochastic component in this
+//! crate (Poisson arrivals, cold-start jitter, workload spikes) draws from
+//! this generator so a `(seed, config)` pair fully determines a run.
+
+/// xorshift64* pseudo-random generator.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Create a generator from a seed (0 is remapped — xorshift needs a
+    /// non-zero state).
+    pub fn new(seed: u64) -> Self {
+        Rng {
+            state: if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed },
+        }
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        // 53 mantissa bits of the raw output.
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Modulo bias is < 2^-40 for the n used here (n << 2^64).
+        self.next_u64() % n
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.uniform().max(f64::MIN_POSITIVE);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Poisson sample with mean `lambda`.
+    ///
+    /// Knuth's product method below λ=30 (exact), normal approximation with
+    /// continuity correction above (λ here reaches ~800 during 10× spike
+    /// experiments, where the approximation error is ≪ 1 %).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.uniform();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let x = lambda + lambda.sqrt() * self.normal() + 0.5;
+            if x < 0.0 {
+                0
+            } else {
+                x.floor() as u64
+            }
+        }
+    }
+
+    /// Exponential sample with the given rate (mean 1/rate).
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        -self.uniform().max(f64::MIN_POSITIVE).ln() / rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn zero_seed_is_usable() {
+        let mut r = Rng::new(0);
+        assert_ne!(r.next_u64(), 0);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn poisson_mean_matches_lambda_small() {
+        let mut r = Rng::new(11);
+        let n = 20_000;
+        let mean: f64 =
+            (0..n).map(|_| r.poisson(8.0) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 8.0).abs() < 0.15, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_mean_matches_lambda_large() {
+        let mut r = Rng::new(13);
+        let n = 20_000;
+        let mean: f64 =
+            (0..n).map(|_| r.poisson(80.0) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 80.0).abs() < 0.5, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_zero_lambda() {
+        let mut r = Rng::new(1);
+        assert_eq!(r.poisson(0.0), 0);
+        assert_eq!(r.poisson(-1.0), 0);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(17);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(19);
+        let n = 50_000;
+        let mean: f64 =
+            (0..n).map(|_| r.exponential(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+}

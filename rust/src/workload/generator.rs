@@ -1,0 +1,230 @@
+//! Per-agent arrival-rate generators for every evaluated scenario.
+
+use crate::util::Rng;
+
+/// How request counts are drawn around the configured mean rate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalProcess {
+    /// Exactly `rate · dt` requests per step (the closed-form paper mode —
+    /// reproduces Table II to the decimal).
+    Deterministic,
+    /// Poisson(rate · dt) per step with the run's fixed seed (§IV.B
+    /// "fixed random seed ensures reproducibility").
+    Poisson,
+}
+
+/// Shape of the mean-rate schedule over time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadKind {
+    /// Constant mean rates (§IV.A evaluation workload).
+    Steady,
+    /// All rates multiplied by a factor (§V.B overload, factor = 3).
+    Scaled { factor: f64 },
+    /// One agent's rate multiplied by `factor` during [start, end) steps
+    /// (§V.B spike, factor = 10).
+    Spike { agent: usize, factor: f64, start: u64, end: u64 },
+    /// One agent receives `share` of the *total* request volume, the rest
+    /// split proportionally to their original rates (§V.B dominance,
+    /// share = 0.9).
+    Dominance { agent: usize, share: f64 },
+    /// Sinusoidal diurnal modulation: rate · (1 + amp·sin(2πt/period)).
+    Diurnal { amplitude: f64, period: f64 },
+}
+
+/// Generates per-agent arrival counts and mean rates per timestep.
+#[derive(Debug, Clone)]
+pub struct WorkloadGenerator {
+    base_rates: Vec<f64>,
+    kind: WorkloadKind,
+    process: ArrivalProcess,
+    rng: Rng,
+    seed: u64,
+}
+
+impl WorkloadGenerator {
+    /// Create a generator over base mean rates (rps).
+    pub fn new(base_rates: Vec<f64>, kind: WorkloadKind,
+               process: ArrivalProcess, seed: u64) -> Self {
+        WorkloadGenerator { base_rates, kind, process, rng: Rng::new(seed),
+                            seed }
+    }
+
+    /// The paper's §IV.A workload in deterministic (closed-form) mode.
+    pub fn paper_deterministic() -> Self {
+        WorkloadGenerator::new(
+            crate::agents::AgentProfile::paper_arrival_rates(),
+            WorkloadKind::Steady, ArrivalProcess::Deterministic, 42)
+    }
+
+    /// The paper's §IV.A workload with Poisson arrivals, seed 42.
+    pub fn paper_poisson() -> Self {
+        WorkloadGenerator::new(
+            crate::agents::AgentProfile::paper_arrival_rates(),
+            WorkloadKind::Steady, ArrivalProcess::Poisson, 42)
+    }
+
+    /// Number of agents covered.
+    pub fn len(&self) -> usize {
+        self.base_rates.len()
+    }
+
+    /// True when no agents are configured.
+    pub fn is_empty(&self) -> bool {
+        self.base_rates.is_empty()
+    }
+
+    /// Restart the arrival stream (same seed => same stream).
+    pub fn reset(&mut self) {
+        self.rng = Rng::new(self.seed);
+    }
+
+    /// Mean rate (rps) for `agent` at `step` under the configured shape.
+    pub fn mean_rate(&self, agent: usize, step: u64) -> f64 {
+        let base = self.base_rates[agent];
+        match &self.kind {
+            WorkloadKind::Steady => base,
+            WorkloadKind::Scaled { factor } => base * factor,
+            WorkloadKind::Spike { agent: a, factor, start, end } => {
+                if agent == *a && (*start..*end).contains(&step) {
+                    base * factor
+                } else {
+                    base
+                }
+            }
+            WorkloadKind::Dominance { agent: a, share } => {
+                let total: f64 = self.base_rates.iter().sum();
+                if agent == *a {
+                    total * share
+                } else {
+                    let others: f64 = total - self.base_rates[*a];
+                    if others <= 0.0 {
+                        0.0
+                    } else {
+                        total * (1.0 - share) * base / others
+                    }
+                }
+            }
+            WorkloadKind::Diurnal { amplitude, period } => {
+                let phase = 2.0 * std::f64::consts::PI * step as f64
+                    / period.max(1.0);
+                (base * (1.0 + amplitude * phase.sin())).max(0.0)
+            }
+        }
+    }
+
+    /// Draw arrival *counts* for one step of length `dt` seconds into
+    /// `counts`, and record the mean rates used into `rates`.
+    pub fn step(&mut self, step: u64, dt: f64, rates: &mut [f64],
+                counts: &mut [f64]) {
+        debug_assert_eq!(rates.len(), self.base_rates.len());
+        for i in 0..self.base_rates.len() {
+            let rate = self.mean_rate(i, step);
+            rates[i] = rate;
+            counts[i] = match self.process {
+                ArrivalProcess::Deterministic => rate * dt,
+                ArrivalProcess::Poisson => self.rng.poisson(rate * dt) as f64,
+            };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collect(gen: &mut WorkloadGenerator, steps: u64, dt: f64)
+               -> Vec<Vec<f64>> {
+        let n = gen.len();
+        let mut rates = vec![0.0; n];
+        let mut counts = vec![0.0; n];
+        let mut all = Vec::new();
+        for t in 0..steps {
+            gen.step(t, dt, &mut rates, &mut counts);
+            all.push(counts.clone());
+        }
+        all
+    }
+
+    #[test]
+    fn deterministic_matches_rates_exactly() {
+        let mut g = WorkloadGenerator::paper_deterministic();
+        let counts = collect(&mut g, 3, 1.0);
+        for step in counts {
+            assert_eq!(step, vec![80.0, 40.0, 45.0, 25.0]);
+        }
+    }
+
+    #[test]
+    fn poisson_is_seeded_and_reproducible() {
+        let mut a = WorkloadGenerator::paper_poisson();
+        let mut b = WorkloadGenerator::paper_poisson();
+        assert_eq!(collect(&mut a, 20, 1.0), collect(&mut b, 20, 1.0));
+        // And reset() replays the identical stream.
+        let first = collect(&mut a, 5, 1.0);
+        a.reset();
+        let again = collect(&mut a, 5, 1.0);
+        // reset replays from the beginning, which includes the first 20
+        // steps already consumed — so compare against a fresh generator.
+        let mut c = WorkloadGenerator::paper_poisson();
+        assert_eq!(again, collect(&mut c, 5, 1.0));
+        drop(first);
+    }
+
+    #[test]
+    fn poisson_mean_tracks_rate() {
+        let mut g = WorkloadGenerator::paper_poisson();
+        let all = collect(&mut g, 2000, 1.0);
+        let mean0: f64 =
+            all.iter().map(|c| c[0]).sum::<f64>() / all.len() as f64;
+        assert!((mean0 - 80.0).abs() < 1.5, "mean0={mean0}");
+    }
+
+    #[test]
+    fn scaled_overload() {
+        let g = WorkloadGenerator::new(vec![80.0, 40.0],
+                                       WorkloadKind::Scaled { factor: 3.0 },
+                                       ArrivalProcess::Deterministic, 1);
+        assert_eq!(g.mean_rate(0, 10), 240.0);
+        assert_eq!(g.mean_rate(1, 10), 120.0);
+    }
+
+    #[test]
+    fn spike_window_only() {
+        let g = WorkloadGenerator::new(
+            vec![80.0, 40.0],
+            WorkloadKind::Spike { agent: 1, factor: 10.0, start: 5, end: 8 },
+            ArrivalProcess::Deterministic, 1);
+        assert_eq!(g.mean_rate(1, 4), 40.0);
+        assert_eq!(g.mean_rate(1, 5), 400.0);
+        assert_eq!(g.mean_rate(1, 7), 400.0);
+        assert_eq!(g.mean_rate(1, 8), 40.0);
+        assert_eq!(g.mean_rate(0, 6), 80.0); // other agents unaffected
+    }
+
+    #[test]
+    fn dominance_preserves_total_volume() {
+        let g = WorkloadGenerator::new(
+            vec![80.0, 40.0, 45.0, 25.0],
+            WorkloadKind::Dominance { agent: 0, share: 0.9 },
+            ArrivalProcess::Deterministic, 1);
+        let total: f64 = (0..4).map(|i| g.mean_rate(i, 0)).sum();
+        assert!((total - 190.0).abs() < 1e-9);
+        assert!((g.mean_rate(0, 0) - 171.0).abs() < 1e-9);
+        // Remaining 10% split ∝ original rates among the other three.
+        let rest: f64 = (1..4).map(|i| g.mean_rate(i, 0)).sum();
+        assert!((rest - 19.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn diurnal_oscillates_nonnegative() {
+        let g = WorkloadGenerator::new(
+            vec![50.0],
+            WorkloadKind::Diurnal { amplitude: 1.5, period: 20.0 },
+            ArrivalProcess::Deterministic, 1);
+        let rates: Vec<f64> = (0..40).map(|t| g.mean_rate(0, t)).collect();
+        assert!(rates.iter().all(|r| *r >= 0.0));
+        let max = rates.iter().cloned().fold(0.0, f64::max);
+        let min = rates.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max > 100.0 && min == 0.0, "max={max} min={min}");
+    }
+}

@@ -1,0 +1,12 @@
+//! Workload generation: per-agent arrival processes and trace replay.
+//!
+//! The paper evaluates a steady §IV.A workload (constant mean rates with a
+//! fixed random seed) plus three robustness scenarios (§V.B): 3× overload,
+//! 10× spike, and 90 % single-agent dominance. [`WorkloadGenerator`]
+//! produces all of them, and [`trace`] records/replays arrival traces as
+//! CSV so serving runs are reproducible end-to-end.
+
+mod generator;
+pub mod trace;
+
+pub use generator::{ArrivalProcess, WorkloadGenerator, WorkloadKind};

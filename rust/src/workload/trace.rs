@@ -1,0 +1,156 @@
+//! Arrival-trace recording and replay (CSV).
+//!
+//! A trace is a dense (steps × agents) matrix of arrival counts. Serving
+//! and simulation runs can record the workload they saw and replay it
+//! bit-exactly later — the substitute for the production traces the paper
+//! did not publish (see DESIGN.md §4 substitutions).
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::workload::WorkloadGenerator;
+
+/// A recorded arrival trace: `counts[step][agent]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    /// Agent names, defining column order.
+    pub agents: Vec<String>,
+    /// Step duration in seconds.
+    pub dt: f64,
+    /// Arrival counts per step per agent.
+    pub counts: Vec<Vec<f64>>,
+}
+
+impl Trace {
+    /// Record `steps` steps from a generator.
+    pub fn record(gen: &mut WorkloadGenerator, agents: Vec<String>,
+                  steps: u64, dt: f64) -> Trace {
+        let n = gen.len();
+        assert_eq!(agents.len(), n, "agent names must match generator size");
+        let mut rates = vec![0.0; n];
+        let mut counts_buf = vec![0.0; n];
+        let mut counts = Vec::with_capacity(steps as usize);
+        for t in 0..steps {
+            gen.step(t, dt, &mut rates, &mut counts_buf);
+            counts.push(counts_buf.clone());
+        }
+        Trace { agents, dt, counts }
+    }
+
+    /// Number of steps recorded.
+    pub fn len(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// True when the trace holds no steps.
+    pub fn is_empty(&self) -> bool {
+        self.counts.is_empty()
+    }
+
+    /// Serialize as CSV: header `# dt=<dt>` then `step,<agent...>` rows.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "# dt={}", self.dt)?;
+        writeln!(f, "step,{}", self.agents.join(","))?;
+        for (t, row) in self.counts.iter().enumerate() {
+            let cells: Vec<String> =
+                row.iter().map(|c| format!("{c}")).collect();
+            writeln!(f, "{t},{}", cells.join(","))?;
+        }
+        Ok(())
+    }
+
+    /// Parse a trace written by [`Trace::save`].
+    pub fn load(path: &Path) -> Result<Trace> {
+        let f = std::fs::File::open(path)?;
+        let mut lines = BufReader::new(f).lines();
+
+        let dt_line = lines.next()
+            .ok_or_else(|| Error::Trace("empty trace file".into()))??;
+        let dt: f64 = dt_line.strip_prefix("# dt=")
+            .ok_or_else(|| Error::Trace(format!("bad dt line: {dt_line}")))?
+            .trim().parse()
+            .map_err(|e| Error::Trace(format!("bad dt: {e}")))?;
+
+        let header = lines.next()
+            .ok_or_else(|| Error::Trace("missing header".into()))??;
+        let mut cols = header.split(',');
+        if cols.next() != Some("step") {
+            return Err(Error::Trace("header must start with 'step'".into()));
+        }
+        let agents: Vec<String> = cols.map(str::to_string).collect();
+        if agents.is_empty() {
+            return Err(Error::Trace("no agent columns".into()));
+        }
+
+        let mut counts = Vec::new();
+        for (lineno, line) in lines.enumerate() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cells: Vec<&str> = line.split(',').collect();
+            if cells.len() != agents.len() + 1 {
+                return Err(Error::Trace(format!(
+                    "row {lineno}: expected {} cells, got {}",
+                    agents.len() + 1, cells.len())));
+            }
+            let row: std::result::Result<Vec<f64>, _> =
+                cells[1..].iter().map(|c| c.trim().parse()).collect();
+            counts.push(row.map_err(
+                |e| Error::Trace(format!("row {lineno}: {e}")))?);
+        }
+        Ok(Trace { agents, dt, counts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{ArrivalProcess, WorkloadKind};
+
+    fn names() -> Vec<String> {
+        vec!["coordinator".into(), "nlp".into(), "vision".into(),
+             "reasoning".into()]
+    }
+
+    #[test]
+    fn record_and_roundtrip() {
+        let mut gen = WorkloadGenerator::paper_poisson();
+        let trace = Trace::record(&mut gen, names(), 25, 1.0);
+        assert_eq!(trace.len(), 25);
+
+        let dir = crate::util::TempDir::new("t").unwrap();
+        let path = dir.path().join("trace.csv");
+        trace.save(&path).unwrap();
+        let loaded = Trace::load(&path).unwrap();
+        assert_eq!(trace, loaded);
+    }
+
+    #[test]
+    fn deterministic_trace_is_constant() {
+        let mut gen = WorkloadGenerator::new(
+            vec![10.0, 5.0], WorkloadKind::Steady,
+            ArrivalProcess::Deterministic, 0);
+        let trace = Trace::record(&mut gen,
+                                  vec!["a".into(), "b".into()], 3, 1.0);
+        for row in &trace.counts {
+            assert_eq!(row, &vec![10.0, 5.0]);
+        }
+    }
+
+    #[test]
+    fn load_rejects_malformed() {
+        let dir = crate::util::TempDir::new("t").unwrap();
+        let path = dir.path().join("bad.csv");
+        std::fs::write(&path, "nonsense\n").unwrap();
+        assert!(Trace::load(&path).is_err());
+
+        std::fs::write(&path, "# dt=1\nstep,a\n0,1\n1,2,3\n").unwrap();
+        assert!(Trace::load(&path).is_err());
+
+        std::fs::write(&path, "# dt=1\nstep,a\n0,xyz\n").unwrap();
+        assert!(Trace::load(&path).is_err());
+    }
+}

@@ -1,0 +1,94 @@
+//! Integration: the PJRT runtime against the real AOT artifacts.
+//!
+//! Requires `make artifacts` to have run (the suite skips, loudly, when
+//! artifacts are absent so `cargo test` stays runnable pre-build).
+
+use std::path::{Path, PathBuf};
+
+use agentsrv::runtime::InferenceEngine;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn engine_loads_all_agents_and_verifies_golden_vectors() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = InferenceEngine::load(&dir).expect("engine load");
+    assert_eq!(engine.platform(), "cpu");
+    // Every (agent, batch) golden vector must reproduce bit-exact greedy
+    // tokens and matching logits norms — proves the Pallas-kernel HLO and
+    // the Rust execution path agree with JAX end-to-end.
+    let verified = engine.verify_golden().expect("golden vectors");
+    // 4 agents x 4 batch variants.
+    assert_eq!(verified.len(), 16, "verified: {verified:?}");
+}
+
+#[test]
+fn batching_pads_and_truncates_correctly() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = InferenceEngine::load(&dir).expect("engine load");
+    let seq = engine.manifest().seq_len;
+    let vocab = engine.manifest().agent("coordinator").unwrap().vocab;
+
+    let row = |s: u64| -> Vec<i32> {
+        (0..seq).map(|i| ((s * 31 + i as u64 * 7) % vocab as u64) as i32)
+            .collect()
+    };
+
+    // Batch of 3 must ride the b4 variant and return exactly 3 outputs.
+    let rows = vec![row(1), row(2), row(3)];
+    let out = engine.infer("coordinator", &rows).expect("infer");
+    assert_eq!(out.executed_batch, 4);
+    assert_eq!(out.next_tokens.len(), 3);
+    assert_eq!(out.logits.len(), 3 * vocab);
+
+    // Each row's output must be independent of its batch-mates: run each
+    // row alone and compare.
+    for (i, r) in rows.iter().enumerate() {
+        let solo = engine.infer("coordinator", &[r.clone()]).expect("solo");
+        assert_eq!(solo.next_tokens[0], out.next_tokens[i],
+                   "row {i} differs between batch and solo");
+    }
+
+    let stats = engine.stats();
+    assert_eq!(stats.requests, 3 + 3);
+    assert!(stats.padded_slots >= 1);
+}
+
+#[test]
+fn engine_rejects_malformed_requests() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = InferenceEngine::load(&dir).expect("engine load");
+    let seq = engine.manifest().seq_len;
+
+    // Unknown agent.
+    assert!(engine.infer("nope", &[vec![0; seq]]).is_err());
+    // Empty batch.
+    assert!(engine.infer("coordinator", &[]).is_err());
+    // Wrong token count.
+    assert!(engine.infer("coordinator", &[vec![0; seq - 1]]).is_err());
+    // Token out of vocab.
+    assert!(engine.infer("coordinator", &[vec![100_000; seq]]).is_err());
+    // Oversized batch.
+    let too_many: Vec<Vec<i32>> = (0..64).map(|_| vec![0; seq]).collect();
+    assert!(engine.infer("coordinator", &too_many).is_err());
+}
+
+#[test]
+fn heterogeneous_agents_have_heterogeneous_cost() {
+    // The paper's premise: specialists are heavier than the coordinator.
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = InferenceEngine::load(&dir).expect("engine load");
+    let m = engine.manifest();
+    let coord = m.agent("coordinator").unwrap();
+    let reasoning = m.agent("reasoning").unwrap();
+    assert!(reasoning.param_count > 3 * coord.param_count);
+    assert!(reasoning.flops(1) > 3 * coord.flops(1));
+}

@@ -1,0 +1,113 @@
+//! Integration: the full serving stack (router → batcher → governor →
+//! PJRT) and the collaborative-reasoning pipeline on top of it.
+//!
+//! One server is shared across the whole file (engine compilation is the
+//! expensive part), exercised by concurrent client threads.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use agentsrv::coordinator::{ReasoningPipeline, TaskKind};
+use agentsrv::runtime::Manifest;
+use agentsrv::server::{AgentServer, ServerConfig};
+use agentsrv::util::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn prompt(seq: usize, vocab: usize, seed: u64) -> Vec<i32> {
+    (0..seq).map(|i| ((seed * 131 + i as u64 * 7 + 3) % vocab as u64) as i32)
+        .collect()
+}
+
+#[test]
+fn serving_stack_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let seq = manifest.seq_len;
+    let vocabs: Vec<(String, usize)> = manifest.agents.iter()
+        .map(|a| (a.name.clone(), a.vocab)).collect();
+
+    let server = Arc::new(
+        AgentServer::start(ServerConfig::new(&dir)).expect("server start"));
+
+    // --- 1. Submission validation happens before queuing. -------------
+    assert!(server.submit("nope", vec![0; seq]).is_err());
+    assert!(server.submit("coordinator", vec![0; seq - 1]).is_err());
+    assert!(server.submit("coordinator", vec![-1; seq]).is_err());
+
+    // --- 2. Concurrent mixed load from client threads. -----------------
+    let mut handles = Vec::new();
+    for (agent, vocab) in vocabs.clone() {
+        let server = Arc::clone(&server);
+        handles.push(std::thread::spawn(move || {
+            let mut answers = Vec::new();
+            for s in 0..12u64 {
+                let done = server
+                    .submit_blocking(&agent, prompt(seq, vocab, s))
+                    .expect("request served");
+                assert_eq!(done.agent, agent);
+                assert!(done.next_token >= 0
+                        && (done.next_token as usize) < vocab);
+                assert!(done.batch_size >= 1);
+                answers.push(done.next_token);
+            }
+            (agent, answers)
+        }));
+    }
+    let mut all: Vec<(String, Vec<i32>)> = Vec::new();
+    for h in handles {
+        all.push(h.join().expect("client thread"));
+    }
+
+    // Determinism: the same prompt re-submitted yields the same token.
+    for (agent, answers) in &all {
+        let vocab = vocabs.iter().find(|(n, _)| n == agent).unwrap().1;
+        let again = server
+            .submit_blocking(agent, prompt(seq, vocab, 0))
+            .expect("repeat");
+        assert_eq!(again.next_token, answers[0],
+                   "{agent} nondeterministic");
+    }
+
+    // --- 3. Collaborative reasoning workflows. -------------------------
+    let pipeline = ReasoningPipeline::new(&server, vocabs.clone());
+    let mut rng = Rng::new(11);
+    for i in 0..6u64 {
+        let kind = TaskKind::sample(&mut rng);
+        let wf = pipeline.run(&server, kind, i).expect("workflow");
+        // plan + specialists + aggregate
+        assert_eq!(wf.stages.len(), kind.specialists().len() + 2);
+        assert_eq!(wf.stages.first().unwrap().agent, "coordinator");
+        assert_eq!(wf.stages.last().unwrap().agent, "coordinator");
+        assert!(wf.answer() >= 0);
+        assert!(wf.total >= wf.stages.iter().map(|s| s.latency).max()
+                .unwrap());
+    }
+    // Workflows are deterministic given (kind, seed).
+    let a = pipeline.run(&server, TaskKind::MultiDomain, 99).unwrap();
+    let b = pipeline.run(&server, TaskKind::MultiDomain, 99).unwrap();
+    assert_eq!(a.answer(), b.answer());
+
+    // --- 4. Stats are coherent. -----------------------------------------
+    let server = Arc::try_unwrap(server).ok().expect("sole owner");
+    let stats = server.shutdown();
+    assert_eq!(stats.total_errors, 0);
+    // 4 agents x 12 + 4 determinism repeats + workflow stages.
+    assert!(stats.total_completed >= 52, "{}", stats.total_completed);
+    assert!(stats.gpu_busy_seconds > 0.0);
+    let shares: f64 = stats.per_agent.iter().map(|a| a.5).sum();
+    assert!((shares - 1.0).abs() < 1e-6, "gpu shares sum to {shares}");
+    for (name, completed, p50, p99, mean_batch, _) in &stats.per_agent {
+        assert!(*completed > 0, "{name} served nothing");
+        assert!(*p50 > 0.0 && p99 >= p50, "{name} quantiles broken");
+        assert!(*mean_batch >= 1.0);
+    }
+}

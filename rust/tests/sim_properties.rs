@@ -1,0 +1,236 @@
+//! Property-based tests over the allocator and simulator invariants
+//! (in-tree `util::check` harness; see DESIGN.md §2).
+
+use agentsrv::agents::{AgentProfile, AgentRegistry, Priority};
+use agentsrv::allocator::{all_policies, AllocContext};
+use agentsrv::serverless::GpuPricing;
+use agentsrv::sim::{SimConfig, Simulator};
+use agentsrv::util::check::{forall, vec_uniform};
+use agentsrv::util::Rng;
+use agentsrv::workload::{ArrivalProcess, WorkloadKind};
+
+/// Random but always-valid agent set: minimums jointly feasible.
+fn gen_agents(rng: &mut Rng) -> (Vec<AgentProfile>, Vec<f64>) {
+    let n = 1 + rng.below(8) as usize;
+    let mut mins = vec_uniform(rng, n, 0.0, 1.0);
+    let total: f64 = mins.iter().sum();
+    // Scale so Σ min ∈ [0, 1): feasible with headroom.
+    let scale = rng.uniform() * 0.95 / total.max(1e-9);
+    for m in &mut mins {
+        *m *= scale;
+    }
+    let agents = (0..n).map(|i| AgentProfile {
+        name: format!("a{i}"),
+        model_mb: 100 + rng.below(4000) as u32,
+        base_tput: 1.0 + rng.uniform() * 120.0,
+        min_gpu: mins[i],
+        priority: match rng.below(3) {
+            0 => Priority::High,
+            1 => Priority::Medium,
+            _ => Priority::Low,
+        },
+    }).collect();
+    let rates = vec_uniform(rng, n, 0.0, 200.0);
+    (agents, rates)
+}
+
+#[test]
+fn prop_every_policy_respects_capacity_and_nonnegativity() {
+    forall(0xA110C, 300, |rng| gen_agents(rng), |(agents, rates)| {
+        let reg = AgentRegistry::new(agents.clone())
+            .map_err(|e| e.to_string())?;
+        let queues = vec![0.0; reg.len()];
+        for mut policy in all_policies() {
+            let mut out = vec![0.0; reg.len()];
+            for step in 0..5 {
+                let ctx = AllocContext {
+                    registry: &reg,
+                    arrival_rates: rates,
+                    queue_depths: &queues,
+                    step,
+                    capacity: 1.0,
+                };
+                policy.allocate(&ctx, &mut out);
+                let total: f64 = out.iter().sum();
+                if total > 1.0 + 1e-9 {
+                    return Err(format!(
+                        "{}: Σg = {total} > capacity", policy.name()));
+                }
+                if out.iter().any(|g| *g < 0.0 || !g.is_finite()) {
+                    return Err(format!(
+                        "{}: bad fraction in {out:?}", policy.name()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_adaptive_monotone_in_arrival_rate() {
+    // Raising one agent's arrivals (before floors bind) must not *reduce*
+    // its proportional share relative to an unchanged peer.
+    forall(0xB0057, 200, |rng| {
+        let (agents, rates) = gen_agents(rng);
+        let bumped = rng.below(agents.len() as u64) as usize;
+        (agents, rates, bumped)
+    }, |(agents, rates, bumped)| {
+        let reg = AgentRegistry::new(agents.clone())
+            .map_err(|e| e.to_string())?;
+        let queues = vec![0.0; reg.len()];
+        let mut base = vec![0.0; reg.len()];
+        let mut more = vec![0.0; reg.len()];
+        let mut policy = agentsrv::allocator::AdaptivePolicy::default();
+        use agentsrv::allocator::AllocationPolicy;
+
+        let ctx = AllocContext {
+            registry: &reg, arrival_rates: rates,
+            queue_depths: &queues, step: 0, capacity: 1.0,
+        };
+        policy.allocate(&ctx, &mut base);
+
+        let mut rates2 = rates.clone();
+        rates2[*bumped] = rates2[*bumped] * 2.0 + 1.0;
+        let ctx2 = AllocContext {
+            registry: &reg, arrival_rates: &rates2,
+            queue_depths: &queues, step: 0, capacity: 1.0,
+        };
+        policy.allocate(&ctx2, &mut more);
+
+        if more[*bumped] + 1e-9 < base[*bumped] {
+            return Err(format!(
+                "allocation dropped after demand rise: {} -> {}",
+                base[*bumped], more[*bumped]));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulation_conserves_requests_and_money() {
+    forall(0x51A1, 60, |rng| {
+        let (agents, rates) = gen_agents(rng);
+        let poisson = rng.uniform() < 0.5;
+        let seed = rng.next_u64();
+        (agents, rates, poisson, seed)
+    }, |(agents, rates, poisson, seed)| {
+        let cfg = SimConfig {
+            steps: 50,
+            dt: 1.0,
+            capacity: 1.0,
+            latency_cap_s: 1000.0,
+            pricing: GpuPricing::t4(),
+            arrival_rates: rates.clone(),
+            workload_kind: WorkloadKind::Steady,
+            arrival_process: if *poisson {
+                ArrivalProcess::Poisson
+            } else {
+                ArrivalProcess::Deterministic
+            },
+            seed: *seed,
+            record_timelines: false,
+            scale_to_zero_after_s: None,
+        };
+        let sim = Simulator::new(cfg, agents.clone());
+        for mut policy in all_policies() {
+            let r = sim.run(policy.as_mut());
+            // Conservation: arrived == processed + still queued.
+            if r.conservation_error() > 1e-6 {
+                return Err(format!(
+                    "{}: conservation error {}",
+                    r.policy, r.conservation_error()));
+            }
+            // Cost never exceeds full-GPU-for-the-whole-run.
+            let max_cost = GpuPricing::t4().cost(1.0, 50.0);
+            if r.cost_dollars > max_cost + 1e-12 {
+                return Err(format!(
+                    "{}: cost {} > physical max {max_cost}",
+                    r.policy, r.cost_dollars));
+            }
+            // Latencies within [0, cap]; throughput non-negative.
+            for a in &r.per_agent {
+                if a.latency.max() > 1000.0 + 1e-9
+                    || a.latency.min() < 0.0 {
+                    return Err(format!(
+                        "{}: latency out of bounds", r.policy));
+                }
+                if a.throughput.min() < 0.0 {
+                    return Err(format!(
+                        "{}: negative throughput", r.policy));
+                }
+                if a.utilization.max() > 1.0 + 1e-9 {
+                    return Err(format!(
+                        "{}: utilization > 1", r.policy));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_throughput_bounded_by_capacity_and_arrivals() {
+    forall(0x7097, 80, |rng| gen_agents(rng), |(agents, rates)| {
+        let cfg = SimConfig {
+            steps: 40,
+            dt: 1.0,
+            capacity: 1.0,
+            latency_cap_s: 1000.0,
+            pricing: GpuPricing::t4(),
+            arrival_rates: rates.clone(),
+            workload_kind: WorkloadKind::Steady,
+            arrival_process: ArrivalProcess::Deterministic,
+            seed: 1,
+            record_timelines: false,
+            scale_to_zero_after_s: None,
+        };
+        let sim = Simulator::new(cfg, agents.clone());
+        for mut policy in all_policies() {
+            let r = sim.run(policy.as_mut());
+            for (i, a) in r.per_agent.iter().enumerate() {
+                // Per-agent throughput can never beat full-GPU capacity,
+                // nor (cumulatively) the arrivals.
+                if a.throughput.max() > agents[i].base_tput + 1e-9 {
+                    return Err(format!(
+                        "{}: agent {i} tput {} > T_i {}",
+                        r.policy, a.throughput.max(), agents[i].base_tput));
+                }
+                if a.processed_total > a.arrived_total + 1e-9 {
+                    return Err(format!(
+                        "{}: processed more than arrived", r.policy));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_round_robin_grants_everything_to_one_agent() {
+    forall(0x22B, 100, |rng| gen_agents(rng), |(agents, rates)| {
+        let reg = AgentRegistry::new(agents.clone())
+            .map_err(|e| e.to_string())?;
+        let queues = vec![0.0; reg.len()];
+        let mut policy =
+            agentsrv::allocator::RoundRobinPolicy::default();
+        use agentsrv::allocator::AllocationPolicy;
+        let mut out = vec![0.0; reg.len()];
+        for step in 0..10 {
+            let ctx = AllocContext {
+                registry: &reg, arrival_rates: rates,
+                queue_depths: &queues, step, capacity: 1.0,
+            };
+            policy.allocate(&ctx, &mut out);
+            let holders =
+                out.iter().filter(|g| **g > 0.0).count();
+            if holders != 1 {
+                return Err(format!("{holders} holders at step {step}"));
+            }
+            let idx = out.iter().position(|g| *g > 0.0).unwrap();
+            if idx != (step as usize) % reg.len() {
+                return Err(format!("wrong rotation at step {step}"));
+            }
+        }
+        Ok(())
+    });
+}
