@@ -1,10 +1,12 @@
-//! §V.B robustness & scalability: the four stress experiments.
+//! §V.B robustness & scalability: the four stress experiments, plus the
+//! full policy×shape stress grid swept through the batch engine.
 //!
 //! ```sh
 //! cargo run --release --example robustness
 //! ```
 
 use agentsrv::repro;
+use agentsrv::sim::batch::{default_workers, run_batch};
 
 fn main() {
     println!("== 3x demand overload (§V.B) ==");
@@ -43,4 +45,28 @@ fn main() {
                  p.ns_per_call,
                  if p.ns_per_call < 1e6 { "< 1 ms OK" } else { "SLOW" });
     }
+
+    // ---- Full stress grid through the batch sweep engine -------------
+    let workers = default_workers();
+    println!("\n== stress grid: policy × shape × seed, {workers} \
+              worker(s) ==");
+    let grid = repro::stress_grid(100, &[42]);
+    let start = std::time::Instant::now();
+    let runs = run_batch(&grid, workers);
+    let elapsed = start.elapsed();
+    println!("  {} scenarios in {:.1} ms ({:.0} scenarios/s)",
+             runs.len(), elapsed.as_secs_f64() * 1e3,
+             runs.len() as f64 / elapsed.as_secs_f64().max(1e-9));
+    let best = runs.iter()
+        .min_by(|a, b| a.result.mean_latency()
+                .total_cmp(&b.result.mean_latency()))
+        .expect("nonempty grid");
+    let worst = runs.iter()
+        .max_by(|a, b| a.result.mean_latency()
+                .total_cmp(&b.result.mean_latency()))
+        .expect("nonempty grid");
+    println!("  best  cell: {:<28} {:>8.1} s", best.label,
+             best.result.mean_latency());
+    println!("  worst cell: {:<28} {:>8.1} s", worst.label,
+             worst.result.mean_latency());
 }

@@ -10,33 +10,54 @@
 //!   3. policy × load — every policy across arrival-rate scales,
 //!      locating the round-robin crossover.
 //!
+//! Each sweep builds its grid of [`Scenario`]s and fans it across the
+//! batch engine's worker threads; results are identical to sequential
+//! runs (the property suite asserts bit-equality), just faster.
+//!
 //! ```sh
 //! cargo run --release --example sweep
 //! ```
 
-use agentsrv::agents::{AgentProfile, Priority};
-use agentsrv::allocator::{all_policies, AdaptivePolicy};
-use agentsrv::sim::{SimConfig, Simulator};
+use std::collections::HashMap;
+
+use agentsrv::agents::{AgentProfile, AgentRegistry, Priority};
+use agentsrv::allocator::PolicyKind;
+use agentsrv::sim::batch::{default_workers, run_batch, Scenario};
+use agentsrv::sim::SimConfig;
 use agentsrv::workload::WorkloadKind;
 
 fn main() {
-    sweep_priority();
-    sweep_min_gpu();
-    sweep_policy_by_load();
+    let workers = default_workers();
+    println!("batch sweep engine: {workers} worker(s)\n");
+    sweep_priority(workers);
+    sweep_min_gpu(workers);
+    sweep_policy_by_load(workers);
 }
 
-fn sweep_priority() {
+/// Paper agents with one mutation applied, validated into a registry.
+fn registry_with(mutate: impl FnOnce(&mut Vec<AgentProfile>))
+                 -> AgentRegistry {
+    let mut agents = AgentProfile::paper_agents();
+    mutate(&mut agents);
+    AgentRegistry::new(agents).expect("paper-derived agents stay valid")
+}
+
+fn sweep_priority(workers: usize) {
     println!("== sweep 1: reasoning specialist priority (adaptive) ==");
     println!("{:<10} {:>16} {:>14} {:>12}", "priority",
              "reasoning lat(s)", "mean lat(s)", "reasoning g");
-    for (label, priority) in [("1 high", Priority::High),
-                              ("2 medium", Priority::Medium),
-                              ("3 low", Priority::Low)] {
-        let mut agents = AgentProfile::paper_agents();
-        agents[3].priority = priority;
-        let sim = Simulator::new(SimConfig::paper(), agents);
-        let r = sim.run(&mut AdaptivePolicy::default());
-        println!("{:<10} {:>16.1} {:>14.1} {:>12.3}", label,
+    let grid: Vec<Scenario> = [("1 high", Priority::High),
+                               ("2 medium", Priority::Medium),
+                               ("3 low", Priority::Low)]
+        .into_iter()
+        .map(|(label, priority)| Scenario::new(
+            label, SimConfig::paper(),
+            registry_with(|agents| agents[3].priority = priority),
+            PolicyKind::adaptive()))
+        .collect();
+    for run in run_batch(&grid, workers) {
+        let r = &run.result;
+        println!("{:<10} {:>16.1} {:>14.1} {:>12.3}", run.label,
                  r.per_agent[3].latency.mean(), r.mean_latency(),
                  r.per_agent[3].allocation.mean());
     }
@@ -44,44 +65,64 @@ fn sweep_priority() {
               latency; §V.C)\n");
 }
 
-fn sweep_min_gpu() {
+fn sweep_min_gpu(workers: usize) {
     println!("== sweep 2: minimum-GPU floor scale (adaptive) ==");
     println!("{:<8} {:>12} {:>14} {:>16}", "scale", "mean lat(s)",
              "min tput(rps)", "min alloc");
-    for scale in [0.25, 0.5, 0.75, 1.0] {
-        let mut agents = AgentProfile::paper_agents();
-        for a in &mut agents {
-            a.min_gpu *= scale;
-        }
-        let sim = Simulator::new(SimConfig::paper(), agents);
-        let r = sim.run(&mut AdaptivePolicy::default());
+    let grid: Vec<Scenario> = [0.25, 0.5, 0.75, 1.0]
+        .into_iter()
+        .map(|scale| Scenario::new(
+            format!("{scale}"), SimConfig::paper(),
+            registry_with(|agents| {
+                for a in agents.iter_mut() {
+                    a.min_gpu *= scale;
+                }
+            }),
+            PolicyKind::adaptive()))
+        .collect();
+    for run in run_batch(&grid, workers) {
+        let r = &run.result;
         let min_tput = r.agent_throughputs().into_iter()
             .fold(f64::MAX, f64::min);
         let min_alloc = r.per_agent.iter()
             .map(|a| a.allocation.mean()).fold(f64::MAX, f64::min);
-        println!("{:<8} {:>12.1} {:>14.1} {:>16.3}", scale,
+        println!("{:<8} {:>12.1} {:>14.1} {:>16.3}", run.label,
                  r.mean_latency(), min_tput, min_alloc);
     }
     println!("(smaller floors free capacity for hot agents but shrink \
               the starvation guarantee; §V.C)\n");
 }
 
-fn sweep_policy_by_load() {
+fn sweep_policy_by_load(workers: usize) {
     println!("== sweep 3: every policy × load scale ==");
-    print!("{:<14}", "policy");
     let scales = [0.25, 0.5, 1.0, 2.0, 4.0];
+
+    // One flat grid — 5 policies × 5 scales — swept in a single batch.
+    let mut grid = Vec::new();
+    for policy in PolicyKind::all() {
+        for scale in scales {
+            let mut cfg = SimConfig::paper();
+            cfg.workload_kind = WorkloadKind::Scaled { factor: scale };
+            grid.push(Scenario::new(
+                format!("{}/{scale}x", policy.name()),
+                cfg, AgentRegistry::paper(), policy.clone()));
+        }
+    }
+    let latency: HashMap<String, f64> = run_batch(&grid, workers)
+        .into_iter()
+        .map(|run| (run.label, run.result.mean_latency()))
+        .collect();
+
+    print!("{:<14}", "policy");
     for s in scales {
         print!(" {:>9}", format!("{s}x"));
     }
     println!("   (mean latency, s)");
-    for mut policy in all_policies() {
+    for policy in PolicyKind::all() {
         print!("{:<14}", policy.name());
         for scale in scales {
-            let mut cfg = SimConfig::paper();
-            cfg.workload_kind = WorkloadKind::Scaled { factor: scale };
-            let sim = Simulator::new(cfg, AgentProfile::paper_agents());
-            let r = sim.run(policy.as_mut());
-            print!(" {:>9.1}", r.mean_latency());
+            let key = format!("{}/{scale}x", policy.name());
+            print!(" {:>9.1}", latency[&key]);
         }
         println!();
     }

@@ -1,13 +1,13 @@
 //! Bench: §V.B robustness experiments end-to-end, plus the extension-
 //! policy ablation (adaptive vs predictive vs feedback on overload and
-//! spike workloads). Run: `cargo bench --bench robustness`.
+//! spike workloads) swept through the batch engine.
+//! Run: `cargo bench --bench robustness`.
 
-use agentsrv::agents::AgentProfile;
-use agentsrv::allocator::policy_by_name;
+use std::collections::HashMap;
+
 use agentsrv::repro;
-use agentsrv::sim::{SimConfig, Simulator};
+use agentsrv::sim::batch::{default_workers, run_batch};
 use agentsrv::util::bench::Harness;
-use agentsrv::workload::{ArrivalProcess, WorkloadKind};
 
 fn main() {
     let mut h = Harness::from_args();
@@ -41,33 +41,31 @@ fn main() {
              else { "OCCURRED" });
 
     // ---- Ablation: DESIGN.md design choices ---------------------------
+    // The whole policy × shape grid goes through sim::batch in one call;
+    // cells are bit-identical to the sequential runs this table used to
+    // make one at a time.
+    let workers = default_workers();
     h.section("ablation: policy family under stress workloads \
                (mean latency, s)");
-    let scenarios: Vec<(&str, WorkloadKind, ArrivalProcess)> = vec![
-        ("steady", WorkloadKind::Steady, ArrivalProcess::Deterministic),
-        ("overload3x", WorkloadKind::Scaled { factor: 3.0 },
-         ArrivalProcess::Deterministic),
-        ("spike10x", WorkloadKind::Spike {
-            agent: 0, factor: 10.0, start: 40, end: 60,
-        }, ArrivalProcess::Deterministic),
-        ("poisson", WorkloadKind::Steady, ArrivalProcess::Poisson),
-    ];
+    let shapes = repro::stress_shapes(100);
+    let grid = repro::stress_grid(100, &[42]);
+    h.bench("stress_grid/batch", || run_batch(&grid, workers).len());
+    let latency: HashMap<String, f64> = run_batch(&grid, workers)
+        .into_iter()
+        .map(|run| (run.label, run.result.mean_latency()))
+        .collect();
+
     print!("{:<14}", "policy");
-    for (name, _, _) in &scenarios {
+    for (name, _, _) in &shapes {
         print!(" {:>11}", name);
     }
-    println!();
+    println!("   ({workers} workers)");
     for pname in ["adaptive", "predictive", "feedback", "static_equal",
                   "round_robin"] {
         print!("{pname:<14}");
-        for (_, kind, process) in &scenarios {
-            let mut cfg = SimConfig::paper();
-            cfg.workload_kind = kind.clone();
-            cfg.arrival_process = *process;
-            let sim = Simulator::new(cfg, AgentProfile::paper_agents());
-            let mut policy = policy_by_name(pname).unwrap();
-            let r = sim.run(policy.as_mut());
-            print!(" {:>11.1}", r.mean_latency());
+        for (shape, _, _) in &shapes {
+            let key = format!("{pname}/{shape}/seed42");
+            print!(" {:>11.1}", latency[&key]);
         }
         println!();
     }
@@ -79,6 +77,7 @@ fn main() {
     h.section("multi-GPU cluster (hierarchical Alg. 1, §VI future work)");
     use agentsrv::agents::AgentRegistry;
     use agentsrv::cluster::{ClusterSimulator, MigrationModel};
+    use agentsrv::sim::SimConfig;
     println!("{:<22} {:>12} {:>12} {:>10} {:>11}", "cluster",
              "latency(s)", "tput(rps)", "cost($)", "migrations");
     for (label, gpus, cap, mig) in [

@@ -1,0 +1,192 @@
+//! Bench: scenario-throughput of the batch sweep engine vs worker count.
+//!
+//! Grid under test: the §V.B robustness grid (every built-in policy ×
+//! four stress shapes × a seed set) from `repro::stress_grid`, scaled to
+//! 2000 steps × 8 seeds (160 scenarios) so there is real work to divide.
+//! `--quick` shrinks it to 500 steps × 2 seeds for CI.
+//!
+//! Three measurements, each the best of three repetitions:
+//!
+//!   1. sequential baseline — the pre-batch path: per scenario, a fresh
+//!      buffer set (`Simulator::run`) driven through a boxed
+//!      `dyn AllocationPolicy` (virtual dispatch in the step loop);
+//!   2. batch engine at 1 worker — same thread count as the baseline,
+//!      isolating the arena-reuse + static-dispatch win;
+//!   3. batch engine at 2/4/8 workers — the parallel scaling curve.
+//!
+//! Before timing, every worker count is checked to produce bit-identical
+//! per-scenario results (mean latency, total throughput, cost) to the
+//! sequential baseline — the same contract the `sim_properties` suite
+//! asserts.
+//!
+//! Run: `cargo bench --bench sweep_scaling [-- --quick] [-- --json FILE]`
+//! With `--json`, the measured table is also written as JSON (the format
+//! documented in BENCH_sweep.json).
+
+use std::time::{Duration, Instant};
+
+use agentsrv::allocator::policy_by_name;
+use agentsrv::repro;
+use agentsrv::sim::batch::{run_batch, BatchRun, Scenario};
+use agentsrv::util::json::{self, Value};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1)
+        .filter(|a| a != "--bench").collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args.iter().position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1)).cloned();
+
+    let (steps, seeds): (u64, Vec<u64>) = if quick {
+        (500, (1..=2).collect())
+    } else {
+        (2000, (1..=8).collect())
+    };
+    let grid = repro::stress_grid(steps, &seeds);
+    let reps = if quick { 2 } else { 3 };
+    println!("robustness grid: {} scenarios × {} steps  \
+              (best of {reps} reps)", grid.len(), steps);
+
+    // ---- Correctness gate: identical results at every worker count ----
+    let reference = sequential_baseline(&grid);
+    for workers in [1usize, 2, 4, 8] {
+        let got = run_batch(&grid, workers);
+        assert_identical(&reference, &got, workers);
+    }
+    println!("bit-identical to sequential at 1/2/4/8 workers: OK\n");
+
+    // ---- Throughput table --------------------------------------------
+    println!("{:<26} {:>10} {:>16} {:>9}", "config", "time",
+             "scenarios/s", "speedup");
+    let seq = best_of(reps, || {
+        let runs = sequential_baseline(&grid);
+        std::hint::black_box(runs.len());
+    });
+    let seq_s = seq.as_secs_f64();
+    print_row("sequential (dyn, no arena)", seq, grid.len(), 1.0);
+
+    let mut rows: Vec<(usize, f64, f64)> = Vec::new();
+    let mut speedup_at_8 = 0.0;
+    for workers in [1usize, 2, 4, 8] {
+        let t = best_of(reps, || {
+            let runs = run_batch(&grid, workers);
+            std::hint::black_box(runs.len());
+        });
+        let speedup = seq_s / t.as_secs_f64().max(1e-12);
+        print_row(&format!("batch, {workers} worker(s)"), t, grid.len(),
+                  speedup);
+        rows.push((workers, t.as_secs_f64(), speedup));
+        if workers == 8 {
+            speedup_at_8 = speedup;
+        }
+    }
+    println!("\nacceptance: batch@8 vs sequential = {speedup_at_8:.2}x \
+              (target >= 3x) — {}",
+             if speedup_at_8 >= 3.0 { "PASS" } else { "BELOW TARGET" });
+
+    if let Some(path) = json_path {
+        let json = to_json(&grid, steps, seeds.len(), seq_s, &rows, &path);
+        std::fs::write(&path, json).expect("write json report");
+        println!("json report -> {path}");
+    }
+}
+
+/// The pre-batch evaluation path: fresh per-run buffers + virtual calls.
+fn sequential_baseline(grid: &[Scenario]) -> Vec<BatchRun> {
+    grid.iter().map(|sc| {
+        let mut policy = policy_by_name(sc.policy.name())
+            .expect("grid uses built-in policies");
+        BatchRun {
+            label: sc.label.clone(),
+            result: sc.simulator().run(policy.as_mut()),
+        }
+    }).collect()
+}
+
+fn assert_identical(reference: &[BatchRun], got: &[BatchRun],
+                    workers: usize) {
+    assert_eq!(reference.len(), got.len());
+    for (want, have) in reference.iter().zip(got) {
+        assert_eq!(want.label, have.label, "order at {workers} workers");
+        assert!(want.result.mean_latency() == have.result.mean_latency()
+                && want.result.total_throughput()
+                    == have.result.total_throughput()
+                && want.result.cost_dollars == have.result.cost_dollars,
+                "{}: batch@{workers} diverged from sequential",
+                want.label);
+    }
+}
+
+fn best_of(reps: usize, mut f: impl FnMut()) -> Duration {
+    let mut best = Duration::MAX;
+    for _ in 0..reps {
+        let start = Instant::now();
+        f();
+        best = best.min(start.elapsed());
+    }
+    best
+}
+
+fn print_row(name: &str, t: Duration, scenarios: usize, speedup: f64) {
+    println!("{:<26} {:>8.1}ms {:>16.0} {:>8.2}x", name,
+             t.as_secs_f64() * 1e3,
+             scenarios as f64 / t.as_secs_f64().max(1e-12), speedup);
+}
+
+/// The measured results as the JSON object the checked-in
+/// BENCH_sweep.json documents under its `results` key.
+fn results_value(grid: &[Scenario], steps: u64, n_seeds: usize, seq_s: f64,
+                 rows: &[(usize, f64, f64)]) -> Value {
+    let throughput =
+        |secs: f64| grid.len() as f64 / secs.max(1e-12);
+    json::obj(vec![
+        ("grid", json::obj(vec![
+            ("scenarios", json::num(grid.len() as f64)),
+            ("steps", json::num(steps as f64)),
+            ("seeds", json::num(n_seeds as f64)),
+            ("policies", json::num(5.0)),
+            ("shapes", json::num(4.0)),
+        ])),
+        ("sequential_baseline", json::obj(vec![
+            ("seconds", json::num(seq_s)),
+            ("scenarios_per_s", json::num(throughput(seq_s))),
+        ])),
+        ("batch", Value::Array(rows.iter()
+            .map(|(workers, secs, speedup)| json::obj(vec![
+                ("workers", json::num(*workers as f64)),
+                ("seconds", json::num(*secs)),
+                ("scenarios_per_s", json::num(throughput(*secs))),
+                ("speedup_vs_sequential", json::num(*speedup)),
+            ]))
+            .collect())),
+    ])
+}
+
+/// Update BENCH_sweep.json in place: parse the checked-in document and
+/// overwrite only its `results` value, preserving the methodology /
+/// expected-shape documentation and any other keys. Falls back to a
+/// minimal document when the target is missing or unparseable.
+fn to_json(grid: &[Scenario], steps: u64, n_seeds: usize, seq_s: f64,
+           rows: &[(usize, f64, f64)], path: &str) -> String {
+    let results = results_value(grid, steps, n_seeds, seq_s, rows);
+    let doc = match std::fs::read_to_string(path).ok()
+        .and_then(|text| Value::parse(&text).ok())
+    {
+        Some(Value::Object(mut fields)) => {
+            match fields.iter_mut()
+                .find(|(key, _)| key.as_str() == "results")
+            {
+                Some((_, value)) => *value = results,
+                None => fields.push(("results".to_string(), results)),
+            }
+            Value::Object(fields)
+        }
+        _ => json::obj(vec![
+            ("bench", json::s("sweep_scaling")),
+            ("results", results),
+        ]),
+    };
+    let mut text = doc.to_string_pretty();
+    text.push('\n');
+    text
+}

@@ -79,27 +79,130 @@ pub fn normalize_to_capacity(out: &mut [f64], capacity: f64) {
     }
 }
 
-/// Construct every policy this crate ships, for comparison harnesses.
-pub fn all_policies() -> Vec<Box<dyn AllocationPolicy>> {
-    vec![
-        Box::new(StaticEqualPolicy),
-        Box::new(RoundRobinPolicy::default()),
-        Box::new(AdaptivePolicy::default()),
-        Box::new(PredictivePolicy::default()),
-        Box::new(FeedbackPolicy::default()),
-    ]
+/// The five built-in policies as a statically-dispatched enum.
+///
+/// The `dyn AllocationPolicy` object path stays available for external
+/// policies, but everything in-crate (the batch sweep engine, the repro
+/// drivers) goes through `PolicyKind`: the per-step `allocate()` call in
+/// the simulation loop becomes a direct (inlinable) match instead of a
+/// virtual call, and a policy is `Clone`-able into worker threads without
+/// boxing.
+#[derive(Debug, Clone)]
+pub enum PolicyKind {
+    /// [`StaticEqualPolicy`].
+    StaticEqual(StaticEqualPolicy),
+    /// [`RoundRobinPolicy`].
+    RoundRobin(RoundRobinPolicy),
+    /// [`AdaptivePolicy`] — the paper's Algorithm 1.
+    Adaptive(AdaptivePolicy),
+    /// [`PredictivePolicy`].
+    Predictive(PredictivePolicy),
+    /// [`FeedbackPolicy`].
+    Feedback(FeedbackPolicy),
 }
 
-/// Construct a policy by its CLI/report name.
-pub fn policy_by_name(name: &str) -> Option<Box<dyn AllocationPolicy>> {
-    match name {
-        "static" | "static_equal" => Some(Box::new(StaticEqualPolicy)),
-        "round_robin" | "rr" => Some(Box::new(RoundRobinPolicy::default())),
-        "adaptive" => Some(Box::new(AdaptivePolicy::default())),
-        "predictive" => Some(Box::new(PredictivePolicy::default())),
-        "feedback" => Some(Box::new(FeedbackPolicy::default())),
-        _ => None,
+impl PolicyKind {
+    /// Fresh static-equal baseline.
+    pub fn static_equal() -> PolicyKind {
+        PolicyKind::StaticEqual(StaticEqualPolicy)
     }
+
+    /// Fresh round-robin baseline.
+    pub fn round_robin() -> PolicyKind {
+        PolicyKind::RoundRobin(RoundRobinPolicy::default())
+    }
+
+    /// Fresh Algorithm 1 instance.
+    pub fn adaptive() -> PolicyKind {
+        PolicyKind::Adaptive(AdaptivePolicy::default())
+    }
+
+    /// Fresh EMA-predictive extension.
+    pub fn predictive() -> PolicyKind {
+        PolicyKind::Predictive(PredictivePolicy::default())
+    }
+
+    /// Fresh queue-feedback extension.
+    pub fn feedback() -> PolicyKind {
+        PolicyKind::Feedback(FeedbackPolicy::default())
+    }
+
+    /// Every built-in policy, in the same order as [`all_policies`].
+    pub fn all() -> Vec<PolicyKind> {
+        vec![
+            PolicyKind::static_equal(),
+            PolicyKind::round_robin(),
+            PolicyKind::adaptive(),
+            PolicyKind::predictive(),
+            PolicyKind::feedback(),
+        ]
+    }
+
+    /// Resolve a CLI/report name (same aliases as [`policy_by_name`]).
+    pub fn by_name(name: &str) -> Option<PolicyKind> {
+        match name {
+            "static" | "static_equal" => Some(PolicyKind::static_equal()),
+            "round_robin" | "rr" => Some(PolicyKind::round_robin()),
+            "adaptive" => Some(PolicyKind::adaptive()),
+            "predictive" => Some(PolicyKind::predictive()),
+            "feedback" => Some(PolicyKind::feedback()),
+            _ => None,
+        }
+    }
+
+    /// Stable identifier (inherent so callers need no trait import).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::StaticEqual(p) => p.name(),
+            PolicyKind::RoundRobin(p) => p.name(),
+            PolicyKind::Adaptive(p) => p.name(),
+            PolicyKind::Predictive(p) => p.name(),
+            PolicyKind::Feedback(p) => p.name(),
+        }
+    }
+}
+
+impl AllocationPolicy for PolicyKind {
+    fn name(&self) -> &'static str {
+        PolicyKind::name(self)
+    }
+
+    fn allocate(&mut self, ctx: &AllocContext<'_>, out: &mut [f64]) {
+        match self {
+            PolicyKind::StaticEqual(p) => p.allocate(ctx, out),
+            PolicyKind::RoundRobin(p) => p.allocate(ctx, out),
+            PolicyKind::Adaptive(p) => p.allocate(ctx, out),
+            PolicyKind::Predictive(p) => p.allocate(ctx, out),
+            PolicyKind::Feedback(p) => p.allocate(ctx, out),
+        }
+    }
+
+    fn reset(&mut self) {
+        match self {
+            PolicyKind::StaticEqual(p) => p.reset(),
+            PolicyKind::RoundRobin(p) => p.reset(),
+            PolicyKind::Adaptive(p) => p.reset(),
+            PolicyKind::Predictive(p) => p.reset(),
+            PolicyKind::Feedback(p) => p.reset(),
+        }
+    }
+}
+
+/// Construct every policy this crate ships, for comparison harnesses.
+///
+/// Delegates to [`PolicyKind::all`] so the policy list is maintained in
+/// exactly one place; the boxes dispatch through the enum.
+pub fn all_policies() -> Vec<Box<dyn AllocationPolicy>> {
+    PolicyKind::all().into_iter()
+        .map(|kind| Box::new(kind) as Box<dyn AllocationPolicy>)
+        .collect()
+}
+
+/// Construct a policy by its CLI/report name (aliases in
+/// [`PolicyKind::by_name`]).
+pub fn policy_by_name(name: &str) -> Option<Box<dyn AllocationPolicy>> {
+    PolicyKind::by_name(name)
+        .map(|kind| Box::new(kind) as Box<dyn AllocationPolicy>)
 }
 
 #[cfg(test)]
@@ -140,5 +243,61 @@ mod tests {
         names.sort_unstable();
         names.dedup();
         assert_eq!(names.len(), ps.len());
+    }
+
+    #[test]
+    fn policy_kind_mirrors_dyn_registry() {
+        // Same count, same names, same order, same alias resolution.
+        let kinds = PolicyKind::all();
+        let boxed = all_policies();
+        assert_eq!(kinds.len(), boxed.len());
+        for (k, b) in kinds.iter().zip(&boxed) {
+            assert_eq!(k.name(), b.name());
+        }
+        for n in ["static", "static_equal", "rr", "round_robin", "adaptive",
+                  "predictive", "feedback"] {
+            assert_eq!(PolicyKind::by_name(n).is_some(),
+                       policy_by_name(n).is_some(), "{n}");
+        }
+        assert!(PolicyKind::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn policy_kind_allocates_like_inner_policy() {
+        let reg = AgentRegistry::paper();
+        let rates = [80.0, 40.0, 45.0, 25.0];
+        let queues = [0.0; 4];
+        for (mut kind, mut boxed) in
+            PolicyKind::all().into_iter().zip(all_policies())
+        {
+            let mut via_kind = vec![0.0; 4];
+            let mut via_dyn = vec![0.0; 4];
+            for step in 0..6 {
+                let ctx = AllocContext {
+                    registry: &reg,
+                    arrival_rates: &rates,
+                    queue_depths: &queues,
+                    step,
+                    capacity: 1.0,
+                };
+                kind.allocate(&ctx, &mut via_kind);
+                boxed.allocate(&ctx, &mut via_dyn);
+                assert_eq!(via_kind, via_dyn, "{} step {step}",
+                           kind.name());
+            }
+            // reset() must restart stateful policies identically.
+            kind.reset();
+            boxed.reset();
+            let ctx = AllocContext {
+                registry: &reg,
+                arrival_rates: &rates,
+                queue_depths: &queues,
+                step: 0,
+                capacity: 1.0,
+            };
+            kind.allocate(&ctx, &mut via_kind);
+            boxed.allocate(&ctx, &mut via_dyn);
+            assert_eq!(via_kind, via_dyn, "{} after reset", kind.name());
+        }
     }
 }

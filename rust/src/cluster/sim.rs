@@ -1,7 +1,7 @@
 //! Cluster-level discrete-time simulation (multi-GPU §VI extension).
 
 use crate::agents::AgentRegistry;
-use crate::cluster::{first_fit_decreasing, ClusterAllocator};
+use crate::cluster::{first_fit_decreasing, ClusterAllocator, Placement};
 use crate::error::Result;
 use crate::metrics::Streaming;
 use crate::serverless::BillingMeter;
@@ -74,28 +74,34 @@ pub struct ClusterSimulator {
     n_gpus: usize,
     capacity_per_gpu: f64,
     migration: Option<MigrationModel>,
+    placement: Placement,
 }
 
 impl ClusterSimulator {
-    /// Build; errors if the agents cannot be placed.
+    /// Build; errors if the agents cannot be placed. The validated
+    /// placement is stored, so every `run()` starts from it directly
+    /// instead of re-solving the bin-packing.
     pub fn new(cfg: SimConfig, registry: AgentRegistry, n_gpus: usize,
                capacity_per_gpu: f64, migration: Option<MigrationModel>)
                -> Result<ClusterSimulator> {
-        // Validate placement feasibility up front.
-        first_fit_decreasing(&registry, n_gpus, capacity_per_gpu)?;
+        let placement =
+            first_fit_decreasing(&registry, n_gpus, capacity_per_gpu)?;
         Ok(ClusterSimulator {
-            cfg, registry, n_gpus, capacity_per_gpu, migration,
+            cfg, registry, n_gpus, capacity_per_gpu, migration, placement,
         })
+    }
+
+    /// The initial (construction-time) agent→GPU placement.
+    pub fn placement(&self) -> &Placement {
+        &self.placement
     }
 
     /// Run the hierarchical allocator over the configured workload.
     pub fn run(&self) -> Result<ClusterResult> {
         let n = self.registry.len();
         let cfg = &self.cfg;
-        let placement = first_fit_decreasing(
-            &self.registry, self.n_gpus, self.capacity_per_gpu)?;
         let mut allocator =
-            ClusterAllocator::new(&self.registry, placement);
+            ClusterAllocator::new(&self.registry, self.placement.clone());
         let mut workload = WorkloadGenerator::new(
             cfg.arrival_rates.clone(), cfg.workload_kind.clone(),
             cfg.arrival_process, cfg.seed);
@@ -278,6 +284,19 @@ mod tests {
         assert!(r.migration_stall_s > 0.0);
         // System keeps serving everyone.
         assert!(r.agent_throughputs.iter().all(|t| *t > 0.0));
+    }
+
+    #[test]
+    fn stored_placement_matches_ffd_and_runs_are_repeatable() {
+        let sim = paper_cluster(2, 1.0);
+        let expected = first_fit_decreasing(
+            &AgentRegistry::paper(), 2, 1.0).unwrap();
+        assert_eq!(sim.placement(), &expected);
+        // run() starts from the stored placement every time.
+        let a = sim.run().unwrap();
+        let b = sim.run().unwrap();
+        assert_eq!(a.agent_latencies, b.agent_latencies);
+        assert_eq!(a.migrations, b.migrations);
     }
 
     #[test]

@@ -1,8 +1,9 @@
 //! Table I/II and Fig 2 drivers.
 
 use crate::agents::AgentProfile;
-use crate::allocator::{AdaptivePolicy, RoundRobinPolicy, StaticEqualPolicy};
+use crate::allocator::{AdaptivePolicy, PolicyKind};
 use crate::metrics::TimeSeries;
+use crate::sim::batch::{default_workers, run_batch, Scenario};
 use crate::sim::{SimConfig, SimResult, Simulator, SummaryRow};
 
 /// One per-agent series for a policy (Fig 2(a)/(b) bars).
@@ -27,15 +28,22 @@ pub struct CostPerfPoint {
     pub cost_dollars: f64,
 }
 
-/// Run the paper's three §IV policies over the §IV workload.
+/// Run the paper's three §IV policies over the §IV workload (batched
+/// across workers; per-policy results are bit-identical to sequential
+/// runs — the `sim_properties` suite asserts this).
 pub fn run_paper_policies() -> Vec<SimResult> {
-    let sim = Simulator::new(SimConfig::paper(),
-                             AgentProfile::paper_agents());
-    vec![
-        sim.run(&mut StaticEqualPolicy),
-        sim.run(&mut RoundRobinPolicy::default()),
-        sim.run(&mut AdaptivePolicy::default()),
+    let scenarios: Vec<Scenario> = [
+        PolicyKind::static_equal(),
+        PolicyKind::round_robin(),
+        PolicyKind::adaptive(),
     ]
+    .into_iter()
+    .map(|p| Scenario::paper(p.name(), p))
+    .collect();
+    run_batch(&scenarios, default_workers())
+        .into_iter()
+        .map(|b| b.result)
+        .collect()
 }
 
 /// Table I: agent characteristics (from the profiles, for the CSV).

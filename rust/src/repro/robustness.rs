@@ -3,7 +3,9 @@
 use std::time::Instant;
 
 use crate::agents::{AgentProfile, AgentRegistry, Priority};
-use crate::allocator::{AdaptivePolicy, AllocContext, AllocationPolicy};
+use crate::allocator::{AdaptivePolicy, AllocContext, AllocationPolicy,
+                       PolicyKind};
+use crate::sim::batch::{run_batch, Scenario};
 use crate::sim::{SimConfig, Simulator};
 use crate::workload::{ArrivalProcess, WorkloadKind};
 
@@ -32,14 +34,16 @@ pub struct OverloadReport {
 /// (every agent keeps processing — min throughput stays at its 1× level,
 /// because Algorithm 1's allocation is scale-invariant in λ).
 pub fn overload_experiment(factor: f64) -> OverloadReport {
-    let base_cfg = SimConfig::paper();
-    let sim = Simulator::new(base_cfg, AgentProfile::paper_agents());
-    let baseline = sim.run(&mut AdaptivePolicy::default());
-
     let mut over_cfg = SimConfig::paper();
     over_cfg.workload_kind = WorkloadKind::Scaled { factor };
-    let sim = Simulator::new(over_cfg, AgentProfile::paper_agents());
-    let overload = sim.run(&mut AdaptivePolicy::default());
+    let scenarios = [
+        Scenario::paper("baseline_1x", PolicyKind::adaptive()),
+        Scenario::new(format!("overload_{factor}x"), over_cfg,
+                      AgentRegistry::paper(), PolicyKind::adaptive()),
+    ];
+    let mut runs = run_batch(&scenarios, 2);
+    let overload = runs.pop().expect("two scenarios ran").result;
+    let baseline = runs.pop().expect("two scenarios ran").result;
 
     let min_tput = |r: &crate::sim::SimResult| {
         r.agent_throughputs().into_iter().fold(f64::MAX, f64::min)
@@ -142,6 +146,49 @@ pub fn dominance_experiment(share: f64) -> DominanceReport {
         .collect();
     let dominant_gpu_share = agents[0].2;
     DominanceReport { agents, dominant_gpu_share }
+}
+
+/// The shape axis of the §V.B stress grid: name, schedule, process.
+pub fn stress_shapes(steps: u64)
+                     -> Vec<(&'static str, WorkloadKind, ArrivalProcess)> {
+    vec![
+        ("steady", WorkloadKind::Steady, ArrivalProcess::Deterministic),
+        ("overload3x", WorkloadKind::Scaled { factor: 3.0 },
+         ArrivalProcess::Deterministic),
+        ("spike10x", WorkloadKind::Spike {
+            agent: 0, factor: 10.0,
+            start: steps * 2 / 5, end: steps * 3 / 5,
+        }, ArrivalProcess::Deterministic),
+        ("poisson", WorkloadKind::Steady, ArrivalProcess::Poisson),
+    ]
+}
+
+/// The full §V.B robustness grid as batch scenarios: every built-in
+/// policy × every stress shape × every seed, over the paper deployment,
+/// labelled `"<policy>/<shape>/seed<seed>"`.
+///
+/// `stress_grid(100, &[42])` is the grid the `robustness` bench ablates;
+/// the `sweep_scaling` bench scales `steps` and `seeds` up to measure
+/// batch-engine throughput.
+pub fn stress_grid(steps: u64, seeds: &[u64]) -> Vec<Scenario> {
+    let shapes = stress_shapes(steps);
+    let mut grid =
+        Vec::with_capacity(5 * shapes.len() * seeds.len());
+    for policy in PolicyKind::all() {
+        for (shape, kind, process) in &shapes {
+            for &seed in seeds {
+                let mut cfg = SimConfig::paper();
+                cfg.steps = steps;
+                cfg.workload_kind = kind.clone();
+                cfg.arrival_process = *process;
+                cfg.seed = seed;
+                grid.push(Scenario::new(
+                    format!("{}/{shape}/seed{seed}", policy.name()),
+                    cfg, AgentRegistry::paper(), policy.clone()));
+            }
+        }
+    }
+    grid
 }
 
 /// One point of the allocator O(N) scaling sweep.
@@ -257,6 +304,23 @@ mod tests {
         let small = pts[0].ns_per_call.max(1.0);
         let big = pts[2].ns_per_call;
         assert!(big / small < 2000.0, "ratio {}", big / small);
+    }
+
+    #[test]
+    fn stress_grid_covers_every_policy_shape_seed_cell() {
+        let grid = stress_grid(50, &[1, 2]);
+        // 5 policies × 4 shapes × 2 seeds.
+        assert_eq!(grid.len(), 40);
+        let mut labels: Vec<&str> =
+            grid.iter().map(|s| s.label.as_str()).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), 40, "labels must be unique");
+        assert!(grid.iter()
+                .any(|s| s.label == "adaptive/overload3x/seed2"));
+        // Every cell runs the configured number of steps.
+        let runs = run_batch(&grid[..4], 2);
+        assert!(runs.iter().all(|r| r.result.steps == 50));
     }
 
     #[test]

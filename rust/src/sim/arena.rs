@@ -1,0 +1,99 @@
+//! Reusable per-run simulation buffers.
+//!
+//! One [`SimArena`] owns every dense buffer the simulation loop touches:
+//! queue depths, arrival rates/counts, observed rates, the allocation
+//! vector, the per-step latency/throughput rows, and the model-size cache
+//! for the serverless lifecycle. A single run's hot path was already
+//! allocation-free; the arena extends that to the buffer *set* across
+//! runs — a sweep worker constructs one arena and replays thousands of
+//! scenarios through [`Simulator::run_with_arena`] without re-allocating
+//! these buffers (they are `clear()`-ed and re-zeroed, capacity is
+//! retained). Per-run output state (the `AgentStats` vector and the
+//! workload generator) is still constructed per run, since it is moved
+//! into the returned [`SimResult`].
+//!
+//! [`SimResult`]: crate::sim::SimResult
+//!
+//! [`Simulator::run_with_arena`]: crate::sim::Simulator::run_with_arena
+
+/// Dense per-step buffers reused across simulation runs.
+#[derive(Debug, Clone, Default)]
+pub struct SimArena {
+    pub(crate) queues: Vec<f64>,
+    pub(crate) rates: Vec<f64>,
+    pub(crate) counts: Vec<f64>,
+    pub(crate) observed: Vec<f64>,
+    pub(crate) alloc: Vec<f64>,
+    pub(crate) lat_row: Vec<f64>,
+    pub(crate) tput_row: Vec<f64>,
+    pub(crate) model_mb: Vec<u32>,
+}
+
+impl SimArena {
+    /// Empty arena; buffers grow on first use and are retained after.
+    pub fn new() -> Self {
+        SimArena::default()
+    }
+
+    /// Arena pre-sized for `n` agents, so even the first run allocates
+    /// nothing inside the engine.
+    pub fn with_agents(n: usize) -> Self {
+        SimArena {
+            queues: Vec::with_capacity(n),
+            rates: Vec::with_capacity(n),
+            counts: Vec::with_capacity(n),
+            observed: Vec::with_capacity(n),
+            alloc: Vec::with_capacity(n),
+            lat_row: Vec::with_capacity(n),
+            tput_row: Vec::with_capacity(n),
+            model_mb: Vec::with_capacity(n),
+        }
+    }
+
+    /// Size every f64 buffer to `n` agents and zero it. Keeps capacity, so
+    /// repeated runs over same-sized registries never reallocate.
+    pub(crate) fn reset(&mut self, n: usize) {
+        for buf in [
+            &mut self.queues,
+            &mut self.rates,
+            &mut self.counts,
+            &mut self.observed,
+            &mut self.alloc,
+            &mut self.lat_row,
+            &mut self.tput_row,
+        ] {
+            buf.clear();
+            buf.resize(n, 0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reset_zeroes_and_sizes() {
+        let mut a = SimArena::new();
+        a.reset(3);
+        assert_eq!(a.queues, vec![0.0; 3]);
+        a.queues[1] = 7.0;
+        a.reset(3);
+        assert_eq!(a.queues, vec![0.0; 3]);
+        // Shrinking and growing both land on the requested size.
+        a.reset(1);
+        assert_eq!(a.alloc.len(), 1);
+        a.reset(5);
+        assert_eq!(a.lat_row, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn reset_retains_capacity() {
+        let mut a = SimArena::with_agents(8);
+        a.reset(8);
+        let cap = a.queues.capacity();
+        a.reset(4);
+        a.reset(8);
+        assert!(a.queues.capacity() >= cap);
+    }
+}

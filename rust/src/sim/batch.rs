@@ -1,0 +1,191 @@
+//! Multi-threaded scenario-sweep engine.
+//!
+//! A [`Scenario`] is one (config × registry × policy) cell of an
+//! evaluation grid; [`run_batch`] fans a slice of them across
+//! `std::thread::scope` workers. Each worker owns one [`SimArena`] (the
+//! per-step buffer set is reused across its runs instead of re-allocated)
+//! and pulls work from a shared atomic cursor, so load imbalance between
+//! cheap and expensive scenarios self-corrects. Policies are
+//! [`PolicyKind`], statically dispatched in the step loop.
+//!
+//! Results come back in scenario order regardless of worker count, and
+//! every run is bit-identical to a sequential [`Simulator::run`] of the
+//! same cell (each scenario owns its seed and a fresh policy clone; the
+//! property suite asserts this for every policy and arrival process).
+//!
+//! The Table II repro, the §V.C sweeps, the §V.B robustness grid, and the
+//! `sweep_scaling` bench all drive their grids through here.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::agents::{AgentProfile, AgentRegistry};
+use crate::allocator::PolicyKind;
+use crate::sim::{SimArena, SimConfig, SimResult, Simulator};
+
+/// One cell of a sweep grid: a labelled simulation to run.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Grid coordinates for reports (e.g. `"adaptive/overload3x/seed42"`).
+    pub label: String,
+    /// Policy evaluated in this cell (cloned fresh for the run).
+    pub policy: PolicyKind,
+    sim: Simulator,
+}
+
+impl Scenario {
+    /// Build from a validated registry. The simulator is constructed once
+    /// here, so running the scenario clones nothing but the policy.
+    pub fn new(label: impl Into<String>, cfg: SimConfig,
+               registry: AgentRegistry, policy: PolicyKind) -> Scenario {
+        Scenario {
+            label: label.into(),
+            policy,
+            sim: Simulator::with_registry(cfg, registry),
+        }
+    }
+
+    /// Build from raw profiles (panics on invalid profiles, like
+    /// [`Simulator::new`]).
+    pub fn from_profiles(label: impl Into<String>, cfg: SimConfig,
+                         agents: Vec<AgentProfile>, policy: PolicyKind)
+                         -> Scenario {
+        Scenario {
+            label: label.into(),
+            policy,
+            sim: Simulator::new(cfg, agents),
+        }
+    }
+
+    /// The paper's §IV deployment under `policy`.
+    pub fn paper(label: impl Into<String>, policy: PolicyKind) -> Scenario {
+        Scenario::new(label, SimConfig::paper(), AgentRegistry::paper(),
+                      policy)
+    }
+
+    /// The simulator this scenario runs (for sequential baselines).
+    pub fn simulator(&self) -> &Simulator {
+        &self.sim
+    }
+
+    /// Run this one scenario through a caller-owned arena.
+    pub fn run_with_arena(&self, arena: &mut SimArena) -> SimResult {
+        let mut policy = self.policy.clone();
+        self.sim.run_with_arena(&mut policy, arena)
+    }
+}
+
+/// One completed cell: the scenario's label plus its full result.
+#[derive(Debug, Clone)]
+pub struct BatchRun {
+    /// Label copied from the [`Scenario`].
+    pub label: String,
+    /// The simulation result for that cell.
+    pub result: SimResult,
+}
+
+/// Worker count matched to the machine (≥ 1).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run every scenario, fanned across `workers` OS threads.
+///
+/// `workers` is clamped to `[1, scenarios.len()]`. Results are returned
+/// in scenario order. Panics if a worker panics (a scenario itself
+/// panicking, e.g. on a mismatched config, propagates).
+pub fn run_batch(scenarios: &[Scenario], workers: usize) -> Vec<BatchRun> {
+    if scenarios.is_empty() {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, scenarios.len());
+    let next = AtomicUsize::new(0);
+
+    let mut indexed: Vec<(usize, SimResult)> =
+        Vec::with_capacity(scenarios.len());
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let next = &next;
+                scope.spawn(move || {
+                    let mut arena = SimArena::new();
+                    let mut done: Vec<(usize, SimResult)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        let Some(scenario) = scenarios.get(i) else {
+                            break;
+                        };
+                        done.push((i, scenario.run_with_arena(&mut arena)));
+                    }
+                    done
+                })
+            })
+            .collect();
+        for handle in handles {
+            indexed.extend(handle.join().expect("batch worker panicked"));
+        }
+    });
+
+    indexed.sort_by_key(|(i, _)| *i);
+    indexed.into_iter()
+        .map(|(i, result)| BatchRun {
+            label: scenarios[i].label.clone(),
+            result,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_grid() -> Vec<Scenario> {
+        PolicyKind::all().into_iter()
+            .map(|p| Scenario::paper(p.name(), p))
+            .collect()
+    }
+
+    #[test]
+    fn empty_batch_returns_nothing() {
+        assert!(run_batch(&[], 4).is_empty());
+    }
+
+    #[test]
+    fn results_come_back_in_scenario_order() {
+        let grid = paper_grid();
+        for workers in [1usize, 2, 7, 64] {
+            let runs = run_batch(&grid, workers);
+            assert_eq!(runs.len(), grid.len());
+            for (run, sc) in runs.iter().zip(&grid) {
+                assert_eq!(run.label, sc.label);
+                assert_eq!(run.result.policy, sc.policy.name());
+            }
+        }
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let grid = paper_grid();
+        let one = run_batch(&grid, 1);
+        let many = run_batch(&grid, 8);
+        for (a, b) in one.iter().zip(&many) {
+            assert_eq!(a.result.mean_latency(), b.result.mean_latency(),
+                       "{}", a.label);
+            assert_eq!(a.result.total_throughput(),
+                       b.result.total_throughput());
+            assert_eq!(a.result.cost_dollars, b.result.cost_dollars);
+        }
+    }
+
+    #[test]
+    fn batch_matches_direct_simulator_run() {
+        let grid = paper_grid();
+        let runs = run_batch(&grid, default_workers());
+        for (run, sc) in runs.iter().zip(&grid) {
+            let mut policy = sc.policy.clone();
+            let direct = sc.simulator().run(&mut policy);
+            assert_eq!(run.result.mean_latency(), direct.mean_latency(),
+                       "{}", run.label);
+            assert_eq!(run.result.cost_dollars, direct.cost_dollars);
+        }
+    }
+}

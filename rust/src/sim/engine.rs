@@ -1,10 +1,11 @@
 //! The simulation loop (§IV.B methodology).
 
 use crate::agents::{AgentProfile, AgentRegistry};
-use crate::allocator::{AllocContext, AllocationPolicy};
+use crate::allocator::AllocationPolicy;
+use crate::allocator::AllocContext;
 use crate::metrics::TimeSeries;
 use crate::serverless::{Autoscaler, BillingMeter, ColdStartModel};
-use crate::sim::{AgentStats, SimConfig, SimResult, Timelines};
+use crate::sim::{AgentStats, SimArena, SimConfig, SimResult, Timelines};
 use crate::util::Rng;
 use crate::workload::WorkloadGenerator;
 
@@ -35,47 +36,87 @@ impl Simulator {
         &self.registry
     }
 
+    /// The configuration simulated under.
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+
     /// Run one policy over the configured workload.
     ///
     /// The policy is `reset()` first so instances can be reused across
-    /// runs. The per-step hot path performs no heap allocation.
-    pub fn run(&self, policy: &mut dyn AllocationPolicy) -> SimResult {
+    /// runs. The per-step hot path performs no heap allocation. Generic
+    /// over the policy type: concrete policies (and [`PolicyKind`]) are
+    /// statically dispatched; `&mut dyn AllocationPolicy` still works for
+    /// external policies.
+    ///
+    /// [`PolicyKind`]: crate::allocator::PolicyKind
+    pub fn run<P>(&self, policy: &mut P) -> SimResult
+    where
+        P: AllocationPolicy + ?Sized,
+    {
+        self.run_with_arena(policy, &mut SimArena::new())
+    }
+
+    /// [`Simulator::run`], but with caller-owned buffers: repeated runs
+    /// (sweeps, batch workers) reuse the arena instead of re-allocating
+    /// the per-step buffer set on every run.
+    pub fn run_with_arena<P>(&self, policy: &mut P, arena: &mut SimArena)
+                             -> SimResult
+    where
+        P: AllocationPolicy + ?Sized,
+    {
         let mut workload = WorkloadGenerator::new(
             self.cfg.arrival_rates.clone(), self.cfg.workload_kind.clone(),
             self.cfg.arrival_process, self.cfg.seed);
-        self.run_inner(policy, &mut |step, dt, rates, counts| {
+        self.run_inner(policy, |step, dt, rates, counts| {
             workload.step(step, dt, rates, counts);
-        }, self.cfg.steps)
+        }, self.cfg.steps, self.cfg.dt, arena)
     }
 
     /// Run one policy over a recorded arrival [`Trace`] instead of the
     /// configured generator — bit-exact replay of a production (or
     /// previously recorded) workload. The trace's `dt` and length
     /// override the config's.
-    pub fn run_trace(&self, policy: &mut dyn AllocationPolicy,
-                     trace: &crate::workload::trace::Trace) -> SimResult {
+    ///
+    /// [`Trace`]: crate::workload::trace::Trace
+    pub fn run_trace<P>(&self, policy: &mut P,
+                        trace: &crate::workload::trace::Trace) -> SimResult
+    where
+        P: AllocationPolicy + ?Sized,
+    {
+        self.run_trace_with_arena(policy, trace, &mut SimArena::new())
+    }
+
+    /// [`Simulator::run_trace`] with caller-owned buffers.
+    pub fn run_trace_with_arena<P>(
+        &self, policy: &mut P, trace: &crate::workload::trace::Trace,
+        arena: &mut SimArena) -> SimResult
+    where
+        P: AllocationPolicy + ?Sized,
+    {
         assert_eq!(trace.agents.len(), self.registry.len(),
                    "trace agent count must match registry");
-        let dt = trace.dt;
         let counts_by_step = &trace.counts;
-        let mut cfg_dt_guard = self.clone();
-        cfg_dt_guard.cfg.dt = dt;
-        cfg_dt_guard.run_inner(policy, &mut |step, dt_s, rates, counts| {
+        self.run_inner(policy, |step, dt_s, rates, counts| {
             let row = &counts_by_step[step as usize];
             counts.copy_from_slice(row);
             for (r, c) in rates.iter_mut().zip(row) {
                 *r = c / dt_s;
             }
-        }, trace.counts.len() as u64)
+        }, trace.counts.len() as u64, trace.dt, arena)
     }
 
-    fn run_inner(&self, policy: &mut dyn AllocationPolicy,
-                 next_arrivals: &mut dyn FnMut(u64, f64, &mut [f64],
-                                               &mut [f64]),
-                 steps: u64) -> SimResult {
+    fn run_inner<P, F>(&self, policy: &mut P, mut next_arrivals: F,
+                       steps: u64, dt: f64, arena: &mut SimArena)
+                       -> SimResult
+    where
+        P: AllocationPolicy + ?Sized,
+        F: FnMut(u64, f64, &mut [f64], &mut [f64]),
+    {
         let n = self.registry.len();
         let cfg = &self.cfg;
         policy.reset();
+        arena.reset(n);
 
         let mut stats: Vec<AgentStats> = self.registry.profiles().iter()
             .map(|p| AgentStats::new(p.name.clone()))
@@ -91,19 +132,17 @@ impl Simulator {
             throughput: TimeSeries::new(names),
         });
 
-        // Dense per-step buffers — reused, zero allocation in the loop.
-        let mut queues = vec![0.0f64; n];
-        let mut rates = vec![0.0f64; n];
-        let mut counts = vec![0.0f64; n];
-        let mut observed = vec![0.0f64; n];
-        let mut alloc = vec![0.0f64; n];
-        let mut lat_row = vec![0.0f64; n];
-        let mut tput_row = vec![0.0f64; n];
+        // Dense per-step buffers — arena-owned, zero allocation in the
+        // loop and none on repeated runs either.
+        let SimArena {
+            queues, rates, counts, observed, alloc, lat_row, tput_row,
+            model_mb,
+        } = arena;
         let base_tput = self.registry.base_tput();
 
         // Optional serverless lifecycle: scale-to-zero + cold starts.
-        let model_mb: Vec<u32> = self.registry.profiles().iter()
-            .map(|p| p.model_mb).collect();
+        model_mb.clear();
+        model_mb.extend(self.registry.profiles().iter().map(|p| p.model_mb));
         let mut lifecycle = cfg.scale_to_zero_after_s.map(|timeout| {
             (Autoscaler::all_warm(n, ColdStartModel::default_platform(),
                                   timeout),
@@ -112,31 +151,31 @@ impl Simulator {
 
         for step in 0..steps {
             // 1. Arrivals join their agent's queue.
-            next_arrivals(step, cfg.dt, &mut rates, &mut counts);
+            next_arrivals(step, dt, &mut rates[..], &mut counts[..]);
             for i in 0..n {
                 queues[i] += counts[i];
                 stats[i].arrived_total += counts[i];
                 // Policies observe the realized arrival *rate* (rps).
-                observed[i] = counts[i] / cfg.dt;
+                observed[i] = counts[i] / dt;
             }
 
             // 2. The policy distributes GPU fractions.
             let ctx = AllocContext {
                 registry: &self.registry,
-                arrival_rates: &observed,
-                queue_depths: &queues,
+                arrival_rates: &observed[..],
+                queue_depths: &queues[..],
                 step,
                 capacity: cfg.capacity,
             };
-            policy.allocate(&ctx, &mut alloc);
+            policy.allocate(&ctx, &mut alloc[..]);
 
             // 2b. Serverless lifecycle: cold agents cannot process this
             //     step (their allocation is forfeited, not billed), and
             //     demand triggers warm-up with a model-size-dependent
             //     cold-start delay.
             if let Some((scaler, rng)) = lifecycle.as_mut() {
-                let now = step as f64 * cfg.dt;
-                scaler.step(now, cfg.dt, &queues, &model_mb, rng);
+                let now = step as f64 * dt;
+                scaler.step(now, dt, &queues[..], &model_mb[..], rng);
                 for i in 0..n {
                     if !scaler.is_warm(i) {
                         alloc[i] = 0.0;
@@ -152,7 +191,7 @@ impl Simulator {
                 let g = alloc[i];
                 total_alloc += g;
                 let rate = base_tput[i] * g; // rps at this allocation
-                let cap = rate * cfg.dt;
+                let cap = rate * dt;
                 let processed = queues[i].min(cap);
                 queues[i] -= processed;
 
@@ -163,7 +202,7 @@ impl Simulator {
                 } else {
                     0.0
                 };
-                let tput = processed / cfg.dt;
+                let tput = processed / dt;
 
                 stats[i].latency.push(latency);
                 stats[i].throughput.push(tput);
@@ -178,13 +217,13 @@ impl Simulator {
             }
 
             // 4. Billing: pay for what was allocated this step.
-            billing.charge(total_alloc, cfg.dt);
+            billing.charge(total_alloc, dt);
 
             if let Some(tl) = timelines.as_mut() {
-                tl.allocation.push_row(&alloc);
-                tl.queue.push_row(&queues);
-                tl.latency.push_row(&lat_row);
-                tl.throughput.push_row(&tput_row);
+                tl.allocation.push_row(&alloc[..]);
+                tl.queue.push_row(&queues[..]);
+                tl.latency.push_row(&lat_row[..]);
+                tl.throughput.push_row(&tput_row[..]);
             }
         }
 
@@ -195,7 +234,7 @@ impl Simulator {
         SimResult {
             policy: policy.name().to_string(),
             steps,
-            dt: cfg.dt,
+            dt,
             per_agent: stats,
             cost_dollars: billing.total_cost(),
             gpu_seconds: billing.gpu_seconds(),
@@ -276,6 +315,44 @@ mod tests {
             assert!(r.conservation_error() < 1e-6,
                     "{}: {}", r.policy, r.conservation_error());
         }
+    }
+
+    #[test]
+    fn arena_reuse_is_bit_identical_to_fresh_buffers() {
+        // One arena shared across runs of different policies must leave
+        // no state behind: every reused run matches its fresh-buffer twin
+        // exactly.
+        let sim = paper_sim();
+        let mut arena = SimArena::new();
+        for _ in 0..3 {
+            for mut p in crate::allocator::all_policies() {
+                let reused = sim.run_with_arena(p.as_mut(), &mut arena);
+                let fresh = sim.run(p.as_mut());
+                assert_eq!(reused.mean_latency(), fresh.mean_latency(),
+                           "{}", reused.policy);
+                assert_eq!(reused.total_throughput(),
+                           fresh.total_throughput());
+                assert_eq!(reused.cost_dollars, fresh.cost_dollars);
+            }
+        }
+    }
+
+    #[test]
+    fn arena_adapts_to_registry_size_changes() {
+        // The same arena must serve simulators of different agent counts.
+        let mut arena = SimArena::with_agents(4);
+        let four = paper_sim()
+            .run_with_arena(&mut AdaptivePolicy::default(), &mut arena);
+        assert_eq!(four.per_agent.len(), 4);
+
+        let mut agents = AgentProfile::paper_agents();
+        agents.truncate(2);
+        let mut cfg = SimConfig::paper();
+        cfg.arrival_rates.truncate(2);
+        let two = Simulator::new(cfg, agents)
+            .run_with_arena(&mut AdaptivePolicy::default(), &mut arena);
+        assert_eq!(two.per_agent.len(), 2);
+        assert!(two.total_throughput() > 0.0);
     }
 
     #[test]

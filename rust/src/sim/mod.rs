@@ -8,9 +8,13 @@
 //! estimator reverse-engineered in DESIGN.md §1 that reproduces every
 //! Table II number to the reported decimal.
 
+mod arena;
+pub mod batch;
 mod engine;
 mod result;
 
+pub use arena::SimArena;
+pub use batch::{run_batch, BatchRun, Scenario};
 pub use engine::Simulator;
 pub use result::{AgentStats, SimResult, Timelines};
 

@@ -2,8 +2,10 @@
 //! (in-tree `util::check` harness; see DESIGN.md §2).
 
 use agentsrv::agents::{AgentProfile, AgentRegistry, Priority};
-use agentsrv::allocator::{all_policies, AllocContext};
+use agentsrv::allocator::{all_policies, policy_by_name, AllocContext,
+                          PolicyKind};
 use agentsrv::serverless::GpuPricing;
+use agentsrv::sim::batch::{run_batch, Scenario};
 use agentsrv::sim::{SimConfig, Simulator};
 use agentsrv::util::check::{forall, vec_uniform};
 use agentsrv::util::Rng;
@@ -203,6 +205,72 @@ fn prop_throughput_bounded_by_capacity_and_arrivals() {
         }
         Ok(())
     });
+}
+
+/// `sim::batch` must be a pure speedup: for every built-in policy and
+/// both arrival processes, at 1 and at 8 workers, each scenario's
+/// headline metrics are bit-identical (`==`, no tolerance) to a
+/// sequential `Simulator::run` of the same cell through the `dyn` path.
+#[test]
+fn prop_batch_is_bit_identical_to_sequential_run() {
+    for process in [ArrivalProcess::Deterministic, ArrivalProcess::Poisson] {
+        let mut scenarios = Vec::new();
+        let mut expected = Vec::new();
+        for kind in PolicyKind::all() {
+            let mut cfg = SimConfig::paper();
+            cfg.arrival_process = process;
+            let registry = AgentRegistry::paper();
+
+            let sequential = Simulator::with_registry(
+                cfg.clone(), registry.clone());
+            let mut reference = policy_by_name(kind.name())
+                .expect("built-in policy");
+            expected.push(sequential.run(reference.as_mut()));
+
+            scenarios.push(Scenario::new(kind.name(), cfg, registry,
+                                         kind));
+        }
+        for workers in [1usize, 8] {
+            let runs = run_batch(&scenarios, workers);
+            assert_eq!(runs.len(), expected.len());
+            for (got, want) in runs.iter().zip(&expected) {
+                assert_eq!(got.result.policy, want.policy);
+                assert!(
+                    got.result.mean_latency() == want.mean_latency()
+                        && got.result.total_throughput()
+                            == want.total_throughput()
+                        && got.result.cost_dollars == want.cost_dollars,
+                    "{} @ {workers} workers ({process:?}): batch \
+                     diverged from sequential (latency {} vs {}, tput \
+                     {} vs {}, cost {} vs {})",
+                    want.policy, got.result.mean_latency(),
+                    want.mean_latency(), got.result.total_throughput(),
+                    want.total_throughput(), got.result.cost_dollars,
+                    want.cost_dollars);
+            }
+        }
+    }
+}
+
+/// The same contract holds per-agent, not just in the aggregates.
+#[test]
+fn prop_batch_matches_sequential_per_agent() {
+    let scenarios: Vec<Scenario> = PolicyKind::all().into_iter()
+        .map(|p| Scenario::paper(p.name(), p))
+        .collect();
+    let runs = run_batch(&scenarios, 8);
+    for (run, sc) in runs.iter().zip(&scenarios) {
+        let mut policy = policy_by_name(sc.policy.name()).unwrap();
+        let want = sc.simulator().run(policy.as_mut());
+        for (a, b) in run.result.per_agent.iter().zip(&want.per_agent) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.latency.mean(), b.latency.mean(),
+                       "{}/{}", run.label, a.name);
+            assert_eq!(a.throughput.mean(), b.throughput.mean());
+            assert_eq!(a.processed_total, b.processed_total);
+            assert_eq!(a.final_queue, b.final_queue);
+        }
+    }
 }
 
 #[test]
