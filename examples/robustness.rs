@@ -1,12 +1,13 @@
 //! §V.B robustness & scalability: the four stress experiments, plus the
-//! full policy×shape stress grid swept through the batch engine.
+//! full mixed stress sweep — single-GPU policy×shape cells, the §VI
+//! cluster grid, and trace-replay cells — through one worker pool.
 //!
 //! ```sh
 //! cargo run --release --example robustness
 //! ```
 
 use agentsrv::repro;
-use agentsrv::sim::batch::{default_workers, run_batch};
+use agentsrv::sim::batch::{default_workers, run_sweep, SweepCell};
 
 fn main() {
     println!("== 3x demand overload (§V.B) ==");
@@ -46,15 +47,21 @@ fn main() {
                  if p.ns_per_call < 1e6 { "< 1 ms OK" } else { "SLOW" });
     }
 
-    // ---- Full stress grid through the batch sweep engine -------------
+    // ---- Full mixed stress sweep through the unified engine ----------
     let workers = default_workers();
-    println!("\n== stress grid: policy × shape × seed, {workers} \
-              worker(s) ==");
-    let grid = repro::stress_grid(100, &[42]);
+    let cells = repro::stress_sweep(100, &[42]);
+    let singles = cells.iter()
+        .filter(|c| matches!(c, SweepCell::Single(_))).count();
+    let clusters = cells.iter()
+        .filter(|c| matches!(c, SweepCell::Cluster(_))).count();
+    let traces = cells.iter()
+        .filter(|c| matches!(c, SweepCell::Trace(_))).count();
+    println!("\n== mixed stress sweep: {singles} single-GPU + {clusters} \
+              cluster + {traces} trace cells, {workers} worker(s) ==");
     let start = std::time::Instant::now();
-    let runs = run_batch(&grid, workers);
+    let runs = run_sweep(&cells, workers);
     let elapsed = start.elapsed();
-    println!("  {} scenarios in {:.1} ms ({:.0} scenarios/s)",
+    println!("  {} cells in {:.1} ms ({:.0} cells/s)",
              runs.len(), elapsed.as_secs_f64() * 1e3,
              runs.len() as f64 / elapsed.as_secs_f64().max(1e-9));
     let best = runs.iter()
@@ -65,8 +72,13 @@ fn main() {
         .max_by(|a, b| a.result.mean_latency()
                 .total_cmp(&b.result.mean_latency()))
         .expect("nonempty grid");
-    println!("  best  cell: {:<28} {:>8.1} s", best.label,
+    println!("  best  cell: {:<30} {:>8.1} s", best.label,
              best.result.mean_latency());
-    println!("  worst cell: {:<28} {:>8.1} s", worst.label,
+    println!("  worst cell: {:<30} {:>8.1} s", worst.label,
              worst.result.mean_latency());
+    let migrations: u64 = runs.iter()
+        .filter_map(|r| r.result.as_cluster())
+        .map(|c| c.migrations)
+        .sum();
+    println!("  cluster cells migrated {migrations} time(s) in total");
 }

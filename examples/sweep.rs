@@ -1,6 +1,6 @@
 //! Parameter sweeps: the practitioner guidance of §V.C, quantified.
 //!
-//! Three sweeps over the paper's deployment, all under the adaptive
+//! Four sweeps over the paper's deployment, all under the adaptive
 //! policy unless stated:
 //!
 //!   1. priority assignment — what happens to the reasoning specialist's
@@ -8,11 +8,14 @@
 //!   2. minimum-GPU floors — scaling all R_i shows the floor/starvation
 //!      trade-off;
 //!   3. policy × load — every policy across arrival-rate scales,
-//!      locating the round-robin crossover.
+//!      locating the round-robin crossover;
+//!   4. cluster & trace axes — the §VI multi-GPU grid and recorded-trace
+//!      replays, as heterogeneous cells through the same worker pool.
 //!
-//! Each sweep builds its grid of [`Scenario`]s and fans it across the
-//! batch engine's worker threads; results are identical to sequential
-//! runs (the property suite asserts bit-equality), just faster.
+//! Each sweep builds its grid of [`Scenario`]s (or mixed [`SweepCell`]s)
+//! and fans it across the batch engine's worker threads; results are
+//! identical to sequential runs (the property suite asserts
+//! bit-equality), just faster.
 //!
 //! ```sh
 //! cargo run --release --example sweep
@@ -22,7 +25,9 @@ use std::collections::HashMap;
 
 use agentsrv::agents::{AgentProfile, AgentRegistry, Priority};
 use agentsrv::allocator::PolicyKind;
-use agentsrv::sim::batch::{default_workers, run_batch, Scenario};
+use agentsrv::repro;
+use agentsrv::sim::batch::{default_workers, run_batch, run_sweep,
+                           Scenario};
 use agentsrv::sim::SimConfig;
 use agentsrv::workload::WorkloadKind;
 
@@ -32,6 +37,7 @@ fn main() {
     sweep_priority(workers);
     sweep_min_gpu(workers);
     sweep_policy_by_load(workers);
+    sweep_cluster_and_traces(workers);
 }
 
 /// Paper agents with one mutation applied, validated into a registry.
@@ -127,5 +133,26 @@ fn sweep_policy_by_load(workers: usize) {
         println!();
     }
     println!("(adaptive ≈ static at every load; round-robin pinned at \
-              the estimator cap once queues persist)");
+              the estimator cap once queues persist)\n");
+}
+
+fn sweep_cluster_and_traces(workers: usize) {
+    println!("== sweep 4: cluster & trace-replay cells, one worker pool ==");
+    let mut cells = repro::cluster_grid(100);
+    cells.extend(repro::trace_grid(100, &[42]));
+    println!("{:<30} {:>8} {:>12} {:>12} {:>9}", "cell", "kind",
+             "mean lat(s)", "tput(rps)", "cost($)");
+    for run in run_sweep(&cells, workers) {
+        let kind = if run.result.as_cluster().is_some() {
+            "cluster"
+        } else {
+            "trace"
+        };
+        println!("{:<30} {:>8} {:>12.1} {:>12.1} {:>9.3}", run.label, kind,
+                 run.result.mean_latency(), run.result.total_throughput(),
+                 run.result.cost_dollars());
+    }
+    println!("(the §VI placement/migration axes and recorded-trace \
+              replays share the batch workers with the single-GPU \
+              sweeps; §V.B/§VI)");
 }

@@ -1,33 +1,42 @@
-//! Bench: scenario-throughput of the batch sweep engine vs worker count.
+//! Bench: scenario-throughput of the unified sweep engine vs worker
+//! count, across all three cell kinds.
 //!
-//! Grid under test: the §V.B robustness grid (every built-in policy ×
-//! four stress shapes × a seed set) from `repro::stress_grid`, scaled to
-//! 2000 steps × 8 seeds (160 scenarios) so there is real work to divide.
-//! `--quick` shrinks it to 500 steps × 2 seeds for CI.
+//! Three grids under test:
 //!
-//! Three measurements, each the best of three repetitions:
+//!   * single-GPU — the §V.B robustness grid (every built-in policy ×
+//!     the stress shapes × a seed set) from `repro::stress_grid`, scaled
+//!     to 2000 steps × 8 seeds so there is real work to divide;
+//!   * cluster — `repro::cluster_grid`: the §VI multi-GPU axes (GPU
+//!     count × per-GPU capacity × migration model, plus skewed-workload
+//!     migration cells);
+//!   * corpus — `repro::trace_grid`: recorded Poisson traces (one per
+//!     seed) replayed under every policy.
 //!
-//!   1. sequential baseline — the pre-batch path: per scenario, a fresh
-//!      buffer set (`Simulator::run`) driven through a boxed
-//!      `dyn AllocationPolicy` (virtual dispatch in the step loop);
-//!   2. batch engine at 1 worker — same thread count as the baseline,
-//!      isolating the arena-reuse + static-dispatch win;
-//!   3. batch engine at 2/4/8 workers — the parallel scaling curve.
+//! `--quick` shrinks everything to 500 steps × 2 seeds for CI.
+//!
+//! Per grid, each measurement is the best of three repetitions:
+//!
+//!   1. sequential baseline — the pre-batch path: per cell, fresh
+//!      buffers (`run` / `ClusterSimulator::run` / `run_trace`), the
+//!      single-GPU one driven through a boxed `dyn AllocationPolicy`;
+//!   2. the engine at 1 worker — isolating the arena-reuse win;
+//!   3. the engine at 2/4/8 workers — the parallel scaling curve.
 //!
 //! Before timing, every worker count is checked to produce bit-identical
-//! per-scenario results (mean latency, total throughput, cost) to the
-//! sequential baseline — the same contract the `sim_properties` suite
-//! asserts.
+//! per-cell results to its sequential baseline — the same contract the
+//! `sim_properties` suite asserts for every cell kind.
 //!
 //! Run: `cargo bench --bench sweep_scaling [-- --quick] [-- --json FILE]`
-//! With `--json`, the measured table is also written as JSON (the format
-//! documented in BENCH_sweep.json).
+//! With `--json`, the measured tables are also written as JSON (the
+//! format documented in BENCH_sweep.json, `results` key: the single-GPU
+//! table plus `cluster` and `corpus` sections).
 
 use std::time::{Duration, Instant};
 
-use agentsrv::allocator::policy_by_name;
+use agentsrv::allocator::{policy_by_name, PolicyKind};
 use agentsrv::repro;
-use agentsrv::sim::batch::{run_batch, BatchRun, Scenario};
+use agentsrv::sim::batch::{run_batch, run_sweep, BatchRun, CellResult,
+                           Scenario, SweepCell, SweepRun};
 use agentsrv::util::json::{self, Value};
 
 fn main() {
@@ -55,7 +64,7 @@ fn main() {
     }
     println!("bit-identical to sequential at 1/2/4/8 workers: OK\n");
 
-    // ---- Throughput table --------------------------------------------
+    // ---- Single-GPU throughput table ---------------------------------
     println!("{:<26} {:>10} {:>16} {:>9}", "config", "time",
              "scenarios/s", "speedup");
     let seq = best_of(reps, || {
@@ -84,10 +93,28 @@ fn main() {
               (target >= 3x) — {}",
              if speedup_at_8 >= 3.0 { "PASS" } else { "BELOW TARGET" });
 
+    // ---- Cluster grid through the same pool --------------------------
+    let cluster_cells = repro::cluster_grid(steps);
+    let (cluster_seq_s, cluster_rows) = sweep_section(
+        "cluster grid", &cluster_cells, steps, reps, sequential_cluster);
+
+    // ---- Trace-corpus replay through the same pool -------------------
+    let corpus_cells = repro::trace_grid(steps, &seeds);
+    let (corpus_seq_s, corpus_rows) = sweep_section(
+        "trace corpus", &corpus_cells, steps, reps, sequential_trace);
+
     if let Some(path) = json_path {
-        let json = to_json(&grid, steps, seeds.len(), seq_s, &rows, &path);
+        let json = to_json(&ReportInput {
+            grid: &grid,
+            steps,
+            n_seeds: seeds.len(),
+            seq_s,
+            rows: &rows,
+            cluster: (cluster_cells.len(), cluster_seq_s, &cluster_rows),
+            corpus: (corpus_cells.len(), corpus_seq_s, &corpus_rows),
+        }, &path);
         std::fs::write(&path, json).expect("write json report");
-        println!("json report -> {path}");
+        println!("\njson report -> {path}");
     }
 }
 
@@ -103,6 +130,69 @@ fn sequential_baseline(grid: &[Scenario]) -> Vec<BatchRun> {
     }).collect()
 }
 
+/// The pre-batch cluster path: `ClusterSimulator::run` (fresh buffers)
+/// per cell.
+fn sequential_cluster(cells: &[SweepCell]) -> Vec<SweepRun> {
+    cells.iter().map(|cell| match cell {
+        SweepCell::Cluster(cs) => SweepRun {
+            label: cs.label.clone(),
+            result: CellResult::Cluster(
+                cs.simulator().run().expect("feasible cluster cell")),
+        },
+        _ => unreachable!("cluster grid contains only cluster cells"),
+    }).collect()
+}
+
+/// The pre-batch trace path: `Simulator::run_trace` through a boxed
+/// `dyn AllocationPolicy` per cell.
+fn sequential_trace(cells: &[SweepCell]) -> Vec<SweepRun> {
+    cells.iter().map(|cell| match cell {
+        SweepCell::Trace(ts) => {
+            let mut policy = policy_by_name(ts.policy.name())
+                .expect("grid uses built-in policies");
+            SweepRun {
+                label: ts.label.clone(),
+                result: CellResult::Sim(
+                    ts.simulator().run_trace(policy.as_mut(), ts.trace())),
+            }
+        }
+        _ => unreachable!("trace grid contains only trace cells"),
+    }).collect()
+}
+
+/// Gate + measure one heterogeneous grid: sequential baseline, then the
+/// sweep engine at 1/2/4/8 workers. Returns (sequential seconds, rows).
+fn sweep_section(name: &str, cells: &[SweepCell], steps: u64, reps: usize,
+                 sequential: fn(&[SweepCell]) -> Vec<SweepRun>)
+                 -> (f64, Vec<(usize, f64, f64)>) {
+    println!("\n{name}: {} cells × {steps} steps", cells.len());
+    let reference = sequential(cells);
+    for workers in [1usize, 2, 4, 8] {
+        assert_sweep_identical(&reference, &run_sweep(cells, workers),
+                               workers);
+    }
+    println!("bit-identical to sequential at 1/2/4/8 workers: OK");
+
+    println!("{:<26} {:>10} {:>16} {:>9}", "config", "time", "cells/s",
+             "speedup");
+    let seq = best_of(reps, || {
+        std::hint::black_box(sequential(cells).len());
+    });
+    let seq_s = seq.as_secs_f64();
+    print_row("sequential (fresh buffers)", seq, cells.len(), 1.0);
+    let mut rows = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        let t = best_of(reps, || {
+            std::hint::black_box(run_sweep(cells, workers).len());
+        });
+        let speedup = seq_s / t.as_secs_f64().max(1e-12);
+        print_row(&format!("sweep, {workers} worker(s)"), t, cells.len(),
+                  speedup);
+        rows.push((workers, t.as_secs_f64(), speedup));
+    }
+    (seq_s, rows)
+}
+
 fn assert_identical(reference: &[BatchRun], got: &[BatchRun],
                     workers: usize) {
     assert_eq!(reference.len(), got.len());
@@ -113,6 +203,21 @@ fn assert_identical(reference: &[BatchRun], got: &[BatchRun],
                     == have.result.total_throughput()
                 && want.result.cost_dollars == have.result.cost_dollars,
                 "{}: batch@{workers} diverged from sequential",
+                want.label);
+    }
+}
+
+fn assert_sweep_identical(reference: &[SweepRun], got: &[SweepRun],
+                          workers: usize) {
+    assert_eq!(reference.len(), got.len());
+    for (want, have) in reference.iter().zip(got) {
+        assert_eq!(want.label, have.label, "order at {workers} workers");
+        assert!(want.result.mean_latency() == have.result.mean_latency()
+                && want.result.total_throughput()
+                    == have.result.total_throughput()
+                && want.result.cost_dollars()
+                    == have.result.cost_dollars(),
+                "{}: sweep@{workers} diverged from sequential",
                 want.label);
     }
 }
@@ -133,32 +238,71 @@ fn print_row(name: &str, t: Duration, scenarios: usize, speedup: f64) {
              scenarios as f64 / t.as_secs_f64().max(1e-12), speedup);
 }
 
+/// Everything the JSON report needs, bundled to keep signatures short.
+struct ReportInput<'a> {
+    grid: &'a [Scenario],
+    steps: u64,
+    n_seeds: usize,
+    seq_s: f64,
+    rows: &'a [(usize, f64, f64)],
+    /// (cells, sequential seconds, per-worker rows).
+    cluster: (usize, f64, &'a [(usize, f64, f64)]),
+    /// (cells, sequential seconds, per-worker rows).
+    corpus: (usize, f64, &'a [(usize, f64, f64)]),
+}
+
+fn worker_rows(n_cells: usize, rows: &[(usize, f64, f64)]) -> Value {
+    let throughput = |secs: f64| n_cells as f64 / secs.max(1e-12);
+    Value::Array(rows.iter()
+        .map(|(workers, secs, speedup)| json::obj(vec![
+            ("workers", json::num(*workers as f64)),
+            ("seconds", json::num(*secs)),
+            ("scenarios_per_s", json::num(throughput(*secs))),
+            ("speedup_vs_sequential", json::num(*speedup)),
+        ]))
+        .collect())
+}
+
+/// One `cluster`/`corpus` section: cell count, sequential baseline, and
+/// the per-worker-count table.
+fn sweep_section_value(n_cells: usize, seq_s: f64,
+                       rows: &[(usize, f64, f64)]) -> Value {
+    json::obj(vec![
+        ("scenarios", json::num(n_cells as f64)),
+        ("sequential", json::obj(vec![
+            ("seconds", json::num(seq_s)),
+            ("scenarios_per_s",
+             json::num(n_cells as f64 / seq_s.max(1e-12))),
+        ])),
+        ("sweep", worker_rows(n_cells, rows)),
+    ])
+}
+
 /// The measured results as the JSON object the checked-in
 /// BENCH_sweep.json documents under its `results` key.
-fn results_value(grid: &[Scenario], steps: u64, n_seeds: usize, seq_s: f64,
-                 rows: &[(usize, f64, f64)]) -> Value {
-    let throughput =
-        |secs: f64| grid.len() as f64 / secs.max(1e-12);
+fn results_value(input: &ReportInput<'_>) -> Value {
+    let n = input.grid.len();
+    let (cluster_cells, cluster_seq_s, cluster_rows) = input.cluster;
+    let (corpus_cells, corpus_seq_s, corpus_rows) = input.corpus;
     json::obj(vec![
         ("grid", json::obj(vec![
-            ("scenarios", json::num(grid.len() as f64)),
-            ("steps", json::num(steps as f64)),
-            ("seeds", json::num(n_seeds as f64)),
-            ("policies", json::num(5.0)),
-            ("shapes", json::num(4.0)),
+            ("scenarios", json::num(n as f64)),
+            ("steps", json::num(input.steps as f64)),
+            ("seeds", json::num(input.n_seeds as f64)),
+            ("policies", json::num(PolicyKind::all().len() as f64)),
+            ("shapes",
+             json::num(repro::stress_shapes(input.steps).len() as f64)),
         ])),
         ("sequential_baseline", json::obj(vec![
-            ("seconds", json::num(seq_s)),
-            ("scenarios_per_s", json::num(throughput(seq_s))),
+            ("seconds", json::num(input.seq_s)),
+            ("scenarios_per_s",
+             json::num(n as f64 / input.seq_s.max(1e-12))),
         ])),
-        ("batch", Value::Array(rows.iter()
-            .map(|(workers, secs, speedup)| json::obj(vec![
-                ("workers", json::num(*workers as f64)),
-                ("seconds", json::num(*secs)),
-                ("scenarios_per_s", json::num(throughput(*secs))),
-                ("speedup_vs_sequential", json::num(*speedup)),
-            ]))
-            .collect())),
+        ("batch", worker_rows(n, input.rows)),
+        ("cluster",
+         sweep_section_value(cluster_cells, cluster_seq_s, cluster_rows)),
+        ("corpus",
+         sweep_section_value(corpus_cells, corpus_seq_s, corpus_rows)),
     ])
 }
 
@@ -166,9 +310,8 @@ fn results_value(grid: &[Scenario], steps: u64, n_seeds: usize, seq_s: f64,
 /// overwrite only its `results` value, preserving the methodology /
 /// expected-shape documentation and any other keys. Falls back to a
 /// minimal document when the target is missing or unparseable.
-fn to_json(grid: &[Scenario], steps: u64, n_seeds: usize, seq_s: f64,
-           rows: &[(usize, f64, f64)], path: &str) -> String {
-    let results = results_value(grid, steps, n_seeds, seq_s, rows);
+fn to_json(input: &ReportInput<'_>, path: &str) -> String {
+    let results = results_value(input);
     let doc = match std::fs::read_to_string(path).ok()
         .and_then(|text| Value::parse(&text).ok())
     {

@@ -25,4 +25,5 @@ mod sim;
 
 pub use hierarchical::ClusterAllocator;
 pub use placement::{first_fit_decreasing, Placement};
-pub use sim::{ClusterResult, ClusterSimulator, MigrationModel};
+pub use sim::{ClusterArena, ClusterResult, ClusterSimulator,
+              MigrationModel};

@@ -34,8 +34,71 @@ impl Default for MigrationModel {
     }
 }
 
+/// Dense per-step buffers reused across cluster simulation runs.
+///
+/// The cluster loop used to allocate ~12 `Vec`s per run (three of them per
+/// *step*, inside the migration and utilization blocks); a sweep worker
+/// now constructs one `ClusterArena` and replays every cluster cell
+/// through [`ClusterSimulator::run_with_arena`] with the buffer set —
+/// per-agent rows, per-GPU rows, and the Streaming accumulators —
+/// `clear()`-ed and re-sized instead of re-allocated (capacity is
+/// retained across same-shaped runs).
+#[derive(Debug, Clone, Default)]
+pub struct ClusterArena {
+    // Per-agent rows.
+    queues: Vec<f64>,
+    rates: Vec<f64>,
+    counts: Vec<f64>,
+    observed: Vec<f64>,
+    alloc: Vec<f64>,
+    stalled_until: Vec<f64>,
+    // Per-GPU rows (previously re-allocated every step).
+    demand: Vec<f64>,
+    gpu_cap: Vec<f64>,
+    gpu_done: Vec<f64>,
+    // Streaming accumulators (per-agent, per-agent, per-GPU).
+    latency: Vec<Streaming>,
+    throughput: Vec<Streaming>,
+    gpu_util: Vec<Streaming>,
+}
+
+impl ClusterArena {
+    /// Empty arena; buffers grow on first use and are retained after.
+    pub fn new() -> Self {
+        ClusterArena::default()
+    }
+
+    /// Size every buffer for `n_agents` × `n_gpus` and reset its contents.
+    fn reset(&mut self, n_agents: usize, n_gpus: usize) {
+        for buf in [
+            &mut self.queues,
+            &mut self.rates,
+            &mut self.counts,
+            &mut self.observed,
+            &mut self.alloc,
+            &mut self.stalled_until,
+        ] {
+            buf.clear();
+            buf.resize(n_agents, 0.0);
+        }
+        for buf in [&mut self.demand, &mut self.gpu_cap, &mut self.gpu_done]
+        {
+            buf.clear();
+            buf.resize(n_gpus, 0.0);
+        }
+        for (streams, n) in [
+            (&mut self.latency, n_agents),
+            (&mut self.throughput, n_agents),
+            (&mut self.gpu_util, n_gpus),
+        ] {
+            streams.clear();
+            streams.resize_with(n, Streaming::new);
+        }
+    }
+}
+
 /// Result of one cluster simulation run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ClusterResult {
     /// GPUs simulated.
     pub n_gpus: usize,
@@ -98,6 +161,16 @@ impl ClusterSimulator {
 
     /// Run the hierarchical allocator over the configured workload.
     pub fn run(&self) -> Result<ClusterResult> {
+        self.run_with_arena(&mut ClusterArena::new())
+    }
+
+    /// [`ClusterSimulator::run`], but with caller-owned buffers: repeated
+    /// runs (cluster-grid sweeps, batch workers) reuse the arena instead
+    /// of re-allocating the per-step buffer set on every run. Results are
+    /// bit-identical to [`ClusterSimulator::run`] (asserted by the
+    /// property suite).
+    pub fn run_with_arena(&self, arena: &mut ClusterArena)
+                          -> Result<ClusterResult> {
         let n = self.registry.len();
         let cfg = &self.cfg;
         let mut allocator =
@@ -107,28 +180,20 @@ impl ClusterSimulator {
             cfg.arrival_process, cfg.seed);
         let mut billing = BillingMeter::new(cfg.pricing);
 
-        let mut queues = vec![0.0f64; n];
-        let mut rates = vec![0.0f64; n];
-        let mut counts = vec![0.0f64; n];
-        let mut observed = vec![0.0f64; n];
-        let mut alloc = vec![0.0f64; n];
-        // Agent is stalled (migrating) until this sim-time.
-        let mut stalled_until = vec![0.0f64; n];
+        arena.reset(n, self.n_gpus);
+        let ClusterArena {
+            queues, rates, counts, observed, alloc, stalled_until,
+            demand, gpu_cap, gpu_done, latency, throughput, gpu_util,
+        } = arena;
         let base_tput = self.registry.base_tput();
 
-        let mut latency: Vec<Streaming> =
-            (0..n).map(|_| Streaming::new()).collect();
-        let mut throughput: Vec<Streaming> =
-            (0..n).map(|_| Streaming::new()).collect();
-        let mut gpu_util: Vec<Streaming> =
-            (0..self.n_gpus).map(|_| Streaming::new()).collect();
         let mut migrations = 0u64;
         let mut migration_stall_s = 0.0f64;
         let mut last_migration_at = f64::NEG_INFINITY;
 
         for step in 0..cfg.steps {
             let now = step as f64 * cfg.dt;
-            workload.step(step, cfg.dt, &mut rates, &mut counts);
+            workload.step(step, cfg.dt, &mut rates[..], &mut counts[..]);
             for i in 0..n {
                 queues[i] += counts[i];
                 observed[i] = counts[i] / cfg.dt;
@@ -141,7 +206,7 @@ impl ClusterSimulator {
                     || migrations == 0
             });
             if let (Some(mig), true) = (&self.migration, cooled_down) {
-                let mut demand = vec![0.0f64; self.n_gpus];
+                demand.fill(0.0);
                 for i in 0..n {
                     demand[allocator.placement().gpu_of[i]] +=
                         observed[i] / base_tput[i];
@@ -180,11 +245,11 @@ impl ClusterSimulator {
                 }
             }
 
-            allocator.allocate(&self.registry, &observed, &queues, step,
-                               self.capacity_per_gpu, &mut alloc);
+            allocator.allocate(&self.registry, &observed[..], &queues[..],
+                               step, self.capacity_per_gpu, &mut alloc[..]);
 
-            let mut gpu_cap = vec![0.0f64; self.n_gpus];
-            let mut gpu_done = vec![0.0f64; self.n_gpus];
+            gpu_cap.fill(0.0);
+            gpu_done.fill(0.0);
             let mut total_alloc = 0.0;
             for i in 0..n {
                 let mut g = alloc[i];
@@ -297,6 +362,32 @@ mod tests {
         let b = sim.run().unwrap();
         assert_eq!(a.agent_latencies, b.agent_latencies);
         assert_eq!(a.migrations, b.migrations);
+    }
+
+    #[test]
+    fn arena_reuse_is_bit_identical_across_cluster_shapes() {
+        // One arena replayed across clusters of different GPU counts,
+        // capacities, and migration settings must leave no state behind.
+        let mut arena = ClusterArena::new();
+        let mut skew_cfg = SimConfig::paper();
+        skew_cfg.workload_kind = crate::workload::WorkloadKind::Dominance {
+            agent: 0, share: 0.9,
+        };
+        let migrating = ClusterSimulator::new(
+            skew_cfg, AgentRegistry::paper(), 2, 1.0,
+            Some(MigrationModel::default())).unwrap();
+        for _ in 0..2 {
+            for (gpus, cap) in [(1usize, 1.0), (2, 0.6), (4, 1.0)] {
+                let sim = paper_cluster(gpus, cap);
+                let reused = sim.run_with_arena(&mut arena).unwrap();
+                let fresh = sim.run().unwrap();
+                assert_eq!(reused, fresh, "{gpus} gpus @ {cap}");
+            }
+            let reused = migrating.run_with_arena(&mut arena).unwrap();
+            let fresh = migrating.run().unwrap();
+            assert!(fresh.migrations >= 1, "skew must trigger migration");
+            assert_eq!(reused, fresh, "migrating cluster");
+        }
     }
 
     #[test]

@@ -10,10 +10,12 @@ mod robustness;
 
 pub use experiments::{fig2a, fig2b, fig2c, fig2d, table1, table2,
                       CostPerfPoint, PerAgentSeries};
-pub use robustness::{dominance_experiment, overload_experiment,
-                     scaling_experiment, spike_experiment, stress_grid,
-                     stress_shapes, synthetic_registry, DominanceReport,
-                     OverloadReport, ScalingPoint, SpikeReport};
+pub use robustness::{cluster_grid, dominance_experiment,
+                     overload_experiment, scaling_experiment,
+                     spike_experiment, stress_grid, stress_shapes,
+                     stress_sweep, synthetic_registry, trace_grid,
+                     DominanceReport, OverloadReport, ScalingPoint,
+                     SpikeReport};
 
 use std::path::Path;
 

@@ -1,12 +1,16 @@
 //! §V.B robustness and scalability experiments.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::agents::{AgentProfile, AgentRegistry, Priority};
 use crate::allocator::{AdaptivePolicy, AllocContext, AllocationPolicy,
                        PolicyKind};
-use crate::sim::batch::{run_batch, Scenario};
+use crate::cluster::MigrationModel;
+use crate::sim::batch::{run_batch, ClusterScenario, Scenario, SweepCell,
+                        TraceScenario};
 use crate::sim::{SimConfig, Simulator};
+use crate::workload::trace::Trace;
 use crate::workload::{ArrivalProcess, WorkloadKind};
 
 /// Outcome of the demand-overload experiment (§V.B: "demand exceeds
@@ -128,14 +132,18 @@ pub fn dominance_experiment(share: f64) -> DominanceReport {
     let sim = Simulator::new(cfg, AgentProfile::paper_agents());
     let r = sim.run(&mut AdaptivePolicy::default());
 
-    let total_rate: f64 = 190.0;
+    // Derived from the paper registry (not hardcoded), so the repro
+    // tracks any change to the arrival-rate table. The shares sum to 1
+    // by construction (asserted in this module's tests).
+    let rates = AgentProfile::paper_arrival_rates();
+    let total_rate: f64 = rates.iter().sum();
     let profiles = AgentProfile::paper_agents();
     let request_share = |i: usize| {
         if i == 0 {
             share
         } else {
-            let others: f64 = total_rate - 80.0;
-            (1.0 - share) * AgentProfile::paper_arrival_rates()[i] / others
+            let others: f64 = total_rate - rates[0];
+            (1.0 - share) * rates[i] / others
         }
     };
     let agents: Vec<(String, f64, f64)> = profiles.iter().enumerate()
@@ -149,6 +157,11 @@ pub fn dominance_experiment(share: f64) -> DominanceReport {
 }
 
 /// The shape axis of the §V.B stress grid: name, schedule, process.
+///
+/// Beyond the paper's four §V.B shapes, the grid stresses a diurnal
+/// cycle (two full sine periods over the run) and a correlated
+/// multi-agent burst (coordinator + vision spiking together — the fan-out
+/// pattern a collaborative workflow produces).
 pub fn stress_shapes(steps: u64)
                      -> Vec<(&'static str, WorkloadKind, ArrivalProcess)> {
     vec![
@@ -160,21 +173,31 @@ pub fn stress_shapes(steps: u64)
             start: steps * 2 / 5, end: steps * 3 / 5,
         }, ArrivalProcess::Deterministic),
         ("poisson", WorkloadKind::Steady, ArrivalProcess::Poisson),
+        ("diurnal", WorkloadKind::Diurnal {
+            amplitude: 0.6, period: steps as f64 / 2.0,
+        }, ArrivalProcess::Deterministic),
+        ("multispike5x", WorkloadKind::MultiSpike {
+            agents: vec![0, 2], factor: 5.0,
+            start: steps * 2 / 5, end: steps * 3 / 5,
+        }, ArrivalProcess::Deterministic),
     ]
 }
 
 /// The full §V.B robustness grid as batch scenarios: every built-in
 /// policy × every stress shape × every seed, over the paper deployment,
-/// labelled `"<policy>/<shape>/seed<seed>"`.
+/// labelled `"<policy>/<shape>/seed<seed>"`. The grid size is
+/// `PolicyKind::all().len() × stress_shapes().len() × seeds.len()` —
+/// growing the policy registry or the shape axis grows the grid.
 ///
 /// `stress_grid(100, &[42])` is the grid the `robustness` bench ablates;
 /// the `sweep_scaling` bench scales `steps` and `seeds` up to measure
 /// batch-engine throughput.
 pub fn stress_grid(steps: u64, seeds: &[u64]) -> Vec<Scenario> {
     let shapes = stress_shapes(steps);
+    let policies = PolicyKind::all();
     let mut grid =
-        Vec::with_capacity(5 * shapes.len() * seeds.len());
-    for policy in PolicyKind::all() {
+        Vec::with_capacity(policies.len() * shapes.len() * seeds.len());
+    for policy in policies {
         for (shape, kind, process) in &shapes {
             for &seed in seeds {
                 let mut cfg = SimConfig::paper();
@@ -189,6 +212,85 @@ pub fn stress_grid(steps: u64, seeds: &[u64]) -> Vec<Scenario> {
         }
     }
     grid
+}
+
+/// The §VI multi-GPU grid as sweep cells: GPU count × per-GPU capacity ×
+/// migration model over the paper deployment, labelled
+/// `"cluster/<gpus>gpu/cap<capacity>/<mig|nomig>"`. Infeasible combos
+/// (the agents cannot be placed, e.g. one GPU at capacity 0.6) are
+/// skipped. Each migration-enabled combo also gets a `/skew` variant
+/// under 90 % single-agent dominance, so the migration path actually
+/// fires inside the grid.
+pub fn cluster_grid(steps: u64) -> Vec<SweepCell> {
+    let mut cells = Vec::new();
+    for n_gpus in [1usize, 2, 4] {
+        for capacity in [0.6, 1.0] {
+            for (mig_name, migration) in [
+                ("nomig", None),
+                ("mig", Some(MigrationModel::default())),
+            ] {
+                let mut cfg = SimConfig::paper();
+                cfg.steps = steps;
+                if let Ok(cell) = ClusterScenario::new(
+                    format!("cluster/{n_gpus}gpu/cap{capacity}/{mig_name}"),
+                    cfg.clone(), AgentRegistry::paper(), n_gpus, capacity,
+                    migration.clone())
+                {
+                    cells.push(SweepCell::Cluster(cell));
+                }
+                // The skew variant exists to make the migration path
+                // fire, which needs somewhere to migrate *to* — a
+                // single-GPU cell can never rebalance.
+                if migration.is_some() && n_gpus >= 2 {
+                    let mut skew = cfg;
+                    skew.workload_kind = WorkloadKind::Dominance {
+                        agent: 0, share: 0.9,
+                    };
+                    if let Ok(cell) = ClusterScenario::new(
+                        format!("cluster/{n_gpus}gpu/cap{capacity}/\
+                                 {mig_name}/skew"),
+                        skew, AgentRegistry::paper(), n_gpus, capacity,
+                        migration)
+                    {
+                        cells.push(SweepCell::Cluster(cell));
+                    }
+                }
+            }
+        }
+    }
+    cells
+}
+
+/// Trace-replay stress cells: one paper-workload Poisson trace recorded
+/// per seed, replayed under every built-in policy, labelled
+/// `"<policy>/trace/seed<seed>"`. The recorded trace is shared across
+/// the policies of its seed, so every policy replays the *identical*
+/// arrival stream.
+pub fn trace_grid(steps: u64, seeds: &[u64]) -> Vec<SweepCell> {
+    let mut cells =
+        Vec::with_capacity(PolicyKind::all().len() * seeds.len());
+    for &seed in seeds {
+        // One recording per seed, shared (not copied) across policies.
+        let trace = Arc::new(Trace::paper_poisson(steps, seed));
+        for policy in PolicyKind::all() {
+            cells.push(SweepCell::Trace(TraceScenario::new(
+                format!("{}/trace/seed{seed}", policy.name()),
+                SimConfig::paper(), AgentRegistry::paper(),
+                Arc::clone(&trace), policy)));
+        }
+    }
+    cells
+}
+
+/// The whole §V.B + §VI evaluation surface as one heterogeneous grid:
+/// the single-GPU stress grid, the cluster grid, and the trace-replay
+/// cells, mixed for one `run_sweep` call through one worker pool.
+pub fn stress_sweep(steps: u64, seeds: &[u64]) -> Vec<SweepCell> {
+    let mut cells: Vec<SweepCell> = stress_grid(steps, seeds)
+        .into_iter().map(SweepCell::Single).collect();
+    cells.extend(cluster_grid(steps));
+    cells.extend(trace_grid(steps, seeds));
+    cells
 }
 
 /// One point of the allocator O(N) scaling sweep.
@@ -256,6 +358,7 @@ pub fn scaling_experiment(sizes: &[usize]) -> Vec<ScalingPoint> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::batch::run_sweep;
 
     #[test]
     fn overload_degrades_gracefully_without_starvation() {
@@ -293,6 +396,20 @@ mod tests {
     }
 
     #[test]
+    fn dominance_request_shares_sum_to_one() {
+        // The shares are derived from paper_arrival_rates(), not
+        // hardcoded totals, so they must partition the request volume at
+        // any dominance level.
+        for share in [0.5, 0.9, 0.99] {
+            let r = dominance_experiment(share);
+            let total: f64 = r.agents.iter().map(|(_, req, _)| *req).sum();
+            assert!((total - 1.0).abs() < 1e-9,
+                    "share {share}: request shares sum to {total}");
+            assert!((r.agents[0].1 - share).abs() < 1e-12);
+        }
+    }
+
+    #[test]
     fn allocator_is_linear_and_sub_millisecond() {
         let pts = scaling_experiment(&[4, 64, 1024]);
         for p in &pts {
@@ -309,18 +426,66 @@ mod tests {
     #[test]
     fn stress_grid_covers_every_policy_shape_seed_cell() {
         let grid = stress_grid(50, &[1, 2]);
-        // 5 policies × 4 shapes × 2 seeds.
-        assert_eq!(grid.len(), 40);
+        // Size tracks the policy registry and the shape axis — adding a
+        // policy or a shape must grow the grid without touching this
+        // test.
+        let expected = PolicyKind::all().len() * stress_shapes(50).len() * 2;
+        assert_eq!(grid.len(), expected);
         let mut labels: Vec<&str> =
             grid.iter().map(|s| s.label.as_str()).collect();
         labels.sort_unstable();
         labels.dedup();
-        assert_eq!(labels.len(), 40, "labels must be unique");
+        assert_eq!(labels.len(), expected, "labels must be unique");
         assert!(grid.iter()
                 .any(|s| s.label == "adaptive/overload3x/seed2"));
+        assert!(grid.iter().any(|s| s.label == "feedback/diurnal/seed1"));
+        assert!(grid.iter()
+                .any(|s| s.label == "adaptive/multispike5x/seed2"));
         // Every cell runs the configured number of steps.
         let runs = run_batch(&grid[..4], 2);
         assert!(runs.iter().all(|r| r.result.steps == 50));
+    }
+
+    #[test]
+    fn cluster_grid_skips_infeasible_combos_and_labels_axes() {
+        let cells = cluster_grid(20);
+        let labels: Vec<&str> = cells.iter().map(SweepCell::label).collect();
+        // One GPU at 0.6 capacity cannot hold the paper agents (Σ min =
+        // 1.0): skipped, not panicked.
+        assert!(!labels.iter().any(|l| l.starts_with("cluster/1gpu/cap0.6")),
+                "{labels:?}");
+        // Feasible axes are present, including the skewed migration cell.
+        for want in ["cluster/1gpu/cap1/nomig", "cluster/2gpu/cap0.6/mig",
+                     "cluster/4gpu/cap1/mig/skew"] {
+            assert!(labels.contains(&want), "missing {want} in {labels:?}");
+        }
+        // Every cell is a cluster cell and actually runs.
+        let runs = run_sweep(&cells, 4);
+        assert!(runs.iter().all(|r| r.result.as_cluster().is_some()));
+        // The skew cells exist to exercise migration: at least one
+        // migration-enabled cell must migrate.
+        let migrated = runs.iter()
+            .filter(|r| r.label.ends_with("/skew"))
+            .any(|r| r.result.as_cluster().unwrap().migrations >= 1);
+        assert!(migrated, "no skew cell migrated");
+    }
+
+    #[test]
+    fn stress_sweep_mixes_all_three_cell_kinds() {
+        let seeds = [1u64, 2];
+        let cells = stress_sweep(10, &seeds);
+        let singles = cells.iter()
+            .filter(|c| matches!(c, SweepCell::Single(_))).count();
+        let clusters = cells.iter()
+            .filter(|c| matches!(c, SweepCell::Cluster(_))).count();
+        let traces = cells.iter()
+            .filter(|c| matches!(c, SweepCell::Trace(_))).count();
+        assert_eq!(singles, stress_grid(10, &seeds).len());
+        assert_eq!(clusters, cluster_grid(10).len());
+        assert_eq!(traces,
+                   PolicyKind::all().len() * seeds.len());
+        assert_eq!(cells.len(), singles + clusters + traces);
+        assert!(singles > 0 && clusters > 0 && traces > 0);
     }
 
     #[test]

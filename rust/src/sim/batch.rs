@@ -1,28 +1,46 @@
-//! Multi-threaded scenario-sweep engine.
+//! Multi-threaded scenario-sweep engine over heterogeneous cells.
 //!
-//! A [`Scenario`] is one (config × registry × policy) cell of an
-//! evaluation grid; [`run_batch`] fans a slice of them across
-//! `std::thread::scope` workers. Each worker owns one [`SimArena`] (the
-//! per-step buffer set is reused across its runs instead of re-allocated)
-//! and pulls work from a shared atomic cursor, so load imbalance between
-//! cheap and expensive scenarios self-corrects. Policies are
-//! [`PolicyKind`], statically dispatched in the step loop.
+//! A [`SweepCell`] is one cell of an evaluation grid — a single-GPU
+//! [`Scenario`] (config × registry × policy), a [`ClusterScenario`]
+//! (config × registry × GPUs × capacity × migration model), or a
+//! [`TraceScenario`] (a recorded [`Trace`] replayed under a policy).
+//! [`run_sweep`] fans a slice of them across `std::thread::scope`
+//! workers; [`run_batch`] remains the single-GPU-only entry point over
+//! plain [`Scenario`]s. Both share one worker pool implementation: each
+//! worker owns one [`SweepArena`] (a [`SimArena`] plus a
+//! [`ClusterArena`], so every cell kind reuses buffers instead of
+//! re-allocating) and pulls work from a shared atomic cursor, so load
+//! imbalance between cheap and expensive cells self-corrects. Policies
+//! are [`PolicyKind`], statically dispatched in the step loop.
 //!
-//! Results come back in scenario order regardless of worker count, and
-//! every run is bit-identical to a sequential [`Simulator::run`] of the
-//! same cell (each scenario owns its seed and a fresh policy clone; the
-//! property suite asserts this for every policy and arrival process).
+//! Results come back in cell order regardless of worker count, and every
+//! run is bit-identical to its sequential twin — [`Simulator::run`],
+//! [`ClusterSimulator::run`], or [`Simulator::run_trace`] of the same
+//! cell (each cell owns its seed and a fresh policy clone; the property
+//! suite asserts this for every cell kind at 1/2/8 workers).
 //!
-//! The Table II repro, the §V.C sweeps, the §V.B robustness grid, and the
-//! `sweep_scaling` bench all drive their grids through here.
+//! The Table II repro, the §V.C sweeps, the §V.B robustness grid (now
+//! including its cluster and trace-corpus axes), and the `sweep_scaling`
+//! bench all drive their grids through here.
+//!
+//! [`Trace`]: crate::workload::trace::Trace
+//!
+//! [`ClusterSimulator::run`]: crate::cluster::ClusterSimulator::run
+//!
+//! [`Simulator::run_trace`]: crate::sim::Simulator::run_trace
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use crate::agents::{AgentProfile, AgentRegistry};
 use crate::allocator::PolicyKind;
+use crate::cluster::{ClusterArena, ClusterResult, ClusterSimulator,
+                     MigrationModel};
+use crate::error::{Error, Result};
 use crate::sim::{SimArena, SimConfig, SimResult, Simulator};
+use crate::workload::trace::{Trace, TraceCorpus};
 
-/// One cell of a sweep grid: a labelled simulation to run.
+/// One single-GPU cell of a sweep grid: a labelled simulation to run.
 #[derive(Debug, Clone)]
 pub struct Scenario {
     /// Grid coordinates for reports (e.g. `"adaptive/overload3x/seed42"`).
@@ -74,7 +92,219 @@ impl Scenario {
     }
 }
 
-/// One completed cell: the scenario's label plus its full result.
+/// One multi-GPU cell of a sweep grid: a labelled cluster simulation
+/// (placement, per-GPU Algorithm 1, optional migration model).
+#[derive(Debug, Clone)]
+pub struct ClusterScenario {
+    /// Grid coordinates for reports (e.g. `"cluster/2gpu/cap1/mig"`).
+    pub label: String,
+    sim: ClusterSimulator,
+}
+
+impl ClusterScenario {
+    /// Build; errors when the agents cannot be placed on the cluster
+    /// (same validation as [`ClusterSimulator::new`]).
+    pub fn new(label: impl Into<String>, cfg: SimConfig,
+               registry: AgentRegistry, n_gpus: usize,
+               capacity_per_gpu: f64, migration: Option<MigrationModel>)
+               -> Result<ClusterScenario> {
+        Ok(ClusterScenario {
+            label: label.into(),
+            sim: ClusterSimulator::new(cfg, registry, n_gpus,
+                                       capacity_per_gpu, migration)?,
+        })
+    }
+
+    /// The cluster simulator this cell runs (for sequential baselines).
+    pub fn simulator(&self) -> &ClusterSimulator {
+        &self.sim
+    }
+
+    /// Run this one cell through a caller-owned arena.
+    pub fn run_with_arena(&self, arena: &mut ClusterArena) -> ClusterResult {
+        self.sim.run_with_arena(arena)
+            .expect("placement validated at construction")
+    }
+}
+
+/// One trace-replay cell of a sweep grid: a recorded arrival [`Trace`]
+/// replayed bit-exactly under a policy.
+#[derive(Debug, Clone)]
+pub struct TraceScenario {
+    /// Grid coordinates for reports (e.g. `"adaptive/trace/seed42"`).
+    pub label: String,
+    /// Policy evaluated in this cell (cloned fresh for the run).
+    pub policy: PolicyKind,
+    sim: Simulator,
+    /// Shared, not copied: a whole grid of policies replaying one
+    /// recording holds one buffer.
+    trace: Arc<Trace>,
+}
+
+impl TraceScenario {
+    /// Build from a validated registry. Accepts an owned [`Trace`] or an
+    /// `Arc<Trace>` (pass `Arc::clone`s to share one recording across
+    /// many cells). Panics when the trace's agent columns do not match
+    /// the registry's agents — name for name, in order — since a
+    /// reordered or foreign trace would replay silently wrong.
+    pub fn new(label: impl Into<String>, cfg: SimConfig,
+               registry: AgentRegistry, trace: impl Into<Arc<Trace>>,
+               policy: PolicyKind) -> TraceScenario {
+        let trace = trace.into();
+        if let Some(msg) = trace_columns_mismatch(&trace, &registry) {
+            panic!("{msg}");
+        }
+        TraceScenario {
+            label: label.into(),
+            policy,
+            sim: Simulator::with_registry(cfg, registry),
+            trace,
+        }
+    }
+
+    /// Every trace of a [`TraceCorpus`] as sweep cells under one policy,
+    /// labelled `"<policy>/<trace-label>"`. An empty corpus (e.g. loaded
+    /// from an empty directory) yields an empty sweep. A trace whose
+    /// agent columns do not match the registry — a recording from a
+    /// different deployment is well-formed CSV, so directory loading
+    /// cannot catch it — surfaces as an [`Error::Trace`] naming the
+    /// offending trace, not a panic.
+    pub fn corpus(corpus: &TraceCorpus, cfg: &SimConfig,
+                  registry: &AgentRegistry, policy: &PolicyKind)
+                  -> Result<Vec<SweepCell>> {
+        corpus.iter()
+            .map(|(label, trace)| {
+                if let Some(msg) = trace_columns_mismatch(trace, registry)
+                {
+                    return Err(Error::Trace(format!("{label}: {msg}")));
+                }
+                Ok(SweepCell::Trace(TraceScenario::new(
+                    format!("{}/{label}", policy.name()), cfg.clone(),
+                    registry.clone(), trace.clone(), policy.clone())))
+            })
+            .collect()
+    }
+
+    /// The simulator this cell replays through (for sequential baselines).
+    pub fn simulator(&self) -> &Simulator {
+        &self.sim
+    }
+
+    /// The recorded trace this cell replays.
+    pub fn trace(&self) -> &Trace {
+        &self.trace
+    }
+
+    /// Run this one cell through a caller-owned arena.
+    pub fn run_with_arena(&self, arena: &mut SimArena) -> SimResult {
+        let mut policy = self.policy.clone();
+        self.sim.run_trace_with_arena(&mut policy, &self.trace, arena)
+    }
+}
+
+/// The one matching rule for replaying a trace over a registry: the
+/// agent columns must equal the registry's agents, name for name, in
+/// order (a reordered or foreign recording would replay silently
+/// wrong). Returns the failure description, or `None` when they match.
+fn trace_columns_mismatch(trace: &Trace, registry: &AgentRegistry)
+                          -> Option<String> {
+    let names: Vec<&str> = registry.profiles().iter()
+        .map(|p| p.name.as_str()).collect();
+    let cols: Vec<&str> = trace.agents.iter()
+        .map(String::as_str).collect();
+    (cols != names).then(|| format!(
+        "trace agent columns {cols:?} do not match the registry's \
+         agents {names:?}"))
+}
+
+/// One cell of a heterogeneous sweep grid.
+#[derive(Debug, Clone)]
+pub enum SweepCell {
+    /// Single-GPU generator-driven cell.
+    Single(Scenario),
+    /// Multi-GPU cluster cell.
+    Cluster(ClusterScenario),
+    /// Recorded-trace replay cell.
+    Trace(TraceScenario),
+}
+
+impl SweepCell {
+    /// The cell's grid label.
+    pub fn label(&self) -> &str {
+        match self {
+            SweepCell::Single(s) => &s.label,
+            SweepCell::Cluster(s) => &s.label,
+            SweepCell::Trace(s) => &s.label,
+        }
+    }
+
+    /// Run this cell through a caller-owned worker arena.
+    pub fn run_with_arena(&self, arena: &mut SweepArena) -> CellResult {
+        match self {
+            SweepCell::Single(s) =>
+                CellResult::Sim(s.run_with_arena(&mut arena.sim)),
+            SweepCell::Cluster(s) =>
+                CellResult::Cluster(s.run_with_arena(&mut arena.cluster)),
+            SweepCell::Trace(s) =>
+                CellResult::Sim(s.run_with_arena(&mut arena.sim)),
+        }
+    }
+}
+
+/// The full result of one sweep cell, tagged by kind. Single-GPU and
+/// trace-replay cells produce a [`SimResult`]; cluster cells a
+/// [`ClusterResult`].
+#[derive(Debug, Clone)]
+pub enum CellResult {
+    /// Single-GPU simulation result (generator-driven or trace replay).
+    Sim(SimResult),
+    /// Multi-GPU cluster result.
+    Cluster(ClusterResult),
+}
+
+impl CellResult {
+    /// Mean of per-agent mean latencies (s), whatever the cell kind.
+    pub fn mean_latency(&self) -> f64 {
+        match self {
+            CellResult::Sim(r) => r.mean_latency(),
+            CellResult::Cluster(r) => r.mean_latency(),
+        }
+    }
+
+    /// Aggregate throughput (rps), whatever the cell kind.
+    pub fn total_throughput(&self) -> f64 {
+        match self {
+            CellResult::Sim(r) => r.total_throughput(),
+            CellResult::Cluster(r) => r.total_throughput(),
+        }
+    }
+
+    /// Total billed cost ($), whatever the cell kind.
+    pub fn cost_dollars(&self) -> f64 {
+        match self {
+            CellResult::Sim(r) => r.cost_dollars,
+            CellResult::Cluster(r) => r.cost_dollars,
+        }
+    }
+
+    /// The single-GPU result, if this was a single-GPU or trace cell.
+    pub fn as_sim(&self) -> Option<&SimResult> {
+        match self {
+            CellResult::Sim(r) => Some(r),
+            CellResult::Cluster(_) => None,
+        }
+    }
+
+    /// The cluster result, if this was a cluster cell.
+    pub fn as_cluster(&self) -> Option<&ClusterResult> {
+        match self {
+            CellResult::Cluster(r) => Some(r),
+            CellResult::Sim(_) => None,
+        }
+    }
+}
+
+/// One completed single-GPU cell: the scenario's label plus its result.
 #[derive(Debug, Clone)]
 pub struct BatchRun {
     /// Label copied from the [`Scenario`].
@@ -83,52 +313,111 @@ pub struct BatchRun {
     pub result: SimResult,
 }
 
+/// One completed sweep cell: the cell's label plus its tagged result.
+#[derive(Debug, Clone)]
+pub struct SweepRun {
+    /// Label copied from the [`SweepCell`].
+    pub label: String,
+    /// The tagged result for that cell.
+    pub result: CellResult,
+}
+
+/// Per-worker buffer set: one arena per cell kind, so a single worker
+/// replays any mix of cells allocation-free after warm-up.
+#[derive(Debug, Clone, Default)]
+pub struct SweepArena {
+    /// Buffers for single-GPU and trace-replay cells.
+    pub sim: SimArena,
+    /// Buffers for cluster cells.
+    pub cluster: ClusterArena,
+}
+
+impl SweepArena {
+    /// Empty arenas; buffers grow on first use and are retained after.
+    pub fn new() -> Self {
+        SweepArena::default()
+    }
+}
+
 /// Worker count matched to the machine (≥ 1).
 pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
-/// Run every scenario, fanned across `workers` OS threads.
-///
-/// `workers` is clamped to `[1, scenarios.len()]`. Results are returned
-/// in scenario order. Panics if a worker panics (a scenario itself
-/// panicking, e.g. on a mismatched config, propagates).
-pub fn run_batch(scenarios: &[Scenario], workers: usize) -> Vec<BatchRun> {
-    if scenarios.is_empty() {
+/// The shared worker pool: fan `items` across `workers` OS threads, each
+/// owning one [`SweepArena`], pulling indices from an atomic cursor.
+/// Results come back in item order. Panics if a worker panics (an item
+/// itself panicking, e.g. on a mismatched config, propagates).
+fn run_pool<T, R, F>(items: &[T], workers: usize, run: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T, &mut SweepArena) -> R + Sync,
+{
+    if items.is_empty() {
         return Vec::new();
     }
-    let workers = workers.clamp(1, scenarios.len());
+    let workers = workers.clamp(1, items.len());
     let next = AtomicUsize::new(0);
 
-    let mut indexed: Vec<(usize, SimResult)> =
-        Vec::with_capacity(scenarios.len());
+    let mut indexed: Vec<(usize, R)> = Vec::with_capacity(items.len());
     std::thread::scope(|scope| {
         let handles: Vec<_> = (0..workers)
             .map(|_| {
                 let next = &next;
+                let run = &run;
                 scope.spawn(move || {
-                    let mut arena = SimArena::new();
-                    let mut done: Vec<(usize, SimResult)> = Vec::new();
+                    let mut arena = SweepArena::new();
+                    let mut done: Vec<(usize, R)> = Vec::new();
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
-                        let Some(scenario) = scenarios.get(i) else {
+                        let Some(item) = items.get(i) else {
                             break;
                         };
-                        done.push((i, scenario.run_with_arena(&mut arena)));
+                        done.push((i, run(item, &mut arena)));
                     }
                     done
                 })
             })
             .collect();
         for handle in handles {
-            indexed.extend(handle.join().expect("batch worker panicked"));
+            indexed.extend(handle.join().expect("sweep worker panicked"));
         }
     });
 
     indexed.sort_by_key(|(i, _)| *i);
-    indexed.into_iter()
-        .map(|(i, result)| BatchRun {
-            label: scenarios[i].label.clone(),
+    indexed.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Run every single-GPU scenario, fanned across `workers` OS threads.
+///
+/// `workers` is clamped to `[1, scenarios.len()]`. Results are returned
+/// in scenario order.
+pub fn run_batch(scenarios: &[Scenario], workers: usize) -> Vec<BatchRun> {
+    run_pool(scenarios, workers,
+             |sc: &Scenario, arena: &mut SweepArena| {
+                 sc.run_with_arena(&mut arena.sim)
+             })
+        .into_iter()
+        .zip(scenarios)
+        .map(|(result, sc)| BatchRun { label: sc.label.clone(), result })
+        .collect()
+}
+
+/// Run every cell of a heterogeneous grid — single-GPU, cluster, and
+/// trace-replay cells mixed freely — through one worker pool.
+///
+/// `workers` is clamped to `[1, cells.len()]`. Results are returned in
+/// cell order, each tagged with its kind via [`CellResult`].
+pub fn run_sweep(cells: &[SweepCell], workers: usize) -> Vec<SweepRun> {
+    run_pool(cells, workers,
+             |cell: &SweepCell, arena: &mut SweepArena| {
+                 cell.run_with_arena(arena)
+             })
+        .into_iter()
+        .zip(cells)
+        .map(|(result, cell)| SweepRun {
+            label: cell.label().to_string(),
             result,
         })
         .collect()
@@ -144,9 +433,29 @@ mod tests {
             .collect()
     }
 
+    fn mixed_grid() -> Vec<SweepCell> {
+        vec![
+            SweepCell::Single(Scenario::paper("single/adaptive",
+                                              PolicyKind::adaptive())),
+            SweepCell::Cluster(ClusterScenario::new(
+                "cluster/2gpu", SimConfig::paper(), AgentRegistry::paper(),
+                2, 1.0, None).unwrap()),
+            SweepCell::Trace(TraceScenario::new(
+                "trace/adaptive", SimConfig::paper(),
+                AgentRegistry::paper(), Trace::paper_poisson(40, 7),
+                PolicyKind::adaptive())),
+            SweepCell::Single(Scenario::paper("single/static",
+                                              PolicyKind::static_equal())),
+            SweepCell::Cluster(ClusterScenario::new(
+                "cluster/4gpu", SimConfig::paper(), AgentRegistry::paper(),
+                4, 1.0, Some(MigrationModel::default())).unwrap()),
+        ]
+    }
+
     #[test]
     fn empty_batch_returns_nothing() {
         assert!(run_batch(&[], 4).is_empty());
+        assert!(run_sweep(&[], 4).is_empty());
     }
 
     #[test]
@@ -187,5 +496,111 @@ mod tests {
                        "{}", run.label);
             assert_eq!(run.result.cost_dollars, direct.cost_dollars);
         }
+    }
+
+    #[test]
+    fn mixed_sweep_returns_cells_in_order_with_matching_kinds() {
+        let cells = mixed_grid();
+        for workers in [1usize, 3, 16] {
+            let runs = run_sweep(&cells, workers);
+            assert_eq!(runs.len(), cells.len());
+            for (run, cell) in runs.iter().zip(&cells) {
+                assert_eq!(run.label, cell.label());
+                match cell {
+                    SweepCell::Cluster(_) =>
+                        assert!(run.result.as_cluster().is_some(),
+                                "{}", run.label),
+                    SweepCell::Single(_) | SweepCell::Trace(_) =>
+                        assert!(run.result.as_sim().is_some(),
+                                "{}", run.label),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_sweep_worker_count_does_not_change_results() {
+        let cells = mixed_grid();
+        let one = run_sweep(&cells, 1);
+        let many = run_sweep(&cells, 8);
+        for (a, b) in one.iter().zip(&many) {
+            assert_eq!(a.result.mean_latency(), b.result.mean_latency(),
+                       "{}", a.label);
+            assert_eq!(a.result.total_throughput(),
+                       b.result.total_throughput(), "{}", a.label);
+            assert_eq!(a.result.cost_dollars(), b.result.cost_dollars(),
+                       "{}", a.label);
+        }
+    }
+
+    #[test]
+    fn sweep_cells_match_their_sequential_twins() {
+        let cells = mixed_grid();
+        let runs = run_sweep(&cells, default_workers());
+        for (run, cell) in runs.iter().zip(&cells) {
+            match cell {
+                SweepCell::Single(sc) => {
+                    let mut policy = sc.policy.clone();
+                    let want = sc.simulator().run(&mut policy);
+                    let got = run.result.as_sim().unwrap();
+                    assert_eq!(got.mean_latency(), want.mean_latency(),
+                               "{}", run.label);
+                    assert_eq!(got.cost_dollars, want.cost_dollars);
+                }
+                SweepCell::Cluster(sc) => {
+                    let want = sc.simulator().run().unwrap();
+                    let got = run.result.as_cluster().unwrap();
+                    assert_eq!(got, &want, "{}", run.label);
+                }
+                SweepCell::Trace(sc) => {
+                    let mut policy = sc.policy.clone();
+                    let want = sc.simulator()
+                        .run_trace(&mut policy, sc.trace());
+                    let got = run.result.as_sim().unwrap();
+                    assert_eq!(got.mean_latency(), want.mean_latency(),
+                               "{}", run.label);
+                    assert_eq!(got.cost_dollars, want.cost_dollars);
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "trace agent columns")]
+    fn trace_cell_rejects_reordered_agent_columns() {
+        let mut trace = Trace::paper_poisson(10, 1);
+        trace.agents.swap(0, 2); // columns no longer match the registry
+        TraceScenario::new("bad", SimConfig::paper(),
+                           AgentRegistry::paper(), trace,
+                           PolicyKind::adaptive());
+    }
+
+    #[test]
+    fn shared_trace_is_not_deep_copied_per_cell() {
+        let trace = Arc::new(Trace::paper_poisson(10, 1));
+        let cells: Vec<SweepCell> = PolicyKind::all().into_iter()
+            .map(|p| SweepCell::Trace(TraceScenario::new(
+                p.name(), SimConfig::paper(), AgentRegistry::paper(),
+                Arc::clone(&trace), p)))
+            .collect();
+        // One recording buffer, shared by every policy's cell.
+        assert_eq!(Arc::strong_count(&trace), 1 + cells.len());
+        let runs = run_sweep(&cells, 2);
+        assert!(runs.iter().all(|r| r.result.as_sim().is_some()));
+    }
+
+    #[test]
+    fn corpus_cells_carry_policy_and_trace_labels() {
+        let mut corpus = TraceCorpus::new();
+        corpus.push("day1", Trace::paper_poisson(10, 1));
+        corpus.push("day2", Trace::paper_poisson(10, 2));
+        let cells = TraceScenario::corpus(
+            &corpus, &SimConfig::paper(), &AgentRegistry::paper(),
+            &PolicyKind::adaptive()).unwrap();
+        let labels: Vec<&str> = cells.iter().map(SweepCell::label).collect();
+        assert_eq!(labels, vec!["adaptive/day1", "adaptive/day2"]);
+        let runs = run_sweep(&cells, 2);
+        assert!(runs.iter().all(|r| r.result.as_sim()
+                .is_some_and(|s| s.steps == 10)));
     }
 }

@@ -14,7 +14,9 @@ mod engine;
 mod result;
 
 pub use arena::SimArena;
-pub use batch::{run_batch, BatchRun, Scenario};
+pub use batch::{run_batch, run_sweep, BatchRun, CellResult,
+                ClusterScenario, Scenario, SweepArena, SweepCell,
+                SweepRun, TraceScenario};
 pub use engine::Simulator;
 pub use result::{AgentStats, SimResult, Timelines};
 

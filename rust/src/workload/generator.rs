@@ -23,6 +23,11 @@ pub enum WorkloadKind {
     /// One agent's rate multiplied by `factor` during [start, end) steps
     /// (§V.B spike, factor = 10).
     Spike { agent: usize, factor: f64, start: u64, end: u64 },
+    /// Several agents spike *together* by `factor` during [start, end)
+    /// steps — the correlated multi-agent burst a collaborative workflow
+    /// produces when one upstream request fans out (stress-grid
+    /// extension beyond §V.B's single-agent spike).
+    MultiSpike { agents: Vec<usize>, factor: f64, start: u64, end: u64 },
     /// One agent receives `share` of the *total* request volume, the rest
     /// split proportionally to their original rates (§V.B dominance,
     /// share = 0.9).
@@ -86,6 +91,14 @@ impl WorkloadGenerator {
             WorkloadKind::Scaled { factor } => base * factor,
             WorkloadKind::Spike { agent: a, factor, start, end } => {
                 if agent == *a && (*start..*end).contains(&step) {
+                    base * factor
+                } else {
+                    base
+                }
+            }
+            WorkloadKind::MultiSpike { agents, factor, start, end } => {
+                if agents.contains(&agent) && (*start..*end).contains(&step)
+                {
                     base * factor
                 } else {
                     base
@@ -199,6 +212,25 @@ mod tests {
         assert_eq!(g.mean_rate(1, 7), 400.0);
         assert_eq!(g.mean_rate(1, 8), 40.0);
         assert_eq!(g.mean_rate(0, 6), 80.0); // other agents unaffected
+    }
+
+    #[test]
+    fn multi_spike_hits_only_listed_agents_in_window() {
+        let g = WorkloadGenerator::new(
+            vec![80.0, 40.0, 45.0, 25.0],
+            WorkloadKind::MultiSpike {
+                agents: vec![0, 2], factor: 5.0, start: 4, end: 8,
+            },
+            ArrivalProcess::Deterministic, 1);
+        // Outside the window: everyone at base.
+        assert_eq!(g.mean_rate(0, 3), 80.0);
+        assert_eq!(g.mean_rate(2, 8), 45.0);
+        // Inside: the listed agents spike together...
+        assert_eq!(g.mean_rate(0, 4), 400.0);
+        assert_eq!(g.mean_rate(2, 7), 225.0);
+        // ...while unlisted agents are untouched.
+        assert_eq!(g.mean_rate(1, 5), 40.0);
+        assert_eq!(g.mean_rate(3, 6), 25.0);
     }
 
     #[test]

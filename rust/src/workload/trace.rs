@@ -3,13 +3,17 @@
 //! A trace is a dense (steps × agents) matrix of arrival counts. Serving
 //! and simulation runs can record the workload they saw and replay it
 //! bit-exactly later — the substitute for the production traces the paper
-//! did not publish (see DESIGN.md §4 substitutions).
+//! did not publish (see DESIGN.md §4 substitutions). A [`TraceCorpus`]
+//! is a labelled set of traces — a whole directory of recordings loaded
+//! at once, so the sweep engine can replay an entire corpus through its
+//! worker pool (`TraceScenario::corpus`).
 
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
+use crate::agents::AgentProfile;
 use crate::error::{Error, Result};
-use crate::workload::WorkloadGenerator;
+use crate::workload::{ArrivalProcess, WorkloadGenerator, WorkloadKind};
 
 /// A recorded arrival trace: `counts[step][agent]`.
 #[derive(Debug, Clone, PartialEq)]
@@ -36,6 +40,19 @@ impl Trace {
             counts.push(counts_buf.clone());
         }
         Trace { agents, dt, counts }
+    }
+
+    /// Record `steps` one-second steps of the paper's §IV.A workload with
+    /// Poisson arrivals under `seed` — the canonical recipe behind every
+    /// substitute corpus (repro trace cells, tests, benches), kept in one
+    /// place so they all record the identical stream.
+    pub fn paper_poisson(steps: u64, seed: u64) -> Trace {
+        let names: Vec<String> = AgentProfile::paper_agents().iter()
+            .map(|p| p.name.clone()).collect();
+        let mut gen = WorkloadGenerator::new(
+            AgentProfile::paper_arrival_rates(), WorkloadKind::Steady,
+            ArrivalProcess::Poisson, seed);
+        Trace::record(&mut gen, names, steps, 1.0)
     }
 
     /// Number of steps recorded.
@@ -105,6 +122,92 @@ impl Trace {
     }
 }
 
+/// A labelled set of recorded traces, loadable from (and savable to) a
+/// directory of `*.csv` files. Labels are the file stems; entries are
+/// kept sorted by label so a reloaded corpus sweeps in a stable order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceCorpus {
+    entries: Vec<(String, Trace)>,
+}
+
+impl TraceCorpus {
+    /// Empty corpus.
+    pub fn new() -> TraceCorpus {
+        TraceCorpus::default()
+    }
+
+    /// Add a labelled trace, keeping entries sorted by label. Labels
+    /// mirror file names (one trace per label), so pushing an existing
+    /// label *replaces* its trace — exactly what re-saving `<label>.csv`
+    /// would do — instead of silently keeping a duplicate that
+    /// [`TraceCorpus::save_dir`] would clobber on disk.
+    pub fn push(&mut self, label: impl Into<String>, trace: Trace) {
+        let label = label.into();
+        match self.entries
+            .binary_search_by(|(existing, _)| existing.as_str()
+                              .cmp(label.as_str()))
+        {
+            Ok(at) => self.entries[at].1 = trace,
+            Err(at) => self.entries.insert(at, (label, trace)),
+        }
+    }
+
+    /// Load every `*.csv` under `dir` (non-recursive) as one corpus.
+    ///
+    /// An empty directory yields an empty corpus (and therefore an empty
+    /// sweep). A malformed file surfaces a [`Error::Trace`] labelled with
+    /// the offending path instead of a panic; other files' extensions are
+    /// ignored entirely.
+    pub fn load_dir(dir: &Path) -> Result<TraceCorpus> {
+        let mut paths: Vec<std::path::PathBuf> = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) == Some("csv") {
+                paths.push(path);
+            }
+        }
+        paths.sort();
+        let mut corpus = TraceCorpus::new();
+        for path in paths {
+            let label = path.file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or("trace")
+                .to_string();
+            let trace = Trace::load(&path).map_err(|e| Error::Trace(
+                format!("{}: {e}", path.display())))?;
+            // Through push(), so label ordering and the one-trace-per-
+            // label rule hold even for colliding fallback labels.
+            corpus.push(label, trace);
+        }
+        Ok(corpus)
+    }
+
+    /// Save every trace as `<label>.csv` under `dir` (created if needed).
+    /// A saved corpus reloads bit-equal via [`TraceCorpus::load_dir`].
+    pub fn save_dir(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        for (label, trace) in &self.entries {
+            trace.save(&dir.join(format!("{label}.csv")))?;
+        }
+        Ok(())
+    }
+
+    /// Number of traces in the corpus.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when the corpus holds no traces.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Labelled traces in label order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Trace)> {
+        self.entries.iter().map(|(label, trace)| (label.as_str(), trace))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,6 +240,68 @@ mod tests {
                                   vec!["a".into(), "b".into()], 3, 1.0);
         for row in &trace.counts {
             assert_eq!(row, &vec![10.0, 5.0]);
+        }
+    }
+
+    #[test]
+    fn corpus_keeps_label_order_and_roundtrips() {
+        let mut corpus = TraceCorpus::new();
+        for (seed, label) in [(3u64, "wed"), (1, "mon"), (2, "tue")] {
+            let mut gen = WorkloadGenerator::new(
+                vec![10.0, 5.0], WorkloadKind::Steady,
+                ArrivalProcess::Poisson, seed);
+            corpus.push(label, Trace::record(
+                &mut gen, vec!["a".into(), "b".into()], 12, 1.0));
+        }
+        let labels: Vec<&str> = corpus.iter().map(|(l, _)| l).collect();
+        assert_eq!(labels, vec!["mon", "tue", "wed"]);
+
+        let dir = crate::util::TempDir::new("corpus").unwrap();
+        corpus.save_dir(dir.path()).unwrap();
+        let loaded = TraceCorpus::load_dir(dir.path()).unwrap();
+        assert_eq!(corpus, loaded);
+    }
+
+    #[test]
+    fn corpus_push_replaces_duplicate_labels() {
+        let mut corpus = TraceCorpus::new();
+        let mut gen_a = WorkloadGenerator::new(
+            vec![10.0], WorkloadKind::Steady,
+            ArrivalProcess::Deterministic, 1);
+        let mut gen_b = WorkloadGenerator::new(
+            vec![20.0], WorkloadKind::Steady,
+            ArrivalProcess::Deterministic, 1);
+        let a = Trace::record(&mut gen_a, vec!["x".into()], 5, 1.0);
+        let b = Trace::record(&mut gen_b, vec!["x".into()], 5, 1.0);
+        assert_ne!(a, b);
+        corpus.push("day1", a);
+        corpus.push("day1", b.clone());
+        // One trace per label — the second push replaced the first,
+        // matching what re-saving day1.csv on disk would do.
+        assert_eq!(corpus.len(), 1);
+        let (_, kept) = corpus.iter().next().unwrap();
+        assert_eq!(kept, &b);
+    }
+
+    #[test]
+    fn corpus_of_empty_dir_is_empty_and_skips_non_csv() {
+        let dir = crate::util::TempDir::new("corpus").unwrap();
+        assert!(TraceCorpus::load_dir(dir.path()).unwrap().is_empty());
+
+        std::fs::write(dir.path().join("notes.txt"), "not a trace").unwrap();
+        let corpus = TraceCorpus::load_dir(dir.path()).unwrap();
+        assert!(corpus.is_empty());
+        assert_eq!(corpus.len(), 0);
+    }
+
+    #[test]
+    fn corpus_labels_malformed_files() {
+        let dir = crate::util::TempDir::new("corpus").unwrap();
+        std::fs::write(dir.path().join("bad.csv"), "nonsense\n").unwrap();
+        let err = TraceCorpus::load_dir(dir.path()).unwrap_err();
+        match err {
+            Error::Trace(msg) => assert!(msg.contains("bad.csv"), "{msg}"),
+            other => panic!("expected Error::Trace, got {other}"),
         }
     }
 

@@ -4,11 +4,14 @@
 use agentsrv::agents::{AgentProfile, AgentRegistry, Priority};
 use agentsrv::allocator::{all_policies, policy_by_name, AllocContext,
                           PolicyKind};
+use agentsrv::cluster::{ClusterSimulator, MigrationModel};
 use agentsrv::serverless::GpuPricing;
-use agentsrv::sim::batch::{run_batch, Scenario};
+use agentsrv::sim::batch::{run_batch, run_sweep, ClusterScenario,
+                           Scenario, SweepCell, TraceScenario};
 use agentsrv::sim::{SimConfig, Simulator};
 use agentsrv::util::check::{forall, vec_uniform};
 use agentsrv::util::Rng;
+use agentsrv::workload::trace::Trace;
 use agentsrv::workload::{ArrivalProcess, WorkloadKind};
 
 /// Random but always-valid agent set: minimums jointly feasible.
@@ -269,6 +272,163 @@ fn prop_batch_matches_sequential_per_agent() {
             assert_eq!(a.throughput.mean(), b.throughput.mean());
             assert_eq!(a.processed_total, b.processed_total);
             assert_eq!(a.final_queue, b.final_queue);
+        }
+    }
+}
+
+/// Cluster cells through the sweep engine must be a pure speedup: for
+/// migration on/off, both arrival processes, and a skewed workload that
+/// actually triggers migrations, every cell's full [`ClusterResult`] is
+/// bit-identical (`==`, no tolerance) to a sequential
+/// `ClusterSimulator::run` of the same cell, at 1, 2, and 8 workers.
+#[test]
+fn prop_cluster_sweep_is_bit_identical_to_sequential_run() {
+    for process in [ArrivalProcess::Deterministic, ArrivalProcess::Poisson] {
+        for migration in [None, Some(MigrationModel::default())] {
+            let mut cells = Vec::new();
+            let mut expected = Vec::new();
+            for (shape, kind) in [
+                ("steady", WorkloadKind::Steady),
+                ("domskew", WorkloadKind::Dominance { agent: 0, share: 0.9 }),
+            ] {
+                for (gpus, cap) in
+                    [(1usize, 1.0), (2, 1.0), (2, 0.6), (4, 1.0)]
+                {
+                    let mut cfg = SimConfig::paper();
+                    cfg.workload_kind = kind.clone();
+                    cfg.arrival_process = process;
+                    let sequential = ClusterSimulator::new(
+                        cfg.clone(), AgentRegistry::paper(), gpus, cap,
+                        migration.clone()).unwrap();
+                    expected.push(sequential.run().unwrap());
+                    cells.push(SweepCell::Cluster(ClusterScenario::new(
+                        format!("{shape}/{gpus}gpu/cap{cap}"), cfg,
+                        AgentRegistry::paper(), gpus, cap,
+                        migration.clone()).unwrap()));
+                }
+            }
+            for workers in [1usize, 2, 8] {
+                let runs = run_sweep(&cells, workers);
+                assert_eq!(runs.len(), expected.len());
+                for (got, want) in runs.iter().zip(&expected) {
+                    let cluster = got.result.as_cluster()
+                        .expect("cluster cell yields ClusterResult");
+                    assert_eq!(
+                        cluster, want,
+                        "{} @ {workers} workers ({process:?}, migration \
+                         {}): sweep diverged from sequential",
+                        got.label,
+                        if migration.is_some() { "on" } else { "off" });
+                }
+            }
+        }
+    }
+}
+
+/// Trace-replay cells through the sweep engine match a direct
+/// `Simulator::run_trace` of the same recorded stream, for every
+/// built-in policy at 1, 2, and 8 workers — aggregates and per-agent
+/// series alike.
+#[test]
+fn prop_trace_sweep_is_bit_identical_to_run_trace() {
+    let mut cells = Vec::new();
+    let mut expected = Vec::new();
+    for seed in [7u64, 42] {
+        let trace = Trace::paper_poisson(60, seed);
+        for kind in PolicyKind::all() {
+            let sequential = Simulator::with_registry(
+                SimConfig::paper(), AgentRegistry::paper());
+            let mut reference = policy_by_name(kind.name())
+                .expect("built-in policy");
+            expected.push(
+                sequential.run_trace(reference.as_mut(), &trace));
+            cells.push(SweepCell::Trace(TraceScenario::new(
+                format!("{}/seed{seed}", kind.name()), SimConfig::paper(),
+                AgentRegistry::paper(), trace.clone(), kind)));
+        }
+    }
+    for workers in [1usize, 2, 8] {
+        let runs = run_sweep(&cells, workers);
+        assert_eq!(runs.len(), expected.len());
+        for (got, want) in runs.iter().zip(&expected) {
+            let sim = got.result.as_sim()
+                .expect("trace cell yields SimResult");
+            assert!(
+                sim.mean_latency() == want.mean_latency()
+                    && sim.total_throughput() == want.total_throughput()
+                    && sim.cost_dollars == want.cost_dollars,
+                "{} @ {workers} workers: trace sweep diverged (latency \
+                 {} vs {}, tput {} vs {}, cost {} vs {})",
+                got.label, sim.mean_latency(), want.mean_latency(),
+                sim.total_throughput(), want.total_throughput(),
+                sim.cost_dollars, want.cost_dollars);
+            for (a, b) in sim.per_agent.iter().zip(&want.per_agent) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.latency.mean(), b.latency.mean(),
+                           "{}/{}", got.label, a.name);
+                assert_eq!(a.throughput.mean(), b.throughput.mean());
+                assert_eq!(a.processed_total, b.processed_total);
+                assert_eq!(a.final_queue, b.final_queue);
+            }
+        }
+    }
+}
+
+/// A mixed grid — single-GPU, cluster, and trace cells interleaved —
+/// runs through one pool with cell order preserved and every kind
+/// bit-identical to its sequential twin at every worker count.
+#[test]
+fn prop_mixed_sweep_is_bit_identical_per_cell_kind() {
+    let trace = Trace::paper_poisson(50, 42);
+
+    let mut cells = Vec::new();
+    for kind in PolicyKind::all() {
+        cells.push(SweepCell::Single(
+            Scenario::paper(format!("single/{}", kind.name()),
+                            kind.clone())));
+        cells.push(SweepCell::Trace(TraceScenario::new(
+            format!("trace/{}", kind.name()), SimConfig::paper(),
+            AgentRegistry::paper(), trace.clone(), kind)));
+    }
+    for (gpus, migration) in
+        [(2usize, None), (2, Some(MigrationModel::default())), (4, None)]
+    {
+        cells.push(SweepCell::Cluster(ClusterScenario::new(
+            format!("cluster/{gpus}gpu"), SimConfig::paper(),
+            AgentRegistry::paper(), gpus, 1.0, migration).unwrap()));
+    }
+
+    for workers in [1usize, 2, 8] {
+        let runs = run_sweep(&cells, workers);
+        assert_eq!(runs.len(), cells.len());
+        for (run, cell) in runs.iter().zip(&cells) {
+            assert_eq!(run.label, cell.label(), "order at {workers}");
+            match cell {
+                SweepCell::Single(sc) => {
+                    let mut policy = policy_by_name(sc.policy.name())
+                        .expect("built-in policy");
+                    let want = sc.simulator().run(policy.as_mut());
+                    let got = run.result.as_sim().unwrap();
+                    assert!(got.mean_latency() == want.mean_latency()
+                            && got.cost_dollars == want.cost_dollars,
+                            "{} @ {workers}", run.label);
+                }
+                SweepCell::Cluster(sc) => {
+                    let want = sc.simulator().run().unwrap();
+                    let got = run.result.as_cluster().unwrap();
+                    assert_eq!(got, &want, "{} @ {workers}", run.label);
+                }
+                SweepCell::Trace(sc) => {
+                    let mut policy = policy_by_name(sc.policy.name())
+                        .expect("built-in policy");
+                    let want = sc.simulator()
+                        .run_trace(policy.as_mut(), sc.trace());
+                    let got = run.result.as_sim().unwrap();
+                    assert!(got.mean_latency() == want.mean_latency()
+                            && got.cost_dollars == want.cost_dollars,
+                            "{} @ {workers}", run.label);
+                }
+            }
         }
     }
 }

@@ -1,12 +1,14 @@
-//! Integration: trace record → replay equivalence and the Eq. 2
-//! objective.
+//! Integration: trace record → replay equivalence, corpus round-trips
+//! through a directory, and the Eq. 2 objective.
 
-use agentsrv::agents::AgentProfile;
-use agentsrv::allocator::{AdaptivePolicy, StaticEqualPolicy};
+use agentsrv::agents::{AgentProfile, AgentRegistry};
+use agentsrv::allocator::{AdaptivePolicy, PolicyKind, StaticEqualPolicy};
+use agentsrv::sim::batch::{run_sweep, TraceScenario};
 use agentsrv::sim::{SimConfig, Simulator};
 use agentsrv::util::TempDir;
-use agentsrv::workload::trace::Trace;
+use agentsrv::workload::trace::{Trace, TraceCorpus};
 use agentsrv::workload::WorkloadGenerator;
+use agentsrv::Error;
 
 #[test]
 fn replaying_a_recorded_trace_reproduces_the_generator_run() {
@@ -45,6 +47,101 @@ fn trace_replay_survives_disk_roundtrip() {
     let b = sim.run_trace(&mut AdaptivePolicy::default(), &loaded);
     assert_eq!(a.mean_latency(), b.mean_latency());
     assert_eq!(a.steps, 50);
+}
+
+#[test]
+fn recorded_then_saved_corpus_reloads_bit_equal() {
+    let mut corpus = TraceCorpus::new();
+    for seed in [1u64, 2, 3] {
+        corpus.push(format!("day{seed}"), Trace::paper_poisson(40, seed));
+    }
+    let dir = TempDir::new("corpus").unwrap();
+    corpus.save_dir(dir.path()).unwrap();
+    let loaded = TraceCorpus::load_dir(dir.path()).unwrap();
+    assert_eq!(corpus, loaded);
+
+    // And the reloaded corpus replays bit-identically to the original:
+    // the sweep over the saved-and-reloaded traces matches a direct
+    // run_trace of each in-memory recording.
+    let cells = TraceScenario::corpus(
+        &loaded, &SimConfig::paper(), &AgentRegistry::paper(),
+        &PolicyKind::adaptive()).unwrap();
+    assert_eq!(cells.len(), 3);
+    let runs = run_sweep(&cells, 2);
+    for (run, (label, trace)) in runs.iter().zip(corpus.iter()) {
+        assert_eq!(run.label, format!("adaptive/{label}"));
+        let sim = Simulator::new(SimConfig::paper(),
+                                 AgentProfile::paper_agents());
+        let want = sim.run_trace(&mut AdaptivePolicy::default(), trace);
+        let got = run.result.as_sim().expect("trace cell");
+        assert_eq!(got.mean_latency(), want.mean_latency(), "{label}");
+        assert_eq!(got.total_throughput(), want.total_throughput());
+        assert_eq!(got.cost_dollars, want.cost_dollars);
+    }
+}
+
+#[test]
+fn empty_corpus_directory_yields_an_empty_sweep() {
+    let dir = TempDir::new("corpus").unwrap();
+    let corpus = TraceCorpus::load_dir(dir.path()).unwrap();
+    assert!(corpus.is_empty());
+    let cells = TraceScenario::corpus(
+        &corpus, &SimConfig::paper(), &AgentRegistry::paper(),
+        &PolicyKind::adaptive()).unwrap();
+    assert!(cells.is_empty());
+    assert!(run_sweep(&cells, 8).is_empty());
+}
+
+#[test]
+fn foreign_corpus_surfaces_labelled_error_instead_of_panicking() {
+    // A trace recorded against a different deployment is well-formed CSV
+    // — load_dir accepts it — but its agent columns cannot drive the
+    // paper registry; building the sweep must fail with a labelled
+    // Error::Trace, not panic.
+    let mut gen = WorkloadGenerator::new(
+        vec![10.0, 5.0],
+        agentsrv::workload::WorkloadKind::Steady,
+        agentsrv::workload::ArrivalProcess::Poisson, 1);
+    let foreign = Trace::record(
+        &mut gen, vec!["alpha".into(), "beta".into()], 5, 1.0);
+    let dir = TempDir::new("corpus").unwrap();
+    foreign.save(&dir.path().join("foreign.csv")).unwrap();
+    let corpus = TraceCorpus::load_dir(dir.path()).unwrap();
+
+    let err = TraceScenario::corpus(
+        &corpus, &SimConfig::paper(), &AgentRegistry::paper(),
+        &PolicyKind::adaptive()).unwrap_err();
+    match err {
+        Error::Trace(msg) => assert!(
+            msg.contains("foreign") && msg.contains("alpha"),
+            "error must name the trace and its columns: {msg}"),
+        other => panic!("expected Error::Trace, got {other}"),
+    }
+}
+
+#[test]
+fn malformed_corpus_file_surfaces_labelled_trace_error() {
+    let dir = TempDir::new("corpus").unwrap();
+    Trace::paper_poisson(10, 1).save(&dir.path().join("good.csv"))
+        .unwrap();
+    // Three malformed flavors: garbage header, ragged row, bad number.
+    for (name, body) in [
+        ("garbage.csv", "nonsense\n"),
+        ("ragged.csv", "# dt=1\nstep,a\n0,1\n1,2,3\n"),
+        ("nan_text.csv", "# dt=1\nstep,a\n0,xyz\n"),
+    ] {
+        std::fs::write(dir.path().join(name), body).unwrap();
+        let err = TraceCorpus::load_dir(dir.path()).unwrap_err();
+        match err {
+            Error::Trace(msg) => assert!(
+                msg.contains(name),
+                "error for {name} must name the file: {msg}"),
+            other => panic!("{name}: expected Error::Trace, got {other}"),
+        }
+        std::fs::remove_file(dir.path().join(name)).unwrap();
+    }
+    // With the malformed files gone, the survivor loads fine.
+    assert_eq!(TraceCorpus::load_dir(dir.path()).unwrap().len(), 1);
 }
 
 #[test]
