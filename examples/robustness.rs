@@ -1,6 +1,7 @@
 //! §V.B robustness & scalability: the four stress experiments, plus the
 //! full mixed stress sweep — single-GPU policy×shape cells, the §VI
-//! cluster grid, and trace-replay cells — through one worker pool.
+//! cluster grid, trace-replay cells, and serverless-economics cost
+//! cells — through one worker pool.
 //!
 //! ```sh
 //! cargo run --release --example robustness
@@ -56,8 +57,11 @@ fn main() {
         .filter(|c| matches!(c, SweepCell::Cluster(_))).count();
     let traces = cells.iter()
         .filter(|c| matches!(c, SweepCell::Trace(_))).count();
+    let costs = cells.iter()
+        .filter(|c| matches!(c, SweepCell::Cost(_))).count();
     println!("\n== mixed stress sweep: {singles} single-GPU + {clusters} \
-              cluster + {traces} trace cells, {workers} worker(s) ==");
+              cluster + {traces} trace + {costs} cost cells, {workers} \
+              worker(s) ==");
     let start = std::time::Instant::now();
     let runs = run_sweep(&cells, workers);
     let elapsed = start.elapsed();
@@ -81,4 +85,14 @@ fn main() {
         .map(|c| c.migrations)
         .sum();
     println!("  cluster cells migrated {migrations} time(s) in total");
+    let cold_starts: u64 = runs.iter()
+        .filter_map(|r| r.result.economics())
+        .map(|e| e.total_cold_starts())
+        .sum();
+    let spent: f64 = runs.iter()
+        .filter(|r| r.label.starts_with("cost/"))
+        .map(|r| r.result.cost_dollars())
+        .sum();
+    println!("  cost cells billed ${spent:.3} with {cold_starts} \
+              cold start(s)");
 }

@@ -10,7 +10,10 @@
 //!   3. policy × load — every policy across arrival-rate scales,
 //!      locating the round-robin crossover;
 //!   4. cluster & trace axes — the §VI multi-GPU grid and recorded-trace
-//!      replays, as heterogeneous cells through the same worker pool.
+//!      replays, as heterogeneous cells through the same worker pool;
+//!   5. serverless economics — the Table II cost tie under all-warm
+//!      settings, and the pricing × scale-to-zero × cold-start axes
+//!      that break it, as `CostScenario` cells.
 //!
 //! Each sweep builds its grid of [`Scenario`]s (or mixed [`SweepCell`]s)
 //! and fans it across the batch engine's worker threads; results are
@@ -38,6 +41,7 @@ fn main() {
     sweep_min_gpu(workers);
     sweep_policy_by_load(workers);
     sweep_cluster_and_traces(workers);
+    sweep_economics(workers);
 }
 
 /// Paper agents with one mutation applied, validated into a registry.
@@ -154,5 +158,43 @@ fn sweep_cluster_and_traces(workers: usize) {
     }
     println!("(the §VI placement/migration axes and recorded-trace \
               replays share the batch workers with the single-GPU \
-              sweeps; §V.B/§VI)");
+              sweeps; §V.B/§VI)\n");
+}
+
+fn sweep_economics(workers: usize) {
+    println!("== sweep 5: serverless economics (pricing × scale-to-zero \
+              × cold start) ==");
+    println!("{:<14} {:>9} {:>10} {:>9} {:>8} {:>6} {:>6} {:>11}",
+             "policy", "paper($)", "burst($)", "s2z($)", "saved%",
+             "wakes", "warm", "s2z lat(s)");
+    for r in repro::economics_experiment(100) {
+        println!("{:<14} {:>9.4} {:>10.4} {:>9.4} {:>8.1} {:>6} \
+                  {:>6.2} {:>11.1}",
+                 r.policy, r.paper_warm_cost, r.burst_warm_cost,
+                 r.burst_s2z_cost, r.savings_pct, r.cold_starts,
+                 r.mean_warm_fraction, r.burst_s2z_latency_s);
+    }
+    println!("(all-warm, every full-GPU policy bills Table II's $0.020 \
+              per 100 s — cost cannot separate them; a 5 s idle timeout \
+              reclaims what each policy parks on idle agents, so the \
+              tie breaks; §II.B/§III.D)\n");
+
+    // The full grid, through the same worker pool: summarize the
+    // timeout axis under T4 pricing for the adaptive policy.
+    let cells = repro::cost_grid(100, &[42]);
+    println!("adaptive @ t4, idle-burst workload ({} grid cells total):",
+             cells.len());
+    println!("{:<44} {:>9} {:>6} {:>11}", "cell", "cost($)", "wakes",
+             "mean lat(s)");
+    for run in run_sweep(&cells, workers) {
+        if !run.label.starts_with("cost/adaptive/t4/") {
+            continue;
+        }
+        let econ = run.result.economics().expect("cost cell");
+        println!("{:<44} {:>9.4} {:>6} {:>11.1}", run.label,
+                 run.result.cost_dollars(), econ.total_cold_starts(),
+                 run.result.mean_latency());
+    }
+    println!("(slower cold starts cost latency, not dollars; tighter \
+              idle timeouts trade the reverse)");
 }

@@ -10,7 +10,10 @@
 //!     count × per-GPU capacity × migration model, plus skewed-workload
 //!     migration cells);
 //!   * corpus — `repro::trace_grid`: recorded Poisson traces (one per
-//!     seed) replayed under every policy.
+//!     seed) replayed under every policy;
+//!   * cost — `repro::cost_grid`: the serverless-economics axes
+//!     (pricing × scale-to-zero timeout × cold-start distribution ×
+//!     policy) over the idle-burst workload, as `CostScenario` cells.
 //!
 //! `--quick` shrinks everything to 500 steps × 2 seeds for CI.
 //!
@@ -29,7 +32,9 @@
 //! Run: `cargo bench --bench sweep_scaling [-- --quick] [-- --json FILE]`
 //! With `--json`, the measured tables are also written as JSON (the
 //! format documented in BENCH_sweep.json, `results` key: the single-GPU
-//! table plus `cluster` and `corpus` sections).
+//! table plus `cluster`, `corpus`, and `cost` sections). The written
+//! report is what CI's bench-regression gate compares against the
+//! committed BENCH_sweep.json baseline (`agentsrv bench-gate`).
 
 use std::time::{Duration, Instant};
 
@@ -103,6 +108,11 @@ fn main() {
     let (corpus_seq_s, corpus_rows) = sweep_section(
         "trace corpus", &corpus_cells, steps, reps, sequential_trace);
 
+    // ---- Serverless-economics grid through the same pool -------------
+    let cost_cells = repro::cost_grid(steps, &seeds);
+    let (cost_seq_s, cost_rows) = sweep_section(
+        "cost grid", &cost_cells, steps, reps, sequential_cost);
+
     if let Some(path) = json_path {
         let json = to_json(&ReportInput {
             grid: &grid,
@@ -112,6 +122,7 @@ fn main() {
             rows: &rows,
             cluster: (cluster_cells.len(), cluster_seq_s, &cluster_rows),
             corpus: (corpus_cells.len(), corpus_seq_s, &corpus_rows),
+            cost: (cost_cells.len(), cost_seq_s, &cost_rows),
         }, &path);
         std::fs::write(&path, json).expect("write json report");
         println!("\njson report -> {path}");
@@ -140,6 +151,24 @@ fn sequential_cluster(cells: &[SweepCell]) -> Vec<SweepRun> {
                 cs.simulator().run().expect("feasible cluster cell")),
         },
         _ => unreachable!("cluster grid contains only cluster cells"),
+    }).collect()
+}
+
+/// The pre-batch economics path: `Simulator::run` through a boxed
+/// `dyn AllocationPolicy` per cell (the config carries the economics
+/// model, so the sequential twin meters identically).
+fn sequential_cost(cells: &[SweepCell]) -> Vec<SweepRun> {
+    cells.iter().map(|cell| match cell {
+        SweepCell::Cost(cs) => {
+            let mut policy = policy_by_name(cs.policy.name())
+                .expect("grid uses built-in policies");
+            SweepRun {
+                label: cs.label.clone(),
+                result: CellResult::Sim(
+                    cs.simulator().run(policy.as_mut())),
+            }
+        }
+        _ => unreachable!("cost grid contains only cost cells"),
     }).collect()
 }
 
@@ -219,6 +248,8 @@ fn assert_sweep_identical(reference: &[SweepRun], got: &[SweepRun],
                     == have.result.cost_dollars(),
                 "{}: sweep@{workers} diverged from sequential",
                 want.label);
+        assert_eq!(want.result.economics(), have.result.economics(),
+                   "{}: sweep@{workers} economics diverged", want.label);
     }
 }
 
@@ -249,6 +280,8 @@ struct ReportInput<'a> {
     cluster: (usize, f64, &'a [(usize, f64, f64)]),
     /// (cells, sequential seconds, per-worker rows).
     corpus: (usize, f64, &'a [(usize, f64, f64)]),
+    /// (cells, sequential seconds, per-worker rows).
+    cost: (usize, f64, &'a [(usize, f64, f64)]),
 }
 
 fn worker_rows(n_cells: usize, rows: &[(usize, f64, f64)]) -> Value {
@@ -284,6 +317,7 @@ fn results_value(input: &ReportInput<'_>) -> Value {
     let n = input.grid.len();
     let (cluster_cells, cluster_seq_s, cluster_rows) = input.cluster;
     let (corpus_cells, corpus_seq_s, corpus_rows) = input.corpus;
+    let (cost_cells, cost_seq_s, cost_rows) = input.cost;
     json::obj(vec![
         ("grid", json::obj(vec![
             ("scenarios", json::num(n as f64)),
@@ -303,6 +337,8 @@ fn results_value(input: &ReportInput<'_>) -> Value {
          sweep_section_value(cluster_cells, cluster_seq_s, cluster_rows)),
         ("corpus",
          sweep_section_value(corpus_cells, corpus_seq_s, corpus_rows)),
+        ("cost",
+         sweep_section_value(cost_cells, cost_seq_s, cost_rows)),
     ])
 }
 

@@ -5,8 +5,9 @@
 //!
 //! Two levels:
 //!
-//! * **Cluster level** ([`placement`]): agents are packed onto GPUs by
-//!   first-fit-decreasing over their minimum fractions; a rebalancer
+//! * **Cluster level** ([`first_fit_decreasing`]): agents are packed
+//!   onto GPUs by first-fit-decreasing over their minimum fractions; a
+//!   rebalancer
 //!   migrates an agent when inter-GPU demand imbalance exceeds a
 //!   threshold, paying a model-size-dependent transfer penalty during
 //!   which the agent cannot serve (the "inter-GPU communication

@@ -4,7 +4,7 @@ use crate::agents::AgentRegistry;
 use crate::cluster::{first_fit_decreasing, ClusterAllocator, Placement};
 use crate::error::Result;
 use crate::metrics::Streaming;
-use crate::serverless::BillingMeter;
+use crate::serverless::{EconInstruments, EconomicsReport};
 use crate::sim::SimConfig;
 use crate::workload::WorkloadGenerator;
 
@@ -52,6 +52,8 @@ pub struct ClusterArena {
     observed: Vec<f64>,
     alloc: Vec<f64>,
     stalled_until: Vec<f64>,
+    // Model-size cache for the serverless lifecycle.
+    model_mb: Vec<u32>,
     // Per-GPU rows (previously re-allocated every step).
     demand: Vec<f64>,
     gpu_cap: Vec<f64>,
@@ -81,6 +83,7 @@ impl ClusterArena {
             buf.clear();
             buf.resize(n_agents, 0.0);
         }
+        self.model_mb.clear();
         for buf in [&mut self.demand, &mut self.gpu_cap, &mut self.gpu_done]
         {
             buf.clear();
@@ -114,6 +117,10 @@ pub struct ClusterResult {
     pub migration_stall_s: f64,
     /// Billed cost (all GPUs).
     pub cost_dollars: f64,
+    /// Per-agent cost, cold-start, and warm-fraction breakdown, present
+    /// when the run's config enabled an
+    /// [`EconomicsModel`](crate::serverless::EconomicsModel).
+    pub economics: Option<EconomicsReport>,
 }
 
 impl ClusterResult {
@@ -178,13 +185,20 @@ impl ClusterSimulator {
         let mut workload = WorkloadGenerator::new(
             cfg.arrival_rates.clone(), cfg.workload_kind.clone(),
             cfg.arrival_process, cfg.seed);
-        let mut billing = BillingMeter::new(cfg.pricing);
+        // Billing, per-agent metering, and the scale-to-zero lifecycle,
+        // shared with the single-GPU engine via EconInstruments (the
+        // economics model's pricing replaces the config meter for the
+        // run).
+        let mut econ = EconInstruments::new(
+            cfg.economics.as_ref(), cfg.pricing, n, cfg.seed);
 
         arena.reset(n, self.n_gpus);
         let ClusterArena {
             queues, rates, counts, observed, alloc, stalled_until,
-            demand, gpu_cap, gpu_done, latency, throughput, gpu_util,
+            model_mb, demand, gpu_cap, gpu_done, latency, throughput,
+            gpu_util,
         } = arena;
+        model_mb.extend(self.registry.profiles().iter().map(|p| p.model_mb));
         let base_tput = self.registry.base_tput();
 
         let mut migrations = 0u64;
@@ -248,14 +262,24 @@ impl ClusterSimulator {
             allocator.allocate(&self.registry, &observed[..], &queues[..],
                                step, self.capacity_per_gpu, &mut alloc[..]);
 
+            // Agents that cannot serve this step forfeit their allocation
+            // (and are not billed for it): a migrating agent's model is
+            // in flight; a scaled-to-zero agent is cold or still warming.
+            // (warm_fraction tracks instance warmth only — migration
+            // stalls are reported via migration_stall_s.)
+            for i in 0..n {
+                if now < stalled_until[i] {
+                    alloc[i] = 0.0;
+                }
+            }
+            econ.apply_lifecycle(step, cfg.dt, &queues[..], &model_mb[..],
+                                 &mut alloc[..]);
+
             gpu_cap.fill(0.0);
             gpu_done.fill(0.0);
             let mut total_alloc = 0.0;
             for i in 0..n {
-                let mut g = alloc[i];
-                if now < stalled_until[i] {
-                    g = 0.0; // migrating: model is in flight
-                }
+                let g = alloc[i];
                 total_alloc += g;
                 let rate = base_tput[i] * g;
                 let cap = rate * cfg.dt;
@@ -279,8 +303,11 @@ impl ClusterSimulator {
                     gpu_util[g].push(gpu_done[g] / gpu_cap[g]);
                 }
             }
-            billing.charge(total_alloc, cfg.dt);
+            econ.charge_step(total_alloc, &alloc[..], cfg.dt);
         }
+
+        let (cost_dollars, _gpu_seconds, economics) =
+            econ.finish(cfg.steps);
 
         Ok(ClusterResult {
             n_gpus: self.n_gpus,
@@ -290,7 +317,8 @@ impl ClusterSimulator {
             gpu_utilization: gpu_util.iter().map(Streaming::mean).collect(),
             migrations,
             migration_stall_s,
-            cost_dollars: billing.total_cost(),
+            cost_dollars,
+            economics,
         })
     }
 }
@@ -387,6 +415,78 @@ mod tests {
             let fresh = migrating.run().unwrap();
             assert!(fresh.migrations >= 1, "skew must trigger migration");
             assert_eq!(reused, fresh, "migrating cluster");
+        }
+    }
+
+    #[test]
+    fn all_warm_economics_matches_plain_cluster_billing() {
+        // Enabling the paper's all-warm economics must not change the
+        // cluster's total bill — it only adds the per-agent breakdown.
+        let mut cfg = SimConfig::paper();
+        let plain = ClusterSimulator::new(
+            cfg.clone(), AgentRegistry::paper(), 2, 1.0, None)
+            .unwrap().run().unwrap();
+        cfg.economics =
+            Some(crate::serverless::EconomicsModel::paper_all_warm());
+        let econ_run = ClusterSimulator::new(
+            cfg, AgentRegistry::paper(), 2, 1.0, None)
+            .unwrap().run().unwrap();
+        assert!((econ_run.cost_dollars - plain.cost_dollars).abs() < 1e-12);
+        let econ = econ_run.economics.as_ref().expect("economics enabled");
+        assert!((econ.total_cost() - econ_run.cost_dollars).abs() < 1e-12);
+        assert_eq!(econ.cold_starts, vec![0; 4]);
+        assert_eq!(econ.warm_fraction, vec![1.0; 4]);
+        assert_eq!(plain.economics, None);
+    }
+
+    #[test]
+    fn cluster_scale_to_zero_reclaims_idle_gpu_spend() {
+        // NLP and reasoning hard-idle outside a mid-run burst: with
+        // scale-to-zero their instances are torn down, the cluster bill
+        // drops, and the burst pays cold starts — all visible in the
+        // report.
+        let mut cfg = SimConfig::paper();
+        cfg.workload_kind = crate::workload::WorkloadKind::Burst {
+            agents: vec![1, 3], start: 40, end: 60,
+        };
+        cfg.economics =
+            Some(crate::serverless::EconomicsModel::paper_all_warm());
+        let warm = ClusterSimulator::new(
+            cfg.clone(), AgentRegistry::paper(), 2, 1.0, None)
+            .unwrap().run().unwrap();
+        cfg.economics = Some(
+            crate::serverless::EconomicsModel::with_idle_timeout(5.0));
+        let s2z = ClusterSimulator::new(
+            cfg, AgentRegistry::paper(), 2, 1.0, None)
+            .unwrap().run().unwrap();
+
+        assert!(s2z.cost_dollars < warm.cost_dollars,
+                "s2z {} vs warm {}", s2z.cost_dollars, warm.cost_dollars);
+        let econ = s2z.economics.as_ref().expect("economics enabled");
+        assert_eq!(econ.cold_starts[1], 1, "{:?}", econ.cold_starts);
+        assert_eq!(econ.cold_starts[3], 1, "{:?}", econ.cold_starts);
+        assert!(econ.warm_fraction[1] < 1.0);
+        assert_eq!(econ.warm_fraction[0], 1.0, "busy agent stays warm");
+        // Everyone is eventually served.
+        assert!(s2z.agent_throughputs.iter().all(|t| *t > 0.0));
+    }
+
+    #[test]
+    fn arena_reuse_is_bit_identical_with_economics_enabled() {
+        let mut arena = ClusterArena::new();
+        let mut cfg = SimConfig::paper();
+        cfg.workload_kind = crate::workload::WorkloadKind::Burst {
+            agents: vec![1, 3], start: 40, end: 60,
+        };
+        cfg.economics = Some(
+            crate::serverless::EconomicsModel::with_idle_timeout(5.0));
+        let sim = ClusterSimulator::new(
+            cfg, AgentRegistry::paper(), 2, 1.0, None).unwrap();
+        for _ in 0..2 {
+            let reused = sim.run_with_arena(&mut arena).unwrap();
+            let fresh = sim.run().unwrap();
+            assert!(fresh.economics.is_some());
+            assert_eq!(reused, fresh);
         }
     }
 

@@ -282,7 +282,7 @@ impl DeploymentConfig {
             arrival_process: process,
             seed: self.workload.seed,
             record_timelines: false,
-            scale_to_zero_after_s: None,
+            economics: None,
         })
     }
 }

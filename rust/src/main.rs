@@ -8,6 +8,9 @@
 //!                   [--workflows N]             end-to-end PJRT serving
 //! agentsrv verify   [--artifacts DIR]           golden-vector check
 //! agentsrv config   [--out FILE]                dump the paper config
+//! agentsrv bench-gate --measured FILE [--baseline FILE]
+//!                   [--tolerance F] [--bootstrap]
+//!                                               bench-regression gate
 //! ```
 //!
 //! Arg parsing is hand-rolled (the image is offline; no clap).
@@ -26,6 +29,8 @@ use agentsrv::repro;
 use agentsrv::runtime::{InferenceEngine, Manifest};
 use agentsrv::server::{AgentServer, ServerConfig};
 use agentsrv::sim::Simulator;
+use agentsrv::util::bench::compare_bench_reports;
+use agentsrv::util::json::Value;
 use agentsrv::util::Rng;
 use agentsrv::workload::ArrivalProcess;
 
@@ -48,6 +53,7 @@ fn main() -> ExitCode {
         "serve" => cmd_serve(&opts),
         "verify" => cmd_verify(&opts),
         "config" => cmd_config(&opts),
+        "bench-gate" => cmd_bench_gate(&opts),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -71,11 +77,13 @@ USAGE:
                     [--poisson] [--seed N] [--timelines FILE.csv]
   agentsrv repro    [--out DIR] [--exp table1|table2|fig2a|fig2b|fig2c|
                                        fig2d|overload|spike|dominance|
-                                       scaling|all]
+                                       scaling|economics|all]
   agentsrv serve    [--artifacts DIR] [--policy NAME] [--requests N]
                     [--workflows N] [--seed N]
   agentsrv verify   [--artifacts DIR]
   agentsrv config   [--out FILE]
+  agentsrv bench-gate --measured FILE [--baseline FILE=BENCH_sweep.json]
+                    [--tolerance FRACTION=0.25] [--bootstrap]
 
 POLICIES: adaptive (paper Alg. 1) | static_equal | round_robin |
           predictive | feedback";
@@ -98,7 +106,7 @@ impl Opts {
                     "unexpected argument '{a}'")));
             };
             // Flags that take no value.
-            if matches!(key, "poisson" | "quick") {
+            if matches!(key, "poisson" | "quick" | "bootstrap") {
                 flags.push(key.to_string());
                 i += 1;
                 continue;
@@ -244,6 +252,18 @@ fn cmd_repro(opts: &Opts) -> Result<()> {
                          p.n_agents, p.ns_per_call);
             }
         }
+        "economics" => {
+            println!("{:<14} {:>10} {:>10} {:>9} {:>8} {:>6} {:>6}",
+                     "policy", "paper($)", "burst($)", "s2z($)",
+                     "saved%", "wakes", "warm");
+            for r in repro::economics_experiment(100) {
+                println!("{:<14} {:>10.4} {:>10.4} {:>9.4} {:>8.1} \
+                          {:>6} {:>6.2}",
+                         r.policy, r.paper_warm_cost, r.burst_warm_cost,
+                         r.burst_s2z_cost, r.savings_pct, r.cold_starts,
+                         r.mean_warm_fraction);
+            }
+        }
         other => return Err(Error::Config(format!(
             "unknown experiment '{other}'"))),
     }
@@ -339,6 +359,62 @@ fn cmd_verify(opts: &Opts) -> Result<()> {
     println!("{} (agent, batch) variants verified bit-exact against JAX",
              verified.len());
     Ok(())
+}
+
+fn cmd_bench_gate(opts: &Opts) -> Result<()> {
+    let baseline_path = opts.get("baseline").unwrap_or("BENCH_sweep.json");
+    let measured_path = opts.get("measured").ok_or_else(|| Error::Config(
+        "--measured FILE required (a `sweep_scaling -- --json` report)"
+            .into()))?;
+    let tolerance: f64 = match opts.get("tolerance") {
+        None => 0.25,
+        Some(v) => v.parse().map_err(|_| Error::Config(format!(
+            "--tolerance must be a fraction in [0, 1), got '{v}'")))?,
+    };
+    // Validate before the bootstrap early-return below, so a bad value
+    // in CI fails immediately instead of lying dormant until a baseline
+    // is committed.
+    if !(0.0..1.0).contains(&tolerance) {
+        return Err(Error::Config(format!(
+            "--tolerance must be a fraction in [0, 1), got {tolerance}")));
+    }
+    let baseline = Value::parse(&std::fs::read_to_string(baseline_path)?)?;
+    let measured = Value::parse(&std::fs::read_to_string(measured_path)?)?;
+
+    // Bootstrap mode: an unpopulated baseline (results: null) records
+    // rather than gates — the measured report is the candidate baseline
+    // to commit.
+    let unpopulated = !matches!(baseline.get("results"),
+                                Some(Value::Object(_)));
+    if unpopulated && opts.flag("bootstrap") {
+        println!("bench-gate: baseline {baseline_path} has no populated \
+                  results; nothing to gate against (bootstrap mode).");
+        println!("commit {measured_path}'s numbers into {baseline_path} \
+                  to arm the gate.");
+        return Ok(());
+    }
+
+    let cmp = compare_bench_reports(&baseline, &measured, tolerance)?;
+    println!("bench-gate: {} entr{} compared against {baseline_path} \
+              (allowed drop {:.0}%)",
+             cmp.compared.len(),
+             if cmp.compared.len() == 1 { "y" } else { "ies" },
+             tolerance * 100.0);
+    for name in &cmp.skipped {
+        println!("  skipped: {name} (absent from one report)");
+    }
+    if cmp.passed() {
+        println!("  all within tolerance — gate passes");
+        Ok(())
+    } else {
+        for r in &cmp.regressions {
+            eprintln!("  REGRESSION {r}");
+        }
+        Err(Error::Artifact(format!(
+            "bench-regression gate failed: {} entr{} regressed",
+            cmp.regressions.len(),
+            if cmp.regressions.len() == 1 { "y" } else { "ies" })))
+    }
 }
 
 fn cmd_config(opts: &Opts) -> Result<()> {

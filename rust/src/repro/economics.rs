@@ -1,0 +1,281 @@
+//! Serverless-economics experiments: Table II's cost row and the
+//! §II.B/§III.D elasticity axes (pricing × scale-to-zero × cold start)
+//! as first-class sweep cells.
+//!
+//! Two drivers:
+//!
+//!   * [`cost_grid`] — the full economics grid as [`SweepCell::Cost`]
+//!     cells for `run_sweep`: every built-in policy × the pricing axis ×
+//!     the idle-timeout axis × the cold-start axis × a seed set, over an
+//!     idle-burst workload (two agents hard-idle outside a mid-run
+//!     burst window — the shape under which scale-to-zero actually
+//!     reclaims money and cold starts actually charge latency);
+//!   * [`economics_experiment`] — the headline comparison: under the
+//!     paper's all-warm model every full-GPU policy bills exactly
+//!     Table II's $0.020 / 100 s (cost cannot distinguish them), and a
+//!     finite scale-to-zero timeout *breaks that tie*, because each
+//!     policy leaves a different share of the device parked on agents
+//!     that the autoscaler can reclaim.
+
+use crate::agents::AgentRegistry;
+use crate::allocator::PolicyKind;
+use crate::serverless::{ColdStartModel, EconomicsModel, GpuPricing};
+use crate::sim::batch::{default_workers, run_sweep, CostScenario,
+                        SweepCell};
+use crate::sim::SimConfig;
+use crate::workload::WorkloadKind;
+
+/// The pricing axis of the cost grid: the paper's T4 (continuous
+/// billing), the same device under a 300 ms billing quantum, and a 2×
+/// premium device class.
+///
+/// The quantum applies per charge interval — one simulation step — so a
+/// quantum that does not divide the 1 s step surfaces the rounding
+/// overhead (each step bills `ceil(1.0 / 0.3) × 0.3 = 1.2` s, a 20 %
+/// markup). A quantum that divides `dt` exactly (e.g. 100 ms) would be
+/// indistinguishable from continuous billing at this granularity, which
+/// is why the axis uses 300 ms.
+pub fn pricing_axis() -> Vec<(&'static str, GpuPricing)> {
+    vec![
+        ("t4", GpuPricing::t4()),
+        ("t4q300ms", GpuPricing {
+            dollars_per_hour: 0.72,
+            billing_quantum_s: 0.3,
+        }),
+        ("premium2x", GpuPricing {
+            dollars_per_hour: 1.44,
+            billing_quantum_s: 0.0,
+        }),
+    ]
+}
+
+/// The cold-start axis: an NVMe-cached fast path, the representative
+/// platform (200 ms + 1 GB/s), and a 10× slow object-store load.
+pub fn coldstart_axis() -> Vec<(&'static str, ColdStartModel)> {
+    vec![
+        ("fast", ColdStartModel {
+            base_s: 0.05,
+            s_per_mb: 0.0001,
+            jitter: 0.05,
+        }),
+        ("platform", ColdStartModel::default_platform()),
+        ("slow10x", ColdStartModel {
+            base_s: 2.0,
+            s_per_mb: 0.01,
+            jitter: 0.1,
+        }),
+    ]
+}
+
+/// The scale-to-zero axis: always warm (the paper's evaluation) plus
+/// two finite idle timeouts.
+pub fn idle_timeout_axis() -> Vec<(&'static str, f64)> {
+    vec![
+        ("warm", f64::INFINITY),
+        ("idle30", 30.0),
+        ("idle5", 5.0),
+    ]
+}
+
+/// The workload the cost cells run: NLP and reasoning hard-idle (zero
+/// arrivals) outside a mid-run burst window, the other agents steady at
+/// the paper rates. `seed` drives cold-start jitter.
+pub fn idle_burst_config(steps: u64, seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::paper();
+    cfg.steps = steps;
+    cfg.seed = seed;
+    cfg.workload_kind = WorkloadKind::Burst {
+        agents: vec![1, 3],
+        start: steps * 2 / 5,
+        end: steps * 3 / 5,
+    };
+    cfg
+}
+
+/// The serverless-economics grid as sweep cells: every built-in policy
+/// × [`pricing_axis`] × [`idle_timeout_axis`] × [`coldstart_axis`] ×
+/// `seeds`, over the [`idle_burst_config`] workload, labelled
+/// `"cost/<policy>/<pricing>/<timeout>/<coldstart>/seed<seed>"`. The
+/// always-warm timeout never samples a cold start, so its cells carry
+/// the `platform` cold-start model only (the other entries would be
+/// duplicate work under a different label).
+pub fn cost_grid(steps: u64, seeds: &[u64]) -> Vec<SweepCell> {
+    let mut cells = Vec::new();
+    for policy in PolicyKind::all() {
+        for (p_name, pricing) in pricing_axis() {
+            for (t_name, idle_timeout_s) in idle_timeout_axis() {
+                let colds = if idle_timeout_s.is_finite() {
+                    coldstart_axis()
+                } else {
+                    vec![("platform", ColdStartModel::default_platform())]
+                };
+                for (c_name, cold_start) in colds {
+                    for &seed in seeds {
+                        let economics = EconomicsModel {
+                            pricing,
+                            cold_start: cold_start.clone(),
+                            idle_timeout_s,
+                        };
+                        cells.push(SweepCell::Cost(CostScenario::new(
+                            format!("cost/{}/{p_name}/{t_name}/{c_name}\
+                                     /seed{seed}", policy.name()),
+                            idle_burst_config(steps, seed),
+                            AgentRegistry::paper(), economics,
+                            policy.clone())));
+                    }
+                }
+            }
+        }
+    }
+    cells
+}
+
+/// One policy row of [`economics_experiment`].
+#[derive(Debug, Clone)]
+pub struct EconomicsRow {
+    /// Policy name.
+    pub policy: String,
+    /// Paper workload, all-warm model — Table II's cost row: $0.020 per
+    /// 100 s for every full-GPU policy.
+    pub paper_warm_cost: f64,
+    /// Idle-burst workload, all-warm model (idle agents still bill).
+    pub burst_warm_cost: f64,
+    /// Idle-burst workload under a 5 s scale-to-zero timeout.
+    pub burst_s2z_cost: f64,
+    /// Percent of the all-warm burst bill reclaimed by scale-to-zero.
+    pub savings_pct: f64,
+    /// Cold-start wake-ups across agents in the scale-to-zero run.
+    pub cold_starts: u64,
+    /// Mean warm fraction across agents in the scale-to-zero run.
+    pub mean_warm_fraction: f64,
+    /// Mean latency on the burst workload, all warm (s).
+    pub burst_warm_latency_s: f64,
+    /// Mean latency on the burst workload with scale-to-zero (s) — what
+    /// the reclaimed dollars cost in cold-start delay.
+    pub burst_s2z_latency_s: f64,
+}
+
+/// Run every built-in policy over three economics settings — paper
+/// workload all-warm (the Table II tie), idle-burst all-warm, and
+/// idle-burst with a 5 s scale-to-zero timeout — through the sweep
+/// engine, and fold the results into one row per policy.
+pub fn economics_experiment(steps: u64) -> Vec<EconomicsRow> {
+    let policies = PolicyKind::all();
+    let mut cells = Vec::with_capacity(policies.len() * 3);
+    for policy in &policies {
+        cells.push(SweepCell::Cost(CostScenario::new(
+            format!("paper-warm/{}", policy.name()),
+            SimConfig::paper(), AgentRegistry::paper(),
+            EconomicsModel::paper_all_warm(), policy.clone())));
+        cells.push(SweepCell::Cost(CostScenario::new(
+            format!("burst-warm/{}", policy.name()),
+            idle_burst_config(steps, 42), AgentRegistry::paper(),
+            EconomicsModel::paper_all_warm(), policy.clone())));
+        cells.push(SweepCell::Cost(CostScenario::new(
+            format!("burst-s2z/{}", policy.name()),
+            idle_burst_config(steps, 42), AgentRegistry::paper(),
+            EconomicsModel::with_idle_timeout(5.0), policy.clone())));
+    }
+    let runs = run_sweep(&cells, default_workers());
+
+    runs.chunks_exact(3).zip(&policies).map(|(chunk, policy)| {
+        let paper_warm = chunk[0].result.as_sim().expect("cost cell");
+        let burst_warm = chunk[1].result.as_sim().expect("cost cell");
+        let burst_s2z = chunk[2].result.as_sim().expect("cost cell");
+        let econ = burst_s2z.economics.as_ref()
+            .expect("economics always on in a cost cell");
+        let warm_cost = burst_warm.cost_dollars;
+        EconomicsRow {
+            policy: policy.name().to_string(),
+            paper_warm_cost: paper_warm.cost_dollars,
+            burst_warm_cost: warm_cost,
+            burst_s2z_cost: burst_s2z.cost_dollars,
+            savings_pct: if warm_cost > 0.0 {
+                100.0 * (1.0 - burst_s2z.cost_dollars / warm_cost)
+            } else {
+                0.0
+            },
+            cold_starts: econ.total_cold_starts(),
+            mean_warm_fraction: econ.mean_warm_fraction(),
+            burst_warm_latency_s: burst_warm.mean_latency(),
+            burst_s2z_latency_s: burst_s2z.mean_latency(),
+        }
+    }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_grid_covers_every_axis_with_unique_labels() {
+        let seeds = [1u64, 2];
+        let cells = cost_grid(50, &seeds);
+        // warm carries one cold-start entry, the finite timeouts all of
+        // them.
+        let per_policy = pricing_axis().len()
+            * (1 + (idle_timeout_axis().len() - 1) * coldstart_axis().len())
+            * seeds.len();
+        assert_eq!(cells.len(), PolicyKind::all().len() * per_policy);
+        let mut labels: Vec<&str> =
+            cells.iter().map(SweepCell::label).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), cells.len(), "labels must be unique");
+        assert!(cells.iter().all(
+            |c| matches!(c, SweepCell::Cost(_))));
+        assert!(labels.iter().any(
+            |l| *l == "cost/adaptive/t4/warm/platform/seed1"));
+        assert!(labels.iter().any(
+            |l| *l == "cost/static_equal/premium2x/idle5/slow10x/seed2"));
+    }
+
+    #[test]
+    fn cost_cells_surface_their_economics_reports() {
+        let cells = cost_grid(50, &[42]);
+        let runs = run_sweep(&cells[..6], 3);
+        for run in &runs {
+            let econ = run.result.economics()
+                .unwrap_or_else(|| panic!("{}: report missing", run.label));
+            assert_eq!(econ.per_agent_cost.len(), 4);
+            assert!((run.result.cost_dollars() - econ.total_cost()).abs()
+                    < 1e-9, "{}", run.label);
+        }
+    }
+
+    #[test]
+    fn all_warm_ties_at_table2_cost_and_scale_to_zero_breaks_it() {
+        // One economics_experiment run backs both halves of the claim
+        // (the full property-level version lives in sim_properties.rs).
+        let rows = economics_experiment(100);
+        // Every full-GPU policy bills exactly $0.020 per 100 s under the
+        // all-warm paper settings — the cost tie the paper reports.
+        assert_eq!(rows.len(), PolicyKind::all().len());
+        for row in &rows {
+            assert!((row.paper_warm_cost - 0.020).abs() < 1e-6,
+                    "{}: {}", row.policy, row.paper_warm_cost);
+        }
+        // ...and a finite idle timeout breaks that tie.
+        let costs: Vec<f64> =
+            rows.iter().map(|r| r.burst_s2z_cost).collect();
+        let max = costs.iter().cloned().fold(f64::MIN, f64::max);
+        let min = costs.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max - min > 1e-4,
+                "scale-to-zero should separate the policies: {costs:?}");
+        for row in &rows {
+            // Reclaiming idle instances can only reduce the bill...
+            assert!(row.burst_s2z_cost <= row.burst_warm_cost + 1e-12,
+                    "{}: {} > {}", row.policy, row.burst_s2z_cost,
+                    row.burst_warm_cost);
+            // ...the burst pays for it in cold starts and cold steps.
+            assert!(row.cold_starts >= 1, "{}", row.policy);
+            assert!(row.mean_warm_fraction < 1.0, "{}", row.policy);
+            assert!(row.burst_s2z_latency_s
+                    >= row.burst_warm_latency_s - 1e-9,
+                    "{}: cold starts cannot reduce latency", row.policy);
+        }
+        // At least one policy actually saves real money.
+        assert!(rows.iter().any(|r| r.savings_pct > 10.0),
+                "{rows:?}");
+    }
+}

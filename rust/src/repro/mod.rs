@@ -5,9 +5,13 @@
 //! and the criterion benches all call through here so every consumer sees
 //! identical numbers.
 
+mod economics;
 mod experiments;
 mod robustness;
 
+pub use economics::{coldstart_axis, cost_grid, economics_experiment,
+                    idle_burst_config, idle_timeout_axis, pricing_axis,
+                    EconomicsRow};
 pub use experiments::{fig2a, fig2b, fig2c, fig2d, table1, table2,
                       CostPerfPoint, PerAgentSeries};
 pub use robustness::{cluster_grid, dominance_experiment,
@@ -27,7 +31,7 @@ use crate::metrics::export;
 /// Produces: `table1.csv`, `table2.csv`, `fig2a_latency.csv`,
 /// `fig2b_throughput.csv`, `fig2c_allocation.csv`, `fig2d_cost_perf.csv`,
 /// `robustness_overload.csv`, `robustness_spike.csv`,
-/// `robustness_dominance.csv`, `allocator_scaling.csv`.
+/// `robustness_dominance.csv`, `allocator_scaling.csv`, `economics.csv`.
 pub fn write_all(dir: &Path) -> Result<()> {
     std::fs::create_dir_all(dir)?;
 
@@ -130,6 +134,22 @@ pub fn write_all(dir: &Path) -> Result<()> {
                             vec![p.ns_per_call])).collect::<Vec<_>>(),
     )?;
 
+    // Serverless economics: the Table II cost tie and where
+    // scale-to-zero breaks it.
+    let econ = economics_experiment(100);
+    export::table_csv(
+        &dir.join("economics.csv"),
+        &["policy", "paper_warm_cost", "burst_warm_cost",
+          "burst_s2z_cost", "savings_pct", "cold_starts",
+          "mean_warm_fraction", "burst_warm_latency_s",
+          "burst_s2z_latency_s"],
+        &econ.iter().map(|r| (r.policy.clone(), vec![
+            r.paper_warm_cost, r.burst_warm_cost, r.burst_s2z_cost,
+            r.savings_pct, r.cold_starts as f64, r.mean_warm_fraction,
+            r.burst_warm_latency_s, r.burst_s2z_latency_s,
+        ])).collect::<Vec<_>>(),
+    )?;
+
     Ok(())
 }
 
@@ -145,7 +165,7 @@ mod tests {
                   "fig2b_throughput.csv", "fig2c_allocation.csv",
                   "fig2d_cost_perf.csv", "robustness_overload.csv",
                   "robustness_spike.csv", "robustness_dominance.csv",
-                  "allocator_scaling.csv"] {
+                  "allocator_scaling.csv", "economics.csv"] {
             let p = dir.path().join(f);
             assert!(p.exists(), "{f} missing");
             assert!(std::fs::metadata(&p).unwrap().len() > 0, "{f} empty");

@@ -282,14 +282,17 @@ pub fn trace_grid(steps: u64, seeds: &[u64]) -> Vec<SweepCell> {
     cells
 }
 
-/// The whole §V.B + §VI evaluation surface as one heterogeneous grid:
-/// the single-GPU stress grid, the cluster grid, and the trace-replay
-/// cells, mixed for one `run_sweep` call through one worker pool.
+/// The whole §V.B + §VI + economics evaluation surface as one
+/// heterogeneous grid: the single-GPU stress grid, the cluster grid,
+/// the trace-replay cells, and the serverless-economics cost grid
+/// ([`crate::repro::cost_grid`]), mixed for one `run_sweep` call
+/// through one worker pool.
 pub fn stress_sweep(steps: u64, seeds: &[u64]) -> Vec<SweepCell> {
     let mut cells: Vec<SweepCell> = stress_grid(steps, seeds)
         .into_iter().map(SweepCell::Single).collect();
     cells.extend(cluster_grid(steps));
     cells.extend(trace_grid(steps, seeds));
+    cells.extend(crate::repro::cost_grid(steps, seeds));
     cells
 }
 
@@ -471,7 +474,7 @@ mod tests {
     }
 
     #[test]
-    fn stress_sweep_mixes_all_three_cell_kinds() {
+    fn stress_sweep_mixes_all_four_cell_kinds() {
         let seeds = [1u64, 2];
         let cells = stress_sweep(10, &seeds);
         let singles = cells.iter()
@@ -480,12 +483,15 @@ mod tests {
             .filter(|c| matches!(c, SweepCell::Cluster(_))).count();
         let traces = cells.iter()
             .filter(|c| matches!(c, SweepCell::Trace(_))).count();
+        let costs = cells.iter()
+            .filter(|c| matches!(c, SweepCell::Cost(_))).count();
         assert_eq!(singles, stress_grid(10, &seeds).len());
         assert_eq!(clusters, cluster_grid(10).len());
         assert_eq!(traces,
                    PolicyKind::all().len() * seeds.len());
-        assert_eq!(cells.len(), singles + clusters + traces);
-        assert!(singles > 0 && clusters > 0 && traces > 0);
+        assert_eq!(costs, crate::repro::cost_grid(10, &seeds).len());
+        assert_eq!(cells.len(), singles + clusters + traces + costs);
+        assert!(singles > 0 && clusters > 0 && traces > 0 && costs > 0);
     }
 
     #[test]

@@ -5,20 +5,14 @@
 //! This is the serverless elasticity substrate (§II.B / §III.D) the
 //! allocation policies run on top of; the paper's evaluation holds all
 //! agents warm, which corresponds to `idle_timeout_s = ∞`.
+//!
+//! The simulation hot loops drive [`Autoscaler::step`] once per timestep;
+//! it is allocation-free — outcomes are queried through
+//! [`Autoscaler::state`] / [`Autoscaler::is_warm`] and the per-agent
+//! [`Autoscaler::cold_starts`] counters.
 
 use crate::serverless::{ColdStartModel, InstanceState};
 use crate::util::Rng;
-
-/// What the autoscaler decided for one agent this step.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum AutoscaleDecision {
-    /// Keep the current state.
-    Hold,
-    /// Begin warming a cold instance (cold start sampled).
-    ScaleUp { ready_at: f64 },
-    /// Tear the instance down (idle timeout hit).
-    ScaleToZero,
-}
 
 /// Per-agent scale-to-zero controller.
 #[derive(Debug, Clone)]
@@ -28,6 +22,8 @@ pub struct Autoscaler {
     /// Per-agent: state and seconds of continuous idleness.
     states: Vec<InstanceState>,
     idle_for: Vec<f64>,
+    /// Per-agent: cold-start wake-ups triggered so far.
+    cold_starts: Vec<u64>,
 }
 
 impl Autoscaler {
@@ -39,6 +35,7 @@ impl Autoscaler {
             idle_timeout_s,
             states: vec![InstanceState::Warm; n],
             idle_for: vec![0.0; n],
+            cold_starts: vec![0; n],
         }
     }
 
@@ -52,25 +49,31 @@ impl Autoscaler {
         matches!(self.states[agent], InstanceState::Warm)
     }
 
+    /// Cold-start wake-ups per agent since construction.
+    pub fn cold_starts(&self) -> &[u64] {
+        &self.cold_starts
+    }
+
     /// Advance one step: observe demand (arrivals + backlog) for each
-    /// agent at time `now` and return the decision taken per agent.
+    /// agent at time `now`. A warm agent whose continuous idleness
+    /// reaches `idle_timeout_s` is torn down; a cold agent with demand
+    /// begins warming behind a sampled cold start (counted in
+    /// [`Autoscaler::cold_starts`]); a warming agent becomes warm once
+    /// `now` passes its ready time. Returns the number of cold-start
+    /// wake-ups triggered this step.
     pub fn step(&mut self, now: f64, dt: f64, demand: &[f64],
-                model_mb: &[u32], rng: &mut Rng) -> Vec<AutoscaleDecision> {
-        let mut out = Vec::with_capacity(self.states.len());
+                model_mb: &[u32], rng: &mut Rng) -> usize {
+        let mut woke = 0;
         for i in 0..self.states.len() {
             let busy = demand[i] > 0.0;
-            let decision = match self.states[i] {
+            match self.states[i] {
                 InstanceState::Warm => {
                     if busy {
                         self.idle_for[i] = 0.0;
-                        AutoscaleDecision::Hold
                     } else {
                         self.idle_for[i] += dt;
                         if self.idle_for[i] >= self.idle_timeout_s {
                             self.states[i] = InstanceState::Cold;
-                            AutoscaleDecision::ScaleToZero
-                        } else {
-                            AutoscaleDecision::Hold
                         }
                     }
                 }
@@ -80,9 +83,8 @@ impl Autoscaler {
                             now + self.cold_start.sample(model_mb[i], rng);
                         self.states[i] = InstanceState::Warming { ready_at };
                         self.idle_for[i] = 0.0;
-                        AutoscaleDecision::ScaleUp { ready_at }
-                    } else {
-                        AutoscaleDecision::Hold
+                        self.cold_starts[i] += 1;
+                        woke += 1;
                     }
                 }
                 InstanceState::Warming { ready_at } => {
@@ -90,12 +92,10 @@ impl Autoscaler {
                         self.states[i] = InstanceState::Warm;
                         self.idle_for[i] = 0.0;
                     }
-                    AutoscaleDecision::Hold
                 }
-            };
-            out.push(decision);
+            }
         }
-        out
+        woke
     }
 }
 
@@ -118,6 +118,49 @@ mod tests {
         }
         assert!(!a.is_warm(0), "idle agent should be cold");
         assert!(a.is_warm(1), "busy agent must stay warm");
+        assert_eq!(a.cold_starts(), &[0, 0], "teardown is not a wake-up");
+    }
+
+    #[test]
+    fn timeout_boundary_is_inclusive() {
+        // idle_for accrues dt per idle step and tears down at *exactly*
+        // the timeout — not one step later.
+        let (mut a, mut rng) = scaler(2.0);
+        let mb = [500u32, 3000];
+        a.step(0.0, 1.0, &[0.0, 1.0], &mb, &mut rng); // idle_for = 1.0
+        assert!(a.is_warm(0));
+        a.step(1.0, 1.0, &[0.0, 1.0], &mb, &mut rng); // idle_for = 2.0
+        assert!(!a.is_warm(0), "must scale down at idle_for == timeout");
+    }
+
+    #[test]
+    fn zero_timeout_tears_down_on_first_idle_step() {
+        let (mut a, mut rng) = scaler(0.0);
+        let mb = [500u32, 3000];
+        a.step(0.0, 1.0, &[0.0, 1.0], &mb, &mut rng);
+        assert!(!a.is_warm(0));
+        assert!(a.is_warm(1), "busy agent unaffected by zero timeout");
+    }
+
+    #[test]
+    fn infinite_timeout_never_scales_down() {
+        let (mut a, mut rng) = scaler(f64::INFINITY);
+        let mb = [500u32, 3000];
+        for t in 0..10_000 {
+            a.step(t as f64, 1.0, &[0.0, 0.0], &mb, &mut rng);
+        }
+        assert!(a.is_warm(0) && a.is_warm(1));
+        assert_eq!(a.cold_starts(), &[0, 0]);
+    }
+
+    #[test]
+    fn demand_on_the_teardown_step_resets_the_idle_clock() {
+        let (mut a, mut rng) = scaler(2.0);
+        let mb = [500u32, 3000];
+        a.step(0.0, 1.0, &[0.0, 1.0], &mb, &mut rng); // idle_for = 1.0
+        a.step(1.0, 1.0, &[4.0, 1.0], &mb, &mut rng); // busy again
+        a.step(2.0, 1.0, &[0.0, 1.0], &mb, &mut rng); // idle_for = 1.0
+        assert!(a.is_warm(0), "idle clock must restart after traffic");
     }
 
     #[test]
@@ -128,10 +171,12 @@ mod tests {
         a.step(0.0, 1.0, &[0.0, 0.0], &mb, &mut rng);
         assert!(!a.is_warm(0));
         // Demand returns -> warming with a future ready time.
-        let d = a.step(1.0, 1.0, &[10.0, 0.0], &mb, &mut rng);
-        let ready_at = match d[0] {
-            AutoscaleDecision::ScaleUp { ready_at } => ready_at,
-            other => panic!("expected ScaleUp, got {other:?}"),
+        let woke = a.step(1.0, 1.0, &[10.0, 0.0], &mb, &mut rng);
+        assert_eq!(woke, 1);
+        assert_eq!(a.cold_starts(), &[1, 0]);
+        let ready_at = match a.state(0) {
+            InstanceState::Warming { ready_at } => ready_at,
+            other => panic!("expected Warming, got {other:?}"),
         };
         assert!(ready_at > 1.0);
         assert!(!a.is_warm(0));
@@ -148,5 +193,27 @@ mod tests {
             a.step(t as f64, 1.0, &[1.0, 1.0], &mb, &mut rng);
         }
         assert!(a.is_warm(0) && a.is_warm(1));
+    }
+
+    #[test]
+    fn repeated_idle_busy_cycles_count_every_wake() {
+        let (mut a, mut rng) = scaler(1.0);
+        let mb = [500u32, 3000];
+        let mut t = 0.0;
+        for _ in 0..3 {
+            // Idle long enough to go cold.
+            for _ in 0..2 {
+                a.step(t, 1.0, &[0.0, 1.0], &mb, &mut rng);
+                t += 1.0;
+            }
+            assert!(!a.is_warm(0));
+            // Wake and wait out the cold start (coordinator ≈ 0.7 s).
+            a.step(t, 1.0, &[5.0, 1.0], &mb, &mut rng);
+            t += 1.0;
+            a.step(t, 1.0, &[5.0, 1.0], &mb, &mut rng);
+            t += 1.0;
+            assert!(a.is_warm(0));
+        }
+        assert_eq!(a.cold_starts(), &[3, 0]);
     }
 }

@@ -93,4 +93,41 @@ mod tests {
         // 0.25 s bills as 0.3 s at $1/s.
         assert!((p.cost(1.0, 0.25) - 0.3).abs() < 1e-9);
     }
+
+    #[test]
+    fn quantum_exact_multiples_bill_exactly() {
+        // ceil() on an exact multiple must not add a phantom quantum.
+        let p = GpuPricing { dollars_per_hour: 3600.0,
+                             billing_quantum_s: 0.1 };
+        assert!((p.cost(1.0, 0.3) - 0.3).abs() < 1e-9);
+        assert!((p.cost(1.0, 10.0) - 10.0).abs() < 1e-9);
+        // One quantum exactly.
+        assert!((p.cost(1.0, 0.1) - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantum_sub_quantum_runs_bill_one_full_quantum() {
+        let p = GpuPricing { dollars_per_hour: 3600.0,
+                             billing_quantum_s: 60.0 };
+        // A 1 s invocation on per-minute billing pays the full minute,
+        // scaled by the allocated fraction.
+        assert!((p.cost(1.0, 1.0) - 60.0).abs() < 1e-9);
+        assert!((p.cost(0.5, 1.0) - 30.0).abs() < 1e-9);
+        // Even an infinitesimal run rounds up to a whole quantum.
+        assert!((p.cost(1.0, 1e-9) - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantum_zero_and_negative_inputs_bill_nothing() {
+        let p = GpuPricing { dollars_per_hour: 3600.0,
+                             billing_quantum_s: 0.1 };
+        // ceil(0 / q) = 0: a zero-length run is free, not one quantum.
+        assert_eq!(p.cost(1.0, 0.0), 0.0);
+        assert_eq!(p.cost(0.0, 10.0), 0.0);
+        // Negative inputs clamp to zero rather than producing refunds:
+        // ceil(-2.5) = -2 quanta would otherwise bill -0.2 s.
+        assert_eq!(p.cost(1.0, -0.25), 0.0);
+        assert_eq!(p.cost(-0.5, -0.25), 0.0);
+        assert_eq!(p.cost(-1.0, 5.0), 0.0);
+    }
 }

@@ -22,7 +22,7 @@ pub enum InstanceState {
 
 /// Cold-start latency model: base platform delay plus model-load time
 /// proportional to checkpoint size, with multiplicative jitter.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ColdStartModel {
     /// Fixed platform provisioning delay (seconds).
     pub base_s: f64,

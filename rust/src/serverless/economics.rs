@@ -1,0 +1,293 @@
+//! The serverless-economics bundle threaded through the simulators.
+//!
+//! An [`EconomicsModel`] groups the three platform knobs the paper's
+//! cost claims rest on — GPU pricing (Table II's cost row), the
+//! scale-to-zero idle timeout (§II.B/§III.D elasticity), and the
+//! cold-start latency distribution (§III.D) — into one value that
+//! [`SimConfig::economics`] threads through `Simulator::run` and
+//! `ClusterSimulator::run_with_arena`. When enabled, every step charges
+//! each agent for its allocated fraction, idle agents scale to zero
+//! after the timeout, and waking agents pay a sampled cold start; the
+//! per-agent outcome comes back as an [`EconomicsReport`].
+//!
+//! [`SimConfig::economics`]: crate::sim::SimConfig
+
+use crate::serverless::{Autoscaler, BillingMeter, ColdStartModel,
+                        GpuPricing};
+use crate::util;
+use crate::util::Rng;
+
+/// Serverless platform economics for one simulation run: pricing,
+/// scale-to-zero, and cold starts, evaluated per step in the hot loop.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EconomicsModel {
+    /// Per-device pricing; each agent is billed `fraction × time` under
+    /// it (this replaces the config's whole-device meter for the run).
+    pub pricing: GpuPricing,
+    /// Cold-start latency model sampled when a scaled-to-zero agent's
+    /// instance wakes on returning demand.
+    pub cold_start: ColdStartModel,
+    /// Scale-to-zero idle timeout in seconds. `f64::INFINITY` holds
+    /// every agent warm forever — the paper's evaluation setting.
+    pub idle_timeout_s: f64,
+}
+
+impl EconomicsModel {
+    /// The paper's §IV platform: T4 pricing, the representative
+    /// cold-start model, and every agent held warm (infinite idle
+    /// timeout) — the setting behind Table II's $0.020 / 100 s cost row.
+    pub fn paper_all_warm() -> Self {
+        EconomicsModel {
+            pricing: GpuPricing::t4(),
+            cold_start: ColdStartModel::default_platform(),
+            idle_timeout_s: f64::INFINITY,
+        }
+    }
+
+    /// The paper platform with a finite scale-to-zero idle timeout.
+    pub fn with_idle_timeout(idle_timeout_s: f64) -> Self {
+        EconomicsModel {
+            idle_timeout_s,
+            ..EconomicsModel::paper_all_warm()
+        }
+    }
+
+    /// Whether instances can ever be torn down under this model.
+    pub fn scales_to_zero(&self) -> bool {
+        self.idle_timeout_s.is_finite()
+    }
+}
+
+/// Per-agent economics of one run, surfaced in `SimResult` /
+/// `ClusterResult` when the config enables an [`EconomicsModel`].
+///
+/// All three vectors are in agent-id order and the same length.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EconomicsReport {
+    /// Dollars billed per agent (allocated fraction × time; forfeited
+    /// allocations of cold or migrating agents are not billed).
+    pub per_agent_cost: Vec<f64>,
+    /// Cold-start wake-ups per agent over the run.
+    pub cold_starts: Vec<u64>,
+    /// Fraction of steps each agent's *instance* was warm under the
+    /// scale-to-zero lifecycle, in [0, 1] (1.0 everywhere under an
+    /// all-warm model). This tracks instance warmth only: a cluster
+    /// agent mid-migration is warm but still serves nothing — that
+    /// stall is accounted separately (`ClusterResult::migration_stall_s`
+    /// and the forfeited, unbilled allocation).
+    pub warm_fraction: Vec<f64>,
+}
+
+impl EconomicsReport {
+    /// Total billed dollars (sum of the per-agent bills).
+    pub fn total_cost(&self) -> f64 {
+        self.per_agent_cost.iter().sum()
+    }
+
+    /// Total cold-start wake-ups across agents.
+    pub fn total_cold_starts(&self) -> u64 {
+        self.cold_starts.iter().sum()
+    }
+
+    /// Mean warm fraction across agents.
+    pub fn mean_warm_fraction(&self) -> f64 {
+        util::mean(&self.warm_fraction)
+    }
+}
+
+/// Per-run accumulator behind [`EconomicsReport`]: the simulation loops
+/// feed it one `charge_step` per step (plus `note_warm` per servable
+/// agent when a scale-to-zero lifecycle is active) and `finish` it into
+/// the report.
+#[derive(Debug, Clone)]
+pub(crate) struct EconomicsMeter {
+    pricing: GpuPricing,
+    per_agent_cost: Vec<f64>,
+    warm_steps: Vec<u64>,
+}
+
+impl EconomicsMeter {
+    pub(crate) fn new(model: &EconomicsModel, n: usize) -> Self {
+        EconomicsMeter {
+            pricing: model.pricing,
+            per_agent_cost: vec![0.0; n],
+            warm_steps: vec![0; n],
+        }
+    }
+
+    /// Charge one step: agent fractions in `alloc` held for `dt`
+    /// seconds. Callers pass the post-lifecycle allocation, so forfeited
+    /// fractions are never billed.
+    pub(crate) fn charge_step(&mut self, alloc: &[f64], dt: f64) {
+        for (cost, g) in self.per_agent_cost.iter_mut().zip(alloc) {
+            *cost += self.pricing.cost(*g, dt);
+        }
+    }
+
+    /// Record that `agent`'s instance could serve this step.
+    pub(crate) fn note_warm(&mut self, agent: usize) {
+        self.warm_steps[agent] += 1;
+    }
+
+    /// Finalize into the report. `scaler` is the run's autoscaler when a
+    /// scale-to-zero lifecycle was active; without one every agent was
+    /// warm for the whole run by construction.
+    pub(crate) fn finish(self, steps: u64, scaler: Option<&Autoscaler>)
+                         -> EconomicsReport {
+        let n = self.per_agent_cost.len();
+        let warm_fraction = match scaler {
+            None => vec![1.0; n],
+            Some(_) if steps == 0 => vec![1.0; n],
+            Some(_) => self.warm_steps.iter()
+                .map(|w| *w as f64 / steps as f64)
+                .collect(),
+        };
+        let cold_starts = match scaler {
+            None => vec![0; n],
+            Some(s) => s.cold_starts().to_vec(),
+        };
+        EconomicsReport {
+            per_agent_cost: self.per_agent_cost,
+            cold_starts,
+            warm_fraction,
+        }
+    }
+}
+
+/// The complete per-run economics instrumentation, shared by
+/// `Simulator::run_inner` and `ClusterSimulator::run_with_arena` so the
+/// two engines cannot drift apart: the billing meter (model pricing
+/// overriding the config fallback), the optional per-agent
+/// [`EconomicsMeter`], and the optional scale-to-zero lifecycle
+/// (autoscaler + its dedicated jitter RNG, seeded `seed ^ 0xC01D`).
+#[derive(Debug)]
+pub(crate) struct EconInstruments {
+    billing: BillingMeter,
+    meter: Option<EconomicsMeter>,
+    lifecycle: Option<(Autoscaler, Rng)>,
+}
+
+impl EconInstruments {
+    /// Build for one run of `n` agents. `fallback_pricing` (the
+    /// config's whole-device pricing) bills the run when `economics` is
+    /// `None`; the lifecycle exists only for a finite idle timeout.
+    pub(crate) fn new(economics: Option<&EconomicsModel>,
+                      fallback_pricing: GpuPricing, n: usize, seed: u64)
+                      -> Self {
+        EconInstruments {
+            billing: BillingMeter::new(
+                economics.map_or(fallback_pricing, |e| e.pricing)),
+            meter: economics.map(|e| EconomicsMeter::new(e, n)),
+            lifecycle: economics
+                .filter(|e| e.scales_to_zero())
+                .map(|e| {
+                    (Autoscaler::all_warm(n, e.cold_start.clone(),
+                                          e.idle_timeout_s),
+                     Rng::new(seed ^ 0xC01D))
+                }),
+        }
+    }
+
+    /// Advance the scale-to-zero lifecycle one step (`now = step · dt`):
+    /// agents whose instance cannot serve forfeit their allocation
+    /// (zeroed in `alloc`, hence never billed), warm agents are counted
+    /// toward their warm fraction. No-op without a lifecycle.
+    pub(crate) fn apply_lifecycle(&mut self, step: u64, dt: f64,
+                                  queues: &[f64], model_mb: &[u32],
+                                  alloc: &mut [f64]) {
+        let Some((scaler, rng)) = self.lifecycle.as_mut() else {
+            return;
+        };
+        let now = step as f64 * dt;
+        scaler.step(now, dt, queues, model_mb, rng);
+        for (i, g) in alloc.iter_mut().enumerate() {
+            if !scaler.is_warm(i) {
+                *g = 0.0;
+            } else if let Some(m) = self.meter.as_mut() {
+                m.note_warm(i);
+            }
+        }
+    }
+
+    /// Bill this step's post-forfeiture allocation: the whole-device
+    /// total plus, when economics is on, the per-agent breakdown.
+    pub(crate) fn charge_step(&mut self, total_alloc: f64, alloc: &[f64],
+                              dt: f64) {
+        self.billing.charge(total_alloc, dt);
+        if let Some(m) = self.meter.as_mut() {
+            m.charge_step(alloc, dt);
+        }
+    }
+
+    /// Finalize: `(total cost, GPU-seconds, economics report)`.
+    pub(crate) fn finish(self, steps: u64)
+                         -> (f64, f64, Option<EconomicsReport>) {
+        let report = self.meter.map(|m| m.finish(
+            steps, self.lifecycle.as_ref().map(|(scaler, _)| scaler)));
+        (self.billing.total_cost(), self.billing.gpu_seconds(), report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn paper_model_is_all_warm_t4() {
+        let m = EconomicsModel::paper_all_warm();
+        assert!(!m.scales_to_zero());
+        assert_eq!(m.pricing, GpuPricing::t4());
+        // Full GPU for 100 s under the paper model = Table II's $0.020.
+        assert!((m.pricing.cost(1.0, 100.0) - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn finite_timeout_scales_to_zero() {
+        let m = EconomicsModel::with_idle_timeout(30.0);
+        assert!(m.scales_to_zero());
+        assert_eq!(m.idle_timeout_s, 30.0);
+        assert_eq!(m.pricing, GpuPricing::t4());
+    }
+
+    #[test]
+    fn meter_bills_per_agent_and_sums_to_total() {
+        let model = EconomicsModel::paper_all_warm();
+        let mut meter = EconomicsMeter::new(&model, 2);
+        for _ in 0..100 {
+            meter.charge_step(&[0.75, 0.25], 1.0);
+        }
+        let report = meter.finish(100, None);
+        assert!((report.total_cost() - 0.02).abs() < 1e-12);
+        assert!((report.per_agent_cost[0] - 0.015).abs() < 1e-12);
+        assert!((report.per_agent_cost[1] - 0.005).abs() < 1e-12);
+        assert_eq!(report.cold_starts, vec![0, 0]);
+        assert_eq!(report.warm_fraction, vec![1.0, 1.0]);
+        assert_eq!(report.mean_warm_fraction(), 1.0);
+        assert_eq!(report.total_cold_starts(), 0);
+    }
+
+    #[test]
+    fn finish_reads_warmth_and_cold_starts_from_the_scaler() {
+        let model = EconomicsModel::with_idle_timeout(1.0);
+        let mut meter = EconomicsMeter::new(&model, 2);
+        let mut scaler = Autoscaler::all_warm(
+            2, model.cold_start.clone(), model.idle_timeout_s);
+        let mut rng = Rng::new(3);
+        let mb = [500u32, 500];
+        // Agent 0 idles cold, then wakes; agent 1 stays busy throughout.
+        for t in 0..4u64 {
+            let demand = if t < 2 { [0.0, 5.0] } else { [5.0, 5.0] };
+            scaler.step(t as f64, 1.0, &demand, &mb, &mut rng);
+            for i in 0..2 {
+                if scaler.is_warm(i) {
+                    meter.note_warm(i);
+                }
+            }
+        }
+        let report = meter.finish(4, Some(&scaler));
+        assert_eq!(report.cold_starts, vec![1, 0]);
+        assert!(report.warm_fraction[0] < 1.0);
+        assert_eq!(report.warm_fraction[1], 1.0);
+    }
+}

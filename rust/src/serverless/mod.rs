@@ -1,15 +1,21 @@
 //! Serverless GPU platform model (§III.D / §IV.A substrate).
 //!
 //! Models the platform characteristics the paper assumes: fine-grained
-//! fractional GPU billing ([`billing`]), container cold starts
-//! ([`coldstart`]), and scale-to-zero autoscaling ([`autoscale`]). The
-//! simulator and the serving stack both consume these, so cost numbers and
-//! cold-start penalties are computed identically everywhere.
+//! fractional GPU billing ([`BillingMeter`]), container cold starts
+//! ([`ColdStartModel`]), scale-to-zero autoscaling ([`Autoscaler`]), and
+//! the economics bundle that threads all three through the simulation hot
+//! loops as one optional [`EconomicsModel`]. The simulator and the serving
+//! stack both consume these, so cost numbers and cold-start penalties are
+//! computed identically everywhere.
 
 mod autoscale;
 mod billing;
 mod coldstart;
+mod economics;
 
-pub use autoscale::{AutoscaleDecision, Autoscaler};
+pub use autoscale::Autoscaler;
 pub use billing::{BillingMeter, GpuPricing};
 pub use coldstart::{ColdStartModel, InstanceState};
+pub use economics::{EconomicsModel, EconomicsReport};
+
+pub(crate) use economics::EconInstruments;

@@ -2,8 +2,10 @@
 //!
 //! A [`SweepCell`] is one cell of an evaluation grid — a single-GPU
 //! [`Scenario`] (config × registry × policy), a [`ClusterScenario`]
-//! (config × registry × GPUs × capacity × migration model), or a
-//! [`TraceScenario`] (a recorded [`Trace`] replayed under a policy).
+//! (config × registry × GPUs × capacity × migration model), a
+//! [`TraceScenario`] (a recorded [`Trace`] replayed under a policy), or
+//! a [`CostScenario`] (a scenario with a serverless [`EconomicsModel`]
+//! enabled — pricing × scale-to-zero timeout × cold-start distribution).
 //! [`run_sweep`] fans a slice of them across `std::thread::scope`
 //! workers; [`run_batch`] remains the single-GPU-only entry point over
 //! plain [`Scenario`]s. Both share one worker pool implementation: each
@@ -37,6 +39,7 @@ use crate::allocator::PolicyKind;
 use crate::cluster::{ClusterArena, ClusterResult, ClusterSimulator,
                      MigrationModel};
 use crate::error::{Error, Result};
+use crate::serverless::{EconomicsModel, EconomicsReport};
 use crate::sim::{SimArena, SimConfig, SimResult, Simulator};
 use crate::workload::trace::{Trace, TraceCorpus};
 
@@ -202,6 +205,55 @@ impl TraceScenario {
     }
 }
 
+/// One serverless-economics cell of a sweep grid: a single-GPU scenario
+/// with an [`EconomicsModel`] enabled, so the run bills per agent,
+/// scales idle agents to zero, and pays sampled cold starts on wake.
+/// The grid axes live in the model itself — pricing × idle timeout ×
+/// cold-start distribution — crossed with the policy, which is what
+/// `repro::cost_grid` sweeps.
+#[derive(Debug, Clone)]
+pub struct CostScenario {
+    /// Grid coordinates for reports
+    /// (e.g. `"cost/adaptive/t4/idle30/platform/seed42"`).
+    pub label: String,
+    /// Policy evaluated in this cell (cloned fresh for the run).
+    pub policy: PolicyKind,
+    sim: Simulator,
+}
+
+impl CostScenario {
+    /// Build from a validated registry; `economics` overrides whatever
+    /// the config carried, so a `CostScenario` always runs with the
+    /// economics layer on.
+    pub fn new(label: impl Into<String>, mut cfg: SimConfig,
+               registry: AgentRegistry, economics: EconomicsModel,
+               policy: PolicyKind) -> CostScenario {
+        cfg.economics = Some(economics);
+        CostScenario {
+            label: label.into(),
+            policy,
+            sim: Simulator::with_registry(cfg, registry),
+        }
+    }
+
+    /// The simulator this cell runs (for sequential baselines).
+    pub fn simulator(&self) -> &Simulator {
+        &self.sim
+    }
+
+    /// The economics model this cell runs under.
+    pub fn economics(&self) -> &EconomicsModel {
+        self.sim.config().economics.as_ref()
+            .expect("CostScenario always carries an economics model")
+    }
+
+    /// Run this one cell through a caller-owned arena.
+    pub fn run_with_arena(&self, arena: &mut SimArena) -> SimResult {
+        let mut policy = self.policy.clone();
+        self.sim.run_with_arena(&mut policy, arena)
+    }
+}
+
 /// The one matching rule for replaying a trace over a registry: the
 /// agent columns must equal the registry's agents, name for name, in
 /// order (a reordered or foreign recording would replay silently
@@ -226,6 +278,8 @@ pub enum SweepCell {
     Cluster(ClusterScenario),
     /// Recorded-trace replay cell.
     Trace(TraceScenario),
+    /// Serverless-economics cell (pricing × scale-to-zero × cold start).
+    Cost(CostScenario),
 }
 
 impl SweepCell {
@@ -235,6 +289,7 @@ impl SweepCell {
             SweepCell::Single(s) => &s.label,
             SweepCell::Cluster(s) => &s.label,
             SweepCell::Trace(s) => &s.label,
+            SweepCell::Cost(s) => &s.label,
         }
     }
 
@@ -246,6 +301,8 @@ impl SweepCell {
             SweepCell::Cluster(s) =>
                 CellResult::Cluster(s.run_with_arena(&mut arena.cluster)),
             SweepCell::Trace(s) =>
+                CellResult::Sim(s.run_with_arena(&mut arena.sim)),
+            SweepCell::Cost(s) =>
                 CellResult::Sim(s.run_with_arena(&mut arena.sim)),
         }
     }
@@ -284,6 +341,16 @@ impl CellResult {
         match self {
             CellResult::Sim(r) => r.cost_dollars,
             CellResult::Cluster(r) => r.cost_dollars,
+        }
+    }
+
+    /// The per-agent economics breakdown, when the cell's config enabled
+    /// an [`EconomicsModel`] — always present for [`SweepCell::Cost`]
+    /// cells, whatever the kind otherwise.
+    pub fn economics(&self) -> Option<&EconomicsReport> {
+        match self {
+            CellResult::Sim(r) => r.economics.as_ref(),
+            CellResult::Cluster(r) => r.economics.as_ref(),
         }
     }
 
@@ -449,6 +516,11 @@ mod tests {
             SweepCell::Cluster(ClusterScenario::new(
                 "cluster/4gpu", SimConfig::paper(), AgentRegistry::paper(),
                 4, 1.0, Some(MigrationModel::default())).unwrap()),
+            SweepCell::Cost(CostScenario::new(
+                "cost/adaptive/idle5", SimConfig::paper(),
+                AgentRegistry::paper(),
+                EconomicsModel::with_idle_timeout(5.0),
+                PolicyKind::adaptive())),
         ]
     }
 
@@ -513,6 +585,13 @@ mod tests {
                     SweepCell::Single(_) | SweepCell::Trace(_) =>
                         assert!(run.result.as_sim().is_some(),
                                 "{}", run.label),
+                    SweepCell::Cost(_) => {
+                        assert!(run.result.as_sim().is_some(),
+                                "{}", run.label);
+                        assert!(run.result.economics().is_some(),
+                                "{}: cost cell must carry its report",
+                                run.label);
+                    }
                 }
             }
         }
@@ -560,6 +639,16 @@ mod tests {
                     assert_eq!(got.mean_latency(), want.mean_latency(),
                                "{}", run.label);
                     assert_eq!(got.cost_dollars, want.cost_dollars);
+                }
+                SweepCell::Cost(sc) => {
+                    let mut policy = sc.policy.clone();
+                    let want = sc.simulator().run(&mut policy);
+                    let got = run.result.as_sim().unwrap();
+                    assert_eq!(got.mean_latency(), want.mean_latency(),
+                               "{}", run.label);
+                    assert_eq!(got.cost_dollars, want.cost_dollars);
+                    assert_eq!(got.economics, want.economics,
+                               "{}", run.label);
                 }
             }
         }

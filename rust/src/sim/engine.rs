@@ -4,9 +4,8 @@ use crate::agents::{AgentProfile, AgentRegistry};
 use crate::allocator::AllocationPolicy;
 use crate::allocator::AllocContext;
 use crate::metrics::TimeSeries;
-use crate::serverless::{Autoscaler, BillingMeter, ColdStartModel};
+use crate::serverless::EconInstruments;
 use crate::sim::{AgentStats, SimArena, SimConfig, SimResult, Timelines};
-use crate::util::Rng;
 use crate::workload::WorkloadGenerator;
 
 /// Discrete-time simulator over one agent registry.
@@ -121,7 +120,6 @@ impl Simulator {
         let mut stats: Vec<AgentStats> = self.registry.profiles().iter()
             .map(|p| AgentStats::new(p.name.clone()))
             .collect();
-        let mut billing = BillingMeter::new(cfg.pricing);
 
         let names: Vec<String> = self.registry.profiles().iter()
             .map(|p| p.name.clone()).collect();
@@ -140,14 +138,15 @@ impl Simulator {
         } = arena;
         let base_tput = self.registry.base_tput();
 
-        // Optional serverless lifecycle: scale-to-zero + cold starts.
+        // Optional serverless economics — billing (the model's pricing
+        // replaces the config meter for the run), per-agent metering, and
+        // the scale-to-zero lifecycle, all shared with the cluster engine
+        // via EconInstruments. `None` branches per step when disabled —
+        // zero overhead.
         model_mb.clear();
         model_mb.extend(self.registry.profiles().iter().map(|p| p.model_mb));
-        let mut lifecycle = cfg.scale_to_zero_after_s.map(|timeout| {
-            (Autoscaler::all_warm(n, ColdStartModel::default_platform(),
-                                  timeout),
-             Rng::new(cfg.seed ^ 0xC01D))
-        });
+        let mut econ = EconInstruments::new(
+            cfg.economics.as_ref(), cfg.pricing, n, cfg.seed);
 
         for step in 0..steps {
             // 1. Arrivals join their agent's queue.
@@ -173,15 +172,8 @@ impl Simulator {
             //     step (their allocation is forfeited, not billed), and
             //     demand triggers warm-up with a model-size-dependent
             //     cold-start delay.
-            if let Some((scaler, rng)) = lifecycle.as_mut() {
-                let now = step as f64 * dt;
-                scaler.step(now, dt, &queues[..], &model_mb[..], rng);
-                for i in 0..n {
-                    if !scaler.is_warm(i) {
-                        alloc[i] = 0.0;
-                    }
-                }
-            }
+            econ.apply_lifecycle(step, dt, &queues[..], &model_mb[..],
+                                 &mut alloc[..]);
 
             // 3. Agents process proportionally to their allocation; record
             //    metrics on the post-processing queue (§IV.B ordering —
@@ -216,8 +208,10 @@ impl Simulator {
                 tput_row[i] = tput;
             }
 
-            // 4. Billing: pay for what was allocated this step.
-            billing.charge(total_alloc, dt);
+            // 4. Billing: pay for what was allocated this step (alloc is
+            //    post-lifecycle, so forfeited fractions are never billed
+            //    — by either meter).
+            econ.charge_step(total_alloc, &alloc[..], dt);
 
             if let Some(tl) = timelines.as_mut() {
                 tl.allocation.push_row(&alloc[..]);
@@ -231,13 +225,16 @@ impl Simulator {
             stats[i].final_queue = queues[i];
         }
 
+        let (cost_dollars, gpu_seconds, economics) = econ.finish(steps);
+
         SimResult {
             policy: policy.name().to_string(),
             steps,
             dt,
             per_agent: stats,
-            cost_dollars: billing.total_cost(),
-            gpu_seconds: billing.gpu_seconds(),
+            cost_dollars,
+            gpu_seconds,
+            economics,
             timelines,
         }
     }
@@ -248,6 +245,7 @@ mod tests {
     use super::*;
     use crate::allocator::{AdaptivePolicy, RoundRobinPolicy,
                            StaticEqualPolicy};
+    use crate::serverless::EconomicsModel;
     use crate::workload::WorkloadKind;
 
     fn paper_sim() -> Simulator {
@@ -382,16 +380,36 @@ mod tests {
     }
 
     #[test]
+    fn all_warm_economics_reproduces_table2_cost_row() {
+        // Economics enabled with the paper's all-warm model must not
+        // perturb Table II: the total stays $0.020 / 100 s and the
+        // per-agent bills partition it exactly.
+        let mut cfg = SimConfig::paper();
+        cfg.economics = Some(EconomicsModel::paper_all_warm());
+        let sim = Simulator::new(cfg, AgentProfile::paper_agents());
+        for mut p in crate::allocator::all_policies() {
+            let r = sim.run(p.as_mut());
+            assert!((r.cost_dollars - 0.020).abs() < 1e-6, "{}", r.policy);
+            let econ = r.economics.as_ref().expect("economics enabled");
+            assert!((econ.total_cost() - r.cost_dollars).abs() < 1e-12,
+                    "{}: per-agent bills must sum to the total", r.policy);
+            assert_eq!(econ.cold_starts, vec![0; 4], "{}", r.policy);
+            assert_eq!(econ.warm_fraction, vec![1.0; 4], "{}", r.policy);
+        }
+    }
+
+    #[test]
     fn scale_to_zero_saves_money_on_idle_agents() {
         // Under static-equal, an idle agent still holds (and bills) 25%
         // of the GPU — unless scale-to-zero tears its instance down.
         let mut cfg = SimConfig::paper();
         cfg.arrival_rates = vec![80.0, 0.0, 0.0, 0.0]; // only coordinator
+        cfg.economics = Some(EconomicsModel::paper_all_warm());
         let warm_sim = Simulator::new(cfg.clone(),
                                       AgentProfile::paper_agents());
         let warm = warm_sim.run(&mut StaticEqualPolicy);
 
-        cfg.scale_to_zero_after_s = Some(5.0);
+        cfg.economics = Some(EconomicsModel::with_idle_timeout(5.0));
         let s2z_sim = Simulator::new(cfg, AgentProfile::paper_agents());
         let s2z = s2z_sim.run(&mut StaticEqualPolicy);
 
@@ -401,33 +419,42 @@ mod tests {
         // The busy agent is unaffected.
         assert!((s2z.per_agent[0].throughput.mean()
                  - warm.per_agent[0].throughput.mean()).abs() < 1e-9);
+        // The report shows where the money went: the coordinator keeps
+        // billing, the never-busy agents stop after the timeout.
+        let econ = s2z.economics.as_ref().expect("economics enabled");
+        assert_eq!(econ.warm_fraction[0], 1.0);
+        for i in 1..4 {
+            assert!(econ.warm_fraction[i] < 0.1,
+                    "agent {i} warm fraction {}", econ.warm_fraction[i]);
+            assert!(econ.per_agent_cost[i] < warm.cost_dollars * 0.02,
+                    "agent {i} still billing {}", econ.per_agent_cost[i]);
+        }
+        assert_eq!(econ.total_cold_starts(), 0, "nothing ever wakes");
     }
 
     #[test]
     fn cold_start_delays_processing_after_burst() {
-        // Agent 1 idles long enough to scale to zero, then a burst
-        // arrives: its first post-burst steps process nothing (warming),
-        // unlike the always-warm run.
+        // NLP idles hard (zero arrivals), scales to zero, then a mid-run
+        // burst arrives: its first post-burst steps process nothing while
+        // the ~2.2 s cold start (2 GB checkpoint) completes, and the wake
+        // is counted in the economics report.
         let mut cfg = SimConfig::paper();
-        cfg.arrival_rates = vec![80.0, 0.0, 45.0, 25.0];
-        cfg.workload_kind = WorkloadKind::Spike {
-            agent: 1, factor: 1.0, start: 50, end: 100,
+        cfg.workload_kind = WorkloadKind::Burst {
+            agents: vec![1], start: 50, end: 100,
         };
-        // Spike with base 0 stays 0; use Dominance-free approach: give
-        // agent 1 rate via spike factor on a tiny base instead.
-        cfg.arrival_rates[1] = 0.004; // ~0 for 50s (deterministic 0.004/s)
-        cfg.workload_kind = WorkloadKind::Spike {
-            agent: 1, factor: 10_000.0, start: 50, end: 100,
-        };
-        cfg.scale_to_zero_after_s = Some(3.0);
+        cfg.economics = Some(EconomicsModel::with_idle_timeout(3.0));
         let sim = Simulator::new(cfg, AgentProfile::paper_agents());
         let r = sim.run(&mut AdaptivePolicy::default());
-        // NLP (3GB... 2GB model → ~2.2s cold start) loses at least one
-        // full step of processing right after the burst begins.
         let nlp = &r.per_agent[1];
         assert!(nlp.processed_total > 0.0, "burst eventually served");
         assert!(nlp.processed_total < nlp.arrived_total,
                 "cold start must cost some processing");
+        let econ = r.economics.as_ref().expect("economics enabled");
+        assert_eq!(econ.cold_starts[1], 1, "one wake for the burst");
+        assert!(econ.warm_fraction[1] < 1.0);
+        // Always-busy agents never cold-start.
+        assert_eq!(econ.cold_starts[0], 0);
+        assert_eq!(econ.warm_fraction[0], 1.0);
     }
 
     #[test]

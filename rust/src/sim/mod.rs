@@ -15,12 +15,12 @@ mod result;
 
 pub use arena::SimArena;
 pub use batch::{run_batch, run_sweep, BatchRun, CellResult,
-                ClusterScenario, Scenario, SweepArena, SweepCell,
-                SweepRun, TraceScenario};
+                ClusterScenario, CostScenario, Scenario, SweepArena,
+                SweepCell, SweepRun, TraceScenario};
 pub use engine::Simulator;
 pub use result::{AgentStats, SimResult, Timelines};
 
-use crate::serverless::GpuPricing;
+use crate::serverless::{EconomicsModel, GpuPricing};
 use crate::workload::{ArrivalProcess, WorkloadKind};
 
 /// Full configuration of one simulation run.
@@ -46,10 +46,18 @@ pub struct SimConfig {
     pub seed: u64,
     /// Record full per-step timelines (Fig 2(c) data) — costs memory.
     pub record_timelines: bool,
-    /// Scale-to-zero: idle timeout in seconds before an agent's container
-    /// is torn down (cold starts then delay its next processing). `None`
-    /// (the paper's evaluation) keeps every agent warm forever.
-    pub scale_to_zero_after_s: Option<f64>,
+    /// Serverless economics: per-agent billing, scale-to-zero, and cold
+    /// starts ([`EconomicsModel`]). When enabled, each step charges every
+    /// agent for its allocated fraction under the model's pricing (which
+    /// replaces [`SimConfig::pricing`] for the run), idle agents are torn
+    /// down after the model's timeout and forfeit (unbilled) their
+    /// allocation until a sampled cold start completes, and the run's
+    /// [`EconomicsReport`] is surfaced on the result. `None` (the paper's
+    /// evaluation) bills the whole device through
+    /// [`SimConfig::pricing`] and keeps every agent warm forever.
+    ///
+    /// [`EconomicsReport`]: crate::serverless::EconomicsReport
+    pub economics: Option<EconomicsModel>,
 }
 
 impl SimConfig {
@@ -67,7 +75,7 @@ impl SimConfig {
             arrival_process: ArrivalProcess::Deterministic,
             seed: 42,
             record_timelines: false,
-            scale_to_zero_after_s: None,
+            economics: None,
         }
     }
 

@@ -1,6 +1,7 @@
 //! Simulation outputs: per-agent statistics, aggregates, and timelines.
 
 use crate::metrics::{Streaming, TimeSeries};
+use crate::serverless::EconomicsReport;
 use crate::sim::SummaryRow;
 use crate::util;
 
@@ -71,6 +72,10 @@ pub struct SimResult {
     pub cost_dollars: f64,
     /// Fraction-weighted GPU-seconds consumed.
     pub gpu_seconds: f64,
+    /// Per-agent cost, cold-start, and warm-fraction breakdown, present
+    /// when the run's config enabled an
+    /// [`EconomicsModel`](crate::serverless::EconomicsModel).
+    pub economics: Option<EconomicsReport>,
     /// Full timelines when requested.
     pub timelines: Option<Timelines>,
 }

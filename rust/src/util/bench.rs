@@ -5,8 +5,17 @@
 //! mean/median/p95 per-iteration wall time, and honors the conventional
 //! `cargo bench -- <filter>` argument plus `--quick` for CI. Results can
 //! also be appended to a CSV for the EXPERIMENTS.md perf log.
+//!
+//! This module also hosts [`compare_bench_reports`], the tolerance-aware
+//! comparator behind CI's bench-regression gate: it reads two
+//! `sweep_scaling --json` reports (the committed BENCH_sweep.json
+//! baseline and a fresh measurement) and flags every scenario-throughput
+//! entry that dropped by more than the allowed fraction.
 
 use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::util::json::Value;
 
 /// One benchmark's measured statistics (nanoseconds per iteration).
 #[derive(Debug, Clone)]
@@ -141,6 +150,172 @@ impl Harness {
     }
 }
 
+/// Outcome of comparing two `sweep_scaling` JSON reports.
+#[derive(Debug, Clone, Default)]
+pub struct BenchComparison {
+    /// Entries compared, as `"section@workers"` / `"section/sequential"`
+    /// names.
+    pub compared: Vec<String>,
+    /// Human-readable regression descriptions — empty means the gate
+    /// passes.
+    pub regressions: Vec<String>,
+    /// Entries absent from the *baseline* (the schema can grow; a new
+    /// section is noted until the baseline is refreshed). Absence from
+    /// the *measured* report is a regression, not a skip — a gated
+    /// quantity that stops being measured must not disarm the gate.
+    pub skipped: Vec<String>,
+}
+
+impl BenchComparison {
+    /// Whether every compared entry stayed within tolerance.
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+}
+
+/// Compare a freshly measured `sweep_scaling` JSON report against a
+/// committed baseline, tolerance-aware: an entry regresses when its
+/// scenarios-per-second falls below `(1 - allowed_drop)` of the
+/// baseline's (`allowed_drop = 0.25` is the CI gate's 25 % budget).
+/// Running *faster* than the baseline never fails.
+///
+/// Compared entries: the single-GPU grid's sequential baseline and its
+/// per-worker-count batch rows, plus the same pair for each
+/// `cluster` / `corpus` / `cost` section present in both reports. The
+/// two reports must describe the same workload — equal `grid.steps`
+/// and per-section scenario counts — otherwise throughput is not
+/// comparable and an error is returned. A baseline whose `results` is
+/// `null` has not been populated yet; that is also an error, so the
+/// caller can decide whether an unpopulated baseline passes (bootstrap)
+/// or fails the gate.
+pub fn compare_bench_reports(baseline: &Value, measured: &Value,
+                             allowed_drop: f64) -> Result<BenchComparison> {
+    if !(0.0..1.0).contains(&allowed_drop) {
+        return Err(Error::Config(format!(
+            "allowed_drop must be in [0, 1), got {allowed_drop}")));
+    }
+    let base = results_of(baseline, "baseline")?;
+    let meas = results_of(measured, "measured")?;
+
+    // Same-workload check: throughput across different grid shapes is
+    // meaningless (e.g. a --quick run against a full baseline).
+    for key in ["steps", "scenarios"] {
+        let b = base.require("grid")?.require(key)?.as_f64();
+        let m = meas.require("grid")?.require(key)?.as_f64();
+        if b != m {
+            return Err(Error::Artifact(format!(
+                "reports are not comparable: grid.{key} {b:?} \
+                 (baseline) vs {m:?} (measured)")));
+        }
+    }
+
+    let mut cmp = BenchComparison::default();
+    compare_entry(
+        &mut cmp, "single/sequential", allowed_drop,
+        throughput_of(base.get("sequential_baseline")),
+        throughput_of(meas.get("sequential_baseline")));
+    compare_rows(&mut cmp, "single", allowed_drop,
+                 base.get("batch"), meas.get("batch"));
+
+    for section in ["cluster", "corpus", "cost"] {
+        let (b, m) = match (base.get(section), meas.get(section)) {
+            (Some(b), Some(m)) => (b, m),
+            // Not in the baseline yet: schema growth, note and move on.
+            (None, _) => {
+                cmp.skipped.push(section.to_string());
+                continue;
+            }
+            // Gated by the baseline but gone from the measurement.
+            (Some(_), None) => {
+                cmp.regressions.push(format!(
+                    "{section}: section is in the baseline but missing \
+                     from the measured report"));
+                continue;
+            }
+        };
+        let b_cells = b.get("scenarios").and_then(Value::as_f64);
+        let m_cells = m.get("scenarios").and_then(Value::as_f64);
+        if b_cells != m_cells {
+            return Err(Error::Artifact(format!(
+                "reports are not comparable: {section}.scenarios \
+                 {b_cells:?} (baseline) vs {m_cells:?} (measured)")));
+        }
+        compare_entry(&mut cmp, &format!("{section}/sequential"),
+                      allowed_drop, throughput_of(b.get("sequential")),
+                      throughput_of(m.get("sequential")));
+        compare_rows(&mut cmp, section, allowed_drop, b.get("sweep"),
+                     m.get("sweep"));
+    }
+    Ok(cmp)
+}
+
+/// The `results` object of a report, or an error naming which side is
+/// missing it (a `null` baseline has simply never been populated).
+fn results_of<'a>(report: &'a Value, side: &str) -> Result<&'a Value> {
+    match report.get("results") {
+        Some(results @ Value::Object(_)) => Ok(results),
+        _ => Err(Error::Artifact(format!(
+            "{side} report has no populated 'results' — run \
+             `cargo bench --bench sweep_scaling -- --json <file>` to \
+             record one"))),
+    }
+}
+
+/// `scenarios_per_s` of one `{seconds, scenarios_per_s}` entry.
+fn throughput_of(entry: Option<&Value>) -> Option<f64> {
+    entry.and_then(|e| e.get("scenarios_per_s")).and_then(Value::as_f64)
+}
+
+/// Compare one throughput number. Absent from the baseline → skipped
+/// (nothing to gate against); present in the baseline but absent from
+/// the measurement → regression (the gated quantity disappeared).
+fn compare_entry(cmp: &mut BenchComparison, name: &str, allowed_drop: f64,
+                 base: Option<f64>, meas: Option<f64>) {
+    let Some(base) = base else {
+        cmp.skipped.push(name.to_string());
+        return;
+    };
+    let Some(meas) = meas else {
+        cmp.regressions.push(format!(
+            "{name}: entry is in the baseline but missing from the \
+             measured report"));
+        return;
+    };
+    cmp.compared.push(name.to_string());
+    let floor = base * (1.0 - allowed_drop);
+    if meas < floor {
+        cmp.regressions.push(format!(
+            "{name}: {meas:.0} scenarios/s is below {:.0}% of the \
+             baseline's {base:.0} (floor {floor:.0})",
+            (1.0 - allowed_drop) * 100.0));
+    }
+}
+
+/// Compare per-worker-count rows (`[{workers, scenarios_per_s, ...}]`),
+/// matched by `workers`.
+fn compare_rows(cmp: &mut BenchComparison, section: &str,
+                allowed_drop: f64, base: Option<&Value>,
+                meas: Option<&Value>) {
+    let rows = |v: Option<&Value>| -> Vec<(u64, f64)> {
+        v.and_then(Value::as_array).map_or_else(Vec::new, |rows| {
+            rows.iter()
+                .filter_map(|row| Some((
+                    row.get("workers")?.as_u64()?,
+                    row.get("scenarios_per_s")?.as_f64()?,
+                )))
+                .collect()
+        })
+    };
+    let meas_rows = rows(meas);
+    for (workers, base_tput) in rows(base) {
+        let name = format!("{section}@{workers}");
+        let found = meas_rows.iter()
+            .find(|(w, _)| *w == workers)
+            .map(|(_, t)| *t);
+        compare_entry(cmp, &name, allowed_drop, Some(base_tput), found);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -183,5 +358,124 @@ mod tests {
         assert_eq!(BenchStats::fmt_ns(12_300.0), "12.30 µs");
         assert_eq!(BenchStats::fmt_ns(12_300_000.0), "12.30 ms");
         assert_eq!(BenchStats::fmt_ns(2_500_000_000.0), "2.500 s");
+    }
+
+    /// A minimal report in the `sweep_scaling --json` shape, with the
+    /// single-GPU section at `single` scenarios/s (sequential and both
+    /// worker rows) and a cluster section at `cluster` scenarios/s.
+    fn report(single: f64, cluster: f64) -> Value {
+        report_with_steps(single, cluster, 2000)
+    }
+
+    fn report_with_steps(single: f64, cluster: f64, steps: u64) -> Value {
+        Value::parse(&format!(r#"{{
+            "bench": "sweep_scaling",
+            "results": {{
+                "grid": {{"scenarios": 240, "steps": {steps}}},
+                "sequential_baseline":
+                    {{"seconds": 1.0, "scenarios_per_s": {single}}},
+                "batch": [
+                    {{"workers": 1, "seconds": 1.0,
+                      "scenarios_per_s": {single}}},
+                    {{"workers": 8, "seconds": 0.2,
+                      "scenarios_per_s": {s8}}}
+                ],
+                "cluster": {{
+                    "scenarios": 18,
+                    "sequential":
+                        {{"seconds": 1.0, "scenarios_per_s": {cluster}}},
+                    "sweep": [{{"workers": 8, "seconds": 0.5,
+                                "scenarios_per_s": {cluster}}}]
+                }}
+            }}
+        }}"#, s8 = single * 4.0)).unwrap()
+    }
+
+    #[test]
+    fn gate_passes_when_throughput_holds_or_improves() {
+        let baseline = report(1000.0, 100.0);
+        // Identical.
+        let cmp = compare_bench_reports(&baseline, &baseline, 0.25)
+            .unwrap();
+        assert!(cmp.passed(), "{:?}", cmp.regressions);
+        assert!(cmp.compared.contains(&"single/sequential".to_string()));
+        assert!(cmp.compared.contains(&"single@8".to_string()));
+        assert!(cmp.compared.contains(&"cluster@8".to_string()));
+        // Corpus/cost sections absent from both: noted, not failed.
+        assert!(cmp.skipped.contains(&"corpus".to_string()));
+        assert!(cmp.skipped.contains(&"cost".to_string()));
+        // Faster than baseline is never a regression.
+        let faster = report(2000.0, 150.0);
+        assert!(compare_bench_reports(&baseline, &faster, 0.25)
+                .unwrap().passed());
+        // A drop inside the tolerance budget passes.
+        let slightly = report(800.0, 80.0);
+        assert!(compare_bench_reports(&baseline, &slightly, 0.25)
+                .unwrap().passed());
+    }
+
+    #[test]
+    fn gate_fails_on_a_drop_beyond_tolerance() {
+        let baseline = report(1000.0, 100.0);
+        let slower = report(700.0, 100.0); // 30% single-GPU drop
+        let cmp = compare_bench_reports(&baseline, &slower, 0.25).unwrap();
+        assert!(!cmp.passed());
+        // Sequential and both batch rows regressed; cluster held.
+        assert_eq!(cmp.regressions.len(), 3, "{:?}", cmp.regressions);
+        assert!(cmp.regressions.iter().all(
+            |r| r.starts_with("single")), "{:?}", cmp.regressions);
+        // Exactly at the floor still passes; just below fails.
+        let at_floor = report(750.0, 75.0);
+        assert!(compare_bench_reports(&baseline, &at_floor, 0.25)
+                .unwrap().passed());
+        let below = report(749.0, 74.9);
+        assert!(!compare_bench_reports(&baseline, &below, 0.25)
+                .unwrap().passed());
+    }
+
+    #[test]
+    fn gate_fails_when_a_gated_entry_disappears_from_the_measurement() {
+        let baseline = report(1000.0, 100.0);
+        // Same grid shape, but no cluster section and no batch rows:
+        // the gate must fail, not silently disarm.
+        let measured = Value::parse(r#"{
+            "results": {
+                "grid": {"scenarios": 240, "steps": 2000},
+                "sequential_baseline":
+                    {"seconds": 1.0, "scenarios_per_s": 1000.0},
+                "batch": []
+            }
+        }"#).unwrap();
+        let cmp = compare_bench_reports(&baseline, &measured, 0.25)
+            .unwrap();
+        assert!(!cmp.passed());
+        // The two baseline batch rows (workers 1 and 8) and the cluster
+        // section are each reported as regressions.
+        assert_eq!(cmp.regressions.len(), 3, "{:?}", cmp.regressions);
+        assert!(cmp.regressions.iter()
+                .any(|r| r.starts_with("single@1")), "{:?}",
+                cmp.regressions);
+        assert!(cmp.regressions.iter()
+                .any(|r| r.starts_with("cluster:")), "{:?}",
+                cmp.regressions);
+        // Sections absent from the *baseline* stay skips (nothing to
+        // gate against until the baseline is refreshed).
+        assert!(cmp.skipped.contains(&"corpus".to_string()));
+    }
+
+    #[test]
+    fn gate_rejects_incomparable_or_unpopulated_reports() {
+        let baseline = report(1000.0, 100.0);
+        // Unpopulated baseline (results: null) is an explicit error so
+        // the CLI can bootstrap-pass it deliberately.
+        let unpopulated = Value::parse(
+            r#"{"bench": "sweep_scaling", "results": null}"#).unwrap();
+        assert!(compare_bench_reports(&unpopulated, &baseline, 0.25)
+                .is_err());
+        // Different grid shape (e.g. a --quick run) is not comparable.
+        let quick = report_with_steps(1000.0, 100.0, 500);
+        assert!(compare_bench_reports(&baseline, &quick, 0.25).is_err());
+        // Nonsense tolerance is rejected.
+        assert!(compare_bench_reports(&baseline, &baseline, 1.5).is_err());
     }
 }

@@ -28,6 +28,13 @@ pub enum WorkloadKind {
     /// produces when one upstream request fans out (stress-grid
     /// extension beyond §V.B's single-agent spike).
     MultiSpike { agents: Vec<usize>, factor: f64, start: u64, end: u64 },
+    /// Listed agents receive their base rate only inside [start, end)
+    /// and are *hard idle* (zero arrivals) outside it; unlisted agents
+    /// run steady. The serverless-economics shape: deterministic
+    /// arrivals are fractional, so this is the schedule under which idle
+    /// instances genuinely scale to zero and must cold-start when the
+    /// burst lands (§II.B / §III.D).
+    Burst { agents: Vec<usize>, start: u64, end: u64 },
     /// One agent receives `share` of the *total* request volume, the rest
     /// split proportionally to their original rates (§V.B dominance,
     /// share = 0.9).
@@ -100,6 +107,14 @@ impl WorkloadGenerator {
                 if agents.contains(&agent) && (*start..*end).contains(&step)
                 {
                     base * factor
+                } else {
+                    base
+                }
+            }
+            WorkloadKind::Burst { agents, start, end } => {
+                if agents.contains(&agent)
+                    && !(*start..*end).contains(&step) {
+                    0.0
                 } else {
                     base
                 }
@@ -231,6 +246,24 @@ mod tests {
         // ...while unlisted agents are untouched.
         assert_eq!(g.mean_rate(1, 5), 40.0);
         assert_eq!(g.mean_rate(3, 6), 25.0);
+    }
+
+    #[test]
+    fn burst_agents_are_hard_idle_outside_the_window() {
+        let g = WorkloadGenerator::new(
+            vec![80.0, 40.0, 45.0, 25.0],
+            WorkloadKind::Burst { agents: vec![1, 3], start: 4, end: 8 },
+            ArrivalProcess::Deterministic, 1);
+        // Outside the window: listed agents at exactly zero (not a small
+        // fraction — that would keep the autoscaler's busy flag set).
+        assert_eq!(g.mean_rate(1, 3), 0.0);
+        assert_eq!(g.mean_rate(3, 8), 0.0);
+        // Inside: listed agents at base rate.
+        assert_eq!(g.mean_rate(1, 4), 40.0);
+        assert_eq!(g.mean_rate(3, 7), 25.0);
+        // Unlisted agents run steady throughout.
+        assert_eq!(g.mean_rate(0, 3), 80.0);
+        assert_eq!(g.mean_rate(2, 9), 45.0);
     }
 
     #[test]

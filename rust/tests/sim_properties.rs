@@ -5,9 +5,10 @@ use agentsrv::agents::{AgentProfile, AgentRegistry, Priority};
 use agentsrv::allocator::{all_policies, policy_by_name, AllocContext,
                           PolicyKind};
 use agentsrv::cluster::{ClusterSimulator, MigrationModel};
-use agentsrv::serverless::GpuPricing;
+use agentsrv::serverless::{EconomicsModel, GpuPricing};
 use agentsrv::sim::batch::{run_batch, run_sweep, ClusterScenario,
-                           Scenario, SweepCell, TraceScenario};
+                           CostScenario, Scenario, SweepCell,
+                           TraceScenario};
 use agentsrv::sim::{SimConfig, Simulator};
 use agentsrv::util::check::{forall, vec_uniform};
 use agentsrv::util::Rng;
@@ -134,7 +135,7 @@ fn prop_simulation_conserves_requests_and_money() {
             },
             seed: *seed,
             record_timelines: false,
-            scale_to_zero_after_s: None,
+            economics: None,
         };
         let sim = Simulator::new(cfg, agents.clone());
         for mut policy in all_policies() {
@@ -187,7 +188,7 @@ fn prop_throughput_bounded_by_capacity_and_arrivals() {
             arrival_process: ArrivalProcess::Deterministic,
             seed: 1,
             record_timelines: false,
-            scale_to_zero_after_s: None,
+            economics: None,
         };
         let sim = Simulator::new(cfg, agents.clone());
         for mut policy in all_policies() {
@@ -374,9 +375,137 @@ fn prop_trace_sweep_is_bit_identical_to_run_trace() {
     }
 }
 
-/// A mixed grid — single-GPU, cluster, and trace cells interleaved —
-/// runs through one pool with cell order preserved and every kind
-/// bit-identical to its sequential twin at every worker count.
+/// `CostScenario` cells through the sweep engine must be a pure
+/// speedup: for every built-in policy, over both the Table II all-warm
+/// setting and an idle-burst workload with scale-to-zero, every cell is
+/// bit-identical (`==`, no tolerance) to a sequential `Simulator::run`
+/// of the same config through the `dyn` path, at 1, 2, and 8 workers —
+/// aggregates, per-agent series, and the full economics report alike.
+#[test]
+fn prop_cost_sweep_is_bit_identical_to_sequential_run() {
+    let mut cells = Vec::new();
+    let mut expected = Vec::new();
+    for (setting, cfg, economics) in [
+        ("warm", SimConfig::paper(), EconomicsModel::paper_all_warm()),
+        ("s2z", agentsrv::repro::idle_burst_config(100, 7),
+         EconomicsModel::with_idle_timeout(5.0)),
+        // 0.3 s quantum does not divide the 1 s step, so quantum
+        // rounding actually changes the billed amounts here.
+        ("s2z-quantum", agentsrv::repro::idle_burst_config(100, 9), {
+            let mut e = EconomicsModel::with_idle_timeout(5.0);
+            e.pricing.billing_quantum_s = 0.3;
+            e
+        }),
+    ] {
+        for kind in PolicyKind::all() {
+            let mut seq_cfg = cfg.clone();
+            seq_cfg.economics = Some(economics.clone());
+            let sequential = Simulator::with_registry(
+                seq_cfg, AgentRegistry::paper());
+            let mut reference = policy_by_name(kind.name())
+                .expect("built-in policy");
+            expected.push(sequential.run(reference.as_mut()));
+
+            cells.push(SweepCell::Cost(CostScenario::new(
+                format!("cost/{}/{setting}", kind.name()), cfg.clone(),
+                AgentRegistry::paper(), economics.clone(), kind)));
+        }
+    }
+    for workers in [1usize, 2, 8] {
+        let runs = run_sweep(&cells, workers);
+        assert_eq!(runs.len(), expected.len());
+        for (got, want) in runs.iter().zip(&expected) {
+            let sim = got.result.as_sim()
+                .expect("cost cell yields SimResult");
+            assert!(
+                sim.mean_latency() == want.mean_latency()
+                    && sim.total_throughput() == want.total_throughput()
+                    && sim.cost_dollars == want.cost_dollars,
+                "{} @ {workers} workers: cost sweep diverged (latency \
+                 {} vs {}, tput {} vs {}, cost {} vs {})",
+                got.label, sim.mean_latency(), want.mean_latency(),
+                sim.total_throughput(), want.total_throughput(),
+                sim.cost_dollars, want.cost_dollars);
+            assert_eq!(sim.economics, want.economics,
+                       "{} @ {workers} workers", got.label);
+            assert!(want.economics.is_some(),
+                    "{}: economics must be on", got.label);
+            for (a, b) in sim.per_agent.iter().zip(&want.per_agent) {
+                assert_eq!(a.latency.mean(), b.latency.mean(),
+                           "{}/{}", got.label, a.name);
+                assert_eq!(a.processed_total, b.processed_total);
+                assert_eq!(a.final_queue, b.final_queue);
+            }
+        }
+    }
+}
+
+/// Economics-enabled cluster cells hold the same contract: with
+/// scale-to-zero and cold starts active on a multi-GPU cluster, the
+/// full [`ClusterResult`] (economics report included — the struct
+/// derives `PartialEq`) is bit-identical to a sequential
+/// `ClusterSimulator::run` at 1, 2, and 8 workers.
+#[test]
+fn prop_economics_cluster_sweep_is_bit_identical_to_sequential_run() {
+    let mut cells = Vec::new();
+    let mut expected = Vec::new();
+    for economics in [
+        EconomicsModel::paper_all_warm(),
+        EconomicsModel::with_idle_timeout(5.0),
+    ] {
+        for (gpus, cap) in [(1usize, 1.0), (2, 1.0), (4, 1.0)] {
+            let mut cfg = agentsrv::repro::idle_burst_config(100, 11);
+            cfg.economics = Some(economics.clone());
+            let sequential = ClusterSimulator::new(
+                cfg.clone(), AgentRegistry::paper(), gpus, cap, None)
+                .unwrap();
+            expected.push(sequential.run().unwrap());
+            cells.push(SweepCell::Cluster(ClusterScenario::new(
+                format!("econ-cluster/{gpus}gpu/warm{}",
+                        economics.idle_timeout_s), cfg,
+                AgentRegistry::paper(), gpus, cap, None).unwrap()));
+        }
+    }
+    // The scale-to-zero cells must actually exercise the lifecycle.
+    assert!(expected.iter().any(|r| r.economics.as_ref()
+            .is_some_and(|e| e.total_cold_starts() > 0)),
+            "no cluster cell cold-started");
+    for workers in [1usize, 2, 8] {
+        let runs = run_sweep(&cells, workers);
+        assert_eq!(runs.len(), expected.len());
+        for (got, want) in runs.iter().zip(&expected) {
+            let cluster = got.result.as_cluster()
+                .expect("cluster cell yields ClusterResult");
+            assert_eq!(cluster, want, "{} @ {workers} workers",
+                       got.label);
+        }
+    }
+}
+
+/// The headline economics claim, end to end: under the paper's all-warm
+/// settings every full-GPU policy reproduces Table II's cost row
+/// ($0.020 per 100 s — cost cannot separate the policies), and a finite
+/// scale-to-zero timeout breaks that tie.
+#[test]
+fn prop_economics_experiment_reproduces_table2_cost_row() {
+    let rows = agentsrv::repro::economics_experiment(100);
+    assert_eq!(rows.len(), PolicyKind::all().len());
+    for row in &rows {
+        assert!((row.paper_warm_cost - 0.020).abs() < 1e-6,
+                "{}: paper all-warm cost {}", row.policy,
+                row.paper_warm_cost);
+    }
+    let costs: Vec<f64> = rows.iter().map(|r| r.burst_s2z_cost).collect();
+    let spread = costs.iter().cloned().fold(f64::MIN, f64::max)
+        - costs.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(spread > 1e-4,
+            "scale-to-zero should break the cost tie: {costs:?}");
+}
+
+/// A mixed grid — single-GPU, cluster, trace, and cost cells
+/// interleaved — runs through one pool with cell order preserved and
+/// every kind bit-identical to its sequential twin at every worker
+/// count.
 #[test]
 fn prop_mixed_sweep_is_bit_identical_per_cell_kind() {
     let trace = Trace::paper_poisson(50, 42);
@@ -388,7 +517,12 @@ fn prop_mixed_sweep_is_bit_identical_per_cell_kind() {
                             kind.clone())));
         cells.push(SweepCell::Trace(TraceScenario::new(
             format!("trace/{}", kind.name()), SimConfig::paper(),
-            AgentRegistry::paper(), trace.clone(), kind)));
+            AgentRegistry::paper(), trace.clone(), kind.clone())));
+        cells.push(SweepCell::Cost(CostScenario::new(
+            format!("cost/{}", kind.name()),
+            agentsrv::repro::idle_burst_config(100, 42),
+            AgentRegistry::paper(),
+            EconomicsModel::with_idle_timeout(5.0), kind)));
     }
     for (gpus, migration) in
         [(2usize, None), (2, Some(MigrationModel::default())), (4, None)]
@@ -427,6 +561,17 @@ fn prop_mixed_sweep_is_bit_identical_per_cell_kind() {
                     assert!(got.mean_latency() == want.mean_latency()
                             && got.cost_dollars == want.cost_dollars,
                             "{} @ {workers}", run.label);
+                }
+                SweepCell::Cost(sc) => {
+                    let mut policy = policy_by_name(sc.policy.name())
+                        .expect("built-in policy");
+                    let want = sc.simulator().run(policy.as_mut());
+                    let got = run.result.as_sim().unwrap();
+                    assert!(got.mean_latency() == want.mean_latency()
+                            && got.cost_dollars == want.cost_dollars,
+                            "{} @ {workers}", run.label);
+                    assert_eq!(got.economics, want.economics,
+                               "{} @ {workers}", run.label);
                 }
             }
         }
