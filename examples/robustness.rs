@@ -59,9 +59,11 @@ fn main() {
         .filter(|c| matches!(c, SweepCell::Trace(_))).count();
     let costs = cells.iter()
         .filter(|c| matches!(c, SweepCell::Cost(_))).count();
+    let servings = cells.iter()
+        .filter(|c| matches!(c, SweepCell::Serving(_))).count();
     println!("\n== mixed stress sweep: {singles} single-GPU + {clusters} \
-              cluster + {traces} trace + {costs} cost cells, {workers} \
-              worker(s) ==");
+              cluster + {traces} trace + {costs} cost + {servings} \
+              serving cells, {workers} worker(s) ==");
     let start = std::time::Instant::now();
     let runs = run_sweep(&cells, workers);
     let elapsed = start.elapsed();

@@ -152,10 +152,10 @@ fn main() {
     println!("\nserver stats:");
     println!("  {:<14} {:>9} {:>12} {:>12} {:>11} {:>10}", "agent",
              "completed", "p50", "p99", "mean batch", "gpu share");
-    for (name, n, p50, p99, batch, share) in &stats.per_agent {
-        println!("  {name:<14} {n:>9} {:>11.2}ms {:>11.2}ms {batch:>11.2} \
-                  {:>9.1}%",
-                 p50 * 1e3, p99 * 1e3, share * 100.0);
+    for a in &stats.per_agent {
+        println!("  {:<14} {:>9} {:>11.2}ms {:>11.2}ms {:>11.2} {:>9.1}%",
+                 a.name, a.completed, a.p50_s * 1e3, a.p99_s * 1e3,
+                 a.mean_batch, a.gpu_share * 100.0);
     }
     println!("  totals: {} completed, {} errors, GPU busy {:.2}s",
              stats.total_completed, stats.total_errors,

@@ -9,11 +9,15 @@
 //!      trade-off;
 //!   3. policy × load — every policy across arrival-rate scales,
 //!      locating the round-robin crossover;
-//!   4. cluster & trace axes — the §VI multi-GPU grid and recorded-trace
-//!      replays, as heterogeneous cells through the same worker pool;
+//!   4. cluster & trace axes — the §VI multi-GPU grid (now including
+//!      heterogeneous per-GPU capacities) and recorded-trace replays, as
+//!      heterogeneous cells through the same worker pool;
 //!   5. serverless economics — the Table II cost tie under all-warm
 //!      settings, and the pricing × scale-to-zero × cold-start axes
-//!      that break it, as `CostScenario` cells.
+//!      that break it, as `CostScenario` cells;
+//!   6. serving layer — the `server::` queue path (windowed allocator ×
+//!      stride governor × dynamic batching) replayed in virtual time as
+//!      `ServingScenario` cells, policy × window × max-batch.
 //!
 //! Each sweep builds its grid of [`Scenario`]s (or mixed [`SweepCell`]s)
 //! and fans it across the batch engine's worker threads; results are
@@ -42,6 +46,7 @@ fn main() {
     sweep_policy_by_load(workers);
     sweep_cluster_and_traces(workers);
     sweep_economics(workers);
+    sweep_serving(workers);
 }
 
 /// Paper agents with one mutation applied, validated into a registry.
@@ -196,5 +201,26 @@ fn sweep_economics(workers: usize) {
                  run.result.mean_latency());
     }
     println!("(slower cold starts cost latency, not dollars; tighter \
-              idle timeouts trade the reverse)");
+              idle timeouts trade the reverse)\n");
+}
+
+fn sweep_serving(workers: usize) {
+    println!("== sweep 6: serving-layer queue path \
+              (policy × window × batch) ==");
+    let cells = repro::serving_grid(5.0, &[42]);
+    println!("{:<46} {:>9} {:>9} {:>7} {:>8}", "cell", "mean(s)",
+             "p99(s)", "batch", "windows");
+    for run in run_sweep(&cells, workers) {
+        let Some(r) = run.result.as_serving() else {
+            continue;
+        };
+        println!("{:<46} {:>9.2} {:>9.2} {:>7.2} {:>8}", run.label,
+                 r.mean_latency(), r.mean_p99(), r.mean_batch(),
+                 r.windows);
+    }
+    println!("(every cell drives the same ServingCore as the threaded \
+              PJRT server, in virtual time: per-request queues, windowed \
+              allocator re-runs, stride picks, dynamic batching — \
+              deterministic, so the property suite can assert parallel \
+              replays bit-identical)");
 }

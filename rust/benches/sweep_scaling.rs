@@ -13,7 +13,11 @@
 //!     seed) replayed under every policy;
 //!   * cost — `repro::cost_grid`: the serverless-economics axes
 //!     (pricing × scale-to-zero timeout × cold-start distribution ×
-//!     policy) over the idle-burst workload, as `CostScenario` cells.
+//!     policy) over the idle-burst workload, as `CostScenario` cells;
+//!   * serving — `repro::serving_grid`: the serving-layer queue path
+//!     (policy × allocation window × max batch × workload, plus
+//!     recorded-trace replays) in virtual time, as `ServingScenario`
+//!     cells driving the same `ServingCore` as the threaded server.
 //!
 //! `--quick` shrinks everything to 500 steps × 2 seeds for CI.
 //!
@@ -32,9 +36,9 @@
 //! Run: `cargo bench --bench sweep_scaling [-- --quick] [-- --json FILE]`
 //! With `--json`, the measured tables are also written as JSON (the
 //! format documented in BENCH_sweep.json, `results` key: the single-GPU
-//! table plus `cluster`, `corpus`, and `cost` sections). The written
-//! report is what CI's bench-regression gate compares against the
-//! committed BENCH_sweep.json baseline (`agentsrv bench-gate`).
+//! table plus `cluster`, `corpus`, `cost`, and `serving` sections). The
+//! written report is what CI's bench-regression gate compares against
+//! the committed BENCH_sweep.json baseline (`agentsrv bench-gate`).
 
 use std::time::{Duration, Instant};
 
@@ -113,6 +117,13 @@ fn main() {
     let (cost_seq_s, cost_rows) = sweep_section(
         "cost grid", &cost_cells, steps, reps, sequential_cost);
 
+    // ---- Serving-layer grid through the same pool --------------------
+    let serving_duration = if quick { 3.0 } else { 10.0 };
+    let serving_cells = repro::serving_grid(serving_duration, &seeds);
+    let (serving_seq_s, serving_rows) = sweep_section(
+        "serving grid", &serving_cells,
+        (serving_duration * 10.0) as u64, reps, sequential_serving);
+
     if let Some(path) = json_path {
         let json = to_json(&ReportInput {
             grid: &grid,
@@ -123,6 +134,7 @@ fn main() {
             cluster: (cluster_cells.len(), cluster_seq_s, &cluster_rows),
             corpus: (corpus_cells.len(), corpus_seq_s, &corpus_rows),
             cost: (cost_cells.len(), cost_seq_s, &cost_rows),
+            serving: (serving_cells.len(), serving_seq_s, &serving_rows),
         }, &path);
         std::fs::write(&path, json).expect("write json report");
         println!("\njson report -> {path}");
@@ -169,6 +181,26 @@ fn sequential_cost(cells: &[SweepCell]) -> Vec<SweepRun> {
             }
         }
         _ => unreachable!("cost grid contains only cost cells"),
+    }).collect()
+}
+
+/// The direct serving path: `ServingSimulator::run` / `run_trace` with
+/// fresh buffers through a boxed `dyn AllocationPolicy` per cell.
+fn sequential_serving(cells: &[SweepCell]) -> Vec<SweepRun> {
+    cells.iter().map(|cell| match cell {
+        SweepCell::Serving(sc) => {
+            let mut policy = policy_by_name(sc.policy.name())
+                .expect("grid uses built-in policies");
+            let result = match sc.trace() {
+                Some(t) => sc.simulator().run_trace(policy.as_mut(), t),
+                None => sc.simulator().run(policy.as_mut()),
+            };
+            SweepRun {
+                label: sc.label.clone(),
+                result: CellResult::Serving(result),
+            }
+        }
+        _ => unreachable!("serving grid contains only serving cells"),
     }).collect()
 }
 
@@ -282,6 +314,8 @@ struct ReportInput<'a> {
     corpus: (usize, f64, &'a [(usize, f64, f64)]),
     /// (cells, sequential seconds, per-worker rows).
     cost: (usize, f64, &'a [(usize, f64, f64)]),
+    /// (cells, sequential seconds, per-worker rows).
+    serving: (usize, f64, &'a [(usize, f64, f64)]),
 }
 
 fn worker_rows(n_cells: usize, rows: &[(usize, f64, f64)]) -> Value {
@@ -318,6 +352,7 @@ fn results_value(input: &ReportInput<'_>) -> Value {
     let (cluster_cells, cluster_seq_s, cluster_rows) = input.cluster;
     let (corpus_cells, corpus_seq_s, corpus_rows) = input.corpus;
     let (cost_cells, cost_seq_s, cost_rows) = input.cost;
+    let (serving_cells, serving_seq_s, serving_rows) = input.serving;
     json::obj(vec![
         ("grid", json::obj(vec![
             ("scenarios", json::num(n as f64)),
@@ -339,6 +374,9 @@ fn results_value(input: &ReportInput<'_>) -> Value {
          sweep_section_value(corpus_cells, corpus_seq_s, corpus_rows)),
         ("cost",
          sweep_section_value(cost_cells, cost_seq_s, cost_rows)),
+        ("serving",
+         sweep_section_value(serving_cells, serving_seq_s,
+                             serving_rows)),
     ])
 }
 

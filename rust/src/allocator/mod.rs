@@ -67,6 +67,39 @@ pub trait AllocationPolicy: Send {
     fn reset(&mut self) {}
 }
 
+/// Forwarding impl so a borrowed policy can drive engines that take the
+/// policy by value (the serving core owns its policy; `Simulator`-style
+/// callers hold `&mut P`).
+impl<P: AllocationPolicy + ?Sized> AllocationPolicy for &mut P {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn allocate(&mut self, ctx: &AllocContext<'_>, out: &mut [f64]) {
+        (**self).allocate(ctx, out)
+    }
+
+    fn reset(&mut self) {
+        (**self).reset()
+    }
+}
+
+/// Forwarding impl for boxed policies, so `Box<dyn AllocationPolicy>`
+/// (the `policy_by_name` return type) is itself a policy.
+impl<P: AllocationPolicy + ?Sized> AllocationPolicy for Box<P> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn allocate(&mut self, ctx: &AllocContext<'_>, out: &mut [f64]) {
+        (**self).allocate(ctx, out)
+    }
+
+    fn reset(&mut self) {
+        (**self).reset()
+    }
+}
+
 /// Scale `out` in place so it sums to at most `capacity` (Algorithm 1's
 /// normalization phase). No-op when already within capacity or all-zero.
 pub fn normalize_to_capacity(out: &mut [f64], capacity: f64) {

@@ -83,11 +83,13 @@ impl ClusterAllocator {
     }
 
     /// Allocate: `out[i]` = agent i's fraction *of its placed GPU*.
-    /// Global GPU-time conservation: Σ_{i on gpu} out[i] <= capacity for
-    /// every gpu.
+    /// `capacities[gpu]` is that device's capacity (uniform clusters pass
+    /// the same value per GPU). Global GPU-time conservation:
+    /// Σ_{i on gpu} out[i] <= capacities[gpu] for every gpu.
     pub fn allocate(&mut self, registry: &AgentRegistry,
                     arrival_rates: &[f64], queue_depths: &[f64],
-                    step: u64, capacity_per_gpu: f64, out: &mut [f64]) {
+                    step: u64, capacities: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(capacities.len(), self.placement.n_gpus);
         out.fill(0.0);
         for gpu in 0..self.placement.n_gpus {
             let ids = self.placement.agents_on(gpu);
@@ -105,7 +107,7 @@ impl ClusterAllocator {
                 arrival_rates: rates,
                 queue_depths: queues,
                 step,
-                capacity: capacity_per_gpu,
+                capacity: capacities[gpu],
             };
             let sub_out = &mut self.scratch_out[gpu];
             self.node_policies[gpu].allocate(&ctx, sub_out);
@@ -129,7 +131,7 @@ mod tests {
         let mut alloc = ClusterAllocator::new(&reg, placement);
         let mut out = vec![0.0; 4];
         alloc.allocate(&reg, &[80.0, 40.0, 45.0, 25.0], &[0.0; 4], 0,
-                       1.0, &mut out);
+                       &[1.0, 1.0], &mut out);
         for gpu in 0..2 {
             let total: f64 = alloc.placement().agents_on(gpu).iter()
                 .map(|i| out[*i]).sum();
@@ -150,9 +152,9 @@ mod tests {
         let mut out1 = vec![0.0; 4];
         let mut out2 = vec![0.0; 4];
         ClusterAllocator::new(&reg, single)
-            .allocate(&reg, &rates, &[0.0; 4], 0, 1.0, &mut out1);
+            .allocate(&reg, &rates, &[0.0; 4], 0, &[1.0], &mut out1);
         ClusterAllocator::new(&reg, dual)
-            .allocate(&reg, &rates, &[0.0; 4], 0, 1.0, &mut out2);
+            .allocate(&reg, &rates, &[0.0; 4], 0, &[1.0, 1.0], &mut out2);
         let cap1: f64 = (0..4).map(|i| out1[i] * reg.base_tput()[i]).sum();
         let cap2: f64 = (0..4).map(|i| out2[i] * reg.base_tput()[i]).sum();
         assert!(cap2 > 1.5 * cap1, "single {cap1} vs dual {cap2}");
@@ -165,12 +167,12 @@ mod tests {
         let mut alloc = ClusterAllocator::new(&reg, placement);
         let rates = [80.0, 40.0, 45.0, 25.0];
         let mut out = vec![0.0; 4];
-        alloc.allocate(&reg, &rates, &[0.0; 4], 0, 1.0, &mut out);
+        alloc.allocate(&reg, &rates, &[0.0; 4], 0, &[1.0, 1.0], &mut out);
         let coord_before = out[0];
         // Move the coordinator to the other GPU; shares re-equilibrate.
         let to = 1 - alloc.placement().gpu_of[0];
         alloc.migrate(&reg, 0, to);
-        alloc.allocate(&reg, &rates, &[0.0; 4], 1, 1.0, &mut out);
+        alloc.allocate(&reg, &rates, &[0.0; 4], 1, &[1.0, 1.0], &mut out);
         assert!(out[0] > 0.0);
         assert_ne!(out[0], coord_before);
     }

@@ -25,6 +25,6 @@ mod placement;
 mod sim;
 
 pub use hierarchical::ClusterAllocator;
-pub use placement::{first_fit_decreasing, Placement};
+pub use placement::{first_fit_decreasing, pack_decreasing, Placement};
 pub use sim::{ClusterArena, ClusterResult, ClusterSimulator,
               MigrationModel};

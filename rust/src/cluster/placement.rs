@@ -50,6 +50,23 @@ pub fn first_fit_decreasing(registry: &AgentRegistry, n_gpus: usize,
     if n_gpus == 0 {
         return Err(Error::Config("cluster needs >= 1 GPU".into()));
     }
+    pack_decreasing(registry, &vec![capacity_per_gpu; n_gpus])
+}
+
+/// Per-GPU-capacity generalization of [`first_fit_decreasing`]
+/// (heterogeneous devices, §VI): sort agents by `R_i` descending, place
+/// each on the GPU with the most remaining *headroom*
+/// (`capacity - load`) where its minimum still fits. With uniform
+/// capacities the headroom order equals the load order, so this reduces
+/// to [`first_fit_decreasing`] exactly (asserted by the tests).
+///
+/// Errors when the capacity list is empty or some agent fits nowhere.
+pub fn pack_decreasing(registry: &AgentRegistry, capacities: &[f64])
+                       -> Result<Placement> {
+    if capacities.is_empty() {
+        return Err(Error::Config("cluster needs >= 1 GPU".into()));
+    }
+    let n_gpus = capacities.len();
     let mins = registry.min_gpu();
     let mut order: Vec<usize> = (0..registry.len()).collect();
     order.sort_by(|a, b| mins[*b].partial_cmp(&mins[*a])
@@ -60,10 +77,13 @@ pub fn first_fit_decreasing(registry: &AgentRegistry, n_gpus: usize,
     for agent in order {
         let mut placed = false;
         let mut gpus: Vec<usize> = (0..n_gpus).collect();
-        gpus.sort_by(|a, b| load[*a].partial_cmp(&load[*b])
-                     .expect("finite load"));
+        gpus.sort_by(|a, b| {
+            let ha = capacities[*a] - load[*a];
+            let hb = capacities[*b] - load[*b];
+            hb.partial_cmp(&ha).expect("finite headroom")
+        });
         for gpu in gpus {
-            if load[gpu] + mins[agent] <= capacity_per_gpu + 1e-9 {
+            if load[gpu] + mins[agent] <= capacities[gpu] + 1e-9 {
                 load[gpu] += mins[agent];
                 gpu_of[agent] = gpu;
                 placed = true;
@@ -73,7 +93,7 @@ pub fn first_fit_decreasing(registry: &AgentRegistry, n_gpus: usize,
         if !placed {
             return Err(Error::Config(format!(
                 "agent '{}' (min {:.2}) fits on no GPU \
-                 (loads: {load:?})",
+                 (loads: {load:?}, capacities: {capacities:?})",
                 registry.profile(agent).name, mins[agent])));
         }
     }
@@ -132,6 +152,33 @@ mod tests {
         let load = p.min_load(&reg);
         assert!((load[0] - 1.0).abs() < 1e-9
                 && (load[1] - 1.0).abs() < 1e-9, "{load:?}");
+    }
+
+    #[test]
+    fn heterogeneous_capacities_pack_by_headroom() {
+        let reg = AgentRegistry::paper();
+        // A 0.6 device plus a 0.4 device: Σ mins = 1.0 exactly, so the
+        // packing must be tight and respect each device's own cap.
+        let p = pack_decreasing(&reg, &[0.6, 0.4]).unwrap();
+        let load = p.min_load(&reg);
+        assert!(load[0] <= 0.6 + 1e-9 && load[1] <= 0.4 + 1e-9,
+                "{load:?}");
+        assert!(p.gpu_of.iter().all(|g| *g < 2));
+        // reasoning (largest min, 0.35) lands on the big device first.
+        assert_eq!(p.gpu_of[3], 0);
+        // Undersized heterogeneous mixes error instead of panicking.
+        assert!(pack_decreasing(&reg, &[0.5, 0.3]).is_err());
+        assert!(pack_decreasing(&reg, &[]).is_err());
+    }
+
+    #[test]
+    fn uniform_capacities_reduce_to_first_fit_decreasing() {
+        let reg = AgentRegistry::paper();
+        for (n, cap) in [(2usize, 0.6), (2, 1.0), (4, 1.0)] {
+            let uniform = pack_decreasing(&reg, &vec![cap; n]).unwrap();
+            let ffd = first_fit_decreasing(&reg, n, cap).unwrap();
+            assert_eq!(uniform, ffd, "{n} gpus @ {cap}");
+        }
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Cluster-level discrete-time simulation (multi-GPU §VI extension).
 
 use crate::agents::AgentRegistry;
-use crate::cluster::{first_fit_decreasing, ClusterAllocator, Placement};
+use crate::cluster::{pack_decreasing, ClusterAllocator, Placement};
 use crate::error::Result;
 use crate::metrics::Streaming;
 use crate::serverless::{EconInstruments, EconomicsReport};
@@ -135,35 +135,55 @@ impl ClusterResult {
     }
 }
 
-/// Multi-GPU simulator: FFD placement, per-GPU Algorithm 1, optional
+/// Multi-GPU simulator: headroom-decreasing placement, per-GPU
+/// Algorithm 1 (each GPU with its own capacity), optional
 /// imbalance-triggered migration with transfer stalls.
 #[derive(Debug, Clone)]
 pub struct ClusterSimulator {
     cfg: SimConfig,
     registry: AgentRegistry,
-    n_gpus: usize,
-    capacity_per_gpu: f64,
+    /// One capacity per GPU (uniform clusters repeat one value).
+    capacities: Vec<f64>,
     migration: Option<MigrationModel>,
     placement: Placement,
 }
 
 impl ClusterSimulator {
-    /// Build; errors if the agents cannot be placed. The validated
-    /// placement is stored, so every `run()` starts from it directly
-    /// instead of re-solving the bin-packing.
+    /// Build a uniform cluster (`n_gpus` devices of `capacity_per_gpu`
+    /// each); errors if the agents cannot be placed.
     pub fn new(cfg: SimConfig, registry: AgentRegistry, n_gpus: usize,
                capacity_per_gpu: f64, migration: Option<MigrationModel>)
                -> Result<ClusterSimulator> {
-        let placement =
-            first_fit_decreasing(&registry, n_gpus, capacity_per_gpu)?;
+        if n_gpus == 0 {
+            return Err(crate::error::Error::Config(
+                "cluster needs >= 1 GPU".into()));
+        }
+        ClusterSimulator::heterogeneous(
+            cfg, registry, vec![capacity_per_gpu; n_gpus], migration)
+    }
+
+    /// Build a cluster of mixed per-GPU capacities (§VI heterogeneous
+    /// devices): one entry per GPU. The validated placement is stored,
+    /// so every `run()` starts from it directly instead of re-solving
+    /// the bin-packing.
+    pub fn heterogeneous(cfg: SimConfig, registry: AgentRegistry,
+                         capacities: Vec<f64>,
+                         migration: Option<MigrationModel>)
+                         -> Result<ClusterSimulator> {
+        let placement = pack_decreasing(&registry, &capacities)?;
         Ok(ClusterSimulator {
-            cfg, registry, n_gpus, capacity_per_gpu, migration, placement,
+            cfg, registry, capacities, migration, placement,
         })
     }
 
     /// The initial (construction-time) agent→GPU placement.
     pub fn placement(&self) -> &Placement {
         &self.placement
+    }
+
+    /// Per-GPU capacities, in device order.
+    pub fn capacities(&self) -> &[f64] {
+        &self.capacities
     }
 
     /// Run the hierarchical allocator over the configured workload.
@@ -179,6 +199,7 @@ impl ClusterSimulator {
     pub fn run_with_arena(&self, arena: &mut ClusterArena)
                           -> Result<ClusterResult> {
         let n = self.registry.len();
+        let n_gpus = self.capacities.len();
         let cfg = &self.cfg;
         let mut allocator =
             ClusterAllocator::new(&self.registry, self.placement.clone());
@@ -192,7 +213,7 @@ impl ClusterSimulator {
         let mut econ = EconInstruments::new(
             cfg.economics.as_ref(), cfg.pricing, n, cfg.seed);
 
-        arena.reset(n, self.n_gpus);
+        arena.reset(n, n_gpus);
         let ClusterArena {
             queues, rates, counts, observed, alloc, stalled_until,
             model_mb, demand, gpu_cap, gpu_done, latency, throughput,
@@ -243,7 +264,7 @@ impl ClusterSimulator {
                     let movable = candidates.into_iter()
                         .filter(|i| candidates_fit(
                             self.registry.min_gpu()[*i], target_load,
-                            self.capacity_per_gpu))
+                            self.capacities[min_g]))
                         .min_by(|a, b| self.registry.min_gpu()[*a]
                                 .partial_cmp(&self.registry.min_gpu()[*b])
                                 .expect("finite"));
@@ -260,7 +281,8 @@ impl ClusterSimulator {
             }
 
             allocator.allocate(&self.registry, &observed[..], &queues[..],
-                               step, self.capacity_per_gpu, &mut alloc[..]);
+                               step, &self.capacities[..],
+                               &mut alloc[..]);
 
             // Agents that cannot serve this step forfeit their allocation
             // (and are not billed for it): a migrating agent's model is
@@ -298,7 +320,7 @@ impl ClusterSimulator {
                 gpu_cap[gpu] += cap;
                 gpu_done[gpu] += processed;
             }
-            for g in 0..self.n_gpus {
+            for g in 0..n_gpus {
                 if gpu_cap[g] > 0.0 {
                     gpu_util[g].push(gpu_done[g] / gpu_cap[g]);
                 }
@@ -310,7 +332,7 @@ impl ClusterSimulator {
             econ.finish(cfg.steps);
 
         Ok(ClusterResult {
-            n_gpus: self.n_gpus,
+            n_gpus,
             agent_latencies: latency.iter().map(Streaming::mean).collect(),
             agent_throughputs:
                 throughput.iter().map(Streaming::mean).collect(),
@@ -382,7 +404,7 @@ mod tests {
     #[test]
     fn stored_placement_matches_ffd_and_runs_are_repeatable() {
         let sim = paper_cluster(2, 1.0);
-        let expected = first_fit_decreasing(
+        let expected = crate::cluster::first_fit_decreasing(
             &AgentRegistry::paper(), 2, 1.0).unwrap();
         assert_eq!(sim.placement(), &expected);
         // run() starts from the stored placement every time.
@@ -495,5 +517,45 @@ mod tests {
         assert!(ClusterSimulator::new(
             SimConfig::paper(), AgentRegistry::paper(), 2, 0.3, None)
                 .is_err());
+        assert!(ClusterSimulator::new(
+            SimConfig::paper(), AgentRegistry::paper(), 0, 1.0, None)
+                .is_err());
+        assert!(ClusterSimulator::heterogeneous(
+            SimConfig::paper(), AgentRegistry::paper(), vec![0.5, 0.3],
+            None).is_err());
+    }
+
+    #[test]
+    fn heterogeneous_cluster_runs_with_per_gpu_capacities() {
+        // A tight 0.6 + 0.4 mix: placement respects each device's own
+        // cap, the run serves everyone, and a wider 1.0 + 0.5 mix beats
+        // the single-GPU deployment on throughput.
+        let sim = ClusterSimulator::heterogeneous(
+            SimConfig::paper(), AgentRegistry::paper(), vec![0.6, 0.4],
+            None).unwrap();
+        assert_eq!(sim.capacities(), &[0.6, 0.4]);
+        let expected =
+            pack_decreasing(&AgentRegistry::paper(), &[0.6, 0.4]).unwrap();
+        assert_eq!(sim.placement(), &expected);
+        let r = sim.run().unwrap();
+        assert_eq!(r.n_gpus, 2);
+        assert!(r.agent_throughputs.iter().all(|t| *t > 0.0), "{r:?}");
+
+        let one = paper_cluster(1, 1.0).run().unwrap();
+        let wide = ClusterSimulator::heterogeneous(
+            SimConfig::paper(), AgentRegistry::paper(), vec![1.0, 0.5],
+            None).unwrap().run().unwrap();
+        assert!(wide.total_throughput() > one.total_throughput(),
+                "wide {} vs one {}", wide.total_throughput(),
+                one.total_throughput());
+    }
+
+    #[test]
+    fn uniform_heterogeneous_constructor_matches_new() {
+        let a = paper_cluster(2, 1.0).run().unwrap();
+        let b = ClusterSimulator::heterogeneous(
+            SimConfig::paper(), AgentRegistry::paper(), vec![1.0, 1.0],
+            None).unwrap().run().unwrap();
+        assert_eq!(a, b);
     }
 }

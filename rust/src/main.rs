@@ -4,6 +4,8 @@
 //! agentsrv simulate [--config f.json] [--policy p] [--steps N]
 //!                   [--poisson] [--seed N] [--timelines out.csv]
 //! agentsrv repro    [--out DIR] [--exp ID]      regenerate tables/figures
+//!                                               (incl. --exp serving: the
+//!                                               queue-granularity contrast)
 //! agentsrv serve    [--artifacts DIR] [--policy p] [--requests N]
 //!                   [--workflows N]             end-to-end PJRT serving
 //! agentsrv verify   [--artifacts DIR]           golden-vector check
@@ -77,7 +79,7 @@ USAGE:
                     [--poisson] [--seed N] [--timelines FILE.csv]
   agentsrv repro    [--out DIR] [--exp table1|table2|fig2a|fig2b|fig2c|
                                        fig2d|overload|spike|dominance|
-                                       scaling|economics|all]
+                                       scaling|economics|serving|all]
   agentsrv serve    [--artifacts DIR] [--policy NAME] [--requests N]
                     [--workflows N] [--seed N]
   agentsrv verify   [--artifacts DIR]
@@ -264,6 +266,21 @@ fn cmd_repro(opts: &Opts) -> Result<()> {
                          r.mean_warm_fraction);
             }
         }
+        "serving" => {
+            println!("{:<14} {:>11} {:>13} {:>11} {:>11} {:>9}",
+                     "policy", "fluid(s)", "serving(s)", "p99(s)",
+                     "mean batch", "windows");
+            for r in repro::serving_experiment(100.0) {
+                println!("{:<14} {:>11.1} {:>13.1} {:>11.1} {:>11.2} \
+                          {:>9}",
+                         r.policy, r.fluid_mean_latency_s,
+                         r.serving_mean_latency_s, r.serving_p99_s,
+                         r.serving_mean_batch, r.serving_windows);
+            }
+            println!("\n(fluid = §IV.B backlog estimator; serving = \
+                      per-request sojourn through the queue path the \
+                      threaded server shares via ServingCore)");
+        }
         other => return Err(Error::Config(format!(
             "unknown experiment '{other}'"))),
     }
@@ -333,11 +350,12 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
     let stats = server.shutdown();
     println!("\n{:<14} {:>9} {:>12} {:>12} {:>10} {:>10}", "agent",
              "completed", "p50", "p99", "mean batch", "gpu share");
-    for (name, completed, p50, p99, batch, share) in &stats.per_agent {
-        println!("{name:<14} {completed:>9} {:>12} {:>12} {batch:>10.2} \
-                  {share:>10.3}",
-                 format!("{:.2}ms", p50 * 1e3),
-                 format!("{:.2}ms", p99 * 1e3));
+    for a in &stats.per_agent {
+        println!("{:<14} {:>9} {:>12} {:>12} {:>10.2} {:>10.3}",
+                 a.name, a.completed,
+                 format!("{:.2}ms", a.p50_s * 1e3),
+                 format!("{:.2}ms", a.p99_s * 1e3),
+                 a.mean_batch, a.gpu_share);
     }
     println!("\ntotal completed: {}   errors: {}   gpu busy: {:.2}s",
              stats.total_completed, stats.total_errors,

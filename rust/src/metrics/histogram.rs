@@ -5,7 +5,9 @@
 //! serving-latency numbers without storing samples.
 
 /// Geometric-bucket histogram over (0, max] with saturating edges.
-#[derive(Debug, Clone)]
+/// `PartialEq` is exact (bucket counts and geometry), which is what the
+/// serving-replay determinism properties compare.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Histogram {
     min_value: f64,
     growth: f64,

@@ -8,6 +8,7 @@
 mod economics;
 mod experiments;
 mod robustness;
+mod serving;
 
 pub use economics::{coldstart_axis, cost_grid, economics_experiment,
                     idle_burst_config, idle_timeout_axis, pricing_axis,
@@ -20,6 +21,8 @@ pub use robustness::{cluster_grid, dominance_experiment,
                      stress_sweep, synthetic_registry, trace_grid,
                      DominanceReport, OverloadReport, ScalingPoint,
                      SpikeReport};
+pub use serving::{serving_experiment, serving_grid,
+                  ServingComparisonRow};
 
 use std::path::Path;
 
@@ -31,7 +34,8 @@ use crate::metrics::export;
 /// Produces: `table1.csv`, `table2.csv`, `fig2a_latency.csv`,
 /// `fig2b_throughput.csv`, `fig2c_allocation.csv`, `fig2d_cost_perf.csv`,
 /// `robustness_overload.csv`, `robustness_spike.csv`,
-/// `robustness_dominance.csv`, `allocator_scaling.csv`, `economics.csv`.
+/// `robustness_dominance.csv`, `allocator_scaling.csv`, `economics.csv`,
+/// `serving.csv`.
 pub fn write_all(dir: &Path) -> Result<()> {
     std::fs::create_dir_all(dir)?;
 
@@ -150,6 +154,19 @@ pub fn write_all(dir: &Path) -> Result<()> {
         ])).collect::<Vec<_>>(),
     )?;
 
+    // Queue-granularity serving vs fluid-model latency, per policy.
+    let sv = serving_experiment(100.0);
+    export::table_csv(
+        &dir.join("serving.csv"),
+        &["policy", "fluid_mean_latency_s", "serving_mean_latency_s",
+          "serving_p99_s", "serving_mean_batch", "serving_windows"],
+        &sv.iter().map(|r| (r.policy.clone(), vec![
+            r.fluid_mean_latency_s, r.serving_mean_latency_s,
+            r.serving_p99_s, r.serving_mean_batch,
+            r.serving_windows as f64,
+        ])).collect::<Vec<_>>(),
+    )?;
+
     Ok(())
 }
 
@@ -165,7 +182,8 @@ mod tests {
                   "fig2b_throughput.csv", "fig2c_allocation.csv",
                   "fig2d_cost_perf.csv", "robustness_overload.csv",
                   "robustness_spike.csv", "robustness_dominance.csv",
-                  "allocator_scaling.csv", "economics.csv"] {
+                  "allocator_scaling.csv", "economics.csv",
+                  "serving.csv"] {
             let p = dir.path().join(f);
             assert!(p.exists(), "{f} missing");
             assert!(std::fs::metadata(&p).unwrap().len() > 0, "{f} empty");

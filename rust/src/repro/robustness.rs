@@ -220,9 +220,26 @@ pub fn stress_grid(steps: u64, seeds: &[u64]) -> Vec<Scenario> {
 /// (the agents cannot be placed, e.g. one GPU at capacity 0.6) are
 /// skipped. Each migration-enabled combo also gets a `/skew` variant
 /// under 90 % single-agent dominance, so the migration path actually
-/// fires inside the grid.
+/// fires inside the grid. Mixed per-GPU capacities (heterogeneous
+/// devices) are a further axis, labelled
+/// `"cluster/hetero/<cap>+<cap>+..."`.
 pub fn cluster_grid(steps: u64) -> Vec<SweepCell> {
     let mut cells = Vec::new();
+    // Heterogeneous-capacity cells: one large device plus smaller ones
+    // (feasibility-checked like the uniform axis).
+    for caps in [vec![1.0, 0.5], vec![1.0, 0.5, 0.25], vec![0.6, 0.4]] {
+        let mut cfg = SimConfig::paper();
+        cfg.steps = steps;
+        let label = format!(
+            "cluster/hetero/{}",
+            caps.iter().map(|c| format!("{c}"))
+                .collect::<Vec<_>>().join("+"));
+        if let Ok(cell) = ClusterScenario::heterogeneous(
+            label, cfg, AgentRegistry::paper(), caps, None)
+        {
+            cells.push(SweepCell::Cluster(cell));
+        }
+    }
     for n_gpus in [1usize, 2, 4] {
         for capacity in [0.6, 1.0] {
             for (mig_name, migration) in [
@@ -282,17 +299,19 @@ pub fn trace_grid(steps: u64, seeds: &[u64]) -> Vec<SweepCell> {
     cells
 }
 
-/// The whole §V.B + §VI + economics evaluation surface as one
+/// The whole §V.B + §VI + economics + serving evaluation surface as one
 /// heterogeneous grid: the single-GPU stress grid, the cluster grid,
-/// the trace-replay cells, and the serverless-economics cost grid
-/// ([`crate::repro::cost_grid`]), mixed for one `run_sweep` call
-/// through one worker pool.
+/// the trace-replay cells, the serverless-economics cost grid
+/// ([`crate::repro::cost_grid`]), and the serving-layer queue-path grid
+/// ([`crate::repro::serving_grid`], 10 virtual seconds per cell), mixed
+/// for one `run_sweep` call through one worker pool.
 pub fn stress_sweep(steps: u64, seeds: &[u64]) -> Vec<SweepCell> {
     let mut cells: Vec<SweepCell> = stress_grid(steps, seeds)
         .into_iter().map(SweepCell::Single).collect();
     cells.extend(cluster_grid(steps));
     cells.extend(trace_grid(steps, seeds));
     cells.extend(crate::repro::cost_grid(steps, seeds));
+    cells.extend(crate::repro::serving_grid(10.0, seeds));
     cells
 }
 
@@ -457,9 +476,11 @@ mod tests {
         // 1.0): skipped, not panicked.
         assert!(!labels.iter().any(|l| l.starts_with("cluster/1gpu/cap0.6")),
                 "{labels:?}");
-        // Feasible axes are present, including the skewed migration cell.
+        // Feasible axes are present, including the skewed migration cell
+        // and the heterogeneous-capacity cells.
         for want in ["cluster/1gpu/cap1/nomig", "cluster/2gpu/cap0.6/mig",
-                     "cluster/4gpu/cap1/mig/skew"] {
+                     "cluster/4gpu/cap1/mig/skew", "cluster/hetero/1+0.5",
+                     "cluster/hetero/0.6+0.4"] {
             assert!(labels.contains(&want), "missing {want} in {labels:?}");
         }
         // Every cell is a cluster cell and actually runs.
@@ -474,7 +495,7 @@ mod tests {
     }
 
     #[test]
-    fn stress_sweep_mixes_all_four_cell_kinds() {
+    fn stress_sweep_mixes_all_five_cell_kinds() {
         let seeds = [1u64, 2];
         let cells = stress_sweep(10, &seeds);
         let singles = cells.iter()
@@ -485,13 +506,19 @@ mod tests {
             .filter(|c| matches!(c, SweepCell::Trace(_))).count();
         let costs = cells.iter()
             .filter(|c| matches!(c, SweepCell::Cost(_))).count();
+        let servings = cells.iter()
+            .filter(|c| matches!(c, SweepCell::Serving(_))).count();
         assert_eq!(singles, stress_grid(10, &seeds).len());
         assert_eq!(clusters, cluster_grid(10).len());
         assert_eq!(traces,
                    PolicyKind::all().len() * seeds.len());
         assert_eq!(costs, crate::repro::cost_grid(10, &seeds).len());
-        assert_eq!(cells.len(), singles + clusters + traces + costs);
-        assert!(singles > 0 && clusters > 0 && traces > 0 && costs > 0);
+        assert_eq!(servings,
+                   crate::repro::serving_grid(10.0, &seeds).len());
+        assert_eq!(cells.len(),
+                   singles + clusters + traces + costs + servings);
+        assert!(singles > 0 && clusters > 0 && traces > 0 && costs > 0
+                && servings > 0);
     }
 
     #[test]

@@ -1,0 +1,217 @@
+//! Serving-granularity experiments: the `server::` queue path replayed
+//! through the sweep engine.
+//!
+//! Two drivers:
+//!
+//! * [`serving_grid`] — the serving-layer evaluation grid as
+//!   [`SweepCell::Serving`] cells: policy × allocation window ×
+//!   max-batch × workload shape × seed, plus recorded-trace replay
+//!   cells (one paper-Poisson recording per seed, shared across
+//!   policies);
+//! * [`serving_experiment`] — the queue-granularity latency contrast:
+//!   per policy, the fluid-model estimator (§IV.B) versus the serving
+//!   simulator's measured per-request sojourn times (mean and p99) over
+//!   the same §IV.A workload, both replayed through one `run_sweep`
+//!   pool.
+
+use std::sync::Arc;
+
+use crate::agents::AgentRegistry;
+use crate::allocator::PolicyKind;
+use crate::server::ServingConfig;
+use crate::sim::batch::{default_workers, run_sweep, Scenario,
+                        ServingScenario, SweepCell};
+use crate::sim::SimConfig;
+use crate::workload::trace::Trace;
+use crate::workload::{ArrivalProcess, WorkloadKind};
+
+/// The workload-shape axis of the serving grid: steady Poisson plus a
+/// mid-run 10× coordinator spike (the §V.B reallocation probe), both at
+/// serving granularity.
+fn serving_shapes(duration_s: f64, arrival_dt_s: f64)
+                  -> Vec<(&'static str, WorkloadKind)> {
+    let ticks = (duration_s / arrival_dt_s).round().max(1.0) as u64;
+    vec![
+        ("steady", WorkloadKind::Steady),
+        ("spike10x", WorkloadKind::Spike {
+            agent: 0,
+            factor: 10.0,
+            start: ticks * 2 / 5,
+            end: ticks * 3 / 5,
+        }),
+    ]
+}
+
+/// The serving-layer sweep grid: every built-in policy × allocation
+/// window {50 ms, 200 ms} × max batch {1, 8} × workload shape × seed,
+/// each cell labelled
+/// `"serving/<policy>/w<ms>ms/b<batch>/<shape>/seed<seed>"`, plus one
+/// recorded paper-Poisson trace per seed replayed under every policy
+/// (`"serving/<policy>/trace/seed<seed>"`; the recording is shared, not
+/// copied, across its policies).
+pub fn serving_grid(duration_s: f64, seeds: &[u64]) -> Vec<SweepCell> {
+    let windows_ms = [50u64, 200];
+    let max_batches = [1usize, 8];
+    let base = ServingConfig::paper();
+    let shapes = serving_shapes(duration_s, base.arrival_dt_s);
+    let mut cells = Vec::new();
+    for policy in PolicyKind::all() {
+        for &window_ms in &windows_ms {
+            for &max_batch in &max_batches {
+                for (shape, kind) in &shapes {
+                    for &seed in seeds {
+                        let mut cfg = base.clone();
+                        cfg.duration_s = duration_s;
+                        cfg.alloc_window_s = window_ms as f64 / 1e3;
+                        cfg.max_batch = max_batch;
+                        cfg.workload_kind = kind.clone();
+                        cfg.seed = seed;
+                        cells.push(SweepCell::Serving(
+                            ServingScenario::new(
+                                format!("serving/{}/w{window_ms}ms/\
+                                         b{max_batch}/{shape}/seed{seed}",
+                                        policy.name()),
+                                cfg, AgentRegistry::paper(),
+                                policy.clone())));
+                    }
+                }
+            }
+        }
+    }
+    // Recorded-trace replays: one recording per seed, spanning the same
+    // duration at one-second ticks, shared across the policies.
+    let trace_steps = duration_s.round().max(1.0) as u64;
+    for &seed in seeds {
+        let trace = Arc::new(Trace::paper_poisson(trace_steps, seed));
+        for policy in PolicyKind::all() {
+            let mut cfg = base.clone();
+            cfg.duration_s = duration_s;
+            cells.push(SweepCell::Serving(ServingScenario::from_trace(
+                format!("serving/{}/trace/seed{seed}", policy.name()),
+                cfg, AgentRegistry::paper(), Arc::clone(&trace),
+                policy)));
+        }
+    }
+    cells
+}
+
+/// One row of the fluid-vs-serving latency contrast (per policy).
+#[derive(Debug, Clone)]
+pub struct ServingComparisonRow {
+    /// Policy name.
+    pub policy: String,
+    /// Fluid-model mean latency (the §IV.B backlog estimator, s).
+    pub fluid_mean_latency_s: f64,
+    /// Serving-layer mean per-request sojourn time (s).
+    pub serving_mean_latency_s: f64,
+    /// Serving-layer mean per-agent p99 sojourn time (s).
+    pub serving_p99_s: f64,
+    /// Mean executed batch size at the serving layer.
+    pub serving_mean_batch: f64,
+    /// Allocation windows the serving run closed.
+    pub serving_windows: u64,
+}
+
+/// The queue-granularity latency experiment: for every built-in policy,
+/// one fluid [`Scenario`] (§IV.B estimator over `duration_s` one-second
+/// steps, Poisson arrivals) and one [`ServingScenario`] of the same
+/// workload, all replayed through one `run_sweep` pool. The fluid
+/// estimator reads backlog-per-service-rate; the serving layer measures
+/// each request's enqueue→completion sojourn through the real queue
+/// path — the contrast the paper's 85 % headline actually lives in.
+pub fn serving_experiment(duration_s: f64) -> Vec<ServingComparisonRow> {
+    let steps = duration_s.round().max(1.0) as u64;
+    let mut cells = Vec::new();
+    for policy in PolicyKind::all() {
+        let mut fluid_cfg = SimConfig::paper();
+        fluid_cfg.steps = steps;
+        fluid_cfg.arrival_process = ArrivalProcess::Poisson;
+        cells.push(SweepCell::Single(Scenario::new(
+            format!("fluid/{}", policy.name()), fluid_cfg,
+            AgentRegistry::paper(), policy.clone())));
+
+        let mut serving_cfg = ServingConfig::paper();
+        serving_cfg.duration_s = duration_s;
+        cells.push(SweepCell::Serving(ServingScenario::new(
+            format!("serving/{}", policy.name()), serving_cfg,
+            AgentRegistry::paper(), policy)));
+    }
+    let runs = run_sweep(&cells, default_workers());
+    runs.chunks(2).map(|pair| {
+        let fluid = pair[0].result.as_sim().expect("fluid cell first");
+        let serving = pair[1].result.as_serving()
+            .expect("serving cell second");
+        ServingComparisonRow {
+            policy: serving.policy.clone(),
+            fluid_mean_latency_s: fluid.mean_latency(),
+            serving_mean_latency_s: serving.mean_latency(),
+            serving_p99_s: serving.mean_p99(),
+            serving_mean_batch: serving.mean_batch(),
+            serving_windows: serving.windows,
+        }
+    }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serving_grid_covers_every_axis_with_unique_labels() {
+        let seeds = [1u64, 2];
+        let cells = serving_grid(3.0, &seeds);
+        let policies = PolicyKind::all().len();
+        // policy × window{2} × batch{2} × shape{2} × seed, plus one
+        // trace cell per policy × seed.
+        let expected = policies * 2 * 2 * 2 * seeds.len()
+            + policies * seeds.len();
+        assert_eq!(cells.len(), expected);
+        let mut labels: Vec<&str> =
+            cells.iter().map(SweepCell::label).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), expected, "labels must be unique");
+        assert!(cells.iter().any(|c| c.label()
+                == "serving/adaptive/w50ms/b8/steady/seed1"));
+        assert!(cells.iter().any(|c| c.label()
+                == "serving/round_robin/trace/seed2"));
+        assert!(cells.iter()
+                .all(|c| matches!(c, SweepCell::Serving(_))));
+    }
+
+    #[test]
+    fn serving_grid_runs_deterministically_through_the_pool() {
+        let cells = serving_grid(2.0, &[42]);
+        let one = run_sweep(&cells, 1);
+        let many = run_sweep(&cells, 8);
+        for (a, b) in one.iter().zip(&many) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.result.as_serving().unwrap(),
+                       b.result.as_serving().unwrap(), "{}", a.label);
+        }
+        // Every cell actually served traffic.
+        assert!(one.iter().all(|r| {
+            r.result.as_serving().unwrap().total_completed > 0
+        }));
+    }
+
+    #[test]
+    fn serving_experiment_pairs_every_policy() {
+        let rows = serving_experiment(5.0);
+        assert_eq!(rows.len(), PolicyKind::all().len());
+        for row in &rows {
+            assert!(row.fluid_mean_latency_s >= 0.0);
+            assert!(row.serving_mean_latency_s > 0.0, "{}", row.policy);
+            assert!(row.serving_p99_s >= row.serving_mean_latency_s * 0.5,
+                    "{}: p99 {} vs mean {}", row.policy,
+                    row.serving_p99_s, row.serving_mean_latency_s);
+            assert!(row.serving_windows > 0, "{}", row.policy);
+            assert!(row.serving_mean_batch >= 1.0, "{}", row.policy);
+        }
+        let names: Vec<&str> =
+            rows.iter().map(|r| r.policy.as_str()).collect();
+        let expected: Vec<&str> = PolicyKind::all().iter()
+            .map(PolicyKind::name).collect();
+        assert_eq!(names, expected);
+    }
+}

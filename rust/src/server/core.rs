@@ -1,0 +1,426 @@
+//! The clock-abstracted serving core: one scheduling state machine for
+//! both the threaded PJRT server and the virtual-time simulator.
+//!
+//! [`ServingCore`] owns everything the serving loop *decides and
+//! accounts* — windowed arrival stats feeding the [`AllocationPolicy`],
+//! the [`GpuGovernor`] stride pick, per-agent latency histograms, batch
+//! and GPU-time counters — while staying agnostic about *when* things
+//! happen ([`Clock`]) and *how* a batch runs ([`Executor`]). The
+//! threaded [`AgentServer`](crate::server::AgentServer) drives it with
+//! wall-clock `Instant`s and the PJRT engine; the deterministic
+//! [`ServingSimulator`](crate::server::ServingSimulator) drives the
+//! identical core in virtual time with a profile-derived cost model.
+
+use crate::agents::AgentRegistry;
+use crate::allocator::{AllocContext, AllocationPolicy};
+use crate::metrics::Histogram;
+use crate::server::GpuGovernor;
+
+/// A source of timestamps the core can subtract. The core never *reads*
+/// a clock — drivers hand it instants — so the same scheduling code runs
+/// against wall time and virtual time.
+pub trait Clock {
+    /// Timestamp type the driver supplies.
+    type Instant: Copy + std::fmt::Debug;
+
+    /// Seconds from `earlier` to `later` (saturating at zero).
+    fn seconds_between(earlier: &Self::Instant, later: &Self::Instant)
+                       -> f64;
+}
+
+/// Wall-clock time: instants are `std::time::Instant`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WallClock;
+
+impl Clock for WallClock {
+    type Instant = std::time::Instant;
+
+    fn seconds_between(earlier: &Self::Instant, later: &Self::Instant)
+                       -> f64 {
+        later.duration_since(*earlier).as_secs_f64()
+    }
+}
+
+/// Virtual time: instants are seconds since simulation start.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VirtualClock;
+
+impl Clock for VirtualClock {
+    type Instant = f64;
+
+    fn seconds_between(earlier: &Self::Instant, later: &Self::Instant)
+                       -> f64 {
+        (later - earlier).max(0.0)
+    }
+}
+
+/// Runs one dynamic batch for an agent. Returns the service seconds the
+/// governor is charged (measured PJRT wall time on hardware, cost-model
+/// time in the simulator) alongside the execution outcome.
+pub trait Executor {
+    /// One queued request as the driver represents it (token rows on the
+    /// server, enqueue timestamps in the simulator).
+    type Request;
+    /// What a successful batch produces (next tokens on hardware,
+    /// nothing in the simulator).
+    type Output;
+
+    /// Execute one batch for `agent`.
+    fn execute(&mut self, agent: usize, batch: &[Self::Request])
+               -> (f64, crate::error::Result<Self::Output>);
+}
+
+/// One agent's serving statistics row: the named replacement for the old
+/// opaque `(name, completed, p50, p99, mean batch, gpu share)` 6-tuple.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgentStat {
+    /// Agent name.
+    pub name: String,
+    /// Requests completed.
+    pub completed: u64,
+    /// Median request latency (seconds).
+    pub p50_s: f64,
+    /// 99th-percentile request latency (seconds).
+    pub p99_s: f64,
+    /// Mean executed batch size.
+    pub mean_batch: f64,
+    /// Fraction of total GPU busy time this agent consumed.
+    pub gpu_share: f64,
+}
+
+/// Per-agent counters the core accumulates.
+#[derive(Debug, Clone, PartialEq)]
+struct AgentCounters {
+    completed: u64,
+    errors: u64,
+    latency: Histogram,
+    latency_sum_s: f64,
+    batch_sum: u64,
+    batches: u64,
+    gpu_seconds: f64,
+}
+
+impl AgentCounters {
+    fn new() -> Self {
+        AgentCounters {
+            completed: 0,
+            errors: 0,
+            latency: Histogram::latency_seconds(),
+            latency_sum_s: 0.0,
+            batch_sum: 0,
+            batches: 0,
+            gpu_seconds: 0.0,
+        }
+    }
+}
+
+/// The serving scheduling core (window stats → policy → governor pick →
+/// batch accounting), generic over the [`Clock`] supplying instants and
+/// the policy type (`Box<dyn AllocationPolicy>` on the server,
+/// [`PolicyKind`](crate::allocator::PolicyKind) or `&mut P` in sweeps).
+///
+/// The driver owns the queues and the executor; the core owns every
+/// decision in between:
+///
+/// 1. [`window_due`](ServingCore::window_due) /
+///    [`reallocate`](ServingCore::reallocate) — close an allocation
+///    window, feed observed rates + depths to the policy, re-weight the
+///    governor;
+/// 2. [`pick`](ServingCore::pick) — idle→busy wakeup snaps, then the
+///    stride-scheduled agent choice;
+/// 3. [`record_batch`](ServingCore::record_batch) /
+///    [`record_completion`](ServingCore::record_completion) /
+///    [`record_failed_batch`](ServingCore::record_failed_batch) —
+///    governor charge and per-agent stats.
+pub struct ServingCore<C: Clock, P: AllocationPolicy> {
+    registry: AgentRegistry,
+    policy: P,
+    governor: GpuGovernor,
+    alloc_window_s: f64,
+    capacity: f64,
+    max_batches: Vec<usize>,
+    alloc: Vec<f64>,
+    last_alloc: Vec<f64>,
+    rates: Vec<f64>,
+    depths: Vec<f64>,
+    prev_backlogged: Vec<bool>,
+    window_start: Option<C::Instant>,
+    step: u64,
+    stats: Vec<AgentCounters>,
+    trajectory: Option<Vec<Vec<f64>>>,
+}
+
+impl<C: Clock, P: AllocationPolicy> ServingCore<C, P> {
+    /// Build a core over a registry. `max_batches[i]` caps agent `i`'s
+    /// dynamic batches (the largest compiled variant on hardware). The
+    /// policy is `reset()` so instances can be reused across runs. With
+    /// `record_trajectory`, every window's allocation vector is kept.
+    pub fn new(registry: AgentRegistry, mut policy: P, alloc_window_s: f64,
+               capacity: f64, max_batches: Vec<usize>,
+               record_trajectory: bool) -> Self {
+        assert_eq!(max_batches.len(), registry.len(),
+                   "max_batches must cover every agent");
+        policy.reset();
+        let n = registry.len();
+        ServingCore {
+            governor: GpuGovernor::new(n),
+            alloc: vec![1.0 / n.max(1) as f64; n],
+            last_alloc: vec![0.0; n],
+            rates: vec![0.0; n],
+            depths: vec![0.0; n],
+            prev_backlogged: vec![false; n],
+            window_start: None,
+            step: 0,
+            stats: (0..n).map(|_| AgentCounters::new()).collect(),
+            trajectory: record_trajectory.then(Vec::new),
+            registry,
+            policy,
+            alloc_window_s,
+            capacity,
+            max_batches,
+        }
+    }
+
+    /// Number of agents served.
+    pub fn agent_count(&self) -> usize {
+        self.registry.len()
+    }
+
+    /// Dynamic-batch cap for one agent.
+    pub fn max_batch(&self, agent: usize) -> usize {
+        self.max_batches[agent]
+    }
+
+    /// Name of the driving policy.
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// True when `now` closes the current allocation window. The first
+    /// call anchors the window and returns false.
+    pub fn window_due(&mut self, now: C::Instant) -> bool {
+        match self.window_start {
+            None => {
+                self.window_start = Some(now);
+                false
+            }
+            Some(start) => {
+                C::seconds_between(&start, &now) >= self.alloc_window_s
+            }
+        }
+    }
+
+    /// Close the window at `now`: feed the policy the observed arrival
+    /// rates (`window_arrivals[i]` requests over the window) and queue
+    /// depths, re-weight the governor, and open the next window.
+    pub fn reallocate(&mut self, now: C::Instant, window_arrivals: &[u64],
+                      queue_depths: &[f64]) {
+        let start = self.window_start.unwrap_or(now);
+        let secs = C::seconds_between(&start, &now).max(1e-9);
+        for i in 0..self.registry.len() {
+            self.rates[i] = window_arrivals[i] as f64 / secs;
+            self.depths[i] = queue_depths[i];
+        }
+        let ctx = AllocContext {
+            registry: &self.registry,
+            arrival_rates: &self.rates,
+            queue_depths: &self.depths,
+            step: self.step,
+            capacity: self.capacity,
+        };
+        self.policy.allocate(&ctx, &mut self.alloc);
+        self.governor.set_weights(&self.alloc);
+        self.governor.rebase();
+        self.last_alloc.copy_from_slice(&self.alloc);
+        if let Some(traj) = self.trajectory.as_mut() {
+            traj.push(self.alloc.clone());
+        }
+        self.window_start = Some(now);
+        self.step += 1;
+    }
+
+    /// Snap newly-backlogged agents forward (no catch-up monopoly), then
+    /// pick the backlogged agent with the smallest stride pass.
+    pub fn pick(&mut self, backlogged: &[bool]) -> Option<usize> {
+        debug_assert_eq!(backlogged.len(), self.prev_backlogged.len());
+        for i in 0..backlogged.len() {
+            if backlogged[i] && !self.prev_backlogged[i] {
+                self.governor.on_wakeup(i, backlogged);
+            }
+        }
+        self.prev_backlogged.copy_from_slice(backlogged);
+        self.governor.pick(backlogged)
+    }
+
+    /// Account one successfully executed batch: charge the governor
+    /// `service_s / g` and update the batch counters.
+    pub fn record_batch(&mut self, agent: usize, batch_size: usize,
+                        service_s: f64) {
+        self.governor.charge(agent, service_s);
+        let st = &mut self.stats[agent];
+        st.batches += 1;
+        st.batch_sum += batch_size as u64;
+        st.gpu_seconds += service_s;
+    }
+
+    /// Account one failed batch: the GPU time is still charged to the
+    /// governor (it was consumed), the requests count as errors.
+    pub fn record_failed_batch(&mut self, agent: usize, batch_size: usize,
+                               service_s: f64) {
+        self.governor.charge(agent, service_s);
+        self.stats[agent].errors += batch_size as u64;
+    }
+
+    /// Record one completed request's end-to-end latency.
+    pub fn record_completion(&mut self, agent: usize, latency_s: f64) {
+        let st = &mut self.stats[agent];
+        st.completed += 1;
+        st.latency_sum_s += latency_s;
+        st.latency.record(latency_s);
+    }
+
+    /// The allocation produced by the last closed window (zeros before
+    /// the first window closes, matching the legacy server).
+    pub fn last_allocation(&self) -> &[f64] {
+        &self.last_alloc
+    }
+
+    /// Allocation windows closed so far.
+    pub fn windows_closed(&self) -> u64 {
+        self.step
+    }
+
+    /// Take the recorded allocation trajectory (empty unless the core
+    /// was built with `record_trajectory`).
+    pub fn take_trajectory(&mut self) -> Vec<Vec<f64>> {
+        self.trajectory.take().unwrap_or_default()
+    }
+
+    /// Per-agent statistics rows.
+    pub fn agent_stats(&self) -> Vec<AgentStat> {
+        let total_gpu: f64 = self.stats.iter()
+            .map(|s| s.gpu_seconds).sum::<f64>().max(1e-12);
+        self.stats.iter().enumerate().map(|(i, s)| AgentStat {
+            name: self.registry.profile(i).name.clone(),
+            completed: s.completed,
+            p50_s: s.latency.p50(),
+            p99_s: s.latency.p99(),
+            mean_batch: if s.batches == 0 {
+                0.0
+            } else {
+                s.batch_sum as f64 / s.batches as f64
+            },
+            gpu_share: s.gpu_seconds / total_gpu,
+        }).collect()
+    }
+
+    /// Exact per-agent mean latency (seconds; 0 for idle agents).
+    pub fn mean_latencies(&self) -> Vec<f64> {
+        self.stats.iter().map(|s| {
+            if s.completed == 0 {
+                0.0
+            } else {
+                s.latency_sum_s / s.completed as f64
+            }
+        }).collect()
+    }
+
+    /// Per-agent latency histograms (cloned snapshots).
+    pub fn latency_histograms(&self) -> Vec<Histogram> {
+        self.stats.iter().map(|s| s.latency.clone()).collect()
+    }
+
+    /// Total completed requests.
+    pub fn total_completed(&self) -> u64 {
+        self.stats.iter().map(|s| s.completed).sum()
+    }
+
+    /// Total failed requests.
+    pub fn total_errors(&self) -> u64 {
+        self.stats.iter().map(|s| s.errors).sum()
+    }
+
+    /// Total GPU busy seconds across agents.
+    pub fn gpu_busy_seconds(&self) -> f64 {
+        self.stats.iter().map(|s| s.gpu_seconds).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocator::PolicyKind;
+
+    fn core() -> ServingCore<VirtualClock, PolicyKind> {
+        ServingCore::new(AgentRegistry::paper(), PolicyKind::adaptive(),
+                         0.1, 1.0, vec![8; 4], true)
+    }
+
+    #[test]
+    fn first_window_anchors_then_rolls_over() {
+        let mut c = core();
+        assert!(!c.window_due(0.0), "first call only anchors");
+        assert!(!c.window_due(0.05));
+        assert!(c.window_due(0.1));
+        c.reallocate(0.1, &[8, 4, 4, 2], &[0.0; 4]);
+        assert_eq!(c.windows_closed(), 1);
+        assert!(!c.window_due(0.15), "window re-anchored at rollover");
+        // The published allocation respects capacity.
+        let total: f64 = c.last_allocation().iter().sum();
+        assert!(total > 0.0 && total <= 1.0 + 1e-9, "{total}");
+    }
+
+    #[test]
+    fn last_allocation_is_zero_before_the_first_window() {
+        let c = core();
+        assert_eq!(c.last_allocation(), &[0.0; 4]);
+    }
+
+    #[test]
+    fn batch_and_completion_accounting_roll_up() {
+        let mut c = core();
+        c.record_batch(0, 4, 0.02);
+        c.record_batch(0, 2, 0.01);
+        c.record_batch(1, 1, 0.01);
+        for lat in [0.05, 0.06, 0.07] {
+            c.record_completion(0, lat);
+        }
+        c.record_failed_batch(1, 3, 0.005);
+        assert_eq!(c.total_completed(), 3);
+        assert_eq!(c.total_errors(), 3);
+        assert!((c.gpu_busy_seconds() - 0.04).abs() < 1e-12);
+        let stats = c.agent_stats();
+        assert_eq!(stats[0].name, "coordinator");
+        assert_eq!(stats[0].completed, 3);
+        assert!((stats[0].mean_batch - 3.0).abs() < 1e-12);
+        assert!((stats[0].gpu_share - 0.75).abs() < 1e-9);
+        assert!((c.mean_latencies()[0] - 0.06).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trajectory_records_one_row_per_window() {
+        let mut c = core();
+        c.window_due(0.0);
+        c.reallocate(0.1, &[8, 4, 4, 2], &[0.0; 4]);
+        c.reallocate(0.2, &[8, 4, 4, 2], &[1.0; 4]);
+        let traj = c.take_trajectory();
+        assert_eq!(traj.len(), 2);
+        assert_eq!(traj[1].len(), 4);
+    }
+
+    #[test]
+    fn pick_skips_idle_and_snaps_wakers() {
+        let mut c = core();
+        c.window_due(0.0);
+        c.reallocate(0.1, &[10, 0, 0, 0], &[5.0, 0.0, 0.0, 0.0]);
+        // Only the coordinator is backlogged.
+        assert_eq!(c.pick(&[true, false, false, false]), Some(0));
+        for _ in 0..100 {
+            c.record_batch(0, 8, 0.01);
+        }
+        // NLP wakes: the snap keeps it from monopolizing, but it is
+        // immediately schedulable.
+        let picked = c.pick(&[true, true, false, false]).unwrap();
+        assert!(picked < 2);
+    }
+}

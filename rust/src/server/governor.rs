@@ -174,4 +174,69 @@ mod tests {
         gov.rebase();
         assert_eq!(gov.pick(&[true, true]), Some(0));
     }
+
+    #[test]
+    fn compute_time_shares_converge_with_heterogeneous_batch_costs() {
+        // Agents whose batches consume different GPU time: over a long
+        // window the governor equalizes *compute time* — not batch
+        // counts — to the allocated g_i. This is the stated contract the
+        // serving core relies on.
+        let weights = [0.6, 0.4];
+        let costs = [0.004, 0.001]; // agent 0's batches are 4x heavier
+        let mut gov = GpuGovernor::new(2);
+        gov.set_weights(&weights);
+        let backlogged = [true, true];
+        let mut time = [0.0f64; 2];
+        for _ in 0..200_000 {
+            let a = gov.pick(&backlogged).unwrap();
+            gov.charge(a, costs[a]);
+            time[a] += costs[a];
+        }
+        let total: f64 = time.iter().sum();
+        for (t, w) in time.iter().zip(weights) {
+            assert!((t / total - w).abs() < 0.01,
+                    "time shares {time:?} vs weights {weights:?}");
+        }
+    }
+
+    #[test]
+    fn rebase_is_a_noop_below_threshold_and_keeps_gaps_above_it() {
+        let mut gov = GpuGovernor::new(2);
+        gov.set_weights(&[0.5, 0.5]);
+        gov.charge(0, 10.0); // pass 20
+        gov.charge(1, 30.0); // pass 60
+        gov.rebase(); // min pass far below 1e6: untouched
+        assert_eq!(gov.pick(&[true, true]), Some(0));
+        // Push both passes past the re-anchor threshold with agent 1 now
+        // behind; rebase must preserve that relative ordering too.
+        gov.charge(0, 2e7); // pass 20 + 4e7
+        gov.charge(1, 1e7); // pass 60 + 2e7
+        gov.rebase();
+        assert_eq!(gov.pick(&[true, true]), Some(1));
+    }
+
+    #[test]
+    fn wakeup_does_not_starve_the_newly_backlogged_agent() {
+        // The forward snap exists to stop catch-up monopoly, but it must
+        // leave the woken agent fully schedulable: from the wakeup on it
+        // receives its weight's share, no more and no less.
+        let mut gov = GpuGovernor::new(3);
+        gov.set_weights(&[0.5, 0.3, 0.2]);
+        let mut backlogged = [true, true, false];
+        for _ in 0..5_000 {
+            let a = gov.pick(&backlogged).unwrap();
+            gov.charge(a, 0.01);
+        }
+        backlogged[2] = true;
+        gov.on_wakeup(2, &backlogged);
+        let mut runs = [0usize; 3];
+        for _ in 0..5_000 {
+            let a = gov.pick(&backlogged).unwrap();
+            runs[a] += 1;
+            gov.charge(a, 0.01);
+        }
+        let share = runs[2] as f64 / 5_000.0;
+        assert!(share > 0.15, "woken agent starved: {runs:?}");
+        assert!(share < 0.30, "woken agent over-served: {runs:?}");
+    }
 }

@@ -1,32 +1,53 @@
 //! The serving stack: request router, per-agent queues, dynamic batcher,
-//! and the weighted-share GPU governor driven by the allocation policy.
+//! and the clock-abstracted scheduling core shared by the threaded PJRT
+//! server and the deterministic serving simulator.
 //!
 //! Architecture (no async runtime — the image is offline, and a dedicated
-//! serving thread models the serialized GPU command queue faithfully):
+//! serving thread models the serialized GPU command queue faithfully).
+//! Since the core/shell split, every scheduling decision lives in
+//! [`ServingCore`]; the two drivers differ only in their [`Clock`] and
+//! [`Executor`]:
 //!
 //! ```text
-//!  client threads ──submit()──► per-agent FIFO queues (Mutex+Condvar)
-//!                                        │
-//!                        serving thread (owns InferenceEngine):
-//!                          1. window stats → AllocationPolicy → g_i
-//!                          2. GpuGovernor (stride scheduling over g_i)
-//!                             picks the next agent with backlog
-//!                          3. dynamic batcher pops ≤ max-variant requests
-//!                          4. PJRT execute; per-request latency recorded
-//!                          5. responses delivered via channels
+//!                    ┌──────────────── ServingCore ────────────────┐
+//!                    │ 1. window stats → AllocationPolicy → g_i    │
+//!                    │ 2. GpuGovernor stride pick (wakeup snaps)   │
+//!                    │ 3. per-batch governor charge + stats        │
+//!                    │    (latency histograms, batches, GPU time)  │
+//!                    └──────────────▲───────────────▲──────────────┘
+//!   threaded shell (AgentServer)   │               │   virtual-time shell
+//!                                  │               │   (ServingSimulator)
+//!  client threads ──submit()──►    │               │
+//!    per-agent FIFO queues         │               │  workload generator /
+//!      (Mutex+Condvar)             │               │  recorded Trace →
+//!  WallClock Instants ─────────────┘               │  arrival stream
+//!  PJRT EngineExecutor                             │  VirtualClock f64 now
+//!  (measured execute time)              CostModelExecutor
+//!  responses via channels               (service time from AgentProfile
+//!                                        + batch size; no artifacts)
 //! ```
 //!
 //! The GPU fraction `g_i` the paper's allocator produces is enforced as a
 //! *compute-time share*: the governor charges each agent's virtual clock
 //! `elapsed / g_i` per executed batch, so over any window the GPU time an
 //! agent receives converges to its allocated fraction (DESIGN.md §4,
-//! hardware adaptation of MIG/time-slicing).
+//! hardware adaptation of MIG/time-slicing). Both shells inherit this
+//! from the shared core, which is what lets the sweep engine replay the
+//! serving queue path deterministically
+//! ([`SweepCell::Serving`](crate::sim::batch::SweepCell)).
 
 mod batcher;
+pub mod core;
 mod governor;
 #[allow(clippy::module_inception)]
 mod server;
+pub mod sim;
 
 pub use batcher::{AgentQueue, QueuedRequest};
 pub use governor::GpuGovernor;
-pub use server::{AgentServer, CompletedRequest, ServerConfig, ServerStats};
+pub use self::core::{AgentStat, Clock, Executor, ServingCore,
+                     VirtualClock, WallClock};
+pub use self::server::{AgentServer, CompletedRequest, ServerConfig,
+                       ServerStats};
+pub use self::sim::{CostModelExecutor, ServingArena, ServingConfig,
+                    ServingResult, ServingSimulator};

@@ -1,4 +1,6 @@
-//! The multi-agent inference server.
+//! The multi-agent inference server: the threaded shell around
+//! [`ServingCore`], driving it with wall-clock instants and the PJRT
+//! engine.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -8,11 +10,11 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::agents::AgentRegistry;
-use crate::allocator::{policy_by_name, AllocContext};
+use crate::allocator::{policy_by_name, AllocationPolicy};
 use crate::error::{Error, Result};
-use crate::metrics::Histogram;
-use crate::runtime::{InferenceEngine, Manifest};
-use crate::server::{AgentQueue, GpuGovernor, QueuedRequest};
+use crate::runtime::{InferenceEngine, InferenceOutput, Manifest};
+use crate::server::core::{AgentStat, Executor, ServingCore, WallClock};
+use crate::server::{AgentQueue, QueuedRequest};
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -52,34 +54,12 @@ pub struct CompletedRequest {
     pub batch_size: usize,
 }
 
-#[derive(Debug)]
-struct AgentStatsInner {
-    completed: u64,
-    errors: u64,
-    latency: Histogram,
-    batch_sum: u64,
-    batches: u64,
-    gpu_seconds: f64,
-}
-
-impl AgentStatsInner {
-    fn new() -> Self {
-        AgentStatsInner {
-            completed: 0,
-            errors: 0,
-            latency: Histogram::latency_seconds(),
-            batch_sum: 0,
-            batches: 0,
-            gpu_seconds: 0.0,
-        }
-    }
-}
-
 /// Snapshot of server statistics.
 #[derive(Debug, Clone)]
 pub struct ServerStats {
-    /// Per agent: (name, completed, p50 s, p99 s, mean batch, gpu share).
-    pub per_agent: Vec<(String, u64, f64, f64, f64, f64)>,
+    /// Per-agent rows (completion counts, latency quantiles, batching,
+    /// GPU share).
+    pub per_agent: Vec<AgentStat>,
     /// Total completed requests.
     pub total_completed: u64,
     /// Total failed requests.
@@ -90,17 +70,21 @@ pub struct ServerStats {
     pub last_allocation: Vec<f64>,
 }
 
+/// The wall-clock instantiation of the core the serving thread drives.
+type WallCore = ServingCore<WallClock, Box<dyn AllocationPolicy>>;
+
 struct Shared {
     queues: Mutex<Vec<AgentQueue>>,
     work_cv: Condvar,
     shutdown: AtomicBool,
-    stats: Mutex<Vec<AgentStatsInner>>,
-    last_alloc: Mutex<Vec<f64>>,
+    /// The scheduling core. Lock order: `queues` before `core` (the
+    /// stats snapshot takes `core` alone, so no cycle exists).
+    core: Mutex<WallCore>,
 }
 
 /// Multi-agent inference server. `submit` is thread-safe; one serving
 /// thread owns the PJRT engine and enforces the allocator's GPU shares
-/// via stride scheduling.
+/// via the core's stride scheduling.
 pub struct AgentServer {
     shared: Arc<Shared>,
     registry: AgentRegistry,
@@ -120,17 +104,21 @@ impl AgentServer {
         let vocab = manifest.agents.iter().map(|a| a.vocab).collect();
         let n = registry.len();
 
+        let policy = policy_by_name(&cfg.policy).ok_or_else(
+            || Error::Config(format!("unknown policy '{}'", cfg.policy)))?;
+        let max_batches: Vec<usize> = registry.profiles().iter().map(|p| {
+            manifest.agent(&p.name).map_or(1, |a| a.max_batch())
+        }).collect();
+        let core = ServingCore::<WallClock, _>::new(
+            registry.clone(), policy, cfg.alloc_window.as_secs_f64(),
+            cfg.capacity, max_batches, false);
+
         let shared = Arc::new(Shared {
             queues: Mutex::new((0..n).map(|_| AgentQueue::new()).collect()),
             work_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
-            stats: Mutex::new((0..n).map(|_| AgentStatsInner::new())
-                              .collect()),
-            last_alloc: Mutex::new(vec![0.0; n]),
+            core: Mutex::new(core),
         });
-
-        let mut policy = policy_by_name(&cfg.policy).ok_or_else(
-            || Error::Config(format!("unknown policy '{}'", cfg.policy)))?;
 
         // The engine is built *inside* the serving thread (PJRT handles
         // are not Send). Compilation errors are reported through a
@@ -153,7 +141,7 @@ impl AgentServer {
                     }
                 };
                 serve_loop(&thread_shared, &thread_registry, &mut engine,
-                           policy.as_mut(), &cfg);
+                           cfg.alloc_window);
             })
             .map_err(|e| Error::Serving(format!("spawn: {e}")))?;
 
@@ -229,30 +217,13 @@ impl AgentServer {
 
     /// Snapshot of server statistics.
     pub fn stats(&self) -> ServerStats {
-        let stats = self.shared.stats.lock().expect("stats lock");
-        let total_gpu: f64 =
-            stats.iter().map(|s| s.gpu_seconds).sum::<f64>().max(1e-12);
-        let per_agent = stats.iter().enumerate().map(|(i, s)| {
-            (
-                self.registry.profile(i).name.clone(),
-                s.completed,
-                s.latency.p50(),
-                s.latency.p99(),
-                if s.batches == 0 {
-                    0.0
-                } else {
-                    s.batch_sum as f64 / s.batches as f64
-                },
-                s.gpu_seconds / total_gpu,
-            )
-        }).collect();
+        let core = self.shared.core.lock().expect("core lock");
         ServerStats {
-            per_agent,
-            total_completed: stats.iter().map(|s| s.completed).sum(),
-            total_errors: stats.iter().map(|s| s.errors).sum(),
-            gpu_busy_seconds: stats.iter().map(|s| s.gpu_seconds).sum(),
-            last_allocation:
-                self.shared.last_alloc.lock().expect("alloc lock").clone(),
+            per_agent: core.agent_stats(),
+            total_completed: core.total_completed(),
+            total_errors: core.total_errors(),
+            gpu_busy_seconds: core.gpu_busy_seconds(),
+            last_allocation: core.last_allocation().to_vec(),
         }
     }
 
@@ -277,26 +248,43 @@ impl Drop for AgentServer {
     }
 }
 
-/// The serving loop: allocate → pick → batch → execute → respond.
+/// The hardware executor: PJRT execution timed with the wall clock.
+struct EngineExecutor<'a> {
+    engine: &'a mut InferenceEngine,
+    names: Vec<String>,
+}
+
+impl Executor for EngineExecutor<'_> {
+    type Request = QueuedRequest;
+    type Output = InferenceOutput;
+
+    fn execute(&mut self, agent: usize, batch: &[QueuedRequest])
+               -> (f64, Result<InferenceOutput>) {
+        let rows: Vec<&[i32]> =
+            batch.iter().map(|r| r.tokens.as_slice()).collect();
+        let start = Instant::now();
+        let result = self.engine.infer_rows(&self.names[agent], &rows);
+        (start.elapsed().as_secs_f64(), result)
+    }
+}
+
+/// The serving loop: the threaded shell around the core — wait for work,
+/// let the core allocate and pick, execute via PJRT outside the locks,
+/// feed the accounting back.
 fn serve_loop(shared: &Shared, registry: &AgentRegistry,
-              engine: &mut InferenceEngine,
-              policy: &mut dyn crate::allocator::AllocationPolicy,
-              cfg: &ServerConfig) {
+              engine: &mut InferenceEngine, alloc_window: Duration) {
     let n = registry.len();
-    let mut governor = GpuGovernor::new(n);
-    let mut alloc = vec![1.0 / n as f64; n];
-    let mut rates = vec![0.0f64; n];
+    let mut executor = EngineExecutor {
+        engine,
+        names: registry.profiles().iter()
+            .map(|p| p.name.clone()).collect(),
+    };
+    let mut arrivals = vec![0u64; n];
     let mut depths = vec![0.0f64; n];
     let mut backlogged = vec![false; n];
-    let mut prev_backlogged = vec![false; n];
-    let mut window_start = Instant::now();
-    let mut step: u64 = 0;
-    let max_batches: Vec<usize> = registry.profiles().iter().map(|p| {
-        engine.manifest().agent(&p.name).map_or(1, |a| a.max_batch())
-    }).collect();
 
     loop {
-        // Collect a batch under the queue lock.
+        // Decide one batch under the queue lock.
         let (agent_id, batch) = {
             let mut queues = shared.queues.lock().expect("queues lock");
             loop {
@@ -309,84 +297,56 @@ fn serve_loop(shared: &Shared, registry: &AgentRegistry,
                     return; // drained + shutdown
                 }
                 let (q, _timeout) = shared.work_cv
-                    .wait_timeout(queues, cfg.alloc_window)
+                    .wait_timeout(queues, alloc_window)
                     .expect("cv wait");
                 queues = q;
             }
 
-            // Window rollover: feed the allocator observed rates + depths.
-            let elapsed = window_start.elapsed();
-            if elapsed >= cfg.alloc_window {
-                let secs = elapsed.as_secs_f64().max(1e-9);
+            let now = Instant::now();
+            let mut core = shared.core.lock().expect("core lock");
+            if core.window_due(now) {
                 for (i, q) in queues.iter_mut().enumerate() {
-                    rates[i] = q.take_window_arrivals() as f64 / secs;
+                    arrivals[i] = q.take_window_arrivals();
                     depths[i] = q.len() as f64;
                 }
-                let ctx = AllocContext {
-                    registry,
-                    arrival_rates: &rates,
-                    queue_depths: &depths,
-                    step,
-                    capacity: cfg.capacity,
-                };
-                policy.allocate(&ctx, &mut alloc);
-                governor.set_weights(&alloc);
-                governor.rebase();
-                *shared.last_alloc.lock().expect("alloc lock") =
-                    alloc.clone();
-                window_start = Instant::now();
-                step += 1;
+                core.reallocate(now, &arrivals, &depths);
             }
-
             for (i, q) in queues.iter().enumerate() {
                 backlogged[i] = !q.is_empty();
-                if backlogged[i] && !prev_backlogged[i] {
-                    governor.on_wakeup(i, &backlogged);
-                }
             }
-            prev_backlogged.copy_from_slice(&backlogged);
-
-            let Some(agent_id) = governor.pick(&backlogged) else {
+            let Some(agent_id) = core.pick(&backlogged) else {
                 continue;
             };
-            let batch = queues[agent_id].pop_batch(max_batches[agent_id]);
+            let batch = queues[agent_id].pop_batch(core.max_batch(agent_id));
             (agent_id, batch)
         };
         if batch.is_empty() {
             continue;
         }
 
-        // Execute outside the lock so submitters are never blocked on
+        // Execute outside the locks so submitters are never blocked on
         // PJRT.
+        let (service_s, result) = executor.execute(agent_id, &batch);
         let name = &registry.profile(agent_id).name;
-        let rows: Vec<&[i32]> =
-            batch.iter().map(|r| r.tokens.as_slice()).collect();
-        let start = Instant::now();
-        let result = engine.infer_rows(name, &rows);
-        let elapsed = start.elapsed().as_secs_f64();
-        governor.charge(agent_id, elapsed);
 
-        let mut stats = shared.stats.lock().expect("stats lock");
-        let st = &mut stats[agent_id];
+        let mut core = shared.core.lock().expect("core lock");
         match result {
             Ok(out) => {
-                st.batches += 1;
-                st.batch_sum += batch.len() as u64;
-                st.gpu_seconds += elapsed;
+                core.record_batch(agent_id, batch.len(), service_s);
+                let batch_size = out.next_tokens.len();
                 for (i, req) in batch.into_iter().enumerate() {
                     let latency = req.enqueued.elapsed();
-                    st.completed += 1;
-                    st.latency.record(latency.as_secs_f64());
+                    core.record_completion(agent_id, latency.as_secs_f64());
                     let _ = req.reply.send(Ok(CompletedRequest {
                         agent: name.clone(),
                         next_token: out.next_tokens[i],
                         latency,
-                        batch_size: out.next_tokens.len(),
+                        batch_size,
                     }));
                 }
             }
             Err(e) => {
-                st.errors += batch.len() as u64;
+                core.record_failed_batch(agent_id, batch.len(), service_s);
                 for req in batch {
                     let _ = req.reply.send(Err(Error::Serving(
                         format!("execution failed: {e}"))));

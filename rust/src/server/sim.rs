@@ -1,0 +1,546 @@
+//! Deterministic serving-layer simulator: the same [`ServingCore`] the
+//! threaded server drives, run in virtual time with a profile-derived
+//! cost-model executor — no artifacts, no threads, bit-reproducible.
+//!
+//! Where the fluid-model simulator ([`crate::sim::Simulator`]) moves
+//! *request mass* (`min(queue, g·T·dt)` per step), this one serves
+//! *individual requests* through the real queue path: per-agent FIFO
+//! queues, windowed allocator re-runs, stride-scheduled batch picks,
+//! dynamic batching up to a cap, and a serialized GPU whose virtual now
+//! advances by each batch's service time. That granularity is where
+//! batching and queueing effects actually differentiate policies; the
+//! sweep engine replays these runs as
+//! [`SweepCell::Serving`](crate::sim::batch::SweepCell) cells.
+
+use std::collections::VecDeque;
+
+use crate::agents::{AgentProfile, AgentRegistry};
+use crate::allocator::AllocationPolicy;
+use crate::metrics::Histogram;
+use crate::server::core::{AgentStat, Executor, ServingCore, VirtualClock};
+use crate::workload::trace::Trace;
+use crate::workload::{ArrivalProcess, WorkloadGenerator, WorkloadKind};
+
+/// Configuration of one serving-layer simulation run.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Allocator re-run window in virtual seconds (paper: 100 ms).
+    pub alloc_window_s: f64,
+    /// Total GPU capacity handed to the policy (paper: 1.0).
+    pub capacity: f64,
+    /// Dynamic-batch cap per agent (largest compiled variant stand-in).
+    pub max_batch: usize,
+    /// Fixed per-batch dispatch overhead (seconds) — what dynamic
+    /// batching amortizes.
+    pub dispatch_overhead_s: f64,
+    /// Tick length for drawing workload arrival counts (seconds);
+    /// requests are spaced evenly inside each tick.
+    pub arrival_dt_s: f64,
+    /// Virtual duration over which arrivals are generated (seconds); the
+    /// run itself continues until every queue drains.
+    pub duration_s: f64,
+    /// Mean arrival rate per agent (rps), in agent-id order.
+    pub arrival_rates: Vec<f64>,
+    /// Arrival schedule shape (steady / scaled / spike / ...).
+    pub workload_kind: WorkloadKind,
+    /// Deterministic or Poisson arrivals.
+    pub arrival_process: ArrivalProcess,
+    /// RNG seed for the arrival stream.
+    pub seed: u64,
+}
+
+impl ServingConfig {
+    /// The paper's serving setup over the §IV.A workload: 100 ms
+    /// allocation window, batch cap 8, Poisson arrivals at the Table I
+    /// rates for 10 virtual seconds.
+    pub fn paper() -> Self {
+        ServingConfig {
+            alloc_window_s: 0.1,
+            capacity: 1.0,
+            max_batch: 8,
+            dispatch_overhead_s: 0.002,
+            arrival_dt_s: 0.1,
+            duration_s: 10.0,
+            arrival_rates: AgentProfile::paper_arrival_rates(),
+            workload_kind: WorkloadKind::Steady,
+            arrival_process: ArrivalProcess::Poisson,
+            seed: 42,
+        }
+    }
+}
+
+/// The simulator's executor: service time from the agent profile and the
+/// batch size — `overhead + batch / T_i` seconds, the proportional-
+/// throughput model of §IV.A at batch granularity.
+#[derive(Debug, Clone)]
+pub struct CostModelExecutor {
+    per_request_s: Vec<f64>,
+    dispatch_overhead_s: f64,
+}
+
+impl CostModelExecutor {
+    /// Build from a registry's base throughputs.
+    pub fn new(registry: &AgentRegistry, dispatch_overhead_s: f64) -> Self {
+        CostModelExecutor {
+            per_request_s:
+                registry.base_tput().iter().map(|t| 1.0 / t).collect(),
+            dispatch_overhead_s,
+        }
+    }
+}
+
+impl Executor for CostModelExecutor {
+    /// A queued request is its enqueue time (virtual seconds).
+    type Request = f64;
+    type Output = ();
+
+    fn execute(&mut self, agent: usize, batch: &[f64])
+               -> (f64, crate::error::Result<()>) {
+        let service = self.dispatch_overhead_s
+            + batch.len() as f64 * self.per_request_s[agent];
+        (service, Ok(()))
+    }
+}
+
+/// Reusable buffers for serving-layer runs: a sweep worker holds one
+/// and replays every [`SweepCell::Serving`](crate::sim::batch::SweepCell)
+/// cell through it, reusing the *big* per-run buffers — the
+/// materialized arrival stream and the per-agent queues — across cells
+/// after warm-up. (Result-owned state — the per-agent histograms and
+/// counters that leave the run inside [`ServingResult`] — is
+/// necessarily fresh per run, exactly as `SimResult`'s per-agent series
+/// are.)
+#[derive(Debug, Clone, Default)]
+pub struct ServingArena {
+    queues: Vec<VecDeque<f64>>,
+    arrivals: Vec<(f64, usize)>,
+    window_arrivals: Vec<u64>,
+    depths: Vec<f64>,
+    backlogged: Vec<bool>,
+    rates: Vec<f64>,
+    counts: Vec<f64>,
+    carry: Vec<f64>,
+    batch: Vec<f64>,
+}
+
+impl ServingArena {
+    /// Empty arena; buffers grow on first use and are retained after.
+    pub fn new() -> Self {
+        ServingArena::default()
+    }
+
+    /// Size every buffer for `n` agents and reset its contents.
+    fn reset(&mut self, n: usize) {
+        for q in &mut self.queues {
+            q.clear();
+        }
+        self.queues.resize_with(n, VecDeque::new);
+        self.arrivals.clear();
+        self.batch.clear();
+        for buf in [&mut self.depths, &mut self.rates, &mut self.counts,
+                    &mut self.carry] {
+            buf.clear();
+            buf.resize(n, 0.0);
+        }
+        self.window_arrivals.clear();
+        self.window_arrivals.resize(n, 0);
+        self.backlogged.clear();
+        self.backlogged.resize(n, false);
+    }
+}
+
+/// Result of one serving-layer simulation run. Every field is a pure
+/// function of the inputs, so parallel sweep replays are bit-identical
+/// to sequential ones (`PartialEq` is exact).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingResult {
+    /// Policy that drove the run.
+    pub policy: String,
+    /// Per-agent rows (completions, p50/p99, mean batch, GPU share).
+    pub per_agent: Vec<AgentStat>,
+    /// Per-agent latency histograms (full distributions).
+    pub latency: Vec<Histogram>,
+    /// Exact per-agent mean latency (seconds).
+    pub mean_latency_s: Vec<f64>,
+    /// Total completed requests.
+    pub total_completed: u64,
+    /// Total GPU busy seconds.
+    pub gpu_busy_s: f64,
+    /// Virtual time at which the last queue drained.
+    pub makespan_s: f64,
+    /// Allocation windows closed.
+    pub windows: u64,
+    /// The allocation produced by the last closed window.
+    pub last_allocation: Vec<f64>,
+    /// One allocation vector per closed window (the reallocation
+    /// trajectory the §V.B spike analysis reads).
+    pub allocation_trajectory: Vec<Vec<f64>>,
+}
+
+impl ServingResult {
+    /// Mean of per-agent mean latencies (the Table II estimator shape,
+    /// at queue granularity).
+    pub fn mean_latency(&self) -> f64 {
+        crate::util::mean(&self.mean_latency_s)
+    }
+
+    /// Mean of per-agent p99 latencies (seconds).
+    pub fn mean_p99(&self) -> f64 {
+        let p99s: Vec<f64> =
+            self.per_agent.iter().map(|a| a.p99_s).collect();
+        crate::util::mean(&p99s)
+    }
+
+    /// Mean executed batch size across agents that ran batches.
+    pub fn mean_batch(&self) -> f64 {
+        let sizes: Vec<f64> = self.per_agent.iter()
+            .filter(|a| a.mean_batch > 0.0)
+            .map(|a| a.mean_batch)
+            .collect();
+        crate::util::mean(&sizes)
+    }
+
+    /// Completed requests per virtual second.
+    pub fn total_throughput(&self) -> f64 {
+        if self.makespan_s <= 0.0 {
+            0.0
+        } else {
+            self.total_completed as f64 / self.makespan_s
+        }
+    }
+}
+
+/// Virtual-time serving simulator over one agent registry.
+#[derive(Debug, Clone)]
+pub struct ServingSimulator {
+    cfg: ServingConfig,
+    registry: AgentRegistry,
+}
+
+impl ServingSimulator {
+    /// Build from profiles (panics on invalid profiles — use
+    /// [`ServingSimulator::with_registry`] for validated registries).
+    pub fn new(cfg: ServingConfig, agents: Vec<AgentProfile>) -> Self {
+        let registry = AgentRegistry::new(agents).expect("valid agents");
+        ServingSimulator::with_registry(cfg, registry)
+    }
+
+    /// Build from an already-validated registry.
+    pub fn with_registry(cfg: ServingConfig, registry: AgentRegistry)
+                         -> Self {
+        assert_eq!(cfg.arrival_rates.len(), registry.len(),
+                   "arrival_rates must cover every agent");
+        ServingSimulator { cfg, registry }
+    }
+
+    /// The paper deployment under [`ServingConfig::paper`].
+    pub fn paper() -> Self {
+        ServingSimulator::with_registry(ServingConfig::paper(),
+                                        AgentRegistry::paper())
+    }
+
+    /// The agent registry simulated over.
+    pub fn registry(&self) -> &AgentRegistry {
+        &self.registry
+    }
+
+    /// The configuration simulated under.
+    pub fn config(&self) -> &ServingConfig {
+        &self.cfg
+    }
+
+    /// Run one policy over the configured workload until every queue
+    /// drains.
+    pub fn run<P>(&self, policy: &mut P) -> ServingResult
+    where
+        P: AllocationPolicy + ?Sized,
+    {
+        self.run_with_arena(policy, &mut ServingArena::new())
+    }
+
+    /// [`ServingSimulator::run`] with caller-owned buffers.
+    pub fn run_with_arena<P>(&self, policy: &mut P,
+                             arena: &mut ServingArena) -> ServingResult
+    where
+        P: AllocationPolicy + ?Sized,
+    {
+        let mut workload = WorkloadGenerator::new(
+            self.cfg.arrival_rates.clone(), self.cfg.workload_kind.clone(),
+            self.cfg.arrival_process, self.cfg.seed);
+        let dt = self.cfg.arrival_dt_s;
+        let steps = (self.cfg.duration_s / dt).round().max(1.0) as u64;
+        self.run_inner(policy, |step, dt_s, rates, counts| {
+            workload.step(step, dt_s, rates, counts);
+        }, steps, dt, arena)
+    }
+
+    /// Replay a recorded arrival [`Trace`] through the serving queue
+    /// path. The trace's `dt` and length override the config's arrival
+    /// schedule.
+    pub fn run_trace<P>(&self, policy: &mut P, trace: &Trace)
+                        -> ServingResult
+    where
+        P: AllocationPolicy + ?Sized,
+    {
+        self.run_trace_with_arena(policy, trace, &mut ServingArena::new())
+    }
+
+    /// [`ServingSimulator::run_trace`] with caller-owned buffers.
+    pub fn run_trace_with_arena<P>(&self, policy: &mut P, trace: &Trace,
+                                   arena: &mut ServingArena)
+                                   -> ServingResult
+    where
+        P: AllocationPolicy + ?Sized,
+    {
+        assert_eq!(trace.agents.len(), self.registry.len(),
+                   "trace agent count must match registry");
+        let counts_by_step = &trace.counts;
+        self.run_inner(policy, |step, dt_s, rates, counts| {
+            let row = &counts_by_step[step as usize];
+            counts.copy_from_slice(row);
+            for (r, c) in rates.iter_mut().zip(row) {
+                *r = c / dt_s;
+            }
+        }, trace.counts.len() as u64, trace.dt, arena)
+    }
+
+    fn run_inner<P, F>(&self, policy: &mut P, mut next_arrivals: F,
+                       steps: u64, dt: f64, arena: &mut ServingArena)
+                       -> ServingResult
+    where
+        P: AllocationPolicy + ?Sized,
+        F: FnMut(u64, f64, &mut [f64], &mut [f64]),
+    {
+        let n = self.registry.len();
+        arena.reset(n);
+        let ServingArena {
+            queues, arrivals, window_arrivals, depths, backlogged, rates,
+            counts, carry, batch,
+        } = arena;
+
+        // Materialize the arrival stream: per tick, draw counts, carry
+        // fractional remainders (deterministic mode produces fractional
+        // mass), and space the requests evenly inside the tick.
+        for step in 0..steps {
+            next_arrivals(step, dt, &mut rates[..], &mut counts[..]);
+            let t0 = step as f64 * dt;
+            for i in 0..n {
+                carry[i] += counts[i];
+                let whole = carry[i].floor();
+                carry[i] -= whole;
+                let k = whole as u64;
+                for j in 0..k {
+                    arrivals.push((t0 + dt * j as f64 / k as f64, i));
+                }
+            }
+        }
+        arrivals.sort_unstable_by(|a, b| {
+            a.0.partial_cmp(&b.0).expect("finite arrival times")
+                .then(a.1.cmp(&b.1))
+        });
+
+        let mut executor = CostModelExecutor::new(
+            &self.registry, self.cfg.dispatch_overhead_s);
+        let mut core = ServingCore::<VirtualClock, _>::new(
+            self.registry.clone(), policy, self.cfg.alloc_window_s,
+            self.cfg.capacity, vec![self.cfg.max_batch.max(1); n], true);
+
+        let mut now = 0.0f64;
+        let mut next = 0usize;
+        core.window_due(now); // anchor the first window at t = 0
+
+        loop {
+            // 1. Inject every arrival due by `now`.
+            while next < arrivals.len() && arrivals[next].0 <= now {
+                let (t, agent) = arrivals[next];
+                queues[agent].push_back(t);
+                window_arrivals[agent] += 1;
+                next += 1;
+            }
+
+            // 2. Allocation-window rollover, exactly as the threaded
+            //    shell does it between batches.
+            if core.window_due(now) {
+                for i in 0..n {
+                    depths[i] = queues[i].len() as f64;
+                }
+                core.reallocate(now, &window_arrivals[..], &depths[..]);
+                for w in window_arrivals.iter_mut() {
+                    *w = 0;
+                }
+            }
+
+            // 3. Pick a backlogged agent; idle GPU fast-forwards to the
+            //    next arrival.
+            let mut any = false;
+            for i in 0..n {
+                backlogged[i] = !queues[i].is_empty();
+                any |= backlogged[i];
+            }
+            if !any {
+                if next < arrivals.len() {
+                    now = now.max(arrivals[next].0);
+                    continue;
+                }
+                break; // drained: the run is over
+            }
+            let agent = core.pick(&backlogged[..])
+                .expect("backlog implies a pick");
+
+            // 4. Dynamic batch pop + cost-model execution; the serialized
+            //    GPU advances virtual time by the service span.
+            let b = queues[agent].len().min(core.max_batch(agent));
+            batch.clear();
+            for _ in 0..b {
+                batch.push(queues[agent].pop_front().expect("b <= len"));
+            }
+            let (service_s, result) = executor.execute(agent, &batch[..]);
+            now += service_s;
+            match result {
+                Ok(()) => {
+                    core.record_batch(agent, b, service_s);
+                    for t_enq in batch.iter() {
+                        core.record_completion(agent, now - t_enq);
+                    }
+                }
+                Err(_) => core.record_failed_batch(agent, b, service_s),
+            }
+        }
+
+        ServingResult {
+            policy: core.policy_name().to_string(),
+            per_agent: core.agent_stats(),
+            latency: core.latency_histograms(),
+            mean_latency_s: core.mean_latencies(),
+            total_completed: core.total_completed(),
+            gpu_busy_s: core.gpu_busy_seconds(),
+            makespan_s: now,
+            windows: core.windows_closed(),
+            last_allocation: core.last_allocation().to_vec(),
+            allocation_trajectory: core.take_trajectory(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocator::{AdaptivePolicy, PolicyKind};
+
+    fn light_cfg() -> ServingConfig {
+        // Under-loaded so queues drain fast and the run stays tiny.
+        let mut cfg = ServingConfig::paper();
+        cfg.arrival_rates = vec![20.0, 10.0, 10.0, 5.0];
+        cfg.duration_s = 2.0;
+        cfg
+    }
+
+    #[test]
+    fn serves_every_request_exactly_once() {
+        let sim = ServingSimulator::with_registry(light_cfg(),
+                                                  AgentRegistry::paper());
+        let r = sim.run(&mut AdaptivePolicy::default());
+        // Poisson at these rates over 2 s: roughly 90 arrivals.
+        assert!(r.total_completed > 40, "{}", r.total_completed);
+        assert_eq!(r.total_completed,
+                   r.per_agent.iter().map(|a| a.completed).sum::<u64>());
+        for (a, h) in r.per_agent.iter().zip(&r.latency) {
+            assert_eq!(a.completed, h.count(), "{}", a.name);
+            if a.completed > 0 {
+                assert!(a.p99_s >= a.p50_s, "{}", a.name);
+                assert!(a.p50_s > 0.0, "{}", a.name);
+            }
+        }
+        assert!(r.makespan_s > 0.0 && r.gpu_busy_s > 0.0);
+        assert!(r.windows > 0, "allocator never ran");
+        assert_eq!(r.allocation_trajectory.len(), r.windows as usize);
+        let shares: f64 = r.per_agent.iter().map(|a| a.gpu_share).sum();
+        assert!((shares - 1.0).abs() < 1e-6, "gpu shares sum to {shares}");
+    }
+
+    #[test]
+    fn runs_are_bit_reproducible_and_arena_pure() {
+        let sim = ServingSimulator::with_registry(light_cfg(),
+                                                  AgentRegistry::paper());
+        let mut arena = ServingArena::new();
+        let fresh = sim.run(&mut AdaptivePolicy::default());
+        for _ in 0..3 {
+            let again =
+                sim.run_with_arena(&mut AdaptivePolicy::default(),
+                                   &mut arena);
+            assert_eq!(again, fresh);
+        }
+        // A different-shaped run through the same arena leaves no state.
+        let mut other_cfg = light_cfg();
+        other_cfg.arrival_rates.truncate(2);
+        other_cfg.seed = 7;
+        let mut agents = crate::agents::AgentProfile::paper_agents();
+        agents.truncate(2);
+        let other = ServingSimulator::new(other_cfg, agents);
+        let _ = other.run_with_arena(&mut AdaptivePolicy::default(),
+                                     &mut arena);
+        let again = sim.run_with_arena(&mut AdaptivePolicy::default(),
+                                       &mut arena);
+        assert_eq!(again, fresh);
+    }
+
+    #[test]
+    fn trace_replay_matches_generated_run_of_same_stream() {
+        // Recording the generator's stream and replaying it must serve
+        // the same requests (same totals; timing identical because the
+        // trace preserves dt and counts).
+        let mut cfg = light_cfg();
+        cfg.arrival_dt_s = 0.1;
+        let sim = ServingSimulator::with_registry(cfg.clone(),
+                                                  AgentRegistry::paper());
+        let generated = sim.run(&mut AdaptivePolicy::default());
+
+        let names: Vec<String> = AgentRegistry::paper().profiles().iter()
+            .map(|p| p.name.clone()).collect();
+        let mut gen = WorkloadGenerator::new(
+            cfg.arrival_rates.clone(), cfg.workload_kind.clone(),
+            cfg.arrival_process, cfg.seed);
+        let trace = Trace::record(&mut gen, names, 20, 0.1);
+        let replayed =
+            sim.run_trace(&mut AdaptivePolicy::default(), &trace);
+        assert_eq!(replayed, generated);
+    }
+
+    #[test]
+    fn batching_cap_one_pays_more_dispatch_overhead() {
+        let mut cfg = light_cfg();
+        cfg.max_batch = 1;
+        let unbatched = ServingSimulator::with_registry(
+            cfg.clone(), AgentRegistry::paper())
+            .run(&mut AdaptivePolicy::default());
+        cfg.max_batch = 8;
+        let batched = ServingSimulator::with_registry(
+            cfg, AgentRegistry::paper())
+            .run(&mut AdaptivePolicy::default());
+        assert_eq!(unbatched.total_completed, batched.total_completed);
+        for a in &unbatched.per_agent {
+            assert!(a.mean_batch <= 1.0 + 1e-12, "{}", a.name);
+        }
+        // Same requests, more dispatches → more GPU time consumed.
+        assert!(unbatched.gpu_busy_s > batched.gpu_busy_s,
+                "{} vs {}", unbatched.gpu_busy_s, batched.gpu_busy_s);
+    }
+
+    #[test]
+    fn policies_differentiate_at_queue_granularity() {
+        // Under overload the adaptive policy holds reasoning (high
+        // priority, g ≈ 0.296) above static-equal's flat 25%, so its
+        // requests drain measurably faster through the real queue path.
+        let mut cfg = ServingConfig::paper();
+        cfg.duration_s = 5.0;
+        let sim = ServingSimulator::with_registry(cfg,
+                                                  AgentRegistry::paper());
+        let adaptive = sim.run(&mut PolicyKind::adaptive());
+        let stat = sim.run(&mut PolicyKind::static_equal());
+        assert!(adaptive.mean_latency_s[3] < stat.mean_latency_s[3],
+                "reasoning under adaptive {} vs static {}",
+                adaptive.mean_latency_s[3], stat.mean_latency_s[3]);
+        // And the schedules genuinely differ across the board.
+        assert_ne!(adaptive.mean_latency_s, stat.mean_latency_s);
+    }
+}

@@ -3,17 +3,23 @@
 //! A [`SweepCell`] is one cell of an evaluation grid — a single-GPU
 //! [`Scenario`] (config × registry × policy), a [`ClusterScenario`]
 //! (config × registry × GPUs × capacity × migration model), a
-//! [`TraceScenario`] (a recorded [`Trace`] replayed under a policy), or
-//! a [`CostScenario`] (a scenario with a serverless [`EconomicsModel`]
-//! enabled — pricing × scale-to-zero timeout × cold-start distribution).
-//! [`run_sweep`] fans a slice of them across `std::thread::scope`
-//! workers; [`run_batch`] remains the single-GPU-only entry point over
-//! plain [`Scenario`]s. Both share one worker pool implementation: each
-//! worker owns one [`SweepArena`] (a [`SimArena`] plus a
-//! [`ClusterArena`], so every cell kind reuses buffers instead of
-//! re-allocating) and pulls work from a shared atomic cursor, so load
-//! imbalance between cheap and expensive cells self-corrects. Policies
-//! are [`PolicyKind`], statically dispatched in the step loop.
+//! [`TraceScenario`] (a recorded [`Trace`] replayed under a policy), a
+//! [`CostScenario`] (a scenario with a serverless [`EconomicsModel`]
+//! enabled — pricing × scale-to-zero timeout × cold-start
+//! distribution), or a [`ServingScenario`] (the serving-layer queue
+//! path — per-request FIFO queues, windowed allocator re-runs, stride
+//! picks, dynamic batching — replayed in virtual time through the same
+//! [`ServingCore`](crate::server::ServingCore) the threaded server
+//! drives). [`run_sweep`] fans a slice of them across
+//! `std::thread::scope` workers; [`run_batch`] remains the
+//! single-GPU-only entry point over plain [`Scenario`]s. Both share one
+//! worker pool implementation: each worker owns one [`SweepArena`] (a
+//! [`SimArena`] plus a [`ClusterArena`] plus a [`ServingArena`], so
+//! every cell kind reuses its per-step/per-event buffer set instead of
+//! re-allocating it; result-owned state is fresh per run) and pulls
+//! work from a shared atomic cursor, so load imbalance between cheap
+//! and expensive cells self-corrects. Policies are [`PolicyKind`],
+//! statically dispatched in the step loop.
 //!
 //! Results come back in cell order regardless of worker count, and every
 //! run is bit-identical to its sequential twin — [`Simulator::run`],
@@ -39,6 +45,8 @@ use crate::allocator::PolicyKind;
 use crate::cluster::{ClusterArena, ClusterResult, ClusterSimulator,
                      MigrationModel};
 use crate::error::{Error, Result};
+use crate::server::{ServingArena, ServingConfig, ServingResult,
+                    ServingSimulator};
 use crate::serverless::{EconomicsModel, EconomicsReport};
 use crate::sim::{SimArena, SimConfig, SimResult, Simulator};
 use crate::workload::trace::{Trace, TraceCorpus};
@@ -115,6 +123,20 @@ impl ClusterScenario {
             label: label.into(),
             sim: ClusterSimulator::new(cfg, registry, n_gpus,
                                        capacity_per_gpu, migration)?,
+        })
+    }
+
+    /// Build a mixed-capacity cell (one capacity per GPU, §VI
+    /// heterogeneous devices); errors when the agents cannot be placed
+    /// (same validation as [`ClusterSimulator::heterogeneous`]).
+    pub fn heterogeneous(label: impl Into<String>, cfg: SimConfig,
+                         registry: AgentRegistry, capacities: Vec<f64>,
+                         migration: Option<MigrationModel>)
+                         -> Result<ClusterScenario> {
+        Ok(ClusterScenario {
+            label: label.into(),
+            sim: ClusterSimulator::heterogeneous(cfg, registry,
+                                                 capacities, migration)?,
         })
     }
 
@@ -254,6 +276,81 @@ impl CostScenario {
     }
 }
 
+/// One serving-layer cell of a sweep grid: the `server::` queue path —
+/// per-request FIFO queues, windowed allocator re-runs, stride-scheduled
+/// batch picks — replayed deterministically in virtual time through the
+/// same [`ServingCore`](crate::server::ServingCore) the threaded
+/// [`AgentServer`](crate::server::AgentServer) drives. Inputs are either
+/// a generated workload kind (the config's shape/process/seed) or a
+/// recorded [`Trace`].
+#[derive(Debug, Clone)]
+pub struct ServingScenario {
+    /// Grid coordinates for reports
+    /// (e.g. `"serving/adaptive/w50ms/b8/steady/seed42"`).
+    pub label: String,
+    /// Policy evaluated in this cell (cloned fresh for the run).
+    pub policy: PolicyKind,
+    sim: ServingSimulator,
+    /// Recorded input, when this cell replays a trace instead of the
+    /// config's generator. Shared, not copied, across a grid.
+    trace: Option<Arc<Trace>>,
+}
+
+impl ServingScenario {
+    /// Build a generator-driven serving cell from a validated registry.
+    pub fn new(label: impl Into<String>, cfg: ServingConfig,
+               registry: AgentRegistry, policy: PolicyKind)
+               -> ServingScenario {
+        ServingScenario {
+            label: label.into(),
+            policy,
+            sim: ServingSimulator::with_registry(cfg, registry),
+            trace: None,
+        }
+    }
+
+    /// Build a trace-replay serving cell. Accepts an owned [`Trace`] or
+    /// an `Arc<Trace>`; panics when the trace's agent columns do not
+    /// match the registry's agents (same rule as [`TraceScenario`]).
+    pub fn from_trace(label: impl Into<String>, cfg: ServingConfig,
+                      registry: AgentRegistry,
+                      trace: impl Into<Arc<Trace>>, policy: PolicyKind)
+                      -> ServingScenario {
+        let trace = trace.into();
+        if let Some(msg) = trace_columns_mismatch(&trace, &registry) {
+            panic!("{msg}");
+        }
+        ServingScenario {
+            label: label.into(),
+            policy,
+            sim: ServingSimulator::with_registry(cfg, registry),
+            trace: Some(trace),
+        }
+    }
+
+    /// The serving simulator this cell runs (for sequential baselines).
+    pub fn simulator(&self) -> &ServingSimulator {
+        &self.sim
+    }
+
+    /// The recorded trace this cell replays, when it is a trace cell.
+    pub fn trace(&self) -> Option<&Trace> {
+        self.trace.as_deref()
+    }
+
+    /// Run this one cell through a caller-owned arena.
+    pub fn run_with_arena(&self, arena: &mut ServingArena)
+                          -> ServingResult {
+        let mut policy = self.policy.clone();
+        match &self.trace {
+            Some(trace) => {
+                self.sim.run_trace_with_arena(&mut policy, trace, arena)
+            }
+            None => self.sim.run_with_arena(&mut policy, arena),
+        }
+    }
+}
+
 /// The one matching rule for replaying a trace over a registry: the
 /// agent columns must equal the registry's agents, name for name, in
 /// order (a reordered or foreign recording would replay silently
@@ -280,6 +377,8 @@ pub enum SweepCell {
     Trace(TraceScenario),
     /// Serverless-economics cell (pricing × scale-to-zero × cold start).
     Cost(CostScenario),
+    /// Serving-layer queue-path cell (virtual-time `ServingCore` run).
+    Serving(ServingScenario),
 }
 
 impl SweepCell {
@@ -290,6 +389,7 @@ impl SweepCell {
             SweepCell::Cluster(s) => &s.label,
             SweepCell::Trace(s) => &s.label,
             SweepCell::Cost(s) => &s.label,
+            SweepCell::Serving(s) => &s.label,
         }
     }
 
@@ -304,19 +404,23 @@ impl SweepCell {
                 CellResult::Sim(s.run_with_arena(&mut arena.sim)),
             SweepCell::Cost(s) =>
                 CellResult::Sim(s.run_with_arena(&mut arena.sim)),
+            SweepCell::Serving(s) =>
+                CellResult::Serving(s.run_with_arena(&mut arena.serving)),
         }
     }
 }
 
 /// The full result of one sweep cell, tagged by kind. Single-GPU and
 /// trace-replay cells produce a [`SimResult`]; cluster cells a
-/// [`ClusterResult`].
+/// [`ClusterResult`]; serving-layer cells a [`ServingResult`].
 #[derive(Debug, Clone)]
 pub enum CellResult {
     /// Single-GPU simulation result (generator-driven or trace replay).
     Sim(SimResult),
     /// Multi-GPU cluster result.
     Cluster(ClusterResult),
+    /// Serving-layer queue-path result.
+    Serving(ServingResult),
 }
 
 impl CellResult {
@@ -325,6 +429,7 @@ impl CellResult {
         match self {
             CellResult::Sim(r) => r.mean_latency(),
             CellResult::Cluster(r) => r.mean_latency(),
+            CellResult::Serving(r) => r.mean_latency(),
         }
     }
 
@@ -333,14 +438,17 @@ impl CellResult {
         match self {
             CellResult::Sim(r) => r.total_throughput(),
             CellResult::Cluster(r) => r.total_throughput(),
+            CellResult::Serving(r) => r.total_throughput(),
         }
     }
 
-    /// Total billed cost ($), whatever the cell kind.
+    /// Total billed cost ($), whatever the cell kind. Serving-layer
+    /// cells carry no billing meter and report 0.
     pub fn cost_dollars(&self) -> f64 {
         match self {
             CellResult::Sim(r) => r.cost_dollars,
             CellResult::Cluster(r) => r.cost_dollars,
+            CellResult::Serving(_) => 0.0,
         }
     }
 
@@ -351,6 +459,7 @@ impl CellResult {
         match self {
             CellResult::Sim(r) => r.economics.as_ref(),
             CellResult::Cluster(r) => r.economics.as_ref(),
+            CellResult::Serving(_) => None,
         }
     }
 
@@ -358,7 +467,7 @@ impl CellResult {
     pub fn as_sim(&self) -> Option<&SimResult> {
         match self {
             CellResult::Sim(r) => Some(r),
-            CellResult::Cluster(_) => None,
+            _ => None,
         }
     }
 
@@ -366,7 +475,15 @@ impl CellResult {
     pub fn as_cluster(&self) -> Option<&ClusterResult> {
         match self {
             CellResult::Cluster(r) => Some(r),
-            CellResult::Sim(_) => None,
+            _ => None,
+        }
+    }
+
+    /// The serving-layer result, if this was a serving cell.
+    pub fn as_serving(&self) -> Option<&ServingResult> {
+        match self {
+            CellResult::Serving(r) => Some(r),
+            _ => None,
         }
     }
 }
@@ -397,6 +514,8 @@ pub struct SweepArena {
     pub sim: SimArena,
     /// Buffers for cluster cells.
     pub cluster: ClusterArena,
+    /// Buffers for serving-layer cells.
+    pub serving: ServingArena,
 }
 
 impl SweepArena {
@@ -500,6 +619,12 @@ mod tests {
             .collect()
     }
 
+    fn serving_cfg() -> ServingConfig {
+        let mut cfg = ServingConfig::paper();
+        cfg.duration_s = 2.0; // keep the test cell small
+        cfg
+    }
+
     fn mixed_grid() -> Vec<SweepCell> {
         vec![
             SweepCell::Single(Scenario::paper("single/adaptive",
@@ -513,6 +638,9 @@ mod tests {
                 PolicyKind::adaptive())),
             SweepCell::Single(Scenario::paper("single/static",
                                               PolicyKind::static_equal())),
+            SweepCell::Cluster(ClusterScenario::heterogeneous(
+                "cluster/hetero", SimConfig::paper(),
+                AgentRegistry::paper(), vec![1.0, 0.5], None).unwrap()),
             SweepCell::Cluster(ClusterScenario::new(
                 "cluster/4gpu", SimConfig::paper(), AgentRegistry::paper(),
                 4, 1.0, Some(MigrationModel::default())).unwrap()),
@@ -521,6 +649,13 @@ mod tests {
                 AgentRegistry::paper(),
                 EconomicsModel::with_idle_timeout(5.0),
                 PolicyKind::adaptive())),
+            SweepCell::Serving(ServingScenario::new(
+                "serving/adaptive", serving_cfg(), AgentRegistry::paper(),
+                PolicyKind::adaptive())),
+            SweepCell::Serving(ServingScenario::from_trace(
+                "serving/static/trace", serving_cfg(),
+                AgentRegistry::paper(), Trace::paper_poisson(2, 7),
+                PolicyKind::static_equal())),
         ]
     }
 
@@ -592,6 +727,9 @@ mod tests {
                                 "{}: cost cell must carry its report",
                                 run.label);
                     }
+                    SweepCell::Serving(_) =>
+                        assert!(run.result.as_serving().is_some(),
+                                "{}", run.label),
                 }
             }
         }
@@ -649,6 +787,16 @@ mod tests {
                     assert_eq!(got.cost_dollars, want.cost_dollars);
                     assert_eq!(got.economics, want.economics,
                                "{}", run.label);
+                }
+                SweepCell::Serving(sc) => {
+                    let mut policy = sc.policy.clone();
+                    let want = match sc.trace() {
+                        Some(t) => sc.simulator()
+                            .run_trace(&mut policy, t),
+                        None => sc.simulator().run(&mut policy),
+                    };
+                    let got = run.result.as_serving().unwrap();
+                    assert_eq!(got, &want, "{}", run.label);
                 }
             }
         }

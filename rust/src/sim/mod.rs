@@ -15,8 +15,8 @@ mod result;
 
 pub use arena::SimArena;
 pub use batch::{run_batch, run_sweep, BatchRun, CellResult,
-                ClusterScenario, CostScenario, Scenario, SweepArena,
-                SweepCell, SweepRun, TraceScenario};
+                ClusterScenario, CostScenario, Scenario, ServingScenario,
+                SweepArena, SweepCell, SweepRun, TraceScenario};
 pub use engine::Simulator;
 pub use result::{AgentStats, SimResult, Timelines};
 

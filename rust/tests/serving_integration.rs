@@ -103,11 +103,12 @@ fn serving_stack_end_to_end() {
     // 4 agents x 12 + 4 determinism repeats + workflow stages.
     assert!(stats.total_completed >= 52, "{}", stats.total_completed);
     assert!(stats.gpu_busy_seconds > 0.0);
-    let shares: f64 = stats.per_agent.iter().map(|a| a.5).sum();
+    let shares: f64 = stats.per_agent.iter().map(|a| a.gpu_share).sum();
     assert!((shares - 1.0).abs() < 1e-6, "gpu shares sum to {shares}");
-    for (name, completed, p50, p99, mean_batch, _) in &stats.per_agent {
-        assert!(*completed > 0, "{name} served nothing");
-        assert!(*p50 > 0.0 && p99 >= p50, "{name} quantiles broken");
-        assert!(*mean_batch >= 1.0);
+    for a in &stats.per_agent {
+        assert!(a.completed > 0, "{} served nothing", a.name);
+        assert!(a.p50_s > 0.0 && a.p99_s >= a.p50_s,
+                "{} quantiles broken", a.name);
+        assert!(a.mean_batch >= 1.0);
     }
 }

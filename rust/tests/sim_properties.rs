@@ -5,10 +5,11 @@ use agentsrv::agents::{AgentProfile, AgentRegistry, Priority};
 use agentsrv::allocator::{all_policies, policy_by_name, AllocContext,
                           PolicyKind};
 use agentsrv::cluster::{ClusterSimulator, MigrationModel};
+use agentsrv::server::{ServingConfig, ServingSimulator};
 use agentsrv::serverless::{EconomicsModel, GpuPricing};
 use agentsrv::sim::batch::{run_batch, run_sweep, ClusterScenario,
-                           CostScenario, Scenario, SweepCell,
-                           TraceScenario};
+                           CostScenario, Scenario, ServingScenario,
+                           SweepCell, TraceScenario};
 use agentsrv::sim::{SimConfig, Simulator};
 use agentsrv::util::check::{forall, vec_uniform};
 use agentsrv::util::Rng;
@@ -502,7 +503,90 @@ fn prop_economics_experiment_reproduces_table2_cost_row() {
             "scale-to-zero should break the cost tie: {costs:?}");
 }
 
-/// A mixed grid — single-GPU, cluster, trace, and cost cells
+/// Serving-layer cells through the sweep engine must be deterministic:
+/// the *full* [`ServingResult`] — latency histograms, per-agent stats,
+/// allocation trajectory, makespan — is bit-identical (`==`, no
+/// tolerance) between a direct `ServingSimulator` run with fresh
+/// buffers and `run_sweep` at 1, 2, and 8 workers, for every built-in
+/// policy, across window/batch variants and recorded-trace inputs
+/// alike.
+///
+/// [`ServingResult`]: agentsrv::server::ServingResult
+#[test]
+fn prop_serving_sweep_is_bit_identical_to_direct_runs() {
+    let trace = Trace::paper_poisson(5, 42);
+    let mut cells = Vec::new();
+    let mut expected = Vec::new();
+    for kind in PolicyKind::all() {
+        for (variant, max_batch, window_s) in
+            [("b8w100", 8usize, 0.1), ("b1w50", 1, 0.05)]
+        {
+            let mut cfg = ServingConfig::paper();
+            cfg.duration_s = 3.0;
+            cfg.max_batch = max_batch;
+            cfg.alloc_window_s = window_s;
+            let sim = ServingSimulator::with_registry(
+                cfg.clone(), AgentRegistry::paper());
+            let mut reference = policy_by_name(kind.name())
+                .expect("built-in policy");
+            expected.push(sim.run(reference.as_mut()));
+            cells.push(SweepCell::Serving(ServingScenario::new(
+                format!("serving/{}/{variant}", kind.name()), cfg,
+                AgentRegistry::paper(), kind.clone())));
+        }
+        // One recorded-trace serving cell per policy, sharing the
+        // recording.
+        let cfg = ServingConfig::paper();
+        let sim = ServingSimulator::with_registry(
+            cfg.clone(), AgentRegistry::paper());
+        let mut reference = policy_by_name(kind.name())
+            .expect("built-in policy");
+        expected.push(sim.run_trace(reference.as_mut(), &trace));
+        cells.push(SweepCell::Serving(ServingScenario::from_trace(
+            format!("serving/{}/trace", kind.name()), cfg,
+            AgentRegistry::paper(), trace.clone(), kind)));
+    }
+    // The cells must actually exercise the queue path.
+    assert!(expected.iter().all(|r| r.total_completed > 0));
+    assert!(expected.iter().all(|r| r.windows > 0));
+    for workers in [1usize, 2, 8] {
+        let runs = run_sweep(&cells, workers);
+        assert_eq!(runs.len(), expected.len());
+        for (got, want) in runs.iter().zip(&expected) {
+            let serving = got.result.as_serving()
+                .expect("serving cell yields ServingResult");
+            assert_eq!(serving, want, "{} @ {workers} workers",
+                       got.label);
+        }
+    }
+}
+
+/// The serving simulator drives the same `ServingCore` as the threaded
+/// `AgentServer`; at queue granularity the governor's compute-time
+/// shares must still track the allocation, so the high-priority
+/// reasoning agent is served strictly faster under the adaptive policy
+/// than under static-equal.
+#[test]
+fn prop_serving_layer_preserves_allocation_semantics() {
+    let mut cfg = ServingConfig::paper();
+    cfg.duration_s = 5.0;
+    let sim =
+        ServingSimulator::with_registry(cfg, AgentRegistry::paper());
+    let adaptive = sim.run(&mut PolicyKind::adaptive());
+    let stat = sim.run(&mut PolicyKind::static_equal());
+    assert!(adaptive.mean_latency_s[3] < stat.mean_latency_s[3],
+            "reasoning: adaptive {} vs static {}",
+            adaptive.mean_latency_s[3], stat.mean_latency_s[3]);
+    // Work is conserved either way: every request is served once.
+    assert_eq!(adaptive.total_completed, stat.total_completed);
+    // GPU shares partition the busy time.
+    for r in [&adaptive, &stat] {
+        let shares: f64 = r.per_agent.iter().map(|a| a.gpu_share).sum();
+        assert!((shares - 1.0).abs() < 1e-6, "{shares}");
+    }
+}
+
+/// A mixed grid — single-GPU, cluster, trace, cost, and serving cells
 /// interleaved — runs through one pool with cell order preserved and
 /// every kind bit-identical to its sequential twin at every worker
 /// count.
@@ -522,7 +606,12 @@ fn prop_mixed_sweep_is_bit_identical_per_cell_kind() {
             format!("cost/{}", kind.name()),
             agentsrv::repro::idle_burst_config(100, 42),
             AgentRegistry::paper(),
-            EconomicsModel::with_idle_timeout(5.0), kind)));
+            EconomicsModel::with_idle_timeout(5.0), kind.clone())));
+        let mut serving_cfg = ServingConfig::paper();
+        serving_cfg.duration_s = 2.0;
+        cells.push(SweepCell::Serving(ServingScenario::new(
+            format!("serving/{}", kind.name()), serving_cfg,
+            AgentRegistry::paper(), kind)));
     }
     for (gpus, migration) in
         [(2usize, None), (2, Some(MigrationModel::default())), (4, None)]
@@ -531,6 +620,9 @@ fn prop_mixed_sweep_is_bit_identical_per_cell_kind() {
             format!("cluster/{gpus}gpu"), SimConfig::paper(),
             AgentRegistry::paper(), gpus, 1.0, migration).unwrap()));
     }
+    cells.push(SweepCell::Cluster(ClusterScenario::heterogeneous(
+        "cluster/hetero/1+0.5".to_string(), SimConfig::paper(),
+        AgentRegistry::paper(), vec![1.0, 0.5], None).unwrap()));
 
     for workers in [1usize, 2, 8] {
         let runs = run_sweep(&cells, workers);
@@ -572,6 +664,17 @@ fn prop_mixed_sweep_is_bit_identical_per_cell_kind() {
                             "{} @ {workers}", run.label);
                     assert_eq!(got.economics, want.economics,
                                "{} @ {workers}", run.label);
+                }
+                SweepCell::Serving(sc) => {
+                    let mut policy = policy_by_name(sc.policy.name())
+                        .expect("built-in policy");
+                    let want = match sc.trace() {
+                        Some(t) => sc.simulator()
+                            .run_trace(policy.as_mut(), t),
+                        None => sc.simulator().run(policy.as_mut()),
+                    };
+                    let got = run.result.as_serving().unwrap();
+                    assert_eq!(got, &want, "{} @ {workers}", run.label);
                 }
             }
         }
