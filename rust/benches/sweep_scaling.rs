@@ -17,7 +17,12 @@
 //!   * serving — `repro::serving_grid`: the serving-layer queue path
 //!     (policy × allocation window × max batch × workload, plus
 //!     recorded-trace replays) in virtual time, as `ServingScenario`
-//!     cells driving the same `ServingCore` as the threaded server.
+//!     cells driving the same `ServingCore` as the threaded server;
+//!   * placement — `repro::placement_grid`: every placement strategy ×
+//!     rebalancer combination over the paper deployment under dominance
+//!     skew, plus synthetic 16/64/256-agent registries on
+//!     mixed-capacity devices (the large-N cells are where placement
+//!     cost actually shows).
 //!
 //! `--quick` shrinks everything to 500 steps × 2 seeds for CI.
 //!
@@ -36,7 +41,8 @@
 //! Run: `cargo bench --bench sweep_scaling [-- --quick] [-- --json FILE]`
 //! With `--json`, the measured tables are also written as JSON (the
 //! format documented in BENCH_sweep.json, `results` key: the single-GPU
-//! table plus `cluster`, `corpus`, `cost`, and `serving` sections). The
+//! table plus `cluster`, `corpus`, `cost`, `serving`, and `placement`
+//! sections). The
 //! written report is what CI's bench-regression gate compares against
 //! the committed BENCH_sweep.json baseline (`agentsrv bench-gate`).
 
@@ -103,7 +109,14 @@ fn main() {
              if speedup_at_8 >= 3.0 { "PASS" } else { "BELOW TARGET" });
 
     // ---- Cluster grid through the same pool --------------------------
-    let cluster_cells = repro::cluster_grid(steps);
+    // cluster_grid folds the placement cells in (so stress sweeps and
+    // smoke runs cover them); here they are split back out — the
+    // placement section below times them once, and this section keeps
+    // measuring the original multi-GPU axes its baseline describes.
+    let cluster_cells: Vec<SweepCell> = repro::cluster_grid(steps)
+        .into_iter()
+        .filter(|c| !c.label().starts_with("placement/"))
+        .collect();
     let (cluster_seq_s, cluster_rows) = sweep_section(
         "cluster grid", &cluster_cells, steps, reps, sequential_cluster);
 
@@ -124,6 +137,12 @@ fn main() {
         "serving grid", &serving_cells,
         (serving_duration * 10.0) as u64, reps, sequential_serving);
 
+    // ---- Placement-policy grid through the same pool ------------------
+    let placement_cells = repro::placement_grid(steps);
+    let (placement_seq_s, placement_rows) = sweep_section(
+        "placement grid", &placement_cells, steps, reps,
+        sequential_cluster);
+
     if let Some(path) = json_path {
         let json = to_json(&ReportInput {
             grid: &grid,
@@ -135,6 +154,8 @@ fn main() {
             corpus: (corpus_cells.len(), corpus_seq_s, &corpus_rows),
             cost: (cost_cells.len(), cost_seq_s, &cost_rows),
             serving: (serving_cells.len(), serving_seq_s, &serving_rows),
+            placement: (placement_cells.len(), placement_seq_s,
+                        &placement_rows),
         }, &path);
         std::fs::write(&path, json).expect("write json report");
         println!("\njson report -> {path}");
@@ -154,7 +175,8 @@ fn sequential_baseline(grid: &[Scenario]) -> Vec<BatchRun> {
 }
 
 /// The pre-batch cluster path: `ClusterSimulator::run` (fresh buffers)
-/// per cell.
+/// per cell. Shared by the cluster and placement sections — both grids
+/// contain only cluster cells.
 fn sequential_cluster(cells: &[SweepCell]) -> Vec<SweepRun> {
     cells.iter().map(|cell| match cell {
         SweepCell::Cluster(cs) => SweepRun {
@@ -162,7 +184,8 @@ fn sequential_cluster(cells: &[SweepCell]) -> Vec<SweepRun> {
             result: CellResult::Cluster(
                 cs.simulator().run().expect("feasible cluster cell")),
         },
-        _ => unreachable!("cluster grid contains only cluster cells"),
+        _ => unreachable!("cluster/placement grids contain only cluster \
+                           cells"),
     }).collect()
 }
 
@@ -316,6 +339,8 @@ struct ReportInput<'a> {
     cost: (usize, f64, &'a [(usize, f64, f64)]),
     /// (cells, sequential seconds, per-worker rows).
     serving: (usize, f64, &'a [(usize, f64, f64)]),
+    /// (cells, sequential seconds, per-worker rows).
+    placement: (usize, f64, &'a [(usize, f64, f64)]),
 }
 
 fn worker_rows(n_cells: usize, rows: &[(usize, f64, f64)]) -> Value {
@@ -353,6 +378,8 @@ fn results_value(input: &ReportInput<'_>) -> Value {
     let (corpus_cells, corpus_seq_s, corpus_rows) = input.corpus;
     let (cost_cells, cost_seq_s, cost_rows) = input.cost;
     let (serving_cells, serving_seq_s, serving_rows) = input.serving;
+    let (placement_cells, placement_seq_s, placement_rows) =
+        input.placement;
     json::obj(vec![
         ("grid", json::obj(vec![
             ("scenarios", json::num(n as f64)),
@@ -377,6 +404,9 @@ fn results_value(input: &ReportInput<'_>) -> Value {
         ("serving",
          sweep_section_value(serving_cells, serving_seq_s,
                              serving_rows)),
+        ("placement",
+         sweep_section_value(placement_cells, placement_seq_s,
+                             placement_rows)),
     ])
 }
 

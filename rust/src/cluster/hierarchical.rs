@@ -19,6 +19,10 @@ pub struct ClusterAllocator {
     node_policies: Vec<AdaptivePolicy>,
     /// Per-GPU sub-registries, rebuilt when placement changes.
     sub_registries: Vec<AgentRegistry>,
+    /// Per-GPU agent ids (registry ids), rebuilt when placement
+    /// changes — the per-step allocate path reads these instead of
+    /// collecting fresh `Placement::agents_on` vectors every step.
+    ids: Vec<Vec<usize>>,
     /// Scratch: per-GPU dense rate/queue/out buffers.
     scratch_rates: Vec<Vec<f64>>,
     scratch_queues: Vec<Vec<f64>>,
@@ -33,6 +37,7 @@ impl ClusterAllocator {
             node_policies: (0..placement.n_gpus)
                 .map(|_| AdaptivePolicy::default()).collect(),
             sub_registries: Vec::new(),
+            ids: Vec::new(),
             scratch_rates: Vec::new(),
             scratch_queues: Vec::new(),
             scratch_out: Vec::new(),
@@ -54,8 +59,21 @@ impl ClusterAllocator {
         self.rebuild(registry);
     }
 
+    /// Replace the whole placement (the repack rebalancer's path) and
+    /// rebuild node state once, rather than once per moved agent.
+    pub fn set_placement(&mut self, registry: &AgentRegistry,
+                         placement: Placement) {
+        self.placement = placement;
+        self.rebuild(registry);
+    }
+
     fn rebuild(&mut self, registry: &AgentRegistry) {
+        // A replacement placement may span a different device count
+        // (set_placement is public): keep one node policy per GPU.
+        self.node_policies.resize_with(self.placement.n_gpus,
+                                       AdaptivePolicy::default);
         self.sub_registries.clear();
+        self.ids.clear();
         self.scratch_rates.clear();
         self.scratch_queues.clear();
         self.scratch_out.clear();
@@ -69,6 +87,7 @@ impl ClusterAllocator {
                 // AgentRegistry requires >= 1 agent; store a marker via
                 // Option-like empty scratch vectors.
                 self.sub_registries.push(AgentRegistry::paper());
+                self.ids.push(Vec::new());
                 self.scratch_rates.push(Vec::new());
                 self.scratch_queues.push(Vec::new());
                 self.scratch_out.push(Vec::new());
@@ -79,6 +98,7 @@ impl ClusterAllocator {
             self.scratch_rates.push(vec![0.0; ids.len()]);
             self.scratch_queues.push(vec![0.0; ids.len()]);
             self.scratch_out.push(vec![0.0; ids.len()]);
+            self.ids.push(ids);
         }
     }
 
@@ -92,10 +112,10 @@ impl ClusterAllocator {
         debug_assert_eq!(capacities.len(), self.placement.n_gpus);
         out.fill(0.0);
         for gpu in 0..self.placement.n_gpus {
-            let ids = self.placement.agents_on(gpu);
-            if ids.is_empty() {
+            if self.ids[gpu].is_empty() {
                 continue;
             }
+            let ids = &self.ids[gpu];
             let rates = &mut self.scratch_rates[gpu];
             let queues = &mut self.scratch_queues[gpu];
             for (slot, agent) in ids.iter().enumerate() {
@@ -122,12 +142,12 @@ impl ClusterAllocator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::first_fit_decreasing;
+    use crate::cluster::headroom_decreasing;
 
     #[test]
     fn per_gpu_capacity_respected() {
         let reg = AgentRegistry::paper();
-        let placement = first_fit_decreasing(&reg, 2, 0.6).unwrap();
+        let placement = headroom_decreasing(&reg, 2, 0.6).unwrap();
         let mut alloc = ClusterAllocator::new(&reg, placement);
         let mut out = vec![0.0; 4];
         alloc.allocate(&reg, &[80.0, 40.0, 45.0, 25.0], &[0.0; 4], 0,
@@ -146,8 +166,8 @@ mod tests {
         // With 2 GPUs each agent pair shares a whole device, so shares
         // are larger than the single-GPU run's.
         let reg = AgentRegistry::paper();
-        let single = first_fit_decreasing(&reg, 1, 1.0).unwrap();
-        let dual = first_fit_decreasing(&reg, 2, 0.6).unwrap();
+        let single = headroom_decreasing(&reg, 1, 1.0).unwrap();
+        let dual = headroom_decreasing(&reg, 2, 0.6).unwrap();
         let rates = [80.0, 40.0, 45.0, 25.0];
         let mut out1 = vec![0.0; 4];
         let mut out2 = vec![0.0; 4];
@@ -163,7 +183,7 @@ mod tests {
     #[test]
     fn migration_moves_allocation_mass() {
         let reg = AgentRegistry::paper();
-        let placement = first_fit_decreasing(&reg, 2, 1.0).unwrap();
+        let placement = headroom_decreasing(&reg, 2, 1.0).unwrap();
         let mut alloc = ClusterAllocator::new(&reg, placement);
         let rates = [80.0, 40.0, 45.0, 25.0];
         let mut out = vec![0.0; 4];
@@ -175,5 +195,24 @@ mod tests {
         alloc.allocate(&reg, &rates, &[0.0; 4], 1, &[1.0, 1.0], &mut out);
         assert!(out[0] > 0.0);
         assert_ne!(out[0], coord_before);
+    }
+
+    #[test]
+    fn set_placement_replaces_the_whole_assignment() {
+        let reg = AgentRegistry::paper();
+        let mut alloc = ClusterAllocator::new(
+            &reg, headroom_decreasing(&reg, 2, 1.0).unwrap());
+        // Everyone onto GPU 1 in one rebuild.
+        let all_on_one = Placement { gpu_of: vec![1; 4], n_gpus: 2 };
+        alloc.set_placement(&reg, all_on_one.clone());
+        assert_eq!(alloc.placement(), &all_on_one);
+        let mut out = vec![0.0; 4];
+        alloc.allocate(&reg, &[80.0, 40.0, 45.0, 25.0], &[0.0; 4], 0,
+                       &[1.0, 1.0], &mut out);
+        // GPU 1 holds the full population within its capacity; GPU 0
+        // serves nobody.
+        let total: f64 = out.iter().sum();
+        assert!(total <= 1.0 + 1e-9, "{out:?}");
+        assert!(out.iter().all(|g| *g > 0.0), "{out:?}");
     }
 }

@@ -3,28 +3,41 @@
 //! modeling, and hierarchical allocation strategies across cluster and
 //! node levels".
 //!
-//! Two levels:
+//! Four pluggable layers, outermost first:
 //!
-//! * **Cluster level** ([`first_fit_decreasing`]): agents are packed
-//!   onto GPUs by first-fit-decreasing over their minimum fractions; a
-//!   rebalancer
-//!   migrates an agent when inter-GPU demand imbalance exceeds a
-//!   threshold, paying a model-size-dependent transfer penalty during
-//!   which the agent cannot serve (the "inter-GPU communication
-//!   overhead" model).
-//! * **Node level** ([`ClusterAllocator`]): the paper's Algorithm 1 runs
-//!   independently *within* each GPU over the agents placed there.
+//! ```text
+//!   PlacementStrategy      agents -> GPUs at construction time
+//!        |                 (headroom- / best-fit-decreasing,
+//!        v                  priority-spread, demand-aware, in-order)
+//!   Placement              the assignment itself (gpu_of, migrate)
+//!        |
+//!        v
+//!   ClusterAllocator       the paper's Algorithm 1 run independently
+//!        |                 *within* each GPU over the agents placed
+//!        v                 there, against that device's own capacity
+//!   Rebalancer             runtime reaction to demand imbalance:
+//!                          static / hottest-agent-off-hottest-GPU /
+//!                          re-pack-from-scratch — every migration pays
+//!                          a model-size-dependent transfer stall (the
+//!                          "inter-GPU communication overhead" model)
+//! ```
 //!
 //! [`ClusterSimulator`] extends the §IV.B discrete-time methodology to M
-//! GPUs so placement/migration policies can be evaluated with the same
-//! metrics as the single-GPU experiments (bench `robustness` prints the
-//! comparison; `cluster_sim.rs` integration tests assert the invariants).
+//! GPUs so placement/rebalancing policies can be evaluated with the same
+//! metrics as the single-GPU experiments: `repro::cluster_grid` sweeps
+//! strategy × rebalancer (plus synthetic large-N registries) as grid
+//! axes, `agentsrv repro --exp placement` prints the head-to-head
+//! comparison, and the property suite asserts parallel sweep runs
+//! bit-identical to sequential ones.
 
 mod hierarchical;
 mod placement;
 mod sim;
 
 pub use hierarchical::ClusterAllocator;
-pub use placement::{first_fit_decreasing, pack_decreasing, Placement};
+#[allow(deprecated)]
+pub use placement::first_fit_decreasing;
+pub use placement::{headroom_decreasing, pack_decreasing, Placement,
+                    PlacementScratch, PlacementStrategy};
 pub use sim::{ClusterArena, ClusterResult, ClusterSimulator,
-              MigrationModel};
+              MigrationModel, Rebalancer};

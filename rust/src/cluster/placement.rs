@@ -1,6 +1,15 @@
-//! Cluster-level placement: agents → GPUs.
+//! Cluster-level placement: agents → GPUs, under a pluggable strategy.
+//!
+//! [`PlacementStrategy`] is the placement counterpart of the allocator's
+//! `PolicyKind`: an enum-dispatched family of packers that all solve the
+//! same problem — assign every agent to one device such that the sum of
+//! minimum fractions on each device fits its capacity — but optimize for
+//! different things. [`PlacementStrategy::place_into`] is the
+//! scratch-reusing core (no per-agent allocations, no per-agent sorts);
+//! [`PlacementStrategy::place`] is the fresh-buffer convenience the
+//! constructors use.
 
-use crate::agents::AgentRegistry;
+use crate::agents::{AgentRegistry, Priority};
 use crate::error::{Error, Result};
 
 /// An assignment of agents to GPUs.
@@ -14,6 +23,10 @@ pub struct Placement {
 
 impl Placement {
     /// Agents placed on one GPU, in agent-id order.
+    ///
+    /// Allocates a fresh `Vec` — fine at construction/migration time, but
+    /// per-step consumers (the cluster hot loop) should iterate `gpu_of`
+    /// directly or cache the lists, as `ClusterAllocator` does.
     pub fn agents_on(&self, gpu: usize) -> Vec<usize> {
         self.gpu_of.iter().enumerate()
             .filter(|(_, g)| **g == gpu)
@@ -30,74 +43,261 @@ impl Placement {
         load
     }
 
-    /// Move one agent to another GPU (used by the rebalancer).
+    /// Move one agent to another GPU (used by the rebalancers). Panics
+    /// when `to_gpu` is not a device of this cluster.
     pub fn migrate(&mut self, agent: usize, to_gpu: usize) {
-        assert!(to_gpu < self.n_gpus);
+        assert!(to_gpu < self.n_gpus,
+                "migrate target GPU {to_gpu} out of bounds \
+                 ({} GPUs)", self.n_gpus);
         self.gpu_of[agent] = to_gpu;
     }
 }
 
-/// Balanced (worst-fit) decreasing bin packing over minimum GPU
-/// fractions: sort agents by `R_i` descending, place each on the
-/// *least-loaded* GPU where its minimum still fits under
-/// `capacity_per_gpu` — so a multi-GPU cluster spreads agents instead of
-/// piling them onto device 0.
+/// Reusable buffers for [`PlacementStrategy::place_into`]: the agent
+/// ordering plus per-GPU min-fraction and expected-demand loads. One
+/// scratch lives in each `ClusterArena`, so mid-run re-packs allocate
+/// nothing once warmed up.
+#[derive(Debug, Clone, Default)]
+pub struct PlacementScratch {
+    order: Vec<usize>,
+    min_load: Vec<f64>,
+    demand_load: Vec<f64>,
+}
+
+impl PlacementScratch {
+    /// Empty scratch; buffers grow on first use and are retained after.
+    pub fn new() -> Self {
+        PlacementScratch::default()
+    }
+}
+
+/// How agents are packed onto devices.
 ///
-/// Errors when some agent fits nowhere (the cluster is genuinely
-/// undersized).
-pub fn first_fit_decreasing(registry: &AgentRegistry, n_gpus: usize,
-                            capacity_per_gpu: f64) -> Result<Placement> {
+/// Every strategy is deterministic: agent orderings are stable sorts
+/// (ties keep agent-id order) and device picks break score ties toward
+/// the lowest GPU index. Feasibility is always judged on `min_gpu` sums
+/// against per-device capacity; strategies differ only in *which*
+/// feasible packing they prefer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementStrategy {
+    /// Balanced (worst-fit) decreasing over minimum fractions: sort
+    /// agents by `R_i` descending, place each on the device with the
+    /// most remaining headroom. This is the packer the repo historically
+    /// (and wrongly) called `first_fit_decreasing` — it spreads load
+    /// instead of consolidating it.
+    #[default]
+    HeadroomDecreasing,
+    /// Classic best-fit decreasing: sort by `R_i` descending, place each
+    /// on the device with the *least* remaining headroom that still
+    /// fits — consolidates agents onto few devices, leaving whole
+    /// devices empty for scale-to-zero or spares.
+    BestFitDecreasing,
+    /// Priority spread: non-High agents are consolidated by best-fit
+    /// decreasing first, then High-priority agents are placed (largest
+    /// minimum first) on whatever device has the most headroom left —
+    /// keeping them on the least-contended device.
+    PrioritySpread,
+    /// Demand-aware: order and balance by each agent's *expected GPU
+    /// load* `rate_i / base_tput_i` rather than its minimum fraction,
+    /// picking the device with the smallest resulting load-to-capacity
+    /// ratio that still fits the minimums. With no expected rates
+    /// supplied it falls back to `min_gpu` as the load proxy.
+    DemandAware,
+    /// In-order first-fit baseline: agents in registry order, each on
+    /// the lowest-index device that fits — the naive packing the
+    /// decreasing strategies are measured against.
+    InOrder,
+}
+
+impl PlacementStrategy {
+    /// Every built-in strategy, in a stable order (grid axes iterate
+    /// this).
+    pub fn all() -> Vec<PlacementStrategy> {
+        vec![
+            PlacementStrategy::HeadroomDecreasing,
+            PlacementStrategy::BestFitDecreasing,
+            PlacementStrategy::PrioritySpread,
+            PlacementStrategy::DemandAware,
+            PlacementStrategy::InOrder,
+        ]
+    }
+
+    /// Short stable identifier used in sweep-cell labels and CSVs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementStrategy::HeadroomDecreasing => "headroom",
+            PlacementStrategy::BestFitDecreasing => "bestfit",
+            PlacementStrategy::PrioritySpread => "spread",
+            PlacementStrategy::DemandAware => "demand",
+            PlacementStrategy::InOrder => "inorder",
+        }
+    }
+
+    /// Solve a placement with fresh buffers. `expected_rates` feeds
+    /// [`PlacementStrategy::DemandAware`] (one rate per agent, in id
+    /// order); the other strategies ignore it, and an empty slice makes
+    /// demand-aware fall back to packing by `min_gpu`.
+    ///
+    /// Errors when the capacity list is empty or some agent fits
+    /// nowhere (the cluster is genuinely undersized).
+    pub fn place(&self, registry: &AgentRegistry, capacities: &[f64],
+                 expected_rates: &[f64]) -> Result<Placement> {
+        let mut scratch = PlacementScratch::new();
+        let mut gpu_of = Vec::new();
+        self.place_into(registry, capacities, expected_rates,
+                        &mut scratch, &mut gpu_of)?;
+        Ok(Placement { gpu_of, n_gpus: capacities.len() })
+    }
+
+    /// [`PlacementStrategy::place`] through caller-owned buffers: the
+    /// ordering and per-device load rows live in `scratch` and the
+    /// assignment is written into `gpu_of`, so repeated solves (the
+    /// repack rebalancer, placement sweeps) allocate nothing once the
+    /// buffers are warm.
+    pub fn place_into(&self, registry: &AgentRegistry,
+                      capacities: &[f64], expected_rates: &[f64],
+                      scratch: &mut PlacementScratch,
+                      gpu_of: &mut Vec<usize>) -> Result<()> {
+        if capacities.is_empty() {
+            return Err(Error::Config("cluster needs >= 1 GPU".into()));
+        }
+        let n = registry.len();
+        let n_gpus = capacities.len();
+        let mins = registry.min_gpu();
+        let base_tput = registry.base_tput();
+        // Expected per-agent GPU load for the demand-aware axes;
+        // min_gpu is the proxy when no rates are supplied.
+        let demand_of = |i: usize| -> f64 {
+            if expected_rates.len() == n {
+                expected_rates[i] / base_tput[i]
+            } else {
+                mins[i]
+            }
+        };
+
+        let PlacementScratch { order, min_load, demand_load } = scratch;
+        order.clear();
+        order.extend(0..n);
+        match self {
+            // Registry order is the whole point of the baseline.
+            PlacementStrategy::InOrder => {}
+            PlacementStrategy::HeadroomDecreasing
+            | PlacementStrategy::BestFitDecreasing => {
+                order.sort_by(|a, b| mins[*b].partial_cmp(&mins[*a])
+                              .expect("min_gpu is finite"));
+            }
+            PlacementStrategy::PrioritySpread => {
+                // Non-High agents first (consolidated by best fit),
+                // High agents last (spread onto whatever stayed
+                // least contended); decreasing minimums within each
+                // group.
+                order.sort_by(|a, b| {
+                    let ha =
+                        registry.profile(*a).priority == Priority::High;
+                    let hb =
+                        registry.profile(*b).priority == Priority::High;
+                    ha.cmp(&hb).then(
+                        mins[*b].partial_cmp(&mins[*a])
+                            .expect("min_gpu is finite"))
+                });
+            }
+            PlacementStrategy::DemandAware => {
+                order.sort_by(|a, b| {
+                    demand_of(*b).partial_cmp(&demand_of(*a))
+                        .expect("expected load is finite")
+                });
+            }
+        }
+
+        min_load.clear();
+        min_load.resize(n_gpus, 0.0);
+        demand_load.clear();
+        demand_load.resize(n_gpus, 0.0);
+        gpu_of.clear();
+        gpu_of.resize(n, usize::MAX);
+
+        for &agent in order.iter() {
+            let is_high =
+                registry.profile(agent).priority == Priority::High;
+            let d_agent = demand_of(agent);
+            // Linear scan instead of a per-agent sort: strict `>` keeps
+            // the first (lowest-index) device among score ties.
+            let mut chosen: Option<usize> = None;
+            let mut best = f64::NEG_INFINITY;
+            for g in 0..n_gpus {
+                if min_load[g] + mins[agent] > capacities[g] + 1e-9 {
+                    continue;
+                }
+                let headroom = capacities[g] - min_load[g];
+                let score = match self {
+                    PlacementStrategy::HeadroomDecreasing => headroom,
+                    PlacementStrategy::BestFitDecreasing => -headroom,
+                    // Constant score: the first fitting device wins.
+                    PlacementStrategy::InOrder => 0.0,
+                    PlacementStrategy::PrioritySpread => {
+                        if is_high { headroom } else { -headroom }
+                    }
+                    PlacementStrategy::DemandAware => {
+                        -((demand_load[g] + d_agent) / capacities[g])
+                    }
+                };
+                if chosen.is_none() || score > best {
+                    chosen = Some(g);
+                    best = score;
+                }
+            }
+            let Some(g) = chosen else {
+                return Err(Error::Config(format!(
+                    "agent '{}' (min {:.2}) fits on no GPU \
+                     (loads: {min_load:?}, capacities: {capacities:?})",
+                    registry.profile(agent).name, mins[agent])));
+            };
+            min_load[g] += mins[agent];
+            demand_load[g] += d_agent;
+            gpu_of[agent] = g;
+        }
+        Ok(())
+    }
+}
+
+/// Balanced (worst-fit) decreasing bin packing over minimum GPU
+/// fractions across `n_gpus` uniform devices — the construction-time
+/// default ([`PlacementStrategy::HeadroomDecreasing`] as a free
+/// function).
+///
+/// Errors when `n_gpus` is zero or some agent fits nowhere (the cluster
+/// is genuinely undersized).
+pub fn headroom_decreasing(registry: &AgentRegistry, n_gpus: usize,
+                           capacity_per_gpu: f64) -> Result<Placement> {
     if n_gpus == 0 {
         return Err(Error::Config("cluster needs >= 1 GPU".into()));
     }
     pack_decreasing(registry, &vec![capacity_per_gpu; n_gpus])
 }
 
-/// Per-GPU-capacity generalization of [`first_fit_decreasing`]
-/// (heterogeneous devices, §VI): sort agents by `R_i` descending, place
-/// each on the GPU with the most remaining *headroom*
-/// (`capacity - load`) where its minimum still fits. With uniform
-/// capacities the headroom order equals the load order, so this reduces
-/// to [`first_fit_decreasing`] exactly (asserted by the tests).
+/// Deprecated alias for [`headroom_decreasing`], kept for source
+/// compatibility: the packer this name always pointed at is worst-fit
+/// (headroom-)decreasing — it places each agent on the *most*-headroom
+/// device — not first-fit-decreasing.
+#[deprecated(note = "this packer is worst-fit (headroom-)decreasing, \
+                     not FFD; use `headroom_decreasing` or \
+                     `PlacementStrategy::HeadroomDecreasing`")]
+pub fn first_fit_decreasing(registry: &AgentRegistry, n_gpus: usize,
+                            capacity_per_gpu: f64) -> Result<Placement> {
+    headroom_decreasing(registry, n_gpus, capacity_per_gpu)
+}
+
+/// Per-GPU-capacity form of [`headroom_decreasing`] (heterogeneous
+/// devices, §VI): sort agents by `R_i` descending, place each on the
+/// GPU with the most remaining *headroom* (`capacity - load`) where its
+/// minimum still fits. With uniform capacities the headroom order
+/// equals the load order, so this reduces to [`headroom_decreasing`]
+/// exactly (asserted by the tests).
 ///
 /// Errors when the capacity list is empty or some agent fits nowhere.
 pub fn pack_decreasing(registry: &AgentRegistry, capacities: &[f64])
                        -> Result<Placement> {
-    if capacities.is_empty() {
-        return Err(Error::Config("cluster needs >= 1 GPU".into()));
-    }
-    let n_gpus = capacities.len();
-    let mins = registry.min_gpu();
-    let mut order: Vec<usize> = (0..registry.len()).collect();
-    order.sort_by(|a, b| mins[*b].partial_cmp(&mins[*a])
-                  .expect("min_gpu is finite"));
-
-    let mut load = vec![0.0f64; n_gpus];
-    let mut gpu_of = vec![usize::MAX; registry.len()];
-    for agent in order {
-        let mut placed = false;
-        let mut gpus: Vec<usize> = (0..n_gpus).collect();
-        gpus.sort_by(|a, b| {
-            let ha = capacities[*a] - load[*a];
-            let hb = capacities[*b] - load[*b];
-            hb.partial_cmp(&ha).expect("finite headroom")
-        });
-        for gpu in gpus {
-            if load[gpu] + mins[agent] <= capacities[gpu] + 1e-9 {
-                load[gpu] += mins[agent];
-                gpu_of[agent] = gpu;
-                placed = true;
-                break;
-            }
-        }
-        if !placed {
-            return Err(Error::Config(format!(
-                "agent '{}' (min {:.2}) fits on no GPU \
-                 (loads: {load:?}, capacities: {capacities:?})",
-                registry.profile(agent).name, mins[agent])));
-        }
-    }
-    Ok(Placement { gpu_of, n_gpus })
+    PlacementStrategy::HeadroomDecreasing.place(registry, capacities, &[])
 }
 
 #[cfg(test)]
@@ -105,12 +305,24 @@ mod tests {
     use super::*;
     use crate::agents::{AgentProfile, AgentRegistry};
 
+    fn uniform_agents(mins: &[f64]) -> AgentRegistry {
+        let agents: Vec<AgentProfile> = mins.iter().enumerate()
+            .map(|(i, m)| AgentProfile {
+                name: format!("a{i}"),
+                model_mb: 100,
+                base_tput: 10.0,
+                min_gpu: *m,
+                priority: crate::agents::Priority::Medium,
+            }).collect();
+        AgentRegistry::new(agents).unwrap()
+    }
+
     #[test]
     fn paper_agents_pack_onto_two_gpus() {
         let reg = AgentRegistry::paper();
         // Σ mins = 1.0; two GPUs of capacity 0.6 each must fit
         // (0.35+0.25 | 0.30+0.10).
-        let p = first_fit_decreasing(&reg, 2, 0.6).unwrap();
+        let p = headroom_decreasing(&reg, 2, 0.6).unwrap();
         let load = p.min_load(&reg);
         assert!(load.iter().all(|l| *l <= 0.6 + 1e-9), "{load:?}");
         assert_eq!(p.gpu_of.len(), 4);
@@ -121,37 +333,48 @@ mod tests {
     #[test]
     fn one_big_gpu_holds_everything() {
         let reg = AgentRegistry::paper();
-        let p = first_fit_decreasing(&reg, 1, 1.0).unwrap();
+        let p = headroom_decreasing(&reg, 1, 1.0).unwrap();
         assert_eq!(p.agents_on(0).len(), 4);
     }
 
     #[test]
     fn undersized_cluster_errors() {
         let reg = AgentRegistry::paper();
-        assert!(first_fit_decreasing(&reg, 2, 0.3).is_err());
-        assert!(first_fit_decreasing(&reg, 0, 1.0).is_err());
+        assert!(headroom_decreasing(&reg, 2, 0.3).is_err());
+        assert!(headroom_decreasing(&reg, 0, 1.0).is_err());
+        // Every strategy surfaces the same construction-time error.
+        for strategy in PlacementStrategy::all() {
+            assert!(strategy.place(&reg, &[0.3, 0.3], &[]).is_err(),
+                    "{}", strategy.name());
+            assert!(strategy.place(&reg, &[], &[]).is_err(),
+                    "{}", strategy.name());
+        }
     }
 
     #[test]
-    fn ffd_beats_naive_order_on_adversarial_mins() {
-        // Mins {0.5, 0.5, 0.25, 0.25, 0.25, 0.25}: FFD packs into 2 GPUs
-        // of 1.0; first-fit in given order would too here, but the
-        // decreasing sort is what guarantees the 11/9 OPT bound — assert
-        // the packing is tight.
-        let agents: Vec<AgentProfile> =
-            [0.25, 0.5, 0.25, 0.5, 0.25, 0.25].iter().enumerate()
-            .map(|(i, m)| AgentProfile {
-                name: format!("a{i}"),
-                model_mb: 100,
-                base_tput: 10.0,
-                min_gpu: *m,
-                priority: crate::agents::Priority::Medium,
-            }).collect();
-        let reg = AgentRegistry::new(agents).unwrap();
-        let p = first_fit_decreasing(&reg, 2, 1.0).unwrap();
+    fn headroom_decreasing_balances_adversarial_mins() {
+        // Mins {0.5, 0.5, 0.25, 0.25, 0.25, 0.25} on 2 GPUs of 1.0.
+        // This packer is *worst-fit* decreasing (most-headroom device
+        // first) — not FFD, so the classic 11/9 OPT bound does not
+        // apply — but the decreasing sort still packs this instance
+        // tight: both devices land exactly full.
+        let reg = uniform_agents(&[0.25, 0.5, 0.25, 0.5, 0.25, 0.25]);
+        let p = headroom_decreasing(&reg, 2, 1.0).unwrap();
         let load = p.min_load(&reg);
         assert!((load[0] - 1.0).abs() < 1e-9
                 && (load[1] - 1.0).abs() < 1e-9, "{load:?}");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_ffd_alias_matches_headroom_decreasing() {
+        let reg = AgentRegistry::paper();
+        for (n, cap) in [(1usize, 1.0), (2, 0.6), (2, 1.0)] {
+            assert_eq!(first_fit_decreasing(&reg, n, cap).unwrap(),
+                       headroom_decreasing(&reg, n, cap).unwrap(),
+                       "{n} gpus @ {cap}");
+        }
+        assert!(first_fit_decreasing(&reg, 0, 1.0).is_err());
     }
 
     #[test]
@@ -172,21 +395,131 @@ mod tests {
     }
 
     #[test]
-    fn uniform_capacities_reduce_to_first_fit_decreasing() {
+    fn uniform_capacities_reduce_to_headroom_decreasing() {
         let reg = AgentRegistry::paper();
         for (n, cap) in [(2usize, 0.6), (2, 1.0), (4, 1.0)] {
             let uniform = pack_decreasing(&reg, &vec![cap; n]).unwrap();
-            let ffd = first_fit_decreasing(&reg, n, cap).unwrap();
-            assert_eq!(uniform, ffd, "{n} gpus @ {cap}");
+            let hd = headroom_decreasing(&reg, n, cap).unwrap();
+            assert_eq!(uniform, hd, "{n} gpus @ {cap}");
         }
+    }
+
+    #[test]
+    fn equal_headroom_ties_break_to_lowest_gpu_index() {
+        // Four identical agents on three identical devices: the packer
+        // must be deterministic — agent 0 to device 0, agent 1 to
+        // device 1 (device 0 now has less headroom), agent 2 to device
+        // 2, and agent 3 back to device 0 (three-way tie again).
+        let reg = uniform_agents(&[0.25, 0.25, 0.25, 0.25]);
+        let p = pack_decreasing(&reg, &[1.0, 1.0, 1.0]).unwrap();
+        assert_eq!(p.gpu_of, vec![0, 1, 2, 0]);
+        // Best-fit ties the same way — and then sticks to device 0,
+        // since a part-filled bin always beats an empty one.
+        let b = PlacementStrategy::BestFitDecreasing
+            .place(&reg, &[1.0, 1.0, 1.0], &[]).unwrap();
+        assert_eq!(b.gpu_of, vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn in_order_is_naive_first_fit() {
+        let reg = AgentRegistry::paper();
+        // Mins .10/.30/.25/.35 in registry order all fit device 0.
+        let p = PlacementStrategy::InOrder
+            .place(&reg, &[1.0, 1.0], &[]).unwrap();
+        assert_eq!(p.gpu_of, vec![0, 0, 0, 0]);
+        // With 0.6 devices the naive order spills as it goes.
+        let p = PlacementStrategy::InOrder
+            .place(&reg, &[0.6, 0.6], &[]).unwrap();
+        assert_eq!(p.gpu_of, vec![0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn priority_spread_parks_high_agents_on_least_contended_device() {
+        // Paper registry on mixed devices: the Medium pair is
+        // consolidated by best fit, then the two High agents take the
+        // emptiest devices.
+        let reg = AgentRegistry::paper();
+        let p = PlacementStrategy::PrioritySpread
+            .place(&reg, &[1.0, 0.75, 0.5, 0.25], &[]).unwrap();
+        assert_eq!(p.gpu_of[1], 2, "nlp consolidated on the 0.5 device");
+        assert_eq!(p.gpu_of[2], 3,
+                   "vision consolidated on the 0.25 device");
+        assert_eq!(p.gpu_of[3], 0,
+                   "reasoning (High) takes the emptiest device");
+        assert_eq!(p.gpu_of[0], 1,
+                   "coordinator (High) takes the next-emptiest");
+    }
+
+    #[test]
+    fn demand_aware_balances_expected_load_not_minimums() {
+        // Agent 0 has a tiny minimum but dominates the traffic; agent 1
+        // has the largest minimum and almost none. Min-based packing
+        // pairs them; demand-aware isolates the hot agent.
+        let reg = uniform_agents(&[0.1, 0.4, 0.2, 0.2]);
+        let rates = [20.0, 1.0, 1.0, 1.0];
+        let p = PlacementStrategy::DemandAware
+            .place(&reg, &[1.0, 1.0], &rates).unwrap();
+        assert_eq!(p.gpu_of, vec![0, 1, 1, 1],
+                   "hot agent isolated on its own device");
+        // Without rates it degrades to the min-based packing, which on
+        // uniform capacities equals headroom-decreasing exactly.
+        let fallback = PlacementStrategy::DemandAware
+            .place(&reg, &[1.0, 1.0], &[]).unwrap();
+        assert_eq!(fallback, pack_decreasing(&reg, &[1.0, 1.0]).unwrap());
+    }
+
+    #[test]
+    fn place_into_reuses_scratch_bit_identically() {
+        // One scratch replayed across strategies, registries, and
+        // cluster shapes must leave no state behind.
+        let mut scratch = PlacementScratch::new();
+        let mut gpu_of = Vec::new();
+        let paper = AgentRegistry::paper();
+        let wide = uniform_agents(&[0.2, 0.1, 0.3, 0.2, 0.1]);
+        for _ in 0..2 {
+            for strategy in PlacementStrategy::all() {
+                for (reg, caps) in [
+                    (&paper, vec![1.0, 0.75, 0.5, 0.25]),
+                    (&paper, vec![0.6, 0.6]),
+                    (&wide, vec![1.0, 0.5]),
+                ] {
+                    let fresh =
+                        strategy.place(reg, &caps, &[]).unwrap();
+                    strategy.place_into(reg, &caps, &[], &mut scratch,
+                                        &mut gpu_of).unwrap();
+                    assert_eq!(gpu_of, fresh.gpu_of,
+                               "{} on {caps:?}", strategy.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strategy_names_are_unique_and_stable() {
+        let mut names: Vec<&str> = PlacementStrategy::all().iter()
+            .map(PlacementStrategy::name).collect();
+        assert_eq!(names.len(), 5);
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 5, "duplicate strategy names");
+        assert_eq!(PlacementStrategy::default(),
+                   PlacementStrategy::HeadroomDecreasing);
     }
 
     #[test]
     fn migrate_updates_assignment() {
         let reg = AgentRegistry::paper();
-        let mut p = first_fit_decreasing(&reg, 2, 1.0).unwrap();
+        let mut p = headroom_decreasing(&reg, 2, 1.0).unwrap();
         let from = p.gpu_of[0];
         p.migrate(0, 1 - from);
         assert_eq!(p.gpu_of[0], 1 - from);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn migrate_rejects_out_of_bounds_target() {
+        let reg = AgentRegistry::paper();
+        let mut p = headroom_decreasing(&reg, 2, 1.0).unwrap();
+        p.migrate(0, 2);
     }
 }

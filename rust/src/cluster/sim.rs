@@ -1,7 +1,10 @@
-//! Cluster-level discrete-time simulation (multi-GPU §VI extension).
+//! Cluster-level discrete-time simulation (multi-GPU §VI extension):
+//! pluggable [`PlacementStrategy`] at construction, pluggable
+//! [`Rebalancer`] in the hot loop.
 
 use crate::agents::AgentRegistry;
-use crate::cluster::{pack_decreasing, ClusterAllocator, Placement};
+use crate::cluster::{ClusterAllocator, Placement, PlacementScratch,
+                     PlacementStrategy};
 use crate::error::Result;
 use crate::metrics::Streaming;
 use crate::serverless::{EconInstruments, EconomicsReport};
@@ -34,15 +37,71 @@ impl Default for MigrationModel {
     }
 }
 
+/// How the cluster reacts to inter-GPU demand imbalance at runtime —
+/// the rebalancing layer the hot loop dispatches on, extracted from
+/// what used to be a hardwired migration block.
+///
+/// Both active variants share one trigger: the max/min per-GPU demand
+/// ratio exceeding the model's `imbalance_threshold`, subject to its
+/// cooldown. They differ in *what moves*.
+#[derive(Debug, Clone)]
+pub enum Rebalancer {
+    /// Never migrate: the construction-time placement is final.
+    Static,
+    /// The original §VI heuristic: move the smallest-minimum agent off
+    /// the hottest GPU onto the coolest one that can hold it, paying
+    /// that agent's transfer stall. Ties on the minimum break toward
+    /// the lowest agent id.
+    HottestAgent(MigrationModel),
+    /// Re-run the construction [`PlacementStrategy`] from scratch over
+    /// the *live observed* arrival rates and migrate every agent whose
+    /// device changed, each paying its own transfer stall. Only a
+    /// demand-aware strategy can produce a different packing mid-run
+    /// (the min-based strategies re-derive their construction placement
+    /// and move nobody), which is exactly the contrast the placement
+    /// grid sweeps.
+    Repack(MigrationModel),
+}
+
+impl Rebalancer {
+    /// Short stable identifier used in sweep-cell labels and CSVs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Rebalancer::Static => "static",
+            Rebalancer::HottestAgent(_) => "hottest",
+            Rebalancer::Repack(_) => "repack",
+        }
+    }
+
+    /// One rebalancer of each kind (default migration model), in a
+    /// stable order — the grid axis `repro::placement_grid` sweeps.
+    pub fn all() -> Vec<Rebalancer> {
+        vec![
+            Rebalancer::Static,
+            Rebalancer::HottestAgent(MigrationModel::default()),
+            Rebalancer::Repack(MigrationModel::default()),
+        ]
+    }
+
+    /// The migration model of an active rebalancer.
+    fn model(&self) -> Option<&MigrationModel> {
+        match self {
+            Rebalancer::Static => None,
+            Rebalancer::HottestAgent(m) | Rebalancer::Repack(m) => Some(m),
+        }
+    }
+}
+
 /// Dense per-step buffers reused across cluster simulation runs.
 ///
 /// The cluster loop used to allocate ~12 `Vec`s per run (three of them per
 /// *step*, inside the migration and utilization blocks); a sweep worker
 /// now constructs one `ClusterArena` and replays every cluster cell
 /// through [`ClusterSimulator::run_with_arena`] with the buffer set —
-/// per-agent rows, per-GPU rows, and the Streaming accumulators —
-/// `clear()`-ed and re-sized instead of re-allocated (capacity is
-/// retained across same-shaped runs).
+/// per-agent rows, per-GPU rows, the Streaming accumulators, and the
+/// repack rebalancer's placement scratch — `clear()`-ed and re-sized
+/// instead of re-allocated (capacity is retained across same-shaped
+/// runs).
 #[derive(Debug, Clone, Default)]
 pub struct ClusterArena {
     // Per-agent rows.
@@ -62,6 +121,9 @@ pub struct ClusterArena {
     latency: Vec<Streaming>,
     throughput: Vec<Streaming>,
     gpu_util: Vec<Streaming>,
+    // Mid-run placement re-solve buffers (the repack rebalancer).
+    placement_scratch: PlacementScratch,
+    repack_gpu_of: Vec<usize>,
 }
 
 impl ClusterArena {
@@ -71,6 +133,8 @@ impl ClusterArena {
     }
 
     /// Size every buffer for `n_agents` × `n_gpus` and reset its contents.
+    /// (The placement scratch needs no reset: every re-solve overwrites
+    /// it fully.)
     fn reset(&mut self, n_agents: usize, n_gpus: usize) {
         for buf in [
             &mut self.queues,
@@ -135,22 +199,26 @@ impl ClusterResult {
     }
 }
 
-/// Multi-GPU simulator: headroom-decreasing placement, per-GPU
-/// Algorithm 1 (each GPU with its own capacity), optional
-/// imbalance-triggered migration with transfer stalls.
+/// Multi-GPU simulator: a [`PlacementStrategy`] solved at construction,
+/// per-GPU Algorithm 1 (each GPU with its own capacity), and a
+/// [`Rebalancer`] reacting to demand imbalance with transfer stalls.
 #[derive(Debug, Clone)]
 pub struct ClusterSimulator {
     cfg: SimConfig,
     registry: AgentRegistry,
     /// One capacity per GPU (uniform clusters repeat one value).
     capacities: Vec<f64>,
-    migration: Option<MigrationModel>,
+    strategy: PlacementStrategy,
+    rebalancer: Rebalancer,
     placement: Placement,
 }
 
 impl ClusterSimulator {
     /// Build a uniform cluster (`n_gpus` devices of `capacity_per_gpu`
-    /// each); errors if the agents cannot be placed.
+    /// each) under the default headroom-decreasing placement; errors if
+    /// the agents cannot be placed. `migration` maps onto the
+    /// rebalancing layer: `None` is [`Rebalancer::Static`], `Some`
+    /// the original [`Rebalancer::HottestAgent`] heuristic.
     pub fn new(cfg: SimConfig, registry: AgentRegistry, n_gpus: usize,
                capacity_per_gpu: f64, migration: Option<MigrationModel>)
                -> Result<ClusterSimulator> {
@@ -163,16 +231,35 @@ impl ClusterSimulator {
     }
 
     /// Build a cluster of mixed per-GPU capacities (§VI heterogeneous
-    /// devices): one entry per GPU. The validated placement is stored,
-    /// so every `run()` starts from it directly instead of re-solving
-    /// the bin-packing.
+    /// devices) under the default headroom-decreasing placement: one
+    /// entry per GPU, `migration` mapped as in [`ClusterSimulator::new`].
     pub fn heterogeneous(cfg: SimConfig, registry: AgentRegistry,
                          capacities: Vec<f64>,
                          migration: Option<MigrationModel>)
                          -> Result<ClusterSimulator> {
-        let placement = pack_decreasing(&registry, &capacities)?;
+        let rebalancer = match migration {
+            None => Rebalancer::Static,
+            Some(m) => Rebalancer::HottestAgent(m),
+        };
+        ClusterSimulator::with_policies(
+            cfg, registry, capacities,
+            PlacementStrategy::HeadroomDecreasing, rebalancer)
+    }
+
+    /// Full-control constructor: an explicit [`PlacementStrategy`] ×
+    /// [`Rebalancer`] over per-GPU capacities. Demand-aware placement
+    /// reads the config's arrival rates as the expected per-agent
+    /// demand. The validated placement is stored, so every `run()`
+    /// starts from it directly instead of re-solving the bin-packing.
+    pub fn with_policies(cfg: SimConfig, registry: AgentRegistry,
+                         capacities: Vec<f64>,
+                         strategy: PlacementStrategy,
+                         rebalancer: Rebalancer)
+                         -> Result<ClusterSimulator> {
+        let placement =
+            strategy.place(&registry, &capacities, &cfg.arrival_rates)?;
         Ok(ClusterSimulator {
-            cfg, registry, capacities, migration, placement,
+            cfg, registry, capacities, strategy, rebalancer, placement,
         })
     }
 
@@ -184,6 +271,16 @@ impl ClusterSimulator {
     /// Per-GPU capacities, in device order.
     pub fn capacities(&self) -> &[f64] {
         &self.capacities
+    }
+
+    /// The placement strategy solved at construction.
+    pub fn strategy(&self) -> PlacementStrategy {
+        self.strategy
+    }
+
+    /// The runtime rebalancing policy.
+    pub fn rebalancer(&self) -> &Rebalancer {
+        &self.rebalancer
     }
 
     /// Run the hierarchical allocator over the configured workload.
@@ -217,10 +314,11 @@ impl ClusterSimulator {
         let ClusterArena {
             queues, rates, counts, observed, alloc, stalled_until,
             model_mb, demand, gpu_cap, gpu_done, latency, throughput,
-            gpu_util,
+            gpu_util, placement_scratch, repack_gpu_of,
         } = arena;
         model_mb.extend(self.registry.profiles().iter().map(|p| p.model_mb));
         let base_tput = self.registry.base_tput();
+        let min_gpu = self.registry.min_gpu();
 
         let mut migrations = 0u64;
         let mut migration_stall_s = 0.0f64;
@@ -234,43 +332,97 @@ impl ClusterSimulator {
                 observed[i] = counts[i] / cfg.dt;
             }
 
-            // Cluster-level rebalance: migrate the hottest agent off the
-            // most demand-loaded GPU when imbalance exceeds threshold.
-            let cooled_down = self.migration.as_ref().is_some_and(|m| {
-                now >= last_migration_at + m.cooldown_s
-                    || migrations == 0
-            });
-            if let (Some(mig), true) = (&self.migration, cooled_down) {
-                demand.fill(0.0);
-                for i in 0..n {
-                    demand[allocator.placement().gpu_of[i]] +=
-                        observed[i] / base_tput[i];
+            // Cluster-level rebalance, dispatched on the Rebalancer.
+            // Both active variants share the trigger: per-GPU demand
+            // imbalance above threshold, subject to cooldown. The check
+            // path is allocation-free — demand lives in the arena and
+            // the candidate scans walk `gpu_of` directly.
+            if let Some(mig) = self.rebalancer.model() {
+                let cooled_down = now >= last_migration_at + mig.cooldown_s
+                    || migrations == 0;
+                let mut triggered = (false, 0usize, 0usize);
+                if cooled_down {
+                    demand.fill(0.0);
+                    for i in 0..n {
+                        demand[allocator.placement().gpu_of[i]] +=
+                            observed[i] / base_tput[i];
+                    }
+                    let (max_g, max_d) = demand.iter().cloned().enumerate()
+                        .fold((0, f64::MIN), |acc, (g, d)| {
+                            if d > acc.1 { (g, d) } else { acc }
+                        });
+                    let (min_g, min_d) = demand.iter().cloned().enumerate()
+                        .fold((0, f64::MAX), |acc, (g, d)| {
+                            if d < acc.1 { (g, d) } else { acc }
+                        });
+                    if max_d > mig.imbalance_threshold * min_d.max(1e-9)
+                        && max_g != min_g {
+                        triggered = (true, max_g, min_g);
+                    }
                 }
-                let (max_g, max_d) = demand.iter().cloned().enumerate()
-                    .fold((0, f64::MIN), |acc, (g, d)| {
-                        if d > acc.1 { (g, d) } else { acc }
-                    });
-                let (min_g, min_d) = demand.iter().cloned().enumerate()
-                    .fold((0, f64::MAX), |acc, (g, d)| {
-                        if d < acc.1 { (g, d) } else { acc }
-                    });
-                if max_d > mig.imbalance_threshold * min_d.max(1e-9)
-                    && max_g != min_g {
-                    // Smallest-min agent on the hot GPU that still fits.
-                    let candidates = allocator.placement().agents_on(max_g);
-                    let target_load: f64 = allocator.placement()
-                        .agents_on(min_g).iter()
-                        .map(|i| self.registry.min_gpu()[*i]).sum();
-                    let movable = candidates.into_iter()
-                        .filter(|i| candidates_fit(
-                            self.registry.min_gpu()[*i], target_load,
-                            self.capacities[min_g]))
-                        .min_by(|a, b| self.registry.min_gpu()[*a]
-                                .partial_cmp(&self.registry.min_gpu()[*b])
-                                .expect("finite"));
+                let (fire, max_g, min_g) = triggered;
+                if fire && matches!(self.rebalancer,
+                                    Rebalancer::Repack(_)) {
+                    // Re-solve the construction strategy over the live
+                    // observed rates; every agent whose device changes
+                    // pays its own transfer stall. An attempt consumes
+                    // the cooldown whether or not anything moved.
+                    last_migration_at = now;
+                    if self.strategy.place_into(
+                        &self.registry, &self.capacities,
+                        &observed[..], placement_scratch,
+                        repack_gpu_of).is_ok()
+                    {
+                        let mut moved = false;
+                        for agent in 0..n {
+                            if repack_gpu_of[agent]
+                                == allocator.placement().gpu_of[agent] {
+                                continue;
+                            }
+                            let transfer_s =
+                                model_mb[agent] as f64 / mig.mb_per_s;
+                            stalled_until[agent] = now + transfer_s;
+                            migration_stall_s += transfer_s;
+                            migrations += 1;
+                            moved = true;
+                        }
+                        if moved {
+                            allocator.set_placement(
+                                &self.registry,
+                                Placement {
+                                    gpu_of: repack_gpu_of.clone(),
+                                    n_gpus,
+                                });
+                        }
+                    }
+                } else if fire {
+                    // Hottest-agent heuristic: the smallest-minimum
+                    // agent on the hot GPU that still fits on the cool
+                    // one (ties toward the lowest agent id).
+                    let mut target_load = 0.0;
+                    for i in 0..n {
+                        if allocator.placement().gpu_of[i] == min_g {
+                            target_load += min_gpu[i];
+                        }
+                    }
+                    let mut movable: Option<usize> = None;
+                    for i in 0..n {
+                        if allocator.placement().gpu_of[i] != max_g
+                            || target_load + min_gpu[i]
+                                > self.capacities[min_g] + 1e-9 {
+                            continue;
+                        }
+                        let better = match movable {
+                            None => true,
+                            Some(m) => min_gpu[i] < min_gpu[m],
+                        };
+                        if better {
+                            movable = Some(i);
+                        }
+                    }
                     if let Some(agent) = movable {
-                        let transfer_s = self.registry.profile(agent)
-                            .model_mb as f64 / mig.mb_per_s;
+                        let transfer_s =
+                            model_mb[agent] as f64 / mig.mb_per_s;
                         stalled_until[agent] = now + transfer_s;
                         migration_stall_s += transfer_s;
                         migrations += 1;
@@ -345,13 +497,10 @@ impl ClusterSimulator {
     }
 }
 
-fn candidates_fit(min_gpu: f64, target_load: f64, capacity: f64) -> bool {
-    target_load + min_gpu <= capacity + 1e-9
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::WorkloadKind;
 
     fn paper_cluster(n_gpus: usize, cap: f64) -> ClusterSimulator {
         ClusterSimulator::new(SimConfig::paper(), AgentRegistry::paper(),
@@ -388,7 +537,7 @@ mod tests {
     fn migration_triggers_under_skew_and_costs_stall_time() {
         let mut cfg = SimConfig::paper();
         // Skew all demand onto agent 0 mid-run.
-        cfg.workload_kind = crate::workload::WorkloadKind::Dominance {
+        cfg.workload_kind = WorkloadKind::Dominance {
             agent: 0, share: 0.9,
         };
         let sim = ClusterSimulator::new(
@@ -402,9 +551,63 @@ mod tests {
     }
 
     #[test]
-    fn stored_placement_matches_ffd_and_runs_are_repeatable() {
+    fn repack_rebalancer_moves_agents_under_skew() {
+        // Demand-aware placement solved on the base rates, then 90 %
+        // dominance at runtime: the repack re-solve sees the skewed
+        // observed rates, isolates the hot agent, and charges every
+        // moved agent its transfer stall.
+        let mut cfg = SimConfig::paper();
+        cfg.workload_kind = WorkloadKind::Dominance {
+            agent: 0, share: 0.9,
+        };
+        let sim = ClusterSimulator::with_policies(
+            cfg, AgentRegistry::paper(), vec![1.0, 1.0],
+            PlacementStrategy::DemandAware,
+            Rebalancer::Repack(MigrationModel::default())).unwrap();
+        let r = sim.run().unwrap();
+        assert!(r.migrations >= 1, "repack never moved anyone");
+        assert!(r.migration_stall_s > 0.0);
+        assert!(r.agent_throughputs.iter().all(|t| *t > 0.0));
+    }
+
+    #[test]
+    fn repack_is_inert_for_min_based_strategies() {
+        // A min-based strategy re-derives its construction placement at
+        // every repack attempt, so nothing ever moves — Repack degrades
+        // to Static for it, bit for bit.
+        let mut cfg = SimConfig::paper();
+        cfg.workload_kind = WorkloadKind::Dominance {
+            agent: 0, share: 0.9,
+        };
+        let repack = ClusterSimulator::with_policies(
+            cfg.clone(), AgentRegistry::paper(), vec![1.0, 1.0],
+            PlacementStrategy::HeadroomDecreasing,
+            Rebalancer::Repack(MigrationModel::default())).unwrap()
+            .run().unwrap();
+        let fixed = ClusterSimulator::with_policies(
+            cfg, AgentRegistry::paper(), vec![1.0, 1.0],
+            PlacementStrategy::HeadroomDecreasing,
+            Rebalancer::Static).unwrap().run().unwrap();
+        assert_eq!(repack.migrations, 0);
+        assert_eq!(repack, fixed);
+    }
+
+    #[test]
+    fn migration_option_constructors_map_onto_rebalancers() {
+        let hottest = ClusterSimulator::new(
+            SimConfig::paper(), AgentRegistry::paper(), 2, 1.0,
+            Some(MigrationModel::default())).unwrap();
+        assert_eq!(hottest.rebalancer().name(), "hottest");
+        assert_eq!(hottest.strategy(),
+                   PlacementStrategy::HeadroomDecreasing);
+        let fixed = paper_cluster(2, 1.0);
+        assert_eq!(fixed.rebalancer().name(), "static");
+    }
+
+    #[test]
+    fn stored_placement_matches_packer_and_runs_are_repeatable() {
         let sim = paper_cluster(2, 1.0);
-        let expected = crate::cluster::first_fit_decreasing(
+        let expected = crate::cluster::headroom_decreasing(
             &AgentRegistry::paper(), 2, 1.0).unwrap();
         assert_eq!(sim.placement(), &expected);
         // run() starts from the stored placement every time.
@@ -415,12 +618,31 @@ mod tests {
     }
 
     #[test]
+    fn every_strategy_runs_and_serves_everyone() {
+        for strategy in PlacementStrategy::all() {
+            let sim = ClusterSimulator::with_policies(
+                SimConfig::paper(), AgentRegistry::paper(),
+                vec![1.0, 0.75, 0.5, 0.25], strategy,
+                Rebalancer::Static).unwrap();
+            assert_eq!(sim.strategy(), strategy);
+            let expected = strategy.place(
+                &AgentRegistry::paper(), &[1.0, 0.75, 0.5, 0.25],
+                &SimConfig::paper().arrival_rates).unwrap();
+            assert_eq!(sim.placement(), &expected, "{}", strategy.name());
+            let r = sim.run().unwrap();
+            assert_eq!(r.n_gpus, 4);
+            assert!(r.agent_throughputs.iter().all(|t| *t > 0.0),
+                    "{}: {r:?}", strategy.name());
+        }
+    }
+
+    #[test]
     fn arena_reuse_is_bit_identical_across_cluster_shapes() {
         // One arena replayed across clusters of different GPU counts,
         // capacities, and migration settings must leave no state behind.
         let mut arena = ClusterArena::new();
         let mut skew_cfg = SimConfig::paper();
-        skew_cfg.workload_kind = crate::workload::WorkloadKind::Dominance {
+        skew_cfg.workload_kind = WorkloadKind::Dominance {
             agent: 0, share: 0.9,
         };
         let migrating = ClusterSimulator::new(
@@ -437,6 +659,31 @@ mod tests {
             let fresh = migrating.run().unwrap();
             assert!(fresh.migrations >= 1, "skew must trigger migration");
             assert_eq!(reused, fresh, "migrating cluster");
+        }
+    }
+
+    #[test]
+    fn arena_reuse_is_bit_identical_across_strategies_and_rebalancers() {
+        // The full placement axis through one arena: every strategy ×
+        // every rebalancer kind, under skew so the active rebalancers
+        // fire.
+        let mut arena = ClusterArena::new();
+        for strategy in PlacementStrategy::all() {
+            for rebalancer in Rebalancer::all() {
+                let mut cfg = SimConfig::paper();
+                cfg.workload_kind = WorkloadKind::Dominance {
+                    agent: 0, share: 0.9,
+                };
+                let sim = ClusterSimulator::with_policies(
+                    cfg, AgentRegistry::paper(),
+                    vec![1.0, 0.75, 0.5, 0.25], strategy, rebalancer)
+                    .unwrap();
+                let name = format!("{}/{}", strategy.name(),
+                                   sim.rebalancer().name());
+                let reused = sim.run_with_arena(&mut arena).unwrap();
+                let fresh = sim.run().unwrap();
+                assert_eq!(reused, fresh, "{name}");
+            }
         }
     }
 
@@ -468,7 +715,7 @@ mod tests {
         // drops, and the burst pays cold starts — all visible in the
         // report.
         let mut cfg = SimConfig::paper();
-        cfg.workload_kind = crate::workload::WorkloadKind::Burst {
+        cfg.workload_kind = WorkloadKind::Burst {
             agents: vec![1, 3], start: 40, end: 60,
         };
         cfg.economics =
@@ -497,7 +744,7 @@ mod tests {
     fn arena_reuse_is_bit_identical_with_economics_enabled() {
         let mut arena = ClusterArena::new();
         let mut cfg = SimConfig::paper();
-        cfg.workload_kind = crate::workload::WorkloadKind::Burst {
+        cfg.workload_kind = WorkloadKind::Burst {
             agents: vec![1, 3], start: 40, end: 60,
         };
         cfg.economics = Some(
@@ -523,6 +770,10 @@ mod tests {
         assert!(ClusterSimulator::heterogeneous(
             SimConfig::paper(), AgentRegistry::paper(), vec![0.5, 0.3],
             None).is_err());
+        assert!(ClusterSimulator::with_policies(
+            SimConfig::paper(), AgentRegistry::paper(), vec![0.5, 0.3],
+            PlacementStrategy::BestFitDecreasing, Rebalancer::Static)
+                .is_err());
     }
 
     #[test]
@@ -534,8 +785,8 @@ mod tests {
             SimConfig::paper(), AgentRegistry::paper(), vec![0.6, 0.4],
             None).unwrap();
         assert_eq!(sim.capacities(), &[0.6, 0.4]);
-        let expected =
-            pack_decreasing(&AgentRegistry::paper(), &[0.6, 0.4]).unwrap();
+        let expected = crate::cluster::pack_decreasing(
+            &AgentRegistry::paper(), &[0.6, 0.4]).unwrap();
         assert_eq!(sim.placement(), &expected);
         let r = sim.run().unwrap();
         assert_eq!(r.n_gpus, 2);

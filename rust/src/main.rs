@@ -5,7 +5,9 @@
 //!                   [--poisson] [--seed N] [--timelines out.csv]
 //! agentsrv repro    [--out DIR] [--exp ID]      regenerate tables/figures
 //!                                               (incl. --exp serving: the
-//!                                               queue-granularity contrast)
+//!                                               queue-granularity contrast;
+//!                                               --exp placement: strategy x
+//!                                               rebalancer comparison)
 //! agentsrv serve    [--artifacts DIR] [--policy p] [--requests N]
 //!                   [--workflows N]             end-to-end PJRT serving
 //! agentsrv verify   [--artifacts DIR]           golden-vector check
@@ -79,7 +81,8 @@ USAGE:
                     [--poisson] [--seed N] [--timelines FILE.csv]
   agentsrv repro    [--out DIR] [--exp table1|table2|fig2a|fig2b|fig2c|
                                        fig2d|overload|spike|dominance|
-                                       scaling|economics|serving|all]
+                                       scaling|economics|serving|
+                                       placement|all]
   agentsrv serve    [--artifacts DIR] [--policy NAME] [--requests N]
                     [--workflows N] [--seed N]
   agentsrv verify   [--artifacts DIR]
@@ -280,6 +283,25 @@ fn cmd_repro(opts: &Opts) -> Result<()> {
             println!("\n(fluid = §IV.B backlog estimator; serving = \
                       per-request sojourn through the queue path the \
                       threaded server shares via ServingCore)");
+        }
+        "placement" => {
+            println!("{:<10} {:>8} {:>12} {:>11} {:>10} {:>5} {:>9} \
+                      {:>7}",
+                     "strategy", "rebal", "mean lat(s)", "hi-pri(s)",
+                     "tput(rps)", "migs", "stall(s)", "spread");
+            for r in repro::placement_experiment(100) {
+                println!("{:<10} {:>8} {:>12.1} {:>11.1} {:>10.1} {:>5} \
+                          {:>9.2} {:>7.2}",
+                         r.strategy, r.rebalancer, r.mean_latency_s,
+                         r.high_priority_latency_s,
+                         r.total_throughput_rps, r.migrations,
+                         r.migration_stall_s, r.gpu_util_spread);
+            }
+            println!("\n(the placement strategy fixes where agents live \
+                      at construction; the rebalancer decides who moves \
+                      under live imbalance — priority-spread keeps the \
+                      High-priority agent on the least-contended device, \
+                      which is the hi-pri latency column)");
         }
         other => return Err(Error::Config(format!(
             "unknown experiment '{other}'"))),

@@ -7,6 +7,7 @@
 
 mod economics;
 mod experiments;
+mod placement;
 mod robustness;
 mod serving;
 
@@ -15,6 +16,9 @@ pub use economics::{coldstart_axis, cost_grid, economics_experiment,
                     EconomicsRow};
 pub use experiments::{fig2a, fig2b, fig2c, fig2d, table1, table2,
                       CostPerfPoint, PerAgentSeries};
+pub use placement::{adversarial_rates, adversarial_registry,
+                    placement_experiment, placement_grid,
+                    synthetic_arrival_rates, PlacementRow};
 pub use robustness::{cluster_grid, dominance_experiment,
                      overload_experiment, scaling_experiment,
                      spike_experiment, stress_grid, stress_shapes,
@@ -35,7 +39,7 @@ use crate::metrics::export;
 /// `fig2b_throughput.csv`, `fig2c_allocation.csv`, `fig2d_cost_perf.csv`,
 /// `robustness_overload.csv`, `robustness_spike.csv`,
 /// `robustness_dominance.csv`, `allocator_scaling.csv`, `economics.csv`,
-/// `serving.csv`.
+/// `serving.csv`, `placement.csv`.
 pub fn write_all(dir: &Path) -> Result<()> {
     std::fs::create_dir_all(dir)?;
 
@@ -167,6 +171,22 @@ pub fn write_all(dir: &Path) -> Result<()> {
         ])).collect::<Vec<_>>(),
     )?;
 
+    // §VI placement: strategy × rebalancer head-to-head over the
+    // adversarial priority registry.
+    let pl = placement_experiment(100);
+    export::table_csv(
+        &dir.join("placement.csv"),
+        &["cell", "mean_latency_s", "high_priority_latency_s",
+          "total_throughput_rps", "migrations", "migration_stall_s",
+          "gpu_util_spread"],
+        &pl.iter().map(|r| (format!("{}/{}", r.strategy, r.rebalancer),
+                            vec![
+            r.mean_latency_s, r.high_priority_latency_s,
+            r.total_throughput_rps, r.migrations as f64,
+            r.migration_stall_s, r.gpu_util_spread,
+        ])).collect::<Vec<_>>(),
+    )?;
+
     Ok(())
 }
 
@@ -183,7 +203,7 @@ mod tests {
                   "fig2d_cost_perf.csv", "robustness_overload.csv",
                   "robustness_spike.csv", "robustness_dominance.csv",
                   "allocator_scaling.csv", "economics.csv",
-                  "serving.csv"] {
+                  "serving.csv", "placement.csv"] {
             let p = dir.path().join(f);
             assert!(p.exists(), "{f} missing");
             assert!(std::fs::metadata(&p).unwrap().len() > 0, "{f} empty");

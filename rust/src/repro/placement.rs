@@ -1,0 +1,317 @@
+//! Placement-policy experiments: strategy × rebalancer comparison over
+//! the paper deployment, an adversarial priority registry, and
+//! synthetic large-N registries — the ROADMAP's "placement policies as
+//! a cell dimension" and "synthetic large-N registries as cluster
+//! cells" axes, closed.
+//!
+//! Two drivers:
+//!
+//! * [`placement_grid`] — the placement axes as [`SweepCell::Cluster`]
+//!   cells, folded into [`cluster_grid`](crate::repro::cluster_grid)
+//!   (and therefore into `stress_sweep` and the CI sweeps): every
+//!   [`PlacementStrategy`] × every [`Rebalancer`] kind over the paper
+//!   deployment under dominance skew, plus `synthetic_registry`
+//!   clusters of 16 / 64 / 256 agents on mixed-capacity devices;
+//! * [`placement_experiment`] — the head-to-head table behind
+//!   `agentsrv repro --exp placement` and `placement.csv`: every
+//!   strategy × rebalancer over [`adversarial_registry`], reporting
+//!   mean and High-priority latency, throughput, migrations, stalls,
+//!   and GPU-utilization spread.
+
+use crate::agents::{AgentProfile, AgentRegistry, Priority};
+use crate::cluster::{MigrationModel, PlacementStrategy, Rebalancer};
+use crate::repro::synthetic_registry;
+use crate::sim::batch::{default_workers, run_sweep, ClusterScenario,
+                        SweepCell};
+use crate::sim::SimConfig;
+use crate::workload::WorkloadKind;
+
+/// The mixed-capacity device set the placement cells run on: one big
+/// device plus progressively smaller ones (Σ = 2.5 GPUs).
+fn mixed_capacities() -> Vec<f64> {
+    vec![1.0, 0.75, 0.5, 0.25]
+}
+
+/// Arrival rates for a [`synthetic_registry`] of `n` agents: the
+/// paper's §IV.A rates cycled, then normalized so the total stays at
+/// the paper's 190 rps for *any* N (partial cycles included) — the
+/// large-N cells stress *placement*, not overload.
+pub fn synthetic_arrival_rates(n: usize) -> Vec<f64> {
+    let base = AgentProfile::paper_arrival_rates();
+    let raw: Vec<f64> = (0..n).map(|i| base[i % base.len()]).collect();
+    let total: f64 = base.iter().sum();
+    let raw_total: f64 = raw.iter().sum();
+    let scale = total / raw_total;
+    raw.into_iter().map(|r| r * scale).collect()
+}
+
+/// The adversarial registry for the strategy-dominance probes: one
+/// small High-priority agent plus three bulk agents whose minimums and
+/// traffic dominate. Size-only (headroom-decreasing) packing co-locates
+/// the High agent with the hottest bulk agent; priority-spread parks it
+/// on the least-contended device.
+pub fn adversarial_registry() -> AgentRegistry {
+    AgentRegistry::new(vec![
+        AgentProfile {
+            name: "bulk0".into(),
+            model_mb: 2000,
+            base_tput: 40.0,
+            min_gpu: 0.50,
+            priority: Priority::Medium,
+        },
+        AgentProfile {
+            name: "bulk1".into(),
+            model_mb: 2000,
+            base_tput: 40.0,
+            min_gpu: 0.45,
+            priority: Priority::Medium,
+        },
+        AgentProfile {
+            name: "bulk2".into(),
+            model_mb: 1000,
+            base_tput: 40.0,
+            min_gpu: 0.25,
+            priority: Priority::Low,
+        },
+        AgentProfile {
+            name: "hi".into(),
+            model_mb: 500,
+            base_tput: 50.0,
+            min_gpu: 0.20,
+            priority: Priority::High,
+        },
+    ]).expect("adversarial registry is valid")
+}
+
+/// Arrival rates for [`adversarial_registry`]: bulk traffic dominates,
+/// the High-priority agent runs a modest steady stream.
+pub fn adversarial_rates() -> Vec<f64> {
+    vec![80.0, 80.0, 20.0, 10.0]
+}
+
+/// The placement-policy axes as sweep cells, folded into
+/// [`cluster_grid`](crate::repro::cluster_grid):
+///
+/// * every [`PlacementStrategy`] × every [`Rebalancer`] kind over the
+///   paper deployment on a mixed-capacity 4-device cluster, under 90 %
+///   single-agent dominance so the active rebalancers actually fire —
+///   labelled `"placement/<strategy>/<rebalancer>/paper"`;
+/// * synthetic large-N registries ([`synthetic_registry`] of 16 / 64 /
+///   256 agents, [`synthetic_arrival_rates`]) on the same mixed
+///   capacities under every strategy with hottest-agent rebalancing,
+///   labelled `"placement/synth<n>/<strategy>"`.
+///
+/// Infeasible combos are skipped like the rest of the cluster grid.
+pub fn placement_grid(steps: u64) -> Vec<SweepCell> {
+    let mut cells = Vec::new();
+    for strategy in PlacementStrategy::all() {
+        for rebalancer in Rebalancer::all() {
+            let mut cfg = SimConfig::paper();
+            cfg.steps = steps;
+            cfg.workload_kind = WorkloadKind::Dominance {
+                agent: 0, share: 0.9,
+            };
+            if let Ok(cell) = ClusterScenario::with_policies(
+                format!("placement/{}/{}/paper", strategy.name(),
+                        rebalancer.name()),
+                cfg, AgentRegistry::paper(), mixed_capacities(),
+                strategy, rebalancer)
+            {
+                cells.push(SweepCell::Cluster(cell));
+            }
+        }
+    }
+    for n in [16usize, 64, 256] {
+        for strategy in PlacementStrategy::all() {
+            let mut cfg = SimConfig::paper();
+            cfg.steps = steps;
+            cfg.arrival_rates = synthetic_arrival_rates(n);
+            if let Ok(cell) = ClusterScenario::with_policies(
+                format!("placement/synth{n}/{}", strategy.name()),
+                cfg, synthetic_registry(n), mixed_capacities(), strategy,
+                Rebalancer::HottestAgent(MigrationModel::default()))
+            {
+                cells.push(SweepCell::Cluster(cell));
+            }
+        }
+    }
+    cells
+}
+
+/// One row of the strategy-comparison table (`placement.csv`).
+#[derive(Debug, Clone)]
+pub struct PlacementRow {
+    /// Placement strategy name.
+    pub strategy: String,
+    /// Rebalancer name.
+    pub rebalancer: String,
+    /// Mean of per-agent mean latencies (s).
+    pub mean_latency_s: f64,
+    /// Mean latency over the High-priority agents only (s) — the number
+    /// priority-spread placement exists to protect.
+    pub high_priority_latency_s: f64,
+    /// Aggregate throughput (rps).
+    pub total_throughput_rps: f64,
+    /// Migrations performed by the rebalancer.
+    pub migrations: u64,
+    /// Serving time lost to checkpoint transfers (s).
+    pub migration_stall_s: f64,
+    /// Max − min per-GPU mean utilization — the load-balance probe.
+    pub gpu_util_spread: f64,
+}
+
+/// The §VI placement comparison behind `agentsrv repro --exp
+/// placement`: every [`PlacementStrategy`] × [`Rebalancer`] over
+/// [`adversarial_registry`] on two unit devices with bulk-heavy steady
+/// traffic, all replayed through one `run_sweep` pool. On this registry
+/// size-only packing pairs the High-priority agent with the hottest
+/// bulk agent and its latency climbs; priority-spread keeps it on the
+/// least-contended device and its latency stays flat — the contrast
+/// `placement.csv` tabulates.
+pub fn placement_experiment(steps: u64) -> Vec<PlacementRow> {
+    let registry = adversarial_registry();
+    let mut combos = Vec::new();
+    let mut cells = Vec::new();
+    for strategy in PlacementStrategy::all() {
+        for rebalancer in Rebalancer::all() {
+            let mut cfg = SimConfig::paper();
+            cfg.steps = steps;
+            cfg.arrival_rates = adversarial_rates();
+            let cell = ClusterScenario::with_policies(
+                format!("placement/{}/{}", strategy.name(),
+                        rebalancer.name()),
+                cfg, registry.clone(), vec![1.0, 1.0], strategy,
+                rebalancer.clone())
+                .expect("adversarial registry fits two unit GPUs");
+            combos.push((strategy, rebalancer));
+            cells.push(SweepCell::Cluster(cell));
+        }
+    }
+    let runs = run_sweep(&cells, default_workers());
+    runs.iter().zip(&combos).map(|(run, (strategy, rebalancer))| {
+        let r = run.result.as_cluster().expect("cluster cell");
+        let hi_lats: Vec<f64> = registry.profiles().iter().enumerate()
+            .filter(|(_, p)| p.priority == Priority::High)
+            .map(|(i, _)| r.agent_latencies[i])
+            .collect();
+        let util_max = r.gpu_utilization.iter().cloned()
+            .fold(f64::MIN, f64::max);
+        let util_min = r.gpu_utilization.iter().cloned()
+            .fold(f64::MAX, f64::min);
+        PlacementRow {
+            strategy: strategy.name().to_string(),
+            rebalancer: rebalancer.name().to_string(),
+            mean_latency_s: r.mean_latency(),
+            high_priority_latency_s: crate::util::mean(&hi_lats),
+            total_throughput_rps: r.total_throughput(),
+            migrations: r.migrations,
+            migration_stall_s: r.migration_stall_s,
+            gpu_util_spread: util_max - util_min,
+        }
+    }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_rates_match_registry_and_scale_down() {
+        // Partial cycles (n not a multiple of 4) normalize too.
+        for n in [1usize, 4, 10, 16, 64, 256] {
+            let rates = synthetic_arrival_rates(n);
+            assert_eq!(rates.len(), synthetic_registry(n).len());
+            let total: f64 = rates.iter().sum();
+            // Total demand stays at the paper's 190 rps regardless of N.
+            assert!((total - 190.0).abs() < 1e-9, "n={n}: {total}");
+        }
+    }
+
+    #[test]
+    fn placement_grid_covers_every_strategy_rebalancer_combo() {
+        let cells = placement_grid(20);
+        let strategies = PlacementStrategy::all();
+        let rebalancers = Rebalancer::all();
+        // paper combos + synth{16,64,256} × strategies, all feasible.
+        let expected = strategies.len() * rebalancers.len()
+            + 3 * strategies.len();
+        assert_eq!(cells.len(), expected);
+        let mut labels: Vec<&str> =
+            cells.iter().map(SweepCell::label).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), expected, "labels must be unique");
+        for strategy in &strategies {
+            for rebalancer in &rebalancers {
+                let want = format!("placement/{}/{}/paper",
+                                   strategy.name(), rebalancer.name());
+                assert!(labels.contains(&want.as_str()),
+                        "missing {want}");
+            }
+            let synth = format!("placement/synth64/{}", strategy.name());
+            assert!(labels.contains(&synth.as_str()), "missing {synth}");
+        }
+        assert!(cells.iter()
+                .all(|c| matches!(c, SweepCell::Cluster(_))));
+    }
+
+    #[test]
+    fn synthetic_large_n_cells_run_through_the_pool() {
+        // The ≥ 64-agent acceptance bar: synthetic cells run through
+        // run_sweep and serve every agent.
+        let cells: Vec<SweepCell> = placement_grid(10).into_iter()
+            .filter(|c| c.label().starts_with("placement/synth"))
+            .collect();
+        assert!(!cells.is_empty());
+        let runs = run_sweep(&cells, 4);
+        for run in &runs {
+            let r = run.result.as_cluster().expect("cluster cell");
+            assert_eq!(r.n_gpus, 4, "{}", run.label);
+            assert!(r.agent_throughputs.iter().all(|t| *t > 0.0),
+                    "{}: an agent starved", run.label);
+        }
+        // At least one cell actually runs 256 agents.
+        assert!(runs.iter().any(|run| {
+            run.label.starts_with("placement/synth256")
+                && run.result.as_cluster().unwrap()
+                    .agent_throughputs.len() == 256
+        }));
+    }
+
+    #[test]
+    fn placement_experiment_tabulates_every_combo() {
+        let rows = placement_experiment(50);
+        assert_eq!(rows.len(),
+                   PlacementStrategy::all().len()
+                       * Rebalancer::all().len());
+        for row in &rows {
+            assert!(row.total_throughput_rps > 0.0,
+                    "{}/{}", row.strategy, row.rebalancer);
+            assert!(row.gpu_util_spread >= 0.0);
+            assert!(row.mean_latency_s >= 0.0);
+        }
+        // Static rebalancing never migrates.
+        assert!(rows.iter()
+                .filter(|r| r.rebalancer == "static")
+                .all(|r| r.migrations == 0 && r.migration_stall_s == 0.0));
+    }
+
+    #[test]
+    fn priority_spread_beats_size_only_packing_for_high_priority() {
+        // The adversarial satellite: on a registry where the bulk
+        // agents dominate traffic, headroom-decreasing pairs the High
+        // agent with a hot bulk agent (its service rate dips below its
+        // arrivals and latency climbs), while priority-spread keeps it
+        // on the least-contended device.
+        let rows = placement_experiment(100);
+        let hi_latency = |strategy: &str| rows.iter()
+            .find(|r| r.strategy == strategy && r.rebalancer == "static")
+            .expect("combo present")
+            .high_priority_latency_s;
+        let spread = hi_latency("spread");
+        let headroom = hi_latency("headroom");
+        assert!(spread < headroom,
+                "priority-spread {spread} should beat size-only \
+                 packing {headroom} for the High-priority agent");
+    }
+}

@@ -222,7 +222,11 @@ pub fn stress_grid(steps: u64, seeds: &[u64]) -> Vec<Scenario> {
 /// under 90 % single-agent dominance, so the migration path actually
 /// fires inside the grid. Mixed per-GPU capacities (heterogeneous
 /// devices) are a further axis, labelled
-/// `"cluster/hetero/<cap>+<cap>+..."`.
+/// `"cluster/hetero/<cap>+<cap>+..."`, and the placement-policy axes —
+/// every `PlacementStrategy` × `Rebalancer` combination plus synthetic
+/// large-N registries ([`crate::repro::placement_grid`], labels
+/// `"placement/..."`) — ride along, so the whole placement ×
+/// rebalancing surface is sweepable through this one grid.
 pub fn cluster_grid(steps: u64) -> Vec<SweepCell> {
     let mut cells = Vec::new();
     // Heterogeneous-capacity cells: one large device plus smaller ones
@@ -275,6 +279,9 @@ pub fn cluster_grid(steps: u64) -> Vec<SweepCell> {
             }
         }
     }
+    // Placement-policy axes: strategy × rebalancer combos plus
+    // synthetic large-N registries, as further cluster cells.
+    cells.extend(crate::repro::placement_grid(steps));
     cells
 }
 
@@ -476,11 +483,17 @@ mod tests {
         // 1.0): skipped, not panicked.
         assert!(!labels.iter().any(|l| l.starts_with("cluster/1gpu/cap0.6")),
                 "{labels:?}");
-        // Feasible axes are present, including the skewed migration cell
-        // and the heterogeneous-capacity cells.
+        // Feasible axes are present, including the skewed migration
+        // cell, the heterogeneous-capacity cells, and the
+        // placement-policy axes (strategy × rebalancer combos plus
+        // synthetic large-N registries).
         for want in ["cluster/1gpu/cap1/nomig", "cluster/2gpu/cap0.6/mig",
                      "cluster/4gpu/cap1/mig/skew", "cluster/hetero/1+0.5",
-                     "cluster/hetero/0.6+0.4"] {
+                     "cluster/hetero/0.6+0.4",
+                     "placement/spread/repack/paper",
+                     "placement/demand/hottest/paper",
+                     "placement/synth64/demand",
+                     "placement/synth256/inorder"] {
             assert!(labels.contains(&want), "missing {want} in {labels:?}");
         }
         // Every cell is a cluster cell and actually runs.
@@ -492,6 +505,13 @@ mod tests {
             .filter(|r| r.label.ends_with("/skew"))
             .any(|r| r.result.as_cluster().unwrap().migrations >= 1);
         assert!(migrated, "no skew cell migrated");
+        // The dominance-skewed placement combos fire their rebalancers
+        // too.
+        let placement_migrated = runs.iter()
+            .filter(|r| r.label.starts_with("placement/")
+                    && r.label.contains("/hottest/"))
+            .any(|r| r.result.as_cluster().unwrap().migrations >= 1);
+        assert!(placement_migrated, "no placement cell migrated");
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //!
 //! A [`SweepCell`] is one cell of an evaluation grid — a single-GPU
 //! [`Scenario`] (config × registry × policy), a [`ClusterScenario`]
-//! (config × registry × GPUs × capacity × migration model), a
+//! (config × registry × per-GPU capacities × placement strategy ×
+//! rebalancer), a
 //! [`TraceScenario`] (a recorded [`Trace`] replayed under a policy), a
 //! [`CostScenario`] (a scenario with a serverless [`EconomicsModel`]
 //! enabled — pricing × scale-to-zero timeout × cold-start
@@ -43,7 +44,7 @@ use std::sync::Arc;
 use crate::agents::{AgentProfile, AgentRegistry};
 use crate::allocator::PolicyKind;
 use crate::cluster::{ClusterArena, ClusterResult, ClusterSimulator,
-                     MigrationModel};
+                     MigrationModel, PlacementStrategy, Rebalancer};
 use crate::error::{Error, Result};
 use crate::server::{ServingArena, ServingConfig, ServingResult,
                     ServingSimulator};
@@ -137,6 +138,21 @@ impl ClusterScenario {
             label: label.into(),
             sim: ClusterSimulator::heterogeneous(cfg, registry,
                                                  capacities, migration)?,
+        })
+    }
+
+    /// Build a cell with an explicit [`PlacementStrategy`] ×
+    /// [`Rebalancer`] over per-GPU capacities (same validation as
+    /// [`ClusterSimulator::with_policies`]) — the placement-grid axes.
+    pub fn with_policies(label: impl Into<String>, cfg: SimConfig,
+                         registry: AgentRegistry, capacities: Vec<f64>,
+                         strategy: PlacementStrategy,
+                         rebalancer: Rebalancer)
+                         -> Result<ClusterScenario> {
+        Ok(ClusterScenario {
+            label: label.into(),
+            sim: ClusterSimulator::with_policies(
+                cfg, registry, capacities, strategy, rebalancer)?,
         })
     }
 
@@ -644,6 +660,11 @@ mod tests {
             SweepCell::Cluster(ClusterScenario::new(
                 "cluster/4gpu", SimConfig::paper(), AgentRegistry::paper(),
                 4, 1.0, Some(MigrationModel::default())).unwrap()),
+            SweepCell::Cluster(ClusterScenario::with_policies(
+                "cluster/spread/repack", SimConfig::paper(),
+                AgentRegistry::paper(), vec![1.0, 0.75, 0.5, 0.25],
+                PlacementStrategy::PrioritySpread,
+                Rebalancer::Repack(MigrationModel::default())).unwrap()),
             SweepCell::Cost(CostScenario::new(
                 "cost/adaptive/idle5", SimConfig::paper(),
                 AgentRegistry::paper(),

@@ -218,7 +218,7 @@ pub fn compare_bench_reports(baseline: &Value, measured: &Value,
     compare_rows(&mut cmp, "single", allowed_drop,
                  base.get("batch"), meas.get("batch"));
 
-    for section in ["cluster", "corpus", "cost", "serving"] {
+    for section in ["cluster", "corpus", "cost", "serving", "placement"] {
         let (b, m) = match (base.get(section), meas.get(section)) {
             (Some(b), Some(m)) => (b, m),
             // Not in the baseline yet: schema growth, note and move on.

@@ -4,7 +4,8 @@
 use agentsrv::agents::{AgentProfile, AgentRegistry, Priority};
 use agentsrv::allocator::{all_policies, policy_by_name, AllocContext,
                           PolicyKind};
-use agentsrv::cluster::{ClusterSimulator, MigrationModel};
+use agentsrv::cluster::{ClusterSimulator, MigrationModel,
+                        PlacementStrategy, Rebalancer};
 use agentsrv::server::{ServingConfig, ServingSimulator};
 use agentsrv::serverless::{EconomicsModel, GpuPricing};
 use agentsrv::sim::batch::{run_batch, run_sweep, ClusterScenario,
@@ -323,6 +324,72 @@ fn prop_cluster_sweep_is_bit_identical_to_sequential_run() {
                         if migration.is_some() { "on" } else { "off" });
                 }
             }
+        }
+    }
+}
+
+/// Placement cells hold the same pure-speedup contract across the whole
+/// new axis: every [`PlacementStrategy`] × [`Rebalancer`] combination
+/// over the paper deployment (under 90 % dominance skew, so the active
+/// rebalancers really migrate), plus synthetic large-N registries (64
+/// and 256 agents on mixed-capacity devices), each cell's full
+/// [`ClusterResult`] bit-identical (`==`, no tolerance) to a sequential
+/// `ClusterSimulator::run`, at 1, 2, and 8 workers.
+///
+/// [`ClusterResult`]: agentsrv::cluster::ClusterResult
+#[test]
+fn prop_placement_sweep_is_bit_identical_to_sequential_run() {
+    let caps = vec![1.0, 0.75, 0.5, 0.25];
+    let mut cells = Vec::new();
+    let mut expected = Vec::new();
+    for strategy in PlacementStrategy::all() {
+        for rebalancer in Rebalancer::all() {
+            let mut cfg = SimConfig::paper();
+            cfg.workload_kind = WorkloadKind::Dominance {
+                agent: 0, share: 0.9,
+            };
+            let sequential = ClusterSimulator::with_policies(
+                cfg.clone(), AgentRegistry::paper(), caps.clone(),
+                strategy, rebalancer.clone()).unwrap();
+            expected.push(sequential.run().unwrap());
+            cells.push(SweepCell::Cluster(ClusterScenario::with_policies(
+                format!("placement/{}/{}", strategy.name(),
+                        rebalancer.name()),
+                cfg, AgentRegistry::paper(), caps.clone(), strategy,
+                rebalancer).unwrap()));
+        }
+    }
+    // Synthetic large-N registries (the ≥ 64-agent acceptance bar) ride
+    // the same contract, under the repack rebalancer so the mid-run
+    // re-solve path is covered at scale.
+    for n in [64usize, 256] {
+        let mut cfg = SimConfig::paper();
+        cfg.arrival_rates = agentsrv::repro::synthetic_arrival_rates(n);
+        cfg.workload_kind = WorkloadKind::Dominance {
+            agent: 0, share: 0.9,
+        };
+        let registry = agentsrv::repro::synthetic_registry(n);
+        let sequential = ClusterSimulator::with_policies(
+            cfg.clone(), registry.clone(), caps.clone(),
+            PlacementStrategy::DemandAware,
+            Rebalancer::Repack(MigrationModel::default())).unwrap();
+        expected.push(sequential.run().unwrap());
+        cells.push(SweepCell::Cluster(ClusterScenario::with_policies(
+            format!("placement/synth{n}/demand/repack"), cfg, registry,
+            caps.clone(), PlacementStrategy::DemandAware,
+            Rebalancer::Repack(MigrationModel::default())).unwrap()));
+    }
+    // The rebalancing paths must actually fire inside this grid.
+    assert!(expected.iter().any(|r| r.migrations >= 1),
+            "no placement cell migrated");
+    for workers in [1usize, 2, 8] {
+        let runs = run_sweep(&cells, workers);
+        assert_eq!(runs.len(), expected.len());
+        for (got, want) in runs.iter().zip(&expected) {
+            let cluster = got.result.as_cluster()
+                .expect("placement cell yields ClusterResult");
+            assert_eq!(cluster, want, "{} @ {workers} workers",
+                       got.label);
         }
     }
 }
