@@ -22,7 +22,11 @@
 //!     rebalancer combination over the paper deployment under dominance
 //!     skew, plus synthetic 16/64/256-agent registries on
 //!     mixed-capacity devices (the large-N cells are where placement
-//!     cost actually shows).
+//!     cost actually shows);
+//!   * faults — `repro::fault_grid`: seeded fault injection across all
+//!     three shells (eviction rate × recovery policy on the cluster,
+//!     shed policy on the serving layer, every allocator on the fluid
+//!     shell), as `FaultScenario` cells.
 //!
 //! `--quick` shrinks everything to 500 steps × 2 seeds for CI.
 //!
@@ -41,8 +45,8 @@
 //! Run: `cargo bench --bench sweep_scaling [-- --quick] [-- --json FILE]`
 //! With `--json`, the measured tables are also written as JSON (the
 //! format documented in BENCH_sweep.json, `results` key: the single-GPU
-//! table plus `cluster`, `corpus`, `cost`, `serving`, and `placement`
-//! sections). The
+//! table plus `cluster`, `corpus`, `cost`, `serving`, `placement`, and
+//! `faults` sections). The
 //! written report is what CI's bench-regression gate compares against
 //! the committed BENCH_sweep.json baseline (`agentsrv bench-gate`).
 
@@ -143,6 +147,11 @@ fn main() {
         "placement grid", &placement_cells, steps, reps,
         sequential_cluster);
 
+    // ---- Fault-injection grid through the same pool -------------------
+    let fault_cells = repro::fault_grid(steps, &seeds);
+    let (fault_seq_s, fault_rows) = sweep_section(
+        "fault grid", &fault_cells, steps, reps, sequential_fault);
+
     if let Some(path) = json_path {
         let json = to_json(&ReportInput {
             grid: &grid,
@@ -156,6 +165,7 @@ fn main() {
             serving: (serving_cells.len(), serving_seq_s, &serving_rows),
             placement: (placement_cells.len(), placement_seq_s,
                         &placement_rows),
+            faults: (fault_cells.len(), fault_seq_s, &fault_rows),
         }, &path);
         std::fs::write(&path, json).expect("write json report");
         println!("\njson report -> {path}");
@@ -224,6 +234,31 @@ fn sequential_serving(cells: &[SweepCell]) -> Vec<SweepRun> {
             }
         }
         _ => unreachable!("serving grid contains only serving cells"),
+    }).collect()
+}
+
+/// The pre-batch fault path: dispatch each fault cell to its shell's
+/// fresh-buffer sequential runner (the fault config rides in the cell's
+/// config, so the sequential twin injects identically).
+fn sequential_fault(cells: &[SweepCell]) -> Vec<SweepRun> {
+    cells.iter().map(|cell| match cell {
+        SweepCell::Fault(fs) => {
+            let result = if let Some(cs) = fs.as_cluster_scenario() {
+                CellResult::Cluster(
+                    cs.simulator().run().expect("feasible fault cell"))
+            } else if let Some(sc) = fs.as_serving_scenario() {
+                let mut policy = policy_by_name(sc.policy.name())
+                    .expect("grid uses built-in policies");
+                CellResult::Serving(sc.simulator().run(policy.as_mut()))
+            } else {
+                let sc = fs.as_single().expect("single fault cell");
+                let mut policy = policy_by_name(sc.policy.name())
+                    .expect("grid uses built-in policies");
+                CellResult::Sim(sc.simulator().run(policy.as_mut()))
+            };
+            SweepRun { label: fs.label().to_string(), result }
+        }
+        _ => unreachable!("fault grid contains only fault cells"),
     }).collect()
 }
 
@@ -341,6 +376,8 @@ struct ReportInput<'a> {
     serving: (usize, f64, &'a [(usize, f64, f64)]),
     /// (cells, sequential seconds, per-worker rows).
     placement: (usize, f64, &'a [(usize, f64, f64)]),
+    /// (cells, sequential seconds, per-worker rows).
+    faults: (usize, f64, &'a [(usize, f64, f64)]),
 }
 
 fn worker_rows(n_cells: usize, rows: &[(usize, f64, f64)]) -> Value {
@@ -380,6 +417,7 @@ fn results_value(input: &ReportInput<'_>) -> Value {
     let (serving_cells, serving_seq_s, serving_rows) = input.serving;
     let (placement_cells, placement_seq_s, placement_rows) =
         input.placement;
+    let (fault_cells, fault_seq_s, fault_rows) = input.faults;
     json::obj(vec![
         ("grid", json::obj(vec![
             ("scenarios", json::num(n as f64)),
@@ -407,6 +445,8 @@ fn results_value(input: &ReportInput<'_>) -> Value {
         ("placement",
          sweep_section_value(placement_cells, placement_seq_s,
                              placement_rows)),
+        ("faults",
+         sweep_section_value(fault_cells, fault_seq_s, fault_rows)),
     ])
 }
 

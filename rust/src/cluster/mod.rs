@@ -16,19 +16,32 @@
 //!        |                 *within* each GPU over the agents placed
 //!        v                 there, against that device's own capacity
 //!   Rebalancer             runtime reaction to demand imbalance:
-//!                          static / hottest-agent-off-hottest-GPU /
-//!                          re-pack-from-scratch — every migration pays
-//!                          a model-size-dependent transfer stall (the
+//!        |                 static / hottest-agent-off-hottest-GPU /
+//!        v                 re-pack-from-scratch — every migration pays
+//!   Fault layer            a model-size-dependent transfer stall (the
 //!                          "inter-GPU communication overhead" model)
+//!
+//!                          seeded FaultPlan evictions mark devices
+//!                          offline mid-run; displaced agents recover
+//!                          through the SAME Rebalancer, with one bound
+//!                          on top — the repack throttle caps the agent
+//!                          fraction a single recovery repack may move,
+//!                          so the failure response is itself bounded.
+//!                          Re-hosted agents optionally pay a rewarm
+//!                          cold start; the outage's cost surfaces as
+//!                          ClusterResult::resilience (zero-cost None
+//!                          when no faults are configured)
 //! ```
 //!
 //! [`ClusterSimulator`] extends the §IV.B discrete-time methodology to M
 //! GPUs so placement/rebalancing policies can be evaluated with the same
 //! metrics as the single-GPU experiments: `repro::cluster_grid` sweeps
 //! strategy × rebalancer (plus synthetic large-N registries) as grid
-//! axes, `agentsrv repro --exp placement` prints the head-to-head
-//! comparison, and the property suite asserts parallel sweep runs
-//! bit-identical to sequential ones.
+//! axes, `repro::fault_grid` layers seeded spot-eviction plans on top
+//! (`agentsrv repro --exp faults`), `agentsrv repro --exp placement`
+//! prints the head-to-head comparison, and the property suite asserts
+//! parallel sweep runs bit-identical to sequential ones — faulted cells
+//! included.
 
 mod hierarchical;
 mod placement;

@@ -8,6 +8,7 @@ use crate::cluster::{ClusterAllocator, Placement, PlacementScratch,
 use crate::error::Result;
 use crate::metrics::Streaming;
 use crate::serverless::{EconInstruments, EconomicsReport};
+use crate::sim::fault::{ClusterFaultTracker, ResilienceReport};
 use crate::sim::SimConfig;
 use crate::workload::WorkloadGenerator;
 
@@ -185,6 +186,11 @@ pub struct ClusterResult {
     /// when the run's config enabled an
     /// [`EconomicsModel`](crate::serverless::EconomicsModel).
     pub economics: Option<EconomicsReport>,
+    /// Eviction recovery accounting (degraded time, recovery
+    /// migrations, throttled-repack disruption), present when the run's
+    /// config set a non-inert
+    /// [`FaultConfig`](crate::sim::fault::FaultConfig).
+    pub resilience: Option<ResilienceReport>,
 }
 
 impl ClusterResult {
@@ -324,6 +330,13 @@ impl ClusterSimulator {
         let mut migration_stall_s = 0.0f64;
         let mut last_migration_at = f64::NEG_INFINITY;
 
+        // Optional fault injection — evictions mark devices offline,
+        // stalls extend stalled_until; zero-cost when no faults are
+        // configured (every hook no-ops, same as EconInstruments).
+        let mut fault = ClusterFaultTracker::new(
+            cfg.faults.as_ref(), n_gpus, cfg.seed);
+        let mut processed_sum = 0.0f64;
+
         for step in 0..cfg.steps {
             let now = step as f64 * cfg.dt;
             workload.step(step, cfg.dt, &mut rates[..], &mut counts[..]);
@@ -332,14 +345,72 @@ impl ClusterSimulator {
                 observed[i] = counts[i] / cfg.dt;
             }
 
+            // Fault recovery: agents sitting on an evicted device
+            // re-place through the Repack rebalancer against the
+            // surviving capacities, throttled so one recovery repack
+            // never moves more than the configured agent fraction
+            // (leftover agents retry on later steps). Other rebalancers
+            // wait the outage out — their agents forfeit until the
+            // device returns. Each recovery move pays its transfer
+            // stall plus an optional serverless rewarm cold start.
+            fault.advance(now, &mut stalled_until[..]);
+            if fault.any_offline(now) {
+                if let Rebalancer::Repack(mig) = &self.rebalancer {
+                    let needs_recovery = (0..n).any(|i| fault.gpu_offline(
+                        allocator.placement().gpu_of[i], now));
+                    let max_moves = fault.max_moves(n);
+                    if needs_recovery && max_moves > 0 {
+                        let eff =
+                            fault.effective_caps(&self.capacities, now);
+                        if self.strategy.place_into(
+                            &self.registry, eff, &observed[..],
+                            placement_scratch, repack_gpu_of).is_ok()
+                        {
+                            let mut moves = 0usize;
+                            for agent in 0..n {
+                                if moves >= max_moves {
+                                    break;
+                                }
+                                let cur =
+                                    allocator.placement().gpu_of[agent];
+                                if !fault.gpu_offline(cur, now)
+                                    || repack_gpu_of[agent] == cur {
+                                    continue;
+                                }
+                                let transfer_s =
+                                    model_mb[agent] as f64 / mig.mb_per_s;
+                                let rewarm_s =
+                                    fault.rewarm_s(model_mb[agent]);
+                                stalled_until[agent] =
+                                    now + transfer_s + rewarm_s;
+                                migration_stall_s += transfer_s;
+                                migrations += 1;
+                                allocator.migrate(&self.registry, agent,
+                                                  repack_gpu_of[agent]);
+                                moves += 1;
+                            }
+                            if moves > 0 {
+                                fault.note_recovery(moves, n);
+                                last_migration_at = now;
+                            }
+                        }
+                    }
+                }
+            }
+
             // Cluster-level rebalance, dispatched on the Rebalancer.
             // Both active variants share the trigger: per-GPU demand
             // imbalance above threshold, subject to cooldown. The check
             // path is allocation-free — demand lives in the arena and
             // the candidate scans walk `gpu_of` directly.
             if let Some(mig) = self.rebalancer.model() {
-                let cooled_down = now >= last_migration_at + mig.cooldown_s
-                    || migrations == 0;
+                // While a device is offline the recovery path above owns
+                // placement — an imbalance repack would re-solve against
+                // the full capacities and move agents back onto the
+                // evicted device.
+                let cooled_down = (now >= last_migration_at + mig.cooldown_s
+                    || migrations == 0)
+                    && !fault.any_offline(now);
                 let mut triggered = (false, 0usize, 0usize);
                 if cooled_down {
                     demand.fill(0.0);
@@ -441,10 +512,17 @@ impl ClusterSimulator {
             // in flight; a scaled-to-zero agent is cold or still warming.
             // (warm_fraction tracks instance warmth only — migration
             // stalls are reported via migration_stall_s.)
+            let mut on_offline_device = false;
             for i in 0..n {
-                if now < stalled_until[i] {
+                let offline = fault.gpu_offline(
+                    allocator.placement().gpu_of[i], now);
+                on_offline_device |= offline;
+                if now < stalled_until[i] || offline {
                     alloc[i] = 0.0;
                 }
+            }
+            if on_offline_device {
+                fault.note_degraded(cfg.dt);
             }
             econ.apply_lifecycle(step, cfg.dt, &queues[..], &model_mb[..],
                                  &mut alloc[..]);
@@ -459,6 +537,7 @@ impl ClusterSimulator {
                 let cap = rate * cfg.dt;
                 let processed = queues[i].min(cap);
                 queues[i] -= processed;
+                processed_sum += processed;
                 let w = if rate > 0.0 {
                     (queues[i] / rate).min(cfg.latency_cap_s)
                 } else if queues[i] > 0.0 {
@@ -482,6 +561,8 @@ impl ClusterSimulator {
 
         let (cost_dollars, _gpu_seconds, economics) =
             econ.finish(cfg.steps);
+        let resilience = fault.finish(
+            processed_sum / (cfg.steps as f64 * cfg.dt).max(1e-9));
 
         Ok(ClusterResult {
             n_gpus,
@@ -493,6 +574,7 @@ impl ClusterSimulator {
             migration_stall_s,
             cost_dollars,
             economics,
+            resilience,
         })
     }
 }
@@ -757,6 +839,197 @@ mod tests {
             assert!(fresh.economics.is_some());
             assert_eq!(reused, fresh);
         }
+    }
+
+    #[test]
+    fn eviction_of_high_priority_host_recovers_via_throttled_repack() {
+        use crate::sim::fault::{FaultConfig, FaultEvent, FaultPlan};
+        // Find the device hosting the High-priority reasoning agent.
+        let base = ClusterSimulator::with_policies(
+            SimConfig::paper(), AgentRegistry::paper(), vec![1.2, 1.2],
+            PlacementStrategy::HeadroomDecreasing,
+            Rebalancer::Repack(MigrationModel::default())).unwrap();
+        let victim_gpu = base.placement().gpu_of[3];
+        let displaced = base.placement().gpu_of.iter()
+            .filter(|g| **g == victim_gpu).count();
+        assert!(displaced < 4, "placement must use both devices");
+
+        // Throttle to one move per repack (⌊0.25 · 4⌋ = 1): recovery
+        // spreads over several steps instead of one big shuffle.
+        let throttle = 0.25;
+        let mut cfg = SimConfig::paper();
+        cfg.faults = Some(FaultConfig::new(FaultPlan::new(vec![
+            FaultEvent::GpuEviction {
+                t: 20.0, gpu: victim_gpu, duration: 40.0,
+            },
+        ])).with_repack_throttle(throttle));
+        let sim = ClusterSimulator::with_policies(
+            cfg, AgentRegistry::paper(), vec![1.2, 1.2],
+            PlacementStrategy::HeadroomDecreasing,
+            Rebalancer::Repack(MigrationModel::default())).unwrap();
+        let r = sim.run().unwrap();
+        let rep = r.resilience.as_ref().expect("faults configured");
+        // Every displaced agent eventually re-placed (min-GPU
+        // feasibility held: the surviving 1.2 device fits all four).
+        assert!(r.migrations >= displaced as u64,
+                "{} recovery moves for {displaced} displaced agents",
+                r.migrations);
+        assert!(rep.retried >= displaced as u64);
+        // No single recovery repack exceeded the configured fraction.
+        assert!(rep.disruption <= throttle + 1e-9,
+                "disruption {} vs throttle {throttle}", rep.disruption);
+        assert!(rep.disruption > 0.0);
+        assert!(rep.recovery_time_s < 40.0,
+                "recovery must beat the outage, got {}",
+                rep.recovery_time_s);
+        // Everyone — including the High-priority agent — keeps serving.
+        assert!(r.agent_throughputs.iter().all(|t| *t > 0.0), "{r:?}");
+    }
+
+    #[test]
+    fn recovery_repack_is_fully_throttleable() {
+        use crate::sim::fault::{FaultConfig, FaultEvent, FaultPlan};
+        // A fraction below 1/n disables recovery: agents wait the
+        // outage out exactly like the static rebalancer.
+        let base = ClusterSimulator::with_policies(
+            SimConfig::paper(), AgentRegistry::paper(), vec![1.2, 1.2],
+            PlacementStrategy::HeadroomDecreasing,
+            Rebalancer::Repack(MigrationModel::default())).unwrap();
+        let victim_gpu = base.placement().gpu_of[3];
+        let mut cfg = SimConfig::paper();
+        cfg.faults = Some(FaultConfig::new(FaultPlan::new(vec![
+            FaultEvent::GpuEviction {
+                t: 20.0, gpu: victim_gpu, duration: 40.0,
+            },
+        ])).with_repack_throttle(0.1));
+        let sim = ClusterSimulator::with_policies(
+            cfg, AgentRegistry::paper(), vec![1.2, 1.2],
+            PlacementStrategy::HeadroomDecreasing,
+            Rebalancer::Repack(MigrationModel::default())).unwrap();
+        let r = sim.run().unwrap();
+        assert_eq!(r.migrations, 0, "⌊0.1 · 4⌋ = 0 moves allowed");
+        let rep = r.resilience.as_ref().expect("faults configured");
+        assert_eq!(rep.disruption, 0.0);
+        assert!((rep.recovery_time_s - 40.0).abs() < 1e-9,
+                "agents sat out the whole outage, got {}",
+                rep.recovery_time_s);
+    }
+
+    #[test]
+    fn throttled_repack_beats_static_under_eviction() {
+        use crate::sim::fault::{FaultConfig, FaultEvent, FaultPlan};
+        let fault_cfg = |rebalancer: Rebalancer| {
+            let base = ClusterSimulator::with_policies(
+                SimConfig::paper(), AgentRegistry::paper(),
+                vec![1.2, 1.2], PlacementStrategy::HeadroomDecreasing,
+                rebalancer.clone()).unwrap();
+            let victim = base.placement().gpu_of[3];
+            let mut cfg = SimConfig::paper();
+            cfg.faults = Some(FaultConfig::new(FaultPlan::new(vec![
+                FaultEvent::GpuEviction {
+                    t: 20.0, gpu: victim, duration: 40.0,
+                },
+            ])).with_repack_throttle(0.5));
+            ClusterSimulator::with_policies(
+                cfg, AgentRegistry::paper(), vec![1.2, 1.2],
+                PlacementStrategy::HeadroomDecreasing, rebalancer)
+                .unwrap().run().unwrap()
+        };
+        let repack =
+            fault_cfg(Rebalancer::Repack(MigrationModel::default()));
+        let fixed = fault_cfg(Rebalancer::Static);
+        let r_rep = repack.resilience.as_ref().unwrap();
+        let r_fix = fixed.resilience.as_ref().unwrap();
+        assert!(r_rep.goodput > r_fix.goodput,
+                "recovery must out-serve waiting: {} vs {}",
+                r_rep.goodput, r_fix.goodput);
+        assert!(r_rep.recovery_time_s < r_fix.recovery_time_s,
+                "recovery shortens degraded time: {} vs {}",
+                r_rep.recovery_time_s, r_fix.recovery_time_s);
+        assert_eq!(fixed.migrations, 0);
+    }
+
+    #[test]
+    fn eviction_on_rebalance_window_is_deterministic() {
+        use crate::sim::fault::{FaultConfig, FaultEvent, FaultPlan};
+        // Eviction landing exactly on the imbalance-rebalance window
+        // (t = cooldown_s = 10.0) while dominance skew has the repack
+        // rebalancer firing: replays and arena reuse stay bit-identical.
+        let mut cfg = SimConfig::paper();
+        cfg.workload_kind = WorkloadKind::Dominance {
+            agent: 0, share: 0.9,
+        };
+        cfg.faults = Some(FaultConfig::new(FaultPlan::new(vec![
+            FaultEvent::GpuEviction { t: 10.0, gpu: 0, duration: 15.0 },
+        ])).with_repack_throttle(0.5));
+        let sim = ClusterSimulator::with_policies(
+            cfg, AgentRegistry::paper(), vec![1.2, 1.2],
+            PlacementStrategy::DemandAware,
+            Rebalancer::Repack(MigrationModel::default())).unwrap();
+        let a = sim.run().unwrap();
+        let b = sim.run().unwrap();
+        assert_eq!(a, b);
+        let mut arena = ClusterArena::new();
+        let c = sim.run_with_arena(&mut arena).unwrap();
+        assert_eq!(a, c);
+        assert!(a.resilience.is_some());
+    }
+
+    #[test]
+    fn rewarm_cold_start_costs_recovery_goodput() {
+        use crate::sim::fault::{FaultConfig, FaultEvent, FaultPlan};
+        let run = |rewarm: bool| {
+            let base = ClusterSimulator::with_policies(
+                SimConfig::paper(), AgentRegistry::paper(),
+                vec![1.2, 1.2], PlacementStrategy::HeadroomDecreasing,
+                Rebalancer::Repack(MigrationModel::default())).unwrap();
+            let victim = base.placement().gpu_of[3];
+            let mut fc = FaultConfig::new(FaultPlan::new(vec![
+                FaultEvent::GpuEviction {
+                    t: 20.0, gpu: victim, duration: 40.0,
+                },
+            ])).with_repack_throttle(0.5);
+            if rewarm {
+                fc = fc.with_rewarm(
+                    crate::serverless::ColdStartModel::default_platform());
+            }
+            let mut cfg = SimConfig::paper();
+            cfg.faults = Some(fc);
+            ClusterSimulator::with_policies(
+                cfg, AgentRegistry::paper(), vec![1.2, 1.2],
+                PlacementStrategy::HeadroomDecreasing,
+                Rebalancer::Repack(MigrationModel::default()))
+                .unwrap().run().unwrap()
+        };
+        let cold = run(true);
+        let warm = run(false);
+        assert!(cold.resilience.as_ref().unwrap().goodput
+                < warm.resilience.as_ref().unwrap().goodput,
+                "rewarm must cost serving time");
+        // The rewarm draw is seeded: the run replays identically.
+        assert_eq!(cold, run(true));
+    }
+
+    #[test]
+    fn empty_fault_plan_cluster_is_bit_identical_to_plain() {
+        use crate::sim::fault::{FaultConfig, FaultPlan};
+        let mut cfg = SimConfig::paper();
+        cfg.workload_kind = WorkloadKind::Dominance {
+            agent: 0, share: 0.9,
+        };
+        let plain = ClusterSimulator::with_policies(
+            cfg.clone(), AgentRegistry::paper(), vec![1.0, 1.0],
+            PlacementStrategy::DemandAware,
+            Rebalancer::Repack(MigrationModel::default()))
+            .unwrap().run().unwrap();
+        cfg.faults = Some(FaultConfig::new(FaultPlan::empty()));
+        let gated = ClusterSimulator::with_policies(
+            cfg, AgentRegistry::paper(), vec![1.0, 1.0],
+            PlacementStrategy::DemandAware,
+            Rebalancer::Repack(MigrationModel::default()))
+            .unwrap().run().unwrap();
+        assert_eq!(plain, gated);
+        assert!(gated.resilience.is_none());
     }
 
     #[test]

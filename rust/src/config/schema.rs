@@ -283,6 +283,7 @@ impl DeploymentConfig {
             seed: self.workload.seed,
             record_timelines: false,
             economics: None,
+            faults: None,
         })
     }
 }

@@ -1,9 +1,10 @@
 //! The coordinator → specialists → coordinator workflow.
 
+use std::sync::mpsc::Receiver;
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
-use crate::server::AgentServer;
+use crate::server::{AgentServer, CompletedRequest};
 use crate::util::Rng;
 
 /// What kind of collaborative task a request is.
@@ -145,8 +146,7 @@ impl ReasoningPipeline {
         }
         let mut specialist_tokens = Vec::with_capacity(pending.len());
         for (name, rx) in pending {
-            let done = rx.recv().map_err(|_| Error::Serving(
-                format!("{name} stage dropped")))??;
+            let done = collect_stage(name, &rx)?;
             specialist_tokens.push(done.next_token);
             stages.push(StageResult {
                 agent: done.agent,
@@ -170,6 +170,16 @@ impl ReasoningPipeline {
 
         Ok(WorkflowResult { kind, stages, total: start.elapsed() })
     }
+}
+
+/// Wait for one specialist stage. A worker that panics or shuts down
+/// mid-stage drops its reply sender; that surfaces here as a labelled
+/// error rather than a hang (`recv` returns immediately once the
+/// sending side is gone).
+fn collect_stage(name: &str, rx: &Receiver<Result<CompletedRequest>>)
+                 -> Result<CompletedRequest> {
+    rx.recv().map_err(|_| Error::Serving(
+        format!("{name} stage dropped")))?
 }
 
 #[cfg(test)]
@@ -217,5 +227,29 @@ mod tests {
         let p = ReasoningPipeline { seq_len: 8, vocabs: vec![] };
         assert_eq!(p.prompt(512, 1, &[5]), p.prompt(512, 1, &[5]));
         assert_ne!(p.prompt(512, 1, &[]), p.prompt(512, 2, &[]));
+    }
+
+    #[test]
+    fn dropped_stage_surfaces_labelled_error_not_a_hang() {
+        // A worker that panics mid-stage drops its reply sender; the
+        // pipeline must turn that into an error naming the stage.
+        let (tx, rx) =
+            std::sync::mpsc::channel::<Result<CompletedRequest>>();
+        drop(tx);
+        let err = collect_stage("vision", &rx).unwrap_err();
+        assert!(matches!(err, Error::Serving(_)), "{err:?}");
+        assert!(err.to_string().contains("vision stage dropped"),
+                "{err}");
+    }
+
+    #[test]
+    fn failed_stage_error_propagates_through_collect() {
+        let (tx, rx) =
+            std::sync::mpsc::channel::<Result<CompletedRequest>>();
+        tx.send(Err(Error::Serving("executor exhausted retries".into())))
+            .unwrap();
+        let err = collect_stage("nlp", &rx).unwrap_err();
+        assert!(err.to_string().contains("executor exhausted retries"),
+                "{err}");
     }
 }

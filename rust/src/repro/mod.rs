@@ -7,6 +7,7 @@
 
 mod economics;
 mod experiments;
+mod faults;
 mod placement;
 mod robustness;
 mod serving;
@@ -14,6 +15,8 @@ mod serving;
 pub use economics::{coldstart_axis, cost_grid, economics_experiment,
                     idle_burst_config, idle_timeout_axis, pricing_axis,
                     EconomicsRow};
+pub use faults::{eviction_rate_axis, fault_experiment, fault_grid,
+                 FaultRow};
 pub use experiments::{fig2a, fig2b, fig2c, fig2d, table1, table2,
                       CostPerfPoint, PerAgentSeries};
 pub use placement::{adversarial_rates, adversarial_registry,
@@ -39,7 +42,7 @@ use crate::metrics::export;
 /// `fig2b_throughput.csv`, `fig2c_allocation.csv`, `fig2d_cost_perf.csv`,
 /// `robustness_overload.csv`, `robustness_spike.csv`,
 /// `robustness_dominance.csv`, `allocator_scaling.csv`, `economics.csv`,
-/// `serving.csv`, `placement.csv`.
+/// `serving.csv`, `faults.csv`, `placement.csv`.
 pub fn write_all(dir: &Path) -> Result<()> {
     std::fs::create_dir_all(dir)?;
 
@@ -171,6 +174,20 @@ pub fn write_all(dir: &Path) -> Result<()> {
         ])).collect::<Vec<_>>(),
     )?;
 
+    // Fault injection: graceful degradation under capacity loss, spot
+    // eviction, and bounded-queue overload.
+    let ft = fault_experiment(100);
+    export::table_csv(
+        &dir.join("faults.csv"),
+        &["cell", "goodput_rps", "high_priority_goodput_rps",
+          "recovery_time_s", "shed_fraction", "retried", "disruption"],
+        &ft.iter().map(|r| (r.label.clone(), vec![
+            r.goodput_rps, r.high_priority_goodput_rps,
+            r.recovery_time_s, r.shed_fraction, r.retried as f64,
+            r.disruption,
+        ])).collect::<Vec<_>>(),
+    )?;
+
     // §VI placement: strategy × rebalancer head-to-head over the
     // adversarial priority registry.
     let pl = placement_experiment(100);
@@ -203,7 +220,7 @@ mod tests {
                   "fig2d_cost_perf.csv", "robustness_overload.csv",
                   "robustness_spike.csv", "robustness_dominance.csv",
                   "allocator_scaling.csv", "economics.csv",
-                  "serving.csv", "placement.csv"] {
+                  "serving.csv", "faults.csv", "placement.csv"] {
             let p = dir.path().join(f);
             assert!(p.exists(), "{f} missing");
             assert!(std::fs::metadata(&p).unwrap().len() > 0, "{f} empty");

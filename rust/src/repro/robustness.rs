@@ -306,12 +306,14 @@ pub fn trace_grid(steps: u64, seeds: &[u64]) -> Vec<SweepCell> {
     cells
 }
 
-/// The whole §V.B + §VI + economics + serving evaluation surface as one
-/// heterogeneous grid: the single-GPU stress grid, the cluster grid,
-/// the trace-replay cells, the serverless-economics cost grid
-/// ([`crate::repro::cost_grid`]), and the serving-layer queue-path grid
-/// ([`crate::repro::serving_grid`], 10 virtual seconds per cell), mixed
-/// for one `run_sweep` call through one worker pool.
+/// The whole §V.B + §VI + economics + serving + fault evaluation
+/// surface as one heterogeneous grid: the single-GPU stress grid, the
+/// cluster grid, the trace-replay cells, the serverless-economics cost
+/// grid ([`crate::repro::cost_grid`]), the serving-layer queue-path
+/// grid ([`crate::repro::serving_grid`], 10 virtual seconds per cell),
+/// and the fault-injection grid ([`crate::repro::fault_grid`] —
+/// eviction rate × recovery policy × shed policy × allocator × seed),
+/// mixed for one `run_sweep` call through one worker pool.
 pub fn stress_sweep(steps: u64, seeds: &[u64]) -> Vec<SweepCell> {
     let mut cells: Vec<SweepCell> = stress_grid(steps, seeds)
         .into_iter().map(SweepCell::Single).collect();
@@ -319,6 +321,7 @@ pub fn stress_sweep(steps: u64, seeds: &[u64]) -> Vec<SweepCell> {
     cells.extend(trace_grid(steps, seeds));
     cells.extend(crate::repro::cost_grid(steps, seeds));
     cells.extend(crate::repro::serving_grid(10.0, seeds));
+    cells.extend(crate::repro::fault_grid(steps, seeds));
     cells
 }
 
@@ -515,7 +518,7 @@ mod tests {
     }
 
     #[test]
-    fn stress_sweep_mixes_all_five_cell_kinds() {
+    fn stress_sweep_mixes_all_six_cell_kinds() {
         let seeds = [1u64, 2];
         let cells = stress_sweep(10, &seeds);
         let singles = cells.iter()
@@ -528,6 +531,8 @@ mod tests {
             .filter(|c| matches!(c, SweepCell::Cost(_))).count();
         let servings = cells.iter()
             .filter(|c| matches!(c, SweepCell::Serving(_))).count();
+        let faults = cells.iter()
+            .filter(|c| matches!(c, SweepCell::Fault(_))).count();
         assert_eq!(singles, stress_grid(10, &seeds).len());
         assert_eq!(clusters, cluster_grid(10).len());
         assert_eq!(traces,
@@ -535,10 +540,12 @@ mod tests {
         assert_eq!(costs, crate::repro::cost_grid(10, &seeds).len());
         assert_eq!(servings,
                    crate::repro::serving_grid(10.0, &seeds).len());
+        assert_eq!(faults, crate::repro::fault_grid(10, &seeds).len());
         assert_eq!(cells.len(),
-                   singles + clusters + traces + costs + servings);
+                   singles + clusters + traces + costs + servings
+                       + faults);
         assert!(singles > 0 && clusters > 0 && traces > 0 && costs > 0
-                && servings > 0);
+                && servings > 0 && faults > 0);
     }
 
     #[test]

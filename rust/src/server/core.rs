@@ -15,6 +15,7 @@ use crate::agents::AgentRegistry;
 use crate::allocator::{AllocContext, AllocationPolicy};
 use crate::metrics::Histogram;
 use crate::server::GpuGovernor;
+use crate::sim::fault::RetryPolicy;
 
 /// A source of timestamps the core can subtract. The core never *reads*
 /// a clock — drivers hand it instants — so the same scheduling code runs
@@ -148,6 +149,8 @@ pub struct ServingCore<C: Clock, P: AllocationPolicy> {
     step: u64,
     stats: Vec<AgentCounters>,
     trajectory: Option<Vec<Vec<f64>>>,
+    retry: RetryPolicy,
+    retried: u64,
 }
 
 impl<C: Clock, P: AllocationPolicy> ServingCore<C, P> {
@@ -173,6 +176,8 @@ impl<C: Clock, P: AllocationPolicy> ServingCore<C, P> {
             step: 0,
             stats: (0..n).map(|_| AgentCounters::new()).collect(),
             trajectory: record_trajectory.then(Vec::new),
+            retry: RetryPolicy::none(),
+            retried: 0,
             registry,
             policy,
             alloc_window_s,
@@ -269,6 +274,42 @@ impl<C: Clock, P: AllocationPolicy> ServingCore<C, P> {
                                service_s: f64) {
         self.governor.charge(agent, service_s);
         self.stats[agent].errors += batch_size as u64;
+    }
+
+    /// Replace the retry policy (default: [`RetryPolicy::none`], the
+    /// pre-fault-layer fail-permanently semantic).
+    pub fn set_retry(&mut self, retry: RetryPolicy) {
+        self.retry = retry;
+    }
+
+    /// The active retry policy.
+    pub fn retry(&self) -> &RetryPolicy {
+        &self.retry
+    }
+
+    /// Batches that failed transiently and were retried.
+    pub fn retried_batches(&self) -> u64 {
+        self.retried
+    }
+
+    /// Account one failed execution attempt (`attempt` is 0-based) and
+    /// decide what the driver does next — the single failure semantic
+    /// both the threaded server and the simulator share. The consumed
+    /// GPU time is always charged to the governor. Returns
+    /// `Some(backoff_s)` when the batch should be retried after that
+    /// backoff, or `None` when attempts are exhausted and the batch's
+    /// requests are counted as errors (exactly
+    /// [`record_failed_batch`](ServingCore::record_failed_batch)).
+    pub fn on_batch_failure(&mut self, agent: usize, batch_size: usize,
+                            service_s: f64, attempt: u32) -> Option<f64> {
+        self.governor.charge(agent, service_s);
+        if attempt + 1 < self.retry.max_attempts {
+            self.retried += 1;
+            Some(self.retry.backoff_for(attempt))
+        } else {
+            self.stats[agent].errors += batch_size as u64;
+            None
+        }
     }
 
     /// Record one completed request's end-to-end latency.
@@ -374,6 +415,33 @@ mod tests {
     fn last_allocation_is_zero_before_the_first_window() {
         let c = core();
         assert_eq!(c.last_allocation(), &[0.0; 4]);
+    }
+
+    #[test]
+    fn on_batch_failure_retries_then_fails_permanently() {
+        let mut c = core();
+        c.set_retry(RetryPolicy::bounded());
+        // bounded() = 3 attempts, 0.01 s backoff, ×2 per attempt.
+        let b0 = c.on_batch_failure(1, 3, 0.005, 0).expect("retry 1");
+        assert!((b0 - 0.01).abs() < 1e-12, "{b0}");
+        let b1 = c.on_batch_failure(1, 3, 0.005, 1).expect("retry 2");
+        assert!((b1 - 0.02).abs() < 1e-12, "{b1}");
+        assert_eq!(c.on_batch_failure(1, 3, 0.005, 2), None,
+                   "attempts exhausted");
+        assert_eq!(c.retried_batches(), 2);
+        assert_eq!(c.total_errors(), 3, "errors counted only at exhaustion");
+        // GPU time was charged for every attempt.
+        assert!((c.gpu_busy_seconds() - 0.015).abs() < 1e-12);
+    }
+
+    #[test]
+    fn default_retry_none_matches_record_failed_batch() {
+        let mut a = core();
+        let mut b = core();
+        assert_eq!(a.on_batch_failure(2, 5, 0.01, 0), None);
+        b.record_failed_batch(2, 5, 0.01);
+        assert_eq!(a.total_errors(), b.total_errors());
+        assert_eq!(a.retried_batches(), 0);
     }
 
     #[test]

@@ -14,6 +14,15 @@
 //!                    │ 2. GpuGovernor stride pick (wakeup snaps)   │
 //!                    │ 3. per-batch governor charge + stats        │
 //!                    │    (latency histograms, batches, GPU time)  │
+//!                    │ 4. degradation: on_batch_failure consults   │
+//!                    │    RetryPolicy — Some(backoff) = retry the  │
+//!                    │    batch, None = retries exhausted, count   │
+//!                    │    errors (both shells share this failure   │
+//!                    │    semantic); AdmissionControl bounds the   │
+//!                    │    queues, shedding by ShedPolicy (newest / │
+//!                    │    priority / deadline) instead of queueing │
+//!                    │    unboundedly — ResilienceReport surfaces  │
+//!                    │    what the faults cost                     │
 //!                    └──────────────▲───────────────▲──────────────┘
 //!   threaded shell (AgentServer)   │               │   virtual-time shell
 //!                                  │               │   (ServingSimulator)
@@ -34,7 +43,10 @@
 //! hardware adaptation of MIG/time-slicing). Both shells inherit this
 //! from the shared core, which is what lets the sweep engine replay the
 //! serving queue path deterministically
-//! ([`SweepCell::Serving`](crate::sim::batch::SweepCell)).
+//! ([`SweepCell::Serving`](crate::sim::batch::SweepCell)) — and, with a
+//! seeded [`ServingFaults`](crate::sim::fault::ServingFaults) config
+//! (injected dispatch failures + bounded queues), replay degradation
+//! deterministically too ([`SweepCell::Fault`](crate::sim::batch::SweepCell)).
 
 mod batcher;
 pub mod core;

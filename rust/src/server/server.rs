@@ -15,6 +15,7 @@ use crate::error::{Error, Result};
 use crate::runtime::{InferenceEngine, InferenceOutput, Manifest};
 use crate::server::core::{AgentStat, Executor, ServingCore, WallClock};
 use crate::server::{AgentQueue, QueuedRequest};
+use crate::sim::fault::RetryPolicy;
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -27,16 +28,23 @@ pub struct ServerConfig {
     pub alloc_window: Duration,
     /// Total GPU capacity handed to the policy (paper: 1.0).
     pub capacity: f64,
+    /// Retry policy for failed batch executions: transient failures are
+    /// re-dispatched after a backoff through the same
+    /// [`ServingCore::on_batch_failure`] path the deterministic
+    /// simulator uses, so both shells share one failure semantic.
+    pub retry: RetryPolicy,
 }
 
 impl ServerConfig {
-    /// Defaults: `artifacts/`, adaptive policy, 100 ms window.
+    /// Defaults: `artifacts/`, adaptive policy, 100 ms window, bounded
+    /// retry (3 attempts).
     pub fn new(artifacts_dir: impl Into<PathBuf>) -> Self {
         ServerConfig {
             artifacts_dir: artifacts_dir.into(),
             policy: "adaptive".into(),
             alloc_window: Duration::from_millis(100),
             capacity: 1.0,
+            retry: RetryPolicy::bounded(),
         }
     }
 }
@@ -109,9 +117,10 @@ impl AgentServer {
         let max_batches: Vec<usize> = registry.profiles().iter().map(|p| {
             manifest.agent(&p.name).map_or(1, |a| a.max_batch())
         }).collect();
-        let core = ServingCore::<WallClock, _>::new(
+        let mut core = ServingCore::<WallClock, _>::new(
             registry.clone(), policy, cfg.alloc_window.as_secs_f64(),
             cfg.capacity, max_batches, false);
+        core.set_retry(cfg.retry.clone());
 
         let shared = Arc::new(Shared {
             queues: Mutex::new((0..n).map(|_| AgentQueue::new()).collect()),
@@ -325,31 +334,51 @@ fn serve_loop(shared: &Shared, registry: &AgentRegistry,
         }
 
         // Execute outside the locks so submitters are never blocked on
-        // PJRT.
-        let (service_s, result) = executor.execute(agent_id, &batch);
+        // PJRT. Transient failures re-dispatch after the core's backoff
+        // until the retry budget runs out.
         let name = &registry.profile(agent_id).name;
-
-        let mut core = shared.core.lock().expect("core lock");
-        match result {
-            Ok(out) => {
-                core.record_batch(agent_id, batch.len(), service_s);
-                let batch_size = out.next_tokens.len();
-                for (i, req) in batch.into_iter().enumerate() {
-                    let latency = req.enqueued.elapsed();
-                    core.record_completion(agent_id, latency.as_secs_f64());
-                    let _ = req.reply.send(Ok(CompletedRequest {
-                        agent: name.clone(),
-                        next_token: out.next_tokens[i],
-                        latency,
-                        batch_size,
-                    }));
+        let mut attempt = 0u32;
+        loop {
+            let (service_s, result) = executor.execute(agent_id, &batch);
+            match result {
+                Ok(out) => {
+                    let mut core = shared.core.lock().expect("core lock");
+                    core.record_batch(agent_id, batch.len(), service_s);
+                    let batch_size = out.next_tokens.len();
+                    for (i, req) in batch.into_iter().enumerate() {
+                        let latency = req.enqueued.elapsed();
+                        core.record_completion(agent_id,
+                                               latency.as_secs_f64());
+                        let _ = req.reply.send(Ok(CompletedRequest {
+                            agent: name.clone(),
+                            next_token: out.next_tokens[i],
+                            latency,
+                            batch_size,
+                        }));
+                    }
+                    break;
                 }
-            }
-            Err(e) => {
-                core.record_failed_batch(agent_id, batch.len(), service_s);
-                for req in batch {
-                    let _ = req.reply.send(Err(Error::Serving(
-                        format!("execution failed: {e}"))));
+                Err(e) => {
+                    let backoff = {
+                        let mut core =
+                            shared.core.lock().expect("core lock");
+                        core.on_batch_failure(agent_id, batch.len(),
+                                              service_s, attempt)
+                    };
+                    match backoff {
+                        Some(backoff_s) => {
+                            std::thread::sleep(
+                                Duration::from_secs_f64(backoff_s));
+                            attempt += 1;
+                        }
+                        None => {
+                            for req in batch {
+                                let _ = req.reply.send(Err(Error::Serving(
+                                    format!("execution failed: {e}"))));
+                            }
+                            break;
+                        }
+                    }
                 }
             }
         }

@@ -18,6 +18,7 @@ use crate::agents::{AgentProfile, AgentRegistry};
 use crate::allocator::AllocationPolicy;
 use crate::metrics::Histogram;
 use crate::server::core::{AgentStat, Executor, ServingCore, VirtualClock};
+use crate::sim::fault::{ResilienceReport, ServingFaults, ShedPolicy};
 use crate::workload::trace::Trace;
 use crate::workload::{ArrivalProcess, WorkloadGenerator, WorkloadKind};
 
@@ -47,6 +48,13 @@ pub struct ServingConfig {
     pub arrival_process: ArrivalProcess,
     /// RNG seed for the arrival stream.
     pub seed: u64,
+    /// Serving-layer fault injection ([`ServingFaults`]): transient
+    /// dispatch failures during fault windows (absorbed by the core's
+    /// bounded retry-with-backoff) and an optional admission-control
+    /// policy that sheds load when the total queue depth exceeds its
+    /// bound. `None` (and inert configs) cost nothing: the run is
+    /// bit-identical to a build without the fault layer.
+    pub faults: Option<ServingFaults>,
 }
 
 impl ServingConfig {
@@ -65,6 +73,7 @@ impl ServingConfig {
             workload_kind: WorkloadKind::Steady,
             arrival_process: ArrivalProcess::Poisson,
             seed: 42,
+            faults: None,
         }
     }
 }
@@ -175,6 +184,13 @@ pub struct ServingResult {
     /// One allocation vector per closed window (the reallocation
     /// trajectory the §V.B spike analysis reads).
     pub allocation_trajectory: Vec<Vec<f64>>,
+    /// Requests shed by admission control, per agent (all zeros when no
+    /// admission policy is configured).
+    pub shed: Vec<u64>,
+    /// Lost time, shed fraction, retries, and goodput under injected
+    /// serving faults; present when the run's config set a non-inert
+    /// [`ServingFaults`].
+    pub resilience: Option<ResilienceReport>,
 }
 
 impl ServingResult {
@@ -345,17 +361,100 @@ impl ServingSimulator {
             self.registry.clone(), policy, self.cfg.alloc_window_s,
             self.cfg.capacity, vec![self.cfg.max_batch.max(1); n], true);
 
+        // Fault layer: inert configs are dropped at construction so the
+        // no-fault path stays bit-identical (same branches taken, no
+        // extra float op or draw).
+        let faults = self.cfg.faults.as_ref().filter(|f| !f.is_inert());
+        if let Some(f) = faults {
+            core.set_retry(f.retry.clone());
+        }
+        let admission = faults.and_then(|f| f.admission.as_ref());
+        let weights: Vec<f64> = if admission.is_some() {
+            self.registry.profiles().iter()
+                .map(|p| p.priority.weight()).collect()
+        } else {
+            Vec::new()
+        };
+        let mut shed = vec![0u64; n];
+        let mut lost_s = 0.0f64;
+        let mut failed = 0u64;
+        let offered = arrivals.len() as u64;
+
         let mut now = 0.0f64;
         let mut next = 0usize;
         core.window_due(now); // anchor the first window at t = 0
 
         loop {
-            // 1. Inject every arrival due by `now`.
+            // 1. Inject every arrival due by `now`, through admission
+            //    control when one is configured.
             while next < arrivals.len() && arrivals[next].0 <= now {
                 let (t, agent) = arrivals[next];
+                next += 1;
+                if let Some(ac) = admission {
+                    let total: usize = queues.iter().map(|q| q.len()).sum();
+                    if total >= ac.max_queued {
+                        match ac.policy {
+                            ShedPolicy::DropNewest => {
+                                shed[agent] += 1;
+                                continue;
+                            }
+                            ShedPolicy::DropByPriority => {
+                                // Shed from the worst-weight backlog
+                                // (Low=3 before Medium=2 before High=1);
+                                // ties favor shedding the incoming
+                                // request, then the longer queue, then
+                                // the lowest agent id. A queued victim
+                                // loses its newest request so the
+                                // incoming one is admitted.
+                                let mut victim = agent;
+                                let mut vw = weights[agent];
+                                let mut vlen = queues[agent].len() + 1;
+                                for i in 0..n {
+                                    if queues[i].is_empty() {
+                                        continue;
+                                    }
+                                    let better = weights[i] > vw
+                                        || (weights[i] == vw
+                                            && queues[i].len() > vlen);
+                                    if better {
+                                        victim = i;
+                                        vw = weights[i];
+                                        vlen = queues[i].len();
+                                    }
+                                }
+                                shed[victim] += 1;
+                                if victim == agent {
+                                    continue;
+                                }
+                                queues[victim].pop_back();
+                            }
+                            ShedPolicy::DeadlineAware => {
+                                // Expire queue heads already older than
+                                // the deadline; if nothing is stale the
+                                // incoming request is shed instead.
+                                let cutoff = now - ac.deadline_s;
+                                let mut freed = 0u64;
+                                for (i, q) in queues.iter_mut()
+                                    .enumerate()
+                                {
+                                    while q.front()
+                                        .is_some_and(|e| *e < cutoff)
+                                    {
+                                        q.pop_front();
+                                        shed[i] += 1;
+                                        freed += 1;
+                                    }
+                                }
+                                if freed == 0 {
+                                    shed[agent] += 1;
+                                    continue;
+                                }
+                            }
+                        }
+                    }
+                }
                 queues[agent].push_back(t);
                 window_arrivals[agent] += 1;
-                next += 1;
             }
 
             // 2. Allocation-window rollover, exactly as the threaded
@@ -394,19 +493,52 @@ impl ServingSimulator {
             for _ in 0..b {
                 batch.push(queues[agent].pop_front().expect("b <= len"));
             }
-            let (service_s, result) = executor.execute(agent, &batch[..]);
-            now += service_s;
-            match result {
-                Ok(()) => {
+            // A dispatch landing inside a fault window fails
+            // transiently; the core's shared retry/backoff semantic
+            // (the same one the threaded server routes failures
+            // through) decides whether to re-dispatch or give up.
+            let mut attempt = 0u32;
+            loop {
+                let injected =
+                    faults.is_some_and(|f| f.fails_at(now, agent));
+                let (service_s, result) = executor.execute(agent,
+                                                           &batch[..]);
+                now += service_s;
+                if !injected && result.is_ok() {
                     core.record_batch(agent, b, service_s);
                     for t_enq in batch.iter() {
                         core.record_completion(agent, now - t_enq);
                     }
+                    break;
                 }
-                Err(_) => core.record_failed_batch(agent, b, service_s),
+                match core.on_batch_failure(agent, b, service_s, attempt) {
+                    Some(backoff_s) => {
+                        lost_s += service_s + backoff_s;
+                        now += backoff_s;
+                        attempt += 1;
+                    }
+                    None => {
+                        lost_s += service_s;
+                        failed += b as u64;
+                        break;
+                    }
+                }
             }
         }
 
+        let resilience = faults.map(|_| {
+            let shed_total: u64 = shed.iter().sum();
+            let frac = |x: u64| {
+                if offered > 0 { x as f64 / offered as f64 } else { 0.0 }
+            };
+            ResilienceReport {
+                recovery_time_s: lost_s,
+                shed_fraction: frac(shed_total),
+                retried: core.retried_batches(),
+                goodput: core.total_completed() as f64 / now.max(1e-9),
+                disruption: frac(failed),
+            }
+        });
         ServingResult {
             policy: core.policy_name().to_string(),
             per_agent: core.agent_stats(),
@@ -418,6 +550,8 @@ impl ServingSimulator {
             windows: core.windows_closed(),
             last_allocation: core.last_allocation().to_vec(),
             allocation_trajectory: core.take_trajectory(),
+            shed,
+            resilience,
         }
     }
 }
@@ -524,6 +658,111 @@ mod tests {
         // Same requests, more dispatches → more GPU time consumed.
         assert!(unbatched.gpu_busy_s > batched.gpu_busy_s,
                 "{} vs {}", unbatched.gpu_busy_s, batched.gpu_busy_s);
+    }
+
+    #[test]
+    fn transient_single_failure_retries_to_zero_failed() {
+        use crate::sim::fault::{FaultEvent, FaultPlan, RetryPolicy};
+        // A short eviction window at t = 0 fails the first dispatches;
+        // bounded retry with 50 ms backoff escapes the 20 ms window, so
+        // every request still completes and nothing counts as an error.
+        // Deterministic arrivals guarantee a dispatch at t = 0.
+        let mut cfg = light_cfg();
+        cfg.arrival_process = ArrivalProcess::Deterministic;
+        let plan = FaultPlan::new(vec![FaultEvent::GpuEviction {
+            t: 0.0, gpu: 0, duration: 0.02,
+        }]);
+        cfg.faults = Some(ServingFaults::new(plan).with_retry(
+            RetryPolicy { max_attempts: 4, backoff_s: 0.05,
+                          backoff_multiplier: 2.0 }));
+        let sim = ServingSimulator::with_registry(cfg.clone(),
+                                                  AgentRegistry::paper());
+        let r = sim.run(&mut AdaptivePolicy::default());
+        let rep = r.resilience.as_ref().expect("faults configured");
+        assert!(rep.retried >= 1, "the fault window was never hit");
+        assert_eq!(rep.disruption, 0.0, "no batch exhausted its retries");
+        assert!(rep.recovery_time_s > 0.0);
+        // Same offered load as the fault-free run, all of it served.
+        cfg.faults = None;
+        let clean = ServingSimulator::with_registry(
+            cfg, AgentRegistry::paper())
+            .run(&mut AdaptivePolicy::default());
+        assert_eq!(r.total_completed, clean.total_completed);
+    }
+
+    #[test]
+    fn shed_by_priority_never_sheds_high_before_lower() {
+        use crate::sim::fault::{AdmissionControl, FaultPlan};
+        // Overload driven by the Medium-priority agents; the High tiers
+        // (coordinator, reasoning) must keep their requests.
+        let mut cfg = ServingConfig::paper();
+        cfg.arrival_rates = vec![5.0, 200.0, 200.0, 5.0];
+        cfg.duration_s = 2.0;
+        cfg.faults = Some(ServingFaults::new(FaultPlan::empty())
+            .with_admission(AdmissionControl::new(
+                32, ShedPolicy::DropByPriority)));
+        let sim = ServingSimulator::with_registry(cfg,
+                                                  AgentRegistry::paper());
+        let r = sim.run(&mut AdaptivePolicy::default());
+        let rep = r.resilience.as_ref().expect("admission configured");
+        assert!(rep.shed_fraction > 0.0, "overload never tripped the cap");
+        assert!(r.shed[1] + r.shed[2] > 0, "mediums were never shed");
+        assert_eq!(r.shed[0], 0, "High-priority coordinator was shed");
+        assert_eq!(r.shed[3], 0, "High-priority reasoning was shed");
+    }
+
+    #[test]
+    fn drop_newest_with_zero_budget_sheds_everything() {
+        use crate::sim::fault::{AdmissionControl, FaultPlan};
+        let mut cfg = light_cfg();
+        cfg.faults = Some(ServingFaults::new(FaultPlan::empty())
+            .with_admission(AdmissionControl::new(
+                0, ShedPolicy::DropNewest)));
+        let sim = ServingSimulator::with_registry(cfg,
+                                                  AgentRegistry::paper());
+        let r = sim.run(&mut AdaptivePolicy::default());
+        assert_eq!(r.total_completed, 0);
+        let rep = r.resilience.as_ref().expect("admission configured");
+        assert!((rep.shed_fraction - 1.0).abs() < 1e-12,
+                "{}", rep.shed_fraction);
+        assert_eq!(rep.goodput, 0.0);
+    }
+
+    #[test]
+    fn deadline_aware_sheds_stale_heads_for_fresh_arrivals() {
+        use crate::sim::fault::{AdmissionControl, FaultPlan};
+        // Tight queue bound + overload: stale queue heads expire in
+        // favor of fresh arrivals, so completions still happen and the
+        // shed mass lands on whoever went stale — strictly fewer
+        // completions than the unbounded run, but not zero.
+        let mut cfg = ServingConfig::paper();
+        cfg.duration_s = 2.0;
+        let mut adm = AdmissionControl::new(16, ShedPolicy::DeadlineAware);
+        adm.deadline_s = 0.05;
+        cfg.faults = Some(ServingFaults::new(FaultPlan::empty())
+            .with_admission(adm));
+        let sim = ServingSimulator::with_registry(cfg,
+                                                  AgentRegistry::paper());
+        let r = sim.run(&mut AdaptivePolicy::default());
+        let rep = r.resilience.as_ref().expect("admission configured");
+        assert!(rep.shed_fraction > 0.0);
+        assert!(r.total_completed > 0, "everything was shed");
+    }
+
+    #[test]
+    fn zero_fault_serving_is_bit_identical_to_plain() {
+        use crate::sim::fault::FaultPlan;
+        let mut cfg = light_cfg();
+        cfg.faults = Some(ServingFaults::new(FaultPlan::empty()));
+        let faulted = ServingSimulator::with_registry(
+            cfg.clone(), AgentRegistry::paper())
+            .run(&mut AdaptivePolicy::default());
+        cfg.faults = None;
+        let plain = ServingSimulator::with_registry(
+            cfg, AgentRegistry::paper())
+            .run(&mut AdaptivePolicy::default());
+        assert_eq!(faulted, plain, "inert fault config changed the run");
+        assert!(faulted.resilience.is_none());
     }
 
     #[test]

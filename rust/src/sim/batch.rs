@@ -7,11 +7,13 @@
 //! [`TraceScenario`] (a recorded [`Trace`] replayed under a policy), a
 //! [`CostScenario`] (a scenario with a serverless [`EconomicsModel`]
 //! enabled — pricing × scale-to-zero timeout × cold-start
-//! distribution), or a [`ServingScenario`] (the serving-layer queue
+//! distribution), a [`ServingScenario`] (the serving-layer queue
 //! path — per-request FIFO queues, windowed allocator re-runs, stride
 //! picks, dynamic batching — replayed in virtual time through the same
 //! [`ServingCore`](crate::server::ServingCore) the threaded server
-//! drives). [`run_sweep`] fans a slice of them across
+//! drives), or a [`FaultScenario`] (any of those engines run under a
+//! deterministic fault plan — the robustness axes `repro::fault_grid`
+//! sweeps). [`run_sweep`] fans a slice of them across
 //! `std::thread::scope` workers; [`run_batch`] remains the
 //! single-GPU-only entry point over plain [`Scenario`]s. Both share one
 //! worker pool implementation: each worker owns one [`SweepArena`] (a
@@ -49,6 +51,7 @@ use crate::error::{Error, Result};
 use crate::server::{ServingArena, ServingConfig, ServingResult,
                     ServingSimulator};
 use crate::serverless::{EconomicsModel, EconomicsReport};
+use crate::sim::fault::{FaultConfig, ServingFaults};
 use crate::sim::{SimArena, SimConfig, SimResult, Simulator};
 use crate::workload::trace::{Trace, TraceCorpus};
 
@@ -367,6 +370,118 @@ impl ServingScenario {
     }
 }
 
+/// One fault-injection cell of a sweep grid: a single-GPU, cluster, or
+/// serving-layer scenario run under a deterministic fault plan — the
+/// §V robustness axes (eviction rate × recovery policy × shed policy ×
+/// allocator × seed) that `repro::fault_grid` sweeps. The wrapper
+/// injects the fault config into the inner scenario's config at
+/// construction, so a `FaultScenario` always runs with the fault layer
+/// armed (an *empty* plan is the control cell: bit-identical to the
+/// equivalent plain scenario).
+#[derive(Debug, Clone)]
+pub struct FaultScenario {
+    inner: FaultInner,
+}
+
+#[derive(Debug, Clone)]
+enum FaultInner {
+    Single(Scenario),
+    Cluster(ClusterScenario),
+    Serving(ServingScenario),
+}
+
+impl FaultScenario {
+    /// Build a single-GPU fault cell; `faults` overrides whatever the
+    /// config carried.
+    pub fn single(label: impl Into<String>, mut cfg: SimConfig,
+                  registry: AgentRegistry, policy: PolicyKind,
+                  faults: FaultConfig) -> FaultScenario {
+        cfg.faults = Some(faults);
+        FaultScenario {
+            inner: FaultInner::Single(Scenario::new(label, cfg, registry,
+                                                    policy)),
+        }
+    }
+
+    /// Build a cluster fault cell (explicit placement strategy ×
+    /// rebalancer, same validation as
+    /// [`ClusterSimulator::with_policies`]); `faults` overrides
+    /// whatever the config carried.
+    ///
+    /// [`ClusterSimulator::with_policies`]:
+    ///     crate::cluster::ClusterSimulator::with_policies
+    pub fn cluster(label: impl Into<String>, mut cfg: SimConfig,
+                   registry: AgentRegistry, capacities: Vec<f64>,
+                   strategy: PlacementStrategy, rebalancer: Rebalancer,
+                   faults: FaultConfig) -> Result<FaultScenario> {
+        cfg.faults = Some(faults);
+        Ok(FaultScenario {
+            inner: FaultInner::Cluster(ClusterScenario::with_policies(
+                label, cfg, registry, capacities, strategy, rebalancer)?),
+        })
+    }
+
+    /// Build a serving-layer fault cell (transient dispatch failures
+    /// absorbed by retry, plus optional admission control); `faults`
+    /// overrides whatever the config carried.
+    pub fn serving(label: impl Into<String>, mut cfg: ServingConfig,
+                   registry: AgentRegistry, policy: PolicyKind,
+                   faults: ServingFaults) -> FaultScenario {
+        cfg.faults = Some(faults);
+        FaultScenario {
+            inner: FaultInner::Serving(ServingScenario::new(label, cfg,
+                                                            registry,
+                                                            policy)),
+        }
+    }
+
+    /// The cell's grid label.
+    pub fn label(&self) -> &str {
+        match &self.inner {
+            FaultInner::Single(s) => &s.label,
+            FaultInner::Cluster(s) => &s.label,
+            FaultInner::Serving(s) => &s.label,
+        }
+    }
+
+    /// The inner single-GPU scenario, when this is a single-GPU fault
+    /// cell (for sequential baselines).
+    pub fn as_single(&self) -> Option<&Scenario> {
+        match &self.inner {
+            FaultInner::Single(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The inner cluster scenario, when this is a cluster fault cell.
+    pub fn as_cluster_scenario(&self) -> Option<&ClusterScenario> {
+        match &self.inner {
+            FaultInner::Cluster(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The inner serving scenario, when this is a serving fault cell.
+    pub fn as_serving_scenario(&self) -> Option<&ServingScenario> {
+        match &self.inner {
+            FaultInner::Serving(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Run this one cell through a caller-owned worker arena.
+    pub fn run_with_arena(&self, arena: &mut SweepArena) -> CellResult {
+        match &self.inner {
+            FaultInner::Single(s) =>
+                CellResult::Sim(s.run_with_arena(&mut arena.sim)),
+            FaultInner::Cluster(s) =>
+                CellResult::Cluster(s.run_with_arena(&mut arena.cluster)),
+            FaultInner::Serving(s) =>
+                CellResult::Serving(s.run_with_arena(&mut arena.serving)),
+        }
+    }
+}
+
 /// The one matching rule for replaying a trace over a registry: the
 /// agent columns must equal the registry's agents, name for name, in
 /// order (a reordered or foreign recording would replay silently
@@ -395,6 +510,8 @@ pub enum SweepCell {
     Cost(CostScenario),
     /// Serving-layer queue-path cell (virtual-time `ServingCore` run).
     Serving(ServingScenario),
+    /// Fault-injection cell (any engine, run under a fault plan).
+    Fault(FaultScenario),
 }
 
 impl SweepCell {
@@ -406,6 +523,7 @@ impl SweepCell {
             SweepCell::Trace(s) => &s.label,
             SweepCell::Cost(s) => &s.label,
             SweepCell::Serving(s) => &s.label,
+            SweepCell::Fault(s) => s.label(),
         }
     }
 
@@ -422,6 +540,7 @@ impl SweepCell {
                 CellResult::Sim(s.run_with_arena(&mut arena.sim)),
             SweepCell::Serving(s) =>
                 CellResult::Serving(s.run_with_arena(&mut arena.serving)),
+            SweepCell::Fault(s) => s.run_with_arena(arena),
         }
     }
 }
@@ -628,6 +747,8 @@ pub fn run_sweep(cells: &[SweepCell], workers: usize) -> Vec<SweepRun> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::fault::{AdmissionControl, FaultModel, FaultPlan,
+                            ShedPolicy};
 
     fn paper_grid() -> Vec<Scenario> {
         PolicyKind::all().into_iter()
@@ -677,6 +798,25 @@ mod tests {
                 "serving/static/trace", serving_cfg(),
                 AgentRegistry::paper(), Trace::paper_poisson(2, 7),
                 PolicyKind::static_equal())),
+            SweepCell::Fault(FaultScenario::single(
+                "fault/single/adaptive", SimConfig::paper(),
+                AgentRegistry::paper(), PolicyKind::adaptive(),
+                FaultConfig::new(
+                    FaultModel::spot(0.01, 42).generate(1, 100.0)))),
+            SweepCell::Fault(FaultScenario::cluster(
+                "fault/cluster/repack", SimConfig::paper(),
+                AgentRegistry::paper(), vec![1.2, 1.2],
+                PlacementStrategy::HeadroomDecreasing,
+                Rebalancer::Repack(MigrationModel::default()),
+                FaultConfig::new(
+                    FaultModel::spot(0.01, 7).generate(2, 100.0))
+                    .with_repack_throttle(0.5)).unwrap()),
+            SweepCell::Fault(FaultScenario::serving(
+                "fault/serving/shed", serving_cfg(),
+                AgentRegistry::paper(), PolicyKind::adaptive(),
+                ServingFaults::new(FaultPlan::empty()).with_admission(
+                    AdmissionControl::new(64,
+                                          ShedPolicy::DropByPriority)))),
         ]
     }
 
@@ -751,6 +891,16 @@ mod tests {
                     SweepCell::Serving(_) =>
                         assert!(run.result.as_serving().is_some(),
                                 "{}", run.label),
+                    SweepCell::Fault(f) => {
+                        let ok = if f.as_cluster_scenario().is_some() {
+                            run.result.as_cluster().is_some()
+                        } else if f.as_serving_scenario().is_some() {
+                            run.result.as_serving().is_some()
+                        } else {
+                            run.result.as_sim().is_some()
+                        };
+                        assert!(ok, "{}", run.label);
+                    }
                 }
             }
         }
@@ -819,8 +969,60 @@ mod tests {
                     let got = run.result.as_serving().unwrap();
                     assert_eq!(got, &want, "{}", run.label);
                 }
+                SweepCell::Fault(sc) => {
+                    if let Some(s) = sc.as_single() {
+                        let mut policy = s.policy.clone();
+                        let want = s.simulator().run(&mut policy);
+                        let got = run.result.as_sim().unwrap();
+                        assert_eq!(got.mean_latency(),
+                                   want.mean_latency(), "{}", run.label);
+                        assert_eq!(got.resilience, want.resilience,
+                                   "{}", run.label);
+                    } else if let Some(s) = sc.as_cluster_scenario() {
+                        let want = s.simulator().run().unwrap();
+                        let got = run.result.as_cluster().unwrap();
+                        assert_eq!(got, &want, "{}", run.label);
+                    } else if let Some(s) = sc.as_serving_scenario() {
+                        let mut policy = s.policy.clone();
+                        let want = s.simulator().run(&mut policy);
+                        let got = run.result.as_serving().unwrap();
+                        assert_eq!(got, &want, "{}", run.label);
+                    }
+                }
             }
         }
+    }
+
+    #[test]
+    fn zero_fault_cells_are_bit_identical_to_plain_cells() {
+        // The control cells of the robustness grid: a FaultScenario
+        // with an empty plan must reproduce the plain scenario exactly.
+        let cells = vec![
+            SweepCell::Single(Scenario::paper("control",
+                                              PolicyKind::adaptive())),
+            SweepCell::Fault(FaultScenario::single(
+                "control", SimConfig::paper(), AgentRegistry::paper(),
+                PolicyKind::adaptive(),
+                FaultConfig::new(FaultPlan::empty()))),
+            SweepCell::Serving(ServingScenario::new(
+                "control/serving", serving_cfg(), AgentRegistry::paper(),
+                PolicyKind::adaptive())),
+            SweepCell::Fault(FaultScenario::serving(
+                "control/serving", serving_cfg(), AgentRegistry::paper(),
+                PolicyKind::adaptive(),
+                ServingFaults::new(FaultPlan::empty()))),
+        ];
+        let runs = run_sweep(&cells, 2);
+        let a = runs[0].result.as_sim().unwrap();
+        let b = runs[1].result.as_sim().unwrap();
+        assert_eq!(a.mean_latency(), b.mean_latency());
+        assert_eq!(a.cost_dollars, b.cost_dollars);
+        assert_eq!(a.agent_latencies(), b.agent_latencies());
+        assert_eq!(a.agent_throughputs(), b.agent_throughputs());
+        assert!(b.resilience.is_none(), "empty plan must stay inert");
+        // Serving results derive PartialEq: full-struct equality.
+        assert_eq!(runs[2].result.as_serving(),
+                   runs[3].result.as_serving());
     }
 
     #[test]

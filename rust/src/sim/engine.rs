@@ -5,6 +5,7 @@ use crate::allocator::AllocationPolicy;
 use crate::allocator::AllocContext;
 use crate::metrics::TimeSeries;
 use crate::serverless::EconInstruments;
+use crate::sim::fault::FaultTracker;
 use crate::sim::{AgentStats, SimArena, SimConfig, SimResult, Timelines};
 use crate::workload::WorkloadGenerator;
 
@@ -148,6 +149,12 @@ impl Simulator {
         let mut econ = EconInstruments::new(
             cfg.economics.as_ref(), cfg.pricing, n, cfg.seed);
 
+        // Optional fault injection — same zero-cost-when-disabled shape
+        // as EconInstruments: every hook returns its input untouched when
+        // no fault can fire, so the disabled path is bit-exact.
+        let mut fault = FaultTracker::new(cfg.faults.as_ref());
+        let mut processed_sum = 0.0;
+
         for step in 0..steps {
             // 1. Arrivals join their agent's queue.
             next_arrivals(step, dt, &mut rates[..], &mut counts[..]);
@@ -158,15 +165,31 @@ impl Simulator {
                 observed[i] = counts[i] / dt;
             }
 
-            // 2. The policy distributes GPU fractions.
+            // 2. The policy distributes GPU fractions. Under faults the
+            //    policy sees the degraded capacity (evictions zero it,
+            //    drops scale it) — that is how allocators get to adapt.
+            let capacity = fault.capacity_at(step, dt, cfg.capacity, n);
             let ctx = AllocContext {
                 registry: &self.registry,
                 arrival_rates: &observed[..],
                 queue_depths: &queues[..],
                 step,
-                capacity: cfg.capacity,
+                capacity,
             };
             policy.allocate(&ctx, &mut alloc[..]);
+
+            // 2a. Physical enforcement: whatever the policy asked for,
+            //     the degraded device cannot serve more than the
+            //     surviving capacity (floors/min-guarantees included).
+            if fault.is_active() && capacity < cfg.capacity {
+                let total: f64 = alloc.iter().sum();
+                if total > capacity {
+                    let s = if total > 0.0 { capacity / total } else { 0.0 };
+                    for g in alloc.iter_mut() {
+                        *g *= s;
+                    }
+                }
+            }
 
             // 2b. Serverless lifecycle: cold agents cannot process this
             //     step (their allocation is forfeited, not billed), and
@@ -182,10 +205,12 @@ impl Simulator {
             for i in 0..n {
                 let g = alloc[i];
                 total_alloc += g;
-                let rate = base_tput[i] * g; // rps at this allocation
+                // rps at this allocation, after any active stall divisor.
+                let rate = fault.degrade_rate(step, dt, i, base_tput[i] * g);
                 let cap = rate * dt;
                 let processed = queues[i].min(cap);
                 queues[i] -= processed;
+                processed_sum += processed;
 
                 let latency = if rate > 0.0 {
                     (queues[i] / rate).min(cfg.latency_cap_s)
@@ -226,6 +251,8 @@ impl Simulator {
         }
 
         let (cost_dollars, gpu_seconds, economics) = econ.finish(steps);
+        let resilience =
+            fault.finish(processed_sum / (steps as f64 * dt).max(1e-9));
 
         SimResult {
             policy: policy.name().to_string(),
@@ -235,6 +262,7 @@ impl Simulator {
             cost_dollars,
             gpu_seconds,
             economics,
+            resilience,
             timelines,
         }
     }
@@ -455,6 +483,87 @@ mod tests {
         // Always-busy agents never cold-start.
         assert_eq!(econ.cold_starts[0], 0);
         assert_eq!(econ.warm_fraction[0], 1.0);
+    }
+
+    #[test]
+    fn eviction_outage_degrades_then_recovers() {
+        use crate::sim::fault::{FaultConfig, FaultEvent, FaultPlan};
+        let mut cfg = SimConfig::paper();
+        cfg.faults = Some(FaultConfig::new(FaultPlan::new(vec![
+            FaultEvent::GpuEviction { t: 20.0, gpu: 0, duration: 10.0 },
+        ])));
+        let sim = Simulator::new(cfg, AgentProfile::paper_agents());
+        let faulted = sim.run(&mut AdaptivePolicy::default());
+        let clean = paper_sim().run(&mut AdaptivePolicy::default());
+        let r = faulted.resilience.as_ref().expect("faults configured");
+        assert!((r.recovery_time_s - 10.0).abs() < 1e-9,
+                "outage window is 10 s, got {}", r.recovery_time_s);
+        assert!(r.goodput < clean.total_throughput(),
+                "outage must cost goodput: {} vs {}",
+                r.goodput, clean.total_throughput());
+        assert!(r.goodput > 0.0, "run recovers after the outage");
+        // During the outage nothing processes; conservation still holds.
+        assert!(faulted.conservation_error() < 1e-6);
+        assert!(clean.resilience.is_none());
+    }
+
+    #[test]
+    fn capacity_drop_degrades_proportionally() {
+        use crate::sim::fault::{FaultConfig, FaultEvent, FaultPlan};
+        let mut cfg = SimConfig::paper();
+        cfg.faults = Some(FaultConfig::new(FaultPlan::new(vec![
+            FaultEvent::CapacityDrop { t: 0.0, frac: 0.5, duration: 1e9 },
+        ])));
+        let sim = Simulator::new(cfg, AgentProfile::paper_agents());
+        let r = sim.run(&mut StaticEqualPolicy);
+        // Half capacity for the whole run: allocations are scaled to fit.
+        for a in &r.per_agent {
+            assert!(a.allocation.mean() <= 0.125 + 1e-9,
+                    "{}: {}", a.name, a.allocation.mean());
+        }
+        let rep = r.resilience.expect("faults configured");
+        assert!((rep.recovery_time_s - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn agent_stall_slows_only_the_stalled_agent() {
+        use crate::sim::fault::{FaultConfig, FaultEvent, FaultPlan};
+        let mut cfg = SimConfig::paper();
+        cfg.faults = Some(FaultConfig::new(FaultPlan::new(vec![
+            FaultEvent::AgentStall {
+                t: 0.0, agent: 1, factor: 4.0, duration: 1e9,
+            },
+        ])));
+        let sim = Simulator::new(cfg, AgentProfile::paper_agents());
+        let stalled = sim.run(&mut StaticEqualPolicy);
+        let clean = paper_sim().run(&mut StaticEqualPolicy);
+        let s = stalled.agent_throughputs();
+        let c = clean.agent_throughputs();
+        assert!(s[1] < c[1] * 0.5, "stalled agent slows: {} vs {}",
+                s[1], c[1]);
+        assert_eq!(s[0], c[0], "other agents are untouched");
+        assert_eq!(s[2], c[2]);
+        let rep = stalled.resilience.expect("faults configured");
+        assert!((rep.disruption - 0.25).abs() < 1e-12,
+                "1 of 4 agents stalled, got {}", rep.disruption);
+    }
+
+    #[test]
+    fn empty_fault_plan_is_bit_identical_to_no_faults() {
+        use crate::sim::fault::{FaultConfig, FaultPlan};
+        let mut cfg = SimConfig::paper_poisson();
+        cfg.faults = Some(FaultConfig::new(FaultPlan::empty()));
+        let gated = Simulator::new(cfg, AgentProfile::paper_agents());
+        let plain = Simulator::new(SimConfig::paper_poisson(),
+                                   AgentProfile::paper_agents());
+        for mut p in crate::allocator::all_policies() {
+            let a = gated.run(p.as_mut());
+            let b = plain.run(p.as_mut());
+            assert_eq!(a.mean_latency(), b.mean_latency(), "{}", a.policy);
+            assert_eq!(a.total_throughput(), b.total_throughput());
+            assert_eq!(a.cost_dollars, b.cost_dollars);
+            assert!(a.resilience.is_none(), "inert faults report nothing");
+        }
     }
 
     #[test]

@@ -1,0 +1,803 @@
+//! Deterministic fault injection and graceful degradation (§II.B's
+//! "capacity constraints in serverless environments", made measurable).
+//!
+//! The serverless setting makes failure the common case — spot
+//! preemption evicts devices mid-run, stragglers stall agents, and
+//! overload arrives faster than capacity — yet a simulator without fault
+//! machinery only ever measures a world where hardware never breaks.
+//! This module supplies the missing half as *pure data*: a
+//! [`FaultPlan`] is a seeded, pre-sorted list of clock-driven
+//! [`FaultEvent`]s, generated once before a run (optionally via
+//! [`FaultModel::spot`]) so the same `(seed, config)` pair always yields
+//! the same faults regardless of worker count or engine.
+//!
+//! Consumption is split across the three engines:
+//!
+//! * the fluid engine (`sim::engine`) consumes [`FaultEvent::CapacityDrop`]
+//!   and whole-device [`FaultEvent::GpuEviction`] as capacity outages and
+//!   [`FaultEvent::AgentStall`] as service-rate divisors;
+//! * the cluster engine (`cluster::ClusterSimulator`) marks evicted
+//!   devices offline and recovers through the `Rebalancer::Repack`
+//!   placement layer under a **repack throttle**
+//!   ([`FaultConfig::repack_max_move_fraction`]) so the failure response
+//!   is itself bounded, optionally paying a serverless cold-start rewarm
+//!   ([`FaultConfig::rewarm`]) per migrated agent;
+//! * the serving layer (`ServingCore` + both shells) gains the
+//!   degradation half: bounded [`RetryPolicy`] retry-with-backoff for
+//!   failed batches and [`AdmissionControl`] load shedding
+//!   ([`ShedPolicy`]) so overload sheds instead of queueing unboundedly.
+//!
+//! Every engine surfaces a [`ResilienceReport`] on its result — `None`
+//! whenever no faults are configured, and the disabled path is
+//! bit-exact: no float op, RNG draw, or allocation differs from a run
+//! without the fault layer compiled in.
+
+use crate::serverless::ColdStartModel;
+use crate::util::Rng;
+
+/// Seed perturbation for the fault-plan generator, so fault timing never
+/// shares a stream with workload arrivals or cold-start jitter.
+const FAULT_SEED_XOR: u64 = 0xFA17;
+
+/// One scheduled fault. Times are seconds on the run's virtual clock; an
+/// event is active during `[t, t + duration)`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultEvent {
+    /// Device `gpu` is evicted (spot preemption) at `t` and returns
+    /// `duration` seconds later. The fluid engine treats any eviction as
+    /// a whole-capacity outage (it models a single device); the cluster
+    /// engine marks exactly that device offline.
+    GpuEviction {
+        /// Eviction time (s).
+        t: f64,
+        /// Evicted device index.
+        gpu: usize,
+        /// Outage length (s).
+        duration: f64,
+    },
+    /// Agent `agent`'s service rate is divided by `factor` (≥ 1) during
+    /// the window — a straggling replica. The cluster engine treats a
+    /// stalled agent as forfeiting its allocation for the window; the
+    /// serving simulator fails the agent's batch dispatches transiently.
+    AgentStall {
+        /// Stall onset (s).
+        t: f64,
+        /// Stalled agent id.
+        agent: usize,
+        /// Service-rate divisor (values below 1 are clamped to 1).
+        factor: f64,
+        /// Stall length (s).
+        duration: f64,
+    },
+    /// Total capacity is scaled by `1 − frac` during the window — the
+    /// provider reclaiming a slice of the device pool.
+    CapacityDrop {
+        /// Drop onset (s).
+        t: f64,
+        /// Fraction of capacity lost, in [0, 1].
+        frac: f64,
+        /// Drop length (s).
+        duration: f64,
+    },
+}
+
+impl FaultEvent {
+    /// Event start time (s).
+    pub fn start(&self) -> f64 {
+        match self {
+            FaultEvent::GpuEviction { t, .. }
+            | FaultEvent::AgentStall { t, .. }
+            | FaultEvent::CapacityDrop { t, .. } => *t,
+        }
+    }
+
+    /// Event end time (s).
+    pub fn end(&self) -> f64 {
+        let d = match self {
+            FaultEvent::GpuEviction { duration, .. }
+            | FaultEvent::AgentStall { duration, .. }
+            | FaultEvent::CapacityDrop { duration, .. } => *duration,
+        };
+        self.start() + d
+    }
+
+    /// Whether the event window contains `now`.
+    pub fn active_at(&self, now: f64) -> bool {
+        now >= self.start() && now < self.end()
+    }
+}
+
+/// A reproducible fault schedule: events sorted by start time.
+///
+/// Plans are pure data — build one by hand for targeted tests or sample
+/// one from a [`FaultModel`]; either way the run consumes it read-only,
+/// so sweep cells stay bit-identical at any worker count.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Scheduled events, ascending by [`FaultEvent::start`].
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Build a plan, sorting events by start time (stable, so equal-time
+    /// events keep their construction order).
+    pub fn new(mut events: Vec<FaultEvent>) -> Self {
+        events.sort_by(|a, b| {
+            a.start()
+                .partial_cmp(&b.start())
+                .expect("fault event times are finite")
+        });
+        FaultPlan { events }
+    }
+
+    /// The empty plan (injects nothing).
+    pub fn empty() -> Self {
+        FaultPlan { events: Vec::new() }
+    }
+
+    /// True when the plan schedules no events.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Seeded generator of spot-eviction schedules.
+///
+/// Inter-eviction gaps are exponential with rate
+/// [`FaultModel::eviction_rate`] (a Poisson process — the standard spot
+/// preemption model), the victim device is uniform over the fleet, and
+/// outage lengths are exponential with mean [`FaultModel::mean_outage_s`].
+/// All draws come from a dedicated `Rng::new(seed ^ 0xFA17)` stream so
+/// fault timing never perturbs workload randomness.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultModel {
+    /// Expected evictions per second across the whole fleet.
+    pub eviction_rate: f64,
+    /// Mean outage length in seconds.
+    pub mean_outage_s: f64,
+    /// Generator seed (perturbed internally; safe to share with the run
+    /// seed).
+    pub seed: u64,
+}
+
+impl FaultModel {
+    /// A spot-preemption model: `rate` evictions per second fleet-wide,
+    /// 20 s mean outage (the short-notice reclaim-and-return cycle of
+    /// preemptible capacity).
+    pub fn spot(rate: f64, mtbf_seed: u64) -> Self {
+        FaultModel { eviction_rate: rate, mean_outage_s: 20.0, seed: mtbf_seed }
+    }
+
+    /// Sample an eviction schedule over `[0, horizon_s)` for a fleet of
+    /// `n_gpus` devices. Same model ⇒ identical plan.
+    pub fn generate(&self, n_gpus: usize, horizon_s: f64) -> FaultPlan {
+        let mut events = Vec::new();
+        if self.eviction_rate > 0.0 && n_gpus > 0 && horizon_s > 0.0 {
+            let mut rng = Rng::new(self.seed ^ FAULT_SEED_XOR);
+            let mut t = rng.exponential(self.eviction_rate);
+            while t < horizon_s {
+                let gpu = rng.below(n_gpus as u64) as usize;
+                let duration =
+                    rng.exponential(1.0 / self.mean_outage_s.max(1e-9));
+                events.push(FaultEvent::GpuEviction { t, gpu, duration });
+                t += rng.exponential(self.eviction_rate);
+            }
+        }
+        FaultPlan::new(events)
+    }
+}
+
+/// Bounded retry-with-backoff for failed serving batches.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetryPolicy {
+    /// Total execution attempts per batch (1 = no retry).
+    pub max_attempts: u32,
+    /// Backoff before the first retry (s).
+    pub backoff_s: f64,
+    /// Multiplier applied per subsequent retry (exponential backoff).
+    pub backoff_multiplier: f64,
+}
+
+impl RetryPolicy {
+    /// No retries — a failed batch fails permanently (the pre-fault-layer
+    /// behaviour, and the `ServingCore` default).
+    pub fn none() -> Self {
+        RetryPolicy { max_attempts: 1, backoff_s: 0.0, backoff_multiplier: 1.0 }
+    }
+
+    /// The default bounded policy: up to 3 attempts, 10 ms initial
+    /// backoff, doubling.
+    pub fn bounded() -> Self {
+        RetryPolicy { max_attempts: 3, backoff_s: 0.01, backoff_multiplier: 2.0 }
+    }
+
+    /// True when this policy ever retries.
+    pub fn retries(&self) -> bool {
+        self.max_attempts > 1
+    }
+
+    /// Backoff to wait after failed attempt number `attempt` (0-based).
+    pub fn backoff_for(&self, attempt: u32) -> f64 {
+        self.backoff_s * self.backoff_multiplier.powi(attempt.min(30) as i32)
+    }
+}
+
+/// Which queued request an overloaded server sheds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Drop the incoming request (tail drop).
+    DropNewest,
+    /// Drop from the lowest-priority agent with queued work; the
+    /// incoming request is only shed when nothing lower-priority is
+    /// queued, so `High` work is never shed before all lower tiers.
+    DropByPriority,
+    /// Expire queued requests older than the admission deadline, then
+    /// tail-drop if nothing expired.
+    DeadlineAware,
+}
+
+impl ShedPolicy {
+    /// Stable label for sweep-cell names and CSV columns.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShedPolicy::DropNewest => "newest",
+            ShedPolicy::DropByPriority => "priority",
+            ShedPolicy::DeadlineAware => "deadline",
+        }
+    }
+
+    /// All policies, in sweep order.
+    pub fn all() -> Vec<ShedPolicy> {
+        vec![ShedPolicy::DropNewest, ShedPolicy::DropByPriority,
+             ShedPolicy::DeadlineAware]
+    }
+}
+
+/// Admission control for the serving layer: a total queue bound plus the
+/// shed policy applied when an arrival would exceed it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionControl {
+    /// Maximum requests queued across all agents before shedding starts.
+    pub max_queued: usize,
+    /// What to shed once the bound is hit.
+    pub policy: ShedPolicy,
+    /// [`ShedPolicy::DeadlineAware`] only: queued age (s) beyond which a
+    /// request is considered expired.
+    pub deadline_s: f64,
+}
+
+impl AdmissionControl {
+    /// Admission control with a 1 s expiry deadline.
+    pub fn new(max_queued: usize, policy: ShedPolicy) -> Self {
+        AdmissionControl { max_queued, policy, deadline_s: 1.0 }
+    }
+}
+
+/// Fault configuration for the fluid and cluster engines
+/// (`SimConfig::faults`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// The fault schedule.
+    pub plan: FaultPlan,
+    /// Repack throttle: the largest fraction of agents one recovery
+    /// repack may move (cluster engine, `Rebalancer::Repack` only). A
+    /// recovery step moves at most `⌊fraction · n_agents⌋` agents; the
+    /// remainder wait for later steps, so the failure response is itself
+    /// bounded. Fractions below `1/n_agents` disable recovery entirely.
+    pub repack_max_move_fraction: f64,
+    /// Serverless rewarm: when set, every recovery-migrated agent pays a
+    /// sampled cold start (model load on the new device) on top of the
+    /// migration transfer stall. Draws come from the run's dedicated
+    /// fault RNG stream, never the workload stream.
+    pub rewarm: Option<ColdStartModel>,
+}
+
+impl FaultConfig {
+    /// Faults with an unthrottled repack and no rewarm cost.
+    pub fn new(plan: FaultPlan) -> Self {
+        FaultConfig { plan, repack_max_move_fraction: 1.0, rewarm: None }
+    }
+
+    /// Bound the fraction of agents one recovery repack may move.
+    pub fn with_repack_throttle(mut self, fraction: f64) -> Self {
+        self.repack_max_move_fraction = fraction.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Charge a sampled serverless cold start per recovery migration.
+    pub fn with_rewarm(mut self, model: ColdStartModel) -> Self {
+        self.rewarm = Some(model);
+        self
+    }
+
+    /// True when this configuration cannot affect a run (empty plan) —
+    /// the engines then skip every fault hook and report no
+    /// [`ResilienceReport`].
+    pub fn is_inert(&self) -> bool {
+        self.plan.is_empty()
+    }
+}
+
+/// Fault configuration for the serving layer (`ServingConfig::faults`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingFaults {
+    /// The fault schedule (stalls fail the stalled agent's dispatches
+    /// transiently; evictions fail every dispatch in the window).
+    pub plan: FaultPlan,
+    /// Retry-with-backoff applied to failed batches.
+    pub retry: RetryPolicy,
+    /// Optional admission control / load shedding.
+    pub admission: Option<AdmissionControl>,
+}
+
+impl ServingFaults {
+    /// Faults with the default bounded retry and no admission control.
+    pub fn new(plan: FaultPlan) -> Self {
+        ServingFaults { plan, retry: RetryPolicy::bounded(), admission: None }
+    }
+
+    /// Replace the retry policy.
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
+    }
+
+    /// Enable admission control.
+    pub fn with_admission(mut self, admission: AdmissionControl) -> Self {
+        self.admission = Some(admission);
+        self
+    }
+
+    /// True when this configuration cannot affect a run: no events to
+    /// fail anything (retry then never triggers) and no admission bound.
+    pub fn is_inert(&self) -> bool {
+        self.plan.is_empty() && self.admission.is_none()
+    }
+
+    /// Whether an execution attempt for `agent` dispatched at `now`
+    /// fails transiently: the agent is inside a stall window, or any
+    /// device is evicted.
+    pub fn fails_at(&self, now: f64, agent: usize) -> bool {
+        self.plan.events.iter().any(|e| {
+            e.active_at(now)
+                && match e {
+                    FaultEvent::AgentStall { agent: a, .. } => *a == agent,
+                    FaultEvent::GpuEviction { .. } => true,
+                    FaultEvent::CapacityDrop { .. } => false,
+                }
+        })
+    }
+}
+
+/// Resilience metrics for one run. `None` on results whenever no faults
+/// were configured; fields that an engine does not measure are 0.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ResilienceReport {
+    /// Time (s) the run spent degraded: fluid engine — steps with any
+    /// active fault; cluster — steps with an agent on an offline device;
+    /// serving — GPU-seconds burned by failed attempts plus backoff.
+    pub recovery_time_s: f64,
+    /// Fraction of offered requests shed by admission control.
+    pub shed_fraction: f64,
+    /// Degradation actions taken: retried batches (serving) or recovery
+    /// migrations (cluster).
+    pub retried: u64,
+    /// Completed requests per second over the whole run, faults included.
+    pub goodput: f64,
+    /// How disruptive the run's failure response was: the largest agent
+    /// fraction one recovery repack moved (cluster — bounded by
+    /// [`FaultConfig::repack_max_move_fraction`]), the peak fraction of
+    /// agents simultaneously stalled (fluid), or the fraction of offered
+    /// requests that failed permanently (serving).
+    pub disruption: f64,
+}
+
+/// Per-run fault bookkeeping for the fluid engine. Follows the
+/// `EconInstruments` pattern: constructed from the optional config, and
+/// every hook is a no-op returning its input untouched when no fault can
+/// fire — the disabled path is bit-exact.
+#[derive(Debug)]
+pub(crate) struct FaultTracker<'a> {
+    cfg: Option<&'a FaultConfig>,
+    degraded_s: f64,
+    max_stalled_fraction: f64,
+}
+
+impl<'a> FaultTracker<'a> {
+    /// Build the tracker; inert configs are dropped outright.
+    pub(crate) fn new(cfg: Option<&'a FaultConfig>) -> Self {
+        FaultTracker {
+            cfg: cfg.filter(|f| !f.is_inert()),
+            degraded_s: 0.0,
+            max_stalled_fraction: 0.0,
+        }
+    }
+
+    /// Whether any fault can fire this run.
+    pub(crate) fn is_active(&self) -> bool {
+        self.cfg.is_some()
+    }
+
+    /// Effective total capacity at step `step`: evictions zero it,
+    /// capacity drops scale it. Also accrues degraded time and the peak
+    /// stalled-agent fraction. Returns `base` untouched when inactive.
+    pub(crate) fn capacity_at(&mut self, step: u64, dt: f64, base: f64,
+                              n_agents: usize) -> f64 {
+        let Some(f) = self.cfg else { return base };
+        let now = step as f64 * dt;
+        let mut scale = 1.0;
+        let mut stalled = 0usize;
+        for e in &f.plan.events {
+            if !e.active_at(now) {
+                continue;
+            }
+            match e {
+                FaultEvent::GpuEviction { .. } => scale = 0.0,
+                FaultEvent::CapacityDrop { frac, .. } => {
+                    scale *= (1.0 - frac).max(0.0);
+                }
+                FaultEvent::AgentStall { agent, .. } => {
+                    if *agent < n_agents {
+                        stalled += 1;
+                    }
+                }
+            }
+        }
+        if scale < 1.0 || stalled > 0 {
+            self.degraded_s += dt;
+        }
+        if n_agents > 0 {
+            let frac = (stalled as f64 / n_agents as f64).min(1.0);
+            if frac > self.max_stalled_fraction {
+                self.max_stalled_fraction = frac;
+            }
+        }
+        base * scale
+    }
+
+    /// Service rate for `agent` at step `step` after stall divisors.
+    /// Returns `rate` untouched when inactive.
+    pub(crate) fn degrade_rate(&self, step: u64, dt: f64, agent: usize,
+                               rate: f64) -> f64 {
+        let Some(f) = self.cfg else { return rate };
+        let now = step as f64 * dt;
+        let mut r = rate;
+        for e in &f.plan.events {
+            if let FaultEvent::AgentStall { agent: a, factor, .. } = e {
+                if *a == agent && e.active_at(now) {
+                    r /= factor.max(1.0);
+                }
+            }
+        }
+        r
+    }
+
+    /// Fold the run's bookkeeping into a report; `None` when inactive.
+    pub(crate) fn finish(self, goodput: f64) -> Option<ResilienceReport> {
+        self.cfg.map(|_| ResilienceReport {
+            recovery_time_s: self.degraded_s,
+            shed_fraction: 0.0,
+            retried: 0,
+            goodput,
+            disruption: self.max_stalled_fraction,
+        })
+    }
+}
+
+/// Per-run fault bookkeeping for the cluster engine: device offline
+/// windows, throttled recovery accounting, and the rewarm RNG stream.
+/// Inert configs are dropped at construction; every hook then no-ops.
+#[derive(Debug)]
+pub(crate) struct ClusterFaultTracker<'a> {
+    cfg: Option<&'a FaultConfig>,
+    rng: Rng,
+    offline_until: Vec<f64>,
+    caps_scratch: Vec<f64>,
+    next_event: usize,
+    recovery_moves: u64,
+    degraded_s: f64,
+    max_move_fraction: f64,
+}
+
+impl<'a> ClusterFaultTracker<'a> {
+    /// Build the tracker for a fleet of `n_gpus` devices.
+    pub(crate) fn new(cfg: Option<&'a FaultConfig>, n_gpus: usize,
+                      seed: u64) -> Self {
+        let cfg = cfg.filter(|f| !f.is_inert());
+        ClusterFaultTracker {
+            cfg,
+            rng: Rng::new(seed ^ FAULT_SEED_XOR),
+            offline_until: if cfg.is_some() {
+                vec![0.0; n_gpus]
+            } else {
+                Vec::new()
+            },
+            caps_scratch: Vec::new(),
+            next_event: 0,
+            recovery_moves: 0,
+            degraded_s: 0.0,
+            max_move_fraction: 0.0,
+        }
+    }
+
+    /// Whether any fault can fire this run.
+    pub(crate) fn is_active(&self) -> bool {
+        self.cfg.is_some()
+    }
+
+    /// Apply events due at `now`: evictions mark their device offline
+    /// through the outage window; agent stalls extend `stalled_until`
+    /// (the agent forfeits its allocation, same as a migration stall).
+    /// Capacity drops are a fluid-engine concern and are ignored here.
+    pub(crate) fn advance(&mut self, now: f64, stalled_until: &mut [f64]) {
+        let Some(f) = self.cfg else { return };
+        while let Some(e) = f.plan.events.get(self.next_event) {
+            if e.start() > now {
+                break;
+            }
+            match e {
+                FaultEvent::GpuEviction { gpu, .. } => {
+                    if *gpu < self.offline_until.len() {
+                        let end = e.end();
+                        if end > self.offline_until[*gpu] {
+                            self.offline_until[*gpu] = end;
+                        }
+                    }
+                }
+                FaultEvent::AgentStall { agent, .. } => {
+                    if *agent < stalled_until.len() {
+                        let end = e.end();
+                        if end > stalled_until[*agent] {
+                            stalled_until[*agent] = end;
+                        }
+                    }
+                }
+                FaultEvent::CapacityDrop { .. } => {}
+            }
+            self.next_event += 1;
+        }
+    }
+
+    /// Whether device `gpu` is offline at `now`.
+    pub(crate) fn gpu_offline(&self, gpu: usize, now: f64) -> bool {
+        self.cfg.is_some() && now < self.offline_until[gpu]
+    }
+
+    /// Whether any device is offline at `now`.
+    pub(crate) fn any_offline(&self, now: f64) -> bool {
+        self.cfg.is_some() && self.offline_until.iter().any(|t| now < *t)
+    }
+
+    /// Device capacities with offline devices zeroed — the view a
+    /// recovery repack must place against. Only valid while active.
+    pub(crate) fn effective_caps(&mut self, caps: &[f64], now: f64)
+                                 -> &[f64] {
+        self.caps_scratch.clear();
+        self.caps_scratch.extend(caps.iter().enumerate().map(|(g, c)| {
+            if now < self.offline_until[g] { 0.0 } else { *c }
+        }));
+        &self.caps_scratch
+    }
+
+    /// Largest number of agents one recovery repack may move under the
+    /// configured throttle (0 disables recovery).
+    pub(crate) fn max_moves(&self, n_agents: usize) -> usize {
+        match self.cfg {
+            Some(f) => {
+                (f.repack_max_move_fraction * n_agents as f64 + 1e-9).floor()
+                    as usize
+            }
+            None => 0,
+        }
+    }
+
+    /// Sampled rewarm cold start (s) for a recovery-migrated agent; 0
+    /// when no rewarm model is configured (and then draws nothing).
+    pub(crate) fn rewarm_s(&mut self, model_mb: u32) -> f64 {
+        match self.cfg.and_then(|f| f.rewarm.as_ref()) {
+            Some(m) => m.sample(model_mb, &mut self.rng),
+            None => 0.0,
+        }
+    }
+
+    /// Record one recovery repack that moved `moves` agents.
+    pub(crate) fn note_recovery(&mut self, moves: usize, n_agents: usize) {
+        self.recovery_moves += moves as u64;
+        let frac = moves as f64 / n_agents.max(1) as f64;
+        if frac > self.max_move_fraction {
+            self.max_move_fraction = frac;
+        }
+    }
+
+    /// Accrue one step of degraded time (an agent sat on an offline
+    /// device this step).
+    pub(crate) fn note_degraded(&mut self, dt: f64) {
+        self.degraded_s += dt;
+    }
+
+    /// Fold the run's bookkeeping into a report; `None` when inactive.
+    pub(crate) fn finish(self, goodput: f64) -> Option<ResilienceReport> {
+        self.cfg.map(|_| ResilienceReport {
+            recovery_time_s: self.degraded_s,
+            shed_fraction: 0.0,
+            retried: self.recovery_moves,
+            goodput,
+            disruption: self.max_move_fraction,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_generates_identical_plans() {
+        let m = FaultModel::spot(0.02, 42);
+        let a = m.generate(4, 500.0);
+        let b = FaultModel::spot(0.02, 42).generate(4, 500.0);
+        assert!(!a.is_empty(), "rate 0.02 over 500 s should evict");
+        assert_eq!(a, b);
+        // A different seed gives a different schedule.
+        let c = FaultModel::spot(0.02, 43).generate(4, 500.0);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn zero_rate_or_empty_fleet_generates_nothing() {
+        assert!(FaultModel::spot(0.0, 1).generate(4, 100.0).is_empty());
+        assert!(FaultModel::spot(0.5, 1).generate(0, 100.0).is_empty());
+        assert!(FaultModel::spot(0.5, 1).generate(4, 0.0).is_empty());
+    }
+
+    #[test]
+    fn plans_are_sorted_and_bounded_by_horizon() {
+        let plan = FaultModel::spot(0.05, 7).generate(3, 400.0);
+        let starts: Vec<f64> =
+            plan.events.iter().map(FaultEvent::start).collect();
+        let mut sorted = starts.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(starts, sorted);
+        assert!(starts.iter().all(|t| (0.0..400.0).contains(t)));
+        for e in &plan.events {
+            match e {
+                FaultEvent::GpuEviction { gpu, duration, .. } => {
+                    assert!(*gpu < 3);
+                    assert!(*duration > 0.0);
+                }
+                other => panic!("spot model only evicts, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn plan_constructor_sorts_events() {
+        let plan = FaultPlan::new(vec![
+            FaultEvent::CapacityDrop { t: 9.0, frac: 0.5, duration: 2.0 },
+            FaultEvent::AgentStall {
+                t: 1.0, agent: 0, factor: 2.0, duration: 3.0,
+            },
+        ]);
+        assert_eq!(plan.events[0].start(), 1.0);
+        assert_eq!(plan.events[1].start(), 9.0);
+        assert!(plan.events[0].active_at(1.0));
+        assert!(!plan.events[0].active_at(4.0));
+        assert_eq!(plan.events[1].end(), 11.0);
+    }
+
+    #[test]
+    fn retry_policy_backoff_grows_exponentially() {
+        let r = RetryPolicy::bounded();
+        assert!(r.retries());
+        assert!((r.backoff_for(0) - 0.01).abs() < 1e-12);
+        assert!((r.backoff_for(1) - 0.02).abs() < 1e-12);
+        assert!((r.backoff_for(2) - 0.04).abs() < 1e-12);
+        assert!(!RetryPolicy::none().retries());
+    }
+
+    #[test]
+    fn inertness_rules() {
+        assert!(FaultConfig::new(FaultPlan::empty()).is_inert());
+        let plan = FaultPlan::new(vec![FaultEvent::GpuEviction {
+            t: 1.0, gpu: 0, duration: 5.0,
+        }]);
+        assert!(!FaultConfig::new(plan.clone()).is_inert());
+        assert!(ServingFaults::new(FaultPlan::empty()).is_inert());
+        // An admission bound alone makes the serving config live.
+        assert!(!ServingFaults::new(FaultPlan::empty())
+            .with_admission(AdmissionControl::new(8, ShedPolicy::DropNewest))
+            .is_inert());
+        assert!(!ServingFaults::new(plan).is_inert());
+    }
+
+    #[test]
+    fn serving_faults_fail_the_right_dispatches() {
+        let f = ServingFaults::new(FaultPlan::new(vec![
+            FaultEvent::AgentStall {
+                t: 1.0, agent: 2, factor: 4.0, duration: 2.0,
+            },
+            FaultEvent::GpuEviction { t: 10.0, gpu: 0, duration: 1.0 },
+        ]));
+        assert!(f.fails_at(1.5, 2));
+        assert!(!f.fails_at(1.5, 0)); // stall is agent-scoped
+        assert!(!f.fails_at(3.5, 2)); // window over
+        assert!(f.fails_at(10.5, 0)); // eviction fails everyone
+        assert!(f.fails_at(10.5, 3));
+    }
+
+    #[test]
+    fn tracker_is_inert_without_faults() {
+        let mut t = FaultTracker::new(None);
+        assert!(!t.is_active());
+        assert_eq!(t.capacity_at(5, 1.0, 1.0, 4), 1.0);
+        assert_eq!(t.degrade_rate(5, 1.0, 0, 80.0), 80.0);
+        assert!(t.finish(1.0).is_none());
+        let empty = FaultConfig::new(FaultPlan::empty());
+        assert!(!FaultTracker::new(Some(&empty)).is_active());
+    }
+
+    #[test]
+    fn tracker_applies_drops_evictions_and_stalls() {
+        let cfg = FaultConfig::new(FaultPlan::new(vec![
+            FaultEvent::CapacityDrop { t: 2.0, frac: 0.5, duration: 2.0 },
+            FaultEvent::GpuEviction { t: 6.0, gpu: 0, duration: 1.0 },
+            FaultEvent::AgentStall {
+                t: 8.0, agent: 1, factor: 4.0, duration: 1.0,
+            },
+        ]));
+        let mut t = FaultTracker::new(Some(&cfg));
+        assert!(t.is_active());
+        assert_eq!(t.capacity_at(0, 1.0, 1.0, 4), 1.0);
+        assert!((t.capacity_at(2, 1.0, 1.0, 4) - 0.5).abs() < 1e-12);
+        assert_eq!(t.capacity_at(6, 1.0, 1.0, 4), 0.0);
+        assert_eq!(t.capacity_at(8, 1.0, 1.0, 4), 1.0); // stall ≠ capacity
+        assert!((t.degrade_rate(8, 1.0, 1, 80.0) - 20.0).abs() < 1e-12);
+        assert_eq!(t.degrade_rate(8, 1.0, 0, 80.0), 80.0);
+        let report = t.finish(150.0).expect("active tracker reports");
+        // Steps 2, 6 and 8 were degraded.
+        assert!((report.recovery_time_s - 3.0).abs() < 1e-12);
+        assert!((report.disruption - 0.25).abs() < 1e-12);
+        assert_eq!(report.goodput, 150.0);
+    }
+
+    #[test]
+    fn cluster_tracker_throttle_bounds_moves() {
+        let cfg = FaultConfig::new(FaultPlan::new(vec![
+            FaultEvent::GpuEviction { t: 5.0, gpu: 1, duration: 10.0 },
+        ]))
+        .with_repack_throttle(0.5);
+        let mut t = ClusterFaultTracker::new(Some(&cfg), 2, 42);
+        assert_eq!(t.max_moves(4), 2);
+        assert_eq!(t.max_moves(3), 1);
+        let mut stalls = vec![0.0; 4];
+        t.advance(5.0, &mut stalls);
+        assert!(t.gpu_offline(1, 6.0));
+        assert!(!t.gpu_offline(0, 6.0));
+        assert!(t.any_offline(6.0));
+        assert!(!t.any_offline(15.0));
+        assert_eq!(t.effective_caps(&[1.0, 2.0], 6.0), &[1.0, 0.0]);
+        assert_eq!(t.effective_caps(&[1.0, 2.0], 15.0), &[1.0, 2.0]);
+        t.note_recovery(2, 4);
+        let report = t.finish(10.0).expect("active tracker reports");
+        assert_eq!(report.retried, 2);
+        assert!((report.disruption - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cluster_tracker_rewarm_draws_only_when_configured() {
+        let plan = FaultPlan::new(vec![FaultEvent::GpuEviction {
+            t: 1.0, gpu: 0, duration: 2.0,
+        }]);
+        let dry = FaultConfig::new(plan.clone());
+        let mut t = ClusterFaultTracker::new(Some(&dry), 2, 42);
+        assert_eq!(t.rewarm_s(2000), 0.0);
+        let wet = FaultConfig::new(plan)
+            .with_rewarm(ColdStartModel::default_platform());
+        let mut t = ClusterFaultTracker::new(Some(&wet), 2, 42);
+        let s = t.rewarm_s(2000);
+        assert!(s > 0.0, "rewarm should cost time, got {s}");
+        // Same seed ⇒ same draw.
+        let mut t2 = ClusterFaultTracker::new(Some(&wet), 2, 42);
+        assert_eq!(t2.rewarm_s(2000), s);
+    }
+}

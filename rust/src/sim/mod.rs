@@ -11,13 +11,18 @@
 mod arena;
 pub mod batch;
 mod engine;
+pub mod fault;
 mod result;
 
 pub use arena::SimArena;
 pub use batch::{run_batch, run_sweep, BatchRun, CellResult,
-                ClusterScenario, CostScenario, Scenario, ServingScenario,
-                SweepArena, SweepCell, SweepRun, TraceScenario};
+                ClusterScenario, CostScenario, FaultScenario, Scenario,
+                ServingScenario, SweepArena, SweepCell, SweepRun,
+                TraceScenario};
 pub use engine::Simulator;
+pub use fault::{AdmissionControl, FaultConfig, FaultEvent, FaultModel,
+                FaultPlan, ResilienceReport, RetryPolicy, ServingFaults,
+                ShedPolicy};
 pub use result::{AgentStats, SimResult, Timelines};
 
 use crate::serverless::{EconomicsModel, GpuPricing};
@@ -58,6 +63,15 @@ pub struct SimConfig {
     ///
     /// [`EconomicsReport`]: crate::serverless::EconomicsReport
     pub economics: Option<EconomicsModel>,
+    /// Deterministic fault injection ([`FaultConfig`]). The fluid engine
+    /// consumes capacity drops, whole-device evictions, and agent
+    /// stalls; the cluster engine consumes evictions (offline devices,
+    /// throttled repack recovery, optional rewarm cold starts) and
+    /// stalls. When set and non-inert, the run's
+    /// [`ResilienceReport`] is surfaced on the result. `None` (the
+    /// default) is provably zero-cost: no float op or RNG draw differs
+    /// from a build without the fault layer.
+    pub faults: Option<FaultConfig>,
 }
 
 impl SimConfig {
@@ -76,6 +90,7 @@ impl SimConfig {
             seed: 42,
             record_timelines: false,
             economics: None,
+            faults: None,
         }
     }
 

@@ -2,6 +2,7 @@
 
 use crate::metrics::{Streaming, TimeSeries};
 use crate::serverless::EconomicsReport;
+use crate::sim::fault::ResilienceReport;
 use crate::sim::SummaryRow;
 use crate::util;
 
@@ -76,6 +77,10 @@ pub struct SimResult {
     /// when the run's config enabled an
     /// [`EconomicsModel`](crate::serverless::EconomicsModel).
     pub economics: Option<EconomicsReport>,
+    /// Degraded time, goodput, and disruption under injected faults,
+    /// present when the run's config set a non-inert
+    /// [`FaultConfig`](crate::sim::fault::FaultConfig).
+    pub resilience: Option<ResilienceReport>,
     /// Full timelines when requested.
     pub timelines: Option<Timelines>,
 }

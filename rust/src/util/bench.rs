@@ -181,7 +181,8 @@ impl BenchComparison {
 ///
 /// Compared entries: the single-GPU grid's sequential baseline and its
 /// per-worker-count batch rows, plus the same pair for each
-/// `cluster` / `corpus` / `cost` / `serving` section present in both
+/// `cluster` / `corpus` / `cost` / `serving` / `placement` / `faults`
+/// section present in both
 /// reports. The
 /// two reports must describe the same workload — equal `grid.steps`
 /// and per-section scenario counts — otherwise throughput is not
@@ -218,7 +219,8 @@ pub fn compare_bench_reports(baseline: &Value, measured: &Value,
     compare_rows(&mut cmp, "single", allowed_drop,
                  base.get("batch"), meas.get("batch"));
 
-    for section in ["cluster", "corpus", "cost", "serving", "placement"] {
+    for section in ["cluster", "corpus", "cost", "serving", "placement",
+                    "faults"] {
         let (b, m) = match (base.get(section), meas.get(section)) {
             (Some(b), Some(m)) => (b, m),
             // Not in the baseline yet: schema growth, note and move on.

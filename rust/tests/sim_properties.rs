@@ -9,8 +9,11 @@ use agentsrv::cluster::{ClusterSimulator, MigrationModel,
 use agentsrv::server::{ServingConfig, ServingSimulator};
 use agentsrv::serverless::{EconomicsModel, GpuPricing};
 use agentsrv::sim::batch::{run_batch, run_sweep, ClusterScenario,
-                           CostScenario, Scenario, ServingScenario,
-                           SweepCell, TraceScenario};
+                           CostScenario, FaultScenario, Scenario,
+                           ServingScenario, SweepCell, TraceScenario};
+use agentsrv::sim::fault::{AdmissionControl, FaultConfig, FaultEvent,
+                           FaultModel, FaultPlan, RetryPolicy,
+                           ServingFaults, ShedPolicy};
 use agentsrv::sim::{SimConfig, Simulator};
 use agentsrv::util::check::{forall, vec_uniform};
 use agentsrv::util::Rng;
@@ -138,6 +141,7 @@ fn prop_simulation_conserves_requests_and_money() {
             seed: *seed,
             record_timelines: false,
             economics: None,
+            faults: None,
         };
         let sim = Simulator::new(cfg, agents.clone());
         for mut policy in all_policies() {
@@ -191,6 +195,7 @@ fn prop_throughput_bounded_by_capacity_and_arrivals() {
             seed: 1,
             record_timelines: false,
             economics: None,
+            faults: None,
         };
         let sim = Simulator::new(cfg, agents.clone());
         for mut policy in all_policies() {
@@ -628,6 +633,155 @@ fn prop_serving_sweep_is_bit_identical_to_direct_runs() {
     }
 }
 
+/// Fault cells through the sweep engine hold the pure-speedup contract
+/// across all three shells: single-GPU cells under a seeded spot plan
+/// (and the empty-plan control), cluster cells under a 2-GPU spot plan
+/// with the repack throttle armed for every rebalancer, and serving
+/// cells with retry + every shed policy — each bit-identical (`==`, no
+/// tolerance, `ResilienceReport` included) to a sequential run of the
+/// same cell, at 1, 2, and 8 workers.
+#[test]
+fn prop_fault_sweep_is_bit_identical_to_sequential_run() {
+    enum Want {
+        Sim(agentsrv::sim::SimResult),
+        Cluster(agentsrv::cluster::ClusterResult),
+        Serving(agentsrv::server::ServingResult),
+    }
+
+    let mut cells = Vec::new();
+    let mut expected = Vec::new();
+
+    // Single-GPU: every policy × {seeded spot plan, empty-plan control}.
+    for kind in PolicyKind::all() {
+        for (tag, plan) in [
+            ("spot", FaultModel::spot(0.01, 13).generate(1, 100.0)),
+            ("none", FaultPlan::empty()),
+        ] {
+            let sc = FaultScenario::single(
+                format!("fault/single/{}/{tag}", kind.name()),
+                SimConfig::paper(), AgentRegistry::paper(), kind.clone(),
+                FaultConfig::new(plan));
+            let mut reference = policy_by_name(kind.name())
+                .expect("built-in policy");
+            expected.push(Want::Sim(sc.as_single().unwrap().simulator()
+                                    .run(reference.as_mut())));
+            cells.push(SweepCell::Fault(sc));
+        }
+    }
+    // Cluster: every rebalancer recovering from the same 2-GPU spot
+    // plan, single-repack moves throttled to half the deployment.
+    for rebalancer in Rebalancer::all() {
+        let sc = FaultScenario::cluster(
+            format!("fault/cluster/{}", rebalancer.name()),
+            SimConfig::paper(), AgentRegistry::paper(), vec![1.2, 1.2],
+            PlacementStrategy::HeadroomDecreasing, rebalancer,
+            FaultConfig::new(FaultModel::spot(0.02, 7).generate(2, 100.0))
+                .with_repack_throttle(0.5)).unwrap();
+        expected.push(Want::Cluster(sc.as_cluster_scenario().unwrap()
+                                    .simulator().run().unwrap()));
+        cells.push(SweepCell::Fault(sc));
+    }
+    // Serving: bounded retry over a mid-run eviction, plus every shed
+    // policy under a bounded queue.
+    for shed in ShedPolicy::all() {
+        let name = shed.name();
+        let mut cfg = ServingConfig::paper();
+        cfg.duration_s = 2.0;
+        let faults = ServingFaults::new(FaultPlan::new(vec![
+            FaultEvent::GpuEviction { t: 0.3, gpu: 0, duration: 0.02 },
+        ])).with_retry(RetryPolicy::bounded())
+           .with_admission(AdmissionControl::new(48, shed));
+        let sc = FaultScenario::serving(
+            format!("fault/serving/{name}"), cfg, AgentRegistry::paper(),
+            PolicyKind::adaptive(), faults);
+        let mut reference = policy_by_name("adaptive")
+            .expect("built-in policy");
+        expected.push(Want::Serving(sc.as_serving_scenario().unwrap()
+                                    .simulator().run(reference.as_mut())));
+        cells.push(SweepCell::Fault(sc));
+    }
+
+    for workers in [1usize, 2, 8] {
+        let runs = run_sweep(&cells, workers);
+        assert_eq!(runs.len(), expected.len());
+        for (got, want) in runs.iter().zip(&expected) {
+            match want {
+                Want::Sim(w) => {
+                    let s = got.result.as_sim().unwrap();
+                    assert!(s.mean_latency() == w.mean_latency()
+                            && s.total_throughput() == w.total_throughput()
+                            && s.cost_dollars == w.cost_dollars,
+                            "{} @ {workers} workers", got.label);
+                    assert_eq!(s.resilience, w.resilience,
+                               "{} @ {workers} workers", got.label);
+                }
+                Want::Cluster(w) => assert_eq!(
+                    got.result.as_cluster().unwrap(), w,
+                    "{} @ {workers} workers", got.label),
+                Want::Serving(w) => assert_eq!(
+                    got.result.as_serving().unwrap(), w,
+                    "{} @ {workers} workers", got.label),
+            }
+        }
+    }
+}
+
+/// The fault layer is zero-cost when disabled: a `FaultScenario` with
+/// an empty plan yields the same numbers as the equivalent plain cell —
+/// for every policy on the fluid shell (metrics, per-agent series) and
+/// for the serving shell (full `ServingResult` equality) — at 1, 2,
+/// and 8 workers.
+#[test]
+fn prop_zero_fault_cells_match_plain_cells() {
+    let mut cells = Vec::new();
+    for kind in PolicyKind::all() {
+        cells.push(SweepCell::Single(Scenario::paper(
+            format!("plain/{}", kind.name()), kind.clone())));
+        cells.push(SweepCell::Fault(FaultScenario::single(
+            format!("fault/{}", kind.name()), SimConfig::paper(),
+            AgentRegistry::paper(), kind,
+            FaultConfig::new(FaultPlan::empty()))));
+    }
+    let mut cfg = ServingConfig::paper();
+    cfg.duration_s = 2.0;
+    cells.push(SweepCell::Serving(ServingScenario::new(
+        "plain/serving", cfg.clone(), AgentRegistry::paper(),
+        PolicyKind::adaptive())));
+    cells.push(SweepCell::Fault(FaultScenario::serving(
+        "fault/serving", cfg, AgentRegistry::paper(),
+        PolicyKind::adaptive(), ServingFaults::new(FaultPlan::empty()))));
+
+    for workers in [1usize, 2, 8] {
+        let runs = run_sweep(&cells, workers);
+        assert_eq!(runs.len(), cells.len());
+        for pair in runs.chunks(2) {
+            let (plain, faulted) = (&pair[0], &pair[1]);
+            if let (Some(p), Some(f)) =
+                (plain.result.as_sim(), faulted.result.as_sim())
+            {
+                assert!(p.mean_latency() == f.mean_latency()
+                        && p.total_throughput() == f.total_throughput()
+                        && p.cost_dollars == f.cost_dollars,
+                        "{} vs {} @ {workers} workers",
+                        plain.label, faulted.label);
+                for (a, b) in p.per_agent.iter().zip(&f.per_agent) {
+                    assert_eq!(a.processed_total, b.processed_total);
+                    assert_eq!(a.final_queue, b.final_queue);
+                }
+                assert!(f.resilience.is_none(),
+                        "{}: inert faults must cost nothing",
+                        faulted.label);
+            } else {
+                let p = plain.result.as_serving().unwrap();
+                let f = faulted.result.as_serving().unwrap();
+                assert_eq!(p, f, "{} vs {} @ {workers} workers",
+                           plain.label, faulted.label);
+                assert!(f.resilience.is_none());
+            }
+        }
+    }
+}
+
 /// The serving simulator drives the same `ServingCore` as the threaded
 /// `AgentServer`; at queue granularity the governor's compute-time
 /// shares must still track the allocation, so the high-priority
@@ -653,9 +807,9 @@ fn prop_serving_layer_preserves_allocation_semantics() {
     }
 }
 
-/// A mixed grid — single-GPU, cluster, trace, cost, and serving cells
-/// interleaved — runs through one pool with cell order preserved and
-/// every kind bit-identical to its sequential twin at every worker
+/// A mixed grid — single-GPU, cluster, trace, cost, serving, and fault
+/// cells interleaved — runs through one pool with cell order preserved
+/// and every kind bit-identical to its sequential twin at every worker
 /// count.
 #[test]
 fn prop_mixed_sweep_is_bit_identical_per_cell_kind() {
@@ -690,6 +844,24 @@ fn prop_mixed_sweep_is_bit_identical_per_cell_kind() {
     cells.push(SweepCell::Cluster(ClusterScenario::heterogeneous(
         "cluster/hetero/1+0.5".to_string(), SimConfig::paper(),
         AgentRegistry::paper(), vec![1.0, 0.5], None).unwrap()));
+    // One fault cell per shell rides the same mixed pool.
+    cells.push(SweepCell::Fault(FaultScenario::single(
+        "fault/single/adaptive", SimConfig::paper(),
+        AgentRegistry::paper(), PolicyKind::adaptive(),
+        FaultConfig::new(FaultModel::spot(0.01, 42).generate(1, 100.0)))));
+    cells.push(SweepCell::Fault(FaultScenario::cluster(
+        "fault/cluster/repack", SimConfig::paper(), AgentRegistry::paper(),
+        vec![1.2, 1.2], PlacementStrategy::HeadroomDecreasing,
+        Rebalancer::Repack(MigrationModel::default()),
+        FaultConfig::new(FaultModel::spot(0.01, 7).generate(2, 100.0))
+            .with_repack_throttle(0.5)).unwrap()));
+    let mut fault_serving_cfg = ServingConfig::paper();
+    fault_serving_cfg.duration_s = 2.0;
+    cells.push(SweepCell::Fault(FaultScenario::serving(
+        "fault/serving/shed", fault_serving_cfg, AgentRegistry::paper(),
+        PolicyKind::adaptive(),
+        ServingFaults::new(FaultPlan::empty()).with_admission(
+            AdmissionControl::new(64, ShedPolicy::DropByPriority)))));
 
     for workers in [1usize, 2, 8] {
         let runs = run_sweep(&cells, workers);
@@ -742,6 +914,32 @@ fn prop_mixed_sweep_is_bit_identical_per_cell_kind() {
                     };
                     let got = run.result.as_serving().unwrap();
                     assert_eq!(got, &want, "{} @ {workers}", run.label);
+                }
+                SweepCell::Fault(sc) => {
+                    if let Some(inner) = sc.as_cluster_scenario() {
+                        let want = inner.simulator().run().unwrap();
+                        assert_eq!(run.result.as_cluster().unwrap(), &want,
+                                   "{} @ {workers}", run.label);
+                    } else if let Some(inner) = sc.as_serving_scenario() {
+                        let mut policy =
+                            policy_by_name(inner.policy.name())
+                                .expect("built-in policy");
+                        let want = inner.simulator().run(policy.as_mut());
+                        assert_eq!(run.result.as_serving().unwrap(), &want,
+                                   "{} @ {workers}", run.label);
+                    } else {
+                        let inner = sc.as_single().unwrap();
+                        let mut policy =
+                            policy_by_name(inner.policy.name())
+                                .expect("built-in policy");
+                        let want = inner.simulator().run(policy.as_mut());
+                        let got = run.result.as_sim().unwrap();
+                        assert!(got.mean_latency() == want.mean_latency()
+                                && got.cost_dollars == want.cost_dollars,
+                                "{} @ {workers}", run.label);
+                        assert_eq!(got.resilience, want.resilience,
+                                   "{} @ {workers}", run.label);
+                    }
                 }
             }
         }
