@@ -26,7 +26,12 @@
 //!   * faults — `repro::fault_grid`: seeded fault injection across all
 //!     three shells (eviction rate × recovery policy on the cluster,
 //!     shed policy on the serving layer, every allocator on the fluid
-//!     shell), as `FaultScenario` cells.
+//!     shell), as `FaultScenario` cells;
+//!   * large_n — `repro::large_n_grid`: 1024/4096-agent synthetic
+//!     registries whose only traffic is a mid-run burst — the shape the
+//!     skip-idle event core fast-forwards. Timed both dense
+//!     (`run_dense`, every step simulated) and event-stepped, asserted
+//!     bit-identical, with the dense/skip speedup reported.
 //!
 //! `--quick` shrinks everything to 500 steps × 2 seeds for CI.
 //!
@@ -45,8 +50,8 @@
 //! Run: `cargo bench --bench sweep_scaling [-- --quick] [-- --json FILE]`
 //! With `--json`, the measured tables are also written as JSON (the
 //! format documented in BENCH_sweep.json, `results` key: the single-GPU
-//! table plus `cluster`, `corpus`, `cost`, `serving`, `placement`, and
-//! `faults` sections). The
+//! table plus `cluster`, `corpus`, `cost`, `serving`, `placement`,
+//! `faults`, and `large_n` sections). The
 //! written report is what CI's bench-regression gate compares against
 //! the committed BENCH_sweep.json baseline (`agentsrv bench-gate`).
 
@@ -113,13 +118,15 @@ fn main() {
              if speedup_at_8 >= 3.0 { "PASS" } else { "BELOW TARGET" });
 
     // ---- Cluster grid through the same pool --------------------------
-    // cluster_grid folds the placement cells in (so stress sweeps and
-    // smoke runs cover them); here they are split back out — the
-    // placement section below times them once, and this section keeps
-    // measuring the original multi-GPU axes its baseline describes.
+    // cluster_grid folds the placement and large-N cells in (so stress
+    // sweeps and smoke runs cover them); here they are split back out —
+    // the placement and large_n sections below time them once, and this
+    // section keeps measuring the original multi-GPU axes its baseline
+    // describes.
     let cluster_cells: Vec<SweepCell> = repro::cluster_grid(steps)
         .into_iter()
-        .filter(|c| !c.label().starts_with("placement/"))
+        .filter(|c| !c.label().starts_with("placement/")
+                 && !c.label().starts_with("large_n/"))
         .collect();
     let (cluster_seq_s, cluster_rows) = sweep_section(
         "cluster grid", &cluster_cells, steps, reps, sequential_cluster);
@@ -152,6 +159,36 @@ fn main() {
     let (fault_seq_s, fault_rows) = sweep_section(
         "fault grid", &fault_cells, steps, reps, sequential_fault);
 
+    // ---- Skip-idle large-N grid: dense vs event-stepped ---------------
+    // The payoff measurement for the skip-idle core: the same
+    // 1024/4096-agent cells run through the dense reference path
+    // (`run_dense`, every step simulated) and the event-stepped default,
+    // asserted to agree before timing.
+    let large_n_cells = repro::large_n_grid(steps);
+    let dense_reference = sequential_cluster_dense(&large_n_cells);
+    for (want, have) in dense_reference.iter()
+        .zip(sequential_cluster(&large_n_cells))
+    {
+        assert!(want.result.mean_latency() == have.result.mean_latency()
+                && want.result.total_throughput()
+                    == have.result.total_throughput()
+                && want.result.cost_dollars()
+                    == have.result.cost_dollars(),
+                "{}: skip-idle diverged from dense", want.label);
+    }
+    let (large_n_seq_s, large_n_rows) = sweep_section(
+        "large_n grid (skip-idle)", &large_n_cells, steps, reps,
+        sequential_cluster);
+    let dense_t = best_of(reps, || {
+        std::hint::black_box(
+            sequential_cluster_dense(&large_n_cells).len());
+    });
+    let large_n_dense_s = dense_t.as_secs_f64();
+    print_row("dense (no fast-forward)", dense_t, large_n_cells.len(),
+              large_n_seq_s / large_n_dense_s.max(1e-12));
+    println!("skip-idle vs dense (sequential): {:.2}x",
+             large_n_dense_s / large_n_seq_s.max(1e-12));
+
     if let Some(path) = json_path {
         let json = to_json(&ReportInput {
             grid: &grid,
@@ -166,6 +203,8 @@ fn main() {
             placement: (placement_cells.len(), placement_seq_s,
                         &placement_rows),
             faults: (fault_cells.len(), fault_seq_s, &fault_rows),
+            large_n: (large_n_cells.len(), large_n_dense_s,
+                      large_n_seq_s, &large_n_rows),
         }, &path);
         std::fs::write(&path, json).expect("write json report");
         println!("\njson report -> {path}");
@@ -196,6 +235,21 @@ fn sequential_cluster(cells: &[SweepCell]) -> Vec<SweepRun> {
         },
         _ => unreachable!("cluster/placement grids contain only cluster \
                            cells"),
+    }).collect()
+}
+
+/// The dense reference path for the large-N grid: `run_dense` simulates
+/// every step even through provably-idle windows, so timing it against
+/// `sequential_cluster` isolates the skip-idle core's speedup.
+fn sequential_cluster_dense(cells: &[SweepCell]) -> Vec<SweepRun> {
+    cells.iter().map(|cell| match cell {
+        SweepCell::Cluster(cs) => SweepRun {
+            label: cs.label.clone(),
+            result: CellResult::Cluster(
+                cs.simulator().run_dense()
+                    .expect("feasible cluster cell")),
+        },
+        _ => unreachable!("large_n grid contains only cluster cells"),
     }).collect()
 }
 
@@ -378,6 +432,9 @@ struct ReportInput<'a> {
     placement: (usize, f64, &'a [(usize, f64, f64)]),
     /// (cells, sequential seconds, per-worker rows).
     faults: (usize, f64, &'a [(usize, f64, f64)]),
+    /// (cells, dense seconds, skip-idle sequential seconds,
+    /// per-worker rows).
+    large_n: (usize, f64, f64, &'a [(usize, f64, f64)]),
 }
 
 fn worker_rows(n_cells: usize, rows: &[(usize, f64, f64)]) -> Value {
@@ -407,6 +464,26 @@ fn sweep_section_value(n_cells: usize, seq_s: f64,
     ])
 }
 
+/// The `large_n` section: like the others, plus the dense reference
+/// timing and the dense/skip speedup the event core is gated on.
+fn large_n_section_value(n_cells: usize, dense_s: f64, seq_s: f64,
+                         rows: &[(usize, f64, f64)]) -> Value {
+    let per_s = |secs: f64| json::num(n_cells as f64 / secs.max(1e-12));
+    json::obj(vec![
+        ("scenarios", json::num(n_cells as f64)),
+        ("dense", json::obj(vec![
+            ("seconds", json::num(dense_s)),
+            ("scenarios_per_s", per_s(dense_s)),
+        ])),
+        ("sequential", json::obj(vec![
+            ("seconds", json::num(seq_s)),
+            ("scenarios_per_s", per_s(seq_s)),
+        ])),
+        ("skip_idle_speedup", json::num(dense_s / seq_s.max(1e-12))),
+        ("sweep", worker_rows(n_cells, rows)),
+    ])
+}
+
 /// The measured results as the JSON object the checked-in
 /// BENCH_sweep.json documents under its `results` key.
 fn results_value(input: &ReportInput<'_>) -> Value {
@@ -418,6 +495,7 @@ fn results_value(input: &ReportInput<'_>) -> Value {
     let (placement_cells, placement_seq_s, placement_rows) =
         input.placement;
     let (fault_cells, fault_seq_s, fault_rows) = input.faults;
+    let (ln_cells, ln_dense_s, ln_seq_s, ln_rows) = input.large_n;
     json::obj(vec![
         ("grid", json::obj(vec![
             ("scenarios", json::num(n as f64)),
@@ -447,6 +525,8 @@ fn results_value(input: &ReportInput<'_>) -> Value {
                              placement_rows)),
         ("faults",
          sweep_section_value(fault_cells, fault_seq_s, fault_rows)),
+        ("large_n",
+         large_n_section_value(ln_cells, ln_dense_s, ln_seq_s, ln_rows)),
     ])
 }
 

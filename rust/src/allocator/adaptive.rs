@@ -27,6 +27,12 @@ impl AllocationPolicy for AdaptivePolicy {
         "adaptive"
     }
 
+    /// Stateless, and zero demand short-circuits to `out.fill(0.0)`
+    /// (Algorithm 1 line 10-12), so an all-idle step is a true no-op.
+    fn idle_fixed_point(&self, _n: usize) -> bool {
+        true
+    }
+
     fn allocate(&mut self, ctx: &AllocContext<'_>, out: &mut [f64]) {
         let n = ctx.registry.len();
         debug_assert_eq!(out.len(), n);

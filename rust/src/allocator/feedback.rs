@@ -37,6 +37,12 @@ impl AllocationPolicy for FeedbackPolicy {
         "feedback"
     }
 
+    /// Stateless (κ is a constant); zero rates *and* zero queues give
+    /// zero pressure, which short-circuits to `out.fill(0.0)`.
+    fn idle_fixed_point(&self, _n: usize) -> bool {
+        true
+    }
+
     fn allocate(&mut self, ctx: &AllocContext<'_>, out: &mut [f64]) {
         let n = ctx.registry.len();
         let min_gpu = ctx.registry.min_gpu();

@@ -65,6 +65,21 @@ pub trait AllocationPolicy: Send {
     /// Reset any internal state (rotation counters, EMA history) so a
     /// policy instance can be reused across independent runs.
     fn reset(&mut self) {}
+
+    /// Skip-idle contract: return `true` only when, for `n` agents with
+    /// **all-zero** arrival rates and queue depths, calling
+    /// [`AllocationPolicy::allocate`] any number of times would (a)
+    /// write all zeros and (b) leave the policy's internal state
+    /// bit-identical — i.e. the zero-demand step is a fixed point. The
+    /// simulation engines use this to fast-forward provably-idle
+    /// windows without invoking the policy; a policy that allocates
+    /// nonzero fractions at zero demand (static-equal) or mutates state
+    /// per call (round-robin's rotation) must return `false` (the
+    /// default), which simply keeps the dense path.
+    fn idle_fixed_point(&self, n: usize) -> bool {
+        let _ = n;
+        false
+    }
 }
 
 /// Forwarding impl so a borrowed policy can drive engines that take the
@@ -82,6 +97,10 @@ impl<P: AllocationPolicy + ?Sized> AllocationPolicy for &mut P {
     fn reset(&mut self) {
         (**self).reset()
     }
+
+    fn idle_fixed_point(&self, n: usize) -> bool {
+        (**self).idle_fixed_point(n)
+    }
 }
 
 /// Forwarding impl for boxed policies, so `Box<dyn AllocationPolicy>`
@@ -97,6 +116,10 @@ impl<P: AllocationPolicy + ?Sized> AllocationPolicy for Box<P> {
 
     fn reset(&mut self) {
         (**self).reset()
+    }
+
+    fn idle_fixed_point(&self, n: usize) -> bool {
+        (**self).idle_fixed_point(n)
     }
 }
 
@@ -219,6 +242,16 @@ impl AllocationPolicy for PolicyKind {
             PolicyKind::Feedback(p) => p.reset(),
         }
     }
+
+    fn idle_fixed_point(&self, n: usize) -> bool {
+        match self {
+            PolicyKind::StaticEqual(p) => p.idle_fixed_point(n),
+            PolicyKind::RoundRobin(p) => p.idle_fixed_point(n),
+            PolicyKind::Adaptive(p) => p.idle_fixed_point(n),
+            PolicyKind::Predictive(p) => p.idle_fixed_point(n),
+            PolicyKind::Feedback(p) => p.idle_fixed_point(n),
+        }
+    }
 }
 
 /// Construct every policy this crate ships, for comparison harnesses.
@@ -293,6 +326,68 @@ mod tests {
                        policy_by_name(n).is_some(), "{n}");
         }
         assert!(PolicyKind::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn idle_fixed_point_claims_are_honest() {
+        // For every policy claiming `idle_fixed_point`, a zero-demand
+        // allocate must (a) write all zeros and (b) leave the policy in a
+        // state that produces bit-identical output on the next live step
+        // as a clone that never saw the idle steps. That is exactly the
+        // license the skip-idle engines rely on.
+        let reg = AgentRegistry::paper();
+        let zero = [0.0; 4];
+        let live = [80.0, 40.0, 45.0, 25.0];
+        for mut kind in PolicyKind::all() {
+            // Warm Predictive onto its zero-EMA fixed point first; the
+            // claim is allowed to be state-dependent.
+            let warm_ctx = AllocContext {
+                registry: &reg,
+                arrival_rates: &zero,
+                queue_depths: &zero,
+                step: 0,
+                capacity: 1.0,
+            };
+            let mut buf = vec![0.0; 4];
+            kind.allocate(&warm_ctx, &mut buf);
+            if !kind.idle_fixed_point(4) {
+                continue; // static_equal, round_robin: dense path only
+            }
+            let mut skipped = kind.clone();
+            for step in 1..=9 {
+                let ctx = AllocContext {
+                    registry: &reg,
+                    arrival_rates: &zero,
+                    queue_depths: &zero,
+                    step,
+                    capacity: 1.0,
+                };
+                buf.fill(7.0);
+                kind.allocate(&ctx, &mut buf);
+                assert_eq!(buf, vec![0.0; 4],
+                           "{}: idle step wrote nonzero", kind.name());
+            }
+            let live_ctx = AllocContext {
+                registry: &reg,
+                arrival_rates: &live,
+                queue_depths: &zero,
+                step: 10,
+                capacity: 1.0,
+            };
+            let mut after_idle = vec![0.0; 4];
+            let mut after_skip = vec![0.0; 4];
+            kind.allocate(&live_ctx, &mut after_idle);
+            skipped.allocate(&live_ctx, &mut after_skip);
+            assert_eq!(after_idle, after_skip,
+                       "{}: idle steps perturbed state", kind.name());
+        }
+        // The claims themselves, pinned: exactly adaptive/feedback (and
+        // predictive once seeded) may be skipped.
+        assert!(!PolicyKind::static_equal().idle_fixed_point(4));
+        assert!(!PolicyKind::round_robin().idle_fixed_point(4));
+        assert!(PolicyKind::adaptive().idle_fixed_point(4));
+        assert!(PolicyKind::feedback().idle_fixed_point(4));
+        assert!(!PolicyKind::predictive().idle_fixed_point(4));
     }
 
     #[test]

@@ -47,6 +47,15 @@ impl AllocationPolicy for PredictivePolicy {
         "predictive"
     }
 
+    /// Only a fixed point once the EMA exists *and* has decayed to exactly
+    /// zero: a fresh (empty-EMA) policy is NOT one, because the first
+    /// `allocate` call seeds the EMA from the observed rates — skipping
+    /// that seeding step would change later forecasts. An all-zero EMA
+    /// observing zero rates stays bit-identical (`e += α·(0 − 0)`).
+    fn idle_fixed_point(&self, n: usize) -> bool {
+        self.ema.len() == n && self.ema.iter().all(|e| *e == 0.0)
+    }
+
     fn allocate(&mut self, ctx: &AllocContext<'_>, out: &mut [f64]) {
         let n = ctx.arrival_rates.len();
         if self.ema.len() != n {
@@ -129,6 +138,25 @@ mod tests {
         run_steps(&mut p, &[800.0, 40.0, 45.0, 25.0], 1);
         let f = p.forecast();
         assert!((f[0] - (80.0 + 0.3 * 720.0)).abs() < 1e-6, "{f:?}");
+    }
+
+    #[test]
+    fn idle_fixed_point_requires_seeded_zero_ema() {
+        let mut p = PredictivePolicy::default();
+        // Fresh policy: the next allocate seeds the EMA, so skipping idle
+        // steps here would change every later forecast.
+        assert!(!p.idle_fixed_point(4));
+        run_steps(&mut p, &[0.0; 4], 1);
+        assert!(p.idle_fixed_point(4));
+        // Idle steps on a zero EMA are bit-no-ops.
+        let before = p.forecast().to_vec();
+        run_steps(&mut p, &[0.0; 4], 17);
+        assert_eq!(p.forecast(), &before[..]);
+        // Any nonzero history disqualifies it again (EMA decays toward
+        // zero but never reaches it exactly).
+        run_steps(&mut p, &[80.0, 40.0, 45.0, 25.0], 1);
+        run_steps(&mut p, &[0.0; 4], 5);
+        assert!(!p.idle_fixed_point(4));
     }
 
     #[test]

@@ -290,8 +290,18 @@ impl ClusterSimulator {
     }
 
     /// Run the hierarchical allocator over the configured workload.
+    /// Provably-idle windows are fast-forwarded by the same skip-idle
+    /// core as the single-GPU engine — bit-exact with
+    /// [`ClusterSimulator::run_dense`] (asserted by the property suite).
     pub fn run(&self) -> Result<ClusterResult> {
         self.run_with_arena(&mut ClusterArena::new())
+    }
+
+    /// [`ClusterSimulator::run`] with the skip-idle core disabled: the
+    /// dense reference path for the bit-exactness properties and the
+    /// scaling bench.
+    pub fn run_dense(&self) -> Result<ClusterResult> {
+        self.run_inner(&mut ClusterArena::new(), false)
     }
 
     /// [`ClusterSimulator::run`], but with caller-owned buffers: repeated
@@ -301,6 +311,11 @@ impl ClusterSimulator {
     /// property suite).
     pub fn run_with_arena(&self, arena: &mut ClusterArena)
                           -> Result<ClusterResult> {
+        self.run_inner(arena, true)
+    }
+
+    fn run_inner(&self, arena: &mut ClusterArena, skip_idle: bool)
+                 -> Result<ClusterResult> {
         let n = self.registry.len();
         let n_gpus = self.capacities.len();
         let cfg = &self.cfg;
@@ -337,8 +352,44 @@ impl ClusterSimulator {
             cfg.faults.as_ref(), n_gpus, cfg.seed);
         let mut processed_sum = 0.0f64;
 
-        for step in 0..cfg.steps {
+        let mut step = 0u64;
+        while step < cfg.steps {
             let now = step as f64 * cfg.dt;
+
+            // Skip-idle fast path (same contract as the single-GPU
+            // engine): with empty queues, no in-flight stall, a workload
+            // window guaranteed arrival-free, no device offline and no
+            // fault event due, and economics at a zero-demand fixed
+            // point, every dense step in the window records exactly 0.0
+            // latency/throughput, allocates nothing (each per-GPU
+            // Algorithm 1 instance is stateless and zero-fills at zero
+            // demand), never fires the rebalancer (zero demand cannot
+            // exceed the imbalance threshold), skips GPU utilization
+            // (recorded only when capacity was allocated), and bills
+            // +0.0. Batch-account the window instead.
+            if skip_idle
+                && queues.iter().all(|q| *q == 0.0)
+                && stalled_until.iter().all(|s| *s <= now)
+                && econ.idle_fixed_point()
+            {
+                if let (Some(w), Some(f)) = (workload.idle_until(step),
+                                             fault.quiet_until(step, cfg.dt))
+                {
+                    let until = w.min(f).min(cfg.steps);
+                    if until > step {
+                        let k = until - step;
+                        for s in latency.iter_mut() {
+                            s.push_zeros(k);
+                        }
+                        for s in throughput.iter_mut() {
+                            s.push_zeros(k);
+                        }
+                        step = until;
+                        continue;
+                    }
+                }
+            }
+
             workload.step(step, cfg.dt, &mut rates[..], &mut counts[..]);
             for i in 0..n {
                 queues[i] += counts[i];
@@ -557,6 +608,7 @@ impl ClusterSimulator {
                 }
             }
             econ.charge_step(total_alloc, &alloc[..], cfg.dt);
+            step += 1;
         }
 
         let (cost_dollars, _gpu_seconds, economics) =
@@ -1030,6 +1082,81 @@ mod tests {
             .unwrap().run().unwrap();
         assert_eq!(plain, gated);
         assert!(gated.resilience.is_none());
+    }
+
+    /// Burst-only workload (the only traffic is two agents' mid-run
+    /// burst) — the shape where the cluster skip-idle core fires.
+    fn cluster_burst_cfg() -> SimConfig {
+        let mut cfg = SimConfig::paper();
+        cfg.arrival_rates = vec![0.0, 40.0, 0.0, 30.0];
+        cfg.workload_kind = WorkloadKind::Burst {
+            agents: vec![1, 3], start: 40, end: 60,
+        };
+        cfg
+    }
+
+    #[test]
+    fn cluster_skip_idle_is_bit_exact_with_dense() {
+        use crate::workload::ArrivalProcess;
+        // Every rebalancer, deterministic and Poisson arrivals: run()
+        // (skip-idle on) must equal run_dense() exactly — ClusterResult
+        // PartialEq is bit-exact.
+        for poisson in [false, true] {
+            for rebalancer in Rebalancer::all() {
+                let mut cfg = cluster_burst_cfg();
+                if poisson {
+                    cfg.arrival_process = ArrivalProcess::Poisson;
+                }
+                let sim = ClusterSimulator::with_policies(
+                    cfg, AgentRegistry::paper(), vec![1.0, 0.75],
+                    PlacementStrategy::HeadroomDecreasing, rebalancer)
+                    .unwrap();
+                let name = sim.rebalancer().name();
+                assert_eq!(sim.run().unwrap(), sim.run_dense().unwrap(),
+                           "{name} poisson={poisson}");
+            }
+        }
+        // All-zero workload: the whole run is one skipped window.
+        let mut cfg = SimConfig::paper();
+        cfg.arrival_rates = vec![0.0; 4];
+        let sim = ClusterSimulator::new(
+            cfg, AgentRegistry::paper(), 2, 1.0, None).unwrap();
+        let skip = sim.run().unwrap();
+        assert_eq!(skip, sim.run_dense().unwrap());
+        assert_eq!(skip.cost_dollars, 0.0);
+    }
+
+    #[test]
+    fn cluster_skip_idle_is_bit_exact_under_economics_and_faults() {
+        use crate::sim::fault::{FaultConfig, FaultEvent, FaultPlan};
+        // Scale-to-zero: the pre-burst window is dense until every
+        // instance goes cold, then skipped; wakes must land identically.
+        let mut cfg = cluster_burst_cfg();
+        cfg.economics = Some(
+            crate::serverless::EconomicsModel::with_idle_timeout(3.0));
+        let sim = ClusterSimulator::new(
+            cfg, AgentRegistry::paper(), 2, 1.0, None).unwrap();
+        let skip = sim.run().unwrap();
+        assert_eq!(skip, sim.run_dense().unwrap());
+        assert!(skip.economics.is_some());
+
+        // Faults inside the idle windows: the quiet cursor must stop
+        // the skip at each event's first step (eviction at t=10 while
+        // everything idles; a stall overlapping the burst).
+        let mut cfg = cluster_burst_cfg();
+        cfg.faults = Some(FaultConfig::new(FaultPlan::new(vec![
+            FaultEvent::GpuEviction { t: 10.0, gpu: 0, duration: 5.0 },
+            FaultEvent::AgentStall {
+                t: 45.0, agent: 1, factor: 3.0, duration: 10.0,
+            },
+        ])).with_repack_throttle(0.5));
+        let sim = ClusterSimulator::with_policies(
+            cfg, AgentRegistry::paper(), vec![1.2, 1.2],
+            PlacementStrategy::HeadroomDecreasing,
+            Rebalancer::Repack(MigrationModel::default())).unwrap();
+        let skip = sim.run().unwrap();
+        assert_eq!(skip, sim.run_dense().unwrap());
+        assert!(skip.resilience.is_some());
     }
 
     #[test]

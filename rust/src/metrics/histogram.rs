@@ -90,9 +90,21 @@ impl Histogram {
     }
 
     /// Merge another histogram with identical geometry.
+    ///
+    /// Geometry means the full bucket layout — `min_value`, `growth`,
+    /// *and* bucket count. Two histograms can share a length while
+    /// bucketing entirely different ranges (e.g. microseconds vs
+    /// seconds); summing their counts bucket-by-bucket would silently
+    /// produce nonsense quantiles, so any mismatch panics.
     pub fn merge(&mut self, other: &Histogram) {
-        assert_eq!(self.counts.len(), other.counts.len(),
-                   "histogram geometry mismatch");
+        assert!(
+            self.min_value == other.min_value
+                && self.growth == other.growth
+                && self.counts.len() == other.counts.len(),
+            "histogram geometry mismatch: \
+             min_value {} vs {}, growth {} vs {}, buckets {} vs {}",
+            self.min_value, other.min_value, self.growth, other.growth,
+            self.counts.len(), other.counts.len());
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
             *a += b;
         }
@@ -132,6 +144,112 @@ mod tests {
     fn empty_quantile_zero() {
         let h = Histogram::latency_seconds();
         assert_eq!(h.p50(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "histogram geometry mismatch")]
+    fn merge_rejects_same_length_different_geometry() {
+        // Same bucket count, different range: before the geometry check
+        // this merged silently into nonsense quantiles.
+        let mut a = Histogram::new(1e-3, 10.0, 1.1);
+        let b = Histogram::new(1e-6, 10.0e-3, 1.1);
+        assert_eq!(a.counts.len(), b.counts.len(),
+                   "test premise: lengths must collide");
+        a.merge(&b);
+    }
+
+    #[test]
+    #[should_panic(expected = "histogram geometry mismatch")]
+    fn merge_rejects_different_growth() {
+        let mut a = Histogram::new(1e-3, 10.0, 1.1);
+        let mut b = Histogram::new(1e-3, 10.0, 1.2);
+        // Pad the coarser histogram to the same length so only `growth`
+        // differs.
+        b.counts.resize(a.counts.len(), 0);
+        a.merge(&b);
+    }
+
+    #[test]
+    fn merge_preserves_quantiles() {
+        // Property: merging two same-geometry histograms yields exactly
+        // the quantiles of recording both sample sets into one — merge
+        // is bucket-count addition, so this must be exact, not
+        // approximate.
+        let xs: Vec<f64> =
+            (1..=500).map(|i| i as f64 * 2e-3).collect();
+        let ys: Vec<f64> =
+            (1..=300).map(|i| 0.4 + i as f64 * 1e-3).collect();
+        let mut merged = Histogram::latency_seconds();
+        let mut b = Histogram::latency_seconds();
+        let mut whole = Histogram::latency_seconds();
+        for &x in &xs {
+            merged.record(x);
+            whole.record(x);
+        }
+        for &y in &ys {
+            b.record(y);
+            whole.record(y);
+        }
+        merged.merge(&b);
+        assert_eq!(merged, whole);
+        for q in [0.0, 0.01, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(merged.quantile(q), whole.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn quantile_edges_zero_and_one() {
+        let mut h = Histogram::latency_seconds();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3);
+        }
+        // q = 0.0 → the first observation's bucket (ceil clamps the
+        // target to at least one observation, never below).
+        let q0 = h.quantile(0.0);
+        assert!(q0 >= 1e-3 * 0.98 && q0 <= 1e-3 * 1.1, "q0={q0}");
+        // q = 1.0 → the last observation's bucket upper edge, not the
+        // histogram's global max.
+        let q1 = h.quantile(1.0);
+        assert!(q1 >= 0.1 && q1 <= 0.1 * 1.05, "q1={q1}");
+        assert!(q1 < 3600.0);
+        // Out-of-range q clamps.
+        assert_eq!(h.quantile(-3.0), h.quantile(0.0));
+        assert_eq!(h.quantile(7.0), h.quantile(1.0));
+    }
+
+    #[test]
+    fn quantile_underflow_only_population() {
+        let mut h = Histogram::new(1.0, 100.0, 1.5);
+        for _ in 0..10 {
+            h.record(0.01); // below min_value → underflow bucket
+        }
+        assert_eq!(h.count(), 10);
+        // Every quantile of an all-underflow population reports the
+        // range floor — the one honest answer the sketch can give.
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 1.0, "q={q}");
+        }
+    }
+
+    #[test]
+    fn saturated_overflow_survives_merge() {
+        // Overflow saturates into the last bucket; merging two saturated
+        // histograms keeps the mass there and q=1.0 stays at the top
+        // edge rather than overflowing the bucket index.
+        let mut a = Histogram::new(1e-3, 10.0, 1.1);
+        let mut b = Histogram::new(1e-3, 10.0, 1.1);
+        for _ in 0..5 {
+            a.record(1e9);
+            b.record(1e12);
+        }
+        b.record(0.5); // one in-range sample on one side
+        a.merge(&b);
+        assert_eq!(a.count(), 11);
+        assert!(a.quantile(1.0) >= 10.0);
+        assert!(a.quantile(0.5) >= 10.0, "overflow dominates the median");
+        // The in-range sample is still visible at the bottom.
+        let q0 = a.quantile(0.0);
+        assert!(q0 < 1.0, "q0={q0}");
     }
 
     #[test]

@@ -1,32 +1,64 @@
-//! Streaming scalar statistics (Welford's online algorithm).
+//! Streaming scalar statistics over plain power sums.
+//!
+//! The accumulator keeps `n`, `Σx`, `Σx²`, min, and max — not Welford's
+//! recurrence. The representation is chosen for the skip-idle simulation
+//! core: pushing `0.0` leaves every float field bit-unchanged (adding
+//! `+0.0` is the identity on any non-`-0.0` float, and `min`/`max`
+//! against `0.0` are idempotent after the first zero), so a provably-idle
+//! window of `k` steps can be batch-accounted with [`Streaming::push_zeros`]
+//! bit-exactly as if the dense loop had pushed `0.0` `k` times. At
+//! simulation magnitudes (means well under 10⁴ over ≤ 10⁶ steps) the
+//! power-sum variance loses nothing detectable against f64's 15–16
+//! significant digits.
 
 /// Online mean / variance / min / max without storing samples.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Streaming {
     n: u64,
-    mean: f64,
-    m2: f64,
+    sum: f64,
+    sumsq: f64,
     min: f64,
     max: f64,
-    sum: f64,
+}
+
+/// Same as [`Streaming::new`] — a derived zeroed default would seed
+/// `min`/`max` at `0.0` and silently clamp every later observation.
+impl Default for Streaming {
+    fn default() -> Self {
+        Streaming::new()
+    }
 }
 
 impl Streaming {
     /// Empty accumulator.
     pub fn new() -> Self {
-        Streaming { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY,
-                    max: f64::NEG_INFINITY, sum: 0.0 }
+        Streaming { n: 0, sum: 0.0, sumsq: 0.0, min: f64::INFINITY,
+                    max: f64::NEG_INFINITY }
     }
 
     /// Add one observation.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         self.sum += x;
-        let delta = x - self.mean;
-        self.mean += delta / self.n as f64;
-        self.m2 += delta * (x - self.mean);
+        self.sumsq += x * x;
         self.min = self.min.min(x);
         self.max = self.max.max(x);
+    }
+
+    /// Add `k` zero observations in O(1), bit-exact with calling
+    /// [`Streaming::push`]`(0.0)` `k` times: `sum`/`sumsq` gain `+0.0`
+    /// once (the identity except for normalizing a `-0.0`, exactly as a
+    /// single real push would), and `min`/`max` clamp against `0.0`
+    /// idempotently.
+    pub fn push_zeros(&mut self, k: u64) {
+        if k == 0 {
+            return;
+        }
+        self.n += k;
+        self.sum += 0.0;
+        self.sumsq += 0.0;
+        self.min = self.min.min(0.0);
+        self.max = self.max.max(0.0);
     }
 
     /// Number of observations.
@@ -36,7 +68,7 @@ impl Streaming {
 
     /// Arithmetic mean (0.0 when empty).
     pub fn mean(&self) -> f64 {
-        if self.n == 0 { 0.0 } else { self.mean }
+        if self.n == 0 { 0.0 } else { self.sum / self.n as f64 }
     }
 
     /// Sum of observations.
@@ -46,7 +78,11 @@ impl Streaming {
 
     /// Population standard deviation (0.0 for < 2 observations).
     pub fn std_dev(&self) -> f64 {
-        if self.n < 2 { 0.0 } else { (self.m2 / self.n as f64).sqrt() }
+        if self.n < 2 {
+            return 0.0;
+        }
+        let mean = self.sum / self.n as f64;
+        (self.sumsq / self.n as f64 - mean * mean).max(0.0).sqrt()
     }
 
     /// Minimum (0.0 when empty).
@@ -65,17 +101,12 @@ impl Streaming {
             return;
         }
         if self.n == 0 {
-            *self = other.clone();
+            *self = *other;
             return;
         }
-        let n1 = self.n as f64;
-        let n2 = other.n as f64;
-        let delta = other.mean - self.mean;
-        let total = n1 + n2;
-        self.m2 += other.m2 + delta * delta * n1 * n2 / total;
-        self.mean = (n1 * self.mean + n2 * other.mean) / total;
         self.n += other.n;
         self.sum += other.sum;
+        self.sumsq += other.sumsq;
         self.min = self.min.min(other.min);
         self.max = self.max.max(other.max);
     }
@@ -93,6 +124,15 @@ mod tests {
         assert_eq!(s.min(), 0.0);
         assert_eq!(s.max(), 0.0);
         assert_eq!(s.count(), 0);
+    }
+
+    #[test]
+    fn default_is_new_not_zeroed() {
+        let mut d = Streaming::default();
+        assert_eq!(d, Streaming::new());
+        d.push(5.0);
+        assert_eq!(d.min(), 5.0, "default must not pre-seed min at 0.0");
+        assert_eq!(d.max(), 5.0);
     }
 
     #[test]
@@ -137,5 +177,59 @@ mod tests {
         let empty = Streaming::new();
         e.merge(&empty);
         assert_eq!(e.count(), whole.count());
+    }
+
+    #[test]
+    fn push_zeros_is_bit_exact_with_dense_zero_pushes() {
+        // Around a nonzero history: Welford could not do this — the
+        // power-sum representation makes k zero-pushes a pure n bump.
+        for k in [1u64, 2, 7, 1000] {
+            let mut dense = Streaming::new();
+            let mut batched = Streaming::new();
+            for &x in &[3.5, -1.25, 9.0] {
+                dense.push(x);
+                batched.push(x);
+            }
+            for _ in 0..k {
+                dense.push(0.0);
+            }
+            batched.push_zeros(k);
+            assert_eq!(dense, batched, "k={k}");
+        }
+        // From empty, too (min/max must clamp to 0.0 exactly once).
+        let mut dense = Streaming::new();
+        let mut batched = Streaming::new();
+        for _ in 0..5 {
+            dense.push(0.0);
+        }
+        batched.push_zeros(5);
+        assert_eq!(dense, batched);
+        assert_eq!(batched.min(), 0.0);
+        assert_eq!(batched.max(), 0.0);
+        // push_zeros(0) is a no-op.
+        let before = batched;
+        batched.push_zeros(0);
+        assert_eq!(before, batched);
+    }
+
+    #[test]
+    fn interleaved_zero_windows_match_dense() {
+        // The engine's actual usage shape: bursts of real samples
+        // separated by zero windows, batched vs dense, compared bit-wise.
+        let mut dense = Streaming::new();
+        let mut batched = Streaming::new();
+        let bursts = [[0.5, 2.0], [110.3, 60.0], [756.1, 0.02]];
+        for (i, burst) in bursts.iter().enumerate() {
+            for &x in burst {
+                dense.push(x);
+                batched.push(x);
+            }
+            let k = (i as u64 + 1) * 13;
+            for _ in 0..k {
+                dense.push(0.0);
+            }
+            batched.push_zeros(k);
+        }
+        assert_eq!(dense, batched);
     }
 }

@@ -20,8 +20,9 @@ pub use faults::{eviction_rate_axis, fault_experiment, fault_grid,
 pub use experiments::{fig2a, fig2b, fig2c, fig2d, table1, table2,
                       CostPerfPoint, PerAgentSeries};
 pub use placement::{adversarial_rates, adversarial_registry,
-                    placement_experiment, placement_grid,
-                    synthetic_arrival_rates, PlacementRow};
+                    large_n_config, large_n_grid, placement_experiment,
+                    placement_grid, synthetic_arrival_rates,
+                    PlacementRow};
 pub use robustness::{cluster_grid, dominance_experiment,
                      overload_experiment, scaling_experiment,
                      spike_experiment, stress_grid, stress_shapes,

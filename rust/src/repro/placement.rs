@@ -16,7 +16,10 @@
 //!   `agentsrv repro --exp placement` and `placement.csv`: every
 //!   strategy × rebalancer over [`adversarial_registry`], reporting
 //!   mean and High-priority latency, throughput, migrations, stalls,
-//!   and GPU-utilization spread.
+//!   and GPU-utilization spread;
+//! * [`large_n_grid`] — the skip-idle large-N axis: 1024- and
+//!   4096-agent burst cells the event-stepped core fast-forwards,
+//!   also folded into the cluster grid and `stress_sweep`.
 
 use crate::agents::{AgentProfile, AgentRegistry, Priority};
 use crate::cluster::{MigrationModel, PlacementStrategy, Rebalancer};
@@ -136,6 +139,47 @@ pub fn placement_grid(steps: u64) -> Vec<SweepCell> {
         }
     }
     cells
+}
+
+/// The skip-idle large-N axis, folded into
+/// [`cluster_grid`](crate::repro::cluster_grid) (and therefore into
+/// `stress_sweep`): synthetic registries of 1024 and 4096 agents on the
+/// mixed-capacity devices, with *all* traffic packed into a mid-run
+/// burst (`[2/5·steps, 3/5·steps)`) so the skip-idle event core
+/// fast-forwards the idle majority of every run — what makes
+/// 4096-agent cells routine sweep members instead of a bench-only
+/// stunt. Labelled `"large_n/synth<n>/<strategy>"`; results are
+/// bit-exact with the dense path (asserted by this module's tests).
+pub fn large_n_grid(steps: u64) -> Vec<SweepCell> {
+    let mut cells = Vec::new();
+    for n in [1024usize, 4096] {
+        for strategy in [PlacementStrategy::HeadroomDecreasing,
+                         PlacementStrategy::DemandAware] {
+            if let Ok(cell) = ClusterScenario::with_policies(
+                format!("large_n/synth{n}/{}", strategy.name()),
+                large_n_config(n, steps), synthetic_registry(n),
+                mixed_capacities(), strategy, Rebalancer::Static)
+            {
+                cells.push(SweepCell::Cluster(cell));
+            }
+        }
+    }
+    cells
+}
+
+/// The config behind one [`large_n_grid`] cell: `n` synthetic agents
+/// whose entire (rate-normalized) traffic arrives in the middle fifth
+/// of the run.
+pub fn large_n_config(n: usize, steps: u64) -> SimConfig {
+    let mut cfg = SimConfig::paper();
+    cfg.steps = steps;
+    cfg.arrival_rates = synthetic_arrival_rates(n);
+    cfg.workload_kind = WorkloadKind::Burst {
+        agents: (0..n).collect(),
+        start: steps * 2 / 5,
+        end: steps * 3 / 5,
+    };
+    cfg
 }
 
 /// One row of the strategy-comparison table (`placement.csv`).
@@ -276,6 +320,50 @@ mod tests {
                 && run.result.as_cluster().unwrap()
                     .agent_throughputs.len() == 256
         }));
+    }
+
+    #[test]
+    fn large_n_grid_runs_4096_agent_cells_through_the_pool() {
+        // The tentpole acceptance bar: synthetic_registry(4096) cells as
+        // routine sweep members, fast enough because the burst shape
+        // leaves 4/5 of every run to the skip-idle core.
+        let cells = large_n_grid(20);
+        assert_eq!(cells.len(), 4, "1024/4096 × headroom/demand");
+        let labels: Vec<&str> =
+            cells.iter().map(SweepCell::label).collect();
+        for want in ["large_n/synth1024/headroom",
+                     "large_n/synth4096/demand"] {
+            assert!(labels.contains(&want), "missing {want} in {labels:?}");
+        }
+        let runs = run_sweep(&cells, 4);
+        for run in &runs {
+            let r = run.result.as_cluster().expect("cluster cell");
+            assert_eq!(r.n_gpus, mixed_capacities().len(), "{}", run.label);
+            assert!(r.agent_throughputs.iter().all(|t| *t > 0.0),
+                    "{}: an agent starved", run.label);
+        }
+        assert!(runs.iter().any(|run| {
+            run.label.starts_with("large_n/synth4096")
+                && run.result.as_cluster().unwrap()
+                    .agent_throughputs.len() == 4096
+        }));
+    }
+
+    #[test]
+    fn large_n_cells_are_bit_exact_with_dense() {
+        use crate::cluster::ClusterSimulator;
+        // The skip-idle fast-forward must change nothing but wall time,
+        // even at 4096 agents: run() == run_dense() exactly.
+        for (n, steps) in [(1024usize, 200u64), (4096, 100)] {
+            let sim = ClusterSimulator::with_policies(
+                large_n_config(n, steps), synthetic_registry(n),
+                mixed_capacities(), PlacementStrategy::HeadroomDecreasing,
+                Rebalancer::Static).unwrap();
+            let skip = sim.run().unwrap();
+            assert_eq!(skip, sim.run_dense().unwrap(), "n={n}");
+            assert!(skip.agent_throughputs.iter().all(|t| *t > 0.0),
+                    "n={n}: an agent starved");
+        }
     }
 
     #[test]

@@ -282,6 +282,9 @@ pub fn cluster_grid(steps: u64) -> Vec<SweepCell> {
     // Placement-policy axes: strategy × rebalancer combos plus
     // synthetic large-N registries, as further cluster cells.
     cells.extend(crate::repro::placement_grid(steps));
+    // Skip-idle large-N axis: 1024- and 4096-agent burst cells the
+    // event core fast-forwards (labels "large_n/synth<n>/<strategy>").
+    cells.extend(crate::repro::large_n_grid(steps));
     cells
 }
 
@@ -496,7 +499,9 @@ mod tests {
                      "placement/spread/repack/paper",
                      "placement/demand/hottest/paper",
                      "placement/synth64/demand",
-                     "placement/synth256/inorder"] {
+                     "placement/synth256/inorder",
+                     "large_n/synth1024/headroom",
+                     "large_n/synth4096/demand"] {
             assert!(labels.contains(&want), "missing {want} in {labels:?}");
         }
         // Every cell is a cluster cell and actually runs.

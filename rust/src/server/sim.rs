@@ -18,7 +18,8 @@ use crate::agents::{AgentProfile, AgentRegistry};
 use crate::allocator::AllocationPolicy;
 use crate::metrics::Histogram;
 use crate::server::core::{AgentStat, Executor, ServingCore, VirtualClock};
-use crate::sim::fault::{ResilienceReport, ServingFaults, ShedPolicy};
+use crate::sim::fault::{ResilienceReport, ServingFaultCursor,
+                        ServingFaults, ShedPolicy};
 use crate::workload::trace::Trace;
 use crate::workload::{ArrivalProcess, WorkloadGenerator, WorkloadKind};
 
@@ -108,6 +109,64 @@ impl Executor for CostModelExecutor {
         let service = self.dispatch_overhead_s
             + batch.len() as f64 * self.per_request_s[agent];
         (service, Ok(()))
+    }
+}
+
+/// Arrival-count source for the materialization loop: per-tick counts
+/// plus the skip-idle window oracle (the serving twin of the fluid
+/// engine's private source trait).
+trait ArrivalStream {
+    /// Fill `rates`/`counts` for `step`.
+    fn next(&mut self, step: u64, dt: f64, rates: &mut [f64],
+            counts: &mut [f64]);
+
+    /// `Some(until)` promises every tick in `[step, until)` produces
+    /// zero counts for every agent without consuming RNG state
+    /// (see [`WorkloadGenerator::idle_until`]); `None` means the
+    /// current tick may be active.
+    fn idle_until(&mut self, step: u64) -> Option<u64>;
+}
+
+/// Live schedule: the workload generator drives both hooks.
+struct GeneratorStream(WorkloadGenerator);
+
+impl ArrivalStream for GeneratorStream {
+    fn next(&mut self, step: u64, dt: f64, rates: &mut [f64],
+            counts: &mut [f64]) {
+        self.0.step(step, dt, rates, counts);
+    }
+
+    fn idle_until(&mut self, step: u64) -> Option<u64> {
+        self.0.idle_until(step)
+    }
+}
+
+/// Recorded trace: counts come off the rows; the idle oracle scans
+/// forward for the next nonzero row (amortized O(rows) over a run).
+struct TraceStream<'a> {
+    rows: &'a [Vec<f64>],
+}
+
+impl ArrivalStream for TraceStream<'_> {
+    fn next(&mut self, step: u64, dt: f64, rates: &mut [f64],
+            counts: &mut [f64]) {
+        let row = &self.rows[step as usize];
+        counts.copy_from_slice(row);
+        for (r, c) in rates.iter_mut().zip(row) {
+            *r = c / dt;
+        }
+    }
+
+    fn idle_until(&mut self, step: u64) -> Option<u64> {
+        if self.rows[step as usize].iter().any(|c| *c != 0.0) {
+            return None;
+        }
+        for s in (step as usize + 1)..self.rows.len() {
+            if self.rows[s].iter().any(|c| *c != 0.0) {
+                return Some(s as u64);
+            }
+        }
+        Some(u64::MAX)
     }
 }
 
@@ -266,12 +325,25 @@ impl ServingSimulator {
     }
 
     /// Run one policy over the configured workload until every queue
-    /// drains.
+    /// drains. Provably-idle stretches of the arrival schedule are
+    /// fast-forwarded during materialization — bit-exact with
+    /// [`ServingSimulator::run_dense`] (asserted by the test suite);
+    /// the serving loop itself is already event-stepped.
     pub fn run<P>(&self, policy: &mut P) -> ServingResult
     where
         P: AllocationPolicy + ?Sized,
     {
         self.run_with_arena(policy, &mut ServingArena::new())
+    }
+
+    /// [`ServingSimulator::run`] with the materialization fast-forward
+    /// disabled: the dense reference path for the bit-exactness
+    /// properties.
+    pub fn run_dense<P>(&self, policy: &mut P) -> ServingResult
+    where
+        P: AllocationPolicy + ?Sized,
+    {
+        self.run_generated(policy, &mut ServingArena::new(), false)
     }
 
     /// [`ServingSimulator::run`] with caller-owned buffers.
@@ -280,25 +352,43 @@ impl ServingSimulator {
     where
         P: AllocationPolicy + ?Sized,
     {
-        let mut workload = WorkloadGenerator::new(
+        self.run_generated(policy, arena, true)
+    }
+
+    fn run_generated<P>(&self, policy: &mut P, arena: &mut ServingArena,
+                        skip_idle: bool) -> ServingResult
+    where
+        P: AllocationPolicy + ?Sized,
+    {
+        let mut source = GeneratorStream(WorkloadGenerator::new(
             self.cfg.arrival_rates.clone(), self.cfg.workload_kind.clone(),
-            self.cfg.arrival_process, self.cfg.seed);
+            self.cfg.arrival_process, self.cfg.seed));
         let dt = self.cfg.arrival_dt_s;
         let steps = (self.cfg.duration_s / dt).round().max(1.0) as u64;
-        self.run_inner(policy, |step, dt_s, rates, counts| {
-            workload.step(step, dt_s, rates, counts);
-        }, steps, dt, arena)
+        self.run_inner(policy, &mut source, steps, dt, arena, skip_idle)
     }
 
     /// Replay a recorded arrival [`Trace`] through the serving queue
     /// path. The trace's `dt` and length override the config's arrival
-    /// schedule.
+    /// schedule. Panics on a ragged trace (validated up front) or an
+    /// agent-count mismatch.
     pub fn run_trace<P>(&self, policy: &mut P, trace: &Trace)
                         -> ServingResult
     where
         P: AllocationPolicy + ?Sized,
     {
         self.run_trace_with_arena(policy, trace, &mut ServingArena::new())
+    }
+
+    /// [`ServingSimulator::run_trace`] with the materialization
+    /// fast-forward disabled (the dense reference path).
+    pub fn run_trace_dense<P>(&self, policy: &mut P, trace: &Trace)
+                              -> ServingResult
+    where
+        P: AllocationPolicy + ?Sized,
+    {
+        self.run_trace_inner(policy, trace, &mut ServingArena::new(),
+                             false)
     }
 
     /// [`ServingSimulator::run_trace`] with caller-owned buffers.
@@ -308,24 +398,31 @@ impl ServingSimulator {
     where
         P: AllocationPolicy + ?Sized,
     {
-        assert_eq!(trace.agents.len(), self.registry.len(),
-                   "trace agent count must match registry");
-        let counts_by_step = &trace.counts;
-        self.run_inner(policy, |step, dt_s, rates, counts| {
-            let row = &counts_by_step[step as usize];
-            counts.copy_from_slice(row);
-            for (r, c) in rates.iter_mut().zip(row) {
-                *r = c / dt_s;
-            }
-        }, trace.counts.len() as u64, trace.dt, arena)
+        self.run_trace_inner(policy, trace, arena, true)
     }
 
-    fn run_inner<P, F>(&self, policy: &mut P, mut next_arrivals: F,
-                       steps: u64, dt: f64, arena: &mut ServingArena)
-                       -> ServingResult
+    fn run_trace_inner<P>(&self, policy: &mut P, trace: &Trace,
+                          arena: &mut ServingArena, skip_idle: bool)
+                          -> ServingResult
     where
         P: AllocationPolicy + ?Sized,
-        F: FnMut(u64, f64, &mut [f64], &mut [f64]),
+    {
+        assert_eq!(trace.agents.len(), self.registry.len(),
+                   "trace agent count must match registry");
+        if let Err(e) = trace.validate() {
+            panic!("{e}");
+        }
+        let mut source = TraceStream { rows: &trace.counts };
+        self.run_inner(policy, &mut source, trace.counts.len() as u64,
+                       trace.dt, arena, skip_idle)
+    }
+
+    fn run_inner<P>(&self, policy: &mut P,
+                    source: &mut dyn ArrivalStream, steps: u64, dt: f64,
+                    arena: &mut ServingArena, skip_idle: bool)
+                    -> ServingResult
+    where
+        P: AllocationPolicy + ?Sized,
     {
         let n = self.registry.len();
         arena.reset(n);
@@ -337,8 +434,23 @@ impl ServingSimulator {
         // Materialize the arrival stream: per tick, draw counts, carry
         // fractional remainders (deterministic mode produces fractional
         // mass), and space the requests evenly inside the tick.
-        for step in 0..steps {
-            next_arrivals(step, dt, &mut rates[..], &mut counts[..]);
+        // Provably-idle stretches of the schedule are jumped instead of
+        // ticked through: a zero-count tick materializes nothing, adds
+        // `+0.0` to every carry (a bit-no-op), and consumes no RNG state
+        // (`poisson(0.0)` returns without a draw), so the jump is
+        // bit-exact with dense ticking.
+        let mut step = 0u64;
+        while step < steps {
+            if skip_idle {
+                if let Some(until) = source.idle_until(step) {
+                    let until = until.min(steps);
+                    if until > step {
+                        step = until;
+                        continue;
+                    }
+                }
+            }
+            source.next(step, dt, &mut rates[..], &mut counts[..]);
             let t0 = step as f64 * dt;
             for i in 0..n {
                 carry[i] += counts[i];
@@ -349,6 +461,7 @@ impl ServingSimulator {
                     arrivals.push((t0 + dt * j as f64 / k as f64, i));
                 }
             }
+            step += 1;
         }
         arrivals.sort_unstable_by(|a, b| {
             a.0.partial_cmp(&b.0).expect("finite arrival times")
@@ -368,6 +481,11 @@ impl ServingSimulator {
         if let Some(f) = faults {
             core.set_retry(f.retry.clone());
         }
+        // Per-dispatch fault checks drive a monotone-time cursor (the
+        // serving `now` never decreases) instead of rescanning the whole
+        // plan on every attempt; answers are identical to
+        // `ServingFaults::fails_at`.
+        let mut fault_cursor = faults.map(ServingFaultCursor::new);
         let admission = faults.and_then(|f| f.admission.as_ref());
         let weights: Vec<f64> = if admission.is_some() {
             self.registry.profiles().iter()
@@ -499,8 +617,8 @@ impl ServingSimulator {
             // through) decides whether to re-dispatch or give up.
             let mut attempt = 0u32;
             loop {
-                let injected =
-                    faults.is_some_and(|f| f.fails_at(now, agent));
+                let injected = fault_cursor.as_mut()
+                    .is_some_and(|c| c.fails_at(now, agent));
                 let (service_s, result) = executor.execute(agent,
                                                            &batch[..]);
                 now += service_s;
@@ -763,6 +881,98 @@ mod tests {
             .run(&mut AdaptivePolicy::default());
         assert_eq!(faulted, plain, "inert fault config changed the run");
         assert!(faulted.resilience.is_none());
+    }
+
+    /// Burst-only schedule: all traffic is a mid-run burst by agents 1
+    /// and 3, so the materialization loop has real idle stretches to
+    /// fast-forward.
+    fn burst_cfg() -> ServingConfig {
+        let mut cfg = ServingConfig::paper();
+        cfg.arrival_rates = vec![0.0, 20.0, 0.0, 10.0];
+        cfg.workload_kind = WorkloadKind::Burst {
+            agents: vec![1, 3], start: 5, end: 10,
+        };
+        cfg.duration_s = 2.0;
+        cfg
+    }
+
+    #[test]
+    fn skip_idle_materialization_is_bit_exact_with_dense() {
+        // Deterministic and Poisson arrivals, several policies:
+        // run() (fast-forward on) must equal run_dense() exactly.
+        for process in [ArrivalProcess::Deterministic,
+                        ArrivalProcess::Poisson] {
+            let mut cfg = burst_cfg();
+            cfg.arrival_process = process;
+            let sim = ServingSimulator::with_registry(
+                cfg, AgentRegistry::paper());
+            for make in [PolicyKind::adaptive, PolicyKind::static_equal] {
+                let skip = sim.run(&mut make());
+                let dense = sim.run_dense(&mut make());
+                assert_eq!(skip, dense, "{process:?} {}", skip.policy);
+                assert!(skip.total_completed > 0, "burst never served");
+            }
+        }
+        // All-zero schedule: nothing arrives, nothing runs, still equal.
+        let mut cfg = burst_cfg();
+        cfg.arrival_rates = vec![0.0; 4];
+        cfg.workload_kind = WorkloadKind::Steady;
+        let sim = ServingSimulator::with_registry(cfg,
+                                                  AgentRegistry::paper());
+        let skip = sim.run(&mut AdaptivePolicy::default());
+        assert_eq!(skip, sim.run_dense(&mut AdaptivePolicy::default()));
+        assert_eq!(skip.total_completed, 0);
+    }
+
+    #[test]
+    fn skip_idle_materialization_is_bit_exact_under_faults() {
+        use crate::sim::fault::{FaultEvent, FaultPlan};
+        // A fault window inside the burst: the monotone fault cursor and
+        // the fast-forward must both leave the run bit-identical to the
+        // dense path.
+        let mut cfg = burst_cfg();
+        cfg.faults = Some(ServingFaults::new(FaultPlan::new(vec![
+            FaultEvent::GpuEviction { t: 0.55, gpu: 0, duration: 0.02 },
+        ])));
+        let sim = ServingSimulator::with_registry(cfg,
+                                                  AgentRegistry::paper());
+        let skip = sim.run(&mut AdaptivePolicy::default());
+        assert_eq!(skip, sim.run_dense(&mut AdaptivePolicy::default()));
+        assert!(skip.resilience.is_some());
+    }
+
+    #[test]
+    fn trace_replay_skip_idle_is_bit_exact_with_dense() {
+        // Zero rows on both sides of a recorded active window: the trace
+        // stream's idle oracle jumps them, bit-exactly.
+        let zeros = vec![0.0; 4];
+        let mut rows = vec![zeros.clone(); 6];
+        rows.extend(vec![vec![2.0, 1.0, 0.0, 1.0]; 4]);
+        rows.extend(vec![zeros; 6]);
+        let names = (0..4).map(|i| format!("a{i}")).collect();
+        let trace = Trace::new(names, 0.1, rows).unwrap();
+        let sim = ServingSimulator::with_registry(light_cfg(),
+                                                  AgentRegistry::paper());
+        let skip = sim.run_trace(&mut AdaptivePolicy::default(), &trace);
+        let dense =
+            sim.run_trace_dense(&mut AdaptivePolicy::default(), &trace);
+        assert_eq!(skip, dense);
+        assert_eq!(skip.total_completed, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "trace error")]
+    fn run_trace_panics_on_ragged_rows() {
+        // A hand-built ragged trace must be rejected up front with the
+        // labelled trace error, not die on copy_from_slice mid-run.
+        let trace = Trace {
+            agents: (0..4).map(|i| format!("a{i}")).collect(),
+            dt: 0.1,
+            counts: vec![vec![1.0; 4], vec![1.0; 3], vec![1.0; 4]],
+        };
+        let sim = ServingSimulator::with_registry(light_cfg(),
+                                                  AgentRegistry::paper());
+        let _ = sim.run_trace(&mut AdaptivePolicy::default(), &trace);
     }
 
     #[test]

@@ -54,6 +54,16 @@ impl Autoscaler {
         &self.cold_starts
     }
 
+    /// Whether every instance is scaled to zero. A fully-cold scaler
+    /// observing zero demand is an absorbing no-op: `step` neither
+    /// mutates state nor consumes RNG, which is what lets the skip-idle
+    /// engines fast-forward such windows. Note that *warm* idle agents
+    /// do mutate (`idle_for` accrues), so warmth anywhere disqualifies
+    /// the skip.
+    pub fn all_cold(&self) -> bool {
+        self.states.iter().all(|s| matches!(s, InstanceState::Cold))
+    }
+
     /// Advance one step: observe demand (arrivals + backlog) for each
     /// agent at time `now`. A warm agent whose continuous idleness
     /// reaches `idle_timeout_s` is torn down; a cold agent with demand

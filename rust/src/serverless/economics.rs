@@ -209,6 +209,18 @@ impl EconInstruments {
         }
     }
 
+    /// Skip-idle contract: `true` when a zero-demand, zero-allocation
+    /// step is a bit-exact no-op on every instrument. Billing and the
+    /// per-agent meter always are (`+= 0.0` charges); the lifecycle is
+    /// only when there is none, or when every instance is already Cold —
+    /// the absorbing state where `Autoscaler::step` touches neither
+    /// state nor RNG. A *warm* idle instance accrues `idle_for` (it is
+    /// counting down toward teardown), so it must be stepped densely.
+    pub(crate) fn idle_fixed_point(&self) -> bool {
+        self.lifecycle.as_ref()
+            .map_or(true, |(scaler, _)| scaler.all_cold())
+    }
+
     /// Bill this step's post-forfeiture allocation: the whole-device
     /// total plus, when economics is on, the per-agent breakdown.
     pub(crate) fn charge_step(&mut self, total_alloc: f64, alloc: &[f64],
@@ -265,6 +277,46 @@ mod tests {
         assert_eq!(report.warm_fraction, vec![1.0, 1.0]);
         assert_eq!(report.mean_warm_fraction(), 1.0);
         assert_eq!(report.total_cold_starts(), 0);
+    }
+
+    #[test]
+    fn idle_fixed_point_tracks_lifecycle_state() {
+        // No economics at all / all-warm economics: no lifecycle → the
+        // instruments are pure accumulators, always skippable at zero
+        // allocation.
+        let none = EconInstruments::new(None, GpuPricing::t4(), 2, 7);
+        assert!(none.idle_fixed_point());
+        let all_warm = EconomicsModel::paper_all_warm();
+        let warm = EconInstruments::new(Some(&all_warm), GpuPricing::t4(),
+                                        2, 7);
+        assert!(warm.idle_fixed_point());
+
+        // Finite timeout: warm instances are counting toward teardown,
+        // so the window must be stepped densely until everyone is cold.
+        let model = EconomicsModel::with_idle_timeout(1.0);
+        let mut econ = EconInstruments::new(Some(&model), GpuPricing::t4(),
+                                            2, 7);
+        assert!(!econ.idle_fixed_point());
+        let mb = [500u32, 500];
+        let mut alloc = [0.0, 0.0];
+        for step in 0..2 {
+            econ.apply_lifecycle(step, 1.0, &[0.0, 0.0], &mb, &mut alloc);
+        }
+        // Both instances torn down → Cold is absorbing at zero demand.
+        assert!(econ.idle_fixed_point());
+        // And the absorbing state really is a bit-no-op: further idle
+        // steps change nothing observable.
+        let (scaler_before, _) = econ.lifecycle.as_ref().unwrap();
+        let states: Vec<_> =
+            (0..2).map(|i| scaler_before.state(i)).collect();
+        for step in 2..10 {
+            econ.apply_lifecycle(step, 1.0, &[0.0, 0.0], &mb, &mut alloc);
+        }
+        let (scaler_after, _) = econ.lifecycle.as_ref().unwrap();
+        for (i, s) in states.iter().enumerate() {
+            assert_eq!(*s, scaler_after.state(i));
+        }
+        assert_eq!(scaler_after.cold_starts(), &[0, 0]);
     }
 
     #[test]

@@ -1,20 +1,29 @@
-//! Reusable per-run simulation buffers.
+//! Reusable per-run simulation buffers, struct-of-arrays throughout.
 //!
 //! One [`SimArena`] owns every dense buffer the simulation loop touches:
 //! queue depths, arrival rates/counts, observed rates, the allocation
-//! vector, the per-step latency/throughput rows, and the model-size cache
-//! for the serverless lifecycle. A single run's hot path was already
-//! allocation-free; the arena extends that to the buffer *set* across
-//! runs — a sweep worker constructs one arena and replays thousands of
-//! scenarios through [`Simulator::run_with_arena`] without re-allocating
-//! these buffers (they are `clear()`-ed and re-zeroed, capacity is
-//! retained). Per-run output state (the `AgentStats` vector and the
-//! workload generator) is still constructed per run, since it is moved
-//! into the returned [`SimResult`].
+//! vector, the per-step latency/throughput rows, the model-size cache
+//! for the serverless lifecycle, *and* the per-agent statistics
+//! accumulators. A single run's hot path was already allocation-free;
+//! the arena extends that to the buffer *set* across runs — a sweep
+//! worker constructs one arena and replays thousands of scenarios
+//! through [`Simulator::run_with_arena`] without re-allocating these
+//! buffers (they are `clear()`-ed and re-zeroed, capacity is retained).
 //!
-//! [`SimResult`]: crate::sim::SimResult
+//! The statistics live here as parallel `Vec<Streaming>` columns rather
+//! than inside an array-of-structs `Vec<AgentStats>`: the dense inner
+//! loop then updates same-kind accumulators at unit stride (each
+//! [`Streaming`] is a flat 5-word record), and the skip-idle fast
+//! path batch-accounts an idle window with one contiguous sweep per
+//! column. The engine assembles the public per-agent
+//! [`AgentStats`](crate::sim::AgentStats) rows from these columns once,
+//! at the end of the run.
+//!
+//! [`Streaming`]: crate::metrics::Streaming
 //!
 //! [`Simulator::run_with_arena`]: crate::sim::Simulator::run_with_arena
+
+use crate::metrics::Streaming;
 
 /// Dense per-step buffers reused across simulation runs.
 #[derive(Debug, Clone, Default)]
@@ -27,6 +36,14 @@ pub struct SimArena {
     pub(crate) lat_row: Vec<f64>,
     pub(crate) tput_row: Vec<f64>,
     pub(crate) model_mb: Vec<u32>,
+    // Struct-of-arrays statistics columns (one entry per agent).
+    pub(crate) latency: Vec<Streaming>,
+    pub(crate) throughput: Vec<Streaming>,
+    pub(crate) queue_stat: Vec<Streaming>,
+    pub(crate) allocation: Vec<Streaming>,
+    pub(crate) utilization: Vec<Streaming>,
+    pub(crate) processed_total: Vec<f64>,
+    pub(crate) arrived_total: Vec<f64>,
 }
 
 impl SimArena {
@@ -47,11 +64,19 @@ impl SimArena {
             lat_row: Vec::with_capacity(n),
             tput_row: Vec::with_capacity(n),
             model_mb: Vec::with_capacity(n),
+            latency: Vec::with_capacity(n),
+            throughput: Vec::with_capacity(n),
+            queue_stat: Vec::with_capacity(n),
+            allocation: Vec::with_capacity(n),
+            utilization: Vec::with_capacity(n),
+            processed_total: Vec::with_capacity(n),
+            arrived_total: Vec::with_capacity(n),
         }
     }
 
-    /// Size every f64 buffer to `n` agents and zero it. Keeps capacity, so
-    /// repeated runs over same-sized registries never reallocate.
+    /// Size every buffer to `n` agents and zero it (statistics columns
+    /// reset to empty accumulators). Keeps capacity, so repeated runs
+    /// over same-sized registries never reallocate.
     pub(crate) fn reset(&mut self, n: usize) {
         for buf in [
             &mut self.queues,
@@ -61,9 +86,21 @@ impl SimArena {
             &mut self.alloc,
             &mut self.lat_row,
             &mut self.tput_row,
+            &mut self.processed_total,
+            &mut self.arrived_total,
         ] {
             buf.clear();
             buf.resize(n, 0.0);
+        }
+        for col in [
+            &mut self.latency,
+            &mut self.throughput,
+            &mut self.queue_stat,
+            &mut self.allocation,
+            &mut self.utilization,
+        ] {
+            col.clear();
+            col.resize(n, Streaming::new());
         }
     }
 }
@@ -78,13 +115,17 @@ mod tests {
         a.reset(3);
         assert_eq!(a.queues, vec![0.0; 3]);
         a.queues[1] = 7.0;
+        a.latency[1].push(9.0);
         a.reset(3);
         assert_eq!(a.queues, vec![0.0; 3]);
+        assert_eq!(a.latency[1], Streaming::new());
         // Shrinking and growing both land on the requested size.
         a.reset(1);
         assert_eq!(a.alloc.len(), 1);
         a.reset(5);
         assert_eq!(a.lat_row, vec![0.0; 5]);
+        assert_eq!(a.utilization.len(), 5);
+        assert_eq!(a.processed_total, vec![0.0; 5]);
     }
 
     #[test]
@@ -92,8 +133,10 @@ mod tests {
         let mut a = SimArena::with_agents(8);
         a.reset(8);
         let cap = a.queues.capacity();
+        let stat_cap = a.latency.capacity();
         a.reset(4);
         a.reset(8);
         assert!(a.queues.capacity() >= cap);
+        assert!(a.latency.capacity() >= stat_cap);
     }
 }

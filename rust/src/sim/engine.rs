@@ -1,4 +1,17 @@
-//! The simulation loop (§IV.B methodology).
+//! The simulation loop (§IV.B methodology), with a skip-idle event core.
+//!
+//! The dense loop steps every timestep. The skip-idle core in front of it
+//! fast-forwards windows that are *provably* idle — zero queues, a
+//! workload shape that guarantees zero arrivals, no pending fault
+//! transition, and policy/economics state that is a fixed point under
+//! zero demand — by batch-accounting the window in O(agents) instead of
+//! O(agents × steps). The skipped window is bit-exact with the dense
+//! path by construction (asserted by the `skip_idle_*` tests against
+//! [`Simulator::run_dense`]): every per-step quantity in such a window
+//! is exactly `0.0`, pushing `0.0` into the power-sum
+//! [`Streaming`](crate::metrics::Streaming) accumulators is the
+//! identity on every float field, zero-rate Poisson steps consume no
+//! RNG, and zero-allocation billing charges `+0.0`.
 
 use crate::agents::{AgentProfile, AgentRegistry};
 use crate::allocator::AllocationPolicy;
@@ -8,6 +21,75 @@ use crate::serverless::EconInstruments;
 use crate::sim::fault::FaultTracker;
 use crate::sim::{AgentStats, SimArena, SimConfig, SimResult, Timelines};
 use crate::workload::WorkloadGenerator;
+
+/// Arrival stream feeding [`Simulator`]'s inner loop: realized per-step
+/// arrivals plus the skip-idle oracle.
+trait ArrivalSource {
+    /// Write this step's arrival counts and rates (counts / dt).
+    fn next(&mut self, step: u64, dt: f64, rates: &mut [f64],
+            counts: &mut [f64]);
+
+    /// Skip-idle oracle: `Some(until)` when every step in
+    /// `[step, until)` is guaranteed to produce zero arrivals for every
+    /// agent *and* producing them would not advance any internal state
+    /// (RNG included); `u64::MAX` means "idle forever". `None` when this
+    /// step may produce arrivals.
+    fn idle_until(&mut self, step: u64) -> Option<u64>;
+}
+
+/// The configured [`WorkloadGenerator`] as an arrival source.
+struct GeneratorSource(WorkloadGenerator);
+
+impl ArrivalSource for GeneratorSource {
+    fn next(&mut self, step: u64, dt: f64, rates: &mut [f64],
+            counts: &mut [f64]) {
+        self.0.step(step, dt, rates, counts);
+    }
+
+    fn idle_until(&mut self, step: u64) -> Option<u64> {
+        // Zero-rate Poisson/deterministic steps consume no RNG state, so
+        // the generator's schedule-level window is the whole answer.
+        self.0.idle_until(step)
+    }
+}
+
+/// A recorded [`Trace`](crate::workload::trace::Trace) as an arrival
+/// source. The idle oracle scans forward for the next row with any
+/// nonzero cell; the scan restarts where the previous window ended, so
+/// replay stays O(rows × agents) overall.
+struct TraceSource<'a> {
+    rows: &'a [Vec<f64>],
+}
+
+impl ArrivalSource for TraceSource<'_> {
+    fn next(&mut self, step: u64, dt: f64, rates: &mut [f64],
+            counts: &mut [f64]) {
+        let row = &self.rows[step as usize];
+        counts.copy_from_slice(row);
+        for (r, c) in rates.iter_mut().zip(row) {
+            *r = c / dt;
+        }
+    }
+
+    fn idle_until(&mut self, step: u64) -> Option<u64> {
+        let mut s = step as usize;
+        if s >= self.rows.len()
+            || self.rows[s].iter().any(|c| *c != 0.0)
+        {
+            return None;
+        }
+        while s < self.rows.len()
+            && self.rows[s].iter().all(|c| *c == 0.0)
+        {
+            s += 1;
+        }
+        if s >= self.rows.len() {
+            Some(u64::MAX)
+        } else {
+            Some(s as u64)
+        }
+    }
+}
 
 /// Discrete-time simulator over one agent registry.
 #[derive(Debug, Clone)]
@@ -44,12 +126,10 @@ impl Simulator {
     /// Run one policy over the configured workload.
     ///
     /// The policy is `reset()` first so instances can be reused across
-    /// runs. The per-step hot path performs no heap allocation. Generic
-    /// over the policy type: concrete policies (and [`PolicyKind`]) are
-    /// statically dispatched; `&mut dyn AllocationPolicy` still works for
-    /// external policies.
-    ///
-    /// [`PolicyKind`]: crate::allocator::PolicyKind
+    /// runs. The per-step hot path performs no heap allocation.
+    /// Provably-idle windows are fast-forwarded by the skip-idle core —
+    /// bit-exact with the dense path ([`Simulator::run_dense`] is the
+    /// always-dense reference the property tests compare against).
     pub fn run<P>(&self, policy: &mut P) -> SimResult
     where
         P: AllocationPolicy + ?Sized,
@@ -65,12 +145,40 @@ impl Simulator {
     where
         P: AllocationPolicy + ?Sized,
     {
-        let mut workload = WorkloadGenerator::new(
+        self.run_workload(policy, arena, true)
+    }
+
+    /// [`Simulator::run`] with the skip-idle core disabled: every step
+    /// runs through the dense loop. This is the reference path the
+    /// skip-idle bit-exactness properties (and the scaling bench's
+    /// dense-vs-skip comparison) measure against; results are
+    /// bit-identical to [`Simulator::run`] by construction.
+    pub fn run_dense<P>(&self, policy: &mut P) -> SimResult
+    where
+        P: AllocationPolicy + ?Sized,
+    {
+        self.run_dense_with_arena(policy, &mut SimArena::new())
+    }
+
+    /// [`Simulator::run_dense`] with caller-owned buffers.
+    pub fn run_dense_with_arena<P>(&self, policy: &mut P,
+                                   arena: &mut SimArena) -> SimResult
+    where
+        P: AllocationPolicy + ?Sized,
+    {
+        self.run_workload(policy, arena, false)
+    }
+
+    fn run_workload<P>(&self, policy: &mut P, arena: &mut SimArena,
+                       skip_idle: bool) -> SimResult
+    where
+        P: AllocationPolicy + ?Sized,
+    {
+        let mut source = GeneratorSource(WorkloadGenerator::new(
             self.cfg.arrival_rates.clone(), self.cfg.workload_kind.clone(),
-            self.cfg.arrival_process, self.cfg.seed);
-        self.run_inner(policy, |step, dt, rates, counts| {
-            workload.step(step, dt, rates, counts);
-        }, self.cfg.steps, self.cfg.dt, arena)
+            self.cfg.arrival_process, self.cfg.seed));
+        self.run_inner(policy, &mut source, self.cfg.steps, self.cfg.dt,
+                       arena, skip_idle)
     }
 
     /// Run one policy over a recorded arrival [`Trace`] instead of the
@@ -78,7 +186,15 @@ impl Simulator {
     /// previously recorded) workload. The trace's `dt` and length
     /// override the config's.
     ///
+    /// Panics with the trace's labelled [`Error::Trace`] message when
+    /// any row's width disagrees with the trace's agent count (a ragged
+    /// trace built by hand; [`Trace::load`] and [`Trace::new`] already
+    /// reject these at construction).
+    ///
     /// [`Trace`]: crate::workload::trace::Trace
+    /// [`Trace::load`]: crate::workload::trace::Trace::load
+    /// [`Trace::new`]: crate::workload::trace::Trace::new
+    /// [`Error::Trace`]: crate::error::Error::Trace
     pub fn run_trace<P>(&self, policy: &mut P,
                         trace: &crate::workload::trace::Trace) -> SimResult
     where
@@ -94,33 +210,46 @@ impl Simulator {
     where
         P: AllocationPolicy + ?Sized,
     {
-        assert_eq!(trace.agents.len(), self.registry.len(),
-                   "trace agent count must match registry");
-        let counts_by_step = &trace.counts;
-        self.run_inner(policy, |step, dt_s, rates, counts| {
-            let row = &counts_by_step[step as usize];
-            counts.copy_from_slice(row);
-            for (r, c) in rates.iter_mut().zip(row) {
-                *r = c / dt_s;
-            }
-        }, trace.counts.len() as u64, trace.dt, arena)
+        self.run_trace_inner(policy, trace, arena, true)
     }
 
-    fn run_inner<P, F>(&self, policy: &mut P, mut next_arrivals: F,
-                       steps: u64, dt: f64, arena: &mut SimArena)
-                       -> SimResult
+    /// [`Simulator::run_trace`] with the skip-idle core disabled — the
+    /// dense reference for trace replay, bit-identical by construction.
+    pub fn run_trace_dense<P>(
+        &self, policy: &mut P, trace: &crate::workload::trace::Trace)
+        -> SimResult
     where
         P: AllocationPolicy + ?Sized,
-        F: FnMut(u64, f64, &mut [f64], &mut [f64]),
+    {
+        self.run_trace_inner(policy, trace, &mut SimArena::new(), false)
+    }
+
+    fn run_trace_inner<P>(
+        &self, policy: &mut P, trace: &crate::workload::trace::Trace,
+        arena: &mut SimArena, skip_idle: bool) -> SimResult
+    where
+        P: AllocationPolicy + ?Sized,
+    {
+        assert_eq!(trace.agents.len(), self.registry.len(),
+                   "trace agent count must match registry");
+        if let Err(e) = trace.validate() {
+            panic!("{e}");
+        }
+        let mut source = TraceSource { rows: &trace.counts };
+        self.run_inner(policy, &mut source, trace.counts.len() as u64,
+                       trace.dt, arena, skip_idle)
+    }
+
+    fn run_inner<P>(&self, policy: &mut P, source: &mut dyn ArrivalSource,
+                    steps: u64, dt: f64, arena: &mut SimArena,
+                    skip_idle: bool) -> SimResult
+    where
+        P: AllocationPolicy + ?Sized,
     {
         let n = self.registry.len();
         let cfg = &self.cfg;
         policy.reset();
         arena.reset(n);
-
-        let mut stats: Vec<AgentStats> = self.registry.profiles().iter()
-            .map(|p| AgentStats::new(p.name.clone()))
-            .collect();
 
         let names: Vec<String> = self.registry.profiles().iter()
             .map(|p| p.name.clone()).collect();
@@ -128,14 +257,17 @@ impl Simulator {
             allocation: TimeSeries::new(names.clone()),
             queue: TimeSeries::new(names.clone()),
             latency: TimeSeries::new(names.clone()),
-            throughput: TimeSeries::new(names),
+            throughput: TimeSeries::new(names.clone()),
         });
 
-        // Dense per-step buffers — arena-owned, zero allocation in the
-        // loop and none on repeated runs either.
+        // Dense per-step buffers and struct-of-arrays statistics columns
+        // — arena-owned, zero allocation in the loop and none on
+        // repeated runs either.
         let SimArena {
             queues, rates, counts, observed, alloc, lat_row, tput_row,
-            model_mb,
+            model_mb, latency: lat_col, throughput: tput_col,
+            queue_stat: queue_col, allocation: alloc_col,
+            utilization: util_col, processed_total, arrived_total,
         } = arena;
         let base_tput = self.registry.base_tput();
 
@@ -155,12 +287,52 @@ impl Simulator {
         let mut fault = FaultTracker::new(cfg.faults.as_ref());
         let mut processed_sum = 0.0;
 
-        for step in 0..steps {
+        let mut step = 0u64;
+        while step < steps {
+            // 0. Skip-idle fast path: when the whole system is provably
+            //    quiescent — empty queues, a workload window guaranteed
+            //    to produce no arrivals, no fault transition due, and
+            //    policy/economics state that zero demand leaves
+            //    bit-identical — the dense loop would execute `k` steps
+            //    in which every recorded quantity is exactly 0.0, no RNG
+            //    is consumed, and billing charges +0.0. Batch-account
+            //    the window instead. Utilization is untouched: the dense
+            //    path records it only when capacity was allocated.
+            if skip_idle
+                && timelines.is_none()
+                && queues.iter().all(|q| *q == 0.0)
+                && policy.idle_fixed_point(n)
+                && econ.idle_fixed_point()
+            {
+                if let (Some(w), Some(f)) =
+                    (source.idle_until(step), fault.idle_until(step, dt))
+                {
+                    let until = w.min(f).min(steps);
+                    if until > step {
+                        let k = until - step;
+                        for s in lat_col.iter_mut() {
+                            s.push_zeros(k);
+                        }
+                        for s in tput_col.iter_mut() {
+                            s.push_zeros(k);
+                        }
+                        for s in queue_col.iter_mut() {
+                            s.push_zeros(k);
+                        }
+                        for s in alloc_col.iter_mut() {
+                            s.push_zeros(k);
+                        }
+                        step = until;
+                        continue;
+                    }
+                }
+            }
+
             // 1. Arrivals join their agent's queue.
-            next_arrivals(step, dt, &mut rates[..], &mut counts[..]);
+            source.next(step, dt, &mut rates[..], &mut counts[..]);
             for i in 0..n {
                 queues[i] += counts[i];
-                stats[i].arrived_total += counts[i];
+                arrived_total[i] += counts[i];
                 // Policies observe the realized arrival *rate* (rps).
                 observed[i] = counts[i] / dt;
             }
@@ -221,14 +393,14 @@ impl Simulator {
                 };
                 let tput = processed / dt;
 
-                stats[i].latency.push(latency);
-                stats[i].throughput.push(tput);
-                stats[i].queue.push(queues[i]);
-                stats[i].allocation.push(g);
+                lat_col[i].push(latency);
+                tput_col[i].push(tput);
+                queue_col[i].push(queues[i]);
+                alloc_col[i].push(g);
                 if cap > 0.0 {
-                    stats[i].utilization.push(processed / cap);
+                    util_col[i].push(processed / cap);
                 }
-                stats[i].processed_total += processed;
+                processed_total[i] += processed;
                 lat_row[i] = latency;
                 tput_row[i] = tput;
             }
@@ -244,11 +416,25 @@ impl Simulator {
                 tl.latency.push_row(&lat_row[..]);
                 tl.throughput.push_row(&tput_row[..]);
             }
+
+            step += 1;
         }
 
-        for i in 0..n {
-            stats[i].final_queue = queues[i];
-        }
+        // Assemble the public array-of-structs rows from the arena's
+        // struct-of-arrays columns (Streaming is Copy).
+        let stats: Vec<AgentStats> = names.into_iter().enumerate()
+            .map(|(i, name)| AgentStats {
+                name,
+                latency: lat_col[i],
+                throughput: tput_col[i],
+                queue: queue_col[i],
+                allocation: alloc_col[i],
+                utilization: util_col[i],
+                processed_total: processed_total[i],
+                arrived_total: arrived_total[i],
+                final_queue: queues[i],
+            })
+            .collect();
 
         let (cost_dollars, gpu_seconds, economics) = econ.finish(steps);
         let resilience =
@@ -278,6 +464,40 @@ mod tests {
 
     fn paper_sim() -> Simulator {
         Simulator::new(SimConfig::paper(), AgentProfile::paper_agents())
+    }
+
+    /// Full bit-identity between two results: every Streaming
+    /// accumulator field-for-field, every total, both optional reports.
+    fn assert_bit_identical(a: &SimResult, b: &SimResult) {
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.per_agent.len(), b.per_agent.len());
+        for (x, y) in a.per_agent.iter().zip(&b.per_agent) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.latency, y.latency, "latency {}", x.name);
+            assert_eq!(x.throughput, y.throughput, "tput {}", x.name);
+            assert_eq!(x.queue, y.queue, "queue {}", x.name);
+            assert_eq!(x.allocation, y.allocation, "alloc {}", x.name);
+            assert_eq!(x.utilization, y.utilization, "util {}", x.name);
+            assert_eq!(x.processed_total, y.processed_total);
+            assert_eq!(x.arrived_total, y.arrived_total);
+            assert_eq!(x.final_queue, y.final_queue);
+        }
+        assert_eq!(a.cost_dollars, b.cost_dollars);
+        assert_eq!(a.gpu_seconds, b.gpu_seconds);
+        assert_eq!(a.economics, b.economics);
+        assert_eq!(a.resilience, b.resilience);
+    }
+
+    /// A workload whose only traffic is one agent's mid-run burst — the
+    /// canonical shape where the skip-idle core actually fires (before
+    /// the burst and after the backlog drains).
+    fn burst_cfg() -> SimConfig {
+        let mut cfg = SimConfig::paper();
+        cfg.arrival_rates = vec![0.0, 40.0, 0.0, 0.0];
+        cfg.workload_kind = WorkloadKind::Burst {
+            agents: vec![1], start: 50, end: 70,
+        };
+        cfg
     }
 
     #[test]
@@ -564,6 +784,125 @@ mod tests {
             assert_eq!(a.cost_dollars, b.cost_dollars);
             assert!(a.resilience.is_none(), "inert faults report nothing");
         }
+    }
+
+    #[test]
+    fn skip_idle_is_bit_exact_on_burst_windows() {
+        use crate::workload::ArrivalProcess;
+        // Deterministic and Poisson, every policy: the skipped run must
+        // match the dense reference to the bit. Poisson works because
+        // zero-rate steps consume no RNG state.
+        for poisson in [false, true] {
+            let mut cfg = burst_cfg();
+            if poisson {
+                cfg.arrival_process = ArrivalProcess::Poisson;
+            }
+            let sim = Simulator::new(cfg, AgentProfile::paper_agents());
+            for mut p in crate::allocator::all_policies() {
+                let skip = sim.run(p.as_mut());
+                let dense = sim.run_dense(p.as_mut());
+                assert_bit_identical(&skip, &dense);
+            }
+        }
+    }
+
+    #[test]
+    fn skip_idle_is_bit_exact_under_economics() {
+        // Scale-to-zero lifecycle: the idle window is only skippable
+        // once every instance has gone cold (warm idle instances accrue
+        // teardown time densely), and the cold-start wake on the burst
+        // must land on the same step with the same RNG draws.
+        let mut cfg = burst_cfg();
+        cfg.economics = Some(EconomicsModel::with_idle_timeout(3.0));
+        let sim = Simulator::new(cfg, AgentProfile::paper_agents());
+        for mut p in crate::allocator::all_policies() {
+            let skip = sim.run(p.as_mut());
+            let dense = sim.run_dense(p.as_mut());
+            assert_bit_identical(&skip, &dense);
+        }
+        // And the all-warm model, where the lifecycle never exists.
+        let mut cfg = burst_cfg();
+        cfg.economics = Some(EconomicsModel::paper_all_warm());
+        let sim = Simulator::new(cfg, AgentProfile::paper_agents());
+        let skip = sim.run(&mut AdaptivePolicy::default());
+        let dense = sim.run_dense(&mut AdaptivePolicy::default());
+        assert_bit_identical(&skip, &dense);
+    }
+
+    #[test]
+    fn skip_idle_is_bit_exact_under_faults() {
+        use crate::sim::fault::{FaultConfig, FaultEvent, FaultPlan};
+        // Faults scheduled inside, before, and after the idle windows:
+        // the fault cursor must stop the skip exactly at each event's
+        // first step and the resilience accounting must not drift.
+        let mut cfg = burst_cfg();
+        cfg.faults = Some(FaultConfig::new(FaultPlan::new(vec![
+            FaultEvent::GpuEviction { t: 10.0, gpu: 0, duration: 5.0 },
+            FaultEvent::CapacityDrop { t: 30.0, frac: 0.3, duration: 10.0 },
+            FaultEvent::AgentStall {
+                t: 55.0, agent: 1, factor: 3.0, duration: 5.0,
+            },
+        ])));
+        let sim = Simulator::new(cfg, AgentProfile::paper_agents());
+        for mut p in crate::allocator::all_policies() {
+            let skip = sim.run(p.as_mut());
+            let dense = sim.run_dense(p.as_mut());
+            assert_bit_identical(&skip, &dense);
+            assert!(skip.resilience.is_some());
+        }
+    }
+
+    #[test]
+    fn skip_idle_is_bit_exact_on_all_zero_and_steady_workloads() {
+        // All-zero: the entire run is one skipped window.
+        let mut cfg = SimConfig::paper();
+        cfg.arrival_rates = vec![0.0; 4];
+        let sim = Simulator::new(cfg, AgentProfile::paper_agents());
+        for mut p in crate::allocator::all_policies() {
+            let skip = sim.run(p.as_mut());
+            let dense = sim.run_dense(p.as_mut());
+            assert_bit_identical(&skip, &dense);
+        }
+        // Steady paper workload: never idle, the skip never fires, and
+        // Table II comes out of the same dense loop either way.
+        let sim = paper_sim();
+        let skip = sim.run(&mut AdaptivePolicy::default());
+        let dense = sim.run_dense(&mut AdaptivePolicy::default());
+        assert_bit_identical(&skip, &dense);
+        assert!((skip.mean_latency() - 111.9).abs() < 0.6);
+    }
+
+    #[test]
+    fn skip_idle_is_bit_exact_on_trace_replay() {
+        use crate::workload::trace::Trace;
+        let names = (0..4).map(|i| format!("a{i}")).collect::<Vec<_>>();
+        let mut rows = vec![vec![0.0; 4]; 20];
+        for i in 0..10 {
+            rows.push(vec![5.0 + i as f64, 0.0, 2.0, 0.0]);
+        }
+        rows.extend(vec![vec![0.0; 4]; 30]);
+        let trace = Trace::new(names, 1.0, rows).expect("rectangular");
+        let sim = paper_sim();
+        for mut p in crate::allocator::all_policies() {
+            let skip = sim.run_trace(p.as_mut(), &trace);
+            let dense = sim.run_trace_dense(p.as_mut(), &trace);
+            assert_bit_identical(&skip, &dense);
+            assert_eq!(skip.steps, 60);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "trace error")]
+    fn run_trace_panics_on_ragged_rows() {
+        use crate::workload::trace::Trace;
+        // A hand-built ragged trace must be rejected up front with the
+        // labelled trace error, not die on copy_from_slice mid-run.
+        let trace = Trace {
+            agents: (0..4).map(|i| format!("a{i}")).collect(),
+            dt: 1.0,
+            counts: vec![vec![0.0; 4], vec![1.0; 3], vec![0.0; 4]],
+        };
+        paper_sim().run_trace(&mut AdaptivePolicy::default(), &trace);
     }
 
     #[test]

@@ -357,16 +357,84 @@ impl ServingFaults {
     /// Whether an execution attempt for `agent` dispatched at `now`
     /// fails transiently: the agent is inside a stall window, or any
     /// device is evicted.
+    ///
+    /// This scans the whole plan and is fine for spot checks; the
+    /// serving hot loop drives a [`ServingFaultCursor`] instead, which
+    /// answers the same question in O(active events) per call for
+    /// monotone `now`.
     pub fn fails_at(&self, now: f64, agent: usize) -> bool {
         self.plan.events.iter().any(|e| {
-            e.active_at(now)
-                && match e {
-                    FaultEvent::AgentStall { agent: a, .. } => *a == agent,
-                    FaultEvent::GpuEviction { .. } => true,
-                    FaultEvent::CapacityDrop { .. } => false,
-                }
+            e.active_at(now) && Self::event_fails(e, agent)
         })
     }
+
+    fn event_fails(e: &FaultEvent, agent: usize) -> bool {
+        match e {
+            FaultEvent::AgentStall { agent: a, .. } => *a == agent,
+            FaultEvent::GpuEviction { .. } => true,
+            FaultEvent::CapacityDrop { .. } => false,
+        }
+    }
+}
+
+/// Monotone-time cursor over a [`ServingFaults`] plan: the serving
+/// engines call [`ServingFaultCursor::fails_at`] with non-decreasing
+/// `now`, so instead of rescanning every event per dispatch the cursor
+/// admits events as their start passes and retires them as they expire —
+/// O(total events) over a whole run, O(currently active) per query.
+/// Answers are identical to [`ServingFaults::fails_at`].
+#[derive(Debug)]
+pub(crate) struct ServingFaultCursor<'a> {
+    plan: &'a FaultPlan,
+    next_event: usize,
+    /// Indices of admitted-and-not-expired events, in plan order.
+    active: Vec<usize>,
+}
+
+impl<'a> ServingFaultCursor<'a> {
+    pub(crate) fn new(faults: &'a ServingFaults) -> Self {
+        ServingFaultCursor {
+            plan: &faults.plan,
+            next_event: 0,
+            active: Vec::new(),
+        }
+    }
+
+    /// [`ServingFaults::fails_at`] for monotone `now`.
+    pub(crate) fn fails_at(&mut self, now: f64, agent: usize) -> bool {
+        let plan = self.plan;
+        self.active.retain(|i| plan.events[*i].active_at(now));
+        while let Some(e) = self.plan.events.get(self.next_event) {
+            if e.start() > now {
+                break;
+            }
+            if e.active_at(now) {
+                self.active.push(self.next_event);
+            }
+            self.next_event += 1;
+        }
+        self.active.iter().any(
+            |i| ServingFaults::event_fails(&self.plan.events[*i], agent))
+    }
+}
+
+/// Smallest step index `s >= from` with `s·dt >= t`, using the exact
+/// comparisons the per-step trackers use (`now = step as f64 * dt`), so
+/// a skip bounded by the returned step admits events on precisely the
+/// tick the dense loop would have.
+fn first_step_at_or_after(t: f64, dt: f64, from: u64) -> u64 {
+    let mut s = if t <= from as f64 * dt {
+        from
+    } else {
+        ((t / dt).floor() as u64).max(from)
+    };
+    while (s as f64) * dt < t {
+        s += 1;
+    }
+    while s > from && ((s - 1) as f64) * dt >= t {
+        s -= 1;
+    }
+    s
 }
 
 /// Resilience metrics for one run. `None` on results whenever no faults
@@ -396,11 +464,23 @@ pub struct ResilienceReport {
 /// `EconInstruments` pattern: constructed from the optional config, and
 /// every hook is a no-op returning its input untouched when no fault can
 /// fire — the disabled path is bit-exact.
+///
+/// The tracker is a sorted event cursor: [`FaultTracker::capacity_at`]
+/// must be called with non-decreasing `step` (the engine's loop order).
+/// Events are admitted to the `active` set as their start time passes
+/// and retired as they expire, preserving *plan order* inside the set —
+/// the order the old full-plan rescan applied overlapping
+/// `CapacityDrop` multiplications and `AgentStall` divisions in, so
+/// results stay bit-identical while each step costs O(active events)
+/// instead of O(all events).
 #[derive(Debug)]
 pub(crate) struct FaultTracker<'a> {
     cfg: Option<&'a FaultConfig>,
     degraded_s: f64,
     max_stalled_fraction: f64,
+    next_event: usize,
+    /// Admitted-and-unexpired event indices, ascending (= plan order).
+    active: Vec<usize>,
 }
 
 impl<'a> FaultTracker<'a> {
@@ -410,6 +490,8 @@ impl<'a> FaultTracker<'a> {
             cfg: cfg.filter(|f| !f.is_inert()),
             degraded_s: 0.0,
             max_stalled_fraction: 0.0,
+            next_event: 0,
+            active: Vec::new(),
         }
     }
 
@@ -421,17 +503,26 @@ impl<'a> FaultTracker<'a> {
     /// Effective total capacity at step `step`: evictions zero it,
     /// capacity drops scale it. Also accrues degraded time and the peak
     /// stalled-agent fraction. Returns `base` untouched when inactive.
+    /// Steps must be non-decreasing across calls (cursor contract).
     pub(crate) fn capacity_at(&mut self, step: u64, dt: f64, base: f64,
                               n_agents: usize) -> f64 {
         let Some(f) = self.cfg else { return base };
         let now = step as f64 * dt;
+        let events = &f.plan.events;
+        self.active.retain(|i| events[*i].active_at(now));
+        while let Some(e) = events.get(self.next_event) {
+            if e.start() > now {
+                break;
+            }
+            if e.active_at(now) {
+                self.active.push(self.next_event);
+            }
+            self.next_event += 1;
+        }
         let mut scale = 1.0;
         let mut stalled = 0usize;
-        for e in &f.plan.events {
-            if !e.active_at(now) {
-                continue;
-            }
-            match e {
+        for i in &self.active {
+            match &events[*i] {
                 FaultEvent::GpuEviction { .. } => scale = 0.0,
                 FaultEvent::CapacityDrop { frac, .. } => {
                     scale *= (1.0 - frac).max(0.0);
@@ -456,20 +547,45 @@ impl<'a> FaultTracker<'a> {
     }
 
     /// Service rate for `agent` at step `step` after stall divisors.
-    /// Returns `rate` untouched when inactive.
+    /// Returns `rate` untouched when inactive. Must be called for the
+    /// same `step` as the preceding [`FaultTracker::capacity_at`] (the
+    /// active set is maintained there).
     pub(crate) fn degrade_rate(&self, step: u64, dt: f64, agent: usize,
                                rate: f64) -> f64 {
         let Some(f) = self.cfg else { return rate };
         let now = step as f64 * dt;
         let mut r = rate;
-        for e in &f.plan.events {
-            if let FaultEvent::AgentStall { agent: a, factor, .. } = e {
-                if *a == agent && e.active_at(now) {
+        for i in &self.active {
+            if let FaultEvent::AgentStall { agent: a, factor, .. } =
+                &f.plan.events[*i]
+            {
+                if *a == agent && f.plan.events[*i].active_at(now) {
                     r /= factor.max(1.0);
                 }
             }
         }
         r
+    }
+
+    /// Skip-idle contract: `Some(until)` promises that for every step
+    /// `s` in `[step, until)`, [`FaultTracker::capacity_at`] would
+    /// return `base` untouched and accrue nothing, and
+    /// [`FaultTracker::degrade_rate`] would return its input — i.e. the
+    /// fault layer is provably quiet over the window. `None` means the
+    /// current step may be (or is about to become) faulted; the engine
+    /// then steps densely, which also retires expired events.
+    pub(crate) fn idle_until(&self, step: u64, dt: f64) -> Option<u64> {
+        let Some(f) = self.cfg else { return Some(u64::MAX) };
+        if !self.active.is_empty() {
+            return None;
+        }
+        match f.plan.events.get(self.next_event) {
+            None => Some(u64::MAX),
+            Some(e) => {
+                let due = first_step_at_or_after(e.start(), dt, step);
+                if due > step { Some(due) } else { None }
+            }
+        }
     }
 
     /// Fold the run's bookkeeping into a report; `None` when inactive.
@@ -615,6 +731,27 @@ impl<'a> ClusterFaultTracker<'a> {
         self.degraded_s += dt;
     }
 
+    /// Skip-idle contract (cluster half): `Some(until)` promises that
+    /// for every step `s` in `[step, until)` no device is offline at
+    /// `s·dt` and [`ClusterFaultTracker::advance`] would admit no event
+    /// — the fault layer is provably quiet over the window. Agent-stall
+    /// windows already admitted live in the engine-owned
+    /// `stalled_until` buffer, which the engine checks separately.
+    pub(crate) fn quiet_until(&self, step: u64, dt: f64) -> Option<u64> {
+        let Some(f) = self.cfg else { return Some(u64::MAX) };
+        let now = step as f64 * dt;
+        if self.offline_until.iter().any(|t| now < *t) {
+            return None;
+        }
+        match f.plan.events.get(self.next_event) {
+            None => Some(u64::MAX),
+            Some(e) => {
+                let due = first_step_at_or_after(e.start(), dt, step);
+                if due > step { Some(due) } else { None }
+            }
+        }
+    }
+
     /// Fold the run's bookkeeping into a report; `None` when inactive.
     pub(crate) fn finish(self, goodput: f64) -> Option<ResilienceReport> {
         self.cfg.map(|_| ResilienceReport {
@@ -758,6 +895,120 @@ mod tests {
         assert!((report.recovery_time_s - 3.0).abs() < 1e-12);
         assert!((report.disruption - 0.25).abs() < 1e-12);
         assert_eq!(report.goodput, 150.0);
+    }
+
+    #[test]
+    fn serving_cursor_matches_full_scan_for_monotone_time() {
+        // A messy plan: overlapping windows, agent-scoped stalls, an
+        // eviction, a capacity drop that must fail nothing.
+        let f = ServingFaults::new(FaultPlan::new(vec![
+            FaultEvent::AgentStall {
+                t: 1.0, agent: 2, factor: 4.0, duration: 2.0,
+            },
+            FaultEvent::CapacityDrop { t: 1.5, frac: 0.9, duration: 5.0 },
+            FaultEvent::GpuEviction { t: 2.5, gpu: 0, duration: 1.0 },
+            FaultEvent::AgentStall {
+                t: 2.8, agent: 0, factor: 2.0, duration: 0.4,
+            },
+        ]));
+        let mut cursor = ServingFaultCursor::new(&f);
+        let mut now = 0.0;
+        while now < 5.0 {
+            for agent in 0..4 {
+                assert_eq!(cursor.fails_at(now, agent),
+                           f.fails_at(now, agent),
+                           "now={now} agent={agent}");
+            }
+            now += 0.05; // repeated queries at equal now are fine too
+            for agent in [3, 1] {
+                assert_eq!(cursor.fails_at(now, agent),
+                           f.fails_at(now, agent),
+                           "now={now} agent={agent}");
+            }
+        }
+    }
+
+    #[test]
+    fn tracker_cursor_preserves_overlapping_drop_order() {
+        // Two overlapping drops: the old full-plan rescan multiplied
+        // them in plan order; the cursor's active set must do the same
+        // so the product is bit-identical.
+        let cfg = FaultConfig::new(FaultPlan::new(vec![
+            FaultEvent::CapacityDrop { t: 1.0, frac: 0.3, duration: 6.0 },
+            FaultEvent::CapacityDrop { t: 3.0, frac: 0.6, duration: 2.0 },
+        ]));
+        let mut t = FaultTracker::new(Some(&cfg));
+        assert_eq!(t.capacity_at(0, 1.0, 1.0, 2), 1.0);
+        assert_eq!(t.capacity_at(1, 1.0, 1.0, 2), 1.0 * (1.0 - 0.3));
+        assert_eq!(t.capacity_at(3, 1.0, 1.0, 2),
+                   (1.0 - 0.3) * (1.0 - 0.6));
+        assert_eq!(t.capacity_at(5, 1.0, 1.0, 2), 1.0 - 0.3);
+        assert_eq!(t.capacity_at(7, 1.0, 1.0, 2), 1.0);
+        let report = t.finish(1.0).unwrap();
+        assert!((report.recovery_time_s - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tracker_idle_until_brackets_the_fault_window() {
+        let cfg = FaultConfig::new(FaultPlan::new(vec![
+            FaultEvent::CapacityDrop { t: 4.0, frac: 0.5, duration: 2.0 },
+        ]));
+        let mut t = FaultTracker::new(Some(&cfg));
+        // Quiet until the event's admission step.
+        assert_eq!(t.idle_until(0, 1.0), Some(4));
+        assert_eq!(t.idle_until(3, 1.0), Some(4));
+        // Due now: not skippable.
+        assert_eq!(t.idle_until(4, 1.0), None);
+        let _ = t.capacity_at(4, 1.0, 1.0, 2);
+        // Active event: not skippable.
+        assert_eq!(t.idle_until(5, 1.0), None);
+        // One dense step retires it, then quiet forever.
+        let _ = t.capacity_at(6, 1.0, 1.0, 2);
+        assert_eq!(t.idle_until(7, 1.0), Some(u64::MAX));
+        // Inactive tracker: quiet forever.
+        assert_eq!(FaultTracker::new(None).idle_until(0, 1.0),
+                   Some(u64::MAX));
+        // Fractional dt: the admission step matches capacity_at's own
+        // comparison (first s with s·0.4 >= 4.0 is s = 10).
+        let t2 = FaultTracker::new(Some(&cfg));
+        assert_eq!(t2.idle_until(0, 0.4), Some(10));
+    }
+
+    #[test]
+    fn first_step_conversion_agrees_with_active_at() {
+        // The promise: for due = first_step_at_or_after(t, dt, from),
+        // every step in [from, due) has step·dt < t, and due·dt >= t.
+        for (t, dt, from) in [(4.0, 1.0, 0u64), (4.0, 0.4, 0), (0.3, 0.1, 0),
+                              (10.0, 3.0, 1), (5.0, 1.0, 5), (5.0, 1.0, 7),
+                              (1e-9, 1.0, 0), (7.7, 0.7, 2)] {
+            let due = first_step_at_or_after(t, dt, from);
+            assert!(due >= from, "t={t} dt={dt} from={from}");
+            assert!((due as f64) * dt >= t || due == from,
+                    "t={t} dt={dt} from={from} due={due}");
+            for s in from..due.min(from + 10_000) {
+                assert!((s as f64) * dt < t,
+                        "skipped step {s} would admit (t={t} dt={dt})");
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_quiet_until_brackets_outages() {
+        let cfg = FaultConfig::new(FaultPlan::new(vec![
+            FaultEvent::GpuEviction { t: 5.0, gpu: 1, duration: 10.0 },
+        ]));
+        let mut t = ClusterFaultTracker::new(Some(&cfg), 2, 42);
+        let mut stalls = vec![0.0; 4];
+        assert_eq!(t.quiet_until(0, 1.0), Some(5));
+        assert_eq!(t.quiet_until(5, 1.0), None);
+        t.advance(5.0, &mut stalls);
+        // Offline window: not quiet.
+        assert_eq!(t.quiet_until(6, 1.0), None);
+        assert_eq!(t.quiet_until(14, 1.0), None);
+        // Outage over, plan exhausted: quiet forever.
+        assert_eq!(t.quiet_until(15, 1.0), Some(u64::MAX));
+        assert_eq!(ClusterFaultTracker::new(None, 2, 1).quiet_until(0, 1.0),
+                   Some(u64::MAX));
     }
 
     #[test]

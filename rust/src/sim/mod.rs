@@ -7,6 +7,43 @@
 //! wait* `Q / (g·T)` capped at [`SimConfig::latency_cap_s`] (1000 s) — the
 //! estimator reverse-engineered in DESIGN.md §1 that reproduces every
 //! Table II number to the reported decimal.
+//!
+//! # The skip-idle event core
+//!
+//! The engines are *event-stepped*, not purely fixed-step: the dense
+//! per-tick loop only runs while something can happen. Each tick, a set
+//! of idle oracles is consulted — every one answers either "nothing
+//! until step `u`" or "can't promise anything":
+//!
+//! ```text
+//!  step ─►┌──────────────────────────────────────────────────────┐
+//!         │ queues all empty? timelines off?                     │
+//!         │ policy.idle_fixed_point()   (zero demand → zero out) │
+//!         │ econ.idle_fixed_point()     (no pending transition)  │
+//!         │ source.idle_until(step)     (workload: zero arrivals)│
+//!         │ fault.idle_until(step, dt)  (no event in window)     │
+//!         └───────────┬───────────────────────────┬──────────────┘
+//!                all Some(·)                  any None/false
+//!                     │                           │
+//!                     ▼                           ▼
+//!          fast-forward to min(u)          dense tick (SoA inner
+//!          push_zeros(k) on metric         loop over the arena's
+//!          columns — closed form,          struct-of-arrays state)
+//!          O(1) per column
+//! ```
+//!
+//! The fast-forward is *bit-exact* with stepping the same window
+//! densely: zero arrivals leave queues at exactly 0.0, the policy
+//! fixed-point guarantees allocations stay exactly 0.0, and
+//! [`crate::metrics::Streaming::push_zeros`] folds `k` zero samples into
+//! the naive power sums with the same rounding the dense loop would
+//! produce. `run_dense` twins on every simulator
+//! ([`Simulator::run_dense`], `ClusterSimulator::run_dense`,
+//! `ServingSimulator::run_dense`) keep the dense path alive as the
+//! reference the property tests assert against. This is what makes
+//! `synthetic_registry(4096)` burst cells routine sweep members: only
+//! the burst window is stepped, the idle four fifths of the run are
+//! batch-accounted.
 
 mod arena;
 pub mod batch;

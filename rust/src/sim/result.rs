@@ -29,22 +29,6 @@ pub struct AgentStats {
     pub final_queue: f64,
 }
 
-impl AgentStats {
-    pub(crate) fn new(name: String) -> Self {
-        AgentStats {
-            name,
-            latency: Streaming::new(),
-            throughput: Streaming::new(),
-            queue: Streaming::new(),
-            allocation: Streaming::new(),
-            utilization: Streaming::new(),
-            processed_total: 0.0,
-            arrived_total: 0.0,
-            final_queue: 0.0,
-        }
-    }
-}
-
 /// Optional full per-step traces (Fig 2(c) and robustness plots).
 #[derive(Debug, Clone)]
 pub struct Timelines {

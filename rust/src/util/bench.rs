@@ -181,9 +181,9 @@ impl BenchComparison {
 ///
 /// Compared entries: the single-GPU grid's sequential baseline and its
 /// per-worker-count batch rows, plus the same pair for each
-/// `cluster` / `corpus` / `cost` / `serving` / `placement` / `faults`
-/// section present in both
-/// reports. The
+/// `cluster` / `corpus` / `cost` / `serving` / `placement` / `faults` /
+/// `large_n` section present in both reports (for `large_n`, the dense
+/// reference entry is gated too). The
 /// two reports must describe the same workload — equal `grid.steps`
 /// and per-section scenario counts — otherwise throughput is not
 /// comparable and an error is returned. A baseline whose `results` is
@@ -220,7 +220,7 @@ pub fn compare_bench_reports(baseline: &Value, measured: &Value,
                  base.get("batch"), meas.get("batch"));
 
     for section in ["cluster", "corpus", "cost", "serving", "placement",
-                    "faults"] {
+                    "faults", "large_n"] {
         let (b, m) = match (base.get(section), meas.get(section)) {
             (Some(b), Some(m)) => (b, m),
             // Not in the baseline yet: schema growth, note and move on.
@@ -248,6 +248,15 @@ pub fn compare_bench_reports(baseline: &Value, measured: &Value,
                       throughput_of(m.get("sequential")));
         compare_rows(&mut cmp, section, allowed_drop, b.get("sweep"),
                      m.get("sweep"));
+    }
+    // The large_n section additionally records the dense (no
+    // fast-forward) reference path; gate it too so the fallback the
+    // skip-idle core is verified against cannot silently rot.
+    if let (Some(b), Some(m)) = (base.get("large_n"),
+                                 meas.get("large_n")) {
+        compare_entry(&mut cmp, "large_n/dense", allowed_drop,
+                      throughput_of(b.get("dense")),
+                      throughput_of(m.get("dense")));
     }
     Ok(cmp)
 }
@@ -464,6 +473,58 @@ mod tests {
         // Sections absent from the *baseline* stay skips (nothing to
         // gate against until the baseline is refreshed).
         assert!(cmp.skipped.contains(&"corpus".to_string()));
+    }
+
+    /// A report whose only section is `large_n`, in the shape
+    /// `sweep_scaling --json` writes it (dense reference + skip-idle
+    /// sequential + sweep rows).
+    fn report_with_large_n(dense: f64, skip: f64) -> Value {
+        Value::parse(&format!(r#"{{
+            "results": {{
+                "grid": {{"scenarios": 240, "steps": 2000}},
+                "sequential_baseline":
+                    {{"seconds": 1.0, "scenarios_per_s": 1000.0}},
+                "batch": [],
+                "large_n": {{
+                    "scenarios": 4,
+                    "dense": {{"seconds": 1.0,
+                               "scenarios_per_s": {dense}}},
+                    "sequential": {{"seconds": 1.0,
+                                    "scenarios_per_s": {skip}}},
+                    "skip_idle_speedup": 10.0,
+                    "sweep": [{{"workers": 8, "seconds": 0.1,
+                                "scenarios_per_s": {skip}}}]
+                }}
+            }}
+        }}"#)).unwrap()
+    }
+
+    #[test]
+    fn gate_covers_the_large_n_section_including_dense() {
+        let baseline = report_with_large_n(10.0, 100.0);
+        let cmp = compare_bench_reports(&baseline, &baseline, 0.25)
+            .unwrap();
+        assert!(cmp.passed(), "{:?}", cmp.regressions);
+        assert!(cmp.compared.contains(&"large_n/sequential".to_string()));
+        assert!(cmp.compared.contains(&"large_n@8".to_string()));
+        assert!(cmp.compared.contains(&"large_n/dense".to_string()));
+        // The dense reference path regressing fails the gate even when
+        // the skip-idle path holds.
+        let slower_dense = report_with_large_n(5.0, 100.0);
+        let cmp = compare_bench_reports(&baseline, &slower_dense, 0.25)
+            .unwrap();
+        assert!(!cmp.passed());
+        assert!(cmp.regressions.iter()
+                .any(|r| r.starts_with("large_n/dense")),
+                "{:?}", cmp.regressions);
+        // And so does the skip-idle path itself.
+        let slower_skip = report_with_large_n(10.0, 60.0);
+        let cmp = compare_bench_reports(&baseline, &slower_skip, 0.25)
+            .unwrap();
+        assert!(cmp.regressions.iter()
+                .any(|r| r.starts_with("large_n/sequential")
+                      || r.starts_with("large_n@8")),
+                "{:?}", cmp.regressions);
     }
 
     #[test]

@@ -1,4 +1,13 @@
 //! Per-agent arrival-rate generators for every evaluated scenario.
+//!
+//! ## Units
+//!
+//! Shape windows (`Spike`/`MultiSpike`/`Burst` `start`/`end`) are **step
+//! indices** — dimensionless tick numbers, half-open `[start, end)` — so a
+//! shape keeps hitting the same *ticks* when `dt` changes. The `Diurnal`
+//! `period` is **virtual seconds**: its phase is computed from
+//! `t = step · dt`, so halving `dt` (doubling `steps`) preserves the
+//! physical oscillation.
 
 use crate::util::Rng;
 
@@ -20,27 +29,43 @@ pub enum WorkloadKind {
     Steady,
     /// All rates multiplied by a factor (§V.B overload, factor = 3).
     Scaled { factor: f64 },
-    /// One agent's rate multiplied by `factor` during [start, end) steps
-    /// (§V.B spike, factor = 10).
+    /// One agent's rate multiplied by `factor` during the `[start, end)`
+    /// **step** window (§V.B spike, factor = 10).
     Spike { agent: usize, factor: f64, start: u64, end: u64 },
-    /// Several agents spike *together* by `factor` during [start, end)
-    /// steps — the correlated multi-agent burst a collaborative workflow
-    /// produces when one upstream request fans out (stress-grid
-    /// extension beyond §V.B's single-agent spike).
+    /// Several agents spike *together* by `factor` during the
+    /// `[start, end)` **step** window — the correlated multi-agent burst
+    /// a collaborative workflow produces when one upstream request fans
+    /// out (stress-grid extension beyond §V.B's single-agent spike).
     MultiSpike { agents: Vec<usize>, factor: f64, start: u64, end: u64 },
-    /// Listed agents receive their base rate only inside [start, end)
-    /// and are *hard idle* (zero arrivals) outside it; unlisted agents
-    /// run steady. The serverless-economics shape: deterministic
-    /// arrivals are fractional, so this is the schedule under which idle
-    /// instances genuinely scale to zero and must cold-start when the
-    /// burst lands (§II.B / §III.D).
+    /// Listed agents receive their base rate only inside the
+    /// `[start, end)` **step** window and are *hard idle* (zero
+    /// arrivals) outside it; unlisted agents run steady. The
+    /// serverless-economics shape: deterministic arrivals are
+    /// fractional, so this is the schedule under which idle instances
+    /// genuinely scale to zero and must cold-start when the burst lands
+    /// (§II.B / §III.D).
     Burst { agents: Vec<usize>, start: u64, end: u64 },
     /// One agent receives `share` of the *total* request volume, the rest
     /// split proportionally to their original rates (§V.B dominance,
     /// share = 0.9).
     Dominance { agent: usize, share: f64 },
-    /// Sinusoidal diurnal modulation: rate · (1 + amp·sin(2πt/period)).
+    /// Sinusoidal diurnal modulation: rate · (1 + amp·sin(2πt/period)),
+    /// with `t = step · dt` and `period` in **seconds** — the schedule
+    /// is a function of virtual time, invariant under re-discretization.
     Diurnal { amplitude: f64, period: f64 },
+}
+
+/// Precomputed answer shape for [`WorkloadGenerator::idle_until`]:
+/// where (if anywhere) the schedule is provably all-zero.
+#[derive(Debug, Clone, PartialEq)]
+enum IdleProfile {
+    /// Every agent's mean rate is 0.0 at every step.
+    Always,
+    /// All-zero outside the `[start, end)` step window (a `Burst` whose
+    /// listed agents cover every nonzero base rate).
+    OutsideWindow { start: u64, end: u64 },
+    /// No step is provably idle.
+    Never,
 }
 
 /// Generates per-agent arrival counts and mean rates per timestep.
@@ -51,14 +76,55 @@ pub struct WorkloadGenerator {
     process: ArrivalProcess,
     rng: Rng,
     seed: u64,
+    /// Membership mask for `Burst`/`MultiSpike` agent lists (empty for
+    /// other kinds): `mask[i]` ⇔ `agents.contains(&i)`, precomputed so
+    /// the per-step path is O(1) per agent instead of O(|agents|).
+    mask: Vec<bool>,
+    /// `Dominance` only: `base_rates.iter().sum()`, cached with the
+    /// identical fold so per-step rates stay bit-equal to recomputing.
+    base_total: f64,
+    idle: IdleProfile,
 }
 
 impl WorkloadGenerator {
     /// Create a generator over base mean rates (rps).
     pub fn new(base_rates: Vec<f64>, kind: WorkloadKind,
                process: ArrivalProcess, seed: u64) -> Self {
+        let n = base_rates.len();
+        let mask = match &kind {
+            WorkloadKind::MultiSpike { agents, .. }
+            | WorkloadKind::Burst { agents, .. } => {
+                let mut mask = vec![false; n];
+                for &a in agents {
+                    if a < n {
+                        mask[a] = true;
+                    }
+                }
+                mask
+            }
+            _ => Vec::new(),
+        };
+        let base_total: f64 = match &kind {
+            WorkloadKind::Dominance { .. } => base_rates.iter().sum(),
+            _ => 0.0,
+        };
+        let idle = if base_rates.iter().all(|r| *r == 0.0) {
+            IdleProfile::Always
+        } else if let WorkloadKind::Burst { start, end, .. } = &kind {
+            // Hard idle outside the window iff every agent with a
+            // nonzero base rate is in the burst list.
+            let covered = base_rates.iter().enumerate()
+                .all(|(i, r)| *r == 0.0 || mask[i]);
+            if covered {
+                IdleProfile::OutsideWindow { start: *start, end: *end }
+            } else {
+                IdleProfile::Never
+            }
+        } else {
+            IdleProfile::Never
+        };
         WorkloadGenerator { base_rates, kind, process, rng: Rng::new(seed),
-                            seed }
+                            seed, mask, base_total, idle }
     }
 
     /// The paper's §IV.A workload in deterministic (closed-form) mode.
@@ -91,7 +157,9 @@ impl WorkloadGenerator {
     }
 
     /// Mean rate (rps) for `agent` at `step` under the configured shape.
-    pub fn mean_rate(&self, agent: usize, step: u64) -> f64 {
+    /// `dt` (step length in seconds) only affects shapes defined over
+    /// virtual time (`Diurnal`); step-window shapes ignore it.
+    pub fn mean_rate(&self, agent: usize, step: u64, dt: f64) -> f64 {
         let base = self.base_rates[agent];
         match &self.kind {
             WorkloadKind::Steady => base,
@@ -103,24 +171,22 @@ impl WorkloadGenerator {
                     base
                 }
             }
-            WorkloadKind::MultiSpike { agents, factor, start, end } => {
-                if agents.contains(&agent) && (*start..*end).contains(&step)
-                {
+            WorkloadKind::MultiSpike { factor, start, end, .. } => {
+                if self.mask[agent] && (*start..*end).contains(&step) {
                     base * factor
                 } else {
                     base
                 }
             }
-            WorkloadKind::Burst { agents, start, end } => {
-                if agents.contains(&agent)
-                    && !(*start..*end).contains(&step) {
+            WorkloadKind::Burst { start, end, .. } => {
+                if self.mask[agent] && !(*start..*end).contains(&step) {
                     0.0
                 } else {
                     base
                 }
             }
             WorkloadKind::Dominance { agent: a, share } => {
-                let total: f64 = self.base_rates.iter().sum();
+                let total = self.base_total;
                 if agent == *a {
                     total * share
                 } else {
@@ -133,10 +199,32 @@ impl WorkloadGenerator {
                 }
             }
             WorkloadKind::Diurnal { amplitude, period } => {
-                let phase = 2.0 * std::f64::consts::PI * step as f64
-                    / period.max(1.0);
+                let phase = 2.0 * std::f64::consts::PI
+                    * (step as f64 * dt) / period.max(1.0);
                 (base * (1.0 + amplitude * phase.sin())).max(0.0)
             }
+        }
+    }
+
+    /// Skip-idle contract: `Some(until)` promises that every step in
+    /// `[step, until)` has **exactly zero** mean rate for every agent —
+    /// and therefore (because `Rng::poisson(0.0)` returns without a
+    /// draw) that stepping through those ticks would consume no RNG
+    /// state. `None` means the current step may be active. `u64::MAX`
+    /// stands in for "idle forever".
+    pub fn idle_until(&self, step: u64) -> Option<u64> {
+        match self.idle {
+            IdleProfile::Always => Some(u64::MAX),
+            IdleProfile::OutsideWindow { start, end } => {
+                if step < start {
+                    Some(start)
+                } else if step >= end {
+                    Some(u64::MAX)
+                } else {
+                    None
+                }
+            }
+            IdleProfile::Never => None,
         }
     }
 
@@ -146,7 +234,7 @@ impl WorkloadGenerator {
                 counts: &mut [f64]) {
         debug_assert_eq!(rates.len(), self.base_rates.len());
         for i in 0..self.base_rates.len() {
-            let rate = self.mean_rate(i, step);
+            let rate = self.mean_rate(i, step, dt);
             rates[i] = rate;
             counts[i] = match self.process {
                 ArrivalProcess::Deterministic => rate * dt,
@@ -212,8 +300,8 @@ mod tests {
         let g = WorkloadGenerator::new(vec![80.0, 40.0],
                                        WorkloadKind::Scaled { factor: 3.0 },
                                        ArrivalProcess::Deterministic, 1);
-        assert_eq!(g.mean_rate(0, 10), 240.0);
-        assert_eq!(g.mean_rate(1, 10), 120.0);
+        assert_eq!(g.mean_rate(0, 10, 1.0), 240.0);
+        assert_eq!(g.mean_rate(1, 10, 1.0), 120.0);
     }
 
     #[test]
@@ -222,11 +310,25 @@ mod tests {
             vec![80.0, 40.0],
             WorkloadKind::Spike { agent: 1, factor: 10.0, start: 5, end: 8 },
             ArrivalProcess::Deterministic, 1);
-        assert_eq!(g.mean_rate(1, 4), 40.0);
-        assert_eq!(g.mean_rate(1, 5), 400.0);
-        assert_eq!(g.mean_rate(1, 7), 400.0);
-        assert_eq!(g.mean_rate(1, 8), 40.0);
-        assert_eq!(g.mean_rate(0, 6), 80.0); // other agents unaffected
+        assert_eq!(g.mean_rate(1, 4, 1.0), 40.0);
+        assert_eq!(g.mean_rate(1, 5, 1.0), 400.0);
+        assert_eq!(g.mean_rate(1, 7, 1.0), 400.0);
+        assert_eq!(g.mean_rate(1, 8, 1.0), 40.0);
+        assert_eq!(g.mean_rate(0, 6, 1.0), 80.0); // other agents unaffected
+    }
+
+    #[test]
+    fn spike_windows_are_step_indexed_not_time_indexed() {
+        // Step-window shapes address ticks: the same step spikes no
+        // matter the dt (documented unit contract).
+        let g = WorkloadGenerator::new(
+            vec![80.0],
+            WorkloadKind::Spike { agent: 0, factor: 10.0, start: 5, end: 8 },
+            ArrivalProcess::Deterministic, 1);
+        for dt in [0.25, 1.0, 4.0] {
+            assert_eq!(g.mean_rate(0, 5, dt), 800.0, "dt={dt}");
+            assert_eq!(g.mean_rate(0, 8, dt), 80.0, "dt={dt}");
+        }
     }
 
     #[test]
@@ -238,14 +340,14 @@ mod tests {
             },
             ArrivalProcess::Deterministic, 1);
         // Outside the window: everyone at base.
-        assert_eq!(g.mean_rate(0, 3), 80.0);
-        assert_eq!(g.mean_rate(2, 8), 45.0);
+        assert_eq!(g.mean_rate(0, 3, 1.0), 80.0);
+        assert_eq!(g.mean_rate(2, 8, 1.0), 45.0);
         // Inside: the listed agents spike together...
-        assert_eq!(g.mean_rate(0, 4), 400.0);
-        assert_eq!(g.mean_rate(2, 7), 225.0);
+        assert_eq!(g.mean_rate(0, 4, 1.0), 400.0);
+        assert_eq!(g.mean_rate(2, 7, 1.0), 225.0);
         // ...while unlisted agents are untouched.
-        assert_eq!(g.mean_rate(1, 5), 40.0);
-        assert_eq!(g.mean_rate(3, 6), 25.0);
+        assert_eq!(g.mean_rate(1, 5, 1.0), 40.0);
+        assert_eq!(g.mean_rate(3, 6, 1.0), 25.0);
     }
 
     #[test]
@@ -256,14 +358,17 @@ mod tests {
             ArrivalProcess::Deterministic, 1);
         // Outside the window: listed agents at exactly zero (not a small
         // fraction — that would keep the autoscaler's busy flag set).
-        assert_eq!(g.mean_rate(1, 3), 0.0);
-        assert_eq!(g.mean_rate(3, 8), 0.0);
+        assert_eq!(g.mean_rate(1, 3, 1.0), 0.0);
+        assert_eq!(g.mean_rate(3, 8, 1.0), 0.0);
         // Inside: listed agents at base rate.
-        assert_eq!(g.mean_rate(1, 4), 40.0);
-        assert_eq!(g.mean_rate(3, 7), 25.0);
+        assert_eq!(g.mean_rate(1, 4, 1.0), 40.0);
+        assert_eq!(g.mean_rate(3, 7, 1.0), 25.0);
         // Unlisted agents run steady throughout.
-        assert_eq!(g.mean_rate(0, 3), 80.0);
-        assert_eq!(g.mean_rate(2, 9), 45.0);
+        assert_eq!(g.mean_rate(0, 3, 1.0), 80.0);
+        assert_eq!(g.mean_rate(2, 9, 1.0), 45.0);
+        // Unlisted active agents mean the system is never whole-idle.
+        assert_eq!(g.idle_until(0), None);
+        assert_eq!(g.idle_until(9), None);
     }
 
     #[test]
@@ -272,11 +377,11 @@ mod tests {
             vec![80.0, 40.0, 45.0, 25.0],
             WorkloadKind::Dominance { agent: 0, share: 0.9 },
             ArrivalProcess::Deterministic, 1);
-        let total: f64 = (0..4).map(|i| g.mean_rate(i, 0)).sum();
+        let total: f64 = (0..4).map(|i| g.mean_rate(i, 0, 1.0)).sum();
         assert!((total - 190.0).abs() < 1e-9);
-        assert!((g.mean_rate(0, 0) - 171.0).abs() < 1e-9);
+        assert!((g.mean_rate(0, 0, 1.0) - 171.0).abs() < 1e-9);
         // Remaining 10% split ∝ original rates among the other three.
-        let rest: f64 = (1..4).map(|i| g.mean_rate(i, 0)).sum();
+        let rest: f64 = (1..4).map(|i| g.mean_rate(i, 0, 1.0)).sum();
         assert!((rest - 19.0).abs() < 1e-9);
     }
 
@@ -286,10 +391,94 @@ mod tests {
             vec![50.0],
             WorkloadKind::Diurnal { amplitude: 1.5, period: 20.0 },
             ArrivalProcess::Deterministic, 1);
-        let rates: Vec<f64> = (0..40).map(|t| g.mean_rate(0, t)).collect();
+        let rates: Vec<f64> =
+            (0..40).map(|t| g.mean_rate(0, t, 1.0)).collect();
         assert!(rates.iter().all(|r| *r >= 0.0));
         let max = rates.iter().cloned().fold(0.0, f64::max);
         let min = rates.iter().cloned().fold(f64::MAX, f64::min);
         assert!(max > 100.0 && min == 0.0, "max={max} min={min}");
+    }
+
+    #[test]
+    fn diurnal_period_is_dt_invariant() {
+        // The period is virtual seconds: halving dt while doubling the
+        // step index must sample the identical physical schedule. This
+        // was the bug — phase used the raw step index, so re-gridding a
+        // run silently changed the oscillation's physical period.
+        let g = WorkloadGenerator::new(
+            vec![50.0],
+            WorkloadKind::Diurnal { amplitude: 0.8, period: 20.0 },
+            ArrivalProcess::Deterministic, 1);
+        for t in 0..40u64 {
+            // step·dt is exact in both grids, so the phases (and rates)
+            // are bit-equal, not merely close.
+            assert_eq!(g.mean_rate(0, t, 1.0), g.mean_rate(0, 2 * t, 0.5),
+                       "t={t}");
+            assert_eq!(g.mean_rate(0, t, 1.0), g.mean_rate(0, 4 * t, 0.25),
+                       "t={t}");
+        }
+    }
+
+    #[test]
+    fn idle_until_covers_full_burst_and_zero_rate_schedules() {
+        // Burst covering every nonzero-base agent: idle up to the
+        // window, active inside, idle forever after.
+        let g = WorkloadGenerator::new(
+            vec![80.0, 0.0, 45.0],
+            WorkloadKind::Burst { agents: vec![0, 2], start: 10, end: 20 },
+            ArrivalProcess::Deterministic, 1);
+        assert_eq!(g.idle_until(0), Some(10));
+        assert_eq!(g.idle_until(9), Some(10));
+        assert_eq!(g.idle_until(10), None);
+        assert_eq!(g.idle_until(19), None);
+        assert_eq!(g.idle_until(20), Some(u64::MAX));
+        // The promise is honest: every covered step really is all-zero.
+        for step in (0..10).chain(20..30) {
+            for agent in 0..3 {
+                assert_eq!(g.mean_rate(agent, step, 1.0), 0.0,
+                           "agent {agent} step {step}");
+            }
+        }
+        // All-zero base rates are idle regardless of kind.
+        let z = WorkloadGenerator::new(
+            vec![0.0, 0.0], WorkloadKind::Scaled { factor: 3.0 },
+            ArrivalProcess::Poisson, 7);
+        assert_eq!(z.idle_until(0), Some(u64::MAX));
+        // Active schedules never claim idleness.
+        let s = WorkloadGenerator::paper_deterministic();
+        assert_eq!(s.idle_until(0), None);
+    }
+
+    #[test]
+    fn idle_steps_consume_no_rng_state() {
+        // Poisson draws skip zero-rate agents entirely (no state
+        // consumed), so a generator stepped through its idle prefix
+        // produces the same in-window stream as one that never stepped
+        // the prefix at all — the property the skip-idle engine relies
+        // on to fast-forward without replaying ticks.
+        let mk = || WorkloadGenerator::new(
+            vec![30.0, 20.0],
+            WorkloadKind::Burst { agents: vec![0, 1], start: 50, end: 60 },
+            ArrivalProcess::Poisson, 99);
+        let mut dense = mk();
+        let mut rates = vec![0.0; 2];
+        let mut counts = vec![0.0; 2];
+        let mut dense_window = Vec::new();
+        for t in 0..60 {
+            dense.step(t, 1.0, &mut rates, &mut counts);
+            if t >= 50 {
+                dense_window.push(counts.clone());
+            }
+            if t < 50 || t >= 60 {
+                assert_eq!(counts, vec![0.0, 0.0], "t={t}");
+            }
+        }
+        let mut skipped = mk();
+        let mut skipped_window = Vec::new();
+        for t in 50..60 {
+            skipped.step(t, 1.0, &mut rates, &mut counts);
+            skipped_window.push(counts.clone());
+        }
+        assert_eq!(dense_window, skipped_window);
     }
 }

@@ -27,6 +27,37 @@ pub struct Trace {
 }
 
 impl Trace {
+    /// Validated constructor: every `counts` row must be exactly
+    /// `agents.len()` wide. Programmatic construction through the pub
+    /// fields stays possible (and is what [`Trace::record`] does, whose
+    /// rows are correct by construction), but a hand-built ragged matrix
+    /// used to survive until `counts.copy_from_slice(row)` panicked
+    /// mid-replay — this surfaces it up front as a labelled
+    /// [`Error::Trace`] instead.
+    pub fn new(agents: Vec<String>, dt: f64, counts: Vec<Vec<f64>>)
+               -> Result<Trace> {
+        let trace = Trace { agents, dt, counts };
+        trace.validate()?;
+        Ok(trace)
+    }
+
+    /// Check row-width consistency: every step's row must cover every
+    /// agent. Returns a labelled [`Error::Trace`] naming the first
+    /// offending row. The replay engines call this before touching any
+    /// run state, so a ragged trace fails fast instead of panicking
+    /// mid-run.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.agents.len();
+        for (step, row) in self.counts.iter().enumerate() {
+            if row.len() != n {
+                return Err(Error::Trace(format!(
+                    "ragged trace: row {step} has {} cells, expected {n}",
+                    row.len())));
+            }
+        }
+        Ok(())
+    }
+
     /// Record `steps` steps from a generator.
     pub fn record(gen: &mut WorkloadGenerator, agents: Vec<String>,
                   steps: u64, dt: f64) -> Trace {
@@ -303,6 +334,36 @@ mod tests {
             Error::Trace(msg) => assert!(msg.contains("bad.csv"), "{msg}"),
             other => panic!("expected Error::Trace, got {other}"),
         }
+    }
+
+    #[test]
+    fn new_rejects_ragged_rows_with_labelled_error() {
+        let counts = vec![vec![1.0, 2.0], vec![3.0], vec![4.0, 5.0]];
+        let err = Trace::new(vec!["a".into(), "b".into()], 1.0, counts)
+            .unwrap_err();
+        match err {
+            Error::Trace(msg) => {
+                assert!(msg.contains("row 1"), "{msg}");
+                assert!(msg.contains("expected 2"), "{msg}");
+            }
+            other => panic!("expected Error::Trace, got {other}"),
+        }
+        // The same matrix with consistent rows is accepted.
+        let ok = Trace::new(vec!["a".into(), "b".into()], 1.0,
+                            vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert!(ok.is_ok());
+    }
+
+    #[test]
+    fn validate_catches_field_built_ragged_traces() {
+        // The pub-field escape hatch: validate() is what the replay
+        // engines run before touching any state.
+        let mut trace = Trace::paper_poisson(5, 1);
+        assert!(trace.validate().is_ok());
+        trace.counts[3].pop();
+        let err = trace.validate().unwrap_err();
+        assert!(matches!(err, Error::Trace(_)), "{err}");
+        assert!(err.to_string().contains("row 3"), "{err}");
     }
 
     #[test]
