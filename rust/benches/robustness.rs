@@ -61,7 +61,7 @@ fn main() {
     }
     println!("   ({workers} workers)");
     for pname in ["adaptive", "predictive", "feedback", "static_equal",
-                  "round_robin"] {
+                  "round_robin", "critical_path"] {
         print!("{pname:<14}");
         for (shape, _, _) in &shapes {
             let key = format!("{pname}/{shape}/seed42");
@@ -76,18 +76,21 @@ fn main() {
     // ---- §VI future work: multi-GPU hierarchical allocation ----------
     h.section("multi-GPU cluster (hierarchical Alg. 1, §VI future work)");
     use agentsrv::agents::AgentRegistry;
-    use agentsrv::cluster::{ClusterSimulator, MigrationModel};
+    use agentsrv::cluster::{ClusterSimulator, MigrationModel,
+                            Rebalancer};
     use agentsrv::sim::SimConfig;
     println!("{:<22} {:>12} {:>12} {:>10} {:>11}", "cluster",
              "latency(s)", "tput(rps)", "cost($)", "migrations");
-    for (label, gpus, cap, mig) in [
-        ("1 GPU", 1usize, 1.0, None),
-        ("2 GPUs", 2, 1.0, None),
-        ("2 GPUs + migration", 2, 1.0, Some(MigrationModel::default())),
-        ("4 GPUs", 4, 1.0, None),
+    for (label, gpus, cap, rebalancer) in [
+        ("1 GPU", 1usize, 1.0, Rebalancer::Static),
+        ("2 GPUs", 2, 1.0, Rebalancer::Static),
+        ("2 GPUs + migration", 2, 1.0,
+         Rebalancer::HottestAgent(MigrationModel::default())),
+        ("4 GPUs", 4, 1.0, Rebalancer::Static),
     ] {
         let sim = ClusterSimulator::new(
-            SimConfig::paper(), AgentRegistry::paper(), gpus, cap, mig)
+            SimConfig::paper(), AgentRegistry::paper(), gpus, cap,
+            rebalancer)
             .expect("feasible cluster");
         let r = sim.run().expect("cluster run");
         println!("{label:<22} {:>12.1} {:>12.1} {:>10.3} {:>11}",

@@ -27,6 +27,9 @@
 //!     three shells (eviction rate × recovery policy on the cluster,
 //!     shed policy on the serving layer, every allocator on the fluid
 //!     shell), as `FaultScenario` cells;
+//!   * workflow — `repro::workflow_grid`: workflow-DAG cells (spec
+//!     shape × policy × placement × seed) across all three shells, as
+//!     `WorkflowScenario` cells carrying end-to-end workflow latency;
 //!   * large_n — `repro::large_n_grid`: 1024/4096-agent synthetic
 //!     registries whose only traffic is a mid-run burst — the shape the
 //!     skip-idle event core fast-forwards. Timed both dense
@@ -51,7 +54,7 @@
 //! With `--json`, the measured tables are also written as JSON (the
 //! format documented in BENCH_sweep.json, `results` key: the single-GPU
 //! table plus `cluster`, `corpus`, `cost`, `serving`, `placement`,
-//! `faults`, and `large_n` sections). The
+//! `faults`, `workflow`, and `large_n` sections). The
 //! written report is what CI's bench-regression gate compares against
 //! the committed BENCH_sweep.json baseline (`agentsrv bench-gate`).
 
@@ -159,6 +162,12 @@ fn main() {
     let (fault_seq_s, fault_rows) = sweep_section(
         "fault grid", &fault_cells, steps, reps, sequential_fault);
 
+    // ---- Workflow-DAG grid through the same pool ----------------------
+    let workflow_cells = repro::workflow_grid(steps, &seeds);
+    let (workflow_seq_s, workflow_rows) = sweep_section(
+        "workflow grid", &workflow_cells, steps, reps,
+        sequential_workflow);
+
     // ---- Skip-idle large-N grid: dense vs event-stepped ---------------
     // The payoff measurement for the skip-idle core: the same
     // 1024/4096-agent cells run through the dense reference path
@@ -203,6 +212,8 @@ fn main() {
             placement: (placement_cells.len(), placement_seq_s,
                         &placement_rows),
             faults: (fault_cells.len(), fault_seq_s, &fault_rows),
+            workflow: (workflow_cells.len(), workflow_seq_s,
+                       &workflow_rows),
             large_n: (large_n_cells.len(), large_n_dense_s,
                       large_n_seq_s, &large_n_rows),
         }, &path);
@@ -313,6 +324,31 @@ fn sequential_fault(cells: &[SweepCell]) -> Vec<SweepRun> {
             SweepRun { label: fs.label().to_string(), result }
         }
         _ => unreachable!("fault grid contains only fault cells"),
+    }).collect()
+}
+
+/// The pre-batch workflow path: dispatch each workflow cell to its
+/// shell's fresh-buffer sequential runner. The stored `PolicyKind` is
+/// cloned rather than rebuilt by name — workflow grids carry
+/// spec-weighted critical-path policies that `policy_by_name` would
+/// flatten back to the unweighted default.
+fn sequential_workflow(cells: &[SweepCell]) -> Vec<SweepRun> {
+    cells.iter().map(|cell| match cell {
+        SweepCell::Workflow(ws) => {
+            let result = if let Some(cs) = ws.as_cluster_scenario() {
+                CellResult::Cluster(
+                    cs.simulator().run().expect("feasible workflow cell"))
+            } else if let Some(sc) = ws.as_serving_scenario() {
+                let mut policy = sc.policy.clone();
+                CellResult::Serving(sc.simulator().run(&mut policy))
+            } else {
+                let sc = ws.as_single().expect("single workflow cell");
+                let mut policy = sc.policy.clone();
+                CellResult::Sim(sc.simulator().run(&mut policy))
+            };
+            SweepRun { label: ws.label().to_string(), result }
+        }
+        _ => unreachable!("workflow grid contains only workflow cells"),
     }).collect()
 }
 
@@ -432,6 +468,8 @@ struct ReportInput<'a> {
     placement: (usize, f64, &'a [(usize, f64, f64)]),
     /// (cells, sequential seconds, per-worker rows).
     faults: (usize, f64, &'a [(usize, f64, f64)]),
+    /// (cells, sequential seconds, per-worker rows).
+    workflow: (usize, f64, &'a [(usize, f64, f64)]),
     /// (cells, dense seconds, skip-idle sequential seconds,
     /// per-worker rows).
     large_n: (usize, f64, f64, &'a [(usize, f64, f64)]),
@@ -495,6 +533,7 @@ fn results_value(input: &ReportInput<'_>) -> Value {
     let (placement_cells, placement_seq_s, placement_rows) =
         input.placement;
     let (fault_cells, fault_seq_s, fault_rows) = input.faults;
+    let (wf_cells, wf_seq_s, wf_rows) = input.workflow;
     let (ln_cells, ln_dense_s, ln_seq_s, ln_rows) = input.large_n;
     json::obj(vec![
         ("grid", json::obj(vec![
@@ -525,6 +564,8 @@ fn results_value(input: &ReportInput<'_>) -> Value {
                              placement_rows)),
         ("faults",
          sweep_section_value(fault_cells, fault_seq_s, fault_rows)),
+        ("workflow",
+         sweep_section_value(wf_cells, wf_seq_s, wf_rows)),
         ("large_n",
          large_n_section_value(ln_cells, ln_dense_s, ln_seq_s, ln_rows)),
     ])

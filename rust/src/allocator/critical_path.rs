@@ -1,0 +1,155 @@
+//! DAG-critical-path-aware allocation — the workflow extension of the
+//! paper's Algorithm 1.
+//!
+//! When the workload is a multi-stage workflow DAG (see
+//! [`WorkflowSpec`](crate::workload::WorkflowSpec)), per-agent arrival
+//! rates understate how much an agent matters: a slow stage on the DAG's
+//! critical path delays *every* downstream stage, so end-to-end workflow
+//! latency is governed by the critical path, not by aggregate demand.
+//! This policy runs Algorithm 1's demand/floor/normalize pipeline but
+//! boosts each agent's demand score by its criticality weight:
+//!
+//! ```text
+//!   d_i = λ_i · R_i / P_i · (1 + BOOST · w_i)
+//! ```
+//!
+//! where `w_i ∈ [0, 1]` comes from
+//! [`WorkflowSpec::critical_path_weights`](crate::workload::WorkflowSpec::critical_path_weights)
+//! (fraction of the DAG's longest path running through the agent, work
+//! weighted) and `BOOST = 2`. With no weights configured the boost term
+//! is `1` everywhere and the policy is bit-identical to
+//! [`AdaptivePolicy`](crate::allocator::AdaptivePolicy).
+
+use crate::allocator::{normalize_to_capacity, AllocContext, AllocationPolicy};
+
+/// Demand multiplier applied to a fully-critical agent (`w_i == 1`).
+const BOOST: f64 = 2.0;
+
+/// Algorithm 1 with a critical-path demand boost. `Default` carries no
+/// weights (behaves exactly like the adaptive policy); build a weighted
+/// instance with [`CriticalPathPolicy::for_workflow`] or via
+/// [`PolicyKind::critical_path_for`](crate::allocator::PolicyKind::critical_path_for).
+#[derive(Debug, Clone, Default)]
+pub struct CriticalPathPolicy {
+    /// Per-agent criticality in `[0, 1]`; agents beyond the vector's
+    /// length (or the empty default) weigh 0.
+    weights: Vec<f64>,
+}
+
+impl CriticalPathPolicy {
+    /// Policy weighted for `spec` on a deployment of `n_agents` agents.
+    pub fn for_workflow(spec: &crate::workload::WorkflowSpec,
+                        n_agents: usize) -> CriticalPathPolicy {
+        CriticalPathPolicy { weights: spec.critical_path_weights(n_agents) }
+    }
+
+    /// Criticality weight for agent `i` (0 when unconfigured).
+    fn weight(&self, i: usize) -> f64 {
+        self.weights.get(i).copied().unwrap_or(0.0)
+    }
+}
+
+impl AllocationPolicy for CriticalPathPolicy {
+    fn name(&self) -> &'static str {
+        "critical_path"
+    }
+
+    /// Stateless like the adaptive policy, and zero demand short-circuits
+    /// to `out.fill(0.0)`, so an all-idle step is a true no-op.
+    fn idle_fixed_point(&self, _n: usize) -> bool {
+        true
+    }
+
+    fn allocate(&mut self, ctx: &AllocContext<'_>, out: &mut [f64]) {
+        let n = ctx.registry.len();
+        debug_assert_eq!(out.len(), n);
+        debug_assert_eq!(ctx.arrival_rates.len(), n);
+        let min_gpu = ctx.registry.min_gpu();
+        let weight = ctx.registry.priority_weight();
+
+        // Phase 1: demand scores with the critical-path boost.
+        let mut d_total = 0.0;
+        for i in 0..n {
+            let d = ctx.arrival_rates[i] * min_gpu[i] / weight[i]
+                * (1.0 + BOOST * self.weight(i));
+            out[i] = d;
+            d_total += d;
+        }
+
+        // Idle system: allocate nothing.
+        if d_total <= 0.0 {
+            out.fill(0.0);
+            return;
+        }
+
+        // Phase 2: proportional share with minimum floor.
+        let scale = ctx.capacity / d_total;
+        for i in 0..n {
+            out[i] = (out[i] * scale).max(min_gpu[i]);
+        }
+
+        // Phase 3: capacity normalization.
+        normalize_to_capacity(out, ctx.capacity);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agents::AgentRegistry;
+    use crate::allocator::AdaptivePolicy;
+    use crate::workload::WorkflowSpec;
+
+    fn alloc(policy: &mut dyn AllocationPolicy, rates: &[f64]) -> Vec<f64> {
+        let reg = AgentRegistry::paper();
+        let queues = vec![0.0; reg.len()];
+        let ctx = AllocContext {
+            registry: &reg,
+            arrival_rates: rates,
+            queue_depths: &queues,
+            step: 0,
+            capacity: 1.0,
+        };
+        let mut out = vec![0.0; reg.len()];
+        policy.allocate(&ctx, &mut out);
+        out
+    }
+
+    #[test]
+    fn unweighted_matches_adaptive_exactly() {
+        let rates = [80.0, 40.0, 45.0, 25.0];
+        let a = alloc(&mut AdaptivePolicy::default(), &rates);
+        let b = alloc(&mut CriticalPathPolicy::default(), &rates);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn weighted_shifts_capacity_toward_critical_agents() {
+        // fanout2 runs through agents 0-2 only, so agent 3 is off the
+        // DAG (weight 0) while the coordinator is fully critical.
+        let spec = WorkflowSpec::fan_out("fanout2", 0, &[1, 2]);
+        let w = spec.critical_path_weights(4);
+        assert!((w[0] - 1.0).abs() < 1e-12);
+        assert_eq!(w[3], 0.0);
+        let rates = [80.0, 40.0, 45.0, 25.0];
+        let base = alloc(&mut AdaptivePolicy::default(), &rates);
+        let boosted =
+            alloc(&mut CriticalPathPolicy::for_workflow(&spec, 4), &rates);
+        // The fully-critical, floor-free coordinator gains share; the
+        // off-DAG agent loses it.
+        assert!(boosted[0] > base[0],
+                "critical agent not boosted: {boosted:?} vs {base:?}");
+        assert!(boosted[3] < base[3],
+                "off-DAG agent not demoted: {boosted:?} vs {base:?}");
+        let total: f64 = boosted.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn idle_system_allocates_nothing() {
+        let spec = WorkflowSpec::paper();
+        let g = alloc(&mut CriticalPathPolicy::for_workflow(&spec, 4),
+                      &[0.0; 4]);
+        assert_eq!(g, vec![0.0; 4]);
+    }
+}

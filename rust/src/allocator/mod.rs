@@ -20,14 +20,20 @@
 //!   observation.
 //! * [`FeedbackPolicy`] — extension: demand augmented with a queue-depth
 //!   backpressure term, so backlog drains faster after bursts.
+//! * [`CriticalPathPolicy`] — extension for workflow-DAG workloads:
+//!   Algorithm 1 with demand boosted by each agent's share of the DAG's
+//!   critical path, so end-to-end workflow latency — not just per-agent
+//!   latency — drives the split.
 
 mod adaptive;
+mod critical_path;
 mod feedback;
 mod predictive;
 mod round_robin;
 mod static_equal;
 
 pub use adaptive::AdaptivePolicy;
+pub use critical_path::CriticalPathPolicy;
 pub use feedback::FeedbackPolicy;
 pub use predictive::PredictivePolicy;
 pub use round_robin::RoundRobinPolicy;
@@ -135,7 +141,7 @@ pub fn normalize_to_capacity(out: &mut [f64], capacity: f64) {
     }
 }
 
-/// The five built-in policies as a statically-dispatched enum.
+/// The built-in policies as a statically-dispatched enum.
 ///
 /// The `dyn AllocationPolicy` object path stays available for external
 /// policies, but everything in-crate (the batch sweep engine, the repro
@@ -155,6 +161,8 @@ pub enum PolicyKind {
     Predictive(PredictivePolicy),
     /// [`FeedbackPolicy`].
     Feedback(FeedbackPolicy),
+    /// [`CriticalPathPolicy`] — DAG-critical-path-aware extension.
+    CriticalPath(CriticalPathPolicy),
 }
 
 impl PolicyKind {
@@ -183,6 +191,19 @@ impl PolicyKind {
         PolicyKind::Feedback(FeedbackPolicy::default())
     }
 
+    /// Fresh unweighted critical-path policy (identical to adaptive
+    /// until weighted for a workflow spec).
+    pub fn critical_path() -> PolicyKind {
+        PolicyKind::CriticalPath(CriticalPathPolicy::default())
+    }
+
+    /// Critical-path policy weighted for `spec` on `n_agents` agents.
+    pub fn critical_path_for(spec: &crate::workload::WorkflowSpec,
+                             n_agents: usize) -> PolicyKind {
+        PolicyKind::CriticalPath(
+            CriticalPathPolicy::for_workflow(spec, n_agents))
+    }
+
     /// Every built-in policy, in the same order as [`all_policies`].
     pub fn all() -> Vec<PolicyKind> {
         vec![
@@ -191,6 +212,7 @@ impl PolicyKind {
             PolicyKind::adaptive(),
             PolicyKind::predictive(),
             PolicyKind::feedback(),
+            PolicyKind::critical_path(),
         ]
     }
 
@@ -202,6 +224,7 @@ impl PolicyKind {
             "adaptive" => Some(PolicyKind::adaptive()),
             "predictive" => Some(PolicyKind::predictive()),
             "feedback" => Some(PolicyKind::feedback()),
+            "critical_path" | "cp" => Some(PolicyKind::critical_path()),
             _ => None,
         }
     }
@@ -214,6 +237,7 @@ impl PolicyKind {
             PolicyKind::Adaptive(p) => p.name(),
             PolicyKind::Predictive(p) => p.name(),
             PolicyKind::Feedback(p) => p.name(),
+            PolicyKind::CriticalPath(p) => p.name(),
         }
     }
 }
@@ -230,6 +254,7 @@ impl AllocationPolicy for PolicyKind {
             PolicyKind::Adaptive(p) => p.allocate(ctx, out),
             PolicyKind::Predictive(p) => p.allocate(ctx, out),
             PolicyKind::Feedback(p) => p.allocate(ctx, out),
+            PolicyKind::CriticalPath(p) => p.allocate(ctx, out),
         }
     }
 
@@ -240,6 +265,7 @@ impl AllocationPolicy for PolicyKind {
             PolicyKind::Adaptive(p) => p.reset(),
             PolicyKind::Predictive(p) => p.reset(),
             PolicyKind::Feedback(p) => p.reset(),
+            PolicyKind::CriticalPath(p) => p.reset(),
         }
     }
 
@@ -250,6 +276,7 @@ impl AllocationPolicy for PolicyKind {
             PolicyKind::Adaptive(p) => p.idle_fixed_point(n),
             PolicyKind::Predictive(p) => p.idle_fixed_point(n),
             PolicyKind::Feedback(p) => p.idle_fixed_point(n),
+            PolicyKind::CriticalPath(p) => p.idle_fixed_point(n),
         }
     }
 }
@@ -296,7 +323,7 @@ mod tests {
     #[test]
     fn policy_by_name_resolves_aliases() {
         for n in ["static", "static_equal", "rr", "round_robin", "adaptive",
-                  "predictive", "feedback"] {
+                  "predictive", "feedback", "critical_path", "cp"] {
             assert!(policy_by_name(n).is_some(), "{n}");
         }
         assert!(policy_by_name("nope").is_none());
@@ -321,7 +348,7 @@ mod tests {
             assert_eq!(k.name(), b.name());
         }
         for n in ["static", "static_equal", "rr", "round_robin", "adaptive",
-                  "predictive", "feedback"] {
+                  "predictive", "feedback", "critical_path", "cp"] {
             assert_eq!(PolicyKind::by_name(n).is_some(),
                        policy_by_name(n).is_some(), "{n}");
         }
@@ -381,13 +408,14 @@ mod tests {
             assert_eq!(after_idle, after_skip,
                        "{}: idle steps perturbed state", kind.name());
         }
-        // The claims themselves, pinned: exactly adaptive/feedback (and
-        // predictive once seeded) may be skipped.
+        // The claims themselves, pinned: exactly adaptive, feedback, and
+        // critical-path (and predictive once seeded) may be skipped.
         assert!(!PolicyKind::static_equal().idle_fixed_point(4));
         assert!(!PolicyKind::round_robin().idle_fixed_point(4));
         assert!(PolicyKind::adaptive().idle_fixed_point(4));
         assert!(PolicyKind::feedback().idle_fixed_point(4));
         assert!(!PolicyKind::predictive().idle_fixed_point(4));
+        assert!(PolicyKind::critical_path().idle_fixed_point(4));
     }
 
     #[test]

@@ -8,7 +8,8 @@
 //! ```text
 //!   PlacementStrategy      agents -> GPUs at construction time
 //!        |                 (headroom- / best-fit-decreasing,
-//!        v                  priority-spread, demand-aware, in-order)
+//!        v                  priority-spread, demand-aware, in-order,
+//!                           workflow-colocate)
 //!   Placement              the assignment itself (gpu_of, migrate)
 //!        |
 //!        v
@@ -48,9 +49,7 @@ mod placement;
 mod sim;
 
 pub use hierarchical::ClusterAllocator;
-#[allow(deprecated)]
-pub use placement::first_fit_decreasing;
 pub use placement::{headroom_decreasing, pack_decreasing, Placement,
                     PlacementScratch, PlacementStrategy};
-pub use sim::{ClusterArena, ClusterResult, ClusterSimulator,
-              MigrationModel, Rebalancer};
+pub use sim::{ClusterArena, ClusterBuilder, ClusterResult,
+              ClusterSimulator, MigrationModel, Rebalancer};

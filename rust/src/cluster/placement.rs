@@ -62,6 +62,7 @@ pub struct PlacementScratch {
     order: Vec<usize>,
     min_load: Vec<f64>,
     demand_load: Vec<f64>,
+    group_load: Vec<f64>,
 }
 
 impl PlacementScratch {
@@ -107,6 +108,13 @@ pub enum PlacementStrategy {
     /// the lowest-index device that fits — the naive packing the
     /// decreasing strategies are measured against.
     InOrder,
+    /// Workflow co-location: the agents marked in the co-location mask
+    /// (a workflow DAG's participants) are placed first, each preferring
+    /// the device already holding the most co-located mass — pulling a
+    /// workflow's stages onto one device so stage hand-offs never cross
+    /// the interconnect. Remaining agents (and the whole placement when
+    /// no mask is supplied) fall back to headroom-decreasing exactly.
+    WorkflowColocate,
 }
 
 impl PlacementStrategy {
@@ -119,6 +127,7 @@ impl PlacementStrategy {
             PlacementStrategy::PrioritySpread,
             PlacementStrategy::DemandAware,
             PlacementStrategy::InOrder,
+            PlacementStrategy::WorkflowColocate,
         ]
     }
 
@@ -130,6 +139,7 @@ impl PlacementStrategy {
             PlacementStrategy::PrioritySpread => "spread",
             PlacementStrategy::DemandAware => "demand",
             PlacementStrategy::InOrder => "inorder",
+            PlacementStrategy::WorkflowColocate => "colocate",
         }
     }
 
@@ -142,10 +152,21 @@ impl PlacementStrategy {
     /// nowhere (the cluster is genuinely undersized).
     pub fn place(&self, registry: &AgentRegistry, capacities: &[f64],
                  expected_rates: &[f64]) -> Result<Placement> {
+        self.place_colocated(registry, capacities, expected_rates, &[])
+    }
+
+    /// [`PlacementStrategy::place`] with a workflow co-location mask:
+    /// `colocate[i]` marks agent `i` as a participant of the workflow
+    /// DAG that [`PlacementStrategy::WorkflowColocate`] pulls onto one
+    /// device. The other strategies ignore the mask, and an empty mask
+    /// makes co-location degrade to headroom-decreasing exactly.
+    pub fn place_colocated(&self, registry: &AgentRegistry,
+                           capacities: &[f64], expected_rates: &[f64],
+                           colocate: &[bool]) -> Result<Placement> {
         let mut scratch = PlacementScratch::new();
         let mut gpu_of = Vec::new();
-        self.place_into(registry, capacities, expected_rates,
-                        &mut scratch, &mut gpu_of)?;
+        self.place_into_colocated(registry, capacities, expected_rates,
+                                  colocate, &mut scratch, &mut gpu_of)?;
         Ok(Placement { gpu_of, n_gpus: capacities.len() })
     }
 
@@ -158,6 +179,17 @@ impl PlacementStrategy {
                       capacities: &[f64], expected_rates: &[f64],
                       scratch: &mut PlacementScratch,
                       gpu_of: &mut Vec<usize>) -> Result<()> {
+        self.place_into_colocated(registry, capacities, expected_rates,
+                                  &[], scratch, gpu_of)
+    }
+
+    /// [`PlacementStrategy::place_into`] with a workflow co-location
+    /// mask (see [`PlacementStrategy::place_colocated`]).
+    pub fn place_into_colocated(&self, registry: &AgentRegistry,
+                                capacities: &[f64], expected_rates: &[f64],
+                                colocate: &[bool],
+                                scratch: &mut PlacementScratch,
+                                gpu_of: &mut Vec<usize>) -> Result<()> {
         if capacities.is_empty() {
             return Err(Error::Config("cluster needs >= 1 GPU".into()));
         }
@@ -174,8 +206,15 @@ impl PlacementStrategy {
                 mins[i]
             }
         };
+        // Workflow membership for the co-location strategy; no mask
+        // means nobody is grouped and co-location degrades to
+        // headroom-decreasing.
+        let in_group = |i: usize| -> bool {
+            colocate.get(i).copied().unwrap_or(false)
+        };
 
-        let PlacementScratch { order, min_load, demand_load } = scratch;
+        let PlacementScratch { order, min_load, demand_load, group_load }
+            = scratch;
         order.clear();
         order.extend(0..n);
         match self {
@@ -207,12 +246,24 @@ impl PlacementStrategy {
                         .expect("expected load is finite")
                 });
             }
+            PlacementStrategy::WorkflowColocate => {
+                // Workflow participants first (so the group anchors on
+                // the emptiest device before loose agents fragment it),
+                // decreasing minimums within each half.
+                order.sort_by(|a, b| {
+                    in_group(*b).cmp(&in_group(*a)).then(
+                        mins[*b].partial_cmp(&mins[*a])
+                            .expect("min_gpu is finite"))
+                });
+            }
         }
 
         min_load.clear();
         min_load.resize(n_gpus, 0.0);
         demand_load.clear();
         demand_load.resize(n_gpus, 0.0);
+        group_load.clear();
+        group_load.resize(n_gpus, 0.0);
         gpu_of.clear();
         gpu_of.resize(n, usize::MAX);
 
@@ -221,24 +272,41 @@ impl PlacementStrategy {
                 registry.profile(agent).priority == Priority::High;
             let d_agent = demand_of(agent);
             // Linear scan instead of a per-agent sort: strict `>` keeps
-            // the first (lowest-index) device among score ties.
+            // the first (lowest-index) device among score ties. Scores
+            // compare lexicographically; every strategy except workflow
+            // co-location leaves the secondary component at 0.0, which
+            // reduces the comparison to the primary exactly.
             let mut chosen: Option<usize> = None;
-            let mut best = f64::NEG_INFINITY;
+            let mut best = (f64::NEG_INFINITY, f64::NEG_INFINITY);
             for g in 0..n_gpus {
                 if min_load[g] + mins[agent] > capacities[g] + 1e-9 {
                     continue;
                 }
                 let headroom = capacities[g] - min_load[g];
                 let score = match self {
-                    PlacementStrategy::HeadroomDecreasing => headroom,
-                    PlacementStrategy::BestFitDecreasing => -headroom,
+                    PlacementStrategy::HeadroomDecreasing =>
+                        (headroom, 0.0),
+                    PlacementStrategy::BestFitDecreasing =>
+                        (-headroom, 0.0),
                     // Constant score: the first fitting device wins.
-                    PlacementStrategy::InOrder => 0.0,
+                    PlacementStrategy::InOrder => (0.0, 0.0),
                     PlacementStrategy::PrioritySpread => {
-                        if is_high { headroom } else { -headroom }
+                        (if is_high { headroom } else { -headroom }, 0.0)
                     }
                     PlacementStrategy::DemandAware => {
-                        -((demand_load[g] + d_agent) / capacities[g])
+                        (-((demand_load[g] + d_agent) / capacities[g]),
+                         0.0)
+                    }
+                    PlacementStrategy::WorkflowColocate => {
+                        // Grouped agents chase the device already
+                        // holding the most workflow mass (headroom
+                        // breaks fresh-device ties); loose agents pack
+                        // by headroom as usual.
+                        if in_group(agent) {
+                            (group_load[g], headroom)
+                        } else {
+                            (headroom, 0.0)
+                        }
                     }
                 };
                 if chosen.is_none() || score > best {
@@ -254,6 +322,9 @@ impl PlacementStrategy {
             };
             min_load[g] += mins[agent];
             demand_load[g] += d_agent;
+            if in_group(agent) {
+                group_load[g] += mins[agent];
+            }
             gpu_of[agent] = g;
         }
         Ok(())
@@ -273,18 +344,6 @@ pub fn headroom_decreasing(registry: &AgentRegistry, n_gpus: usize,
         return Err(Error::Config("cluster needs >= 1 GPU".into()));
     }
     pack_decreasing(registry, &vec![capacity_per_gpu; n_gpus])
-}
-
-/// Deprecated alias for [`headroom_decreasing`], kept for source
-/// compatibility: the packer this name always pointed at is worst-fit
-/// (headroom-)decreasing — it places each agent on the *most*-headroom
-/// device — not first-fit-decreasing.
-#[deprecated(note = "this packer is worst-fit (headroom-)decreasing, \
-                     not FFD; use `headroom_decreasing` or \
-                     `PlacementStrategy::HeadroomDecreasing`")]
-pub fn first_fit_decreasing(registry: &AgentRegistry, n_gpus: usize,
-                            capacity_per_gpu: f64) -> Result<Placement> {
-    headroom_decreasing(registry, n_gpus, capacity_per_gpu)
 }
 
 /// Per-GPU-capacity form of [`headroom_decreasing`] (heterogeneous
@@ -363,18 +422,6 @@ mod tests {
         let load = p.min_load(&reg);
         assert!((load[0] - 1.0).abs() < 1e-9
                 && (load[1] - 1.0).abs() < 1e-9, "{load:?}");
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_ffd_alias_matches_headroom_decreasing() {
-        let reg = AgentRegistry::paper();
-        for (n, cap) in [(1usize, 1.0), (2, 0.6), (2, 1.0)] {
-            assert_eq!(first_fit_decreasing(&reg, n, cap).unwrap(),
-                       headroom_decreasing(&reg, n, cap).unwrap(),
-                       "{n} gpus @ {cap}");
-        }
-        assert!(first_fit_decreasing(&reg, 0, 1.0).is_err());
     }
 
     #[test]
@@ -498,12 +545,53 @@ mod tests {
     fn strategy_names_are_unique_and_stable() {
         let mut names: Vec<&str> = PlacementStrategy::all().iter()
             .map(PlacementStrategy::name).collect();
-        assert_eq!(names.len(), 5);
+        assert_eq!(names.len(), 6);
         names.sort_unstable();
         names.dedup();
-        assert_eq!(names.len(), 5, "duplicate strategy names");
+        assert_eq!(names.len(), 6, "duplicate strategy names");
         assert_eq!(PlacementStrategy::default(),
                    PlacementStrategy::HeadroomDecreasing);
+    }
+
+    #[test]
+    fn colocate_without_a_mask_matches_headroom_decreasing() {
+        let reg = AgentRegistry::paper();
+        for caps in [vec![1.0], vec![0.6, 0.6], vec![1.0, 0.75, 0.5]] {
+            let hd = PlacementStrategy::HeadroomDecreasing
+                .place(&reg, &caps, &[]).unwrap();
+            let co = PlacementStrategy::WorkflowColocate
+                .place(&reg, &caps, &[]).unwrap();
+            assert_eq!(co, hd, "{caps:?}");
+        }
+    }
+
+    #[test]
+    fn colocate_pulls_masked_agents_onto_one_device() {
+        // Paper mins .10/.30/.25/.35 on two 0.75 devices: headroom
+        // packing splits agents 0 and 3 across devices; with 0 and 3
+        // masked as one workflow, co-location pairs them (0.45 fits)
+        // and the loose pair lands on the other device.
+        let reg = AgentRegistry::paper();
+        let mask = [true, false, false, true];
+        let p = PlacementStrategy::WorkflowColocate
+            .place_colocated(&reg, &[0.75, 0.75], &[], &mask).unwrap();
+        assert_eq!(p.gpu_of[0], p.gpu_of[3],
+                   "workflow participants share a device: {:?}", p.gpu_of);
+        assert_eq!(p.gpu_of[1], p.gpu_of[2],
+                   "loose agents pack the other device: {:?}", p.gpu_of);
+        assert_ne!(p.gpu_of[0], p.gpu_of[1]);
+        // When the group cannot fit on one device it spills but still
+        // places everyone.
+        let tight = PlacementStrategy::WorkflowColocate
+            .place_colocated(&reg, &[0.4, 0.4, 0.4], &[],
+                             &[true, true, true, true]).unwrap();
+        assert!(tight.gpu_of.iter().all(|g| *g < 3));
+        // Non-colocating strategies ignore the mask entirely.
+        let hd_masked = PlacementStrategy::HeadroomDecreasing
+            .place_colocated(&reg, &[0.75, 0.75], &[], &mask).unwrap();
+        let hd = PlacementStrategy::HeadroomDecreasing
+            .place(&reg, &[0.75, 0.75], &[]).unwrap();
+        assert_eq!(hd_masked, hd);
     }
 
     #[test]

@@ -10,7 +10,7 @@ use crate::metrics::Streaming;
 use crate::serverless::{EconInstruments, EconomicsReport};
 use crate::sim::fault::{ClusterFaultTracker, ResilienceReport};
 use crate::sim::SimConfig;
-use crate::workload::WorkloadGenerator;
+use crate::workload::{WorkflowStats, WorkflowTracker, WorkloadGenerator};
 
 /// Inter-GPU migration cost model (the §VI "inter-GPU communication
 /// overhead"): transferring a checkpoint takes `model_mb / mb_per_s`
@@ -191,6 +191,9 @@ pub struct ClusterResult {
     /// config set a non-inert
     /// [`FaultConfig`](crate::sim::fault::FaultConfig).
     pub resilience: Option<ResilienceReport>,
+    /// End-to-end workflow latency stats, present when the run's config
+    /// carried a [`WorkflowWorkload`](crate::workload::WorkflowWorkload).
+    pub workflow: Option<WorkflowStats>,
 }
 
 impl ClusterResult {
@@ -217,56 +220,127 @@ pub struct ClusterSimulator {
     strategy: PlacementStrategy,
     rebalancer: Rebalancer,
     placement: Placement,
+    /// Workflow-participant mask (empty without a workflow), fed to the
+    /// co-location strategy at construction and on mid-run repacks.
+    colocate: Vec<bool>,
 }
 
-impl ClusterSimulator {
-    /// Build a uniform cluster (`n_gpus` devices of `capacity_per_gpu`
-    /// each) under the default headroom-decreasing placement; errors if
-    /// the agents cannot be placed. `migration` maps onto the
-    /// rebalancing layer: `None` is [`Rebalancer::Static`], `Some`
-    /// the original [`Rebalancer::HottestAgent`] heuristic.
-    pub fn new(cfg: SimConfig, registry: AgentRegistry, n_gpus: usize,
-               capacity_per_gpu: f64, migration: Option<MigrationModel>)
-               -> Result<ClusterSimulator> {
-        if n_gpus == 0 {
+/// The one construction path for [`ClusterSimulator`]: every axis —
+/// device shape, placement strategy, rebalancer — is a chainable
+/// setter, and `build()` validates the placement once. The remaining
+/// named constructors ([`ClusterSimulator::new`],
+/// [`ClusterSimulator::with_policies`]) are thin wrappers over this.
+#[derive(Debug, Clone)]
+pub struct ClusterBuilder {
+    cfg: SimConfig,
+    registry: AgentRegistry,
+    capacities: Vec<f64>,
+    strategy: PlacementStrategy,
+    rebalancer: Rebalancer,
+}
+
+impl ClusterBuilder {
+    /// A uniform device shape: `n_gpus` devices of `capacity_per_gpu`.
+    pub fn gpus(mut self, n_gpus: usize, capacity_per_gpu: f64) -> Self {
+        self.capacities = vec![capacity_per_gpu; n_gpus];
+        self
+    }
+
+    /// A heterogeneous device shape: one capacity per GPU.
+    pub fn capacities(mut self, capacities: Vec<f64>) -> Self {
+        self.capacities = capacities;
+        self
+    }
+
+    /// The construction-time [`PlacementStrategy`] (default
+    /// headroom-decreasing). Demand-aware placement reads the config's
+    /// arrival rates as the expected per-agent demand; workflow
+    /// co-location reads the config's workflow spec as the group mask.
+    pub fn placement(mut self, strategy: PlacementStrategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    /// The runtime [`Rebalancer`] (default [`Rebalancer::Static`]).
+    pub fn rebalancer(mut self, rebalancer: Rebalancer) -> Self {
+        self.rebalancer = rebalancer;
+        self
+    }
+
+    /// Validate and solve the placement. Errors when no device was
+    /// configured, some agent fits nowhere, or the config's workflow
+    /// spec names an agent outside the registry. The solved placement
+    /// is stored, so every `run()` starts from it directly instead of
+    /// re-solving the bin-packing.
+    pub fn build(self) -> Result<ClusterSimulator> {
+        let ClusterBuilder {
+            cfg, registry, capacities, strategy, rebalancer,
+        } = self;
+        if capacities.is_empty() {
             return Err(crate::error::Error::Config(
                 "cluster needs >= 1 GPU".into()));
         }
-        ClusterSimulator::heterogeneous(
-            cfg, registry, vec![capacity_per_gpu; n_gpus], migration)
+        let colocate = match &cfg.workflow {
+            Some(w) => {
+                w.spec.validate_for(registry.len())?;
+                let mut mask = vec![false; registry.len()];
+                for stage in w.spec.stages() {
+                    mask[stage.agent] = true;
+                }
+                mask
+            }
+            None => Vec::new(),
+        };
+        let placement = strategy.place_colocated(
+            &registry, &capacities, &cfg.arrival_rates, &colocate)?;
+        Ok(ClusterSimulator {
+            cfg, registry, capacities, strategy, rebalancer, placement,
+            colocate,
+        })
+    }
+}
+
+impl ClusterSimulator {
+    /// Start a [`ClusterBuilder`] — the construction path every other
+    /// constructor funnels through. Defaults: no devices (configure via
+    /// [`ClusterBuilder::gpus`] or [`ClusterBuilder::capacities`]),
+    /// headroom-decreasing placement, static rebalancer.
+    pub fn builder(cfg: SimConfig, registry: AgentRegistry)
+                   -> ClusterBuilder {
+        ClusterBuilder {
+            cfg,
+            registry,
+            capacities: Vec::new(),
+            strategy: PlacementStrategy::HeadroomDecreasing,
+            rebalancer: Rebalancer::Static,
+        }
     }
 
-    /// Build a cluster of mixed per-GPU capacities (§VI heterogeneous
-    /// devices) under the default headroom-decreasing placement: one
-    /// entry per GPU, `migration` mapped as in [`ClusterSimulator::new`].
-    pub fn heterogeneous(cfg: SimConfig, registry: AgentRegistry,
-                         capacities: Vec<f64>,
-                         migration: Option<MigrationModel>)
-                         -> Result<ClusterSimulator> {
-        let rebalancer = match migration {
-            None => Rebalancer::Static,
-            Some(m) => Rebalancer::HottestAgent(m),
-        };
-        ClusterSimulator::with_policies(
-            cfg, registry, capacities,
-            PlacementStrategy::HeadroomDecreasing, rebalancer)
+    /// Build a uniform cluster (`n_gpus` devices of `capacity_per_gpu`
+    /// each) under the default headroom-decreasing placement and an
+    /// explicit [`Rebalancer`]; errors if the agents cannot be placed.
+    pub fn new(cfg: SimConfig, registry: AgentRegistry, n_gpus: usize,
+               capacity_per_gpu: f64, rebalancer: Rebalancer)
+               -> Result<ClusterSimulator> {
+        ClusterSimulator::builder(cfg, registry)
+            .gpus(n_gpus, capacity_per_gpu)
+            .rebalancer(rebalancer)
+            .build()
     }
 
     /// Full-control constructor: an explicit [`PlacementStrategy`] ×
-    /// [`Rebalancer`] over per-GPU capacities. Demand-aware placement
-    /// reads the config's arrival rates as the expected per-agent
-    /// demand. The validated placement is stored, so every `run()`
-    /// starts from it directly instead of re-solving the bin-packing.
+    /// [`Rebalancer`] over per-GPU capacities — a thin wrapper over
+    /// [`ClusterSimulator::builder`].
     pub fn with_policies(cfg: SimConfig, registry: AgentRegistry,
                          capacities: Vec<f64>,
                          strategy: PlacementStrategy,
                          rebalancer: Rebalancer)
                          -> Result<ClusterSimulator> {
-        let placement =
-            strategy.place(&registry, &capacities, &cfg.arrival_rates)?;
-        Ok(ClusterSimulator {
-            cfg, registry, capacities, strategy, rebalancer, placement,
-        })
+        ClusterSimulator::builder(cfg, registry)
+            .capacities(capacities)
+            .placement(strategy)
+            .rebalancer(rebalancer)
+            .build()
     }
 
     /// The initial (construction-time) agent→GPU placement.
@@ -352,6 +426,12 @@ impl ClusterSimulator {
             cfg.faults.as_ref(), n_gpus, cfg.seed);
         let mut processed_sum = 0.0f64;
 
+        // Optional workflow-DAG coupling: the tracker replaces the
+        // workload generator as the arrival process (stage-coupled
+        // injection) and meters end-to-end instance latency.
+        let mut wf = cfg.workflow.as_ref().map(|w| WorkflowTracker::new(
+            w, cfg.arrival_process, cfg.seed, n));
+
         let mut step = 0u64;
         while step < cfg.steps {
             let now = step as f64 * cfg.dt;
@@ -372,7 +452,11 @@ impl ClusterSimulator {
                 && stalled_until.iter().all(|s| *s <= now)
                 && econ.idle_fixed_point()
             {
-                if let (Some(w), Some(f)) = (workload.idle_until(step),
+                let arrivals_idle = match wf.as_ref() {
+                    Some(t) => t.idle().then_some(u64::MAX),
+                    None => workload.idle_until(step),
+                };
+                if let (Some(w), Some(f)) = (arrivals_idle,
                                              fault.quiet_until(step, cfg.dt))
                 {
                     let until = w.min(f).min(cfg.steps);
@@ -390,7 +474,16 @@ impl ClusterSimulator {
                 }
             }
 
-            workload.step(step, cfg.dt, &mut rates[..], &mut counts[..]);
+            match wf.as_mut() {
+                Some(t) => {
+                    counts.fill(0.0);
+                    t.begin_step(step, cfg.dt, &mut counts[..]);
+                }
+                None => {
+                    workload.step(step, cfg.dt, &mut rates[..],
+                                  &mut counts[..]);
+                }
+            }
             for i in 0..n {
                 queues[i] += counts[i];
                 observed[i] = counts[i] / cfg.dt;
@@ -413,9 +506,10 @@ impl ClusterSimulator {
                     if needs_recovery && max_moves > 0 {
                         let eff =
                             fault.effective_caps(&self.capacities, now);
-                        if self.strategy.place_into(
+                        if self.strategy.place_into_colocated(
                             &self.registry, eff, &observed[..],
-                            placement_scratch, repack_gpu_of).is_ok()
+                            &self.colocate, placement_scratch,
+                            repack_gpu_of).is_ok()
                         {
                             let mut moves = 0usize;
                             for agent in 0..n {
@@ -490,9 +584,9 @@ impl ClusterSimulator {
                     // pays its own transfer stall. An attempt consumes
                     // the cooldown whether or not anything moved.
                     last_migration_at = now;
-                    if self.strategy.place_into(
+                    if self.strategy.place_into_colocated(
                         &self.registry, &self.capacities,
-                        &observed[..], placement_scratch,
+                        &observed[..], &self.colocate, placement_scratch,
                         repack_gpu_of).is_ok()
                     {
                         let mut moved = false;
@@ -589,6 +683,12 @@ impl ClusterSimulator {
                 let processed = queues[i].min(cap);
                 queues[i] -= processed;
                 processed_sum += processed;
+                if processed > 0.0 {
+                    if let Some(t) = wf.as_mut() {
+                        t.consume(i, processed,
+                                  (step as f64 + 1.0) * cfg.dt);
+                    }
+                }
                 let w = if rate > 0.0 {
                     (queues[i] / rate).min(cfg.latency_cap_s)
                 } else if queues[i] > 0.0 {
@@ -627,6 +727,7 @@ impl ClusterSimulator {
             cost_dollars,
             economics,
             resilience,
+            workflow: wf.map(WorkflowTracker::finish),
         })
     }
 }
@@ -638,7 +739,7 @@ mod tests {
 
     fn paper_cluster(n_gpus: usize, cap: f64) -> ClusterSimulator {
         ClusterSimulator::new(SimConfig::paper(), AgentRegistry::paper(),
-                              n_gpus, cap, None).unwrap()
+                              n_gpus, cap, Rebalancer::Static).unwrap()
     }
 
     #[test]
@@ -676,7 +777,7 @@ mod tests {
         };
         let sim = ClusterSimulator::new(
             cfg, AgentRegistry::paper(), 2, 1.0,
-            Some(MigrationModel::default())).unwrap();
+            Rebalancer::HottestAgent(MigrationModel::default())).unwrap();
         let r = sim.run().unwrap();
         assert!(r.migrations >= 1, "no migration under 90% skew");
         assert!(r.migration_stall_s > 0.0);
@@ -727,15 +828,39 @@ mod tests {
     }
 
     #[test]
-    fn migration_option_constructors_map_onto_rebalancers() {
-        let hottest = ClusterSimulator::new(
-            SimConfig::paper(), AgentRegistry::paper(), 2, 1.0,
-            Some(MigrationModel::default())).unwrap();
-        assert_eq!(hottest.rebalancer().name(), "hottest");
-        assert_eq!(hottest.strategy(),
+    fn builder_is_the_single_construction_path() {
+        // Defaults: headroom placement, static rebalancer.
+        let built = ClusterSimulator::builder(
+            SimConfig::paper(), AgentRegistry::paper())
+            .gpus(2, 1.0).build().unwrap();
+        assert_eq!(built.rebalancer().name(), "static");
+        assert_eq!(built.strategy(),
                    PlacementStrategy::HeadroomDecreasing);
-        let fixed = paper_cluster(2, 1.0);
-        assert_eq!(fixed.rebalancer().name(), "static");
+        // The named constructors are thin wrappers: same placement,
+        // same run, bit for bit.
+        let named = paper_cluster(2, 1.0);
+        assert_eq!(built.placement(), named.placement());
+        assert_eq!(built.run().unwrap(), named.run().unwrap());
+        // Every axis is a chainable setter.
+        let full = ClusterSimulator::builder(
+            SimConfig::paper(), AgentRegistry::paper())
+            .capacities(vec![1.0, 0.75])
+            .placement(PlacementStrategy::DemandAware)
+            .rebalancer(Rebalancer::HottestAgent(
+                MigrationModel::default()))
+            .build().unwrap();
+        assert_eq!(full.rebalancer().name(), "hottest");
+        assert_eq!(full.strategy(), PlacementStrategy::DemandAware);
+        assert_eq!(full.capacities(), &[1.0, 0.75]);
+        let twin = ClusterSimulator::with_policies(
+            SimConfig::paper(), AgentRegistry::paper(),
+            vec![1.0, 0.75], PlacementStrategy::DemandAware,
+            Rebalancer::HottestAgent(MigrationModel::default()))
+            .unwrap();
+        assert_eq!(full.run().unwrap(), twin.run().unwrap());
+        // No devices configured is a construction error.
+        assert!(ClusterSimulator::builder(
+            SimConfig::paper(), AgentRegistry::paper()).build().is_err());
     }
 
     #[test]
@@ -781,7 +906,7 @@ mod tests {
         };
         let migrating = ClusterSimulator::new(
             skew_cfg, AgentRegistry::paper(), 2, 1.0,
-            Some(MigrationModel::default())).unwrap();
+            Rebalancer::HottestAgent(MigrationModel::default())).unwrap();
         for _ in 0..2 {
             for (gpus, cap) in [(1usize, 1.0), (2, 0.6), (4, 1.0)] {
                 let sim = paper_cluster(gpus, cap);
@@ -827,13 +952,13 @@ mod tests {
         // cluster's total bill — it only adds the per-agent breakdown.
         let mut cfg = SimConfig::paper();
         let plain = ClusterSimulator::new(
-            cfg.clone(), AgentRegistry::paper(), 2, 1.0, None)
-            .unwrap().run().unwrap();
+            cfg.clone(), AgentRegistry::paper(), 2, 1.0,
+            Rebalancer::Static).unwrap().run().unwrap();
         cfg.economics =
             Some(crate::serverless::EconomicsModel::paper_all_warm());
         let econ_run = ClusterSimulator::new(
-            cfg, AgentRegistry::paper(), 2, 1.0, None)
-            .unwrap().run().unwrap();
+            cfg, AgentRegistry::paper(), 2, 1.0,
+            Rebalancer::Static).unwrap().run().unwrap();
         assert!((econ_run.cost_dollars - plain.cost_dollars).abs() < 1e-12);
         let econ = econ_run.economics.as_ref().expect("economics enabled");
         assert!((econ.total_cost() - econ_run.cost_dollars).abs() < 1e-12);
@@ -855,13 +980,13 @@ mod tests {
         cfg.economics =
             Some(crate::serverless::EconomicsModel::paper_all_warm());
         let warm = ClusterSimulator::new(
-            cfg.clone(), AgentRegistry::paper(), 2, 1.0, None)
-            .unwrap().run().unwrap();
+            cfg.clone(), AgentRegistry::paper(), 2, 1.0,
+            Rebalancer::Static).unwrap().run().unwrap();
         cfg.economics = Some(
             crate::serverless::EconomicsModel::with_idle_timeout(5.0));
         let s2z = ClusterSimulator::new(
-            cfg, AgentRegistry::paper(), 2, 1.0, None)
-            .unwrap().run().unwrap();
+            cfg, AgentRegistry::paper(), 2, 1.0,
+            Rebalancer::Static).unwrap().run().unwrap();
 
         assert!(s2z.cost_dollars < warm.cost_dollars,
                 "s2z {} vs warm {}", s2z.cost_dollars, warm.cost_dollars);
@@ -884,7 +1009,8 @@ mod tests {
         cfg.economics = Some(
             crate::serverless::EconomicsModel::with_idle_timeout(5.0));
         let sim = ClusterSimulator::new(
-            cfg, AgentRegistry::paper(), 2, 1.0, None).unwrap();
+            cfg, AgentRegistry::paper(), 2, 1.0,
+            Rebalancer::Static).unwrap();
         for _ in 0..2 {
             let reused = sim.run_with_arena(&mut arena).unwrap();
             let fresh = sim.run().unwrap();
@@ -1120,7 +1246,8 @@ mod tests {
         let mut cfg = SimConfig::paper();
         cfg.arrival_rates = vec![0.0; 4];
         let sim = ClusterSimulator::new(
-            cfg, AgentRegistry::paper(), 2, 1.0, None).unwrap();
+            cfg, AgentRegistry::paper(), 2, 1.0,
+            Rebalancer::Static).unwrap();
         let skip = sim.run().unwrap();
         assert_eq!(skip, sim.run_dense().unwrap());
         assert_eq!(skip.cost_dollars, 0.0);
@@ -1135,7 +1262,8 @@ mod tests {
         cfg.economics = Some(
             crate::serverless::EconomicsModel::with_idle_timeout(3.0));
         let sim = ClusterSimulator::new(
-            cfg, AgentRegistry::paper(), 2, 1.0, None).unwrap();
+            cfg, AgentRegistry::paper(), 2, 1.0,
+            Rebalancer::Static).unwrap();
         let skip = sim.run().unwrap();
         assert_eq!(skip, sim.run_dense().unwrap());
         assert!(skip.economics.is_some());
@@ -1162,14 +1290,14 @@ mod tests {
     #[test]
     fn infeasible_cluster_is_rejected_at_construction() {
         assert!(ClusterSimulator::new(
-            SimConfig::paper(), AgentRegistry::paper(), 2, 0.3, None)
-                .is_err());
+            SimConfig::paper(), AgentRegistry::paper(), 2, 0.3,
+            Rebalancer::Static).is_err());
         assert!(ClusterSimulator::new(
-            SimConfig::paper(), AgentRegistry::paper(), 0, 1.0, None)
-                .is_err());
-        assert!(ClusterSimulator::heterogeneous(
-            SimConfig::paper(), AgentRegistry::paper(), vec![0.5, 0.3],
-            None).is_err());
+            SimConfig::paper(), AgentRegistry::paper(), 0, 1.0,
+            Rebalancer::Static).is_err());
+        assert!(ClusterSimulator::builder(
+            SimConfig::paper(), AgentRegistry::paper())
+                .capacities(vec![0.5, 0.3]).build().is_err());
         assert!(ClusterSimulator::with_policies(
             SimConfig::paper(), AgentRegistry::paper(), vec![0.5, 0.3],
             PlacementStrategy::BestFitDecreasing, Rebalancer::Static)
@@ -1181,9 +1309,9 @@ mod tests {
         // A tight 0.6 + 0.4 mix: placement respects each device's own
         // cap, the run serves everyone, and a wider 1.0 + 0.5 mix beats
         // the single-GPU deployment on throughput.
-        let sim = ClusterSimulator::heterogeneous(
-            SimConfig::paper(), AgentRegistry::paper(), vec![0.6, 0.4],
-            None).unwrap();
+        let sim = ClusterSimulator::builder(
+            SimConfig::paper(), AgentRegistry::paper())
+            .capacities(vec![0.6, 0.4]).build().unwrap();
         assert_eq!(sim.capacities(), &[0.6, 0.4]);
         let expected = crate::cluster::pack_decreasing(
             &AgentRegistry::paper(), &[0.6, 0.4]).unwrap();
@@ -1193,20 +1321,70 @@ mod tests {
         assert!(r.agent_throughputs.iter().all(|t| *t > 0.0), "{r:?}");
 
         let one = paper_cluster(1, 1.0).run().unwrap();
-        let wide = ClusterSimulator::heterogeneous(
-            SimConfig::paper(), AgentRegistry::paper(), vec![1.0, 0.5],
-            None).unwrap().run().unwrap();
+        let wide = ClusterSimulator::builder(
+            SimConfig::paper(), AgentRegistry::paper())
+            .capacities(vec![1.0, 0.5]).build().unwrap().run().unwrap();
         assert!(wide.total_throughput() > one.total_throughput(),
                 "wide {} vs one {}", wide.total_throughput(),
                 one.total_throughput());
     }
 
     #[test]
-    fn uniform_heterogeneous_constructor_matches_new() {
+    fn uniform_builder_capacities_match_new() {
         let a = paper_cluster(2, 1.0).run().unwrap();
-        let b = ClusterSimulator::heterogeneous(
-            SimConfig::paper(), AgentRegistry::paper(), vec![1.0, 1.0],
-            None).unwrap().run().unwrap();
+        let b = ClusterSimulator::builder(
+            SimConfig::paper(), AgentRegistry::paper())
+            .capacities(vec![1.0, 1.0]).build().unwrap().run().unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn workflow_cluster_surfaces_stats_and_stays_bit_exact() {
+        use crate::workload::WorkflowWorkload;
+        let mut cfg = SimConfig::paper();
+        cfg.workflow = Some(WorkflowWorkload::paper());
+        let sim = ClusterSimulator::builder(cfg, AgentRegistry::paper())
+            .gpus(2, 1.0)
+            .placement(PlacementStrategy::WorkflowColocate)
+            .build().unwrap();
+        let r = sim.run().unwrap();
+        let wf = r.workflow.as_ref().expect("workflow configured");
+        assert!(wf.started > 0);
+        assert!(wf.completed > 0);
+        assert!(wf.mean_s() > 0.0);
+        // Skip-idle twin is bit-identical (ClusterResult PartialEq).
+        assert_eq!(r, sim.run_dense().unwrap());
+        // Plain clusters report no workflow stats.
+        assert!(paper_cluster(2, 1.0).run().unwrap().workflow.is_none());
+    }
+
+    #[test]
+    fn colocate_builder_masks_workflow_participants() {
+        use crate::workload::{WorkflowSpec, WorkflowWorkload};
+        // An nlp -> reasoning chain on two 0.75 devices: headroom
+        // packing splits the pair (0.35 anchors device 0, 0.30 takes
+        // the emptier device 1); co-location hosts both on one device.
+        let spec = WorkflowSpec::chain("pair", &[1, 3]);
+        let mut cfg = SimConfig::paper();
+        cfg.workflow = Some(WorkflowWorkload::new(spec, 0.5));
+        let hd = ClusterSimulator::builder(
+            cfg.clone(), AgentRegistry::paper())
+            .capacities(vec![0.75, 0.75])
+            .build().unwrap();
+        assert_ne!(hd.placement().gpu_of[1], hd.placement().gpu_of[3],
+                   "headroom splits the pair: {:?}", hd.placement().gpu_of);
+        let co = ClusterSimulator::builder(
+            cfg.clone(), AgentRegistry::paper())
+            .capacities(vec![0.75, 0.75])
+            .placement(PlacementStrategy::WorkflowColocate)
+            .build().unwrap();
+        assert_eq!(co.placement().gpu_of[1], co.placement().gpu_of[3],
+                   "chain agents co-hosted: {:?}", co.placement().gpu_of);
+        // A spec naming an agent outside the registry is a
+        // construction error, not a mid-run panic.
+        let wide = WorkflowSpec::chain("wide", &[0, 9]);
+        cfg.workflow = Some(WorkflowWorkload::new(wide, 0.5));
+        assert!(ClusterSimulator::builder(cfg, AgentRegistry::paper())
+                .gpus(2, 1.0).build().is_err());
     }
 }

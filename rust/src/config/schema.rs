@@ -284,6 +284,7 @@ impl DeploymentConfig {
             record_timelines: false,
             economics: None,
             faults: None,
+            workflow: None,
         })
     }
 }

@@ -13,6 +13,13 @@
 //! Rapid agent interaction is exactly why the paper's round-robin baseline
 //! collapses: each hop waits for its agent's turn. The serving bench
 //! measures this end-to-end.
+//!
+//! Each [`TaskKind`] is defined by a
+//! [`WorkflowSpec`](crate::workload::WorkflowSpec) — the same DAG type
+//! the simulation engines sweep via `repro::workflow_grid` — and
+//! [`ReasoningPipeline::run_spec`] walks any such spec level by level
+//! against a live server, so the threaded path and the virtual-time
+//! engines execute one workflow definition.
 
 mod workflow;
 

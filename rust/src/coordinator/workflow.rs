@@ -1,4 +1,8 @@
-//! The coordinator → specialists → coordinator workflow.
+//! The coordinator → specialists → coordinator workflow: the threaded
+//! server's live execution of the same [`WorkflowSpec`] DAGs the
+//! simulation engines sweep — [`ReasoningPipeline::run`] is a thin
+//! shell that maps a [`TaskKind`] to its spec and walks the DAG level
+//! by level against a running [`AgentServer`].
 
 use std::sync::mpsc::Receiver;
 use std::time::{Duration, Instant};
@@ -6,6 +10,26 @@ use std::time::{Duration, Instant};
 use crate::error::{Error, Result};
 use crate::server::{AgentServer, CompletedRequest};
 use crate::util::Rng;
+use crate::workload::WorkflowSpec;
+
+/// Registry-index → agent-name mapping for the paper deployment, in
+/// Table I order (workflow specs address agents by index; the server
+/// addresses them by name).
+const PAPER_AGENT_NAMES: [&str; 4] =
+    ["coordinator", "nlp", "vision", "reasoning"];
+
+/// Per-level prompt-seed salts, preserved from the original hard-coded
+/// pipeline: the plan level uses the task seed unsalted, the specialist
+/// level salts with `0x5eed`, the aggregation level with `0xa99`.
+/// Deeper chains keep drawing distinct deterministic salts.
+fn level_salt(level: usize) -> u64 {
+    match level {
+        0 => 0,
+        1 => 0x5eed,
+        2 => 0xa99,
+        l => 0xa99 ^ ((l as u64) << 16),
+    }
+}
 
 /// What kind of collaborative task a request is.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -39,6 +63,20 @@ impl TaskKind {
             4..=6 => TaskKind::Vision,
             7..=8 => TaskKind::Reasoning,
             _ => TaskKind::MultiDomain,
+        }
+    }
+
+    /// The workflow DAG this task kind executes: a plan → fan-out →
+    /// aggregate spec over the paper deployment's agent indices — the
+    /// same [`WorkflowSpec`] shape the simulation engines sweep, so the
+    /// threaded server and the virtual-time engines run one definition.
+    pub fn spec(self) -> WorkflowSpec {
+        match self {
+            TaskKind::Nlp => WorkflowSpec::fan_out("nlp", 0, &[1]),
+            TaskKind::Vision => WorkflowSpec::fan_out("vision", 0, &[2]),
+            TaskKind::Reasoning =>
+                WorkflowSpec::fan_out("reasoning", 0, &[3]),
+            TaskKind::MultiDomain => WorkflowSpec::paper(),
         }
     }
 }
@@ -116,59 +154,66 @@ impl ReasoningPipeline {
         tokens
     }
 
-    /// Execute one collaborative task: coordinator plan → specialist
-    /// fan-out → coordinator aggregation.
+    /// Execute one collaborative task — coordinator plan → specialist
+    /// fan-out → coordinator aggregation — by walking the kind's
+    /// [`WorkflowSpec`] against the server.
     pub fn run(&self, server: &AgentServer, kind: TaskKind, seed: u64)
                -> Result<WorkflowResult> {
         let start = Instant::now();
-        let mut stages = Vec::with_capacity(kind.specialists().len() + 2);
-
-        // Stage 1: the coordinator plans.
-        let coord_vocab = self.vocab_of("coordinator")?;
-        let plan_prompt = self.prompt(coord_vocab, seed, &[]);
-        let plan = server.submit_blocking("coordinator", plan_prompt)?;
-        let plan_token = plan.next_token;
-        stages.push(StageResult {
-            agent: plan.agent,
-            next_token: plan_token,
-            latency: plan.latency,
-            batch_size: plan.batch_size,
-        });
-
-        // Stage 2: specialists solve. Fan out concurrently: submit all,
-        // then collect (the server's governor interleaves them under the
-        // allocator's shares).
-        let mut pending = Vec::new();
-        for name in kind.specialists() {
-            let vocab = self.vocab_of(name)?;
-            let prompt = self.prompt(vocab, seed ^ 0x5eed, &[plan_token]);
-            pending.push((name, server.submit(name, prompt)?));
-        }
-        let mut specialist_tokens = Vec::with_capacity(pending.len());
-        for (name, rx) in pending {
-            let done = collect_stage(name, &rx)?;
-            specialist_tokens.push(done.next_token);
-            stages.push(StageResult {
-                agent: done.agent,
-                next_token: done.next_token,
-                latency: done.latency,
-                batch_size: done.batch_size,
-            });
-        }
-
-        // Stage 3: the coordinator aggregates specialist answers.
-        let mut upstream = vec![plan_token];
-        upstream.extend(&specialist_tokens);
-        let agg_prompt = self.prompt(coord_vocab, seed ^ 0xa99, &upstream);
-        let agg = server.submit_blocking("coordinator", agg_prompt)?;
-        stages.push(StageResult {
-            agent: agg.agent,
-            next_token: agg.next_token,
-            latency: agg.latency,
-            batch_size: agg.batch_size,
-        });
-
+        let stages = self.run_spec(server, &kind.spec(), seed)?;
         Ok(WorkflowResult { kind, stages, total: start.elapsed() })
+    }
+
+    /// Execute an arbitrary [`WorkflowSpec`] level by level: stages in
+    /// the same dependency level fan out concurrently (submit all, then
+    /// collect in stage order — the server's governor interleaves them
+    /// under the allocator's shares); each level's prompts splice every
+    /// completed stage's answer token into the tail, salted per level.
+    /// Stage agent indices resolve through the paper deployment's
+    /// Table I names.
+    pub fn run_spec(&self, server: &AgentServer, spec: &WorkflowSpec,
+                    seed: u64) -> Result<Vec<StageResult>> {
+        let stages = spec.stages();
+        // Dependency level per stage (specs are topologically ordered,
+        // so every dep's level is computed before its dependents').
+        let mut level = vec![0usize; stages.len()];
+        for i in 0..stages.len() {
+            level[i] = stages[i].deps.iter().map(|&d| level[d] + 1)
+                .max().unwrap_or(0);
+        }
+        let n_levels = level.iter().max().map_or(0, |l| l + 1);
+
+        let mut results = Vec::with_capacity(stages.len());
+        let mut upstream: Vec<i32> = Vec::new();
+        for lv in 0..n_levels {
+            let salt = level_salt(lv);
+            let mut pending = Vec::new();
+            for (i, st) in stages.iter().enumerate() {
+                if level[i] != lv {
+                    continue;
+                }
+                let name = PAPER_AGENT_NAMES.get(st.agent).copied()
+                    .ok_or_else(|| Error::Serving(format!(
+                        "workflow spec '{}' stage agent {} is outside \
+                         the paper deployment", spec.name(), st.agent)))?;
+                let vocab = self.vocab_of(name)?;
+                let prompt = self.prompt(vocab, seed ^ salt, &upstream);
+                pending.push((name, server.submit(name, prompt)?));
+            }
+            let mut completed = Vec::with_capacity(pending.len());
+            for (name, rx) in pending {
+                let done = collect_stage(name, &rx)?;
+                completed.push(done.next_token);
+                results.push(StageResult {
+                    agent: done.agent,
+                    next_token: done.next_token,
+                    latency: done.latency,
+                    batch_size: done.batch_size,
+                });
+            }
+            upstream.extend(completed);
+        }
+        Ok(results)
     }
 }
 
@@ -206,6 +251,35 @@ mod tests {
                      TaskKind::MultiDomain] {
             assert!(kinds.contains(&kind), "{kind:?} never sampled");
         }
+    }
+
+    #[test]
+    fn task_kind_specs_mirror_their_specialist_tables() {
+        for kind in [TaskKind::Nlp, TaskKind::Vision, TaskKind::Reasoning,
+                     TaskKind::MultiDomain] {
+            let spec = kind.spec();
+            let stages = spec.stages();
+            // Coordinator-bracketed: plan + specialists + aggregate.
+            assert_eq!(stages.len(), kind.specialists().len() + 2);
+            assert_eq!(stages[0].agent, 0);
+            assert_eq!(stages.last().unwrap().agent, 0);
+            let mids: Vec<&str> = stages[1..stages.len() - 1].iter()
+                .map(|st| PAPER_AGENT_NAMES[st.agent]).collect();
+            assert_eq!(mids, kind.specialists(), "{kind:?}");
+            spec.validate_for(PAPER_AGENT_NAMES.len())
+                .expect("paper specs fit the deployment");
+        }
+    }
+
+    #[test]
+    fn level_salts_preserve_the_original_pipeline_seeds() {
+        // The hard-coded pipeline salted plan/specialist/aggregate
+        // prompts with exactly these values; the spec walker must keep
+        // producing identical prompts for identical task seeds.
+        assert_eq!(level_salt(0), 0);
+        assert_eq!(level_salt(1), 0x5eed);
+        assert_eq!(level_salt(2), 0xa99);
+        assert_ne!(level_salt(3), level_salt(4));
     }
 
     #[test]

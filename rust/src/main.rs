@@ -7,7 +7,9 @@
 //!                                               (incl. --exp serving: the
 //!                                               queue-granularity contrast;
 //!                                               --exp placement: strategy x
-//!                                               rebalancer comparison)
+//!                                               rebalancer comparison;
+//!                                               --exp workflow: DAG
+//!                                               end-to-end latency)
 //! agentsrv serve    [--artifacts DIR] [--policy p] [--requests N]
 //!                   [--workflows N]             end-to-end PJRT serving
 //! agentsrv verify   [--artifacts DIR]           golden-vector check
@@ -82,7 +84,7 @@ USAGE:
   agentsrv repro    [--out DIR] [--exp table1|table2|fig2a|fig2b|fig2c|
                                        fig2d|overload|spike|dominance|
                                        scaling|economics|serving|
-                                       placement|faults|all]
+                                       placement|faults|workflow|all]
   agentsrv serve    [--artifacts DIR] [--policy NAME] [--requests N]
                     [--workflows N] [--seed N]
   agentsrv verify   [--artifacts DIR]
@@ -91,7 +93,7 @@ USAGE:
                     [--tolerance FRACTION=0.25] [--bootstrap]
 
 POLICIES: adaptive (paper Alg. 1) | static_equal | round_robin |
-          predictive | feedback";
+          predictive | feedback | critical_path";
 
 /// Parsed `--key value` / `--flag` options.
 struct Opts {
@@ -320,6 +322,22 @@ fn cmd_repro(opts: &Opts) -> Result<()> {
                       recovers under the move throttle where static \
                       forfeits the outage; serving/* rows shed under \
                       bounded queues)");
+        }
+        "workflow" => {
+            println!("{:<14} {:>8} {:>10} {:>10} {:>10}",
+                     "policy", "started", "completed", "mean(s)",
+                     "p99(s)");
+            for r in repro::workflow_experiment(100) {
+                println!("{:<14} {:>8} {:>10} {:>10.1} {:>10.1}",
+                         r.policy, r.started, r.completed, r.mean_s,
+                         r.p99_s);
+            }
+            println!("\n(end-to-end workflow latency: release of the \
+                      plan stage to completion of the aggregate stage \
+                      over the paper fan-out DAG — the critical-path \
+                      policy front-loads the stages the DAG serializes \
+                      on, where round_robin stalls every level until \
+                      its agent's turn)");
         }
         other => return Err(Error::Config(format!(
             "unknown experiment '{other}'"))),

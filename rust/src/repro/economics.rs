@@ -21,7 +21,7 @@ use crate::agents::AgentRegistry;
 use crate::allocator::PolicyKind;
 use crate::serverless::{ColdStartModel, EconomicsModel, GpuPricing};
 use crate::sim::batch::{default_workers, run_sweep, CostScenario,
-                        SweepCell};
+                        ScenarioBuilder, SweepCell};
 use crate::sim::SimConfig;
 use crate::workload::WorkloadKind;
 
@@ -116,12 +116,16 @@ pub fn cost_grid(steps: u64, seeds: &[u64]) -> Vec<SweepCell> {
                             cold_start: cold_start.clone(),
                             idle_timeout_s,
                         };
-                        cells.push(SweepCell::Cost(CostScenario::new(
+                        cells.push(ScenarioBuilder::new(
                             format!("cost/{}/{p_name}/{t_name}/{c_name}\
                                      /seed{seed}", policy.name()),
                             idle_burst_config(steps, seed),
-                            AgentRegistry::paper(), economics,
-                            policy.clone())));
+                            AgentRegistry::paper())
+                            .policy(policy.clone())
+                            .economics(economics)
+                            .build()
+                            .expect("cost cells carry no conflicting \
+                                     axes"));
                     }
                 }
             }

@@ -21,7 +21,8 @@ use crate::agents::AgentRegistry;
 use crate::allocator::PolicyKind;
 use crate::cluster::{MigrationModel, PlacementStrategy, Rebalancer};
 use crate::serverless::ColdStartModel;
-use crate::sim::batch::{run_sweep, FaultScenario, SweepCell};
+use crate::sim::batch::{run_sweep, FaultScenario, ScenarioBuilder,
+                        SweepCell};
 use crate::sim::fault::{AdmissionControl, FaultConfig, FaultEvent,
                         FaultModel, FaultPlan, ServingFaults, ShedPolicy};
 use crate::sim::SimConfig;
@@ -71,11 +72,14 @@ pub fn fault_grid(steps: u64, seeds: &[u64]) -> Vec<SweepCell> {
                 cfg.seed = seed;
                 let plan =
                     FaultModel::spot(rate, seed).generate(1, horizon);
-                cells.push(SweepCell::Fault(FaultScenario::single(
+                cells.push(ScenarioBuilder::new(
                     format!("fault/single/{}/{rate_name}/seed{seed}",
                             policy.name()),
-                    cfg, AgentRegistry::paper(), policy.clone(),
-                    FaultConfig::new(plan))));
+                    cfg, AgentRegistry::paper())
+                    .policy(policy.clone())
+                    .faults(FaultConfig::new(plan))
+                    .build()
+                    .expect("fault cells carry no conflicting axes"));
             }
         }
     }
@@ -88,17 +92,19 @@ pub fn fault_grid(steps: u64, seeds: &[u64]) -> Vec<SweepCell> {
                 cfg.seed = seed;
                 let plan =
                     FaultModel::spot(rate, seed).generate(2, horizon);
-                if let Ok(cell) = FaultScenario::cluster(
+                if let Ok(cell) = ScenarioBuilder::new(
                     format!("fault/cluster/{}/{rate_name}/seed{seed}",
                             rebalancer.name()),
-                    cfg, AgentRegistry::paper(), vec![1.2, 1.2],
-                    PlacementStrategy::HeadroomDecreasing,
-                    rebalancer.clone(),
-                    FaultConfig::new(plan)
+                    cfg, AgentRegistry::paper())
+                    .capacities(vec![1.2, 1.2])
+                    .placement(PlacementStrategy::HeadroomDecreasing)
+                    .rebalancer(rebalancer.clone())
+                    .faults(FaultConfig::new(plan)
                         .with_repack_throttle(0.5)
                         .with_rewarm(ColdStartModel::default_platform()))
+                    .build()
                 {
-                    cells.push(SweepCell::Fault(cell));
+                    cells.push(cell);
                 }
             }
         }
@@ -113,12 +119,17 @@ pub fn fault_grid(steps: u64, seeds: &[u64]) -> Vec<SweepCell> {
                 let plan = FaultPlan::new(vec![FaultEvent::GpuEviction {
                     t: 0.1, gpu: 0, duration: 0.02,
                 }]);
-                cells.push(SweepCell::Fault(FaultScenario::serving(
+                cells.push(ScenarioBuilder::new(
                     format!("fault/serving/{}/{}/seed{seed}",
                             policy.name(), shed.name()),
-                    cfg, AgentRegistry::paper(), policy.clone(),
-                    ServingFaults::new(plan).with_admission(
-                        AdmissionControl::new(64, shed)))));
+                    SimConfig::paper(), AgentRegistry::paper())
+                    .policy(policy.clone())
+                    .serving(cfg)
+                    .serving_faults(ServingFaults::new(plan)
+                        .with_admission(AdmissionControl::new(64, shed)))
+                    .build()
+                    .expect("serving fault cells carry no conflicting \
+                             axes"));
             }
         }
     }

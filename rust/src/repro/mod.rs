@@ -11,6 +11,7 @@ mod faults;
 mod placement;
 mod robustness;
 mod serving;
+mod workflow;
 
 pub use economics::{coldstart_axis, cost_grid, economics_experiment,
                     idle_burst_config, idle_timeout_axis, pricing_axis,
@@ -31,6 +32,7 @@ pub use robustness::{cluster_grid, dominance_experiment,
                      SpikeReport};
 pub use serving::{serving_experiment, serving_grid,
                   ServingComparisonRow};
+pub use workflow::{workflow_experiment, workflow_grid, WorkflowRow};
 
 use std::path::Path;
 
@@ -43,7 +45,7 @@ use crate::metrics::export;
 /// `fig2b_throughput.csv`, `fig2c_allocation.csv`, `fig2d_cost_perf.csv`,
 /// `robustness_overload.csv`, `robustness_spike.csv`,
 /// `robustness_dominance.csv`, `allocator_scaling.csv`, `economics.csv`,
-/// `serving.csv`, `faults.csv`, `placement.csv`.
+/// `serving.csv`, `faults.csv`, `placement.csv`, `workflow.csv`.
 pub fn write_all(dir: &Path) -> Result<()> {
     std::fs::create_dir_all(dir)?;
 
@@ -205,6 +207,18 @@ pub fn write_all(dir: &Path) -> Result<()> {
         ])).collect::<Vec<_>>(),
     )?;
 
+    // Workflow-DAG head-to-head: end-to-end workflow latency per policy
+    // (CriticalPath weighted for the paper fan-out).
+    let wf = workflow_experiment(100);
+    export::table_csv(
+        &dir.join("workflow.csv"),
+        &["policy", "started", "completed", "mean_latency_s",
+          "p99_latency_s"],
+        &wf.iter().map(|r| (r.policy.clone(), vec![
+            r.started as f64, r.completed as f64, r.mean_s, r.p99_s,
+        ])).collect::<Vec<_>>(),
+    )?;
+
     Ok(())
 }
 
@@ -221,7 +235,8 @@ mod tests {
                   "fig2d_cost_perf.csv", "robustness_overload.csv",
                   "robustness_spike.csv", "robustness_dominance.csv",
                   "allocator_scaling.csv", "economics.csv",
-                  "serving.csv", "faults.csv", "placement.csv"] {
+                  "serving.csv", "faults.csv", "placement.csv",
+                  "workflow.csv"] {
             let p = dir.path().join(f);
             assert!(p.exists(), "{f} missing");
             assert!(std::fs::metadata(&p).unwrap().len() > 0, "{f} empty");

@@ -6,9 +6,9 @@ use std::time::Instant;
 use crate::agents::{AgentProfile, AgentRegistry, Priority};
 use crate::allocator::{AdaptivePolicy, AllocContext, AllocationPolicy,
                        PolicyKind};
-use crate::cluster::MigrationModel;
-use crate::sim::batch::{run_batch, ClusterScenario, Scenario, SweepCell,
-                        TraceScenario};
+use crate::cluster::{MigrationModel, PlacementStrategy, Rebalancer};
+use crate::sim::batch::{run_batch, ClusterScenario, Scenario,
+                        ScenarioBuilder, SweepCell};
 use crate::sim::{SimConfig, Simulator};
 use crate::workload::trace::Trace;
 use crate::workload::{ArrivalProcess, WorkloadKind};
@@ -238,31 +238,35 @@ pub fn cluster_grid(steps: u64) -> Vec<SweepCell> {
             "cluster/hetero/{}",
             caps.iter().map(|c| format!("{c}"))
                 .collect::<Vec<_>>().join("+"));
-        if let Ok(cell) = ClusterScenario::heterogeneous(
-            label, cfg, AgentRegistry::paper(), caps, None)
+        if let Ok(cell) = ClusterScenario::with_policies(
+            label, cfg, AgentRegistry::paper(), caps,
+            PlacementStrategy::HeadroomDecreasing, Rebalancer::Static)
         {
             cells.push(SweepCell::Cluster(cell));
         }
     }
     for n_gpus in [1usize, 2, 4] {
         for capacity in [0.6, 1.0] {
-            for (mig_name, migration) in [
-                ("nomig", None),
-                ("mig", Some(MigrationModel::default())),
+            for (mig_name, rebalancer) in [
+                ("nomig", Rebalancer::Static),
+                ("mig",
+                 Rebalancer::HottestAgent(MigrationModel::default())),
             ] {
                 let mut cfg = SimConfig::paper();
                 cfg.steps = steps;
                 if let Ok(cell) = ClusterScenario::new(
                     format!("cluster/{n_gpus}gpu/cap{capacity}/{mig_name}"),
                     cfg.clone(), AgentRegistry::paper(), n_gpus, capacity,
-                    migration.clone())
+                    rebalancer.clone())
                 {
                     cells.push(SweepCell::Cluster(cell));
                 }
                 // The skew variant exists to make the migration path
                 // fire, which needs somewhere to migrate *to* — a
                 // single-GPU cell can never rebalance.
-                if migration.is_some() && n_gpus >= 2 {
+                if !matches!(rebalancer, Rebalancer::Static)
+                    && n_gpus >= 2
+                {
                     let mut skew = cfg;
                     skew.workload_kind = WorkloadKind::Dominance {
                         agent: 0, share: 0.9,
@@ -271,7 +275,7 @@ pub fn cluster_grid(steps: u64) -> Vec<SweepCell> {
                         format!("cluster/{n_gpus}gpu/cap{capacity}/\
                                  {mig_name}/skew"),
                         skew, AgentRegistry::paper(), n_gpus, capacity,
-                        migration)
+                        rebalancer)
                     {
                         cells.push(SweepCell::Cluster(cell));
                     }
@@ -300,10 +304,13 @@ pub fn trace_grid(steps: u64, seeds: &[u64]) -> Vec<SweepCell> {
         // One recording per seed, shared (not copied) across policies.
         let trace = Arc::new(Trace::paper_poisson(steps, seed));
         for policy in PolicyKind::all() {
-            cells.push(SweepCell::Trace(TraceScenario::new(
+            cells.push(ScenarioBuilder::new(
                 format!("{}/trace/seed{seed}", policy.name()),
-                SimConfig::paper(), AgentRegistry::paper(),
-                Arc::clone(&trace), policy)));
+                SimConfig::paper(), AgentRegistry::paper())
+                .policy(policy)
+                .trace(Arc::clone(&trace))
+                .build()
+                .expect("trace cells carry no conflicting axes"));
         }
     }
     cells
@@ -314,9 +321,11 @@ pub fn trace_grid(steps: u64, seeds: &[u64]) -> Vec<SweepCell> {
 /// cluster grid, the trace-replay cells, the serverless-economics cost
 /// grid ([`crate::repro::cost_grid`]), the serving-layer queue-path
 /// grid ([`crate::repro::serving_grid`], 10 virtual seconds per cell),
-/// and the fault-injection grid ([`crate::repro::fault_grid`] —
+/// the fault-injection grid ([`crate::repro::fault_grid`] —
 /// eviction rate × recovery policy × shed policy × allocator × seed),
-/// mixed for one `run_sweep` call through one worker pool.
+/// and the workflow-DAG grid ([`crate::repro::workflow_grid`] — spec
+/// shape × policy × placement × seed), mixed for one `run_sweep` call
+/// through one worker pool.
 pub fn stress_sweep(steps: u64, seeds: &[u64]) -> Vec<SweepCell> {
     let mut cells: Vec<SweepCell> = stress_grid(steps, seeds)
         .into_iter().map(SweepCell::Single).collect();
@@ -325,6 +334,7 @@ pub fn stress_sweep(steps: u64, seeds: &[u64]) -> Vec<SweepCell> {
     cells.extend(crate::repro::cost_grid(steps, seeds));
     cells.extend(crate::repro::serving_grid(10.0, seeds));
     cells.extend(crate::repro::fault_grid(steps, seeds));
+    cells.extend(crate::repro::workflow_grid(steps, seeds));
     cells
 }
 
@@ -523,7 +533,7 @@ mod tests {
     }
 
     #[test]
-    fn stress_sweep_mixes_all_six_cell_kinds() {
+    fn stress_sweep_mixes_every_cell_kind() {
         let seeds = [1u64, 2];
         let cells = stress_sweep(10, &seeds);
         let singles = cells.iter()
@@ -538,6 +548,8 @@ mod tests {
             .filter(|c| matches!(c, SweepCell::Serving(_))).count();
         let faults = cells.iter()
             .filter(|c| matches!(c, SweepCell::Fault(_))).count();
+        let workflows = cells.iter()
+            .filter(|c| matches!(c, SweepCell::Workflow(_))).count();
         assert_eq!(singles, stress_grid(10, &seeds).len());
         assert_eq!(clusters, cluster_grid(10).len());
         assert_eq!(traces,
@@ -546,11 +558,13 @@ mod tests {
         assert_eq!(servings,
                    crate::repro::serving_grid(10.0, &seeds).len());
         assert_eq!(faults, crate::repro::fault_grid(10, &seeds).len());
+        assert_eq!(workflows,
+                   crate::repro::workflow_grid(10, &seeds).len());
         assert_eq!(cells.len(),
                    singles + clusters + traces + costs + servings
-                       + faults);
+                       + faults + workflows);
         assert!(singles > 0 && clusters > 0 && traces > 0 && costs > 0
-                && servings > 0 && faults > 0);
+                && servings > 0 && faults > 0 && workflows > 0);
     }
 
     #[test]

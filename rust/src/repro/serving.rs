@@ -20,7 +20,7 @@ use crate::agents::AgentRegistry;
 use crate::allocator::PolicyKind;
 use crate::server::ServingConfig;
 use crate::sim::batch::{default_workers, run_sweep, Scenario,
-                        ServingScenario, SweepCell};
+                        ScenarioBuilder, ServingScenario, SweepCell};
 use crate::sim::SimConfig;
 use crate::workload::trace::Trace;
 use crate::workload::{ArrivalProcess, WorkloadKind};
@@ -66,13 +66,16 @@ pub fn serving_grid(duration_s: f64, seeds: &[u64]) -> Vec<SweepCell> {
                         cfg.max_batch = max_batch;
                         cfg.workload_kind = kind.clone();
                         cfg.seed = seed;
-                        cells.push(SweepCell::Serving(
-                            ServingScenario::new(
-                                format!("serving/{}/w{window_ms}ms/\
-                                         b{max_batch}/{shape}/seed{seed}",
-                                        policy.name()),
-                                cfg, AgentRegistry::paper(),
-                                policy.clone())));
+                        cells.push(ScenarioBuilder::new(
+                            format!("serving/{}/w{window_ms}ms/\
+                                     b{max_batch}/{shape}/seed{seed}",
+                                    policy.name()),
+                            SimConfig::paper(), AgentRegistry::paper())
+                            .policy(policy.clone())
+                            .serving(cfg)
+                            .build()
+                            .expect("serving cells carry no \
+                                     conflicting axes"));
                     }
                 }
             }
@@ -86,10 +89,15 @@ pub fn serving_grid(duration_s: f64, seeds: &[u64]) -> Vec<SweepCell> {
         for policy in PolicyKind::all() {
             let mut cfg = base.clone();
             cfg.duration_s = duration_s;
-            cells.push(SweepCell::Serving(ServingScenario::from_trace(
+            cells.push(ScenarioBuilder::new(
                 format!("serving/{}/trace/seed{seed}", policy.name()),
-                cfg, AgentRegistry::paper(), Arc::clone(&trace),
-                policy)));
+                SimConfig::paper(), AgentRegistry::paper())
+                .policy(policy)
+                .serving(cfg)
+                .trace(Arc::clone(&trace))
+                .build()
+                .expect("serving trace cells carry no conflicting \
+                         axes"));
         }
     }
     cells

@@ -1,0 +1,237 @@
+//! Workflow-DAG experiments: multi-stage collaborative workloads swept
+//! end to end through every engine.
+//!
+//! Two drivers:
+//!
+//! * [`workflow_grid`] — the workflow evaluation grid as
+//!   [`SweepCell::Workflow`] cells, built through [`ScenarioBuilder`]:
+//!   spec shape × policy over the fluid single-GPU engine (the
+//!   CriticalPath entry weighted for each shape), spec shape ×
+//!   placement (workflow colocation vs the headroom default) over the
+//!   cluster engine, and spec shape over the serving engine's native
+//!   DAG execution — all × seed;
+//! * [`workflow_experiment`] — the end-to-end latency head-to-head on
+//!   the paper deployment: every built-in policy (CriticalPath weighted
+//!   for the paper fan-out) drives the same workflow stream, and the
+//!   row surfaces end-to-end mean and p99 workflow latency. A DAG-aware
+//!   policy keeps every stage progressing each step, so it beats
+//!   round-robin's rotation stalls on p99 (asserted in this module's
+//!   tests).
+
+use crate::agents::AgentRegistry;
+use crate::allocator::PolicyKind;
+use crate::cluster::PlacementStrategy;
+use crate::server::ServingConfig;
+use crate::sim::batch::{default_workers, run_sweep, ScenarioBuilder,
+                        SweepCell};
+use crate::sim::SimConfig;
+use crate::workload::{ArrivalProcess, WorkflowSpec, WorkflowWorkload};
+
+/// Every built-in policy, with the CriticalPath entry weighted for
+/// `spec` (the unweighted registry entry is bit-identical to adaptive,
+/// which would make the workflow lane race a duplicate).
+fn workflow_policies(spec: &WorkflowSpec, n_agents: usize)
+                     -> Vec<PolicyKind> {
+    PolicyKind::all().into_iter()
+        .map(|p| if p.name() == "critical_path" {
+            PolicyKind::critical_path_for(spec, n_agents)
+        } else {
+            p
+        })
+        .collect()
+}
+
+/// The workflow sweep grid: for every spec shape in
+/// [`WorkflowSpec::paper_shapes`], fluid single-GPU cells under every
+/// built-in policy (`"workflow/<shape>/<policy>/seed<seed>"`), cluster
+/// cells racing workflow colocation against the headroom default over
+/// two 1.2-capacity devices
+/// (`"workflow/<shape>/cluster/<placement>/seed<seed>"`), and serving
+/// cells executing the DAG natively in virtual time
+/// (`"workflow/<shape>/serving/seed<seed>"`). Instances release at the
+/// paper rate (0.5 workflows/s).
+pub fn workflow_grid(steps: u64, seeds: &[u64]) -> Vec<SweepCell> {
+    let registry = AgentRegistry::paper;
+    let mut cells = Vec::new();
+    for spec in WorkflowSpec::paper_shapes() {
+        let shape = spec.name().to_string();
+        let workload = WorkflowWorkload::new(spec.clone(), 0.5);
+        for policy in workflow_policies(&spec, registry().len()) {
+            for &seed in seeds {
+                let mut cfg = SimConfig::paper();
+                cfg.steps = steps;
+                cfg.seed = seed;
+                cells.push(ScenarioBuilder::new(
+                    format!("workflow/{shape}/{}/seed{seed}",
+                            policy.name()),
+                    cfg, registry())
+                    .policy(policy.clone())
+                    .workflow(workload.clone())
+                    .build()
+                    .expect("paper workflow cells are valid"));
+            }
+        }
+        for (pname, placement) in [
+            ("colocate", PlacementStrategy::WorkflowColocate),
+            ("headroom", PlacementStrategy::HeadroomDecreasing),
+        ] {
+            for &seed in seeds {
+                let mut cfg = SimConfig::paper();
+                cfg.steps = steps;
+                cfg.seed = seed;
+                cells.push(ScenarioBuilder::new(
+                    format!("workflow/{shape}/cluster/{pname}/seed{seed}"),
+                    cfg, registry())
+                    .capacities(vec![1.2, 1.2])
+                    .placement(placement)
+                    .workflow(workload.clone())
+                    .build()
+                    .expect("paper workflow cells are valid"));
+            }
+        }
+        for &seed in seeds {
+            let mut scfg = ServingConfig::paper();
+            scfg.duration_s = steps as f64;
+            scfg.seed = seed;
+            // Deterministic releases so every cell of the lane carries
+            // instances even at the short durations short sweeps use.
+            scfg.arrival_process = ArrivalProcess::Deterministic;
+            cells.push(ScenarioBuilder::new(
+                format!("workflow/{shape}/serving/seed{seed}"),
+                SimConfig::paper(), registry())
+                .serving(scfg)
+                .workflow(workload.clone())
+                .build()
+                .expect("paper workflow cells are valid"));
+        }
+    }
+    cells
+}
+
+/// One row of the workflow policy head-to-head (per policy).
+#[derive(Debug, Clone)]
+pub struct WorkflowRow {
+    /// Policy name.
+    pub policy: String,
+    /// Workflow instances released into the run.
+    pub started: u64,
+    /// Instances that completed end to end before the run ended.
+    pub completed: u64,
+    /// Mean end-to-end workflow latency (s).
+    pub mean_s: f64,
+    /// p99 end-to-end workflow latency (s).
+    pub p99_s: f64,
+}
+
+/// The end-to-end workflow latency experiment on the paper deployment:
+/// every built-in policy (the CriticalPath entry weighted for the paper
+/// fan-out) drives the identical 0.5 workflows/s stream through the
+/// fluid engine for `steps` one-second steps, all through one
+/// `run_sweep` pool. Rows come back in [`PolicyKind::all`] order.
+pub fn workflow_experiment(steps: u64) -> Vec<WorkflowRow> {
+    let spec = WorkflowSpec::paper();
+    let registry = AgentRegistry::paper();
+    let cells: Vec<SweepCell> =
+        workflow_policies(&spec, registry.len()).into_iter()
+        .map(|policy| {
+            let mut cfg = SimConfig::paper();
+            cfg.steps = steps;
+            ScenarioBuilder::new(
+                format!("workflow/{}", policy.name()), cfg,
+                registry.clone())
+                .policy(policy)
+                .workflow(WorkflowWorkload::paper())
+                .build()
+                .expect("paper workflow cells are valid")
+        })
+        .collect();
+    let runs = run_sweep(&cells, default_workers());
+    runs.iter().map(|r| {
+        let wf = r.result.workflow().expect("workflow cells carry stats");
+        WorkflowRow {
+            policy: r.label.trim_start_matches("workflow/").to_string(),
+            started: wf.started,
+            completed: wf.completed,
+            mean_s: wf.mean_s(),
+            p99_s: wf.p99_s(),
+        }
+    }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::batch::run_sweep;
+
+    #[test]
+    fn workflow_grid_covers_every_axis_with_unique_labels() {
+        let seeds = [1u64, 2];
+        let cells = workflow_grid(10, &seeds);
+        let shapes = WorkflowSpec::paper_shapes().len();
+        // Per shape: every policy (fluid) + 2 placements (cluster) + 1
+        // serving lane, each × seed.
+        let expected = shapes * (PolicyKind::all().len() + 2 + 1)
+            * seeds.len();
+        assert_eq!(cells.len(), expected);
+        let mut labels: Vec<&str> =
+            cells.iter().map(SweepCell::label).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), expected, "labels must be unique");
+        assert!(cells.iter().any(|c| c.label()
+                == "workflow/fanout3/critical_path/seed1"));
+        assert!(cells.iter().any(|c| c.label()
+                == "workflow/chain3/cluster/colocate/seed2"));
+        assert!(cells.iter().any(|c| c.label()
+                == "workflow/fanout2/serving/seed1"));
+        assert!(cells.iter()
+                .all(|c| matches!(c, SweepCell::Workflow(_))));
+    }
+
+    #[test]
+    fn workflow_grid_runs_deterministically_and_carries_stats() {
+        let cells = workflow_grid(10, &[42]);
+        let one = run_sweep(&cells, 1);
+        let many = run_sweep(&cells, 8);
+        for (a, b) in one.iter().zip(&many) {
+            assert_eq!(a.label, b.label);
+            let wa = a.result.workflow().expect("workflow stats");
+            let wb = b.result.workflow().expect("workflow stats");
+            assert_eq!(wa, wb, "{}", a.label);
+            assert!(wa.started > 0, "{}: no instances released", a.label);
+        }
+    }
+
+    #[test]
+    fn workflow_experiment_rows_track_the_policy_registry() {
+        let rows = workflow_experiment(60);
+        assert_eq!(rows.len(), PolicyKind::all().len());
+        let names: Vec<&str> =
+            rows.iter().map(|r| r.policy.as_str()).collect();
+        let expected: Vec<&str> = PolicyKind::all().iter()
+            .map(PolicyKind::name).collect();
+        assert_eq!(names, expected);
+        for row in &rows {
+            assert!(row.started > 0, "{}", row.policy);
+        }
+    }
+
+    #[test]
+    fn critical_path_beats_round_robin_on_workflow_p99() {
+        // The acceptance race: on the paper deployment the DAG-aware
+        // policy keeps every stage progressing each step, while
+        // round-robin stalls each DAG level until its agent's turn.
+        let rows = workflow_experiment(100);
+        let by_name = |n: &str| rows.iter()
+            .find(|r| r.policy == n).expect("policy row");
+        let cp = by_name("critical_path");
+        let rr = by_name("round_robin");
+        assert!(cp.completed > 0, "critical_path completed nothing");
+        assert!(cp.p99_s < rr.p99_s,
+                "critical_path p99 {} !< round_robin p99 {}",
+                cp.p99_s, rr.p99_s);
+        assert!(cp.mean_s < rr.mean_s,
+                "critical_path mean {} !< round_robin mean {}",
+                cp.mean_s, rr.mean_s);
+    }
+}

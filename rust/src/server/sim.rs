@@ -21,7 +21,8 @@ use crate::server::core::{AgentStat, Executor, ServingCore, VirtualClock};
 use crate::sim::fault::{ResilienceReport, ServingFaultCursor,
                         ServingFaults, ShedPolicy};
 use crate::workload::trace::Trace;
-use crate::workload::{ArrivalProcess, WorkloadGenerator, WorkloadKind};
+use crate::workload::{ArrivalProcess, WorkflowStats, WorkflowWorkload,
+                      WorkloadGenerator, WorkloadKind};
 
 /// Configuration of one serving-layer simulation run.
 #[derive(Debug, Clone)]
@@ -56,6 +57,16 @@ pub struct ServingConfig {
     /// bound. `None` (and inert configs) cost nothing: the run is
     /// bit-identical to a build without the fault layer.
     pub faults: Option<ServingFaults>,
+    /// Workflow-DAG workload. When set it *replaces* the independent
+    /// per-agent arrival streams: the arrival process releases whole
+    /// workflow instances instead, each stage becomes `ceil(work)`
+    /// queued requests on its agent, and a stage's requests only
+    /// enqueue once every upstream stage has fully completed (at the
+    /// completing batch's virtual `now`). The run is open-loop:
+    /// admission control is not applied to workflow runs (transient
+    /// fault injection and retry still are). Trace replays ignore this
+    /// field — a recorded per-agent trace is itself the workload.
+    pub workflow: Option<WorkflowWorkload>,
 }
 
 impl ServingConfig {
@@ -75,6 +86,7 @@ impl ServingConfig {
             arrival_process: ArrivalProcess::Poisson,
             seed: 42,
             faults: None,
+            workflow: None,
         }
     }
 }
@@ -250,6 +262,10 @@ pub struct ServingResult {
     /// serving faults; present when the run's config set a non-inert
     /// [`ServingFaults`].
     pub resilience: Option<ResilienceReport>,
+    /// End-to-end workflow latency stats (started/completed instances,
+    /// mean/p99), present when the run's config carried a
+    /// [`WorkflowWorkload`].
+    pub workflow: Option<WorkflowStats>,
 }
 
 impl ServingResult {
@@ -305,6 +321,11 @@ impl ServingSimulator {
                          -> Self {
         assert_eq!(cfg.arrival_rates.len(), registry.len(),
                    "arrival_rates must cover every agent");
+        if let Some(wf) = &cfg.workflow {
+            if let Err(e) = wf.spec.validate_for(registry.len()) {
+                panic!("{e}");
+            }
+        }
         ServingSimulator { cfg, registry }
     }
 
@@ -360,6 +381,12 @@ impl ServingSimulator {
     where
         P: AllocationPolicy + ?Sized,
     {
+        if let Some(wf) = &self.cfg.workflow {
+            // Workflow releases are a constant-rate stream with no idle
+            // windows to skip, so the dense and fast-forward paths are
+            // one and the same.
+            return self.run_workflow_inner(policy, wf, arena);
+        }
         let mut source = GeneratorStream(WorkloadGenerator::new(
             self.cfg.arrival_rates.clone(), self.cfg.workload_kind.clone(),
             self.cfg.arrival_process, self.cfg.seed));
@@ -670,6 +697,232 @@ impl ServingSimulator {
             allocation_trajectory: core.take_trajectory(),
             shed,
             resilience,
+            workflow: None,
+        }
+    }
+
+    /// Native DAG execution in virtual time: releases become root-stage
+    /// requests, a completing batch's virtual `now` is the enqueue time
+    /// of any stage it unblocks, and end-to-end instance latency lands
+    /// in [`WorkflowStats`]. Same queue path as [`run_inner`]: windowed
+    /// allocator re-runs, stride picks, dynamic batching, fault
+    /// injection with bounded retry (permanent failures strand the
+    /// instance — started, never completed). Open loop by design, so
+    /// admission control does not apply here.
+    ///
+    /// [`run_inner`]: ServingSimulator::run_inner
+    fn run_workflow_inner<P>(&self, policy: &mut P,
+                             wf: &WorkflowWorkload,
+                             arena: &mut ServingArena) -> ServingResult
+    where
+        P: AllocationPolicy + ?Sized,
+    {
+        let n = self.registry.len();
+        arena.reset(n);
+        let ServingArena {
+            queues, window_arrivals, depths, backlogged, batch, ..
+        } = arena;
+
+        let dt = self.cfg.arrival_dt_s;
+        let steps = (self.cfg.duration_s / dt).round().max(1.0) as u64;
+        let releases = wf.release_times(
+            self.cfg.arrival_process, self.cfg.seed, steps, dt);
+
+        let spec = &wf.spec;
+        let k = spec.stages().len();
+        // Discrete request count per stage: `ceil(work)`, at least one.
+        let stage_requests: Vec<u32> = spec.stages().iter()
+            .map(|s| (s.work.ceil() as u32).max(1))
+            .collect();
+        let unmet0: Vec<u32> = spec.stages().iter()
+            .map(|s| s.deps.len() as u32)
+            .collect();
+        // Per-instance ledger: requests left per stage, unmet deps per
+        // stage, live stage count.
+        struct WfJob {
+            release_s: f64,
+            left: Vec<u32>,
+            unmet: Vec<u32>,
+            live: usize,
+        }
+        let mut jobs: Vec<WfJob> = releases.iter()
+            .map(|&t| WfJob {
+                release_s: t,
+                left: stage_requests.clone(),
+                unmet: unmet0.clone(),
+                live: k,
+            })
+            .collect();
+        let mut stats = WorkflowStats::new();
+        stats.started = jobs.len() as u64;
+
+        // (job, stage) meta per queued request, in lockstep with the
+        // arena's per-agent FIFO queues.
+        let mut meta: Vec<VecDeque<(usize, usize)>> =
+            vec![VecDeque::new(); n];
+        let mut batch_meta: Vec<(usize, usize)> = Vec::new();
+
+        let mut executor = CostModelExecutor::new(
+            &self.registry, self.cfg.dispatch_overhead_s);
+        let mut core = ServingCore::<VirtualClock, _>::new(
+            self.registry.clone(), policy, self.cfg.alloc_window_s,
+            self.cfg.capacity, vec![self.cfg.max_batch.max(1); n], true);
+
+        let faults = self.cfg.faults.as_ref().filter(|f| !f.is_inert());
+        if let Some(f) = faults {
+            core.set_retry(f.retry.clone());
+        }
+        let mut fault_cursor = faults.map(ServingFaultCursor::new);
+        let mut offered = 0u64;
+        let mut lost_s = 0.0f64;
+        let mut failed = 0u64;
+
+        let mut now = 0.0f64;
+        let mut next = 0usize;
+        core.window_due(now); // anchor the first window at t = 0
+
+        loop {
+            // 1. Release every instance due by `now`: its root stages'
+            //    requests enqueue at the release time.
+            while next < jobs.len() && jobs[next].release_s <= now {
+                let t = jobs[next].release_s;
+                for (s, stage) in spec.stages().iter().enumerate() {
+                    if stage.deps.is_empty() {
+                        for _ in 0..stage_requests[s] {
+                            queues[stage.agent].push_back(t);
+                            meta[stage.agent].push_back((next, s));
+                            window_arrivals[stage.agent] += 1;
+                            offered += 1;
+                        }
+                    }
+                }
+                next += 1;
+            }
+
+            // 2. Allocation-window rollover, as in the plain path.
+            if core.window_due(now) {
+                for i in 0..n {
+                    depths[i] = queues[i].len() as f64;
+                }
+                core.reallocate(now, &window_arrivals[..], &depths[..]);
+                for w in window_arrivals.iter_mut() {
+                    *w = 0;
+                }
+            }
+
+            // 3. Pick a backlogged agent; an idle GPU fast-forwards to
+            //    the next instance release.
+            let mut any = false;
+            for i in 0..n {
+                backlogged[i] = !queues[i].is_empty();
+                any |= backlogged[i];
+            }
+            if !any {
+                if next < jobs.len() {
+                    now = now.max(jobs[next].release_s);
+                    continue;
+                }
+                break; // no queued work, no future releases: done
+            }
+            let agent = core.pick(&backlogged[..])
+                .expect("backlog implies a pick");
+
+            // 4. Dynamic batch pop + cost-model execution; a successful
+            //    batch advances the DAG bookkeeping.
+            let b = queues[agent].len().min(core.max_batch(agent));
+            batch.clear();
+            batch_meta.clear();
+            for _ in 0..b {
+                batch.push(queues[agent].pop_front().expect("b <= len"));
+                batch_meta.push(meta[agent].pop_front()
+                    .expect("meta in lockstep"));
+            }
+            let mut attempt = 0u32;
+            loop {
+                let injected = fault_cursor.as_mut()
+                    .is_some_and(|c| c.fails_at(now, agent));
+                let (service_s, result) = executor.execute(agent,
+                                                           &batch[..]);
+                now += service_s;
+                if !injected && result.is_ok() {
+                    core.record_batch(agent, b, service_s);
+                    for t_enq in batch.iter() {
+                        core.record_completion(agent, now - t_enq);
+                    }
+                    for &(j, s) in batch_meta.iter() {
+                        jobs[j].left[s] -= 1;
+                        if jobs[j].left[s] > 0 {
+                            continue;
+                        }
+                        // Stage complete: finish the instance or unblock
+                        // successors at this batch's virtual `now`.
+                        jobs[j].live -= 1;
+                        if jobs[j].live == 0 {
+                            stats.record(now - jobs[j].release_s);
+                            continue;
+                        }
+                        for (s2, st2) in spec.stages().iter().enumerate()
+                            .skip(s + 1)
+                        {
+                            if !st2.deps.contains(&s) {
+                                continue;
+                            }
+                            jobs[j].unmet[s2] -= 1;
+                            if jobs[j].unmet[s2] == 0 {
+                                for _ in 0..stage_requests[s2] {
+                                    queues[st2.agent].push_back(now);
+                                    meta[st2.agent].push_back((j, s2));
+                                    window_arrivals[st2.agent] += 1;
+                                    offered += 1;
+                                }
+                            }
+                        }
+                    }
+                    break;
+                }
+                match core.on_batch_failure(agent, b, service_s, attempt) {
+                    Some(backoff_s) => {
+                        lost_s += service_s + backoff_s;
+                        now += backoff_s;
+                        attempt += 1;
+                    }
+                    None => {
+                        // Dropped for good: the stage never completes,
+                        // so the instance stays started-not-completed.
+                        lost_s += service_s;
+                        failed += b as u64;
+                        break;
+                    }
+                }
+            }
+        }
+
+        let resilience = faults.map(|_| {
+            let frac = |x: u64| {
+                if offered > 0 { x as f64 / offered as f64 } else { 0.0 }
+            };
+            ResilienceReport {
+                recovery_time_s: lost_s,
+                shed_fraction: 0.0,
+                retried: core.retried_batches(),
+                goodput: core.total_completed() as f64 / now.max(1e-9),
+                disruption: frac(failed),
+            }
+        });
+        ServingResult {
+            policy: core.policy_name().to_string(),
+            per_agent: core.agent_stats(),
+            latency: core.latency_histograms(),
+            mean_latency_s: core.mean_latencies(),
+            total_completed: core.total_completed(),
+            gpu_busy_s: core.gpu_busy_seconds(),
+            makespan_s: now,
+            windows: core.windows_closed(),
+            last_allocation: core.last_allocation().to_vec(),
+            allocation_trajectory: core.take_trajectory(),
+            shed: vec![0; n],
+            resilience,
+            workflow: Some(stats),
         }
     }
 }
@@ -991,5 +1244,69 @@ mod tests {
                 adaptive.mean_latency_s[3], stat.mean_latency_s[3]);
         // And the schedules genuinely differ across the board.
         assert_ne!(adaptive.mean_latency_s, stat.mean_latency_s);
+    }
+
+    #[test]
+    fn workflow_runs_natively_and_reproducibly() {
+        use crate::workload::WorkflowWorkload;
+        let mut cfg = ServingConfig::paper();
+        cfg.workflow = Some(WorkflowWorkload::paper());
+        let sim = ServingSimulator::with_registry(cfg.clone(),
+                                                  AgentRegistry::paper());
+        let r = sim.run(&mut AdaptivePolicy::default());
+        let wf = r.workflow.as_ref().expect("workflow configured");
+        assert!(wf.started > 0, "no instances released");
+        assert!(wf.completed > 0, "open-loop run must drain every DAG");
+        assert!(wf.mean_s() > 0.0);
+        assert!(wf.p99_s() >= wf.mean_s() - 1e-9);
+        // Completions happened through the real queue path.
+        assert!(r.total_completed > 0 && r.gpu_busy_s > 0.0);
+        // Bit-reproducible, and identical through run_dense (the
+        // workflow path has no idle windows to skip).
+        assert_eq!(r, sim.run(&mut AdaptivePolicy::default()));
+        assert_eq!(r, sim.run_dense(&mut AdaptivePolicy::default()));
+        // A plain run surfaces no workflow stats.
+        cfg.workflow = None;
+        let plain = ServingSimulator::with_registry(
+            cfg, AgentRegistry::paper())
+            .run(&mut AdaptivePolicy::default());
+        assert!(plain.workflow.is_none());
+    }
+
+    #[test]
+    fn workflow_stages_enqueue_only_after_upstream_completes() {
+        use crate::workload::{WorkflowSpec, WorkflowWorkload};
+        // chain 0 -> 1 at 0.5/s deterministic over 10 s: exactly 5
+        // instances, one request per stage, and agent 1 only ever sees
+        // requests unblocked by agent 0's completions.
+        let mut cfg = ServingConfig::paper();
+        cfg.arrival_process = ArrivalProcess::Deterministic;
+        cfg.workflow = Some(WorkflowWorkload::new(
+            WorkflowSpec::chain("c2", &[0, 1]), 0.5));
+        let sim = ServingSimulator::with_registry(cfg,
+                                                  AgentRegistry::paper());
+        let r = sim.run(&mut AdaptivePolicy::default());
+        let wf = r.workflow.as_ref().expect("workflow configured");
+        assert_eq!(wf.started, 5);
+        assert_eq!(wf.completed, 5, "every chain must finish");
+        assert_eq!(r.per_agent[0].completed, 5);
+        assert_eq!(r.per_agent[1].completed, 5);
+        assert_eq!(r.per_agent[2].completed, 0);
+        assert_eq!(r.per_agent[3].completed, 0);
+        assert_eq!(r.total_completed, 10);
+        // End-to-end latency covers both stages' service, so it exceeds
+        // the downstream stage's own queue latency.
+        assert!(wf.mean_s() > r.mean_latency_s[1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "config error")]
+    fn workflow_spec_must_fit_the_registry() {
+        use crate::workload::{WorkflowSpec, WorkflowWorkload};
+        let mut cfg = ServingConfig::paper();
+        cfg.workflow = Some(WorkflowWorkload::new(
+            WorkflowSpec::chain("too-wide", &[0, 9]), 0.5));
+        let _ = ServingSimulator::with_registry(cfg,
+                                                AgentRegistry::paper());
     }
 }

@@ -11,9 +11,12 @@
 //! path — per-request FIFO queues, windowed allocator re-runs, stride
 //! picks, dynamic batching — replayed in virtual time through the same
 //! [`ServingCore`](crate::server::ServingCore) the threaded server
-//! drives), or a [`FaultScenario`] (any of those engines run under a
+//! drives), a [`FaultScenario`] (any of those engines run under a
 //! deterministic fault plan — the robustness axes `repro::fault_grid`
-//! sweeps). [`run_sweep`] fans a slice of them across
+//! sweeps), or a [`WorkflowScenario`] (any engine driven by a
+//! workflow-DAG workload — stage-coupled arrival injection in the
+//! fluid engines, native DAG execution in the serving engine).
+//! [`run_sweep`] fans a slice of them across
 //! `std::thread::scope` workers; [`run_batch`] remains the
 //! single-GPU-only entry point over plain [`Scenario`]s. Both share one
 //! worker pool implementation: each worker owns one [`SweepArena`] (a
@@ -33,6 +36,33 @@
 //! The Table II repro, the §V.C sweeps, the §V.B robustness grid (now
 //! including its cluster and trace-corpus axes), and the `sweep_scaling`
 //! bench all drive their grids through here.
+//!
+//! The [`ScenarioBuilder`] is the one front door onto all of it — a
+//! label × [`SimConfig`] × registry seed plus chainable axes, emitting
+//! whichever [`SweepCell`] kind the axes call for:
+//!
+//! ```text
+//!   ScenarioBuilder::new(label, SimConfig, registry)
+//!       .policy(..)      .capacities(..)  .placement(..)
+//!       .rebalancer(..)  .economics(..)   .faults(..)
+//!       .workflow(..)    .trace(..)       .serving(..)
+//!          |
+//!          v  build() picks the cell kind from the axes set
+//!   SweepCell::{Single, Cluster, Trace, Cost, Serving, Fault, Workflow}
+//!          |
+//!          v  run_sweep(cells, workers)
+//!   SweepRun { label, CellResult }     — cell order preserved,
+//!                                        bit-identical at any
+//!                                        worker count
+//!
+//!   workflow lane: .workflow(spec × rate) reroutes the same grid
+//!   through stage-coupled arrival injection (fluid single-GPU and
+//!   cluster engines) or native DAG execution in virtual time (the
+//!   serving engine), surfacing end-to-end WorkflowStats on every
+//!   result; the DAG-aware critical_path policy and the
+//!   workflow-colocate placement strategy race the standard axes
+//!   through the same cells.
+//! ```
 //!
 //! [`Trace`]: crate::workload::trace::Trace
 //!
@@ -54,6 +84,7 @@ use crate::serverless::{EconomicsModel, EconomicsReport};
 use crate::sim::fault::{FaultConfig, ServingFaults};
 use crate::sim::{SimArena, SimConfig, SimResult, Simulator};
 use crate::workload::trace::{Trace, TraceCorpus};
+use crate::workload::WorkflowWorkload;
 
 /// One single-GPU cell of a sweep grid: a labelled simulation to run.
 #[derive(Debug, Clone)]
@@ -117,35 +148,24 @@ pub struct ClusterScenario {
 }
 
 impl ClusterScenario {
-    /// Build; errors when the agents cannot be placed on the cluster
-    /// (same validation as [`ClusterSimulator::new`]).
+    /// Build a uniform cluster cell; errors when the agents cannot be
+    /// placed on the cluster (same validation as
+    /// [`ClusterSimulator::new`]). Thin wrapper over the one
+    /// [`ClusterSimulator::builder`] path.
     pub fn new(label: impl Into<String>, cfg: SimConfig,
                registry: AgentRegistry, n_gpus: usize,
-               capacity_per_gpu: f64, migration: Option<MigrationModel>)
+               capacity_per_gpu: f64, rebalancer: Rebalancer)
                -> Result<ClusterScenario> {
         Ok(ClusterScenario {
             label: label.into(),
             sim: ClusterSimulator::new(cfg, registry, n_gpus,
-                                       capacity_per_gpu, migration)?,
-        })
-    }
-
-    /// Build a mixed-capacity cell (one capacity per GPU, §VI
-    /// heterogeneous devices); errors when the agents cannot be placed
-    /// (same validation as [`ClusterSimulator::heterogeneous`]).
-    pub fn heterogeneous(label: impl Into<String>, cfg: SimConfig,
-                         registry: AgentRegistry, capacities: Vec<f64>,
-                         migration: Option<MigrationModel>)
-                         -> Result<ClusterScenario> {
-        Ok(ClusterScenario {
-            label: label.into(),
-            sim: ClusterSimulator::heterogeneous(cfg, registry,
-                                                 capacities, migration)?,
+                                       capacity_per_gpu, rebalancer)?,
         })
     }
 
     /// Build a cell with an explicit [`PlacementStrategy`] ×
-    /// [`Rebalancer`] over per-GPU capacities (same validation as
+    /// [`Rebalancer`] over per-GPU capacities (mixed capacities are the
+    /// §VI heterogeneous devices; same validation as
     /// [`ClusterSimulator::with_policies`]) — the placement-grid axes.
     pub fn with_policies(label: impl Into<String>, cfg: SimConfig,
                          registry: AgentRegistry, capacities: Vec<f64>,
@@ -482,6 +502,118 @@ impl FaultScenario {
     }
 }
 
+/// One workflow-DAG cell of a sweep grid: a single-GPU, cluster, or
+/// serving-layer scenario driven by a [`WorkflowWorkload`] instead of
+/// independent per-agent arrival streams — the workflow-grid axes
+/// (spec shape × policy × placement × seed) that `repro::workflow_grid`
+/// sweeps. The wrapper injects the workload into the inner scenario's
+/// config at construction, so a `WorkflowScenario` always surfaces
+/// end-to-end [`WorkflowStats`](crate::workload::WorkflowStats) on its
+/// result.
+#[derive(Debug, Clone)]
+pub struct WorkflowScenario {
+    inner: WorkflowInner,
+}
+
+#[derive(Debug, Clone)]
+enum WorkflowInner {
+    Single(Scenario),
+    Cluster(ClusterScenario),
+    Serving(ServingScenario),
+}
+
+impl WorkflowScenario {
+    /// Build a single-GPU workflow cell; `workflow` overrides whatever
+    /// the config carried. Errors when the spec references agents
+    /// beyond the registry.
+    pub fn single(label: impl Into<String>, mut cfg: SimConfig,
+                  registry: AgentRegistry, policy: PolicyKind,
+                  workflow: WorkflowWorkload) -> Result<WorkflowScenario> {
+        workflow.spec.validate_for(registry.len())?;
+        cfg.workflow = Some(workflow);
+        Ok(WorkflowScenario {
+            inner: WorkflowInner::Single(Scenario::new(label, cfg,
+                                                       registry, policy)),
+        })
+    }
+
+    /// Build a cluster workflow cell (explicit placement strategy ×
+    /// rebalancer — [`PlacementStrategy::WorkflowColocate`] reads the
+    /// spec's participant mask); `workflow` overrides whatever the
+    /// config carried. Errors on an unplaceable cluster or an
+    /// out-of-range spec.
+    pub fn cluster(label: impl Into<String>, mut cfg: SimConfig,
+                   registry: AgentRegistry, capacities: Vec<f64>,
+                   strategy: PlacementStrategy, rebalancer: Rebalancer,
+                   workflow: WorkflowWorkload) -> Result<WorkflowScenario> {
+        cfg.workflow = Some(workflow);
+        Ok(WorkflowScenario {
+            inner: WorkflowInner::Cluster(ClusterScenario::with_policies(
+                label, cfg, registry, capacities, strategy, rebalancer)?),
+        })
+    }
+
+    /// Build a serving-layer workflow cell (native DAG execution in
+    /// virtual time); `workflow` overrides whatever the config carried.
+    /// Errors when the spec references agents beyond the registry.
+    pub fn serving(label: impl Into<String>, mut cfg: ServingConfig,
+                   registry: AgentRegistry, policy: PolicyKind,
+                   workflow: WorkflowWorkload) -> Result<WorkflowScenario> {
+        workflow.spec.validate_for(registry.len())?;
+        cfg.workflow = Some(workflow);
+        Ok(WorkflowScenario {
+            inner: WorkflowInner::Serving(ServingScenario::new(
+                label, cfg, registry, policy)),
+        })
+    }
+
+    /// The cell's grid label.
+    pub fn label(&self) -> &str {
+        match &self.inner {
+            WorkflowInner::Single(s) => &s.label,
+            WorkflowInner::Cluster(s) => &s.label,
+            WorkflowInner::Serving(s) => &s.label,
+        }
+    }
+
+    /// The inner single-GPU scenario, when this is a single-GPU
+    /// workflow cell (for sequential baselines).
+    pub fn as_single(&self) -> Option<&Scenario> {
+        match &self.inner {
+            WorkflowInner::Single(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The inner cluster scenario, when this is a cluster workflow cell.
+    pub fn as_cluster_scenario(&self) -> Option<&ClusterScenario> {
+        match &self.inner {
+            WorkflowInner::Cluster(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The inner serving scenario, when this is a serving workflow cell.
+    pub fn as_serving_scenario(&self) -> Option<&ServingScenario> {
+        match &self.inner {
+            WorkflowInner::Serving(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Run this one cell through a caller-owned worker arena.
+    pub fn run_with_arena(&self, arena: &mut SweepArena) -> CellResult {
+        match &self.inner {
+            WorkflowInner::Single(s) =>
+                CellResult::Sim(s.run_with_arena(&mut arena.sim)),
+            WorkflowInner::Cluster(s) =>
+                CellResult::Cluster(s.run_with_arena(&mut arena.cluster)),
+            WorkflowInner::Serving(s) =>
+                CellResult::Serving(s.run_with_arena(&mut arena.serving)),
+        }
+    }
+}
+
 /// The one matching rule for replaying a trace over a registry: the
 /// agent columns must equal the registry's agents, name for name, in
 /// order (a reordered or foreign recording would replay silently
@@ -512,6 +644,8 @@ pub enum SweepCell {
     Serving(ServingScenario),
     /// Fault-injection cell (any engine, run under a fault plan).
     Fault(FaultScenario),
+    /// Workflow-DAG cell (any engine, driven by a workflow workload).
+    Workflow(WorkflowScenario),
 }
 
 impl SweepCell {
@@ -524,6 +658,7 @@ impl SweepCell {
             SweepCell::Cost(s) => &s.label,
             SweepCell::Serving(s) => &s.label,
             SweepCell::Fault(s) => s.label(),
+            SweepCell::Workflow(s) => s.label(),
         }
     }
 
@@ -541,6 +676,7 @@ impl SweepCell {
             SweepCell::Serving(s) =>
                 CellResult::Serving(s.run_with_arena(&mut arena.serving)),
             SweepCell::Fault(s) => s.run_with_arena(arena),
+            SweepCell::Workflow(s) => s.run_with_arena(arena),
         }
     }
 }
@@ -598,6 +734,17 @@ impl CellResult {
         }
     }
 
+    /// End-to-end workflow stats, when the cell's config carried a
+    /// [`WorkflowWorkload`] — always present for
+    /// [`SweepCell::Workflow`] cells, whatever the kind otherwise.
+    pub fn workflow(&self) -> Option<&crate::workload::WorkflowStats> {
+        match self {
+            CellResult::Sim(r) => r.workflow.as_ref(),
+            CellResult::Cluster(r) => r.workflow.as_ref(),
+            CellResult::Serving(r) => r.workflow.as_ref(),
+        }
+    }
+
     /// The single-GPU result, if this was a single-GPU or trace cell.
     pub fn as_sim(&self) -> Option<&SimResult> {
         match self {
@@ -620,6 +767,236 @@ impl CellResult {
             CellResult::Serving(r) => Some(r),
             _ => None,
         }
+    }
+}
+
+/// The one front door for building sweep cells: seed it with a label ×
+/// [`SimConfig`] × registry, chain the axes the cell needs, and
+/// [`ScenarioBuilder::build`] emits the matching [`SweepCell`] kind.
+///
+/// Axis precedence (most specific engine wins):
+///
+/// 1. [`ScenarioBuilder::serving`] routes through the serving engine —
+///    with [`ScenarioBuilder::workflow`] that is a workflow cell, with
+///    [`ScenarioBuilder::serving_faults`] a serving fault cell, with
+///    [`ScenarioBuilder::trace`] a trace-replay serving cell, else a
+///    plain serving cell.
+/// 2. Otherwise [`ScenarioBuilder::workflow`] emits a fluid workflow
+///    cell — cluster-backed when [`ScenarioBuilder::capacities`] set a
+///    cluster axis, single-GPU otherwise.
+/// 3. Otherwise a cluster axis emits a cluster cell (a fault cell when
+///    [`ScenarioBuilder::faults`] is set).
+/// 4. Otherwise [`ScenarioBuilder::trace`] emits a trace cell,
+///    [`ScenarioBuilder::economics`] a cost cell,
+///    [`ScenarioBuilder::faults`] a single-GPU fault cell, and the bare
+///    seed a plain single-GPU cell.
+///
+/// Economics and fluid fault layers compose with the other axes by
+/// injection into the cell's config; incompatible combinations (a trace
+/// replay with a workflow or a cluster axis) return [`Error::Config`].
+/// The per-kind constructors ([`Scenario::new`],
+/// [`ClusterScenario::with_policies`], [`WorkflowScenario::single`],
+/// ...) stay available as thin wrappers over the same validation — the
+/// builder is sugar, not a second code path.
+#[derive(Debug, Clone)]
+pub struct ScenarioBuilder {
+    label: String,
+    cfg: SimConfig,
+    registry: AgentRegistry,
+    policy: PolicyKind,
+    capacities: Option<Vec<f64>>,
+    placement: PlacementStrategy,
+    rebalancer: Rebalancer,
+    economics: Option<EconomicsModel>,
+    faults: Option<FaultConfig>,
+    workflow: Option<WorkflowWorkload>,
+    trace: Option<Arc<Trace>>,
+    serving: Option<ServingConfig>,
+    serving_faults: Option<ServingFaults>,
+}
+
+impl ScenarioBuilder {
+    /// Seed a builder: every cell kind starts from a label, a fluid
+    /// config, and a validated registry. The policy defaults to the
+    /// paper's Algorithm 1 ([`PolicyKind::adaptive`]).
+    pub fn new(label: impl Into<String>, cfg: SimConfig,
+               registry: AgentRegistry) -> ScenarioBuilder {
+        ScenarioBuilder {
+            label: label.into(),
+            cfg,
+            registry,
+            policy: PolicyKind::adaptive(),
+            capacities: None,
+            placement: PlacementStrategy::default(),
+            rebalancer: Rebalancer::Static,
+            economics: None,
+            faults: None,
+            workflow: None,
+            trace: None,
+            serving: None,
+            serving_faults: None,
+        }
+    }
+
+    /// Policy evaluated in this cell.
+    pub fn policy(mut self, policy: PolicyKind) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Per-GPU capacities: sets the cluster axis (the fluid engine
+    /// becomes [`ClusterSimulator`]).
+    pub fn capacities(mut self, capacities: Vec<f64>) -> Self {
+        self.capacities = Some(capacities);
+        self
+    }
+
+    /// Uniform cluster shorthand: `n_gpus` devices of
+    /// `capacity_per_gpu` each.
+    pub fn gpus(self, n_gpus: usize, capacity_per_gpu: f64) -> Self {
+        self.capacities(vec![capacity_per_gpu; n_gpus])
+    }
+
+    /// Placement strategy for the cluster axis.
+    pub fn placement(mut self, strategy: PlacementStrategy) -> Self {
+        self.placement = strategy;
+        self
+    }
+
+    /// Rebalancer for the cluster axis.
+    pub fn rebalancer(mut self, rebalancer: Rebalancer) -> Self {
+        self.rebalancer = rebalancer;
+        self
+    }
+
+    /// Serverless economics layer (billing, scale-to-zero, cold starts).
+    pub fn economics(mut self, model: EconomicsModel) -> Self {
+        self.economics = Some(model);
+        self
+    }
+
+    /// Fluid-engine fault plan (GPU evictions, degradations).
+    pub fn faults(mut self, faults: FaultConfig) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
+    /// Workflow-DAG workload: replaces the per-agent arrival streams
+    /// with stage-coupled instances.
+    pub fn workflow(mut self, workflow: WorkflowWorkload) -> Self {
+        self.workflow = Some(workflow);
+        self
+    }
+
+    /// Recorded arrival trace to replay instead of the config's
+    /// generator.
+    pub fn trace(mut self, trace: impl Into<Arc<Trace>>) -> Self {
+        self.trace = Some(trace.into());
+        self
+    }
+
+    /// Route through the serving-layer engine under `cfg` (the fluid
+    /// config's arrival axes are superseded by the serving config's).
+    pub fn serving(mut self, cfg: ServingConfig) -> Self {
+        self.serving = Some(cfg);
+        self
+    }
+
+    /// Serving-layer fault injection (transient dispatch failures,
+    /// admission control); implies [`ScenarioBuilder::serving`] routing
+    /// only when a serving config was given.
+    pub fn serving_faults(mut self, faults: ServingFaults) -> Self {
+        self.serving_faults = Some(faults);
+        self
+    }
+
+    /// Emit the [`SweepCell`] the chained axes describe.
+    pub fn build(self) -> Result<SweepCell> {
+        let ScenarioBuilder {
+            label, mut cfg, registry, policy, capacities, placement,
+            rebalancer, economics, faults, workflow, trace, serving,
+            serving_faults,
+        } = self;
+
+        if let Some(scfg) = serving {
+            if capacities.is_some() {
+                return Err(Error::Config(
+                    "serving cells run the single-GPU queue path; \
+                     drop .capacities() or .serving()".into()));
+            }
+            if let Some(wf) = workflow {
+                if trace.is_some() {
+                    return Err(Error::Config(
+                        "a workflow workload replaces the arrival \
+                         stream; it cannot replay a trace".into()));
+                }
+                let mut scfg = scfg;
+                let carried = scfg.faults.take();
+                scfg.faults = serving_faults.or(carried);
+                return Ok(SweepCell::Workflow(WorkflowScenario::serving(
+                    label, scfg, registry, policy, wf)?));
+            }
+            if let Some(sf) = serving_faults {
+                return Ok(SweepCell::Fault(FaultScenario::serving(
+                    label, scfg, registry, policy, sf)));
+            }
+            return Ok(match trace {
+                Some(t) => SweepCell::Serving(ServingScenario::from_trace(
+                    label, scfg, registry, t, policy)),
+                None => SweepCell::Serving(ServingScenario::new(
+                    label, scfg, registry, policy)),
+            });
+        }
+        if serving_faults.is_some() {
+            return Err(Error::Config(
+                "serving_faults needs a .serving() config".into()));
+        }
+
+        cfg.economics = economics.or(cfg.economics.take());
+        if let Some(wf) = workflow {
+            if trace.is_some() {
+                return Err(Error::Config(
+                    "a workflow workload replaces the arrival stream; \
+                     it cannot replay a trace".into()));
+            }
+            cfg.faults = faults.or(cfg.faults.take());
+            return Ok(SweepCell::Workflow(match capacities {
+                Some(caps) => WorkflowScenario::cluster(
+                    label, cfg, registry, caps, placement, rebalancer,
+                    wf)?,
+                None => WorkflowScenario::single(label, cfg, registry,
+                                                 policy, wf)?,
+            }));
+        }
+        if let Some(caps) = capacities {
+            if trace.is_some() {
+                return Err(Error::Config(
+                    "trace replay is a single-GPU path; drop \
+                     .capacities() or .trace()".into()));
+            }
+            return Ok(match faults {
+                Some(f) => SweepCell::Fault(FaultScenario::cluster(
+                    label, cfg, registry, caps, placement, rebalancer,
+                    f)?),
+                None => SweepCell::Cluster(ClusterScenario::with_policies(
+                    label, cfg, registry, caps, placement, rebalancer)?),
+            });
+        }
+        if let Some(t) = trace {
+            cfg.faults = faults.or(cfg.faults.take());
+            return Ok(SweepCell::Trace(TraceScenario::new(
+                label, cfg, registry, t, policy)));
+        }
+        if let Some(econ) = cfg.economics.take() {
+            cfg.faults = faults.or(cfg.faults.take());
+            return Ok(SweepCell::Cost(CostScenario::new(
+                label, cfg, registry, econ, policy)));
+        }
+        if let Some(f) = faults {
+            return Ok(SweepCell::Fault(FaultScenario::single(
+                label, cfg, registry, policy, f)));
+        }
+        Ok(SweepCell::Single(Scenario::new(label, cfg, registry, policy)))
     }
 }
 
@@ -749,6 +1126,7 @@ mod tests {
     use super::*;
     use crate::sim::fault::{AdmissionControl, FaultModel, FaultPlan,
                             ShedPolicy};
+    use crate::workload::WorkflowSpec;
 
     fn paper_grid() -> Vec<Scenario> {
         PolicyKind::all().into_iter()
@@ -768,19 +1146,23 @@ mod tests {
                                               PolicyKind::adaptive())),
             SweepCell::Cluster(ClusterScenario::new(
                 "cluster/2gpu", SimConfig::paper(), AgentRegistry::paper(),
-                2, 1.0, None).unwrap()),
+                2, 1.0, Rebalancer::Static).unwrap()),
             SweepCell::Trace(TraceScenario::new(
                 "trace/adaptive", SimConfig::paper(),
                 AgentRegistry::paper(), Trace::paper_poisson(40, 7),
                 PolicyKind::adaptive())),
             SweepCell::Single(Scenario::paper("single/static",
                                               PolicyKind::static_equal())),
-            SweepCell::Cluster(ClusterScenario::heterogeneous(
+            SweepCell::Cluster(ClusterScenario::with_policies(
                 "cluster/hetero", SimConfig::paper(),
-                AgentRegistry::paper(), vec![1.0, 0.5], None).unwrap()),
+                AgentRegistry::paper(), vec![1.0, 0.5],
+                PlacementStrategy::HeadroomDecreasing,
+                Rebalancer::Static).unwrap()),
             SweepCell::Cluster(ClusterScenario::new(
                 "cluster/4gpu", SimConfig::paper(), AgentRegistry::paper(),
-                4, 1.0, Some(MigrationModel::default())).unwrap()),
+                4, 1.0,
+                Rebalancer::HottestAgent(MigrationModel::default()))
+                .unwrap()),
             SweepCell::Cluster(ClusterScenario::with_policies(
                 "cluster/spread/repack", SimConfig::paper(),
                 AgentRegistry::paper(), vec![1.0, 0.75, 0.5, 0.25],
@@ -817,6 +1199,20 @@ mod tests {
                 ServingFaults::new(FaultPlan::empty()).with_admission(
                     AdmissionControl::new(64,
                                           ShedPolicy::DropByPriority)))),
+            SweepCell::Workflow(WorkflowScenario::single(
+                "workflow/single/critical_path", SimConfig::paper(),
+                AgentRegistry::paper(),
+                PolicyKind::critical_path_for(&WorkflowSpec::paper(), 4),
+                WorkflowWorkload::paper()).unwrap()),
+            SweepCell::Workflow(WorkflowScenario::cluster(
+                "workflow/cluster/colocate", SimConfig::paper(),
+                AgentRegistry::paper(), vec![1.2, 1.2],
+                PlacementStrategy::WorkflowColocate, Rebalancer::Static,
+                WorkflowWorkload::paper()).unwrap()),
+            SweepCell::Workflow(WorkflowScenario::serving(
+                "workflow/serving/adaptive", serving_cfg(),
+                AgentRegistry::paper(), PolicyKind::adaptive(),
+                WorkflowWorkload::paper()).unwrap()),
         ]
     }
 
@@ -900,6 +1296,19 @@ mod tests {
                             run.result.as_sim().is_some()
                         };
                         assert!(ok, "{}", run.label);
+                    }
+                    SweepCell::Workflow(w) => {
+                        let ok = if w.as_cluster_scenario().is_some() {
+                            run.result.as_cluster().is_some()
+                        } else if w.as_serving_scenario().is_some() {
+                            run.result.as_serving().is_some()
+                        } else {
+                            run.result.as_sim().is_some()
+                        };
+                        assert!(ok, "{}", run.label);
+                        assert!(run.result.workflow().is_some(),
+                                "{}: workflow cell must carry its stats",
+                                run.label);
                     }
                 }
             }
@@ -989,6 +1398,26 @@ mod tests {
                         assert_eq!(got, &want, "{}", run.label);
                     }
                 }
+                SweepCell::Workflow(sc) => {
+                    if let Some(s) = sc.as_single() {
+                        let mut policy = s.policy.clone();
+                        let want = s.simulator().run(&mut policy);
+                        let got = run.result.as_sim().unwrap();
+                        assert_eq!(got.mean_latency(),
+                                   want.mean_latency(), "{}", run.label);
+                        assert_eq!(got.workflow, want.workflow,
+                                   "{}", run.label);
+                    } else if let Some(s) = sc.as_cluster_scenario() {
+                        let want = s.simulator().run().unwrap();
+                        let got = run.result.as_cluster().unwrap();
+                        assert_eq!(got, &want, "{}", run.label);
+                    } else if let Some(s) = sc.as_serving_scenario() {
+                        let mut policy = s.policy.clone();
+                        let want = s.simulator().run(&mut policy);
+                        let got = run.result.as_serving().unwrap();
+                        assert_eq!(got, &want, "{}", run.label);
+                    }
+                }
             }
         }
     }
@@ -1062,5 +1491,165 @@ mod tests {
         let runs = run_sweep(&cells, 2);
         assert!(runs.iter().all(|r| r.result.as_sim()
                 .is_some_and(|s| s.steps == 10)));
+    }
+
+    /// Full-result equality across cell-result kinds (SimResult derives
+    /// no PartialEq, so its comparable fields are checked one by one).
+    fn assert_cell_results_match(a: &CellResult, b: &CellResult,
+                                 label: &str) {
+        match (a, b) {
+            (CellResult::Sim(x), CellResult::Sim(y)) => {
+                assert_eq!(x.mean_latency(), y.mean_latency(), "{label}");
+                assert_eq!(x.agent_latencies(), y.agent_latencies(),
+                           "{label}");
+                assert_eq!(x.agent_throughputs(), y.agent_throughputs(),
+                           "{label}");
+                assert_eq!(x.cost_dollars, y.cost_dollars, "{label}");
+                assert_eq!(x.economics, y.economics, "{label}");
+                assert_eq!(x.resilience, y.resilience, "{label}");
+                assert_eq!(x.workflow, y.workflow, "{label}");
+            }
+            (CellResult::Cluster(x), CellResult::Cluster(y)) =>
+                assert_eq!(x, y, "{label}"),
+            (CellResult::Serving(x), CellResult::Serving(y)) =>
+                assert_eq!(x, y, "{label}"),
+            _ => panic!("{label}: cell-result kinds differ"),
+        }
+    }
+
+    #[test]
+    fn builder_cells_are_bit_identical_to_constructor_cells() {
+        let reg = AgentRegistry::paper;
+        let cfg = SimConfig::paper;
+        let trace = Arc::new(Trace::paper_poisson(40, 7));
+        let serving_trace = Arc::new(Trace::paper_poisson(2, 7));
+        let plan = || FaultConfig::new(
+            FaultModel::spot(0.01, 42).generate(1, 100.0));
+        let sfaults = || ServingFaults::new(FaultPlan::empty())
+            .with_admission(AdmissionControl::new(
+                64, ShedPolicy::DropByPriority));
+
+        // One builder cell per kind, paired with its constructor twin.
+        let built: Vec<SweepCell> = vec![
+            ScenarioBuilder::new("single", cfg(), reg())
+                .policy(PolicyKind::static_equal()).build().unwrap(),
+            ScenarioBuilder::new("cluster", cfg(), reg())
+                .gpus(2, 1.0).build().unwrap(),
+            ScenarioBuilder::new("cluster/spread", cfg(), reg())
+                .capacities(vec![1.0, 0.5])
+                .placement(PlacementStrategy::PrioritySpread)
+                .rebalancer(Rebalancer::Repack(MigrationModel::default()))
+                .build().unwrap(),
+            ScenarioBuilder::new("trace", cfg(), reg())
+                .trace(Arc::clone(&trace)).build().unwrap(),
+            ScenarioBuilder::new("cost", cfg(), reg())
+                .economics(EconomicsModel::with_idle_timeout(5.0))
+                .build().unwrap(),
+            ScenarioBuilder::new("serving", cfg(), reg())
+                .serving(serving_cfg()).build().unwrap(),
+            ScenarioBuilder::new("serving/trace", cfg(), reg())
+                .serving(serving_cfg()).trace(Arc::clone(&serving_trace))
+                .build().unwrap(),
+            ScenarioBuilder::new("fault", cfg(), reg())
+                .faults(plan()).build().unwrap(),
+            ScenarioBuilder::new("fault/cluster", cfg(), reg())
+                .capacities(vec![1.2, 1.2]).faults(plan())
+                .build().unwrap(),
+            ScenarioBuilder::new("fault/serving", cfg(), reg())
+                .serving(serving_cfg()).serving_faults(sfaults())
+                .build().unwrap(),
+            ScenarioBuilder::new("workflow", cfg(), reg())
+                .policy(PolicyKind::critical_path_for(
+                    &WorkflowSpec::paper(), 4))
+                .workflow(WorkflowWorkload::paper()).build().unwrap(),
+            ScenarioBuilder::new("workflow/cluster", cfg(), reg())
+                .capacities(vec![1.2, 1.2])
+                .placement(PlacementStrategy::WorkflowColocate)
+                .workflow(WorkflowWorkload::paper()).build().unwrap(),
+            ScenarioBuilder::new("workflow/serving", cfg(), reg())
+                .serving(serving_cfg())
+                .workflow(WorkflowWorkload::paper()).build().unwrap(),
+        ];
+        let constructed: Vec<SweepCell> = vec![
+            SweepCell::Single(Scenario::new(
+                "single", cfg(), reg(), PolicyKind::static_equal())),
+            SweepCell::Cluster(ClusterScenario::new(
+                "cluster", cfg(), reg(), 2, 1.0,
+                Rebalancer::Static).unwrap()),
+            SweepCell::Cluster(ClusterScenario::with_policies(
+                "cluster/spread", cfg(), reg(), vec![1.0, 0.5],
+                PlacementStrategy::PrioritySpread,
+                Rebalancer::Repack(MigrationModel::default())).unwrap()),
+            SweepCell::Trace(TraceScenario::new(
+                "trace", cfg(), reg(), Arc::clone(&trace),
+                PolicyKind::adaptive())),
+            SweepCell::Cost(CostScenario::new(
+                "cost", cfg(), reg(),
+                EconomicsModel::with_idle_timeout(5.0),
+                PolicyKind::adaptive())),
+            SweepCell::Serving(ServingScenario::new(
+                "serving", serving_cfg(), reg(), PolicyKind::adaptive())),
+            SweepCell::Serving(ServingScenario::from_trace(
+                "serving/trace", serving_cfg(), reg(),
+                Arc::clone(&serving_trace), PolicyKind::adaptive())),
+            SweepCell::Fault(FaultScenario::single(
+                "fault", cfg(), reg(), PolicyKind::adaptive(), plan())),
+            SweepCell::Fault(FaultScenario::cluster(
+                "fault/cluster", cfg(), reg(), vec![1.2, 1.2],
+                PlacementStrategy::default(), Rebalancer::Static,
+                plan()).unwrap()),
+            SweepCell::Fault(FaultScenario::serving(
+                "fault/serving", serving_cfg(), reg(),
+                PolicyKind::adaptive(), sfaults())),
+            SweepCell::Workflow(WorkflowScenario::single(
+                "workflow", cfg(), reg(),
+                PolicyKind::critical_path_for(&WorkflowSpec::paper(), 4),
+                WorkflowWorkload::paper()).unwrap()),
+            SweepCell::Workflow(WorkflowScenario::cluster(
+                "workflow/cluster", cfg(), reg(), vec![1.2, 1.2],
+                PlacementStrategy::WorkflowColocate, Rebalancer::Static,
+                WorkflowWorkload::paper()).unwrap()),
+            SweepCell::Workflow(WorkflowScenario::serving(
+                "workflow/serving", serving_cfg(), reg(),
+                PolicyKind::adaptive(),
+                WorkflowWorkload::paper()).unwrap()),
+        ];
+        assert_eq!(built.len(), constructed.len());
+        let a = run_sweep(&built, 2);
+        let b = run_sweep(&constructed, 2);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.label, y.label);
+            assert_cell_results_match(&x.result, &y.result, &x.label);
+        }
+    }
+
+    #[test]
+    fn builder_routes_each_axis_set_to_the_right_cell_kind() {
+        let cell = ScenarioBuilder::new(
+            "w", SimConfig::paper(), AgentRegistry::paper())
+            .workflow(WorkflowWorkload::paper()).build().unwrap();
+        assert!(matches!(cell, SweepCell::Workflow(_)));
+        let cell = ScenarioBuilder::new(
+            "f+c", SimConfig::paper(), AgentRegistry::paper())
+            .gpus(2, 1.0)
+            .faults(FaultConfig::new(FaultPlan::empty())).build().unwrap();
+        assert!(matches!(cell, SweepCell::Fault(_)));
+        let cell = ScenarioBuilder::new(
+            "bare", SimConfig::paper(), AgentRegistry::paper())
+            .build().unwrap();
+        assert!(matches!(cell, SweepCell::Single(_)));
+    }
+
+    #[test]
+    fn builder_rejects_incompatible_axis_combinations() {
+        let mk = || ScenarioBuilder::new(
+            "bad", SimConfig::paper(), AgentRegistry::paper());
+        assert!(mk().trace(Trace::paper_poisson(10, 1))
+                .workflow(WorkflowWorkload::paper()).build().is_err());
+        assert!(mk().trace(Trace::paper_poisson(10, 1))
+                .gpus(2, 1.0).build().is_err());
+        assert!(mk().serving(serving_cfg()).gpus(2, 1.0).build().is_err());
+        assert!(mk().serving_faults(ServingFaults::new(FaultPlan::empty()))
+                .build().is_err());
     }
 }

@@ -20,7 +20,8 @@ use crate::metrics::TimeSeries;
 use crate::serverless::EconInstruments;
 use crate::sim::fault::FaultTracker;
 use crate::sim::{AgentStats, SimArena, SimConfig, SimResult, Timelines};
-use crate::workload::WorkloadGenerator;
+use crate::workload::{WorkflowTracker, WorkflowWorkload,
+                      WorkloadGenerator};
 
 /// Arrival stream feeding [`Simulator`]'s inner loop: realized per-step
 /// arrivals plus the skip-idle oracle.
@@ -110,6 +111,11 @@ impl Simulator {
     pub fn with_registry(cfg: SimConfig, registry: AgentRegistry) -> Self {
         assert_eq!(cfg.arrival_rates.len(), registry.len(),
                    "arrival_rates must cover every agent");
+        if let Some(wf) = &cfg.workflow {
+            if let Err(e) = wf.spec.validate_for(registry.len()) {
+                panic!("{e}");
+            }
+        }
         Simulator { cfg, registry }
     }
 
@@ -178,7 +184,7 @@ impl Simulator {
             self.cfg.arrival_rates.clone(), self.cfg.workload_kind.clone(),
             self.cfg.arrival_process, self.cfg.seed));
         self.run_inner(policy, &mut source, self.cfg.steps, self.cfg.dt,
-                       arena, skip_idle)
+                       arena, skip_idle, self.cfg.workflow.as_ref())
     }
 
     /// Run one policy over a recorded arrival [`Trace`] instead of the
@@ -236,13 +242,16 @@ impl Simulator {
             panic!("{e}");
         }
         let mut source = TraceSource { rows: &trace.counts };
+        // Trace replay reproduces a recorded per-agent stream; the
+        // workflow axis does not apply to it.
         self.run_inner(policy, &mut source, trace.counts.len() as u64,
-                       trace.dt, arena, skip_idle)
+                       trace.dt, arena, skip_idle, None)
     }
 
     fn run_inner<P>(&self, policy: &mut P, source: &mut dyn ArrivalSource,
                     steps: u64, dt: f64, arena: &mut SimArena,
-                    skip_idle: bool) -> SimResult
+                    skip_idle: bool, workflow: Option<&WorkflowWorkload>)
+                    -> SimResult
     where
         P: AllocationPolicy + ?Sized,
     {
@@ -287,6 +296,13 @@ impl Simulator {
         let mut fault = FaultTracker::new(cfg.faults.as_ref());
         let mut processed_sum = 0.0;
 
+        // Optional workflow-DAG coupling: the tracker replaces the
+        // arrival source outright — it releases multi-stage instances,
+        // injects each stage's work as arrivals only once its upstream
+        // stages complete, and meters end-to-end instance latency.
+        let mut wf = workflow.map(|w| WorkflowTracker::new(
+            w, cfg.arrival_process, cfg.seed, n));
+
         let mut step = 0u64;
         while step < steps {
             // 0. Skip-idle fast path: when the whole system is provably
@@ -304,8 +320,14 @@ impl Simulator {
                 && policy.idle_fixed_point(n)
                 && econ.idle_fixed_point()
             {
+                let arrivals_idle = match wf.as_ref() {
+                    // A drained workflow tracker stays drained: no rate,
+                    // no armed stages, no in-flight work anywhere.
+                    Some(t) => t.idle().then_some(u64::MAX),
+                    None => source.idle_until(step),
+                };
                 if let (Some(w), Some(f)) =
-                    (source.idle_until(step), fault.idle_until(step, dt))
+                    (arrivals_idle, fault.idle_until(step, dt))
                 {
                     let until = w.min(f).min(steps);
                     if until > step {
@@ -328,8 +350,22 @@ impl Simulator {
                 }
             }
 
-            // 1. Arrivals join their agent's queue.
-            source.next(step, dt, &mut rates[..], &mut counts[..]);
+            // 1. Arrivals join their agent's queue. With a workflow
+            //    configured, the tracker is the arrival process: armed
+            //    downstream stages plus this tick's newly released
+            //    instances, instead of the per-agent streams.
+            match wf.as_mut() {
+                Some(t) => {
+                    counts.fill(0.0);
+                    t.begin_step(step, dt, &mut counts[..]);
+                    for (r, c) in rates.iter_mut().zip(counts.iter()) {
+                        *r = c / dt;
+                    }
+                }
+                None => {
+                    source.next(step, dt, &mut rates[..], &mut counts[..]);
+                }
+            }
             for i in 0..n {
                 queues[i] += counts[i];
                 arrived_total[i] += counts[i];
@@ -383,6 +419,11 @@ impl Simulator {
                 let processed = queues[i].min(cap);
                 queues[i] -= processed;
                 processed_sum += processed;
+                if processed > 0.0 {
+                    if let Some(t) = wf.as_mut() {
+                        t.consume(i, processed, (step as f64 + 1.0) * dt);
+                    }
+                }
 
                 let latency = if rate > 0.0 {
                     (queues[i] / rate).min(cfg.latency_cap_s)
@@ -449,6 +490,7 @@ impl Simulator {
             gpu_seconds,
             economics,
             resilience,
+            workflow: wf.map(WorkflowTracker::finish),
             timelines,
         }
     }
@@ -486,6 +528,7 @@ mod tests {
         assert_eq!(a.gpu_seconds, b.gpu_seconds);
         assert_eq!(a.economics, b.economics);
         assert_eq!(a.resilience, b.resilience);
+        assert_eq!(a.workflow, b.workflow);
     }
 
     /// A workload whose only traffic is one agent's mid-run burst — the
@@ -903,6 +946,76 @@ mod tests {
             counts: vec![vec![0.0; 4], vec![1.0; 3], vec![0.0; 4]],
         };
         paper_sim().run_trace(&mut AdaptivePolicy::default(), &trace);
+    }
+
+    #[test]
+    fn workflow_run_surfaces_end_to_end_stats() {
+        use crate::workload::WorkflowWorkload;
+        let mut cfg = SimConfig::paper();
+        cfg.workflow = Some(WorkflowWorkload::paper());
+        let sim = Simulator::new(cfg, AgentProfile::paper_agents());
+        let r = sim.run(&mut AdaptivePolicy::default());
+        let wf = r.workflow.as_ref().expect("workflow configured");
+        assert!(wf.started > 0, "instances released");
+        assert!(wf.completed > 0, "instances finish end to end");
+        assert!(wf.completed <= wf.started);
+        assert!(wf.mean_s() > 0.0, "fan-out takes at least 3 ticks");
+        assert!(wf.p99_s() >= wf.mean_s() - 1e-9);
+        // Plain runs carry no workflow report.
+        assert!(paper_sim().run(&mut AdaptivePolicy::default())
+                .workflow.is_none());
+    }
+
+    #[test]
+    fn workflow_stages_wait_for_upstream_in_virtual_time() {
+        use crate::workload::{WorkflowSpec, WorkflowWorkload};
+        // A 2-stage chain 0 -> 1 at 1 instance/s: the specialist agent
+        // must see zero throughput on the very first tick (its stage is
+        // not yet eligible) and nonzero on the next.
+        let spec = WorkflowSpec::chain("chain2", &[0, 1]);
+        let mut cfg = SimConfig::paper();
+        cfg.workflow = Some(WorkflowWorkload::new(spec, 1.0));
+        cfg.record_timelines = true;
+        let sim = Simulator::new(cfg, AgentProfile::paper_agents());
+        let r = sim.run(&mut AdaptivePolicy::default());
+        let tl = r.timelines.expect("timelines");
+        let t0 = tl.throughput.rows().next().expect("step 0");
+        assert!(t0[0] > 0.0, "stage 0 processes on arrival");
+        assert_eq!(t0[1], 0.0, "stage 1 cannot start before stage 0");
+        let t1 = tl.throughput.rows().nth(1).expect("step 1");
+        assert!(t1[1] > 0.0, "stage 1 armed the tick after");
+        // Agents off the DAG never see traffic.
+        assert_eq!(r.per_agent[2].arrived_total, 0.0);
+        assert_eq!(r.per_agent[3].arrived_total, 0.0);
+    }
+
+    #[test]
+    fn skip_idle_is_bit_exact_on_workflow_runs() {
+        use crate::workload::{ArrivalProcess, WorkflowWorkload};
+        for poisson in [false, true] {
+            let mut cfg = SimConfig::paper();
+            if poisson {
+                cfg.arrival_process = ArrivalProcess::Poisson;
+            }
+            cfg.workflow = Some(WorkflowWorkload::paper());
+            let sim = Simulator::new(cfg, AgentProfile::paper_agents());
+            for mut p in crate::allocator::all_policies() {
+                let skip = sim.run(p.as_mut());
+                let dense = sim.run_dense(p.as_mut());
+                assert_bit_identical(&skip, &dense);
+                assert!(skip.workflow.is_some());
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "config error")]
+    fn workflow_spec_must_fit_the_registry() {
+        use crate::workload::{WorkflowSpec, WorkflowWorkload};
+        let spec = WorkflowSpec::chain("wide", &[0, 9]);
+        let mut cfg = SimConfig::paper();
+        cfg.workflow = Some(WorkflowWorkload::new(spec, 1.0));
+        Simulator::new(cfg, AgentProfile::paper_agents());
     }
 
     #[test]

@@ -54,8 +54,8 @@ mod result;
 pub use arena::SimArena;
 pub use batch::{run_batch, run_sweep, BatchRun, CellResult,
                 ClusterScenario, CostScenario, FaultScenario, Scenario,
-                ServingScenario, SweepArena, SweepCell, SweepRun,
-                TraceScenario};
+                ScenarioBuilder, ServingScenario, SweepArena, SweepCell,
+                SweepRun, TraceScenario, WorkflowScenario};
 pub use engine::Simulator;
 pub use fault::{AdmissionControl, FaultConfig, FaultEvent, FaultModel,
                 FaultPlan, ResilienceReport, RetryPolicy, ServingFaults,
@@ -63,7 +63,7 @@ pub use fault::{AdmissionControl, FaultConfig, FaultEvent, FaultModel,
 pub use result::{AgentStats, SimResult, Timelines};
 
 use crate::serverless::{EconomicsModel, GpuPricing};
-use crate::workload::{ArrivalProcess, WorkloadKind};
+use crate::workload::{ArrivalProcess, WorkflowWorkload, WorkloadKind};
 
 /// Full configuration of one simulation run.
 #[derive(Debug, Clone)]
@@ -109,6 +109,17 @@ pub struct SimConfig {
     /// default) is provably zero-cost: no float op or RNG draw differs
     /// from a build without the fault layer.
     pub faults: Option<FaultConfig>,
+    /// Workflow-DAG workload ([`WorkflowWorkload`]): when set, the
+    /// arrival process releases multi-stage workflow instances (spec ×
+    /// rate) instead of the independent per-agent streams —
+    /// [`SimConfig::arrival_rates`] and [`SimConfig::workload_kind`]
+    /// are ignored for arrival generation. Downstream stages inject
+    /// their work only after their upstream stages complete, and the
+    /// run surfaces end-to-end [`WorkflowStats`] on the result. `None`
+    /// (the default) keeps the paper's per-agent streams.
+    ///
+    /// [`WorkflowStats`]: crate::workload::WorkflowStats
+    pub workflow: Option<WorkflowWorkload>,
 }
 
 impl SimConfig {
@@ -128,6 +139,7 @@ impl SimConfig {
             record_timelines: false,
             economics: None,
             faults: None,
+            workflow: None,
         }
     }
 

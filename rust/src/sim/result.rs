@@ -65,6 +65,10 @@ pub struct SimResult {
     /// present when the run's config set a non-inert
     /// [`FaultConfig`](crate::sim::fault::FaultConfig).
     pub resilience: Option<ResilienceReport>,
+    /// End-to-end workflow latency stats (started/completed instances,
+    /// mean/p99), present when the run's config carried a
+    /// [`WorkflowWorkload`](crate::workload::WorkflowWorkload).
+    pub workflow: Option<crate::workload::WorkflowStats>,
     /// Full timelines when requested.
     pub timelines: Option<Timelines>,
 }

@@ -220,7 +220,7 @@ pub fn compare_bench_reports(baseline: &Value, measured: &Value,
                  base.get("batch"), meas.get("batch"));
 
     for section in ["cluster", "corpus", "cost", "serving", "placement",
-                    "faults", "large_n"] {
+                    "faults", "workflow", "large_n"] {
         let (b, m) = match (base.get(section), meas.get(section)) {
             (Some(b), Some(m)) => (b, m),
             // Not in the baseline yet: schema growth, note and move on.

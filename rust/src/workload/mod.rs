@@ -4,9 +4,15 @@
 //! fixed random seed) plus three robustness scenarios (§V.B): 3× overload,
 //! 10× spike, and 90 % single-agent dominance. [`WorkloadGenerator`]
 //! produces all of them, and [`trace`] records/replays arrival traces as
-//! CSV so serving runs are reproducible end-to-end.
+//! CSV so serving runs are reproducible end-to-end. [`workflow`] adds
+//! the collaborative-reasoning axis: multi-stage workflow-DAG tasks
+//! ([`WorkflowSpec`]) released by a seeded [`WorkflowTracker`] instead
+//! of independent per-agent streams.
 
 mod generator;
 pub mod trace;
+mod workflow;
 
 pub use generator::{ArrivalProcess, WorkloadGenerator, WorkloadKind};
+pub use workflow::{WorkflowSpec, WorkflowStage, WorkflowStats,
+                   WorkflowTracker, WorkflowWorkload};

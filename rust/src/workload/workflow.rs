@@ -1,0 +1,708 @@
+//! Workflow-DAG workloads: multi-stage tasks over the agent deployment.
+//!
+//! The paper's premise is multi-agent *collaborative* reasoning — a
+//! coordinator plans, specialists fan out, the coordinator aggregates —
+//! yet independent per-agent Poisson streams cannot express the
+//! coupling: a specialist's work only exists once the plan stage has
+//! completed. This module extracts that stage structure into pure data:
+//!
+//! * [`WorkflowSpec`] — a validated DAG of [`WorkflowStage`]s (per-stage
+//!   agent + work cost + dependency edges on earlier stages). Topological
+//!   order is by construction: a stage may only depend on stages with a
+//!   smaller index.
+//! * [`WorkflowWorkload`] — the config-level knob (spec × arrival rate)
+//!   carried by `SimConfig`/`ServingConfig`. When set, it *replaces* the
+//!   independent per-agent arrival streams: the arrival process now
+//!   releases whole workflow instances.
+//! * [`WorkflowTracker`] — the seeded generator + DAG bookkeeping the
+//!   fluid engines drive: per tick it releases new instances (the
+//!   configured [`ArrivalProcess`], deterministic carry or Poisson
+//!   draws), injects the *eligible* stages' work as arrival mass, and
+//!   consumes processed mass FIFO per agent; a downstream stage only
+//!   becomes eligible on the tick after its last upstream stage
+//!   completed. End-to-end workflow latency lands in a [`Histogram`].
+//! * [`WorkflowStats`] — first-class result fields (started/completed,
+//!   mean and p99 end-to-end latency), exact `PartialEq` so workflow
+//!   cells hold the same bit-identical parallel-sweep contract as every
+//!   other cell kind.
+//!
+//! The serving engine executes the same spec natively in virtual time
+//! (each stage becomes `ceil(work)` queued requests, successors enqueue
+//! at the completing batch's virtual `now`); the threaded
+//! `coordinator::workflow::ReasoningPipeline` is a thin shell over the
+//! same spec.
+
+use std::collections::VecDeque;
+
+use crate::error::{Error, Result};
+use crate::metrics::Histogram;
+use crate::util::Rng;
+use crate::workload::ArrivalProcess;
+
+/// Salt mixed into the run seed for the workflow-release RNG so the
+/// instance-release stream is decoupled from any other draw stream.
+const WORKFLOW_SEED_SALT: u64 = 0x5EED_CAFE;
+
+/// Mass below which a stage's remaining work counts as fully consumed
+/// (absorbs float drift between the engine's scalar queue accounting and
+/// the tracker's per-stage ledger).
+const WORK_EPS: f64 = 1e-9;
+
+/// One stage of a workflow DAG: which agent runs it, how much work it
+/// is (request mass in the fluid engines, `ceil(work)` individual
+/// requests in the serving engine), and which earlier stages must
+/// complete before it becomes eligible.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkflowStage {
+    /// Agent (registry index) that executes this stage.
+    pub agent: usize,
+    /// Work cost in requests (must be finite and positive).
+    pub work: f64,
+    /// Indices of stages this one waits on — each strictly smaller than
+    /// this stage's own index, so every spec is topologically ordered by
+    /// construction.
+    pub deps: Vec<usize>,
+}
+
+/// A validated workflow DAG: named, topologically ordered stages.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkflowSpec {
+    name: String,
+    stages: Vec<WorkflowStage>,
+}
+
+impl WorkflowSpec {
+    /// Build and validate a spec: at least one stage, every work cost
+    /// finite and positive, every dependency pointing at an earlier
+    /// stage (which makes cycles unrepresentable).
+    pub fn new(name: impl Into<String>, stages: Vec<WorkflowStage>)
+               -> Result<WorkflowSpec> {
+        let name = name.into();
+        if stages.is_empty() {
+            return Err(Error::Config(format!(
+                "workflow spec '{name}' has no stages")));
+        }
+        for (i, st) in stages.iter().enumerate() {
+            if !st.work.is_finite() || st.work <= 0.0 {
+                return Err(Error::Config(format!(
+                    "workflow spec '{name}' stage {i}: work {} must be \
+                     finite and positive", st.work)));
+            }
+            for &d in &st.deps {
+                if d >= i {
+                    return Err(Error::Config(format!(
+                        "workflow spec '{name}' stage {i}: dependency \
+                         {d} is not an earlier stage")));
+                }
+            }
+        }
+        Ok(WorkflowSpec { name, stages })
+    }
+
+    /// The collaborative-reasoning shape from the paper's premise: one
+    /// plan stage on `coordinator`, a parallel fan-out over
+    /// `specialists` (each gated on the plan), and an aggregation stage
+    /// back on `coordinator` gated on every specialist. Plan and
+    /// aggregation cost 1 request each, specialists 2 (the heavy
+    /// reasoning legs).
+    pub fn fan_out(name: impl Into<String>, coordinator: usize,
+                   specialists: &[usize]) -> WorkflowSpec {
+        let mut stages = vec![WorkflowStage {
+            agent: coordinator,
+            work: 1.0,
+            deps: Vec::new(),
+        }];
+        for &s in specialists {
+            stages.push(WorkflowStage {
+                agent: s,
+                work: 2.0,
+                deps: vec![0],
+            });
+        }
+        stages.push(WorkflowStage {
+            agent: coordinator,
+            work: 1.0,
+            deps: (1..=specialists.len()).collect(),
+        });
+        WorkflowSpec::new(name, stages)
+            .expect("fan_out constructs a valid spec")
+    }
+
+    /// A strictly sequential pipeline: each stage (1 request of work)
+    /// waits on the previous one.
+    pub fn chain(name: impl Into<String>, agents: &[usize])
+                 -> WorkflowSpec {
+        assert!(!agents.is_empty(), "chain needs at least one agent");
+        let stages = agents.iter().enumerate()
+            .map(|(i, &a)| WorkflowStage {
+                agent: a,
+                work: 1.0,
+                deps: if i == 0 { Vec::new() } else { vec![i - 1] },
+            })
+            .collect();
+        WorkflowSpec::new(name, stages)
+            .expect("chain constructs a valid spec")
+    }
+
+    /// The paper deployment's collaborative shape: coordinator (agent 0)
+    /// plans, NLP/vision/reasoning (agents 1–3) fan out, coordinator
+    /// aggregates.
+    pub fn paper() -> WorkflowSpec {
+        WorkflowSpec::fan_out("fanout3", 0, &[1, 2, 3])
+    }
+
+    /// The spec shapes the workflow grid sweeps over the paper's
+    /// 4-agent deployment: full fan-out, a 2-specialist fan-out, and a
+    /// sequential chain.
+    pub fn paper_shapes() -> Vec<WorkflowSpec> {
+        vec![
+            WorkflowSpec::paper(),
+            WorkflowSpec::fan_out("fanout2", 0, &[1, 2]),
+            WorkflowSpec::chain("chain3", &[0, 1, 3]),
+        ]
+    }
+
+    /// The spec's name (used in grid labels).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The stages, in topological order.
+    pub fn stages(&self) -> &[WorkflowStage] {
+        &self.stages
+    }
+
+    /// Largest agent index referenced by any stage.
+    pub fn max_agent(&self) -> usize {
+        self.stages.iter().map(|s| s.agent).max().unwrap_or(0)
+    }
+
+    /// Error unless every referenced agent exists in a deployment of
+    /// `n_agents` agents.
+    pub fn validate_for(&self, n_agents: usize) -> Result<()> {
+        if self.max_agent() >= n_agents {
+            return Err(Error::Config(format!(
+                "workflow spec '{}' references agent {} but the \
+                 deployment has {} agents",
+                self.name, self.max_agent(), n_agents)));
+        }
+        Ok(())
+    }
+
+    /// Sum of all stage work costs (requests per workflow instance).
+    pub fn total_work(&self) -> f64 {
+        self.stages.iter().map(|s| s.work).sum()
+    }
+
+    /// Per-agent criticality weights in `[0, 1]` for a deployment of
+    /// `n_agents` agents: each stage contributes its work, scaled by how
+    /// much of the DAG's critical path runs through it (longest
+    /// path-through / longest path overall), to its agent; the result is
+    /// normalized so the most critical agent weighs 1. Agents outside
+    /// the spec weigh 0. This is what the critical-path allocation
+    /// policy boosts by.
+    pub fn critical_path_weights(&self, n_agents: usize) -> Vec<f64> {
+        let k = self.stages.len();
+        // Longest path ending at each stage (inclusive), topological.
+        let mut up = vec![0.0f64; k];
+        for i in 0..k {
+            let best = self.stages[i].deps.iter()
+                .map(|&d| up[d])
+                .fold(0.0f64, f64::max);
+            up[i] = best + self.stages[i].work;
+        }
+        // Longest path starting at each stage (inclusive), reverse.
+        let mut down = vec![0.0f64; k];
+        for i in (0..k).rev() {
+            let mut best = 0.0f64;
+            for (j, stage) in self.stages.iter().enumerate().skip(i + 1) {
+                if stage.deps.contains(&i) {
+                    best = best.max(down[j]);
+                }
+            }
+            down[i] = best + self.stages[i].work;
+        }
+        let critical = up.iter().cloned().fold(0.0f64, f64::max);
+        let mut weights = vec![0.0f64; n_agents];
+        for (i, stage) in self.stages.iter().enumerate() {
+            if stage.agent < n_agents && critical > 0.0 {
+                let through = (up[i] + down[i] - stage.work) / critical;
+                weights[stage.agent] += stage.work * through;
+            }
+        }
+        let max = weights.iter().cloned().fold(0.0f64, f64::max);
+        if max > 0.0 {
+            for w in weights.iter_mut() {
+                *w /= max;
+            }
+        }
+        weights
+    }
+}
+
+/// Config-level workflow workload: when carried by a simulation config,
+/// the arrival process releases `rate` workflow instances per second
+/// (replacing the independent per-agent streams) and every engine
+/// surfaces end-to-end [`WorkflowStats`] on its result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkflowWorkload {
+    /// The DAG every released instance executes.
+    pub spec: WorkflowSpec,
+    /// Mean instance releases per second (the config's arrival process
+    /// decides deterministic-carry vs Poisson draws).
+    pub rate: f64,
+}
+
+impl WorkflowWorkload {
+    /// Workload releasing `rate` instances of `spec` per second.
+    pub fn new(spec: WorkflowSpec, rate: f64) -> WorkflowWorkload {
+        WorkflowWorkload { spec, rate }
+    }
+
+    /// The paper fan-out shape at a rate that keeps the deployment
+    /// busy without saturating it (0.5 workflows/s).
+    pub fn paper() -> WorkflowWorkload {
+        WorkflowWorkload::new(WorkflowSpec::paper(), 0.5)
+    }
+
+    /// Materialize the instance-release times over `steps` ticks of
+    /// `dt` seconds — the serving engine's discrete twin of the
+    /// tracker's per-tick draw (same salt-decoupled RNG stream, same
+    /// deterministic carry), with same-tick releases spaced evenly
+    /// inside the tick. The result is nondecreasing.
+    pub fn release_times(&self, process: ArrivalProcess, seed: u64,
+                         steps: u64, dt: f64) -> Vec<f64> {
+        let mut rng = Rng::new(seed ^ WORKFLOW_SEED_SALT);
+        let mut carry = 0.0f64;
+        let mut times = Vec::new();
+        for step in 0..steps {
+            let k = match process {
+                ArrivalProcess::Deterministic => {
+                    carry += self.rate * dt;
+                    let whole = carry.floor();
+                    carry -= whole;
+                    whole as u64
+                }
+                ArrivalProcess::Poisson => rng.poisson(self.rate * dt),
+            };
+            let t0 = step as f64 * dt;
+            for j in 0..k {
+                times.push(t0 + dt * j as f64 / k as f64);
+            }
+        }
+        times
+    }
+}
+
+/// End-to-end workflow metrics surfaced on every result type. Exact
+/// `PartialEq` (counters plus an exact-equality [`Histogram`]), so
+/// workflow cells hold the same bit-identical sweep contract as every
+/// other cell kind.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkflowStats {
+    /// Workflow instances released into the run.
+    pub started: u64,
+    /// Instances whose final stage completed before the run ended.
+    pub completed: u64,
+    /// Sum of end-to-end latencies over completed instances (seconds).
+    pub total_latency_s: f64,
+    /// End-to-end latency distribution over completed instances.
+    pub latency: Histogram,
+}
+
+impl WorkflowStats {
+    /// Empty stats (no instances seen).
+    pub fn new() -> WorkflowStats {
+        WorkflowStats {
+            started: 0,
+            completed: 0,
+            total_latency_s: 0.0,
+            latency: Histogram::latency_seconds(),
+        }
+    }
+
+    /// Mean end-to-end latency over completed instances (seconds).
+    pub fn mean_s(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.total_latency_s / self.completed as f64
+        }
+    }
+
+    /// p99 end-to-end latency over completed instances (seconds).
+    pub fn p99_s(&self) -> f64 {
+        self.latency.p99()
+    }
+
+    /// Record one completed instance.
+    pub fn record(&mut self, latency_s: f64) {
+        self.completed += 1;
+        self.total_latency_s += latency_s;
+        self.latency.record(latency_s);
+    }
+}
+
+impl Default for WorkflowStats {
+    fn default() -> Self {
+        WorkflowStats::new()
+    }
+}
+
+/// One in-flight workflow instance inside the tracker.
+#[derive(Debug, Clone)]
+struct Job {
+    release_s: f64,
+    /// Remaining work mass per stage (only meaningful once active).
+    remaining: Vec<f64>,
+    /// Unmet dependency count per stage; a stage becomes ready at 0.
+    unmet: Vec<u32>,
+    /// Stages not yet completed; the job finishes at 0.
+    live: usize,
+}
+
+/// Seeded workflow generator + DAG bookkeeping for the fluid engines.
+///
+/// Protocol per tick (driven by `Simulator`/`ClusterSimulator`):
+///
+/// 1. [`WorkflowTracker::begin_step`] — stages that became ready at the
+///    end of the previous tick, plus the root stages of newly released
+///    instances, inject their work as arrival mass (`counts`).
+/// 2. The engine runs its normal allocate/process step over the
+///    per-agent queues.
+/// 3. [`WorkflowTracker::consume`] — per agent, the processed mass is
+///    drained FIFO through that agent's active stages; a stage whose
+///    remaining work reaches zero completes at the tick's end time,
+///    arming its successors for the *next* tick's injection (a
+///    downstream stage never starts in the tick its upstream finished —
+///    the stage-coupling contract the ordering tests pin).
+///
+/// Everything is deterministic in (spec, rate, process, seed), so
+/// workflow cells inherit the bit-identical parallel-sweep contract.
+#[derive(Debug, Clone)]
+pub struct WorkflowTracker {
+    spec: WorkflowSpec,
+    rate: f64,
+    process: ArrivalProcess,
+    rng: Rng,
+    carry: f64,
+    jobs: Vec<Job>,
+    /// Per-agent FIFO of (job, stage) currently holding queued mass.
+    active: Vec<VecDeque<(usize, usize)>>,
+    /// Stages armed during the previous tick, injected next
+    /// [`WorkflowTracker::begin_step`].
+    ready: Vec<(usize, usize)>,
+    stats: WorkflowStats,
+}
+
+impl WorkflowTracker {
+    /// Tracker for `n_agents` agents. The caller validates the spec
+    /// against the deployment first ([`WorkflowSpec::validate_for`]).
+    pub fn new(workload: &WorkflowWorkload, process: ArrivalProcess,
+               seed: u64, n_agents: usize) -> WorkflowTracker {
+        debug_assert!(workload.spec.max_agent() < n_agents);
+        WorkflowTracker {
+            spec: workload.spec.clone(),
+            rate: workload.rate,
+            process,
+            rng: Rng::new(seed ^ WORKFLOW_SEED_SALT),
+            carry: 0.0,
+            jobs: Vec::new(),
+            active: vec![VecDeque::new(); n_agents],
+            ready: Vec::new(),
+            stats: WorkflowStats::new(),
+        }
+    }
+
+    /// Inject this tick's eligible work: stages armed last tick first
+    /// (oldest instances drain first), then the root stages of instances
+    /// released this tick. Adds request mass into `counts` (the caller
+    /// zeroes the buffer first).
+    pub fn begin_step(&mut self, step: u64, dt: f64, counts: &mut [f64]) {
+        let armed = std::mem::take(&mut self.ready);
+        for (j, s) in armed {
+            self.activate(j, s, counts);
+        }
+        let releases = match self.process {
+            ArrivalProcess::Deterministic => {
+                self.carry += self.rate * dt;
+                let k = self.carry.floor();
+                self.carry -= k;
+                k as u64
+            }
+            ArrivalProcess::Poisson => self.rng.poisson(self.rate * dt),
+        };
+        for _ in 0..releases {
+            let k = self.spec.stages().len();
+            let job = Job {
+                release_s: step as f64 * dt,
+                remaining: vec![0.0; k],
+                unmet: self.spec.stages().iter()
+                    .map(|s| s.deps.len() as u32)
+                    .collect(),
+                live: k,
+            };
+            self.jobs.push(job);
+            self.stats.started += 1;
+            let j = self.jobs.len() - 1;
+            for s in 0..k {
+                if self.spec.stages()[s].deps.is_empty() {
+                    self.activate(j, s, counts);
+                }
+            }
+        }
+    }
+
+    fn activate(&mut self, j: usize, s: usize, counts: &mut [f64]) {
+        let stage = &self.spec.stages()[s];
+        self.jobs[j].remaining[s] = stage.work;
+        counts[stage.agent] += stage.work;
+        self.active[stage.agent].push_back((j, s));
+    }
+
+    /// Drain `processed` request mass through `agent`'s active stages,
+    /// FIFO. Stages completing here finish at `t_end` (the tick's end
+    /// time) and arm their successors for the next tick.
+    pub fn consume(&mut self, agent: usize, mut processed: f64,
+                   t_end: f64) {
+        while processed > WORK_EPS {
+            let Some(&(j, s)) = self.active[agent].front() else {
+                break;
+            };
+            let take = processed.min(self.jobs[j].remaining[s]);
+            self.jobs[j].remaining[s] -= take;
+            processed -= take;
+            if self.jobs[j].remaining[s] <= WORK_EPS {
+                self.active[agent].pop_front();
+                self.complete_stage(j, s, t_end);
+            }
+        }
+        // Forgive float dust on the head stage so the engine's scalar
+        // queue hitting exactly zero cannot strand a stage forever.
+        if let Some(&(j, s)) = self.active[agent].front() {
+            if self.jobs[j].remaining[s] <= WORK_EPS {
+                self.active[agent].pop_front();
+                self.complete_stage(j, s, t_end);
+            }
+        }
+    }
+
+    fn complete_stage(&mut self, j: usize, s: usize, t_end: f64) {
+        self.jobs[j].live -= 1;
+        if self.jobs[j].live == 0 {
+            self.stats.record(t_end - self.jobs[j].release_s);
+        } else {
+            for (s2, stage) in self.spec.stages().iter().enumerate()
+                .skip(s + 1)
+            {
+                if stage.deps.contains(&s) {
+                    self.jobs[j].unmet[s2] -= 1;
+                    if self.jobs[j].unmet[s2] == 0 {
+                        self.ready.push((j, s2));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Skip-idle oracle: `true` only when no tick from here on can
+    /// inject work or mutate tracker state — a zero release rate (the
+    /// deterministic carry and the Poisson stream both stay untouched
+    /// only then) with no armed or active stages. The engines keep the
+    /// dense path whenever this is `false`.
+    pub fn idle(&self) -> bool {
+        self.rate == 0.0
+            && self.ready.is_empty()
+            && self.active.iter().all(VecDeque::is_empty)
+    }
+
+    /// Stages currently holding queued mass on `agent` (test hook for
+    /// the ordering contract).
+    pub fn active_stages(&self, agent: usize) -> usize {
+        self.active[agent].len()
+    }
+
+    /// Finalize into the run's [`WorkflowStats`].
+    pub fn finish(self) -> WorkflowStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_validation_rejects_bad_shapes() {
+        assert!(WorkflowSpec::new("empty", vec![]).is_err());
+        let fwd = vec![WorkflowStage { agent: 0, work: 1.0, deps: vec![0] }];
+        assert!(WorkflowSpec::new("selfdep", fwd).is_err());
+        let neg = vec![WorkflowStage { agent: 0, work: -1.0,
+                                       deps: vec![] }];
+        assert!(WorkflowSpec::new("negwork", neg).is_err());
+        let ok = WorkflowSpec::paper();
+        assert_eq!(ok.stages().len(), 5);
+        assert!(ok.validate_for(4).is_ok());
+        assert!(ok.validate_for(3).is_err());
+    }
+
+    #[test]
+    fn fan_out_wires_plan_specialists_aggregate() {
+        let spec = WorkflowSpec::fan_out("w", 0, &[1, 2]);
+        let st = spec.stages();
+        assert_eq!(st.len(), 4);
+        assert!(st[0].deps.is_empty());
+        assert_eq!(st[1].deps, vec![0]);
+        assert_eq!(st[2].deps, vec![0]);
+        assert_eq!(st[3].deps, vec![1, 2]);
+        assert_eq!(st[3].agent, 0);
+        assert_eq!(spec.total_work(), 1.0 + 2.0 + 2.0 + 1.0);
+    }
+
+    #[test]
+    fn critical_path_weights_rank_bottleneck_agents() {
+        // fanout3: plan(1) -> {nlp(2), vision(2), reasoning(2)} -> agg(1).
+        // Every specialist lies on a critical path (1+2+1 = 4), and the
+        // coordinator's two stages are on every path, so all weights are
+        // positive with the busiest agent at 1.0.
+        let w = WorkflowSpec::paper().critical_path_weights(4);
+        assert_eq!(w.len(), 4);
+        assert!((w.iter().cloned().fold(0.0, f64::max) - 1.0).abs()
+                    < 1e-12);
+        for (i, wi) in w.iter().enumerate() {
+            assert!(*wi > 0.0, "agent {i} off the DAG: {w:?}");
+        }
+        // Agents outside the spec weigh zero.
+        let chain = WorkflowSpec::chain("c", &[0, 1]);
+        let cw = chain.critical_path_weights(4);
+        assert_eq!(cw[2], 0.0);
+        assert_eq!(cw[3], 0.0);
+        // A chain is all critical path: both stages weigh 1 * 1.0.
+        assert!((cw[0] - cw[1]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tracker_releases_are_deterministic_per_seed() {
+        let wl = WorkflowWorkload::new(WorkflowSpec::paper(), 0.5);
+        let mut counts = vec![0.0; 4];
+        for process in [ArrivalProcess::Deterministic,
+                        ArrivalProcess::Poisson] {
+            let mut a = WorkflowTracker::new(&wl, process, 42, 4);
+            let mut b = WorkflowTracker::new(&wl, process, 42, 4);
+            for step in 0..20 {
+                counts.fill(0.0);
+                a.begin_step(step, 1.0, &mut counts);
+                let ca = counts.clone();
+                counts.fill(0.0);
+                b.begin_step(step, 1.0, &mut counts);
+                assert_eq!(ca, counts, "step {step} {process:?}");
+            }
+            let sa = a.finish();
+            let sb = b.finish();
+            assert_eq!(sa, sb);
+            assert!(sa.started >= 1, "0.5/s over 20 s: {}", sa.started);
+        }
+    }
+
+    #[test]
+    fn release_times_mirror_the_tracker_stream() {
+        // The serving engine's materialized releases must agree with the
+        // fluid tracker's per-tick draws: same count per seed/process,
+        // nondecreasing times inside the schedule window.
+        let wl = WorkflowWorkload::new(WorkflowSpec::paper(), 0.7);
+        let mut counts = vec![0.0; 4];
+        for process in [ArrivalProcess::Deterministic,
+                        ArrivalProcess::Poisson] {
+            let times = wl.release_times(process, 42, 20, 1.0);
+            let mut t = WorkflowTracker::new(&wl, process, 42, 4);
+            for step in 0..20 {
+                counts.fill(0.0);
+                t.begin_step(step, 1.0, &mut counts);
+            }
+            assert_eq!(times.len() as u64, t.finish().started,
+                       "{process:?}");
+            assert!(times.windows(2).all(|w| w[0] <= w[1]));
+            assert!(times.iter().all(|&x| (0.0..20.0).contains(&x)));
+            assert_eq!(times, wl.release_times(process, 42, 20, 1.0));
+        }
+    }
+
+    #[test]
+    fn fan_out_stages_wait_for_the_plan_stage() {
+        // The ordering contract: no specialist mass is injected before
+        // the plan stage's mass has been fully consumed, and the
+        // aggregate stage waits for every specialist.
+        let wl = WorkflowWorkload::new(WorkflowSpec::paper(), 1.0);
+        let mut t = WorkflowTracker::new(
+            &wl, ArrivalProcess::Deterministic, 42, 4);
+        let mut counts = vec![0.0; 4];
+        t.begin_step(0, 1.0, &mut counts);
+        // Plan stage only: coordinator has mass, specialists none.
+        assert_eq!(counts, vec![1.0, 0.0, 0.0, 0.0]);
+        // Partially consume the plan: nothing may arm.
+        t.consume(0, 0.5, 1.0);
+        counts.fill(0.0);
+        t.begin_step(1, 1.0, &mut counts);
+        // (step 1 also releases instance #2's plan stage: rate 1/s.)
+        assert_eq!(counts, vec![1.0, 0.0, 0.0, 0.0]);
+        // Finish instance #1's plan; specialists arm for the NEXT tick.
+        t.consume(0, 0.5, 2.0);
+        assert_eq!(t.active_stages(1), 0, "specialist started early");
+        counts.fill(0.0);
+        t.begin_step(2, 1.0, &mut counts);
+        assert_eq!(counts, vec![1.0, 2.0, 2.0, 2.0]);
+        // Complete two of three specialists: aggregate must not arm.
+        t.consume(1, 2.0, 3.0);
+        t.consume(2, 2.0, 3.0);
+        counts.fill(0.0);
+        t.begin_step(3, 1.0, &mut counts);
+        assert_eq!(counts[0], 1.0, "aggregate armed before fan-in");
+        // Third specialist done -> aggregate arms next tick.
+        t.consume(3, 2.0, 4.0);
+        counts.fill(0.0);
+        t.begin_step(4, 1.0, &mut counts);
+        assert!(counts[0] >= 2.0, "aggregate missing: {counts:?}");
+        // Drain everything queued on the coordinator (later instances'
+        // plan stages sit ahead of the aggregate in the FIFO): the
+        // aggregate completes and finishes instance #1 end-to-end.
+        t.consume(0, 5.0, 5.0);
+        let stats = t.finish();
+        assert!(stats.completed >= 1, "{stats:?}");
+        // Released at t=0, aggregate consumed at t_end=5.
+        assert!(stats.latency.count() >= 1);
+    }
+
+    #[test]
+    fn completed_latency_is_end_to_end() {
+        let wl = WorkflowWorkload::new(
+            WorkflowSpec::chain("c", &[0, 1]), 1.0);
+        let mut t = WorkflowTracker::new(
+            &wl, ArrivalProcess::Deterministic, 1, 2);
+        let mut counts = vec![0.0; 2];
+        t.begin_step(0, 1.0, &mut counts);
+        t.consume(0, counts[0], 1.0);
+        counts.fill(0.0);
+        t.begin_step(1, 1.0, &mut counts);
+        // Drain agent 1's stage of instance #1 (instance #2's root also
+        // released this tick on agent 0).
+        t.consume(1, counts[1], 2.0);
+        let stats = t.finish();
+        assert_eq!(stats.completed, 1);
+        // Released at 0, finished at t_end = 2.0.
+        assert!((stats.total_latency_s - 2.0).abs() < 1e-12,
+                "{}", stats.total_latency_s);
+        assert!((stats.mean_s() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_oracle_is_conservative() {
+        let wl = WorkflowWorkload::new(WorkflowSpec::paper(), 0.5);
+        let t = WorkflowTracker::new(
+            &wl, ArrivalProcess::Deterministic, 42, 4);
+        assert!(!t.idle(), "nonzero rate can never promise idleness");
+        let z = WorkflowTracker::new(
+            &WorkflowWorkload::new(WorkflowSpec::paper(), 0.0),
+            ArrivalProcess::Poisson, 42, 4);
+        assert!(z.idle(), "zero rate with no in-flight work is idle");
+    }
+}

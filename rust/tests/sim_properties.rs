@@ -8,9 +8,10 @@ use agentsrv::cluster::{ClusterSimulator, MigrationModel,
                         PlacementStrategy, Rebalancer};
 use agentsrv::server::{ServingConfig, ServingSimulator};
 use agentsrv::serverless::{EconomicsModel, GpuPricing};
-use agentsrv::sim::batch::{run_batch, run_sweep, ClusterScenario,
-                           CostScenario, FaultScenario, Scenario,
-                           ServingScenario, SweepCell, TraceScenario};
+use agentsrv::sim::batch::{run_batch, run_sweep, CellResult,
+                           ClusterScenario, CostScenario, FaultScenario,
+                           Scenario, ServingScenario, SweepCell,
+                           TraceScenario, WorkflowScenario};
 use agentsrv::sim::fault::{AdmissionControl, FaultConfig, FaultEvent,
                            FaultModel, FaultPlan, RetryPolicy,
                            ServingFaults, ShedPolicy};
@@ -18,7 +19,8 @@ use agentsrv::sim::{SimConfig, Simulator};
 use agentsrv::util::check::{forall, vec_uniform};
 use agentsrv::util::Rng;
 use agentsrv::workload::trace::Trace;
-use agentsrv::workload::{ArrivalProcess, WorkloadKind};
+use agentsrv::workload::{ArrivalProcess, WorkflowSpec, WorkflowWorkload,
+                         WorkloadKind};
 
 /// Random but always-valid agent set: minimums jointly feasible.
 fn gen_agents(rng: &mut Rng) -> (Vec<AgentProfile>, Vec<f64>) {
@@ -142,6 +144,7 @@ fn prop_simulation_conserves_requests_and_money() {
             record_timelines: false,
             economics: None,
             faults: None,
+            workflow: None,
         };
         let sim = Simulator::new(cfg, agents.clone());
         for mut policy in all_policies() {
@@ -196,6 +199,7 @@ fn prop_throughput_bounded_by_capacity_and_arrivals() {
             record_timelines: false,
             economics: None,
             faults: None,
+            workflow: None,
         };
         let sim = Simulator::new(cfg, agents.clone());
         for mut policy in all_policies() {
@@ -292,7 +296,10 @@ fn prop_batch_matches_sequential_per_agent() {
 #[test]
 fn prop_cluster_sweep_is_bit_identical_to_sequential_run() {
     for process in [ArrivalProcess::Deterministic, ArrivalProcess::Poisson] {
-        for migration in [None, Some(MigrationModel::default())] {
+        for rebalancer in [
+            Rebalancer::Static,
+            Rebalancer::HottestAgent(MigrationModel::default()),
+        ] {
             let mut cells = Vec::new();
             let mut expected = Vec::new();
             for (shape, kind) in [
@@ -307,12 +314,12 @@ fn prop_cluster_sweep_is_bit_identical_to_sequential_run() {
                     cfg.arrival_process = process;
                     let sequential = ClusterSimulator::new(
                         cfg.clone(), AgentRegistry::paper(), gpus, cap,
-                        migration.clone()).unwrap();
+                        rebalancer.clone()).unwrap();
                     expected.push(sequential.run().unwrap());
                     cells.push(SweepCell::Cluster(ClusterScenario::new(
                         format!("{shape}/{gpus}gpu/cap{cap}"), cfg,
                         AgentRegistry::paper(), gpus, cap,
-                        migration.clone()).unwrap()));
+                        rebalancer.clone()).unwrap()));
                 }
             }
             for workers in [1usize, 2, 8] {
@@ -323,10 +330,9 @@ fn prop_cluster_sweep_is_bit_identical_to_sequential_run() {
                         .expect("cluster cell yields ClusterResult");
                     assert_eq!(
                         cluster, want,
-                        "{} @ {workers} workers ({process:?}, migration \
-                         {}): sweep diverged from sequential",
-                        got.label,
-                        if migration.is_some() { "on" } else { "off" });
+                        "{} @ {workers} workers ({process:?}, \
+                         rebalancer {}): sweep diverged from sequential",
+                        got.label, rebalancer.name());
                 }
             }
         }
@@ -530,13 +536,14 @@ fn prop_economics_cluster_sweep_is_bit_identical_to_sequential_run() {
             let mut cfg = agentsrv::repro::idle_burst_config(100, 11);
             cfg.economics = Some(economics.clone());
             let sequential = ClusterSimulator::new(
-                cfg.clone(), AgentRegistry::paper(), gpus, cap, None)
-                .unwrap();
+                cfg.clone(), AgentRegistry::paper(), gpus, cap,
+                Rebalancer::Static).unwrap();
             expected.push(sequential.run().unwrap());
             cells.push(SweepCell::Cluster(ClusterScenario::new(
                 format!("econ-cluster/{gpus}gpu/warm{}",
                         economics.idle_timeout_s), cfg,
-                AgentRegistry::paper(), gpus, cap, None).unwrap()));
+                AgentRegistry::paper(), gpus, cap,
+                Rebalancer::Static).unwrap()));
         }
     }
     // The scale-to-zero cells must actually exercise the lifecycle.
@@ -807,10 +814,10 @@ fn prop_serving_layer_preserves_allocation_semantics() {
     }
 }
 
-/// A mixed grid — single-GPU, cluster, trace, cost, serving, and fault
-/// cells interleaved — runs through one pool with cell order preserved
-/// and every kind bit-identical to its sequential twin at every worker
-/// count.
+/// A mixed grid — single-GPU, cluster, trace, cost, serving, fault, and
+/// workflow cells interleaved — runs through one pool with cell order
+/// preserved and every kind bit-identical to its sequential twin at
+/// every worker count.
 #[test]
 fn prop_mixed_sweep_is_bit_identical_per_cell_kind() {
     let trace = Trace::paper_poisson(50, 42);
@@ -834,16 +841,20 @@ fn prop_mixed_sweep_is_bit_identical_per_cell_kind() {
             format!("serving/{}", kind.name()), serving_cfg,
             AgentRegistry::paper(), kind)));
     }
-    for (gpus, migration) in
-        [(2usize, None), (2, Some(MigrationModel::default())), (4, None)]
-    {
+    for (gpus, rebalancer) in [
+        (2usize, Rebalancer::Static),
+        (2, Rebalancer::HottestAgent(MigrationModel::default())),
+        (4, Rebalancer::Static),
+    ] {
         cells.push(SweepCell::Cluster(ClusterScenario::new(
             format!("cluster/{gpus}gpu"), SimConfig::paper(),
-            AgentRegistry::paper(), gpus, 1.0, migration).unwrap()));
+            AgentRegistry::paper(), gpus, 1.0, rebalancer).unwrap()));
     }
-    cells.push(SweepCell::Cluster(ClusterScenario::heterogeneous(
+    cells.push(SweepCell::Cluster(ClusterScenario::with_policies(
         "cluster/hetero/1+0.5".to_string(), SimConfig::paper(),
-        AgentRegistry::paper(), vec![1.0, 0.5], None).unwrap()));
+        AgentRegistry::paper(), vec![1.0, 0.5],
+        PlacementStrategy::HeadroomDecreasing,
+        Rebalancer::Static).unwrap()));
     // One fault cell per shell rides the same mixed pool.
     cells.push(SweepCell::Fault(FaultScenario::single(
         "fault/single/adaptive", SimConfig::paper(),
@@ -862,6 +873,25 @@ fn prop_mixed_sweep_is_bit_identical_per_cell_kind() {
         PolicyKind::adaptive(),
         ServingFaults::new(FaultPlan::empty()).with_admission(
             AdmissionControl::new(64, ShedPolicy::DropByPriority)))));
+    // One workflow cell per shell rides the same mixed pool — the
+    // single-GPU one under the spec-weighted critical-path policy, so
+    // the sweep must preserve the weights, not rebuild by name.
+    cells.push(SweepCell::Workflow(WorkflowScenario::single(
+        "workflow/single/critical_path", SimConfig::paper(),
+        AgentRegistry::paper(),
+        PolicyKind::critical_path_for(&WorkflowSpec::paper(), 4),
+        WorkflowWorkload::paper()).unwrap()));
+    cells.push(SweepCell::Workflow(WorkflowScenario::cluster(
+        "workflow/cluster/colocate", SimConfig::paper(),
+        AgentRegistry::paper(), vec![1.2, 1.2],
+        PlacementStrategy::WorkflowColocate, Rebalancer::Static,
+        WorkflowWorkload::paper()).unwrap()));
+    let mut wf_serving_cfg = ServingConfig::paper();
+    wf_serving_cfg.duration_s = 2.0;
+    cells.push(SweepCell::Workflow(WorkflowScenario::serving(
+        "workflow/serving/adaptive", wf_serving_cfg,
+        AgentRegistry::paper(), PolicyKind::adaptive(),
+        WorkflowWorkload::paper()).unwrap()));
 
     for workers in [1usize, 2, 8] {
         let runs = run_sweep(&cells, workers);
@@ -941,6 +971,100 @@ fn prop_mixed_sweep_is_bit_identical_per_cell_kind() {
                                    "{} @ {workers}", run.label);
                     }
                 }
+                SweepCell::Workflow(sc) => {
+                    // The sequential twin clones the stored policy —
+                    // rebuilding by name would flatten the spec-weighted
+                    // critical-path policy back to its unweighted form.
+                    if let Some(inner) = sc.as_cluster_scenario() {
+                        let want = inner.simulator().run().unwrap();
+                        assert_eq!(run.result.as_cluster().unwrap(), &want,
+                                   "{} @ {workers}", run.label);
+                        assert!(want.workflow.is_some(),
+                                "{}: workflow stats must surface",
+                                run.label);
+                    } else if let Some(inner) = sc.as_serving_scenario() {
+                        let mut policy = inner.policy.clone();
+                        let want = inner.simulator().run(&mut policy);
+                        assert_eq!(run.result.as_serving().unwrap(), &want,
+                                   "{} @ {workers}", run.label);
+                        assert!(want.workflow.is_some(),
+                                "{}: workflow stats must surface",
+                                run.label);
+                    } else {
+                        let inner = sc.as_single().unwrap();
+                        let mut policy = inner.policy.clone();
+                        let want = inner.simulator().run(&mut policy);
+                        let got = run.result.as_sim().unwrap();
+                        assert!(got.mean_latency() == want.mean_latency()
+                                && got.cost_dollars == want.cost_dollars,
+                                "{} @ {workers}", run.label);
+                        assert_eq!(got.workflow, want.workflow,
+                                   "{} @ {workers}", run.label);
+                        assert!(want.workflow.is_some(),
+                                "{}: workflow stats must surface",
+                                run.label);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Every cell of the real `repro::workflow_grid` — spec shape × policy
+/// × placement × seed across all three shells — is bit-identical
+/// (full result types, workflow stats included) to a sequential run of
+/// the same cell at 1, 2, and 8 workers, and every shell actually
+/// completed workflow instances.
+#[test]
+fn prop_workflow_sweep_is_bit_identical_to_sequential_run() {
+    let cells = agentsrv::repro::workflow_grid(20, &[1, 2]);
+    assert!(!cells.is_empty());
+    let mut expected = Vec::with_capacity(cells.len());
+    for cell in &cells {
+        let SweepCell::Workflow(sc) = cell else {
+            panic!("workflow grid contains only workflow cells");
+        };
+        // Clone the stored policy: rebuilding by name would flatten the
+        // spec-weighted critical-path cells back to unweighted form.
+        if let Some(inner) = sc.as_cluster_scenario() {
+            expected.push(CellResult::Cluster(
+                inner.simulator().run().unwrap()));
+        } else if let Some(inner) = sc.as_serving_scenario() {
+            let mut policy = inner.policy.clone();
+            expected.push(CellResult::Serving(
+                inner.simulator().run(&mut policy)));
+        } else {
+            let inner = sc.as_single().unwrap();
+            let mut policy = inner.policy.clone();
+            expected.push(CellResult::Sim(
+                inner.simulator().run(&mut policy)));
+        }
+    }
+    // Every shell surfaces end-to-end stats with real completions.
+    assert!(expected.iter().all(|r| r.workflow().is_some()));
+    assert!(expected.iter()
+            .any(|r| r.workflow().is_some_and(|w| w.completed > 0)),
+            "no workflow cell completed an instance");
+    for workers in [1usize, 2, 8] {
+        let runs = run_sweep(&cells, workers);
+        assert_eq!(runs.len(), expected.len());
+        for (got, want) in runs.iter().zip(&expected) {
+            match want {
+                CellResult::Sim(w) => {
+                    let s = got.result.as_sim().unwrap();
+                    assert!(s.mean_latency() == w.mean_latency()
+                            && s.total_throughput() == w.total_throughput()
+                            && s.cost_dollars == w.cost_dollars,
+                            "{} @ {workers} workers", got.label);
+                    assert_eq!(s.workflow, w.workflow,
+                               "{} @ {workers} workers", got.label);
+                }
+                CellResult::Cluster(w) => assert_eq!(
+                    got.result.as_cluster().unwrap(), w,
+                    "{} @ {workers} workers", got.label),
+                CellResult::Serving(w) => assert_eq!(
+                    got.result.as_serving().unwrap(), w,
+                    "{} @ {workers} workers", got.label),
             }
         }
     }
