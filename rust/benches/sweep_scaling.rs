@@ -34,7 +34,13 @@
 //!     registries whose only traffic is a mid-run burst — the shape the
 //!     skip-idle event core fast-forwards. Timed both dense
 //!     (`run_dense`, every step simulated) and event-stepped, asserted
-//!     bit-identical, with the dense/skip speedup reported.
+//!     bit-identical, with the dense/skip speedup reported. The grid's
+//!     sparse-burst cells (only k of N agents ever receive arrivals)
+//!     are additionally timed three ways — dense vs skip-idle
+//!     (`run_skip_idle`: whole-run idle jumps but dense busy ticks) vs
+//!     active-set (`run`: busy ticks walk only the hot minority) — and
+//!     the `sparse_speedup` of active-set over skip-idle alone is
+//!     reported.
 //!
 //! `--quick` shrinks everything to 500 steps × 2 seeds for CI.
 //!
@@ -198,6 +204,57 @@ fn main() {
     println!("skip-idle vs dense (sequential): {:.2}x",
              large_n_dense_s / large_n_seq_s.max(1e-12));
 
+    // ---- Sparse-burst cells: dense vs skip-idle vs active-set ---------
+    // The payoff measurement for the active-set tier: on cells where
+    // only k of N agents ever receive arrivals, skip-idle alone still
+    // steps all N agents inside the burst window; the active-set tier
+    // walks just the hot k. All three paths are asserted to agree
+    // (the dense check above already covers active-set vs dense).
+    let sparse_cells: Vec<SweepCell> = repro::large_n_grid(steps)
+        .into_iter()
+        .filter(|c| c.label().starts_with("large_n/sparse"))
+        .collect();
+    for (want, have) in sequential_cluster(&sparse_cells).iter()
+        .zip(sequential_cluster_skip_idle(&sparse_cells))
+    {
+        assert!(want.result.mean_latency() == have.result.mean_latency()
+                && want.result.total_throughput()
+                    == have.result.total_throughput()
+                && want.result.cost_dollars()
+                    == have.result.cost_dollars(),
+                "{}: active-set diverged from skip-idle", want.label);
+    }
+    println!("\nsparse-burst cells: {} cells × {steps} steps",
+             sparse_cells.len());
+    println!("{:<26} {:>10} {:>16} {:>9}", "config", "time", "cells/s",
+             "speedup");
+    let sparse_dense_t = best_of(reps, || {
+        std::hint::black_box(
+            sequential_cluster_dense(&sparse_cells).len());
+    });
+    let sparse_dense_s = sparse_dense_t.as_secs_f64();
+    print_row("dense (no fast-forward)", sparse_dense_t,
+              sparse_cells.len(), 1.0);
+    let sparse_skip_t = best_of(reps, || {
+        std::hint::black_box(
+            sequential_cluster_skip_idle(&sparse_cells).len());
+    });
+    let sparse_skip_s = sparse_skip_t.as_secs_f64();
+    print_row("skip-idle (dense busy ticks)", sparse_skip_t,
+              sparse_cells.len(),
+              sparse_dense_s / sparse_skip_s.max(1e-12));
+    let sparse_active_t = best_of(reps, || {
+        std::hint::black_box(sequential_cluster(&sparse_cells).len());
+    });
+    let sparse_active_s = sparse_active_t.as_secs_f64();
+    print_row("active-set (sparse ticks)", sparse_active_t,
+              sparse_cells.len(),
+              sparse_dense_s / sparse_active_s.max(1e-12));
+    let sparse_speedup = sparse_skip_s / sparse_active_s.max(1e-12);
+    println!("sparse_speedup (active-set vs skip-idle alone): \
+              {sparse_speedup:.2}x — {}",
+             if sparse_speedup > 1.0 { "PASS" } else { "BELOW TARGET" });
+
     if let Some(path) = json_path {
         let json = to_json(&ReportInput {
             grid: &grid,
@@ -216,6 +273,8 @@ fn main() {
                        &workflow_rows),
             large_n: (large_n_cells.len(), large_n_dense_s,
                       large_n_seq_s, &large_n_rows),
+            sparse: (sparse_cells.len(), sparse_dense_s, sparse_skip_s,
+                     sparse_active_s),
         }, &path);
         std::fs::write(&path, json).expect("write json report");
         println!("\njson report -> {path}");
@@ -258,6 +317,23 @@ fn sequential_cluster_dense(cells: &[SweepCell]) -> Vec<SweepRun> {
             label: cs.label.clone(),
             result: CellResult::Cluster(
                 cs.simulator().run_dense()
+                    .expect("feasible cluster cell")),
+        },
+        _ => unreachable!("large_n grid contains only cluster cells"),
+    }).collect()
+}
+
+/// The skip-idle-only reference for the sparse-burst cells:
+/// `run_skip_idle` fast-forwards whole-run idle windows but still steps
+/// every agent inside busy ticks, so timing it against
+/// `sequential_cluster` (whose `run` engages the active-set tier)
+/// isolates what per-agent sparse stepping adds on top.
+fn sequential_cluster_skip_idle(cells: &[SweepCell]) -> Vec<SweepRun> {
+    cells.iter().map(|cell| match cell {
+        SweepCell::Cluster(cs) => SweepRun {
+            label: cs.label.clone(),
+            result: CellResult::Cluster(
+                cs.simulator().run_skip_idle()
                     .expect("feasible cluster cell")),
         },
         _ => unreachable!("large_n grid contains only cluster cells"),
@@ -473,6 +549,9 @@ struct ReportInput<'a> {
     /// (cells, dense seconds, skip-idle sequential seconds,
     /// per-worker rows).
     large_n: (usize, f64, f64, &'a [(usize, f64, f64)]),
+    /// Sparse-burst subset of the large-N grid:
+    /// (cells, dense seconds, skip-idle seconds, active-set seconds).
+    sparse: (usize, f64, f64, f64),
 }
 
 fn worker_rows(n_cells: usize, rows: &[(usize, f64, f64)]) -> Value {
@@ -503,10 +582,16 @@ fn sweep_section_value(n_cells: usize, seq_s: f64,
 }
 
 /// The `large_n` section: like the others, plus the dense reference
-/// timing and the dense/skip speedup the event core is gated on.
+/// timing, the dense/skip speedup the event core is gated on, and the
+/// three-way sparse-burst sub-section whose `sparse_speedup` gates the
+/// active-set tier against skip-idle alone.
 fn large_n_section_value(n_cells: usize, dense_s: f64, seq_s: f64,
-                         rows: &[(usize, f64, f64)]) -> Value {
+                         rows: &[(usize, f64, f64)],
+                         sparse: (usize, f64, f64, f64)) -> Value {
     let per_s = |secs: f64| json::num(n_cells as f64 / secs.max(1e-12));
+    let (sp_cells, sp_dense_s, sp_skip_s, sp_active_s) = sparse;
+    let sp_per_s =
+        |secs: f64| json::num(sp_cells as f64 / secs.max(1e-12));
     json::obj(vec![
         ("scenarios", json::num(n_cells as f64)),
         ("dense", json::obj(vec![
@@ -518,6 +603,23 @@ fn large_n_section_value(n_cells: usize, dense_s: f64, seq_s: f64,
             ("scenarios_per_s", per_s(seq_s)),
         ])),
         ("skip_idle_speedup", json::num(dense_s / seq_s.max(1e-12))),
+        ("sparse", json::obj(vec![
+            ("scenarios", json::num(sp_cells as f64)),
+            ("dense", json::obj(vec![
+                ("seconds", json::num(sp_dense_s)),
+                ("scenarios_per_s", sp_per_s(sp_dense_s)),
+            ])),
+            ("skip_idle", json::obj(vec![
+                ("seconds", json::num(sp_skip_s)),
+                ("scenarios_per_s", sp_per_s(sp_skip_s)),
+            ])),
+            ("active_set", json::obj(vec![
+                ("seconds", json::num(sp_active_s)),
+                ("scenarios_per_s", sp_per_s(sp_active_s)),
+            ])),
+            ("sparse_speedup",
+             json::num(sp_skip_s / sp_active_s.max(1e-12))),
+        ])),
         ("sweep", worker_rows(n_cells, rows)),
     ])
 }
@@ -567,7 +669,8 @@ fn results_value(input: &ReportInput<'_>) -> Value {
         ("workflow",
          sweep_section_value(wf_cells, wf_seq_s, wf_rows)),
         ("large_n",
-         large_n_section_value(ln_cells, ln_dense_s, ln_seq_s, ln_rows)),
+         large_n_section_value(ln_cells, ln_dense_s, ln_seq_s, ln_rows,
+                               input.sparse)),
     ])
 }
 

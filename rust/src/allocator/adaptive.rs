@@ -33,6 +33,65 @@ impl AllocationPolicy for AdaptivePolicy {
         true
     }
 
+    /// A zero-rate agent's demand is exactly `+0.0` (phase 1), so it is
+    /// allocated `(+0.0 · scale).max(min_gpu)` — exactly `+0.0` iff its
+    /// floor is zero. A floored idle agent instead holds its nonzero
+    /// minimum whenever any other agent has demand, so it is *not* a
+    /// per-agent fixed point.
+    fn zero_fixed_point(&self, ctx: &AllocContext<'_>, agent: usize)
+                        -> bool {
+        ctx.registry.min_gpu()[agent] == 0.0
+    }
+
+    /// Sparse Algorithm 1: every phase folds or writes only the active
+    /// subset. Bit-identical to the dense [`AllocationPolicy::allocate`]
+    /// under the `allocate_active` contract: an inactive agent's demand
+    /// is `+0.0` (adding it anywhere in the ascending fold is the
+    /// identity), its phase-2 write would be `(+0.0 · scale).max(0.0) ==
+    /// +0.0` (the bits it already holds), and its phase-3 rescale would
+    /// be `+0.0 · s == +0.0`.
+    fn allocate_active(&mut self, ctx: &AllocContext<'_>,
+                       active: &[usize], out: &mut [f64]) {
+        let min_gpu = ctx.registry.min_gpu();
+        let weight = ctx.registry.priority_weight();
+
+        // Phase 1: demand scores over the active subset, in ascending
+        // agent order — the same addition order as the dense fold with
+        // the inactive agents' +0.0 terms elided.
+        let mut d_total = 0.0;
+        for &i in active {
+            let d = ctx.arrival_rates[i] * min_gpu[i] / weight[i];
+            out[i] = d;
+            d_total += d;
+        }
+
+        // Idle system: allocate nothing (inactive entries already 0.0).
+        if d_total <= 0.0 {
+            for &i in active {
+                out[i] = 0.0;
+            }
+            return;
+        }
+
+        // Phase 2: proportional share with minimum floor.
+        let scale = ctx.capacity / d_total;
+        for &i in active {
+            out[i] = (out[i] * scale).max(min_gpu[i]);
+        }
+
+        // Phase 3: capacity normalization over the active subset.
+        let mut total = 0.0;
+        for &i in active {
+            total += out[i];
+        }
+        if total > ctx.capacity && total > 0.0 {
+            let s = ctx.capacity / total;
+            for &i in active {
+                out[i] *= s;
+            }
+        }
+    }
+
     fn allocate(&mut self, ctx: &AllocContext<'_>, out: &mut [f64]) {
         let n = ctx.registry.len();
         debug_assert_eq!(out.len(), n);
@@ -131,6 +190,56 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert!((x - y).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn allocate_active_is_bit_identical_to_dense() {
+        // A registry where the idle agents carry zero floors (the
+        // zero_fixed_point precondition) — the sparse phases must
+        // reproduce the dense allocation bit-for-bit.
+        use crate::agents::{AgentProfile, AgentRegistry, Priority};
+        let profiles: Vec<AgentProfile> = (0..8).map(|i| AgentProfile {
+            name: format!("a{i}"),
+            model_mb: 500,
+            base_tput: 40.0,
+            // Only the two active agents hold reservations.
+            min_gpu: if i == 2 || i == 5 { 0.2 } else { 0.0 },
+            priority: Priority::Medium,
+        }).collect();
+        let reg = AgentRegistry::new(profiles).unwrap();
+        let mut rates = vec![0.0; 8];
+        rates[2] = 60.0;
+        rates[5] = 25.0;
+        let queues = vec![0.0; 8];
+        let ctx = AllocContext {
+            registry: &reg,
+            arrival_rates: &rates,
+            queue_depths: &queues,
+            step: 0,
+            capacity: 1.0,
+        };
+        let mut dense = vec![0.0; 8];
+        AdaptivePolicy::default().allocate(&ctx, &mut dense);
+        let mut sparse = vec![0.0; 8];
+        AdaptivePolicy::default()
+            .allocate_active(&ctx, &[2, 5], &mut sparse);
+        assert_eq!(dense, sparse);
+        // All-idle active subset: the short-circuit zeroes only the
+        // active entries, which is all the dense fill(0.0) would change.
+        let zero = vec![0.0; 8];
+        let idle_ctx = AllocContext {
+            registry: &reg,
+            arrival_rates: &zero,
+            queue_depths: &queues,
+            step: 1,
+            capacity: 1.0,
+        };
+        let mut dense_idle = vec![0.0; 8];
+        AdaptivePolicy::default().allocate(&idle_ctx, &mut dense_idle);
+        let mut sparse_idle = vec![0.0; 8];
+        AdaptivePolicy::default()
+            .allocate_active(&idle_ctx, &[2, 5], &mut sparse_idle);
+        assert_eq!(dense_idle, sparse_idle);
     }
 
     #[test]

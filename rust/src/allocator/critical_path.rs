@@ -60,6 +60,15 @@ impl AllocationPolicy for CriticalPathPolicy {
         true
     }
 
+    /// The criticality boost multiplies the demand score, so a zero-rate
+    /// agent's demand is `+0.0 · (1 + BOOST·w) == +0.0` regardless of its
+    /// weight; as with the adaptive policy the fixed point then hinges
+    /// only on a zero floor.
+    fn zero_fixed_point(&self, ctx: &AllocContext<'_>, agent: usize)
+                        -> bool {
+        ctx.registry.min_gpu()[agent] == 0.0
+    }
+
     fn allocate(&mut self, ctx: &AllocContext<'_>, out: &mut [f64]) {
         let n = ctx.registry.len();
         debug_assert_eq!(out.len(), n);

@@ -43,6 +43,15 @@ impl AllocationPolicy for FeedbackPolicy {
         true
     }
 
+    /// A zero-pressure agent (zero rate *and* zero queue — both are part
+    /// of the caller's contract) has demand exactly `+0.0`, so phase 2
+    /// allocates it `(+0.0 · scale).max(min_gpu)` — exactly `+0.0` iff
+    /// its floor is zero.
+    fn zero_fixed_point(&self, ctx: &AllocContext<'_>, agent: usize)
+                        -> bool {
+        ctx.registry.min_gpu()[agent] == 0.0
+    }
+
     fn allocate(&mut self, ctx: &AllocContext<'_>, out: &mut [f64]) {
         let n = ctx.registry.len();
         let min_gpu = ctx.registry.min_gpu();

@@ -86,6 +86,46 @@ pub trait AllocationPolicy: Send {
         let _ = n;
         false
     }
+
+    /// Active-set contract, the per-agent refinement of
+    /// [`AllocationPolicy::idle_fixed_point`]: return `true` only when
+    /// agent `agent`, observed with **zero own arrival rate and zero own
+    /// queue depth**, is allocated exactly `+0.0` by every
+    /// [`AllocationPolicy::allocate`] call — regardless of the other
+    /// agents' state — and contributes exactly `+0.0` to every internal
+    /// aggregate the policy folds over agents (so iterating only the
+    /// active subset reproduces the dense fold bit-for-bit).
+    ///
+    /// "Unchanged inputs ⇒ unchanged allocation" must hold in the
+    /// strongest sense: the answer may depend on the policy's current
+    /// internal state (predictive requires its EMA entry to be exactly
+    /// zero) and on static registry data in `ctx` (the adaptive family
+    /// requires a zero `min_gpu` floor — a floored idle agent is held at
+    /// its nonzero minimum whenever anyone else has demand), but never
+    /// on the other agents' dynamic inputs. Globally-coupled policies —
+    /// round-robin's rotation, static-equal's held `capacity / n` —
+    /// must return `false` (the default), which keeps them on the
+    /// documented dense fallback.
+    fn zero_fixed_point(&self, ctx: &AllocContext<'_>, agent: usize)
+                        -> bool {
+        let _ = (ctx, agent);
+        false
+    }
+
+    /// Allocate touching only the agents in `active` (sorted ascending,
+    /// deduplicated). The caller guarantees that every agent *not* in
+    /// `active` (a) satisfies [`AllocationPolicy::zero_fixed_point`],
+    /// (b) shows zero arrival rate and zero queue depth in `ctx`, and
+    /// (c) already holds exactly `0.0` in `out`. Under that contract
+    /// the default implementation — a full dense
+    /// [`AllocationPolicy::allocate`] — is always correct (it rewrites
+    /// the settled agents' `+0.0` with the same bits); sparse overrides
+    /// are pure optimizations and must stay bit-identical to it.
+    fn allocate_active(&mut self, ctx: &AllocContext<'_>,
+                       active: &[usize], out: &mut [f64]) {
+        let _ = active;
+        self.allocate(ctx, out);
+    }
 }
 
 /// Forwarding impl so a borrowed policy can drive engines that take the
@@ -107,6 +147,16 @@ impl<P: AllocationPolicy + ?Sized> AllocationPolicy for &mut P {
     fn idle_fixed_point(&self, n: usize) -> bool {
         (**self).idle_fixed_point(n)
     }
+
+    fn zero_fixed_point(&self, ctx: &AllocContext<'_>, agent: usize)
+                        -> bool {
+        (**self).zero_fixed_point(ctx, agent)
+    }
+
+    fn allocate_active(&mut self, ctx: &AllocContext<'_>,
+                       active: &[usize], out: &mut [f64]) {
+        (**self).allocate_active(ctx, active, out)
+    }
 }
 
 /// Forwarding impl for boxed policies, so `Box<dyn AllocationPolicy>`
@@ -126,6 +176,16 @@ impl<P: AllocationPolicy + ?Sized> AllocationPolicy for Box<P> {
 
     fn idle_fixed_point(&self, n: usize) -> bool {
         (**self).idle_fixed_point(n)
+    }
+
+    fn zero_fixed_point(&self, ctx: &AllocContext<'_>, agent: usize)
+                        -> bool {
+        (**self).zero_fixed_point(ctx, agent)
+    }
+
+    fn allocate_active(&mut self, ctx: &AllocContext<'_>,
+                       active: &[usize], out: &mut [f64]) {
+        (**self).allocate_active(ctx, active, out)
     }
 }
 
@@ -279,6 +339,32 @@ impl AllocationPolicy for PolicyKind {
             PolicyKind::CriticalPath(p) => p.idle_fixed_point(n),
         }
     }
+
+    fn zero_fixed_point(&self, ctx: &AllocContext<'_>, agent: usize)
+                        -> bool {
+        match self {
+            PolicyKind::StaticEqual(p) => p.zero_fixed_point(ctx, agent),
+            PolicyKind::RoundRobin(p) => p.zero_fixed_point(ctx, agent),
+            PolicyKind::Adaptive(p) => p.zero_fixed_point(ctx, agent),
+            PolicyKind::Predictive(p) => p.zero_fixed_point(ctx, agent),
+            PolicyKind::Feedback(p) => p.zero_fixed_point(ctx, agent),
+            PolicyKind::CriticalPath(p) => p.zero_fixed_point(ctx, agent),
+        }
+    }
+
+    fn allocate_active(&mut self, ctx: &AllocContext<'_>,
+                       active: &[usize], out: &mut [f64]) {
+        match self {
+            PolicyKind::StaticEqual(p) => p.allocate_active(ctx, active, out),
+            PolicyKind::RoundRobin(p) => p.allocate_active(ctx, active, out),
+            PolicyKind::Adaptive(p) => p.allocate_active(ctx, active, out),
+            PolicyKind::Predictive(p) => p.allocate_active(ctx, active, out),
+            PolicyKind::Feedback(p) => p.allocate_active(ctx, active, out),
+            PolicyKind::CriticalPath(p) => {
+                p.allocate_active(ctx, active, out)
+            }
+        }
+    }
 }
 
 /// Construct every policy this crate ships, for comparison harnesses.
@@ -416,6 +502,104 @@ mod tests {
         assert!(PolicyKind::feedback().idle_fixed_point(4));
         assert!(!PolicyKind::predictive().idle_fixed_point(4));
         assert!(PolicyKind::critical_path().idle_fixed_point(4));
+    }
+
+    #[test]
+    fn zero_fixed_point_claims_are_honest() {
+        // For every policy claiming the per-agent fixed point for some
+        // idle agent, a dense allocate with the OTHER agents live must
+        // write exactly +0.0 for the claimed agent — that is the license
+        // the active-set engines rely on when they stop iterating it.
+        use crate::agents::{AgentProfile, Priority};
+        let profiles: Vec<AgentProfile> = (0..6).map(|i| AgentProfile {
+            name: format!("a{i}"),
+            model_mb: 1000,
+            base_tput: 50.0,
+            // Agents 1 and 4 hold reservations; the rest scale to zero.
+            min_gpu: if i == 1 || i == 4 { 0.15 } else { 0.0 },
+            priority: Priority::Medium,
+        }).collect();
+        let reg = AgentRegistry::new(profiles).unwrap();
+        let n = reg.len();
+        let zero = vec![0.0; n];
+        // Agents 0 and 3 idle (zero floor), 2 idle but that is
+        // incidental; 1, 4, 5 live.
+        let mut rates = vec![0.0; n];
+        rates[1] = 30.0;
+        rates[4] = 55.0;
+        rates[5] = 10.0;
+        for mut kind in PolicyKind::all() {
+            // Warm Predictive onto its seeded zero-EMA state; the claim
+            // is allowed to be state-dependent.
+            let warm_ctx = AllocContext {
+                registry: &reg,
+                arrival_rates: &zero,
+                queue_depths: &zero,
+                step: 0,
+                capacity: 1.0,
+            };
+            let mut buf = vec![0.0; n];
+            kind.allocate(&warm_ctx, &mut buf);
+            let ctx = AllocContext {
+                registry: &reg,
+                arrival_rates: &rates,
+                queue_depths: &zero,
+                step: 1,
+                capacity: 1.0,
+            };
+            let claims: Vec<bool> =
+                (0..n).map(|a| kind.zero_fixed_point(&ctx, a)).collect();
+            buf.fill(7.0);
+            kind.allocate(&ctx, &mut buf);
+            for a in [0usize, 2, 3] {
+                if claims[a] {
+                    assert!(buf[a] == 0.0 && buf[a].is_sign_positive(),
+                            "{}: claimed fixed point for idle agent {a} \
+                             but allocated {}", kind.name(), buf[a]);
+                }
+            }
+            // A floored idle agent must never be claimed: the floor
+            // holds it at a nonzero minimum while others have demand.
+            let idle_floored_ctx = AllocContext {
+                registry: &reg,
+                arrival_rates: &zero,
+                queue_depths: &zero,
+                step: 2,
+                capacity: 1.0,
+            };
+            assert!(!kind.zero_fixed_point(&idle_floored_ctx, 1),
+                    "{}: claimed a floored agent", kind.name());
+        }
+        // The claims themselves, pinned: the adaptive family claims
+        // exactly the zero-floor agents; the globally-coupled baselines
+        // claim nobody (dense fallback); predictive claims only once
+        // seeded to a zero EMA.
+        let ctx = AllocContext {
+            registry: &reg,
+            arrival_rates: &rates,
+            queue_depths: &zero,
+            step: 0,
+            capacity: 1.0,
+        };
+        assert!(!PolicyKind::static_equal().zero_fixed_point(&ctx, 0));
+        assert!(!PolicyKind::round_robin().zero_fixed_point(&ctx, 0));
+        assert!(PolicyKind::adaptive().zero_fixed_point(&ctx, 0));
+        assert!(PolicyKind::feedback().zero_fixed_point(&ctx, 0));
+        assert!(PolicyKind::critical_path().zero_fixed_point(&ctx, 0));
+        assert!(!PolicyKind::adaptive().zero_fixed_point(&ctx, 1));
+        assert!(!PolicyKind::predictive().zero_fixed_point(&ctx, 0),
+                "fresh predictive has no EMA yet");
+        let mut pred = PolicyKind::predictive();
+        let mut buf = vec![0.0; n];
+        pred.allocate(&AllocContext {
+            registry: &reg,
+            arrival_rates: &zero,
+            queue_depths: &zero,
+            step: 0,
+            capacity: 1.0,
+        }, &mut buf);
+        assert!(pred.zero_fixed_point(&ctx, 0));
+        assert!(!pred.zero_fixed_point(&ctx, 1), "floor still gates");
     }
 
     #[test]

@@ -56,6 +56,20 @@ impl AllocationPolicy for PredictivePolicy {
         self.ema.len() == n && self.ema.iter().all(|e| *e == 0.0)
     }
 
+    /// Per-agent fixed point only once the EMA is seeded and this agent's
+    /// entry has decayed to exactly zero: then the per-step update is
+    /// `e += α·(0 − 0)` (a bit-no-op), the forecast handed to the inner
+    /// adaptive policy carries `+0.0` for the agent, and the adaptive
+    /// fixed point applies iff the floor is zero. A fresh (empty-EMA)
+    /// policy is NOT one — the first `allocate` seeds the EMA from the
+    /// observed rates.
+    fn zero_fixed_point(&self, ctx: &AllocContext<'_>, agent: usize)
+                        -> bool {
+        self.ema.len() == ctx.registry.len()
+            && self.ema[agent] == 0.0
+            && ctx.registry.min_gpu()[agent] == 0.0
+    }
+
     fn allocate(&mut self, ctx: &AllocContext<'_>, out: &mut [f64]) {
         let n = ctx.arrival_rates.len();
         if self.ema.len() != n {

@@ -109,10 +109,33 @@ impl ClusterAllocator {
     pub fn allocate(&mut self, registry: &AgentRegistry,
                     arrival_rates: &[f64], queue_depths: &[f64],
                     step: u64, capacities: &[f64], out: &mut [f64]) {
-        debug_assert_eq!(capacities.len(), self.placement.n_gpus);
         out.fill(0.0);
+        self.allocate_masked(registry, arrival_rates, queue_depths, step,
+                             capacities, None, out);
+    }
+
+    /// [`ClusterAllocator::allocate`] restricted to the devices marked
+    /// live in `gpu_live` (`None` = all live) — the active-set tier's
+    /// sparse entry. Skipped devices' `out` cells are left untouched
+    /// rather than zero-filled; the caller guarantees every agent on a
+    /// skipped device already holds exactly `0.0` there (the settle
+    /// invariant), which is bit-for-bit what the dense path would
+    /// rewrite: each per-GPU Algorithm 1 instance is stateless and
+    /// writes `+0.0` for every agent at zero demand, so skipping a
+    /// fully-settled device changes no bit of output or allocator
+    /// state. Devices with at least one live agent run the full
+    /// sub-problem over *all* their placed agents (settled ones
+    /// contribute `+0.0` demand and are rewritten `+0.0`), so
+    /// within-device normalization is unchanged.
+    pub fn allocate_masked(&mut self, registry: &AgentRegistry,
+                           arrival_rates: &[f64], queue_depths: &[f64],
+                           step: u64, capacities: &[f64],
+                           gpu_live: Option<&[bool]>, out: &mut [f64]) {
+        debug_assert_eq!(capacities.len(), self.placement.n_gpus);
         for gpu in 0..self.placement.n_gpus {
-            if self.ids[gpu].is_empty() {
+            if self.ids[gpu].is_empty()
+                || gpu_live.is_some_and(|live| !live[gpu])
+            {
                 continue;
             }
             let ids = &self.ids[gpu];
@@ -195,6 +218,40 @@ mod tests {
         alloc.allocate(&reg, &rates, &[0.0; 4], 1, &[1.0, 1.0], &mut out);
         assert!(out[0] > 0.0);
         assert_ne!(out[0], coord_before);
+    }
+
+    #[test]
+    fn masked_allocate_matches_dense_when_idle_gpus_are_skipped() {
+        use crate::agents::Priority;
+        // Two zero-floor idle agents alone on GPU 1: the mask skips
+        // their whole device and must reproduce the dense output (and
+        // leave their pre-zeroed cells holding exactly +0.0).
+        let profiles: Vec<AgentProfile> = (0..4)
+            .map(|i| AgentProfile {
+                name: format!("a{i}"),
+                model_mb: 800,
+                base_tput: 50.0,
+                min_gpu: if i < 2 { 0.2 } else { 0.0 },
+                priority: Priority::Medium,
+            })
+            .collect();
+        let reg = AgentRegistry::new(profiles).unwrap();
+        let placement = Placement { gpu_of: vec![0, 0, 1, 1], n_gpus: 2 };
+        let rates = [80.0, 40.0, 0.0, 0.0];
+        let queues = [3.0, 0.0, 0.0, 0.0];
+
+        let mut dense_out = vec![0.0; 4];
+        ClusterAllocator::new(&reg, placement.clone()).allocate(
+            &reg, &rates, &queues, 7, &[1.0, 1.0], &mut dense_out);
+
+        let mut masked_out = vec![0.0; 4];
+        ClusterAllocator::new(&reg, placement).allocate_masked(
+            &reg, &rates, &queues, 7, &[1.0, 1.0],
+            Some(&[true, false]), &mut masked_out);
+
+        assert_eq!(dense_out, masked_out);
+        assert!(masked_out[2] == 0.0 && masked_out[2].is_sign_positive());
+        assert!(masked_out[0] > 0.0 && masked_out[1] > 0.0);
     }
 
     #[test]

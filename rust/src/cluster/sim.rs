@@ -8,6 +8,7 @@ use crate::cluster::{ClusterAllocator, Placement, PlacementScratch,
 use crate::error::Result;
 use crate::metrics::Streaming;
 use crate::serverless::{EconInstruments, EconomicsReport};
+use crate::sim::arena::ActiveSet;
 use crate::sim::fault::{ClusterFaultTracker, ResilienceReport};
 use crate::sim::SimConfig;
 use crate::workload::{WorkflowStats, WorkflowTracker, WorkloadGenerator};
@@ -125,6 +126,11 @@ pub struct ClusterArena {
     // Mid-run placement re-solve buffers (the repack rebalancer).
     placement_scratch: PlacementScratch,
     repack_gpu_of: Vec<usize>,
+    // Active-set membership for the sparse stepping tier (untouched
+    // beyond reset on the dense and skip-idle paths).
+    active_set: ActiveSet,
+    woken: Vec<usize>,
+    gpu_live: Vec<bool>,
 }
 
 impl ClusterArena {
@@ -162,6 +168,9 @@ impl ClusterArena {
             streams.clear();
             streams.resize_with(n, Streaming::new);
         }
+        self.active_set.reset(n_agents);
+        self.gpu_live.clear();
+        self.gpu_live.resize(n_gpus, true);
     }
 }
 
@@ -363,19 +372,37 @@ impl ClusterSimulator {
         &self.rebalancer
     }
 
-    /// Run the hierarchical allocator over the configured workload.
-    /// Provably-idle windows are fast-forwarded by the same skip-idle
-    /// core as the single-GPU engine — bit-exact with
+    /// Run the hierarchical allocator over the configured workload at
+    /// the fastest eligible tier of the event core: the active-set
+    /// sparse stepper when the config permits it (no workflow coupling,
+    /// no serverless economics — the cluster's per-GPU Algorithm 1
+    /// instances are stateless, so no policy gate is needed), otherwise
+    /// the skip-idle core. Either way the result is bit-exact with
     /// [`ClusterSimulator::run_dense`] (asserted by the property suite).
     pub fn run(&self) -> Result<ClusterResult> {
         self.run_with_arena(&mut ClusterArena::new())
     }
 
-    /// [`ClusterSimulator::run`] with the skip-idle core disabled: the
+    /// [`ClusterSimulator::run`] with every fast tier disabled: the
     /// dense reference path for the bit-exactness properties and the
     /// scaling bench.
     pub fn run_dense(&self) -> Result<ClusterResult> {
         self.run_inner(&mut ClusterArena::new(), false)
+    }
+
+    /// [`ClusterSimulator::run`] pinned to the whole-sim skip-idle tier
+    /// (active-set stepping disabled): the middle rung of the
+    /// dense / skip-idle / active-set ladder, kept addressable so the
+    /// scaling bench and the property suite can separate the two
+    /// optimizations.
+    pub fn run_skip_idle(&self) -> Result<ClusterResult> {
+        self.run_inner(&mut ClusterArena::new(), true)
+    }
+
+    /// [`ClusterSimulator::run_skip_idle`] with caller-owned buffers.
+    pub fn run_skip_idle_with_arena(&self, arena: &mut ClusterArena)
+                                    -> Result<ClusterResult> {
+        self.run_inner(arena, true)
     }
 
     /// [`ClusterSimulator::run`], but with caller-owned buffers: repeated
@@ -385,7 +412,11 @@ impl ClusterSimulator {
     /// property suite).
     pub fn run_with_arena(&self, arena: &mut ClusterArena)
                           -> Result<ClusterResult> {
-        self.run_inner(arena, true)
+        if self.cfg.workflow.is_none() && self.cfg.economics.is_none() {
+            self.run_active_inner(arena)
+        } else {
+            self.run_inner(arena, true)
+        }
     }
 
     fn run_inner(&self, arena: &mut ClusterArena, skip_idle: bool)
@@ -409,7 +440,7 @@ impl ClusterSimulator {
         let ClusterArena {
             queues, rates, counts, observed, alloc, stalled_until,
             model_mb, demand, gpu_cap, gpu_done, latency, throughput,
-            gpu_util, placement_scratch, repack_gpu_of,
+            gpu_util, placement_scratch, repack_gpu_of, ..
         } = arena;
         model_mb.extend(self.registry.profiles().iter().map(|p| p.model_mb));
         let base_tput = self.registry.base_tput();
@@ -728,6 +759,455 @@ impl ClusterSimulator {
             economics,
             resilience,
             workflow: wf.map(WorkflowTracker::finish),
+        })
+    }
+
+    /// The active-set tier: per-agent sparse stepping inside busy
+    /// cluster ticks.
+    ///
+    /// Same contract as the fluid engine's active-set stepper, with the
+    /// cluster's extra machinery folded in. An active agent *settles*
+    /// (leaves the iterated list) at the end of a fault-quiet step when
+    /// its realized state is exactly zero (`queue == alloc == observed
+    /// == 0.0`), its GPU floor is zero (`min_gpu == 0.0` — its per-GPU
+    /// Algorithm 1 instance then writes exactly `+0.0` for it at zero
+    /// demand regardless of the other agents' state, the cluster analog
+    /// of the fluid engine's per-agent policy fixed point), any
+    /// migration stall has expired by the next step, and the workload
+    /// oracle ([`WorkloadGenerator::agent_idle_until`]) promises it
+    /// zero arrivals until a known wake step. A settled agent's dense
+    /// steps
+    /// would each push exactly `0.0` latency and throughput and
+    /// contribute `+0.0` to every ascending fold (rebalancer demand,
+    /// per-GPU capacity/processed, billing), so its whole span is
+    /// batch-accounted with one deferred `push_zeros` flush when it
+    /// wakes or the run ends.
+    ///
+    /// Fault windows step densely: the moment
+    /// [`ClusterFaultTracker::quiet_until`] stops promising quiet,
+    /// every settled agent is flushed and woken and the step runs the
+    /// full advance / recovery / rebalance machinery over all agents.
+    /// During quiet windows the same promise licenses skipping
+    /// `advance` (it would admit no event), the recovery block
+    /// (`any_offline` is false), and the per-device offline checks. A
+    /// firing rebalancer trigger also wakes everyone first: the
+    /// hottest-agent heuristic may legally migrate a formerly-settled
+    /// zero-floor agent, which must be live (and stall-accounted) when
+    /// the move lands. Stalls can only be *acquired* while live — fault
+    /// stalls are admitted on non-quiet steps and migration stalls
+    /// behind the trigger's wake — so no settled agent ever holds one.
+    ///
+    /// Caller (`run_with_arena`) guarantees: no workflow, no economics.
+    fn run_active_inner(&self, arena: &mut ClusterArena)
+                        -> Result<ClusterResult> {
+        debug_assert!(self.cfg.workflow.is_none()
+                      && self.cfg.economics.is_none());
+        let n = self.registry.len();
+        let n_gpus = self.capacities.len();
+        let cfg = &self.cfg;
+        let mut allocator =
+            ClusterAllocator::new(&self.registry, self.placement.clone());
+        let mut workload = WorkloadGenerator::new(
+            cfg.arrival_rates.clone(), cfg.workload_kind.clone(),
+            cfg.arrival_process, cfg.seed);
+        let mut econ = EconInstruments::new(
+            cfg.economics.as_ref(), cfg.pricing, n, cfg.seed);
+
+        arena.reset(n, n_gpus);
+        let ClusterArena {
+            queues, rates, counts, observed, alloc, stalled_until,
+            model_mb, demand, gpu_cap, gpu_done, latency, throughput,
+            gpu_util, placement_scratch, repack_gpu_of, active_set,
+            woken, gpu_live,
+        } = arena;
+        model_mb.extend(self.registry.profiles().iter().map(|p| p.model_mb));
+        let base_tput = self.registry.base_tput();
+        let min_gpu = self.registry.min_gpu();
+
+        let mut migrations = 0u64;
+        let mut migration_stall_s = 0.0f64;
+        let mut last_migration_at = f64::NEG_INFINITY;
+        let mut fault = ClusterFaultTracker::new(
+            cfg.faults.as_ref(), n_gpus, cfg.seed);
+        let mut processed_sum = 0.0f64;
+
+        // Flush-and-wake every settled agent: a fault transition or a
+        // firing rebalancer trigger hands the step to the dense blocks,
+        // which must see all n agents live.
+        fn wake_all(active_set: &mut ActiveSet, latency: &mut [Streaming],
+                    throughput: &mut [Streaming], step: u64, n: usize) {
+            for i in 0..n {
+                if active_set.stamp[i] != active_set.epoch {
+                    let k = step - active_set.settled_at[i];
+                    latency[i].push_zeros(k);
+                    throughput[i].push_zeros(k);
+                    active_set.stamp[i] = active_set.epoch;
+                }
+            }
+            active_set.active.clear();
+            active_set.active.extend(0..n);
+        }
+
+        let mut step = 0u64;
+        while step < cfg.steps {
+            let now = step as f64 * cfg.dt;
+
+            // 0. Reactivate agents whose scheduled wake is due, flushing
+            //    the zeros their settled span deferred.
+            active_set.drain_due(step, woken);
+            if !woken.is_empty() {
+                for &i in woken.iter() {
+                    let k = step - active_set.settled_at[i];
+                    latency[i].push_zeros(k);
+                    throughput[i].push_zeros(k);
+                }
+                active_set.active.extend_from_slice(woken);
+                active_set.active.sort_unstable();
+            }
+
+            // 1. Fault gate: `Some(f)` (with f > step) licenses running
+            //    this step without the fault machinery; `None` means a
+            //    transition may fire, so wake everyone and step densely
+            //    until the tracker goes quiet again (stale wake-heap
+            //    entries are skipped on pop).
+            let fault_quiet = fault.quiet_until(step, cfg.dt)
+                .filter(|&f| f > step);
+            if fault_quiet.is_none() && active_set.active.len() < n {
+                wake_all(active_set, latency, throughput, step, n);
+            }
+
+            // 2. Whole-idle jump (the skip-idle tier, kept inside this
+            //    loop): settled agents are drained and stall-free by
+            //    invariant, so the cluster is provably idle as soon as
+            //    every ACTIVE agent is too and the schedule-level
+            //    oracles agree; zero demand can never fire the
+            //    rebalancer trigger. Active agents' windows are
+            //    batch-accounted here; the settled stay deferred.
+            if let Some(fq) = fault_quiet {
+                if active_set.active.iter()
+                    .all(|&i| queues[i] == 0.0 && stalled_until[i] <= now)
+                {
+                    if let Some(w) = workload.idle_until(step) {
+                        let until = w.min(fq).min(cfg.steps);
+                        if until > step {
+                            let k = until - step;
+                            for &i in active_set.active.iter() {
+                                latency[i].push_zeros(k);
+                                throughput[i].push_zeros(k);
+                            }
+                            step = until;
+                            continue;
+                        }
+                    }
+                }
+            }
+
+            // 3. Arrivals, active agents only — bit-the-same draws as
+            //    dense (settled agents' zero-rate steps consume no RNG,
+            //    and their stale rate/count cells are never read:
+            //    `observed` holds 0.0 for them by the settle condition).
+            workload.step_active(step, cfg.dt, &active_set.active,
+                                 &mut rates[..], &mut counts[..]);
+            for &i in active_set.active.iter() {
+                queues[i] += counts[i];
+                observed[i] = counts[i] / cfg.dt;
+            }
+
+            // 4. Fault advance + eviction recovery, non-quiet steps only
+            //    (everyone is live there). On quiet steps `advance`
+            //    would admit no event and `any_offline` is false, so
+            //    the whole block is a dense no-op.
+            if fault_quiet.is_none() {
+                fault.advance(now, &mut stalled_until[..]);
+                if fault.any_offline(now) {
+                    if let Rebalancer::Repack(mig) = &self.rebalancer {
+                        let needs_recovery = (0..n).any(
+                            |i| fault.gpu_offline(
+                                allocator.placement().gpu_of[i], now));
+                        let max_moves = fault.max_moves(n);
+                        if needs_recovery && max_moves > 0 {
+                            let eff = fault.effective_caps(
+                                &self.capacities, now);
+                            if self.strategy.place_into_colocated(
+                                &self.registry, eff, &observed[..],
+                                &self.colocate, placement_scratch,
+                                repack_gpu_of).is_ok()
+                            {
+                                let mut moves = 0usize;
+                                for agent in 0..n {
+                                    if moves >= max_moves {
+                                        break;
+                                    }
+                                    let cur =
+                                        allocator.placement().gpu_of[agent];
+                                    if !fault.gpu_offline(cur, now)
+                                        || repack_gpu_of[agent] == cur {
+                                        continue;
+                                    }
+                                    let transfer_s = model_mb[agent] as f64
+                                        / mig.mb_per_s;
+                                    let rewarm_s =
+                                        fault.rewarm_s(model_mb[agent]);
+                                    stalled_until[agent] =
+                                        now + transfer_s + rewarm_s;
+                                    migration_stall_s += transfer_s;
+                                    migrations += 1;
+                                    allocator.migrate(
+                                        &self.registry, agent,
+                                        repack_gpu_of[agent]);
+                                    moves += 1;
+                                }
+                                if moves > 0 {
+                                    fault.note_recovery(moves, n);
+                                    last_migration_at = now;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+
+            // 5. Rebalancer trigger scan over active agents only — the
+            //    settled contribute `observed / base_tput == +0.0` to
+            //    the dense demand fold. A firing trigger wakes everyone
+            //    before the migration blocks run, exactly as dense sees
+            //    them.
+            if let Some(mig) = self.rebalancer.model() {
+                let cooled_down = (now >= last_migration_at + mig.cooldown_s
+                    || migrations == 0)
+                    && !fault.any_offline(now);
+                let mut triggered = (false, 0usize, 0usize);
+                if cooled_down {
+                    demand.fill(0.0);
+                    for &i in active_set.active.iter() {
+                        demand[allocator.placement().gpu_of[i]] +=
+                            observed[i] / base_tput[i];
+                    }
+                    let (max_g, max_d) = demand.iter().cloned().enumerate()
+                        .fold((0, f64::MIN), |acc, (g, d)| {
+                            if d > acc.1 { (g, d) } else { acc }
+                        });
+                    let (min_g, min_d) = demand.iter().cloned().enumerate()
+                        .fold((0, f64::MAX), |acc, (g, d)| {
+                            if d < acc.1 { (g, d) } else { acc }
+                        });
+                    if max_d > mig.imbalance_threshold * min_d.max(1e-9)
+                        && max_g != min_g {
+                        triggered = (true, max_g, min_g);
+                    }
+                }
+                let (fire, max_g, min_g) = triggered;
+                if fire && active_set.active.len() < n {
+                    wake_all(active_set, latency, throughput, step, n);
+                }
+                if fire && matches!(self.rebalancer,
+                                    Rebalancer::Repack(_)) {
+                    last_migration_at = now;
+                    if self.strategy.place_into_colocated(
+                        &self.registry, &self.capacities,
+                        &observed[..], &self.colocate, placement_scratch,
+                        repack_gpu_of).is_ok()
+                    {
+                        let mut moved = false;
+                        for agent in 0..n {
+                            if repack_gpu_of[agent]
+                                == allocator.placement().gpu_of[agent] {
+                                continue;
+                            }
+                            let transfer_s =
+                                model_mb[agent] as f64 / mig.mb_per_s;
+                            stalled_until[agent] = now + transfer_s;
+                            migration_stall_s += transfer_s;
+                            migrations += 1;
+                            moved = true;
+                        }
+                        if moved {
+                            allocator.set_placement(
+                                &self.registry,
+                                Placement {
+                                    gpu_of: repack_gpu_of.clone(),
+                                    n_gpus,
+                                });
+                        }
+                    }
+                } else if fire {
+                    let mut target_load = 0.0;
+                    for i in 0..n {
+                        if allocator.placement().gpu_of[i] == min_g {
+                            target_load += min_gpu[i];
+                        }
+                    }
+                    let mut movable: Option<usize> = None;
+                    for i in 0..n {
+                        if allocator.placement().gpu_of[i] != max_g
+                            || target_load + min_gpu[i]
+                                > self.capacities[min_g] + 1e-9 {
+                            continue;
+                        }
+                        let better = match movable {
+                            None => true,
+                            Some(m) => min_gpu[i] < min_gpu[m],
+                        };
+                        if better {
+                            movable = Some(i);
+                        }
+                    }
+                    if let Some(agent) = movable {
+                        let transfer_s =
+                            model_mb[agent] as f64 / mig.mb_per_s;
+                        stalled_until[agent] = now + transfer_s;
+                        migration_stall_s += transfer_s;
+                        migrations += 1;
+                        last_migration_at = now;
+                        allocator.migrate(&self.registry, agent, min_g);
+                    }
+                }
+            }
+
+            // 6. Allocation, masked to the devices hosting at least one
+            //    active agent. A fully-settled device's cells keep
+            //    their exact `+0.0` — bit-for-bit what dense would
+            //    rewrite ([`ClusterAllocator::allocate_masked`]).
+            gpu_live.fill(false);
+            for &i in active_set.active.iter() {
+                gpu_live[allocator.placement().gpu_of[i]] = true;
+            }
+            allocator.allocate_masked(
+                &self.registry, &observed[..], &queues[..], step,
+                &self.capacities[..], Some(&gpu_live[..]),
+                &mut alloc[..]);
+
+            // 7. Forfeiture. Quiet steps: no device is offline and no
+            //    settled agent holds a live stall, so only active
+            //    agents' stalls matter (`note_degraded` can't fire).
+            //    Non-quiet steps: the full dense loop over all n.
+            match fault_quiet {
+                Some(_) => {
+                    for &i in active_set.active.iter() {
+                        if now < stalled_until[i] {
+                            alloc[i] = 0.0;
+                        }
+                    }
+                }
+                None => {
+                    let mut on_offline_device = false;
+                    for i in 0..n {
+                        let offline = fault.gpu_offline(
+                            allocator.placement().gpu_of[i], now);
+                        on_offline_device |= offline;
+                        if now < stalled_until[i] || offline {
+                            alloc[i] = 0.0;
+                        }
+                    }
+                    if on_offline_device {
+                        fault.note_degraded(cfg.dt);
+                    }
+                }
+            }
+            econ.apply_lifecycle(step, cfg.dt, &queues[..],
+                                 &model_mb[..], &mut alloc[..]);
+
+            // 8. Processing, active agents only; the per-GPU and billing
+            //    folds equal the dense 0..n folds with the settled
+            //    agents' `+0.0` terms elided.
+            gpu_cap.fill(0.0);
+            gpu_done.fill(0.0);
+            let mut total_alloc = 0.0;
+            for &i in active_set.active.iter() {
+                let g = alloc[i];
+                total_alloc += g;
+                let rate = base_tput[i] * g;
+                let cap = rate * cfg.dt;
+                let processed = queues[i].min(cap);
+                queues[i] -= processed;
+                processed_sum += processed;
+                let w = if rate > 0.0 {
+                    (queues[i] / rate).min(cfg.latency_cap_s)
+                } else if queues[i] > 0.0 {
+                    cfg.latency_cap_s
+                } else {
+                    0.0
+                };
+                latency[i].push(w);
+                throughput[i].push(processed / cfg.dt);
+                let gpu = allocator.placement().gpu_of[i];
+                gpu_cap[gpu] += cap;
+                gpu_done[gpu] += processed;
+            }
+            for g in 0..n_gpus {
+                if gpu_cap[g] > 0.0 {
+                    gpu_util[g].push(gpu_done[g] / gpu_cap[g]);
+                }
+            }
+            econ.charge_step(total_alloc, &alloc[..], cfg.dt);
+
+            // 9. Settle scan, quiet steps only (fault windows wake
+            //    everyone anyway, so settling inside one is churn).
+            //    `observed == 0.0` guards the stale-buffer hazard: the
+            //    allocator and the rebalancer read the full slices, so
+            //    a settled agent must hold exact zeros in every cell a
+            //    later step sees.
+            if fault_quiet.is_some() {
+                let next = step + 1;
+                let next_now = next as f64 * cfg.dt;
+                let mut any_settled = false;
+                let mut idx = 0;
+                while idx < active_set.active.len() {
+                    let i = active_set.active[idx];
+                    idx += 1;
+                    if queues[i] != 0.0 || alloc[i] != 0.0
+                        || observed[i] != 0.0 || min_gpu[i] != 0.0
+                        || stalled_until[i] > next_now
+                    {
+                        continue;
+                    }
+                    let Some(w) = workload.agent_idle_until(i, next)
+                    else {
+                        continue;
+                    };
+                    if w <= next {
+                        continue;
+                    }
+                    active_set.settle(i, next, w);
+                    any_settled = true;
+                }
+                if any_settled {
+                    let epoch = active_set.epoch;
+                    let stamp = &active_set.stamp;
+                    active_set.active.retain(|&i| stamp[i] == epoch);
+                }
+            }
+
+            step += 1;
+        }
+
+        // Flush every still-settled agent's deferred zero span to the
+        // end of the run.
+        for i in 0..n {
+            if active_set.stamp[i] != active_set.epoch {
+                let k = cfg.steps - active_set.settled_at[i];
+                latency[i].push_zeros(k);
+                throughput[i].push_zeros(k);
+            }
+        }
+
+        let (cost_dollars, _gpu_seconds, economics) =
+            econ.finish(cfg.steps);
+        let resilience = fault.finish(
+            processed_sum / (cfg.steps as f64 * cfg.dt).max(1e-9));
+
+        Ok(ClusterResult {
+            n_gpus,
+            agent_latencies: latency.iter().map(Streaming::mean).collect(),
+            agent_throughputs:
+                throughput.iter().map(Streaming::mean).collect(),
+            gpu_utilization: gpu_util.iter().map(Streaming::mean).collect(),
+            migrations,
+            migration_stall_s,
+            cost_dollars,
+            economics,
+            resilience,
+            workflow: None,
         })
     }
 }
@@ -1386,5 +1866,172 @@ mod tests {
         cfg.workflow = Some(WorkflowWorkload::new(wide, 0.5));
         assert!(ClusterSimulator::builder(cfg, AgentRegistry::paper())
                 .gpus(2, 1.0).build().is_err());
+    }
+
+    /// Zero-floor profiles (serverless scale-to-zero): the active-set
+    /// tier can really settle idle agents. Agent 0 keeps a floor to pin
+    /// that floored agents never settle yet stay bit-exact.
+    fn sparse_cluster_agents(n: usize) -> AgentRegistry {
+        use crate::agents::{AgentProfile, Priority};
+        let profiles: Vec<AgentProfile> = (0..n)
+            .map(|i| AgentProfile {
+                name: format!("a{i}"),
+                model_mb: 800,
+                base_tput: 40.0 + (i % 3) as f64 * 10.0,
+                min_gpu: if i == 0 { 0.1 } else { 0.0 },
+                priority: match i % 3 {
+                    0 => Priority::High,
+                    1 => Priority::Medium,
+                    _ => Priority::Low,
+                },
+            })
+            .collect();
+        AgentRegistry::new(profiles).unwrap()
+    }
+
+    /// Only `hot` ever receives arrivals, and only inside a mid-run
+    /// burst window — the canonical active-set shape: the zero-floor
+    /// herd settles at the first quiet step and is batch-accounted
+    /// until its wake (or the end of the run).
+    fn sparse_cluster_cfg(n: usize, hot: &[usize]) -> SimConfig {
+        let mut cfg = SimConfig::paper();
+        cfg.arrival_rates = (0..n)
+            .map(|i| if hot.contains(&i) { 30.0 } else { 0.0 })
+            .collect();
+        cfg.workload_kind = WorkloadKind::Burst {
+            agents: hot.to_vec(), start: 40, end: 60,
+        };
+        cfg
+    }
+
+    #[test]
+    fn cluster_active_set_is_bit_exact_on_sparse_bursts() {
+        use crate::workload::ArrivalProcess;
+        // All three tiers, every rebalancer, deterministic and Poisson:
+        // full ClusterResult bit identity. Poisson holds because the
+        // settled agents' zero-rate draws consume no RNG state.
+        for poisson in [false, true] {
+            for rebalancer in Rebalancer::all() {
+                let mut cfg = sparse_cluster_cfg(16, &[3, 11]);
+                if poisson {
+                    cfg.arrival_process = ArrivalProcess::Poisson;
+                }
+                let sim = ClusterSimulator::with_policies(
+                    cfg, sparse_cluster_agents(16), vec![1.0, 0.75],
+                    PlacementStrategy::HeadroomDecreasing, rebalancer)
+                    .unwrap();
+                let name = sim.rebalancer().name();
+                let active = sim.run().unwrap();
+                assert_eq!(active, sim.run_dense().unwrap(),
+                           "{name} poisson={poisson} vs dense");
+                assert_eq!(active, sim.run_skip_idle().unwrap(),
+                           "{name} poisson={poisson} vs skip-idle");
+                // The burst really happened and was served.
+                assert!(active.agent_throughputs[3] > 0.0);
+                assert!(active.agent_throughputs[11] > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_active_set_is_bit_exact_under_steady_sparse_load() {
+        // Steady traffic on 2 of 16 agents: the zero-floor herd settles
+        // after the first step and sleeps to the end of the run while
+        // the hot pair (and the floored straggler) step live throughout.
+        let mut cfg = sparse_cluster_cfg(16, &[3, 11]);
+        cfg.workload_kind = WorkloadKind::Steady;
+        let sim = ClusterSimulator::with_policies(
+            cfg, sparse_cluster_agents(16), vec![1.0, 1.0],
+            PlacementStrategy::HeadroomDecreasing,
+            Rebalancer::Static).unwrap();
+        let r = sim.run().unwrap();
+        assert_eq!(r, sim.run_dense().unwrap());
+        assert!(r.agent_throughputs[3] > 0.0);
+        assert_eq!(r.agent_throughputs[5], 0.0);
+    }
+
+    #[test]
+    fn cluster_active_set_is_bit_exact_under_mid_window_faults() {
+        use crate::sim::fault::{FaultConfig, FaultEvent, FaultPlan};
+        // An eviction inside the pre-burst idle window (wakes the whole
+        // settled herd for the dense fault steps) and a stall landing
+        // inside the burst: every rebalancer replays bit-identically,
+        // including recovery migrations and resilience accounting.
+        for rebalancer in Rebalancer::all() {
+            let mut cfg = sparse_cluster_cfg(12, &[2, 7]);
+            cfg.faults = Some(FaultConfig::new(FaultPlan::new(vec![
+                FaultEvent::GpuEviction {
+                    t: 10.0, gpu: 0, duration: 5.0,
+                },
+                FaultEvent::AgentStall {
+                    t: 45.0, agent: 2, factor: 3.0, duration: 10.0,
+                },
+            ])).with_repack_throttle(0.5));
+            let sim = ClusterSimulator::with_policies(
+                cfg, sparse_cluster_agents(12), vec![1.2, 1.2],
+                PlacementStrategy::HeadroomDecreasing, rebalancer)
+                .unwrap();
+            let name = sim.rebalancer().name();
+            let r = sim.run().unwrap();
+            assert_eq!(r, sim.run_dense().unwrap(), "{name}");
+            assert!(r.resilience.is_some(), "{name}");
+        }
+    }
+
+    #[test]
+    fn cluster_active_set_handles_migration_of_settled_agents() {
+        // Burst demand on the floored agent only: the zero-floor herd
+        // settles on the first quiet step, then the burst's demand
+        // imbalance fires the hottest-agent trigger mid-run. The
+        // trigger wakes everyone before the move (the smallest-minimum
+        // victim is a formerly-settled zero-floor agent), the victim
+        // pays its stall live, re-settles once it expires — all
+        // bit-exact with dense.
+        let cfg = sparse_cluster_cfg(8, &[0]);
+        let sim = ClusterSimulator::with_policies(
+            cfg, sparse_cluster_agents(8), vec![1.0, 1.0],
+            PlacementStrategy::HeadroomDecreasing,
+            Rebalancer::HottestAgent(MigrationModel::default())).unwrap();
+        let r = sim.run().unwrap();
+        assert_eq!(r, sim.run_dense().unwrap());
+        assert!(r.migrations >= 1, "imbalanced burst must trigger a move");
+        assert!(r.migration_stall_s > 0.0);
+    }
+
+    #[test]
+    fn cluster_active_set_wakes_settled_agents_for_late_bursts() {
+        // A burst in the run's last ticks: the hot agent settles at the
+        // start, sleeps ~90 steps, and its deferred zero-flush plus
+        // wake must land exactly where dense would have recorded them.
+        let mut cfg = sparse_cluster_cfg(8, &[5]);
+        cfg.workload_kind = WorkloadKind::Burst {
+            agents: vec![5], start: 90, end: 95,
+        };
+        let sim = ClusterSimulator::with_policies(
+            cfg, sparse_cluster_agents(8), vec![1.0, 1.0],
+            PlacementStrategy::HeadroomDecreasing,
+            Rebalancer::Static).unwrap();
+        let r = sim.run().unwrap();
+        assert_eq!(r, sim.run_dense().unwrap());
+        assert!(r.agent_throughputs[5] > 0.0, "late burst was served");
+    }
+
+    #[test]
+    fn cluster_active_set_arena_reuse_is_bit_identical() {
+        // The active path through one arena across shapes and epochs:
+        // stale stamps, settled_at cells, and wake-heap entries from a
+        // previous run must never leak into the next.
+        let mut arena = ClusterArena::new();
+        for _ in 0..2 {
+            for (n, hot) in [(8usize, vec![0usize]), (16, vec![3, 11])] {
+                let sim = ClusterSimulator::with_policies(
+                    sparse_cluster_cfg(n, &hot), sparse_cluster_agents(n),
+                    vec![1.0, 0.75],
+                    PlacementStrategy::HeadroomDecreasing,
+                    Rebalancer::Static).unwrap();
+                let reused = sim.run_with_arena(&mut arena).unwrap();
+                assert_eq!(reused, sim.run().unwrap(), "n={n}");
+            }
+        }
     }
 }

@@ -6,7 +6,8 @@
 //! `+0.0` is the identity on any non-`-0.0` float, and `min`/`max`
 //! against `0.0` are idempotent after the first zero), so a provably-idle
 //! window of `k` steps can be batch-accounted with [`Streaming::push_zeros`]
-//! bit-exactly as if the dense loop had pushed `0.0` `k` times. At
+//! bit-exactly as if the dense loop had pushed `0.0` `k` times
+//! ([`Streaming::push_repeat`] is the general constant-series form). At
 //! simulation magnitudes (means well under 10⁴ over ≤ 10⁶ steps) the
 //! power-sum variance loses nothing detectable against f64's 15–16
 //! significant digits.
@@ -51,14 +52,31 @@ impl Streaming {
     /// single real push would), and `min`/`max` clamp against `0.0`
     /// idempotently.
     pub fn push_zeros(&mut self, k: u64) {
+        self.push_repeat(0.0, k);
+    }
+
+    /// Add `k` copies of `v` in O(1) via the closed-form batch update
+    /// `n += k`, `sum += v·k`, `sumsq += v²·k`, with one `min`/`max`
+    /// clamp. Exact in real arithmetic; in floating point the closed
+    /// form is *more* accurate than `k` sequential `push(v)` calls
+    /// (which accumulate one rounding per addition — see the
+    /// catastrophic-cancellation test), but therefore only
+    /// **bit-identical** to them when each partial sum is exact, e.g.
+    /// `v == 0.0` (where this reduces to [`Streaming::push_zeros`]) or
+    /// dyadic `v` with small `k`. The active-set engines only
+    /// batch-account series that are exactly `0.0`, so their deferred
+    /// flushes stay bit-exact with the dense reference paths; use the
+    /// general form where closed-form accuracy, not bit-replication of
+    /// a dense loop, is what is wanted.
+    pub fn push_repeat(&mut self, v: f64, k: u64) {
         if k == 0 {
             return;
         }
         self.n += k;
-        self.sum += 0.0;
-        self.sumsq += 0.0;
-        self.min = self.min.min(0.0);
-        self.max = self.max.max(0.0);
+        self.sum += v * k as f64;
+        self.sumsq += v * v * k as f64;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
     }
 
     /// Number of observations.
@@ -210,6 +228,85 @@ mod tests {
         let before = batched;
         batched.push_zeros(0);
         assert_eq!(before, batched);
+    }
+
+    #[test]
+    fn push_repeat_matches_batch_formulas_exactly() {
+        // Mean/std/min/max of k copies of v in closed form, incl. around
+        // prior history.
+        let mut s = Streaming::new();
+        s.push_repeat(3.0, 4);
+        assert_eq!(s.count(), 4);
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.std_dev(), 0.0);
+        assert_eq!(s.min(), 3.0);
+        assert_eq!(s.max(), 3.0);
+        s.push(9.0);
+        // n=5, sum=21, sumsq=117: mean 4.2, var 117/5 - 4.2² = 5.76.
+        assert_eq!(s.mean(), 4.2);
+        assert!((s.std_dev() - 2.4).abs() < 1e-12);
+        assert_eq!(s.max(), 9.0);
+        // k=0 is a no-op even with a "new" value.
+        let before = s;
+        s.push_repeat(-100.0, 0);
+        assert_eq!(before, s);
+    }
+
+    #[test]
+    fn push_repeat_of_zero_is_push_zeros() {
+        // v=0.0 reduces bit-exactly to push_zeros (the engines' deferred
+        // flush path), history or not.
+        for k in [1u64, 3, 1000] {
+            let mut a = Streaming::new();
+            let mut b = Streaming::new();
+            for &x in &[3.5, -1.25, 9.0] {
+                a.push(x);
+                b.push(x);
+            }
+            a.push_zeros(k);
+            b.push_repeat(0.0, k);
+            assert_eq!(a, b, "k={k}");
+        }
+    }
+
+    #[test]
+    fn push_repeat_dyadic_matches_sequential_bitwise() {
+        // Dyadic values with small k keep every partial sum exact, so
+        // the closed form reproduces the sequential pushes bit-for-bit.
+        for v in [0.5, 2.0, -0.25, 1024.0] {
+            let mut seq = Streaming::new();
+            let mut rep = Streaming::new();
+            for _ in 0..8 {
+                seq.push(v);
+            }
+            rep.push_repeat(v, 8);
+            assert_eq!(seq, rep, "v={v}");
+        }
+    }
+
+    #[test]
+    fn push_repeat_beats_sequential_at_large_k() {
+        // The catastrophic-cancellation edge: k sequential `sum += 0.1`
+        // drift by an ulp per add, while the closed form rounds once.
+        // At k = 10^7 the sequential mean is measurably off; push_repeat
+        // stays exact to the last decimal.
+        let (v, k) = (0.1, 10_000_000u64);
+        let mut seq = Streaming::new();
+        for _ in 0..k {
+            seq.push(v);
+        }
+        let mut rep = Streaming::new();
+        rep.push_repeat(v, k);
+        let exact_sum = v * k as f64;
+        assert_eq!(rep.sum(), exact_sum);
+        assert!((rep.mean() - v).abs() < 1e-15, "{}", rep.mean());
+        // The closed form is never farther from the true mean than the
+        // k-rounding sequential accumulation (in practice the latter
+        // has drifted by many ulps at this k).
+        assert!((rep.mean() - v).abs() <= (seq.mean() - v).abs());
+        // Variance of a constant series: zero up to one rounding of the
+        // power-sum difference (sqrt of an ulp-scale residual at worst).
+        assert!(rep.std_dev() < 1e-6, "{}", rep.std_dev());
     }
 
     #[test]

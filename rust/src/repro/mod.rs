@@ -22,7 +22,9 @@ pub use experiments::{fig2a, fig2b, fig2c, fig2d, table1, table2,
                       CostPerfPoint, PerAgentSeries};
 pub use placement::{adversarial_rates, adversarial_registry,
                     large_n_config, large_n_grid, placement_experiment,
-                    placement_grid, synthetic_arrival_rates,
+                    placement_grid, sparse_burst_config,
+                    sparse_hot_agents, synthetic_arrival_rates,
+                    synthetic_sparse_rates, synthetic_sparse_registry,
                     PlacementRow};
 pub use robustness::{cluster_grid, dominance_experiment,
                      overload_experiment, scaling_experiment,

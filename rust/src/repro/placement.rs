@@ -18,8 +18,11 @@
 //!   mean and High-priority latency, throughput, migrations, stalls,
 //!   and GPU-utilization spread;
 //! * [`large_n_grid`] — the skip-idle large-N axis: 1024- and
-//!   4096-agent burst cells the event-stepped core fast-forwards,
-//!   also folded into the cluster grid and `stress_sweep`.
+//!   4096-agent burst cells the event-stepped core fast-forwards, plus
+//!   sparse-burst cells ([`synthetic_sparse_rates`]: only k of N agents
+//!   ever receive arrivals) where the active-set tier steps just the
+//!   hot minority inside busy ticks — also folded into the cluster grid
+//!   and `stress_sweep`.
 
 use crate::agents::{AgentProfile, AgentRegistry, Priority};
 use crate::cluster::{MigrationModel, PlacementStrategy, Rebalancer};
@@ -46,6 +49,76 @@ pub fn synthetic_arrival_rates(n: usize) -> Vec<f64> {
     let raw_total: f64 = raw.iter().sum();
     let scale = total / raw_total;
     raw.into_iter().map(|r| r * scale).collect()
+}
+
+/// The `k` hot agents of a sparse-burst cell, spread evenly over `n`.
+pub fn sparse_hot_agents(n: usize, k: usize) -> Vec<usize> {
+    (0..k).map(|j| j * n / k).collect()
+}
+
+/// Arrival rates for a sparse-burst cell: only the `k` hot agents
+/// ([`sparse_hot_agents`]) ever receive traffic, cycling the paper's
+/// §IV.A rates over them and normalizing so total demand stays at the
+/// paper's 190 rps — the cells stress *sparsity*, not overload.
+pub fn synthetic_sparse_rates(n: usize, k: usize) -> Vec<f64> {
+    let base = AgentProfile::paper_arrival_rates();
+    let mut rates = vec![0.0; n];
+    for (j, &i) in sparse_hot_agents(n, k).iter().enumerate() {
+        rates[i] = base[j % base.len()];
+    }
+    let total: f64 = base.iter().sum();
+    let raw_total: f64 = rates.iter().sum();
+    let scale = total / raw_total;
+    for r in rates.iter_mut() {
+        *r *= scale;
+    }
+    rates
+}
+
+/// Registry for a sparse-burst cell: the
+/// [`synthetic_registry`] profile shapes, except agents outside the hot
+/// set carry a **zero** GPU floor — the serverless scale-to-zero
+/// stance (a never-active agent holds no reservation), and what lets
+/// the active-set tier settle the cold majority. Hot floors are scaled
+/// so they stay jointly feasible at any `k`.
+pub fn synthetic_sparse_registry(n: usize, k: usize) -> AgentRegistry {
+    let base = AgentProfile::paper_agents();
+    let mut profiles: Vec<AgentProfile> = (0..n).map(|i| {
+        let b = &base[i % base.len()];
+        AgentProfile {
+            name: format!("agent{i}"),
+            model_mb: b.model_mb,
+            base_tput: b.base_tput,
+            min_gpu: 0.0,
+            priority: match i % 3 {
+                0 => Priority::High,
+                1 => Priority::Medium,
+                _ => Priority::Low,
+            },
+        }
+    }).collect();
+    for (j, &i) in sparse_hot_agents(n, k).iter().enumerate() {
+        profiles[i].min_gpu =
+            base[j % base.len()].min_gpu * 4.0 / k.max(4) as f64;
+    }
+    AgentRegistry::new(profiles).expect("sparse profiles valid")
+}
+
+/// The config behind one sparse-burst cell: `n` agents, only the `k`
+/// hot ones ever receiving traffic, all of it inside the same middle-
+/// fifth burst window [`large_n_config`] uses. Outside the window the
+/// whole-run idle jump applies; inside it the active-set tier steps
+/// only the hot minority while the cold majority stays settled.
+pub fn sparse_burst_config(n: usize, k: usize, steps: u64) -> SimConfig {
+    let mut cfg = SimConfig::paper();
+    cfg.steps = steps;
+    cfg.arrival_rates = synthetic_sparse_rates(n, k);
+    cfg.workload_kind = WorkloadKind::Burst {
+        agents: sparse_hot_agents(n, k),
+        start: steps * 2 / 5,
+        end: steps * 3 / 5,
+    };
+    cfg
 }
 
 /// The adversarial registry for the strategy-dominance probes: one
@@ -159,6 +232,22 @@ pub fn large_n_grid(steps: u64) -> Vec<SweepCell> {
                 format!("large_n/synth{n}/{}", strategy.name()),
                 large_n_config(n, steps), synthetic_registry(n),
                 mixed_capacities(), strategy, Rebalancer::Static)
+            {
+                cells.push(SweepCell::Cluster(cell));
+            }
+        }
+    }
+    // Sparse-burst cells: only k of n agents ever receive arrivals, so
+    // inside the burst window the active-set tier steps just the hot
+    // minority while the settled cold majority is batch-accounted.
+    for n in [1024usize, 4096] {
+        for k in [8usize, 64] {
+            if let Ok(cell) = ClusterScenario::with_policies(
+                format!("large_n/sparse{n}x{k}/headroom"),
+                sparse_burst_config(n, k, steps),
+                synthetic_sparse_registry(n, k), mixed_capacities(),
+                PlacementStrategy::HeadroomDecreasing,
+                Rebalancer::Static)
             {
                 cells.push(SweepCell::Cluster(cell));
             }
@@ -326,27 +415,108 @@ mod tests {
     fn large_n_grid_runs_4096_agent_cells_through_the_pool() {
         // The tentpole acceptance bar: synthetic_registry(4096) cells as
         // routine sweep members, fast enough because the burst shape
-        // leaves 4/5 of every run to the skip-idle core.
+        // leaves 4/5 of every run to the skip-idle core (and, on the
+        // sparse cells, the cold majority to the active-set tier).
         let cells = large_n_grid(20);
-        assert_eq!(cells.len(), 4, "1024/4096 × headroom/demand");
+        assert_eq!(cells.len(), 8,
+                   "1024/4096 × headroom/demand + 1024/4096 × k=8/64");
         let labels: Vec<&str> =
             cells.iter().map(SweepCell::label).collect();
         for want in ["large_n/synth1024/headroom",
-                     "large_n/synth4096/demand"] {
+                     "large_n/synth4096/demand",
+                     "large_n/sparse1024x8/headroom",
+                     "large_n/sparse4096x64/headroom"] {
             assert!(labels.contains(&want), "missing {want} in {labels:?}");
         }
         let runs = run_sweep(&cells, 4);
         for run in &runs {
             let r = run.result.as_cluster().expect("cluster cell");
             assert_eq!(r.n_gpus, mixed_capacities().len(), "{}", run.label);
-            assert!(r.agent_throughputs.iter().all(|t| *t > 0.0),
-                    "{}: an agent starved", run.label);
+            if run.label.starts_with("large_n/synth") {
+                assert!(r.agent_throughputs.iter().all(|t| *t > 0.0),
+                        "{}: an agent starved", run.label);
+            } else {
+                // Sparse cells: the hot minority serves, the cold
+                // majority provably never does.
+                assert!(r.agent_throughputs.iter().any(|t| *t > 0.0),
+                        "{}: every agent starved", run.label);
+                assert!(r.agent_throughputs.iter().any(|t| *t == 0.0),
+                        "{}: no cold agent", run.label);
+            }
         }
         assert!(runs.iter().any(|run| {
             run.label.starts_with("large_n/synth4096")
                 && run.result.as_cluster().unwrap()
                     .agent_throughputs.len() == 4096
         }));
+    }
+
+    #[test]
+    fn sparse_burst_cells_are_bit_exact_across_all_tiers() {
+        use crate::cluster::ClusterSimulator;
+        // Active-set vs skip-idle vs dense on the sparse-burst shape:
+        // full ClusterResult equality, and the hot/cold split is real.
+        for (n, k) in [(1024usize, 8usize), (4096, 64)] {
+            let sim = ClusterSimulator::with_policies(
+                sparse_burst_config(n, k, 100),
+                synthetic_sparse_registry(n, k), mixed_capacities(),
+                PlacementStrategy::HeadroomDecreasing,
+                Rebalancer::Static).unwrap();
+            let active = sim.run().unwrap();
+            assert_eq!(active, sim.run_dense().unwrap(), "n={n} k={k}");
+            assert_eq!(active, sim.run_skip_idle().unwrap(),
+                       "n={n} k={k}");
+            let hot = sparse_hot_agents(n, k);
+            for (i, t) in active.agent_throughputs.iter().enumerate() {
+                if hot.contains(&i) {
+                    assert!(*t > 0.0, "hot agent {i} starved (n={n})");
+                } else {
+                    assert_eq!(*t, 0.0, "cold agent {i} served (n={n})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_burst_cells_are_pool_invariant() {
+        // The 1/2/8-worker bit-identity gate over the new cells.
+        let cells: Vec<SweepCell> = large_n_grid(20).into_iter()
+            .filter(|c| c.label().starts_with("large_n/sparse"))
+            .collect();
+        assert_eq!(cells.len(), 4);
+        let one = run_sweep(&cells, 1);
+        for workers in [2usize, 8] {
+            let many = run_sweep(&cells, workers);
+            assert_eq!(one.len(), many.len());
+            for (a, b) in one.iter().zip(&many) {
+                assert_eq!(a.label, b.label);
+                assert_eq!(a.result.as_cluster(), b.result.as_cluster(),
+                           "{} differs at {workers} workers", a.label);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_rates_and_registry_agree_on_the_hot_set() {
+        for (n, k) in [(16usize, 8usize), (1024, 8), (4096, 64)] {
+            let hot = sparse_hot_agents(n, k);
+            assert_eq!(hot.len(), k);
+            let rates = synthetic_sparse_rates(n, k);
+            let total: f64 = rates.iter().sum();
+            assert!((total - 190.0).abs() < 1e-9, "n={n} k={k}: {total}");
+            let reg = synthetic_sparse_registry(n, k);
+            assert_eq!(reg.len(), n);
+            assert!(reg.minimums_feasible(2.5), "n={n} k={k}");
+            for i in 0..n {
+                if hot.contains(&i) {
+                    assert!(rates[i] > 0.0, "hot {i} has zero rate");
+                } else {
+                    assert_eq!(rates[i], 0.0, "cold {i} has traffic");
+                    assert_eq!(reg.min_gpu()[i], 0.0,
+                               "cold {i} holds a floor");
+                }
+            }
+        }
     }
 
     #[test]

@@ -287,7 +287,10 @@ pub fn cluster_grid(steps: u64) -> Vec<SweepCell> {
     // synthetic large-N registries, as further cluster cells.
     cells.extend(crate::repro::placement_grid(steps));
     // Skip-idle large-N axis: 1024- and 4096-agent burst cells the
-    // event core fast-forwards (labels "large_n/synth<n>/<strategy>").
+    // event core fast-forwards (labels "large_n/synth<n>/<strategy>"),
+    // plus sparse-burst cells where only k of N agents ever receive
+    // arrivals and the active-set tier steps just that hot minority
+    // (labels "large_n/sparse<n>x<k>/headroom").
     cells.extend(crate::repro::large_n_grid(steps));
     cells
 }

@@ -132,11 +132,26 @@ trait ArrivalStream {
     fn next(&mut self, step: u64, dt: f64, rates: &mut [f64],
             counts: &mut [f64]);
 
+    /// Sparse [`ArrivalStream::next`]: fill `rates`/`counts` only for
+    /// the agents in `support` (sorted ascending). Callers pass exactly
+    /// the set returned by [`ArrivalStream::support`]; every agent
+    /// outside it draws rate and count `0.0` at every tick without
+    /// consuming RNG state, so eliding those writes leaves both buffers
+    /// (zeroed at arena reset, never overwritten since) and the RNG
+    /// stream bit-identical to the dense call.
+    fn next_support(&mut self, step: u64, dt: f64, support: &[usize],
+                    rates: &mut [f64], counts: &mut [f64]);
+
     /// `Some(until)` promises every tick in `[step, until)` produces
     /// zero counts for every agent without consuming RNG state
     /// (see [`WorkloadGenerator::idle_until`]); `None` means the
     /// current tick may be active.
     fn idle_until(&mut self, step: u64) -> Option<u64>;
+
+    /// Agents that may ever produce a nonzero count (sorted ascending)
+    /// — the active-set tier's materialization oracle. `None` means the
+    /// stream cannot bound its support and materialization stays dense.
+    fn support(&self) -> Option<Vec<usize>>;
 }
 
 /// Live schedule: the workload generator drives both hooks.
@@ -148,8 +163,17 @@ impl ArrivalStream for GeneratorStream {
         self.0.step(step, dt, rates, counts);
     }
 
+    fn next_support(&mut self, step: u64, dt: f64, support: &[usize],
+                    rates: &mut [f64], counts: &mut [f64]) {
+        self.0.step_active(step, dt, support, rates, counts);
+    }
+
     fn idle_until(&mut self, step: u64) -> Option<u64> {
         self.0.idle_until(step)
+    }
+
+    fn support(&self) -> Option<Vec<usize>> {
+        Some(self.0.support())
     }
 }
 
@@ -169,6 +193,14 @@ impl ArrivalStream for TraceStream<'_> {
         }
     }
 
+    fn next_support(&mut self, step: u64, dt: f64, support: &[usize],
+                    rates: &mut [f64], counts: &mut [f64]) {
+        // Never reached (the trace offers no support set); delegate so
+        // the contract holds regardless.
+        let _ = support;
+        self.next(step, dt, rates, counts);
+    }
+
     fn idle_until(&mut self, step: u64) -> Option<u64> {
         if self.rows[step as usize].iter().any(|c| *c != 0.0) {
             return None;
@@ -179,6 +211,12 @@ impl ArrivalStream for TraceStream<'_> {
             }
         }
         Some(u64::MAX)
+    }
+
+    fn support(&self) -> Option<Vec<usize>> {
+        // A recorded trace has no closed-form schedule to reason over;
+        // its replay stays row-dense (the rows are the ground truth).
+        None
     }
 }
 
@@ -347,7 +385,9 @@ impl ServingSimulator {
 
     /// Run one policy over the configured workload until every queue
     /// drains. Provably-idle stretches of the arrival schedule are
-    /// fast-forwarded during materialization — bit-exact with
+    /// fast-forwarded during materialization, and busy ticks draw and
+    /// walk only the workload's *support set* (agents that can ever
+    /// receive an arrival) — both bit-exact with
     /// [`ServingSimulator::run_dense`] (asserted by the test suite);
     /// the serving loop itself is already event-stepped.
     pub fn run<P>(&self, policy: &mut P) -> ServingResult
@@ -466,6 +506,26 @@ impl ServingSimulator {
         // `+0.0` to every carry (a bit-no-op), and consumes no RNG state
         // (`poisson(0.0)` returns without a draw), so the jump is
         // bit-exact with dense ticking.
+        //
+        // One agent's tick: fold the drawn count into the fractional
+        // carry and space the whole arrivals evenly inside the tick.
+        fn materialize(i: usize, t0: f64, dt: f64, carry: &mut [f64],
+                       counts: &[f64], arrivals: &mut Vec<(f64, usize)>) {
+            carry[i] += counts[i];
+            let whole = carry[i].floor();
+            carry[i] -= whole;
+            let k = whole as u64;
+            for j in 0..k {
+                arrivals.push((t0 + dt * j as f64 / k as f64, i));
+            }
+        }
+        // The active-set tier at materialization granularity: when the
+        // stream can bound its support, each busy tick draws and walks
+        // only those agents. Everyone outside the support draws count
+        // `0.0` at every tick, so its carry cell stays exactly `+0.0`
+        // and materializes nothing — bit-for-bit what the dense walk
+        // computes for it.
+        let support = if skip_idle { source.support() } else { None };
         let mut step = 0u64;
         while step < steps {
             if skip_idle {
@@ -477,15 +537,21 @@ impl ServingSimulator {
                     }
                 }
             }
-            source.next(step, dt, &mut rates[..], &mut counts[..]);
             let t0 = step as f64 * dt;
-            for i in 0..n {
-                carry[i] += counts[i];
-                let whole = carry[i].floor();
-                carry[i] -= whole;
-                let k = whole as u64;
-                for j in 0..k {
-                    arrivals.push((t0 + dt * j as f64 / k as f64, i));
+            match &support {
+                Some(sup) => {
+                    source.next_support(step, dt, sup, &mut rates[..],
+                                        &mut counts[..]);
+                    for &i in sup.iter() {
+                        materialize(i, t0, dt, carry, counts, arrivals);
+                    }
+                }
+                None => {
+                    source.next(step, dt, &mut rates[..],
+                                &mut counts[..]);
+                    for i in 0..n {
+                        materialize(i, t0, dt, carry, counts, arrivals);
+                    }
                 }
             }
             step += 1;
@@ -1192,6 +1258,96 @@ mod tests {
         let skip = sim.run(&mut AdaptivePolicy::default());
         assert_eq!(skip, sim.run_dense(&mut AdaptivePolicy::default()));
         assert!(skip.resilience.is_some());
+    }
+
+    /// Wide sparse deployment: `n` agents, arrivals only ever on `hot`
+    /// — the support-set materialization walk covers `hot` alone.
+    fn sparse_serving(n: usize, hot: &[usize])
+                      -> (ServingConfig, AgentRegistry) {
+        use crate::agents::Priority;
+        let profiles: Vec<AgentProfile> = (0..n)
+            .map(|i| AgentProfile {
+                name: format!("a{i}"),
+                model_mb: 800,
+                base_tput: 40.0 + (i % 3) as f64 * 10.0,
+                min_gpu: 0.0,
+                priority: Priority::Medium,
+            })
+            .collect();
+        let registry = AgentRegistry::new(profiles).unwrap();
+        let mut cfg = ServingConfig::paper();
+        cfg.arrival_rates = vec![0.0; n];
+        for &i in hot {
+            cfg.arrival_rates[i] = 10.0;
+        }
+        cfg.duration_s = 2.0;
+        (cfg, registry)
+    }
+
+    #[test]
+    fn support_set_materialization_is_bit_exact_with_dense() {
+        // Steady sparse load: no idle windows to jump, so every tick is
+        // busy and only the support walk separates run() from
+        // run_dense(). Both processes, two policies.
+        for process in [ArrivalProcess::Deterministic,
+                        ArrivalProcess::Poisson] {
+            let (mut cfg, reg) = sparse_serving(16, &[3, 11]);
+            cfg.arrival_process = process;
+            let sim = ServingSimulator::with_registry(cfg, reg);
+            for make in [PolicyKind::adaptive, PolicyKind::static_equal] {
+                let sparse = sim.run(&mut make());
+                let dense = sim.run_dense(&mut make());
+                assert_eq!(sparse, dense, "{process:?} {}", sparse.policy);
+                assert!(sparse.total_completed > 0, "hot agents starved");
+                assert_eq!(sparse.per_agent[0].completed, 0);
+                assert_eq!(sparse.per_agent[3].completed
+                               + sparse.per_agent[11].completed,
+                           sparse.total_completed);
+            }
+        }
+    }
+
+    #[test]
+    fn support_set_materialization_is_bit_exact_under_faults() {
+        use crate::sim::fault::{FaultEvent, FaultPlan};
+        // Support walk + idle jump + fault cursor together: a burst by
+        // the two hot agents with an eviction window inside it.
+        let (mut cfg, reg) = sparse_serving(16, &[3, 11]);
+        cfg.workload_kind = WorkloadKind::Burst {
+            agents: vec![3, 11], start: 5, end: 10,
+        };
+        cfg.faults = Some(ServingFaults::new(FaultPlan::new(vec![
+            FaultEvent::GpuEviction { t: 0.55, gpu: 0, duration: 0.02 },
+        ])));
+        let sim = ServingSimulator::with_registry(cfg, reg);
+        let sparse = sim.run(&mut AdaptivePolicy::default());
+        let dense = sim.run_dense(&mut AdaptivePolicy::default());
+        assert_eq!(sparse, dense);
+        assert!(sparse.total_completed > 0, "burst never served");
+        assert!(sparse.resilience.is_some());
+    }
+
+    #[test]
+    fn trace_replay_matches_support_set_generated_run() {
+        // Recording the sparse stream and replaying it row-dense must
+        // reproduce the support-set generated run exactly — the two
+        // materialization modes meet on the same arrival list.
+        let (cfg, reg) = sparse_serving(8, &[2, 5]);
+        let sim = ServingSimulator::with_registry(cfg.clone(),
+                                                  reg.clone());
+        let generated = sim.run(&mut AdaptivePolicy::default());
+
+        let names: Vec<String> = reg.profiles().iter()
+            .map(|p| p.name.clone()).collect();
+        let mut gen = WorkloadGenerator::new(
+            cfg.arrival_rates.clone(), cfg.workload_kind.clone(),
+            cfg.arrival_process, cfg.seed);
+        let steps = (cfg.duration_s / cfg.arrival_dt_s).round() as u64;
+        let trace = Trace::record(&mut gen, names, steps,
+                                  cfg.arrival_dt_s);
+        let replayed =
+            sim.run_trace(&mut AdaptivePolicy::default(), &trace);
+        assert_eq!(replayed, generated);
     }
 
     #[test]

@@ -23,7 +23,94 @@
 //!
 //! [`Simulator::run_with_arena`]: crate::sim::Simulator::run_with_arena
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
 use crate::metrics::Streaming;
+
+/// Epoch-stamped active-set membership for the sparse stepping tier.
+///
+/// `stamp[i] == epoch` ⇔ agent `i` is active this run; settling writes
+/// the `0` sentinel (epochs start at 1), and a run reset just bumps
+/// `epoch`, instantly invalidating every stale stamp — membership state
+/// is never cleared per tick or per run. The sorted `active` list is the
+/// engines' iteration order (ascending agent index, so sparse folds
+/// reproduce the dense folds' addition order with the settled agents'
+/// `+0.0` terms elided), and the min-heap of `(wake_step, agent)` pairs
+/// drives reactivation; stale heap entries (agent already woken by a
+/// fault flush) are skipped on pop.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct ActiveSet {
+    pub(crate) epoch: u64,
+    pub(crate) stamp: Vec<u64>,
+    pub(crate) active: Vec<usize>,
+    /// Step each settled agent's deferred zero-flush starts at.
+    pub(crate) settled_at: Vec<u64>,
+    pub(crate) wake: BinaryHeap<Reverse<(u64, usize)>>,
+}
+
+impl ActiveSet {
+    /// Start a run over `n` agents with everyone active.
+    pub(crate) fn reset(&mut self, n: usize) {
+        self.epoch += 1;
+        self.stamp.resize(n.max(self.stamp.len()), 0);
+        self.settled_at.clear();
+        self.settled_at.resize(n, 0);
+        self.active.clear();
+        self.active.extend(0..n);
+        for s in self.stamp[..n].iter_mut() {
+            *s = self.epoch;
+        }
+        self.wake.clear();
+    }
+
+    /// Is `agent` in the active set?
+    pub(crate) fn is_active(&self, agent: usize) -> bool {
+        self.stamp[agent] == self.epoch
+    }
+
+    /// Mark `agent` settled as of `now`, to be woken at `wake_at`
+    /// (`u64::MAX` = never). The caller batch-removes settled agents
+    /// from `active` afterwards (one `retain` per scan).
+    pub(crate) fn settle(&mut self, agent: usize, now: u64, wake_at: u64) {
+        self.stamp[agent] = 0;
+        self.settled_at[agent] = now;
+        if wake_at < u64::MAX {
+            self.wake.push(Reverse((wake_at, agent)));
+        }
+    }
+
+    /// Earliest pending wake step, ignoring stale entries.
+    pub(crate) fn next_wake(&mut self) -> Option<u64> {
+        while let Some(&Reverse((at, agent))) = self.wake.peek() {
+            if self.is_active(agent) {
+                self.wake.pop();
+            } else {
+                return Some(at);
+            }
+        }
+        None
+    }
+
+    /// Move every agent whose wake step is `<= step` back into the
+    /// active set, returning them (sorted ascending) in `woken`; the
+    /// caller flushes their deferred zeros and merges them into
+    /// `active`.
+    pub(crate) fn drain_due(&mut self, step: u64, woken: &mut Vec<usize>) {
+        woken.clear();
+        while let Some(&Reverse((at, agent))) = self.wake.peek() {
+            if at > step {
+                break;
+            }
+            self.wake.pop();
+            if !self.is_active(agent) {
+                self.stamp[agent] = self.epoch;
+                woken.push(agent);
+            }
+        }
+        woken.sort_unstable();
+    }
+}
 
 /// Dense per-step buffers reused across simulation runs.
 #[derive(Debug, Clone, Default)]
@@ -44,6 +131,11 @@ pub struct SimArena {
     pub(crate) utilization: Vec<Streaming>,
     pub(crate) processed_total: Vec<f64>,
     pub(crate) arrived_total: Vec<f64>,
+    /// Active-set membership for the sparse stepping tier (unused — and
+    /// untouched beyond reset — on the dense and skip-idle paths).
+    pub(crate) active_set: ActiveSet,
+    /// Scratch for [`ActiveSet::drain_due`] / merge operations.
+    pub(crate) woken: Vec<usize>,
 }
 
 impl SimArena {
@@ -71,6 +163,8 @@ impl SimArena {
             utilization: Vec::with_capacity(n),
             processed_total: Vec::with_capacity(n),
             arrived_total: Vec::with_capacity(n),
+            active_set: ActiveSet::default(),
+            woken: Vec::new(),
         }
     }
 
@@ -102,6 +196,7 @@ impl SimArena {
             col.clear();
             col.resize(n, Streaming::new());
         }
+        self.active_set.reset(n);
     }
 }
 
@@ -126,6 +221,54 @@ mod tests {
         assert_eq!(a.lat_row, vec![0.0; 5]);
         assert_eq!(a.utilization.len(), 5);
         assert_eq!(a.processed_total, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn active_set_epoch_stamping() {
+        let mut s = ActiveSet::default();
+        s.reset(4);
+        assert!(s.is_active(0) && s.is_active(3));
+        assert_eq!(s.active, vec![0, 1, 2, 3]);
+        // Settle two agents with different wakes.
+        s.settle(1, 10, 50);
+        s.settle(3, 12, u64::MAX);
+        s.active.retain(|&i| s.stamp[i] == s.epoch);
+        assert!(!s.is_active(1) && !s.is_active(3));
+        assert_eq!(s.active, vec![0, 2]);
+        assert_eq!(s.settled_at[1], 10);
+        assert_eq!(s.next_wake(), Some(50));
+        // Nothing due before step 50.
+        let mut woken = Vec::new();
+        s.drain_due(49, &mut woken);
+        assert!(woken.is_empty());
+        s.drain_due(50, &mut woken);
+        assert_eq!(woken, vec![1]);
+        assert!(s.is_active(1));
+        // Never-wake agent stays settled; heap is empty.
+        assert_eq!(s.next_wake(), None);
+        // A reset invalidates every stale stamp without clearing.
+        let old_epoch = s.epoch;
+        s.reset(2);
+        assert_eq!(s.epoch, old_epoch + 1);
+        assert!(s.is_active(0) && s.is_active(1));
+        assert_eq!(s.active, vec![0, 1]);
+        assert_eq!(s.next_wake(), None);
+    }
+
+    #[test]
+    fn active_set_drain_skips_already_active() {
+        let mut s = ActiveSet::default();
+        s.reset(3);
+        s.settle(2, 5, 20);
+        s.active.retain(|&i| s.stamp[i] == s.epoch);
+        // A fault flush wakes everyone early, out of band.
+        s.stamp[2] = s.epoch;
+        s.active = vec![0, 1, 2];
+        // The stale heap entry must not re-wake (or duplicate) agent 2.
+        let mut woken = Vec::new();
+        s.drain_due(25, &mut woken);
+        assert!(woken.is_empty());
+        assert_eq!(s.next_wake(), None);
     }
 
     #[test]

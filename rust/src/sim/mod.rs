@@ -8,15 +8,14 @@
 //! estimator reverse-engineered in DESIGN.md §1 that reproduces every
 //! Table II number to the reported decimal.
 //!
-//! # The skip-idle event core
+//! # The three-tier event core
 //!
-//! The engines are *event-stepped*, not purely fixed-step: the dense
-//! per-tick loop only runs while something can happen. Each tick, a set
-//! of idle oracles is consulted — every one answers either "nothing
-//! until step `u`" or "can't promise anything":
+//! The engines are *event-stepped*, not purely fixed-step — three tiers,
+//! each bit-exact with the one below it:
 //!
 //! ```text
 //!  step ─►┌──────────────────────────────────────────────────────┐
+//!         │ whole-sim idle oracles (skip-idle tier):             │
 //!         │ queues all empty? timelines off?                     │
 //!         │ policy.idle_fixed_point()   (zero demand → zero out) │
 //!         │ econ.idle_fixed_point()     (no pending transition)  │
@@ -26,26 +25,53 @@
 //!                all Some(·)                  any None/false
 //!                     │                           │
 //!                     ▼                           ▼
-//!          fast-forward to min(u)          dense tick (SoA inner
-//!          push_zeros(k) on metric         loop over the arena's
-//!          columns — closed form,          struct-of-arrays state)
-//!          O(1) per column
+//!          fast-forward to min(u)   ┌─────────────────────────────┐
+//!          push_zeros(k) on metric  │ busy tick — dense, or       │
+//!          columns — closed form,   │ *active-set* when eligible: │
+//!          O(1) per column          │ walk only agents whose      │
+//!                                   │ state can change this step, │
+//!                                   │ push_repeat(v, k) the       │
+//!                                   │ settled rest in O(1)        │
+//!                                   └─────────────────────────────┘
 //! ```
 //!
-//! The fast-forward is *bit-exact* with stepping the same window
-//! densely: zero arrivals leave queues at exactly 0.0, the policy
-//! fixed-point guarantees allocations stay exactly 0.0, and
-//! [`crate::metrics::Streaming::push_zeros`] folds `k` zero samples into
-//! the naive power sums with the same rounding the dense loop would
-//! produce. `run_dense` twins on every simulator
+//! The **skip-idle** tier fast-forwards whole-sim idle windows: every
+//! oracle answers either "nothing until step `u`" or "can't promise
+//! anything", and when all promise, the window is batch-accounted.
+//!
+//! The **active-set** tier is the same idea per agent, inside busy
+//! ticks. Each arena carries an epoch-stamped active set
+//! (`sim::arena::ActiveSet`): an agent leaves it ("settles") when a
+//! per-agent oracle proves its state is a fixed point — queue exactly
+//! 0.0, allocation exactly 0.0, no observed demand, and
+//! `WorkloadGenerator::agent_idle_until` promising zero arrivals until
+//! some wake step (pushed on a min-heap). Settled agents' metric
+//! columns are flushed with [`crate::metrics::Streaming::push_repeat`]
+//! when they re-activate or the run ends. The per-agent contract
+//! mirrors the policy invariance documented on
+//! [`crate::allocator::AllocationPolicy`]: unchanged inputs ⇒ unchanged
+//! allocation; globally-coupled policies (round-robin's rotating
+//! pointer) fail `zero_fixed_point` and fall back to dense busy ticks.
+//! The serving engine's analog restricts arrival materialization to the
+//! workload's *support set* (`WorkloadGenerator::support`).
+//!
+//! All of it is *bit-exact* with stepping densely: zero arrivals leave
+//! queues at exactly 0.0, the fixed points guarantee allocations stay
+//! exactly 0.0 (`+0.0` terms neither shift ascending-order folds nor
+//! consume RNG), and the streaming batch pushes fold `k` repeated
+//! samples into the naive power sums with the same rounding the dense
+//! loop would produce. `run_dense` twins on every simulator
 //! ([`Simulator::run_dense`], `ClusterSimulator::run_dense`,
 //! `ServingSimulator::run_dense`) keep the dense path alive as the
-//! reference the property tests assert against. This is what makes
-//! `synthetic_registry(4096)` burst cells routine sweep members: only
+//! reference the property tests assert against, and `run_skip_idle`
+//! twins isolate the middle tier. This is what makes
+//! `synthetic_registry(4096)` burst cells routine sweep members — only
 //! the burst window is stepped, the idle four fifths of the run are
-//! batch-accounted.
+//! batch-accounted — and what makes the `sparse{N}x{k}` cells cheap
+//! even *inside* the burst: with 8 hot agents out of 4096, a busy tick
+//! walks 8, not 4096.
 
-mod arena;
+pub(crate) mod arena;
 pub mod batch;
 mod engine;
 pub mod fault;

@@ -183,7 +183,8 @@ impl BenchComparison {
 /// per-worker-count batch rows, plus the same pair for each
 /// `cluster` / `corpus` / `cost` / `serving` / `placement` / `faults` /
 /// `large_n` section present in both reports (for `large_n`, the dense
-/// reference entry is gated too). The
+/// reference entry and the sparse-burst `sparse/{dense, skip_idle,
+/// active_set}` sub-entries are gated too). The
 /// two reports must describe the same workload — equal `grid.steps`
 /// and per-section scenario counts — otherwise throughput is not
 /// comparable and an error is returned. A baseline whose `results` is
@@ -257,6 +258,24 @@ pub fn compare_bench_reports(baseline: &Value, measured: &Value,
         compare_entry(&mut cmp, "large_n/dense", allowed_drop,
                       throughput_of(b.get("dense")),
                       throughput_of(m.get("dense")));
+        // And its sparse-burst sub-section: all three tiers (dense /
+        // skip-idle / active-set) are gated so the active-set tier's
+        // sparse_speedup claim is backed by throughputs that cannot
+        // silently rot either.
+        match (b.get("sparse"), m.get("sparse")) {
+            (Some(bs), Some(ms)) => {
+                for tier in ["dense", "skip_idle", "active_set"] {
+                    compare_entry(
+                        &mut cmp, &format!("large_n/sparse/{tier}"),
+                        allowed_drop, throughput_of(bs.get(tier)),
+                        throughput_of(ms.get(tier)));
+                }
+            }
+            (None, _) => cmp.skipped.push("large_n/sparse".to_string()),
+            (Some(_), None) => cmp.regressions.push(
+                "large_n/sparse: sub-section is in the baseline but \
+                 missing from the measured report".to_string()),
+        }
     }
     Ok(cmp)
 }
@@ -524,6 +543,71 @@ mod tests {
         assert!(cmp.regressions.iter()
                 .any(|r| r.starts_with("large_n/sequential")
                       || r.starts_with("large_n@8")),
+                "{:?}", cmp.regressions);
+    }
+
+    /// `report_with_large_n` plus the sparse-burst three-way
+    /// sub-section the active-set tier reports.
+    fn report_with_sparse(dense: f64, skip: f64, active: f64) -> Value {
+        Value::parse(&format!(r#"{{
+            "results": {{
+                "grid": {{"scenarios": 240, "steps": 2000}},
+                "sequential_baseline":
+                    {{"seconds": 1.0, "scenarios_per_s": 1000.0}},
+                "batch": [],
+                "large_n": {{
+                    "scenarios": 4,
+                    "dense": {{"seconds": 1.0, "scenarios_per_s": 10.0}},
+                    "sequential": {{"seconds": 0.1,
+                                    "scenarios_per_s": 100.0}},
+                    "skip_idle_speedup": 10.0,
+                    "sparse": {{
+                        "scenarios": 4,
+                        "dense": {{"seconds": 1.0,
+                                   "scenarios_per_s": {dense}}},
+                        "skip_idle": {{"seconds": 0.2,
+                                       "scenarios_per_s": {skip}}},
+                        "active_set": {{"seconds": 0.05,
+                                        "scenarios_per_s": {active}}},
+                        "sparse_speedup": 4.0
+                    }},
+                    "sweep": [{{"workers": 8, "seconds": 0.1,
+                                "scenarios_per_s": 100.0}}]
+                }}
+            }}
+        }}"#)).unwrap()
+    }
+
+    #[test]
+    fn gate_covers_the_sparse_burst_sub_section() {
+        let baseline = report_with_sparse(4.0, 20.0, 80.0);
+        let cmp = compare_bench_reports(&baseline, &baseline, 0.25)
+            .unwrap();
+        assert!(cmp.passed(), "{:?}", cmp.regressions);
+        for tier in ["dense", "skip_idle", "active_set"] {
+            assert!(cmp.compared
+                        .contains(&format!("large_n/sparse/{tier}")),
+                    "{:?}", cmp.compared);
+        }
+        // Any tier regressing beyond tolerance fails the gate — the
+        // active-set path here.
+        let slower_active = report_with_sparse(4.0, 20.0, 40.0);
+        let cmp = compare_bench_reports(&baseline, &slower_active, 0.25)
+            .unwrap();
+        assert!(!cmp.passed());
+        assert!(cmp.regressions.iter()
+                .any(|r| r.starts_with("large_n/sparse/active_set")),
+                "{:?}", cmp.regressions);
+        // A baseline without the sub-section skips it (schema growth)...
+        let old = report_with_large_n(10.0, 100.0);
+        let fresh = report_with_sparse(4.0, 20.0, 80.0);
+        let cmp = compare_bench_reports(&old, &fresh, 0.25).unwrap();
+        assert!(cmp.passed(), "{:?}", cmp.regressions);
+        assert!(cmp.skipped.contains(&"large_n/sparse".to_string()));
+        // ...but a measurement that drops it regresses.
+        let cmp = compare_bench_reports(&fresh, &old, 0.25).unwrap();
+        assert!(cmp.regressions.iter()
+                .any(|r| r.starts_with("large_n/sparse:")),
                 "{:?}", cmp.regressions);
     }
 

@@ -228,12 +228,99 @@ impl WorkloadGenerator {
         }
     }
 
+    /// Per-agent refinement of [`WorkloadGenerator::idle_until`]:
+    /// `Some(until)` promises that **this agent's** mean rate is exactly
+    /// zero at every step in `[step, until)` (`u64::MAX` = forever), so
+    /// a dense step would write rate `0.0`, draw count `0.0`, and —
+    /// because [`Rng::poisson`] at `λ <= 0` returns without touching the
+    /// RNG — consume no RNG state for it. `None` means the agent may be
+    /// live at `step`. The active-set engines use this to settle agents
+    /// individually while the rest of the system stays busy.
+    pub fn agent_idle_until(&self, agent: usize, step: u64) -> Option<u64> {
+        match &self.kind {
+            WorkloadKind::Steady
+            | WorkloadKind::Scaled { .. }
+            | WorkloadKind::Dominance { .. } => {
+                // Time-invariant schedules: zero now means zero forever.
+                if self.mean_rate(agent, step, 1.0) == 0.0 {
+                    Some(u64::MAX)
+                } else {
+                    None
+                }
+            }
+            WorkloadKind::Spike { .. } | WorkloadKind::MultiSpike { .. } => {
+                // Spikes *scale* the base rate, so only a zero base is
+                // provably idle (then it is idle at every step).
+                if self.base_rates[agent] == 0.0 {
+                    Some(u64::MAX)
+                } else {
+                    None
+                }
+            }
+            WorkloadKind::Burst { start, end, .. } => {
+                if self.base_rates[agent] == 0.0 {
+                    Some(u64::MAX)
+                } else if self.mask[agent] {
+                    if step < *start {
+                        Some(*start)
+                    } else if step >= *end {
+                        Some(u64::MAX)
+                    } else {
+                        None
+                    }
+                } else {
+                    None
+                }
+            }
+            WorkloadKind::Diurnal { .. } => {
+                // The sinusoid may touch zero but never stays there;
+                // only a zero base rate is provably idle.
+                if self.base_rates[agent] == 0.0 {
+                    Some(u64::MAX)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Agents that may ever observe a nonzero mean rate — the complement
+    /// is provably zero at every step of every run. The serving engine
+    /// materializes instances only for this support set.
+    pub fn support(&self) -> Vec<usize> {
+        (0..self.len())
+            .filter(|&i| self.agent_idle_until(i, 0) != Some(u64::MAX))
+            .collect()
+    }
+
     /// Draw arrival *counts* for one step of length `dt` seconds into
     /// `counts`, and record the mean rates used into `rates`.
     pub fn step(&mut self, step: u64, dt: f64, rates: &mut [f64],
                 counts: &mut [f64]) {
         debug_assert_eq!(rates.len(), self.base_rates.len());
         for i in 0..self.base_rates.len() {
+            let rate = self.mean_rate(i, step, dt);
+            rates[i] = rate;
+            counts[i] = match self.process {
+                ArrivalProcess::Deterministic => rate * dt,
+                ArrivalProcess::Poisson => self.rng.poisson(rate * dt) as f64,
+            };
+        }
+    }
+
+    /// Sparse [`WorkloadGenerator::step`]: draw only the agents in
+    /// `active` (sorted ascending). Bit-identical to the dense step —
+    /// including the Poisson RNG stream — iff every skipped agent is
+    /// inside an [`WorkloadGenerator::agent_idle_until`] window at
+    /// `step` *and* its `rates`/`counts` entries already hold `0.0`
+    /// (the values the dense step would rewrite): a zero-mean agent's
+    /// draw is `poisson(0.0)`, which returns without consuming RNG
+    /// state, so eliding it leaves the stream aligned for the agents
+    /// that do draw.
+    pub fn step_active(&mut self, step: u64, dt: f64, active: &[usize],
+                       rates: &mut [f64], counts: &mut [f64]) {
+        debug_assert_eq!(rates.len(), self.base_rates.len());
+        for &i in active {
             let rate = self.mean_rate(i, step, dt);
             rates[i] = rate;
             counts[i] = match self.process {
@@ -447,6 +534,85 @@ mod tests {
         // Active schedules never claim idleness.
         let s = WorkloadGenerator::paper_deterministic();
         assert_eq!(s.idle_until(0), None);
+    }
+
+    #[test]
+    fn agent_idle_until_promises_are_honest() {
+        // Every promised window really is all-zero for that agent, for
+        // every shape the oracle claims anything about.
+        let burst = WorkloadGenerator::new(
+            vec![80.0, 0.0, 45.0, 25.0],
+            WorkloadKind::Burst { agents: vec![0, 2], start: 10, end: 20 },
+            ArrivalProcess::Deterministic, 1);
+        // Masked nonzero agent: idle up to the window, live inside,
+        // idle forever after.
+        assert_eq!(burst.agent_idle_until(0, 0), Some(10));
+        assert_eq!(burst.agent_idle_until(0, 9), Some(10));
+        assert_eq!(burst.agent_idle_until(0, 10), None);
+        assert_eq!(burst.agent_idle_until(0, 19), None);
+        assert_eq!(burst.agent_idle_until(0, 20), Some(u64::MAX));
+        // Zero-base agent: idle forever, even though it is masked-out.
+        assert_eq!(burst.agent_idle_until(1, 0), Some(u64::MAX));
+        // Unmasked nonzero agent: never claimed.
+        assert_eq!(burst.agent_idle_until(3, 0), None);
+        for step in (0..10).chain(20..40) {
+            assert_eq!(burst.mean_rate(0, step, 1.0), 0.0, "step {step}");
+            assert_eq!(burst.mean_rate(1, step, 1.0), 0.0, "step {step}");
+        }
+        // Spike/MultiSpike/Diurnal: only zero-base agents are claimed.
+        let spike = WorkloadGenerator::new(
+            vec![0.0, 40.0],
+            WorkloadKind::Spike { agent: 1, factor: 10.0, start: 2, end: 5 },
+            ArrivalProcess::Deterministic, 1);
+        assert_eq!(spike.agent_idle_until(0, 0), Some(u64::MAX));
+        assert_eq!(spike.agent_idle_until(1, 0), None);
+        let diurnal = WorkloadGenerator::new(
+            vec![0.0, 50.0],
+            WorkloadKind::Diurnal { amplitude: 1.5, period: 20.0 },
+            ArrivalProcess::Deterministic, 1);
+        assert_eq!(diurnal.agent_idle_until(0, 7), Some(u64::MAX));
+        assert_eq!(diurnal.agent_idle_until(1, 7), None);
+        for step in 0..50 {
+            assert_eq!(diurnal.mean_rate(0, step, 1.0), 0.0, "step {step}");
+        }
+        // Dominance: the dominant agent inherits the whole volume even
+        // with a zero base rate, so it is never claimed idle.
+        let dom = WorkloadGenerator::new(
+            vec![0.0, 40.0, 0.0],
+            WorkloadKind::Dominance { agent: 0, share: 0.9 },
+            ArrivalProcess::Deterministic, 1);
+        assert_eq!(dom.agent_idle_until(0, 0), None);
+        assert_eq!(dom.agent_idle_until(2, 0), Some(u64::MAX));
+        assert!(dom.mean_rate(0, 0, 1.0) > 0.0);
+        assert_eq!(dom.mean_rate(2, 0, 1.0), 0.0);
+        // Support set = agents not idle-forever from step 0.
+        assert_eq!(burst.support(), vec![0, 2, 3]);
+        assert_eq!(dom.support(), vec![0, 1]);
+        assert_eq!(spike.support(), vec![1]);
+    }
+
+    #[test]
+    fn step_active_matches_dense_bitwise() {
+        // Sparse draws over the live subset reproduce the dense step —
+        // counts AND RNG stream — when the skipped agents are inside
+        // their promised idle windows.
+        let mk = || WorkloadGenerator::new(
+            vec![30.0, 0.0, 20.0, 0.0, 10.0],
+            WorkloadKind::Burst { agents: vec![0, 2], start: 0, end: 50 },
+            ArrivalProcess::Poisson, 1234);
+        let mut dense = mk();
+        let mut sparse = mk();
+        let n = dense.len();
+        let (mut dr, mut dc) = (vec![0.0; n], vec![0.0; n]);
+        let (mut sr, mut sc) = (vec![0.0; n], vec![0.0; n]);
+        // Agents 1 and 3 are zero-base (idle forever), agent 4 is
+        // unmasked nonzero (always live): active = {0, 2, 4}.
+        for t in 0..50 {
+            dense.step(t, 1.0, &mut dr, &mut dc);
+            sparse.step_active(t, 1.0, &[0, 2, 4], &mut sr, &mut sc);
+            assert_eq!(dr, sr, "t={t}");
+            assert_eq!(dc, sc, "t={t}");
+        }
     }
 
     #[test]

@@ -1070,6 +1070,186 @@ fn prop_workflow_sweep_is_bit_identical_to_sequential_run() {
     }
 }
 
+/// A sparse fluid deployment: `n` agents, all floors zero (the
+/// per-agent settle precondition), only `hot` receiving traffic via a
+/// mid-run burst window — the shape the active-set tier compresses.
+fn sparse_fluid(n: usize, hot: &[usize], steps: u64, seed: u64,
+                process: ArrivalProcess) -> (SimConfig, AgentRegistry) {
+    let profiles: Vec<AgentProfile> = (0..n).map(|i| AgentProfile {
+        name: format!("a{i}"),
+        model_mb: 600,
+        base_tput: 30.0 + (i % 4) as f64 * 15.0,
+        min_gpu: 0.0,
+        priority: match i % 3 {
+            0 => Priority::High,
+            1 => Priority::Medium,
+            _ => Priority::Low,
+        },
+    }).collect();
+    let mut rates = vec![0.0; n];
+    for (j, &i) in hot.iter().enumerate() {
+        rates[i] = 25.0 + j as f64 * 10.0;
+    }
+    let mut cfg = SimConfig::paper();
+    cfg.steps = steps;
+    cfg.arrival_rates = rates;
+    cfg.workload_kind = WorkloadKind::Burst {
+        agents: hot.to_vec(),
+        start: steps * 2 / 5,
+        end: steps * 3 / 5,
+    };
+    cfg.arrival_process = process;
+    cfg.seed = seed;
+    (cfg, AgentRegistry::new(profiles).unwrap())
+}
+
+/// Every built-in policy on a sparse-burst fluid deployment: the
+/// default `run` (the active-set tier when the policy is eligible, the
+/// documented dense fallback otherwise) and `run_skip_idle` are both
+/// bit-identical (`==`, no tolerance) to `run_dense`, for both arrival
+/// processes — aggregates and per-agent series alike. The
+/// globally-coupled policies must actually be on the fallback: their
+/// fixed-point claims are pinned false here, so for them `run` *is*
+/// the dense loop rather than a sparse approximation of it.
+#[test]
+fn prop_active_set_run_is_bit_identical_to_dense_for_every_policy() {
+    use agentsrv::allocator::AllocationPolicy;
+    let hot = [2usize, 9];
+    // The dense-fallback contract, pinned: round-robin's rotating
+    // pointer and static-equal's unconditional capacity/n grants
+    // disclaim the whole-sim fixed point, which also gates the
+    // active-set tier — so neither policy ever settles an agent.
+    assert!(!PolicyKind::round_robin().idle_fixed_point(12));
+    assert!(!PolicyKind::static_equal().idle_fixed_point(12));
+    assert!(PolicyKind::adaptive().idle_fixed_point(12));
+    for process in
+        [ArrivalProcess::Deterministic, ArrivalProcess::Poisson]
+    {
+        let (cfg, registry) = sparse_fluid(12, &hot, 50, 17, process);
+        for kind in PolicyKind::all() {
+            let sim = Simulator::with_registry(cfg.clone(),
+                                               registry.clone());
+            let mut active = kind.clone();
+            let mut skip = kind.clone();
+            let mut dense = kind;
+            let a = sim.run(&mut active);
+            let s = sim.run_skip_idle(&mut skip);
+            let d = sim.run_dense(&mut dense);
+            for (got, tier) in [(&a, "active-set"), (&s, "skip-idle")] {
+                assert!(
+                    got.mean_latency() == d.mean_latency()
+                        && got.total_throughput() == d.total_throughput()
+                        && got.cost_dollars == d.cost_dollars,
+                    "{} ({process:?}, {tier}): diverged from dense \
+                     (latency {} vs {}, tput {} vs {}, cost {} vs {})",
+                    d.policy, got.mean_latency(), d.mean_latency(),
+                    got.total_throughput(), d.total_throughput(),
+                    got.cost_dollars, d.cost_dollars);
+                for (x, y) in got.per_agent.iter().zip(&d.per_agent) {
+                    assert_eq!(x.latency.mean(), y.latency.mean(),
+                               "{}/{} ({tier})", d.policy, y.name);
+                    assert_eq!(x.throughput.mean(), y.throughput.mean());
+                    assert_eq!(x.processed_total, y.processed_total);
+                    assert_eq!(x.final_queue, y.final_queue);
+                }
+            }
+            // The cell is genuinely sparse: cold agents never process,
+            // the hot minority carries all the traffic.
+            assert_eq!(d.per_agent[0].processed_total, 0.0,
+                       "{}: cold agent processed work", d.policy);
+            assert!(hot.iter()
+                        .any(|&i| d.per_agent[i].processed_total > 0.0),
+                    "{}: no hot agent processed anything", d.policy);
+        }
+    }
+}
+
+/// Transitions that activate a previously-quiescent agent mid-window
+/// hold the same contract end to end: fault cells whose capacity drop
+/// and cold-agent stall land inside the pre-burst idle stretch (plus
+/// an eviction inside the burst), and economics cells whose
+/// scale-to-zero teardown/cold-start cycle wakes idle agents at the
+/// burst onset — each bit-identical to `run_dense` of the same cell,
+/// through `run_sweep` at 1, 2, and 8 workers, `ResilienceReport` and
+/// economics report included.
+#[test]
+fn prop_midwindow_activations_match_dense_at_every_worker_count() {
+    let hot = [1usize, 6];
+    let (cfg, registry) =
+        sparse_fluid(8, &hot, 50, 23, ArrivalProcess::Poisson);
+
+    let mut cells = Vec::new();
+    let mut expected = Vec::new();
+    for kind in PolicyKind::all() {
+        // Fault cell: events straddle the idle window and the burst.
+        let plan = FaultPlan::new(vec![
+            FaultEvent::CapacityDrop { t: 5.0, frac: 0.5, duration: 3.0 },
+            FaultEvent::AgentStall {
+                t: 8.0, agent: 0, factor: 4.0, duration: 6.0,
+            },
+            FaultEvent::GpuEviction { t: 22.0, gpu: 0, duration: 1.0 },
+        ]);
+        let sc = FaultScenario::single(
+            format!("active/fault/{}", kind.name()), cfg.clone(),
+            registry.clone(), kind.clone(), FaultConfig::new(plan));
+        let mut reference = policy_by_name(kind.name())
+            .expect("built-in policy");
+        let want = sc.as_single().unwrap().simulator()
+            .run_dense(reference.as_mut());
+        assert!(want.resilience.is_some(),
+                "{}: faults must surface", kind.name());
+        expected.push(want);
+        cells.push(SweepCell::Fault(sc));
+
+        // Economics cell: idle-burst workload under scale-to-zero, so
+        // quiescent agents are torn down and cold-start back mid-run.
+        let econ_cfg = agentsrv::repro::idle_burst_config(100, 23);
+        let economics = EconomicsModel::with_idle_timeout(5.0);
+        let cost = CostScenario::new(
+            format!("active/econ/{}", kind.name()), econ_cfg,
+            AgentRegistry::paper(), economics, kind.clone());
+        let mut reference = policy_by_name(kind.name())
+            .expect("built-in policy");
+        let want = cost.simulator().run_dense(reference.as_mut());
+        assert!(want.economics.is_some(),
+                "{}: economics must surface", kind.name());
+        expected.push(want);
+        cells.push(SweepCell::Cost(cost));
+    }
+    // At least one economics cell must exercise the actual wake-up.
+    assert!(expected.iter().any(|r| r.economics.as_ref()
+            .is_some_and(|e| e.total_cold_starts() > 0)),
+            "no cell cold-started a quiescent agent");
+
+    for workers in [1usize, 2, 8] {
+        let runs = run_sweep(&cells, workers);
+        assert_eq!(runs.len(), expected.len());
+        for (got, want) in runs.iter().zip(&expected) {
+            let sim = got.result.as_sim()
+                .expect("fluid cell yields SimResult");
+            assert!(
+                sim.mean_latency() == want.mean_latency()
+                    && sim.total_throughput() == want.total_throughput()
+                    && sim.cost_dollars == want.cost_dollars,
+                "{} @ {workers} workers: diverged from run_dense \
+                 (latency {} vs {}, tput {} vs {}, cost {} vs {})",
+                got.label, sim.mean_latency(), want.mean_latency(),
+                sim.total_throughput(), want.total_throughput(),
+                sim.cost_dollars, want.cost_dollars);
+            assert_eq!(sim.resilience, want.resilience,
+                       "{} @ {workers} workers", got.label);
+            assert_eq!(sim.economics, want.economics,
+                       "{} @ {workers} workers", got.label);
+            for (a, b) in sim.per_agent.iter().zip(&want.per_agent) {
+                assert_eq!(a.latency.mean(), b.latency.mean(),
+                           "{}/{} @ {workers}", got.label, a.name);
+                assert_eq!(a.processed_total, b.processed_total);
+                assert_eq!(a.final_queue, b.final_queue);
+            }
+        }
+    }
+}
+
 #[test]
 fn prop_round_robin_grants_everything_to_one_agent() {
     forall(0x22B, 100, |rng| gen_agents(rng), |(agents, rates)| {
