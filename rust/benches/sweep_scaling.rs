@@ -40,7 +40,13 @@
 //!     (`run_skip_idle`: whole-run idle jumps but dense busy ticks) vs
 //!     active-set (`run`: busy ticks walk only the hot minority) — and
 //!     the `sparse_speedup` of active-set over skip-idle alone is
-//!     reported.
+//!     reported;
+//!   * replay — a synthetic 10^6+-request corpus saved and re-loaded
+//!     both as CSV (`Trace`) and as the `.atrb` binary format
+//!     (`BinTrace`), gated on both forms replaying bit-identically
+//!     through the serving queue path, with the load-throughput ratio
+//!     reported as `binary_speedup` (target >= 10x) plus the serving
+//!     replay's requests/s.
 //!
 //! `--quick` shrinks everything to 500 steps × 2 seeds for CI.
 //!
@@ -60,17 +66,22 @@
 //! With `--json`, the measured tables are also written as JSON (the
 //! format documented in BENCH_sweep.json, `results` key: the single-GPU
 //! table plus `cluster`, `corpus`, `cost`, `serving`, `placement`,
-//! `faults`, `workflow`, and `large_n` sections). The
+//! `faults`, `workflow`, `large_n`, and `replay` sections). The
 //! written report is what CI's bench-regression gate compares against
 //! the committed BENCH_sweep.json baseline (`agentsrv bench-gate`).
 
 use std::time::{Duration, Instant};
 
+use agentsrv::agents::AgentRegistry;
 use agentsrv::allocator::{policy_by_name, PolicyKind};
 use agentsrv::repro;
+use agentsrv::server::{ServingConfig, ServingSimulator};
 use agentsrv::sim::batch::{run_batch, run_sweep, BatchRun, CellResult,
                            Scenario, SweepCell, SweepRun};
 use agentsrv::util::json::{self, Value};
+use agentsrv::util::TempDir;
+use agentsrv::workload::bintrace::{save_trace, BinTrace};
+use agentsrv::workload::trace::Trace;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1)
@@ -255,6 +266,14 @@ fn main() {
               {sparse_speedup:.2}x — {}",
              if sparse_speedup > 1.0 { "PASS" } else { "BELOW TARGET" });
 
+    // ---- Binary trace format: CSV vs .atrb at 10^6+ requests ----------
+    // The zero-copy payoff measurement: one dense synthetic corpus of
+    // >= 1e6 requests (--quick shrinks it) saved and re-loaded both
+    // ways, then the binary form replayed through the serving queue
+    // path. `binary_speedup` is the load-throughput ratio the .atrb
+    // format exists for (target >= 10x).
+    let replay = replay_section(quick, reps);
+
     if let Some(path) = json_path {
         let json = to_json(&ReportInput {
             grid: &grid,
@@ -275,6 +294,7 @@ fn main() {
                       large_n_seq_s, &large_n_rows),
             sparse: (sparse_cells.len(), sparse_dense_s, sparse_skip_s,
                      sparse_active_s),
+            replay: &replay,
         }, &path);
         std::fs::write(&path, json).expect("write json report");
         println!("\njson report -> {path}");
@@ -445,6 +465,108 @@ fn sequential_trace(cells: &[SweepCell]) -> Vec<SweepRun> {
     }).collect()
 }
 
+/// Measurements of the binary-trace section: one synthetic corpus of
+/// 10^6+ requests saved and re-loaded as CSV and as `.atrb`, plus a
+/// serving replay of the binary form.
+struct ReplayMeasure {
+    requests: f64,
+    steps: u64,
+    csv_bytes: u64,
+    bin_bytes: u64,
+    csv_save_s: f64,
+    csv_load_s: f64,
+    bin_write_s: f64,
+    bin_open_s: f64,
+    replay_s: f64,
+}
+
+/// Gate + measure the binary trace format against its CSV twin on one
+/// dense synthetic corpus. The gate replays both forms through the
+/// serving queue path and asserts bit-identical results before any
+/// timing; the measurement is save/load throughput each way plus the
+/// replay itself.
+fn replay_section(quick: bool, reps: usize) -> ReplayMeasure {
+    let registry = AgentRegistry::paper();
+    let agents: Vec<String> = registry.profiles().iter()
+        .map(|p| p.name.clone()).collect();
+    let steps: u64 = if quick { 25_000 } else { 250_000 };
+    let counts: Vec<Vec<f64>> = (0..steps)
+        .map(|s| (0..agents.len() as u64)
+            .map(|a| ((s * 7 + a * 13 + 3) % 5) as f64)
+            .collect())
+        .collect();
+    let requests: f64 = counts.iter().flatten().sum();
+    let trace = Trace::new(agents.clone(), 0.1, counts)
+        .expect("synthetic corpus is valid");
+
+    let tmp = TempDir::new("bench-replay").expect("temp dir");
+    let csv_path = tmp.path().join("corpus.csv");
+    let bin_path = tmp.path().join("corpus.atrb");
+    trace.save(&csv_path).expect("csv save");
+    save_trace(&trace, &bin_path).expect("binary write");
+
+    // Correctness gate before timing: the binary corpus is complete and
+    // both forms drive the serving queue path to identical results.
+    let bin = BinTrace::open(&bin_path).expect("binary open");
+    assert_eq!(bin.agents(), &agents[..], "agent columns survived");
+    assert!((bin.total_arrivals() - requests).abs() < 0.5,
+            "binary corpus lost arrivals");
+    let sim = ServingSimulator::with_registry(ServingConfig::paper(),
+                                              registry);
+    let from_csv = sim.run_source(&mut PolicyKind::adaptive(), &trace);
+    let from_bin = sim.run_source(&mut PolicyKind::adaptive(), &bin);
+    assert_eq!(from_csv, from_bin,
+               "binary replay diverged from CSV replay");
+    println!("\nbinary trace corpus: {requests:.0} requests × {} agents \
+              ({steps} steps); binary == CSV through the serving path: \
+              OK", agents.len());
+
+    println!("{:<26} {:>10} {:>16} {:>9}", "config", "time",
+             "requests/s", "speedup");
+    let csv_save = best_of(reps, || {
+        trace.save(&csv_path).expect("csv save");
+    });
+    let csv_load = best_of(reps, || {
+        std::hint::black_box(Trace::load(&csv_path).expect("csv load"));
+    });
+    let bin_write = best_of(reps, || {
+        save_trace(&trace, &bin_path).expect("binary write");
+    });
+    let bin_open = best_of(reps, || {
+        std::hint::black_box(BinTrace::open(&bin_path)
+            .expect("binary open"));
+    });
+    let replay_t = best_of(reps, || {
+        let mut policy = PolicyKind::adaptive();
+        std::hint::black_box(
+            sim.run_source(&mut policy, &bin).total_completed);
+    });
+    let n = requests as usize;
+    print_row("csv save", csv_save, n, 1.0);
+    print_row("csv load", csv_load, n, 1.0);
+    print_row("binary write", bin_write, n,
+              csv_save.as_secs_f64() / bin_write.as_secs_f64().max(1e-12));
+    let binary_speedup =
+        csv_load.as_secs_f64() / bin_open.as_secs_f64().max(1e-12);
+    print_row("binary open (zero-copy)", bin_open, n, binary_speedup);
+    print_row("serving replay (binary)", replay_t, n, 1.0);
+    println!("binary_speedup (open vs csv load): {binary_speedup:.2}x \
+              (target >= 10x) — {}",
+             if binary_speedup >= 10.0 { "PASS" } else { "BELOW TARGET" });
+
+    ReplayMeasure {
+        requests,
+        steps,
+        csv_bytes: std::fs::metadata(&csv_path).expect("csv meta").len(),
+        bin_bytes: std::fs::metadata(&bin_path).expect("bin meta").len(),
+        csv_save_s: csv_save.as_secs_f64(),
+        csv_load_s: csv_load.as_secs_f64(),
+        bin_write_s: bin_write.as_secs_f64(),
+        bin_open_s: bin_open.as_secs_f64(),
+        replay_s: replay_t.as_secs_f64(),
+    }
+}
+
 /// Gate + measure one heterogeneous grid: sequential baseline, then the
 /// sweep engine at 1/2/4/8 workers. Returns (sequential seconds, rows).
 fn sweep_section(name: &str, cells: &[SweepCell], steps: u64, reps: usize,
@@ -552,6 +674,8 @@ struct ReportInput<'a> {
     /// Sparse-burst subset of the large-N grid:
     /// (cells, dense seconds, skip-idle seconds, active-set seconds).
     sparse: (usize, f64, f64, f64),
+    /// Binary-trace corpus measurements (CSV vs `.atrb`).
+    replay: &'a ReplayMeasure,
 }
 
 fn worker_rows(n_cells: usize, rows: &[(usize, f64, f64)]) -> Value {
@@ -671,6 +795,35 @@ fn results_value(input: &ReportInput<'_>) -> Value {
         ("large_n",
          large_n_section_value(ln_cells, ln_dense_s, ln_seq_s, ln_rows,
                                input.sparse)),
+        ("replay", replay_section_value(input.replay)),
+    ])
+}
+
+/// The `replay` section: CSV-vs-binary corpus throughput and the
+/// `binary_speedup` the zero-copy format is gated on.
+fn replay_section_value(m: &ReplayMeasure) -> Value {
+    let per_s = |secs: f64| json::num(m.requests / secs.max(1e-12));
+    json::obj(vec![
+        ("requests", json::num(m.requests)),
+        ("steps", json::num(m.steps as f64)),
+        ("csv", json::obj(vec![
+            ("bytes", json::num(m.csv_bytes as f64)),
+            ("save_seconds", json::num(m.csv_save_s)),
+            ("load_seconds", json::num(m.csv_load_s)),
+            ("load_requests_per_s", per_s(m.csv_load_s)),
+        ])),
+        ("binary", json::obj(vec![
+            ("bytes", json::num(m.bin_bytes as f64)),
+            ("write_seconds", json::num(m.bin_write_s)),
+            ("open_seconds", json::num(m.bin_open_s)),
+            ("open_requests_per_s", per_s(m.bin_open_s)),
+        ])),
+        ("binary_speedup",
+         json::num(m.csv_load_s / m.bin_open_s.max(1e-12))),
+        ("serving_replay", json::obj(vec![
+            ("seconds", json::num(m.replay_s)),
+            ("requests_per_s", per_s(m.replay_s)),
+        ])),
     ])
 }
 

@@ -11,7 +11,8 @@ use crate::serverless::{EconInstruments, EconomicsReport};
 use crate::sim::arena::ActiveSet;
 use crate::sim::fault::{ClusterFaultTracker, ResilienceReport};
 use crate::sim::SimConfig;
-use crate::workload::{WorkflowStats, WorkflowTracker, WorkloadGenerator};
+use crate::workload::{TraceSource, WorkflowStats, WorkflowTracker,
+                      WorkloadGenerator};
 
 /// Inter-GPU migration cost model (the §VI "inter-GPU communication
 /// overhead"): transferring a checkpoint takes `model_mb / mb_per_s`
@@ -387,7 +388,7 @@ impl ClusterSimulator {
     /// dense reference path for the bit-exactness properties and the
     /// scaling bench.
     pub fn run_dense(&self) -> Result<ClusterResult> {
-        self.run_inner(&mut ClusterArena::new(), false)
+        self.run_inner(&mut ClusterArena::new(), false, None)
     }
 
     /// [`ClusterSimulator::run`] pinned to the whole-sim skip-idle tier
@@ -396,13 +397,13 @@ impl ClusterSimulator {
     /// scaling bench and the property suite can separate the two
     /// optimizations.
     pub fn run_skip_idle(&self) -> Result<ClusterResult> {
-        self.run_inner(&mut ClusterArena::new(), true)
+        self.run_inner(&mut ClusterArena::new(), true, None)
     }
 
     /// [`ClusterSimulator::run_skip_idle`] with caller-owned buffers.
     pub fn run_skip_idle_with_arena(&self, arena: &mut ClusterArena)
                                     -> Result<ClusterResult> {
-        self.run_inner(arena, true)
+        self.run_inner(arena, true, None)
     }
 
     /// [`ClusterSimulator::run`], but with caller-owned buffers: repeated
@@ -415,15 +416,71 @@ impl ClusterSimulator {
         if self.cfg.workflow.is_none() && self.cfg.economics.is_none() {
             self.run_active_inner(arena)
         } else {
-            self.run_inner(arena, true)
+            self.run_inner(arena, true, None)
         }
     }
 
-    fn run_inner(&self, arena: &mut ClusterArena, skip_idle: bool)
+    /// Replay a recorded arrival source — the in-memory CSV
+    /// [`Trace`](crate::workload::trace::Trace) or the zero-copy
+    /// binary [`BinTrace`](crate::workload::BinTrace) — through the
+    /// cluster engine instead of the configured generator. Burst
+    /// microstructure collapses by summation
+    /// ([`TraceSource::fill_row`]); the source's `dt` and length
+    /// override the config's. Economics and fault layers compose as in
+    /// generator runs; a configured workflow conflicts (it replaces the
+    /// arrival stream) and returns [`Error::Config`].
+    ///
+    /// [`Error::Config`]: crate::error::Error::Config
+    pub fn run_source(&self, source: &dyn TraceSource)
+                      -> Result<ClusterResult> {
+        self.run_source_with_arena(source, &mut ClusterArena::new())
+    }
+
+    /// [`ClusterSimulator::run_source`] with caller-owned buffers.
+    pub fn run_source_with_arena(&self, source: &dyn TraceSource,
+                                 arena: &mut ClusterArena)
+                                 -> Result<ClusterResult> {
+        self.check_source(source)?;
+        self.run_inner(arena, true, Some(source))
+    }
+
+    /// [`ClusterSimulator::run_source`] with the skip-idle core
+    /// disabled — the dense reference for source replay, bit-identical
+    /// by construction.
+    pub fn run_source_dense(&self, source: &dyn TraceSource)
+                            -> Result<ClusterResult> {
+        self.check_source(source)?;
+        self.run_inner(&mut ClusterArena::new(), false, Some(source))
+    }
+
+    fn check_source(&self, source: &dyn TraceSource) -> Result<()> {
+        if self.cfg.workflow.is_some() {
+            return Err(crate::error::Error::Config(
+                "a workflow workload replaces the arrival stream; \
+                 it cannot replay a trace".into()));
+        }
+        if source.agent_names().len() != self.registry.len() {
+            return Err(crate::error::Error::Trace(format!(
+                "trace has {} agent columns, registry has {}",
+                source.agent_names().len(), self.registry.len())));
+        }
+        if !(source.dt() > 0.0) || !source.dt().is_finite() {
+            return Err(crate::error::Error::Trace(format!(
+                "trace dt must be positive and finite, got {}",
+                source.dt())));
+        }
+        Ok(())
+    }
+
+    fn run_inner(&self, arena: &mut ClusterArena, skip_idle: bool,
+                 trace: Option<&dyn TraceSource>)
                  -> Result<ClusterResult> {
         let n = self.registry.len();
         let n_gpus = self.capacities.len();
         let cfg = &self.cfg;
+        // A replay source overrides the config's horizon and step size.
+        let steps = trace.map(|t| t.steps()).unwrap_or(cfg.steps);
+        let dt = trace.map(|t| t.dt()).unwrap_or(cfg.dt);
         let mut allocator =
             ClusterAllocator::new(&self.registry, self.placement.clone());
         let mut workload = WorkloadGenerator::new(
@@ -459,13 +516,20 @@ impl ClusterSimulator {
 
         // Optional workflow-DAG coupling: the tracker replaces the
         // workload generator as the arrival process (stage-coupled
-        // injection) and meters end-to-end instance latency.
-        let mut wf = cfg.workflow.as_ref().map(|w| WorkflowTracker::new(
-            w, cfg.arrival_process, cfg.seed, n));
+        // injection) and meters end-to-end instance latency. A replay
+        // source replaces the arrival stream outright, so the two are
+        // mutually exclusive (check_source rejects the combination
+        // before run_inner is reached).
+        let mut wf = if trace.is_none() {
+            cfg.workflow.as_ref().map(|w| WorkflowTracker::new(
+                w, cfg.arrival_process, cfg.seed, n))
+        } else {
+            None
+        };
 
         let mut step = 0u64;
-        while step < cfg.steps {
-            let now = step as f64 * cfg.dt;
+        while step < steps {
+            let now = step as f64 * dt;
 
             // Skip-idle fast path (same contract as the single-GPU
             // engine): with empty queues, no in-flight stall, a workload
@@ -483,14 +547,15 @@ impl ClusterSimulator {
                 && stalled_until.iter().all(|s| *s <= now)
                 && econ.idle_fixed_point()
             {
-                let arrivals_idle = match wf.as_ref() {
-                    Some(t) => t.idle().then_some(u64::MAX),
-                    None => workload.idle_until(step),
+                let arrivals_idle = match (trace, wf.as_ref()) {
+                    (Some(src), _) => src.idle_until(step),
+                    (None, Some(t)) => t.idle().then_some(u64::MAX),
+                    (None, None) => workload.idle_until(step),
                 };
                 if let (Some(w), Some(f)) = (arrivals_idle,
-                                             fault.quiet_until(step, cfg.dt))
+                                             fault.quiet_until(step, dt))
                 {
-                    let until = w.min(f).min(cfg.steps);
+                    let until = w.min(f).min(steps);
                     if until > step {
                         let k = until - step;
                         for s in latency.iter_mut() {
@@ -505,19 +570,24 @@ impl ClusterSimulator {
                 }
             }
 
-            match wf.as_mut() {
-                Some(t) => {
-                    counts.fill(0.0);
-                    t.begin_step(step, cfg.dt, &mut counts[..]);
+            match (trace, wf.as_mut()) {
+                (Some(src), _) => {
+                    // Replay: burst microstructure collapses by
+                    // summation into the per-step totals.
+                    src.fill_row(step, &mut counts[..]);
                 }
-                None => {
-                    workload.step(step, cfg.dt, &mut rates[..],
+                (None, Some(t)) => {
+                    counts.fill(0.0);
+                    t.begin_step(step, dt, &mut counts[..]);
+                }
+                (None, None) => {
+                    workload.step(step, dt, &mut rates[..],
                                   &mut counts[..]);
                 }
             }
             for i in 0..n {
                 queues[i] += counts[i];
-                observed[i] = counts[i] / cfg.dt;
+                observed[i] = counts[i] / dt;
             }
 
             // Fault recovery: agents sitting on an evicted device
@@ -698,9 +768,9 @@ impl ClusterSimulator {
                 }
             }
             if on_offline_device {
-                fault.note_degraded(cfg.dt);
+                fault.note_degraded(dt);
             }
-            econ.apply_lifecycle(step, cfg.dt, &queues[..], &model_mb[..],
+            econ.apply_lifecycle(step, dt, &queues[..], &model_mb[..],
                                  &mut alloc[..]);
 
             gpu_cap.fill(0.0);
@@ -710,14 +780,14 @@ impl ClusterSimulator {
                 let g = alloc[i];
                 total_alloc += g;
                 let rate = base_tput[i] * g;
-                let cap = rate * cfg.dt;
+                let cap = rate * dt;
                 let processed = queues[i].min(cap);
                 queues[i] -= processed;
                 processed_sum += processed;
                 if processed > 0.0 {
                     if let Some(t) = wf.as_mut() {
                         t.consume(i, processed,
-                                  (step as f64 + 1.0) * cfg.dt);
+                                  (step as f64 + 1.0) * dt);
                     }
                 }
                 let w = if rate > 0.0 {
@@ -728,7 +798,7 @@ impl ClusterSimulator {
                     0.0
                 };
                 latency[i].push(w);
-                throughput[i].push(processed / cfg.dt);
+                throughput[i].push(processed / dt);
                 let gpu = allocator.placement().gpu_of[i];
                 gpu_cap[gpu] += cap;
                 gpu_done[gpu] += processed;
@@ -738,14 +808,14 @@ impl ClusterSimulator {
                     gpu_util[g].push(gpu_done[g] / gpu_cap[g]);
                 }
             }
-            econ.charge_step(total_alloc, &alloc[..], cfg.dt);
+            econ.charge_step(total_alloc, &alloc[..], dt);
             step += 1;
         }
 
         let (cost_dollars, _gpu_seconds, economics) =
-            econ.finish(cfg.steps);
+            econ.finish(steps);
         let resilience = fault.finish(
-            processed_sum / (cfg.steps as f64 * cfg.dt).max(1e-9));
+            processed_sum / (steps as f64 * dt).max(1e-9));
 
         Ok(ClusterResult {
             n_gpus,

@@ -12,6 +12,10 @@
 //!                                               end-to-end latency)
 //! agentsrv serve    [--artifacts DIR] [--policy p] [--requests N]
 //!                   [--workflows N]             end-to-end PJRT serving
+//! agentsrv trace convert --in PATH [--out PATH] CSV <-> binary (.atrb)
+//!                                               trace conversion; a
+//!                                               directory converts the
+//!                                               whole corpus
 //! agentsrv verify   [--artifacts DIR]           golden-vector check
 //! agentsrv config   [--out FILE]                dump the paper config
 //! agentsrv bench-gate --measured FILE [--baseline FILE]
@@ -22,7 +26,7 @@
 //! Arg parsing is hand-rolled (the image is offline; no clap).
 
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 use agentsrv::agents::AgentProfile;
@@ -38,6 +42,8 @@ use agentsrv::sim::Simulator;
 use agentsrv::util::bench::compare_bench_reports;
 use agentsrv::util::json::Value;
 use agentsrv::util::Rng;
+use agentsrv::workload::bintrace::{save_trace, BinTrace};
+use agentsrv::workload::trace::Trace;
 use agentsrv::workload::ArrivalProcess;
 
 fn main() -> ExitCode {
@@ -46,25 +52,32 @@ fn main() -> ExitCode {
         eprintln!("{USAGE}");
         return ExitCode::FAILURE;
     };
-    let opts = match Opts::parse(rest) {
-        Ok(o) => o,
-        Err(e) => {
-            eprintln!("error: {e}\n{USAGE}");
-            return ExitCode::FAILURE;
+    // `trace` carries a subcommand word before its options; every other
+    // command parses the remaining args as options directly.
+    let result = if cmd == "trace" {
+        cmd_trace(rest)
+    } else {
+        let opts = match Opts::parse(rest) {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("error: {e}\n{USAGE}");
+                return ExitCode::FAILURE;
+            }
+        };
+        match cmd.as_str() {
+            "simulate" => cmd_simulate(&opts),
+            "repro" => cmd_repro(&opts),
+            "serve" => cmd_serve(&opts),
+            "verify" => cmd_verify(&opts),
+            "config" => cmd_config(&opts),
+            "bench-gate" => cmd_bench_gate(&opts),
+            "help" | "--help" | "-h" => {
+                println!("{USAGE}");
+                Ok(())
+            }
+            other => Err(Error::Config(format!(
+                "unknown command '{other}'"))),
         }
-    };
-    let result = match cmd.as_str() {
-        "simulate" => cmd_simulate(&opts),
-        "repro" => cmd_repro(&opts),
-        "serve" => cmd_serve(&opts),
-        "verify" => cmd_verify(&opts),
-        "config" => cmd_config(&opts),
-        "bench-gate" => cmd_bench_gate(&opts),
-        "help" | "--help" | "-h" => {
-            println!("{USAGE}");
-            Ok(())
-        }
-        other => Err(Error::Config(format!("unknown command '{other}'"))),
     };
     match result {
         Ok(()) => ExitCode::SUCCESS,
@@ -84,9 +97,13 @@ USAGE:
   agentsrv repro    [--out DIR] [--exp table1|table2|fig2a|fig2b|fig2c|
                                        fig2d|overload|spike|dominance|
                                        scaling|economics|serving|
-                                       placement|faults|workflow|all]
+                                       placement|faults|workflow|replay|
+                                       all]
   agentsrv serve    [--artifacts DIR] [--policy NAME] [--requests N]
                     [--workflows N] [--seed N]
+  agentsrv trace convert --in PATH [--out PATH]
+                    (CSV <-> binary .atrb by extension; a directory
+                     converts every trace in the corpus)
   agentsrv verify   [--artifacts DIR]
   agentsrv config   [--out FILE]
   agentsrv bench-gate --measured FILE [--baseline FILE=BENCH_sweep.json]
@@ -339,6 +356,26 @@ fn cmd_repro(opts: &Opts) -> Result<()> {
                       on, where round_robin stalls every level until \
                       its agent's turn)");
         }
+        "replay" => {
+            println!("{:<22} {:>9} {:>11} {:>10} {:>9} {:>9} {:>5}",
+                     "cell", "recorded", "bytes", "completed",
+                     "mean(s)", "p99(s)", "bit=");
+            for r in repro::replay_experiment(10.0, &[42, 43]) {
+                println!("{:<22} {:>9} {:>11} {:>10} {:>9.2} {:>9.2} \
+                          {:>5}",
+                         format!("{}/seed{}", r.policy, r.seed),
+                         r.recorded_requests, r.trace_bytes,
+                         r.replay_completed, r.replay_mean_latency_s,
+                         r.replay_p99_s,
+                         if r.bit_identical { "yes" } else { "NO" });
+            }
+            println!("\n(each live serving run records its accepted \
+                      queue timeline, dumps it as a burst-encoded \
+                      binary trace, and replays the dump — `bit=` is \
+                      whether the replay reproduced the live run \
+                      exactly, the closure property the .atrb format \
+                      stores absolute timestamps for)");
+        }
         other => return Err(Error::Config(format!(
             "unknown experiment '{other}'"))),
     }
@@ -422,6 +459,84 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
              stats.last_allocation.iter().map(|g| (g * 1e3).round() / 1e3)
                  .collect::<Vec<_>>());
     Ok(())
+}
+
+fn cmd_trace(args: &[String]) -> Result<()> {
+    let Some((sub, rest)) = args.split_first() else {
+        return Err(Error::Config(
+            "trace requires a subcommand (convert)".into()));
+    };
+    let opts = Opts::parse(rest)?;
+    match sub.as_str() {
+        "convert" => cmd_trace_convert(&opts),
+        other => Err(Error::Config(format!(
+            "unknown trace subcommand '{other}'"))),
+    }
+}
+
+/// The destination a trace converts to: `.csv` becomes `.atrb` and
+/// vice versa. Direction is sniffed from the extension alone.
+fn converted_path(src: &Path) -> Result<PathBuf> {
+    match src.extension().and_then(|e| e.to_str()) {
+        Some("csv") => Ok(src.with_extension("atrb")),
+        Some("atrb") => Ok(src.with_extension("csv")),
+        _ => Err(Error::Trace(format!(
+            "{}: unknown trace extension (expected .csv or .atrb)",
+            src.display()))),
+    }
+}
+
+fn convert_one(src: &Path, dst: &Path) -> Result<()> {
+    match src.extension().and_then(|e| e.to_str()) {
+        Some("csv") => save_trace(&Trace::load(src)?, dst)?,
+        Some("atrb") => BinTrace::open(src)?.to_trace()?.save(dst)?,
+        _ => return Err(Error::Trace(format!(
+            "{}: unknown trace extension (expected .csv or .atrb)",
+            src.display()))),
+    }
+    println!("{} -> {} ({} bytes)", src.display(), dst.display(),
+             std::fs::metadata(dst)?.len());
+    Ok(())
+}
+
+fn cmd_trace_convert(opts: &Opts) -> Result<()> {
+    let input = PathBuf::from(opts.get("in").ok_or_else(|| Error::Config(
+        "--in PATH required (a .csv/.atrb trace, or a directory of \
+         them)".into()))?);
+    if input.is_dir() {
+        // Corpus-wide: every trace in the directory converts to its
+        // opposite format, into --out (or alongside the originals).
+        let out_dir = match opts.get("out") {
+            Some(o) => PathBuf::from(o),
+            None => input.clone(),
+        };
+        std::fs::create_dir_all(&out_dir)?;
+        let mut sources: Vec<PathBuf> = std::fs::read_dir(&input)?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| matches!(p.extension().and_then(|e| e.to_str()),
+                                 Some("csv" | "atrb")))
+            .collect();
+        sources.sort();
+        if sources.is_empty() {
+            return Err(Error::Trace(format!(
+                "no .csv or .atrb traces in {}", input.display())));
+        }
+        for src in &sources {
+            let name = converted_path(src)?;
+            let name = name.file_name().ok_or_else(|| Error::Trace(
+                format!("{}: no file name", src.display())))?;
+            convert_one(src, &out_dir.join(name))?;
+        }
+        println!("{} trace(s) converted -> {}", sources.len(),
+                 out_dir.display());
+        Ok(())
+    } else {
+        let dst = match opts.get("out") {
+            Some(o) => PathBuf::from(o),
+            None => converted_path(&input)?,
+        };
+        convert_one(&input, &dst)
+    }
 }
 
 fn cmd_verify(opts: &Opts) -> Result<()> {

@@ -9,6 +9,7 @@ mod economics;
 mod experiments;
 mod faults;
 mod placement;
+mod replay;
 mod robustness;
 mod serving;
 mod workflow;
@@ -26,6 +27,7 @@ pub use placement::{adversarial_rates, adversarial_registry,
                     sparse_hot_agents, synthetic_arrival_rates,
                     synthetic_sparse_rates, synthetic_sparse_registry,
                     PlacementRow};
+pub use replay::{replay_experiment, replay_grid, ReplayRow};
 pub use robustness::{cluster_grid, dominance_experiment,
                      overload_experiment, scaling_experiment,
                      spike_experiment, stress_grid, stress_shapes,
@@ -47,7 +49,8 @@ use crate::metrics::export;
 /// `fig2b_throughput.csv`, `fig2c_allocation.csv`, `fig2d_cost_perf.csv`,
 /// `robustness_overload.csv`, `robustness_spike.csv`,
 /// `robustness_dominance.csv`, `allocator_scaling.csv`, `economics.csv`,
-/// `serving.csv`, `faults.csv`, `placement.csv`, `workflow.csv`.
+/// `serving.csv`, `faults.csv`, `placement.csv`, `workflow.csv`,
+/// `replay.csv`.
 pub fn write_all(dir: &Path) -> Result<()> {
     std::fs::create_dir_all(dir)?;
 
@@ -209,6 +212,22 @@ pub fn write_all(dir: &Path) -> Result<()> {
         ])).collect::<Vec<_>>(),
     )?;
 
+    // Recorded replay: live serving runs dumped as binary traces and
+    // replayed bit-identically (the closure property of the format).
+    let rp = replay_experiment(10.0, &[42, 43]);
+    export::table_csv(
+        &dir.join("replay.csv"),
+        &["cell", "recorded_requests", "trace_bytes",
+          "replay_completed", "replay_mean_latency_s", "replay_p99_s",
+          "bit_identical"],
+        &rp.iter().map(|r| (format!("{}/seed{}", r.policy, r.seed),
+                            vec![
+            r.recorded_requests as f64, r.trace_bytes as f64,
+            r.replay_completed as f64, r.replay_mean_latency_s,
+            r.replay_p99_s, r.bit_identical as u64 as f64,
+        ])).collect::<Vec<_>>(),
+    )?;
+
     // Workflow-DAG head-to-head: end-to-end workflow latency per policy
     // (CriticalPath weighted for the paper fan-out).
     let wf = workflow_experiment(100);
@@ -238,7 +257,7 @@ mod tests {
                   "robustness_spike.csv", "robustness_dominance.csv",
                   "allocator_scaling.csv", "economics.csv",
                   "serving.csv", "faults.csv", "placement.csv",
-                  "workflow.csv"] {
+                  "workflow.csv", "replay.csv"] {
             let p = dir.path().join(f);
             assert!(p.exists(), "{f} missing");
             assert!(std::fs::metadata(&p).unwrap().len() > 0, "{f} empty");

@@ -1,0 +1,166 @@
+//! Recorded-replay experiments: close the record → dump → replay loop
+//! end to end.
+//!
+//! Two drivers:
+//!
+//! * [`replay_experiment`] — per policy × seed, run the serving
+//!   simulator live while recording its queue timeline through the
+//!   core's [`TraceRecorder`](crate::workload::TraceRecorder), dump the
+//!   recording as a burst-encoded binary trace, replay the dump through
+//!   [`ServingSimulator::run_source`], and report whether the replay is
+//!   bit-identical to the live run (it must be: timestamps are stored
+//!   verbatim);
+//! * [`replay_grid`] — recorded-replay cells for the stress sweep: one
+//!   adaptive-policy recording per seed, replayed under every built-in
+//!   policy as [`SweepCell::Serving`] binary-trace cells, so every
+//!   policy replays the *identical* request stream.
+
+use std::sync::Arc;
+
+use crate::agents::AgentRegistry;
+use crate::allocator::PolicyKind;
+use crate::server::{ServingConfig, ServingSimulator};
+use crate::sim::batch::{ScenarioBuilder, SweepCell};
+use crate::sim::SimConfig;
+
+/// One row of the recorded-replay experiment.
+#[derive(Debug, Clone)]
+pub struct ReplayRow {
+    /// Policy that drove both the recording and the replay.
+    pub policy: String,
+    /// Arrival-stream seed.
+    pub seed: u64,
+    /// Requests the live run recorded (accepted enqueues).
+    pub recorded_requests: u64,
+    /// Size of the binary dump (bytes).
+    pub trace_bytes: u64,
+    /// Requests the replay completed.
+    pub replay_completed: u64,
+    /// Replay mean per-request latency (seconds).
+    pub replay_mean_latency_s: f64,
+    /// Replay mean per-agent p99 latency (seconds).
+    pub replay_p99_s: f64,
+    /// Whether the replay reproduced the live run bit-identically
+    /// (every latency, allocation, and counter exactly equal).
+    pub bit_identical: bool,
+}
+
+fn replay_config(duration_s: f64, seed: u64) -> ServingConfig {
+    let mut cfg = ServingConfig::paper();
+    cfg.duration_s = duration_s;
+    cfg.seed = seed;
+    cfg
+}
+
+/// For every built-in policy × seed: record a live serving run's queue
+/// timeline, dump it as a binary trace, replay the dump, and compare.
+/// The `bit_identical` column is the closure property the binary format
+/// exists for — recorded timestamps inject verbatim, so the replay *is*
+/// the run.
+pub fn replay_experiment(duration_s: f64, seeds: &[u64])
+                         -> Vec<ReplayRow> {
+    let mut rows =
+        Vec::with_capacity(PolicyKind::all().len() * seeds.len());
+    for &seed in seeds {
+        let sim = ServingSimulator::with_registry(
+            replay_config(duration_s, seed), AgentRegistry::paper());
+        for policy in PolicyKind::all() {
+            let mut live_policy = policy.clone();
+            let (original, recorded) =
+                sim.run_recording(&mut live_policy);
+            let mut replay_policy = policy.clone();
+            let replayed =
+                sim.run_source(&mut replay_policy, &recorded);
+            rows.push(ReplayRow {
+                policy: policy.name().to_string(),
+                seed,
+                recorded_requests: recorded.total_arrivals() as u64,
+                trace_bytes: recorded.byte_len() as u64,
+                replay_completed: replayed.total_completed,
+                replay_mean_latency_s: replayed.mean_latency(),
+                replay_p99_s: replayed.mean_p99(),
+                bit_identical: replayed == original,
+            });
+        }
+    }
+    rows
+}
+
+/// Recorded-replay stress cells: one adaptive-policy recording per
+/// seed (a live serving run's dumped queue timeline), replayed under
+/// every built-in policy, labelled `"serving/<policy>/replay/seed<seed>"`.
+/// The recording is shared (not copied) across the policies of its
+/// seed, so every policy replays the identical burst-timestamped
+/// request stream through the queue path.
+pub fn replay_grid(duration_s: f64, seeds: &[u64]) -> Vec<SweepCell> {
+    let mut cells =
+        Vec::with_capacity(PolicyKind::all().len() * seeds.len());
+    for &seed in seeds {
+        let cfg = replay_config(duration_s, seed);
+        let sim = ServingSimulator::with_registry(cfg.clone(),
+                                                  AgentRegistry::paper());
+        let (_, recorded) =
+            sim.run_recording(&mut PolicyKind::adaptive());
+        let recorded = Arc::new(recorded);
+        for policy in PolicyKind::all() {
+            cells.push(ScenarioBuilder::new(
+                format!("serving/{}/replay/seed{seed}", policy.name()),
+                SimConfig::paper(), AgentRegistry::paper())
+                .policy(policy)
+                .serving(cfg.clone())
+                .bintrace(Arc::clone(&recorded))
+                .build()
+                .expect("replay cells carry no conflicting axes"));
+        }
+    }
+    cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::batch::run_sweep;
+
+    #[test]
+    fn replay_experiment_is_bit_identical_for_every_policy() {
+        let rows = replay_experiment(2.0, &[1, 2]);
+        assert_eq!(rows.len(), PolicyKind::all().len() * 2);
+        for row in &rows {
+            assert!(row.bit_identical, "{}/seed{}", row.policy, row.seed);
+            assert!(row.recorded_requests > 0, "{}", row.policy);
+            assert_eq!(row.recorded_requests, row.replay_completed,
+                       "{}: lossless replay completes everything",
+                       row.policy);
+            assert!(row.trace_bytes > 0 && row.replay_mean_latency_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn replay_grid_cells_are_bit_identical_across_worker_counts() {
+        let cells = replay_grid(2.0, &[42]);
+        assert_eq!(cells.len(), PolicyKind::all().len());
+        let mut labels: Vec<&str> =
+            cells.iter().map(SweepCell::label).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), cells.len(), "labels must be unique");
+        assert!(cells.iter().any(|c| c.label()
+                == "serving/adaptive/replay/seed42"));
+        let sequential = run_sweep(&cells, 1);
+        for workers in [2usize, 8] {
+            let parallel = run_sweep(&cells, workers);
+            for (a, b) in sequential.iter().zip(&parallel) {
+                assert_eq!(a.label, b.label);
+                assert_eq!(a.result.as_serving().unwrap(),
+                           b.result.as_serving().unwrap(),
+                           "{} at {workers} workers", a.label);
+            }
+        }
+        // Every policy served the identical recorded stream in full.
+        let completed: Vec<u64> = sequential.iter()
+            .map(|r| r.result.as_serving().unwrap().total_completed)
+            .collect();
+        assert!(completed.iter().all(|&c| c == completed[0] && c > 0),
+                "shared recording must replay losslessly: {completed:?}");
+    }
+}

@@ -326,9 +326,11 @@ pub fn trace_grid(steps: u64, seeds: &[u64]) -> Vec<SweepCell> {
 /// grid ([`crate::repro::serving_grid`], 10 virtual seconds per cell),
 /// the fault-injection grid ([`crate::repro::fault_grid`] —
 /// eviction rate × recovery policy × shed policy × allocator × seed),
-/// and the workflow-DAG grid ([`crate::repro::workflow_grid`] — spec
-/// shape × policy × placement × seed), mixed for one `run_sweep` call
-/// through one worker pool.
+/// the workflow-DAG grid ([`crate::repro::workflow_grid`] — spec
+/// shape × policy × placement × seed), and the recorded-replay cells
+/// ([`crate::repro::replay_grid`] — live serving recordings dumped as
+/// binary traces, replayed under every policy), mixed for one
+/// `run_sweep` call through one worker pool.
 pub fn stress_sweep(steps: u64, seeds: &[u64]) -> Vec<SweepCell> {
     let mut cells: Vec<SweepCell> = stress_grid(steps, seeds)
         .into_iter().map(SweepCell::Single).collect();
@@ -338,6 +340,7 @@ pub fn stress_sweep(steps: u64, seeds: &[u64]) -> Vec<SweepCell> {
     cells.extend(crate::repro::serving_grid(10.0, seeds));
     cells.extend(crate::repro::fault_grid(steps, seeds));
     cells.extend(crate::repro::workflow_grid(steps, seeds));
+    cells.extend(crate::repro::replay_grid(10.0, seeds));
     cells
 }
 
@@ -558,8 +561,11 @@ mod tests {
         assert_eq!(traces,
                    PolicyKind::all().len() * seeds.len());
         assert_eq!(costs, crate::repro::cost_grid(10, &seeds).len());
+        // Serving cells come from two grids: the serving grid and the
+        // recorded-replay grid (both emit SweepCell::Serving).
         assert_eq!(servings,
-                   crate::repro::serving_grid(10.0, &seeds).len());
+                   crate::repro::serving_grid(10.0, &seeds).len()
+                       + crate::repro::replay_grid(10.0, &seeds).len());
         assert_eq!(faults, crate::repro::fault_grid(10, &seeds).len());
         assert_eq!(workflows,
                    crate::repro::workflow_grid(10, &seeds).len());

@@ -16,6 +16,7 @@ use crate::allocator::{AllocContext, AllocationPolicy};
 use crate::metrics::Histogram;
 use crate::server::GpuGovernor;
 use crate::sim::fault::RetryPolicy;
+use crate::workload::TraceRecorder;
 
 /// A source of timestamps the core can subtract. The core never *reads*
 /// a clock — drivers hand it instants — so the same scheduling code runs
@@ -151,6 +152,7 @@ pub struct ServingCore<C: Clock, P: AllocationPolicy> {
     trajectory: Option<Vec<Vec<f64>>>,
     retry: RetryPolicy,
     retried: u64,
+    recorder: Option<TraceRecorder>,
 }
 
 impl<C: Clock, P: AllocationPolicy> ServingCore<C, P> {
@@ -178,6 +180,7 @@ impl<C: Clock, P: AllocationPolicy> ServingCore<C, P> {
             trajectory: record_trajectory.then(Vec::new),
             retry: RetryPolicy::none(),
             retried: 0,
+            recorder: None,
             registry,
             policy,
             alloc_window_s,
@@ -310,6 +313,38 @@ impl<C: Clock, P: AllocationPolicy> ServingCore<C, P> {
             self.stats[agent].errors += batch_size as u64;
             None
         }
+    }
+
+    /// Start recording the live queue timeline: every subsequent
+    /// [`record_enqueue`](ServingCore::record_enqueue) lands in a
+    /// [`TraceRecorder`] whose step duration is `dt` seconds. Both
+    /// shells share this hook — the simulator passes virtual enqueue
+    /// times, the threaded server passes wall seconds since serve
+    /// start. Panics on a non-positive/non-finite `dt` (driver bug,
+    /// not data).
+    pub fn enable_recorder(&mut self, dt: f64) {
+        let names = self.registry.profiles().iter()
+            .map(|p| p.name.clone()).collect();
+        self.recorder = Some(TraceRecorder::new(names, dt)
+            .expect("valid recorder dt"));
+    }
+
+    /// Record one accepted request's enqueue (`t_s` seconds since run
+    /// start). A single `None` check when recording is disabled — the
+    /// hot path costs nothing unless
+    /// [`enable_recorder`](ServingCore::enable_recorder) was called.
+    #[inline]
+    pub fn record_enqueue(&mut self, agent: usize, t_s: f64) {
+        if let Some(r) = self.recorder.as_mut() {
+            r.record(agent, t_s);
+        }
+    }
+
+    /// Take the recorded queue timeline (None unless
+    /// [`enable_recorder`](ServingCore::enable_recorder) was called);
+    /// recording stops.
+    pub fn take_recorder(&mut self) -> Option<TraceRecorder> {
+        self.recorder.take()
     }
 
     /// Record one completed request's end-to-end latency.
@@ -474,6 +509,19 @@ mod tests {
         let traj = c.take_trajectory();
         assert_eq!(traj.len(), 2);
         assert_eq!(traj[1].len(), 4);
+    }
+
+    #[test]
+    fn recorder_is_disabled_by_default_and_captures_when_enabled() {
+        let mut c = core();
+        c.record_enqueue(0, 0.5); // no recorder: a no-op
+        assert!(c.take_recorder().is_none());
+        c.enable_recorder(0.1);
+        c.record_enqueue(1, 0.25);
+        c.record_enqueue(1, 0.25);
+        let r = c.take_recorder().expect("enabled");
+        assert_eq!(r.len(), 2);
+        assert!(c.take_recorder().is_none(), "take stops recording");
     }
 
     #[test]

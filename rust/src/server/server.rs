@@ -33,6 +33,14 @@ pub struct ServerConfig {
     /// [`ServingCore::on_batch_failure`] path the deterministic
     /// simulator uses, so both shells share one failure semantic.
     pub retry: RetryPolicy,
+    /// `Some(dt)` records every submitted request's enqueue time
+    /// (wall seconds since server start) through the core's
+    /// [`TraceRecorder`](crate::workload::TraceRecorder), dumpable via
+    /// [`AgentServer::dump_trace`] as a binary trace with step duration
+    /// `dt` — the live timeline then replays deterministically through
+    /// [`ServingSimulator::run_source`](crate::server::ServingSimulator::run_source).
+    /// `None` (the default) costs nothing on the submit path.
+    pub record_trace_dt: Option<f64>,
 }
 
 impl ServerConfig {
@@ -45,6 +53,7 @@ impl ServerConfig {
             alloc_window: Duration::from_millis(100),
             capacity: 1.0,
             retry: RetryPolicy::bounded(),
+            record_trace_dt: None,
         }
     }
 }
@@ -99,6 +108,8 @@ pub struct AgentServer {
     seq_len: usize,
     vocab: Vec<usize>,
     handle: Option<JoinHandle<()>>,
+    started: Instant,
+    recording: bool,
 }
 
 impl AgentServer {
@@ -121,6 +132,18 @@ impl AgentServer {
             registry.clone(), policy, cfg.alloc_window.as_secs_f64(),
             cfg.capacity, max_batches, false);
         core.set_retry(cfg.retry.clone());
+        let recording = match cfg.record_trace_dt {
+            Some(dt) => {
+                if !(dt > 0.0) || !dt.is_finite() {
+                    return Err(Error::Config(format!(
+                        "record_trace_dt must be positive and finite, \
+                         got {dt}")));
+                }
+                core.enable_recorder(dt);
+                true
+            }
+            None => false,
+        };
 
         let shared = Arc::new(Shared {
             queues: Mutex::new((0..n).map(|_| AgentQueue::new()).collect()),
@@ -173,6 +196,8 @@ impl AgentServer {
             seq_len,
             vocab,
             handle: Some(handle),
+            started: Instant::now(),
+            recording,
         })
     }
 
@@ -204,13 +229,21 @@ impl AgentServer {
             return Err(Error::Serving("server shutting down".into()));
         }
         let (tx, rx) = channel();
+        let enqueued = Instant::now();
         {
             let mut queues = self.shared.queues.lock().expect("queues lock");
             queues[id].push(QueuedRequest {
                 tokens,
-                enqueued: Instant::now(),
+                enqueued,
                 reply: tx,
             });
+        }
+        if self.recording {
+            // Recorder order is irrelevant (the dump sorts), so the
+            // core lock is taken outside the queue lock.
+            let t_s = enqueued.duration_since(self.started).as_secs_f64();
+            self.shared.core.lock().expect("core lock")
+                .record_enqueue(id, t_s);
         }
         self.shared.work_cv.notify_one();
         Ok(rx)
@@ -234,6 +267,24 @@ impl AgentServer {
             gpu_busy_seconds: core.gpu_busy_seconds(),
             last_allocation: core.last_allocation().to_vec(),
         }
+    }
+
+    /// Dump the live queue timeline recorded since start as a
+    /// burst-encoded binary trace at `path` (requires
+    /// `record_trace_dt` in the config; recording stops). The dump
+    /// covers every wall-clock step elapsed so far, and replays
+    /// deterministically through
+    /// [`ServingSimulator::run_source`](crate::server::ServingSimulator::run_source)
+    /// or `agentsrv trace convert`.
+    pub fn dump_trace(&self, path: &std::path::Path) -> Result<()> {
+        let recorder = self.shared.core.lock().expect("core lock")
+            .take_recorder();
+        let recorder = recorder.ok_or_else(|| Error::Serving(
+            "trace recording was not enabled \
+             (set ServerConfig::record_trace_dt)".into()))?;
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let steps = (elapsed / recorder.dt()).ceil().max(1.0) as u64;
+        recorder.save(path, steps)
     }
 
     /// Drain outstanding work and stop the serving thread.

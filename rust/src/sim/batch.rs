@@ -84,7 +84,7 @@ use crate::serverless::{EconomicsModel, EconomicsReport};
 use crate::sim::fault::{FaultConfig, ServingFaults};
 use crate::sim::{SimArena, SimConfig, SimResult, Simulator};
 use crate::workload::trace::{Trace, TraceCorpus};
-use crate::workload::WorkflowWorkload;
+use crate::workload::{BinTrace, WorkflowWorkload};
 
 /// One single-GPU cell of a sweep grid: a labelled simulation to run.
 #[derive(Debug, Clone)]
@@ -333,6 +333,10 @@ pub struct ServingScenario {
     /// Recorded input, when this cell replays a trace instead of the
     /// config's generator. Shared, not copied, across a grid.
     trace: Option<Arc<Trace>>,
+    /// Recorded binary input ([`BinTrace`]), when this cell replays a
+    /// zero-copy binary trace — burst frames inject their recorded
+    /// timestamps verbatim. Shared, not copied, across a grid.
+    bin: Option<Arc<BinTrace>>,
 }
 
 impl ServingScenario {
@@ -345,6 +349,7 @@ impl ServingScenario {
             policy,
             sim: ServingSimulator::with_registry(cfg, registry),
             trace: None,
+            bin: None,
         }
     }
 
@@ -364,6 +369,34 @@ impl ServingScenario {
             policy,
             sim: ServingSimulator::with_registry(cfg, registry),
             trace: Some(trace),
+            bin: None,
+        }
+    }
+
+    /// Build a binary-trace replay serving cell (e.g. a recording
+    /// dumped by [`ServingSimulator::run_recording`] or
+    /// [`AgentServer::dump_trace`](crate::server::AgentServer::dump_trace)).
+    /// Panics when the trace's agent columns do not match the
+    /// registry's agents (same rule as [`ServingScenario::from_trace`]).
+    pub fn from_bintrace(label: impl Into<String>, cfg: ServingConfig,
+                         registry: AgentRegistry,
+                         bin: impl Into<Arc<BinTrace>>,
+                         policy: PolicyKind) -> ServingScenario {
+        let bin = bin.into();
+        let names: Vec<&str> = registry.profiles().iter()
+            .map(|p| p.name.as_str()).collect();
+        let cols: Vec<&str> = bin.agents().iter()
+            .map(String::as_str).collect();
+        if cols != names {
+            panic!("trace agent columns {cols:?} do not match the \
+                    registry's agents {names:?}");
+        }
+        ServingScenario {
+            label: label.into(),
+            policy,
+            sim: ServingSimulator::with_registry(cfg, registry),
+            trace: None,
+            bin: Some(bin),
         }
     }
 
@@ -377,10 +410,20 @@ impl ServingScenario {
         self.trace.as_deref()
     }
 
+    /// The binary trace this cell replays, when it is a binary-replay
+    /// cell.
+    pub fn bintrace(&self) -> Option<&BinTrace> {
+        self.bin.as_deref()
+    }
+
     /// Run this one cell through a caller-owned arena.
     pub fn run_with_arena(&self, arena: &mut ServingArena)
                           -> ServingResult {
         let mut policy = self.policy.clone();
+        if let Some(bin) = &self.bin {
+            return self.sim.run_source_with_arena(&mut policy,
+                                                  bin.as_ref(), arena);
+        }
         match &self.trace {
             Some(trace) => {
                 self.sim.run_trace_with_arena(&mut policy, trace, arena)
@@ -811,6 +854,7 @@ pub struct ScenarioBuilder {
     faults: Option<FaultConfig>,
     workflow: Option<WorkflowWorkload>,
     trace: Option<Arc<Trace>>,
+    bintrace: Option<Arc<BinTrace>>,
     serving: Option<ServingConfig>,
     serving_faults: Option<ServingFaults>,
 }
@@ -833,6 +877,7 @@ impl ScenarioBuilder {
             faults: None,
             workflow: None,
             trace: None,
+            bintrace: None,
             serving: None,
             serving_faults: None,
         }
@@ -895,6 +940,15 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Recorded *binary* trace ([`BinTrace`]) to replay instead of the
+    /// config's generator — e.g. a live-recorded serving timeline with
+    /// burst microstructure. Requires [`ScenarioBuilder::serving`]
+    /// routing (burst timestamps only have meaning on the queue path).
+    pub fn bintrace(mut self, bin: impl Into<Arc<BinTrace>>) -> Self {
+        self.bintrace = Some(bin.into());
+        self
+    }
+
     /// Route through the serving-layer engine under `cfg` (the fluid
     /// config's arrival axes are superseded by the serving config's).
     pub fn serving(mut self, cfg: ServingConfig) -> Self {
@@ -914,10 +968,15 @@ impl ScenarioBuilder {
     pub fn build(self) -> Result<SweepCell> {
         let ScenarioBuilder {
             label, mut cfg, registry, policy, capacities, placement,
-            rebalancer, economics, faults, workflow, trace, serving,
-            serving_faults,
+            rebalancer, economics, faults, workflow, trace, bintrace,
+            serving, serving_faults,
         } = self;
 
+        if bintrace.is_some() && trace.is_some() {
+            return Err(Error::Config(
+                "one replay input per cell; drop .trace() or \
+                 .bintrace()".into()));
+        }
         if let Some(scfg) = serving {
             if capacities.is_some() {
                 return Err(Error::Config(
@@ -925,7 +984,7 @@ impl ScenarioBuilder {
                      drop .capacities() or .serving()".into()));
             }
             if let Some(wf) = workflow {
-                if trace.is_some() {
+                if trace.is_some() || bintrace.is_some() {
                     return Err(Error::Config(
                         "a workflow workload replaces the arrival \
                          stream; it cannot replay a trace".into()));
@@ -937,8 +996,19 @@ impl ScenarioBuilder {
                     label, scfg, registry, policy, wf)?));
             }
             if let Some(sf) = serving_faults {
+                if trace.is_some() || bintrace.is_some() {
+                    return Err(Error::Config(
+                        "serving fault cells draw from the generator; \
+                         drop .serving_faults() or the replay input"
+                            .into()));
+                }
                 return Ok(SweepCell::Fault(FaultScenario::serving(
                     label, scfg, registry, policy, sf)));
+            }
+            if let Some(b) = bintrace {
+                return Ok(SweepCell::Serving(
+                    ServingScenario::from_bintrace(label, scfg, registry,
+                                                   b, policy)));
             }
             return Ok(match trace {
                 Some(t) => SweepCell::Serving(ServingScenario::from_trace(
@@ -950,6 +1020,12 @@ impl ScenarioBuilder {
         if serving_faults.is_some() {
             return Err(Error::Config(
                 "serving_faults needs a .serving() config".into()));
+        }
+        if bintrace.is_some() {
+            return Err(Error::Config(
+                "binary traces replay through the serving queue path \
+                 (burst timestamps have no fluid meaning); add \
+                 .serving() or convert to a CSV trace".into()));
         }
 
         cfg.economics = economics.or(cfg.economics.take());

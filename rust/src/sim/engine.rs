@@ -30,7 +30,7 @@ use crate::metrics::TimeSeries;
 use crate::serverless::EconInstruments;
 use crate::sim::fault::FaultTracker;
 use crate::sim::{AgentStats, SimArena, SimConfig, SimResult, Timelines};
-use crate::workload::{WorkflowTracker, WorkflowWorkload,
+use crate::workload::{TraceSource, WorkflowTracker, WorkflowWorkload,
                       WorkloadGenerator};
 
 /// Arrival stream feeding [`Simulator`]'s inner loop: realized per-step
@@ -64,41 +64,30 @@ impl ArrivalSource for GeneratorSource {
     }
 }
 
-/// A recorded [`Trace`](crate::workload::trace::Trace) as an arrival
-/// source. The idle oracle scans forward for the next row with any
-/// nonzero cell; the scan restarts where the previous window ended, so
-/// replay stays O(rows × agents) overall.
-struct TraceSource<'a> {
-    rows: &'a [Vec<f64>],
+/// Any recorded replay source — the in-memory CSV
+/// [`Trace`](crate::workload::trace::Trace) or the zero-copy binary
+/// [`BinTrace`](crate::workload::BinTrace) — adapted to the inner
+/// loop's [`ArrivalSource`] through the public [`TraceSource`] trait.
+/// Burst microstructure collapses by summation in
+/// [`TraceSource::fill_row`], so the fluid engine replays burst
+/// recordings bit-exactly like their dense per-step totals.
+struct SourceAdapter<'a> {
+    src: &'a dyn TraceSource,
 }
 
-impl ArrivalSource for TraceSource<'_> {
+impl ArrivalSource for SourceAdapter<'_> {
     fn next(&mut self, step: u64, dt: f64, rates: &mut [f64],
             counts: &mut [f64]) {
-        let row = &self.rows[step as usize];
-        counts.copy_from_slice(row);
-        for (r, c) in rates.iter_mut().zip(row) {
+        self.src.fill_row(step, counts);
+        for (r, c) in rates.iter_mut().zip(counts.iter()) {
             *r = c / dt;
         }
     }
 
     fn idle_until(&mut self, step: u64) -> Option<u64> {
-        let mut s = step as usize;
-        if s >= self.rows.len()
-            || self.rows[s].iter().any(|c| *c != 0.0)
-        {
-            return None;
-        }
-        while s < self.rows.len()
-            && self.rows[s].iter().all(|c| *c == 0.0)
-        {
-            s += 1;
-        }
-        if s >= self.rows.len() {
-            Some(u64::MAX)
-        } else {
-            Some(s as u64)
-        }
+        // Recorded data: replaying an idle window consumes no state,
+        // so the source's forward scan is the whole answer.
+        self.src.idle_until(step)
     }
 }
 
@@ -311,16 +300,65 @@ impl Simulator {
     where
         P: AllocationPolicy + ?Sized,
     {
-        assert_eq!(trace.agents.len(), self.registry.len(),
-                   "trace agent count must match registry");
         if let Err(e) = trace.validate() {
             panic!("{e}");
         }
-        let mut source = TraceSource { rows: &trace.counts };
+        self.run_source_inner(policy, trace, arena, skip_idle)
+    }
+
+    /// Run one policy over any recorded replay source — the in-memory
+    /// CSV [`Trace`] or the zero-copy binary
+    /// [`BinTrace`](crate::workload::BinTrace) — through the same inner
+    /// loop as [`Simulator::run_trace`]. Burst-encoded steps collapse
+    /// by summation, so a burst recording replays bit-exactly like a
+    /// dense trace of its per-step totals. The source's `dt` and length
+    /// override the config's.
+    ///
+    /// [`Trace`]: crate::workload::trace::Trace
+    pub fn run_source<P>(&self, policy: &mut P,
+                         source: &dyn TraceSource) -> SimResult
+    where
+        P: AllocationPolicy + ?Sized,
+    {
+        self.run_source_inner(policy, source, &mut SimArena::new(),
+                              true)
+    }
+
+    /// [`Simulator::run_source`] with caller-owned buffers.
+    pub fn run_source_with_arena<P>(
+        &self, policy: &mut P, source: &dyn TraceSource,
+        arena: &mut SimArena) -> SimResult
+    where
+        P: AllocationPolicy + ?Sized,
+    {
+        self.run_source_inner(policy, source, arena, true)
+    }
+
+    /// [`Simulator::run_source`] with the skip-idle core disabled —
+    /// the dense reference for source replay, bit-identical by
+    /// construction.
+    pub fn run_source_dense<P>(&self, policy: &mut P,
+                               source: &dyn TraceSource) -> SimResult
+    where
+        P: AllocationPolicy + ?Sized,
+    {
+        self.run_source_inner(policy, source, &mut SimArena::new(),
+                              false)
+    }
+
+    fn run_source_inner<P>(
+        &self, policy: &mut P, source: &dyn TraceSource,
+        arena: &mut SimArena, skip_idle: bool) -> SimResult
+    where
+        P: AllocationPolicy + ?Sized,
+    {
+        assert_eq!(source.agent_names().len(), self.registry.len(),
+                   "trace agent count must match registry");
+        let mut adapter = SourceAdapter { src: source };
         // Trace replay reproduces a recorded per-agent stream; the
         // workflow axis does not apply to it.
-        self.run_inner(policy, &mut source, trace.counts.len() as u64,
-                       trace.dt, arena, skip_idle, None)
+        self.run_inner(policy, &mut adapter, source.steps(),
+                       source.dt(), arena, skip_idle, None)
     }
 
     fn run_inner<P>(&self, policy: &mut P, source: &mut dyn ArrivalSource,

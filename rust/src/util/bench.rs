@@ -184,7 +184,9 @@ impl BenchComparison {
 /// `cluster` / `corpus` / `cost` / `serving` / `placement` / `faults` /
 /// `large_n` section present in both reports (for `large_n`, the dense
 /// reference entry and the sparse-burst `sparse/{dense, skip_idle,
-/// active_set}` sub-entries are gated too). The
+/// active_set}` sub-entries are gated too; the `replay` section's CSV
+/// load, binary open, and serving-replay request-throughputs likewise,
+/// under its own `requests` comparability check). The
 /// two reports must describe the same workload — equal `grid.steps`
 /// and per-section scenario counts — otherwise throughput is not
 /// comparable and an error is returned. A baseline whose `results` is
@@ -276,6 +278,38 @@ pub fn compare_bench_reports(baseline: &Value, measured: &Value,
                 "large_n/sparse: sub-section is in the baseline but \
                  missing from the measured report".to_string()),
         }
+    }
+    // The replay section measures per-request (not per-cell)
+    // throughputs under its own key names; gate both load paths and
+    // the serving replay so the binary_speedup claim is backed by
+    // numbers that cannot silently rot.
+    match (base.get("replay"), meas.get("replay")) {
+        (Some(b), Some(m)) => {
+            let b_req = b.get("requests").and_then(Value::as_f64);
+            let m_req = m.get("requests").and_then(Value::as_f64);
+            if b_req != m_req {
+                return Err(Error::Artifact(format!(
+                    "reports are not comparable: replay.requests \
+                     {b_req:?} (baseline) vs {m_req:?} (measured)")));
+            }
+            let tput = |v: &Value, sub: &str, key: &str| {
+                v.get(sub).and_then(|s| s.get(key))
+                    .and_then(Value::as_f64)
+            };
+            compare_entry(&mut cmp, "replay/csv_load", allowed_drop,
+                          tput(b, "csv", "load_requests_per_s"),
+                          tput(m, "csv", "load_requests_per_s"));
+            compare_entry(&mut cmp, "replay/binary_open", allowed_drop,
+                          tput(b, "binary", "open_requests_per_s"),
+                          tput(m, "binary", "open_requests_per_s"));
+            compare_entry(&mut cmp, "replay/serving", allowed_drop,
+                          tput(b, "serving_replay", "requests_per_s"),
+                          tput(m, "serving_replay", "requests_per_s"));
+        }
+        (None, _) => cmp.skipped.push("replay".to_string()),
+        (Some(_), None) => cmp.regressions.push(
+            "replay: section is in the baseline but missing from the \
+             measured report".to_string()),
     }
     Ok(cmp)
 }
@@ -609,6 +643,83 @@ mod tests {
         assert!(cmp.regressions.iter()
                 .any(|r| r.starts_with("large_n/sparse:")),
                 "{:?}", cmp.regressions);
+    }
+
+    /// A report whose only extra section is `replay`, in the shape
+    /// `sweep_scaling --json` writes it.
+    fn report_with_replay(csv_load: f64, bin_open: f64,
+                          serving: f64) -> Value {
+        Value::parse(&format!(r#"{{
+            "results": {{
+                "grid": {{"scenarios": 240, "steps": 2000}},
+                "sequential_baseline":
+                    {{"seconds": 1.0, "scenarios_per_s": 1000.0}},
+                "batch": [],
+                "replay": {{
+                    "requests": 2000000.0,
+                    "steps": 250000,
+                    "csv": {{"bytes": 9000000, "save_seconds": 1.0,
+                             "load_seconds": 2.0,
+                             "load_requests_per_s": {csv_load}}},
+                    "binary": {{"bytes": 4000000,
+                                "write_seconds": 0.2,
+                                "open_seconds": 0.05,
+                                "open_requests_per_s": {bin_open}}},
+                    "binary_speedup": 40.0,
+                    "serving_replay": {{"seconds": 1.5,
+                                        "requests_per_s": {serving}}}
+                }}
+            }}
+        }}"#)).unwrap()
+    }
+
+    #[test]
+    fn gate_covers_the_replay_section() {
+        let baseline = report_with_replay(1e6, 4e7, 1.3e6);
+        let cmp = compare_bench_reports(&baseline, &baseline, 0.25)
+            .unwrap();
+        assert!(cmp.passed(), "{:?}", cmp.regressions);
+        for entry in ["replay/csv_load", "replay/binary_open",
+                      "replay/serving"] {
+            assert!(cmp.compared.contains(&entry.to_string()),
+                    "{:?}", cmp.compared);
+        }
+        // The binary open path regressing fails the gate even when the
+        // CSV path holds.
+        let slower_open = report_with_replay(1e6, 2e7, 1.3e6);
+        let cmp = compare_bench_reports(&baseline, &slower_open, 0.25)
+            .unwrap();
+        assert!(!cmp.passed());
+        assert!(cmp.regressions.iter()
+                .any(|r| r.starts_with("replay/binary_open")),
+                "{:?}", cmp.regressions);
+        // A different corpus size is not comparable at all.
+        let mut other = report_with_replay(1e6, 4e7, 1.3e6);
+        if let Value::Object(fields) = &mut other {
+            if let Some((_, Value::Object(results))) = fields.iter_mut()
+                .find(|(k, _)| k.as_str() == "results")
+            {
+                if let Some((_, Value::Object(replay))) = results
+                    .iter_mut().find(|(k, _)| k.as_str() == "replay")
+                {
+                    if let Some((_, v)) = replay.iter_mut()
+                        .find(|(k, _)| k.as_str() == "requests")
+                    {
+                        *v = Value::Number(1.0);
+                    }
+                }
+            }
+        }
+        assert!(compare_bench_reports(&baseline, &other, 0.25).is_err());
+        // A measurement that drops the section regresses; an old
+        // baseline without it skips.
+        let bare = report(1000.0, 100.0);
+        let cmp = compare_bench_reports(&baseline, &bare, 0.25).unwrap();
+        assert!(cmp.regressions.iter()
+                .any(|r| r.starts_with("replay:")),
+                "{:?}", cmp.regressions);
+        let cmp = compare_bench_reports(&bare, &baseline, 0.25).unwrap();
+        assert!(cmp.skipped.contains(&"replay".to_string()));
     }
 
     #[test]

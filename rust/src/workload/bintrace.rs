@@ -1,0 +1,1352 @@
+//! Compact binary arrival-trace format (`ATRB` v1) with a zero-copy
+//! reader, plus the [`TraceSource`] replay abstraction every engine
+//! consumes.
+//!
+//! CSV traces ([`Trace`](crate::workload::trace::Trace)) parse at tens
+//! of MB/s and force the full `Vec<Vec<f64>>` matrix into memory; a
+//! million-request serving timeline needs neither. The binary format
+//! keeps the whole file as one flat byte buffer and decodes rows on
+//! demand — no per-row allocation, no up-front matrix.
+//!
+//! ## On-disk layout (all integers and floats little-endian)
+//!
+//! ```text
+//! header:  magic "ATRB" | version u16 | flags u16 (0) | dt f64
+//!          | n_agents u32 | n_agents x (name_len u16, utf-8 bytes)
+//! blocks:  repeated until EOF, contiguous in step order —
+//!   tag 1 (dense):  first_step u64 | n_steps u32
+//!                   | n_steps x n_agents x count f64
+//!   tag 2 (sparse): first_step u64 | n_steps u32 | n_events u32
+//!                   | n_events x (step_off u32, agent u32, count f64)
+//!   tag 3 (burst):  first_step u64 | n_steps u32 | n_events u32
+//!                   | n_events x (step_off u32, agent u32,
+//!                                 count f64, t_s f64)
+//! ```
+//!
+//! The writer buffers up to [`BLOCK_STEPS`] steps and picks dense vs
+//! sparse per block by encoded size; runs of all-zero steps collapse
+//! into empty sparse blocks of any length. Burst blocks carry
+//! *intra-tick microstructure*: each event is `count` requests for
+//! `agent` at the absolute timestamp `t_s` (so `floor(t_s / dt)` is the
+//! event's step). [`ServingSimulator`](crate::server::ServingSimulator)
+//! materializes those timestamps natively; the fluid engines collapse
+//! them by summation into per-step counts ([`TraceSource::fill_row`]),
+//! bit-exact with a dense replay of the same per-step totals.
+//!
+//! [`TraceRecorder`] is the capture side: the serving layer
+//! ([`ServingCore`](crate::server::ServingCore)) records per-request
+//! enqueue ticks behind a zero-cost-when-disabled hook and dumps them
+//! as a burst-encoded binary trace.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::workload::trace::Trace;
+
+/// File magic, first four bytes of every binary trace.
+pub const MAGIC: [u8; 4] = *b"ATRB";
+
+/// Format version this build writes and accepts.
+pub const VERSION: u16 = 1;
+
+/// Steps buffered per frame block before the writer flushes.
+pub const BLOCK_STEPS: u32 = 64;
+
+const TAG_DENSE: u8 = 1;
+const TAG_SPARSE: u8 = 2;
+const TAG_BURST: u8 = 3;
+
+const SPARSE_EVENT_BYTES: usize = 16;
+const BURST_EVENT_BYTES: usize = 24;
+
+/// One sub-`dt` arrival event inside a burst-encoded step: `count`
+/// requests for `agent` landing at the absolute time `t_s` seconds.
+/// The timestamp is stored verbatim (not as a quantized offset), so a
+/// replay injects bit-identical arrival times.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BurstEvent {
+    /// Column index of the receiving agent.
+    pub agent: u32,
+    /// Requests arriving together (a positive whole number).
+    pub count: f64,
+    /// Absolute arrival time in seconds; `floor(t_s / dt)` is the step.
+    pub t_s: f64,
+}
+
+/// Replay abstraction over recorded arrival traces: the in-memory CSV
+/// [`Trace`] and the zero-copy [`BinTrace`] both implement it, so the
+/// fluid [`Simulator`](crate::sim::Simulator),
+/// [`ClusterSimulator`](crate::cluster::ClusterSimulator), and
+/// [`ServingSimulator`](crate::server::ServingSimulator) replay either
+/// through one code path.
+///
+/// All methods take `&self`: a source is immutable recorded data, so
+/// one instance can feed many sweep workers concurrently.
+pub trait TraceSource: Sync {
+    /// Agent names defining column order.
+    fn agent_names(&self) -> &[String];
+
+    /// Step duration in seconds (validated positive and finite).
+    fn dt(&self) -> f64;
+
+    /// Number of steps covered.
+    fn steps(&self) -> u64;
+
+    /// Write `step`'s per-agent arrival counts into `counts`
+    /// (`counts.len() == agent_names().len()`). Burst-encoded steps
+    /// collapse by summation.
+    fn fill_row(&self, step: u64, counts: &mut [f64]);
+
+    /// Idle oracle, same contract as the engines' generator oracles:
+    /// `None` when `step` itself has arrivals, otherwise
+    /// `Some(next_busy_step)` — `Some(u64::MAX)` when nothing arrives
+    /// for the rest of the trace.
+    fn idle_until(&self, step: u64) -> Option<u64>;
+
+    /// Intra-tick microstructure: when `step` lies in a burst-encoded
+    /// frame, clear `out`, fill it with the step's events in
+    /// `(t_s, agent)` order, and return `true`. The default (and the
+    /// dense CSV trace) has no microstructure and returns `false`.
+    fn step_bursts(&self, step: u64, out: &mut Vec<BurstEvent>) -> bool {
+        let _ = (step, out);
+        false
+    }
+}
+
+impl TraceSource for Trace {
+    fn agent_names(&self) -> &[String] {
+        &self.agents
+    }
+
+    fn dt(&self) -> f64 {
+        self.dt
+    }
+
+    fn steps(&self) -> u64 {
+        self.counts.len() as u64
+    }
+
+    fn fill_row(&self, step: u64, counts: &mut [f64]) {
+        counts.copy_from_slice(&self.counts[step as usize]);
+    }
+
+    fn idle_until(&self, step: u64) -> Option<u64> {
+        for (s, row) in self.counts.iter().enumerate().skip(step as usize)
+        {
+            if row.iter().any(|c| *c != 0.0) {
+                return if s as u64 == step {
+                    None
+                } else {
+                    Some(s as u64)
+                };
+            }
+        }
+        Some(u64::MAX)
+    }
+}
+
+fn check_dt(dt: f64) -> Result<()> {
+    if !(dt > 0.0) || !dt.is_finite() {
+        return Err(Error::Trace(format!(
+            "dt must be positive and finite, got {dt}")));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------
+
+enum Pending {
+    /// Nothing buffered.
+    None,
+    /// `row_steps` dense rows in `rows` starting at `block_start`.
+    Rows,
+    /// `burst_steps` burst steps in `bursts` starting at `block_start`.
+    Bursts,
+    /// `idle_run` all-zero steps starting at `block_start`.
+    Idle,
+}
+
+/// Buffered streaming writer for the `ATRB` format.
+///
+/// Push steps in order — [`BinTraceWriter::push_row`] for per-step
+/// count rows, [`BinTraceWriter::push_burst_step`] for steps with
+/// sub-`dt` timestamps, [`BinTraceWriter::push_idle`] for arrival-free
+/// runs — then [`BinTraceWriter::finish`]. Blocks are flushed every
+/// [`BLOCK_STEPS`] steps (or when the step kind changes), each encoded
+/// dense or sparse, whichever is smaller. All-zero rows are detected
+/// and folded into idle runs automatically.
+pub struct BinTraceWriter<W: Write> {
+    out: W,
+    n_agents: usize,
+    dt: f64,
+    /// Absolute step the next push occupies.
+    next_step: u64,
+    /// First absolute step of the pending block.
+    block_start: u64,
+    pending: Pending,
+    rows: Vec<f64>,
+    row_steps: u32,
+    bursts: Vec<(u32, BurstEvent)>,
+    burst_steps: u32,
+    idle_run: u64,
+}
+
+impl<W: Write> BinTraceWriter<W> {
+    /// Write the header and return a writer ready for step pushes.
+    /// Rejects a non-positive or non-finite `dt`, an empty agent list,
+    /// and agent names longer than `u16::MAX` bytes.
+    pub fn new(mut out: W, agents: &[String], dt: f64)
+               -> Result<BinTraceWriter<W>> {
+        check_dt(dt)?;
+        if agents.is_empty() {
+            return Err(Error::Trace(
+                "bintrace needs >= 1 agent column".into()));
+        }
+        if agents.len() > u32::MAX as usize {
+            return Err(Error::Trace(format!(
+                "too many agent columns: {}", agents.len())));
+        }
+        out.write_all(&MAGIC)?;
+        out.write_all(&VERSION.to_le_bytes())?;
+        out.write_all(&0u16.to_le_bytes())?;
+        out.write_all(&dt.to_le_bytes())?;
+        out.write_all(&(agents.len() as u32).to_le_bytes())?;
+        for name in agents {
+            if name.len() > u16::MAX as usize {
+                return Err(Error::Trace(format!(
+                    "agent name too long: {} bytes", name.len())));
+            }
+            out.write_all(&(name.len() as u16).to_le_bytes())?;
+            out.write_all(name.as_bytes())?;
+        }
+        Ok(BinTraceWriter {
+            out,
+            n_agents: agents.len(),
+            dt,
+            next_step: 0,
+            block_start: 0,
+            pending: Pending::None,
+            rows: Vec::new(),
+            row_steps: 0,
+            bursts: Vec::new(),
+            burst_steps: 0,
+            idle_run: 0,
+        })
+    }
+
+    /// Steps pushed so far.
+    pub fn steps_written(&self) -> u64 {
+        self.next_step
+    }
+
+    /// Append one step's per-agent arrival counts. All-zero rows are
+    /// folded into an idle run. Rejects NaN and negative counts.
+    pub fn push_row(&mut self, counts: &[f64]) -> Result<()> {
+        if counts.len() != self.n_agents {
+            return Err(Error::Trace(format!(
+                "step {}: row has {} cells, expected {}",
+                self.next_step, counts.len(), self.n_agents)));
+        }
+        for (agent, c) in counts.iter().enumerate() {
+            if !c.is_finite() || *c < 0.0 {
+                return Err(Error::Trace(format!(
+                    "step {}, agent {agent}: count {c} must be finite \
+                     and non-negative", self.next_step)));
+            }
+        }
+        if counts.iter().all(|c| *c == 0.0) {
+            return self.push_idle(1);
+        }
+        if !matches!(self.pending, Pending::Rows) {
+            self.flush_pending()?;
+            self.pending = Pending::Rows;
+            self.block_start = self.next_step;
+        }
+        self.rows.extend_from_slice(counts);
+        self.row_steps += 1;
+        self.next_step += 1;
+        if self.row_steps >= BLOCK_STEPS {
+            self.flush_pending()?;
+        }
+        Ok(())
+    }
+
+    /// Append `steps` arrival-free steps in one go (encoded as an
+    /// empty sparse block of any length).
+    pub fn push_idle(&mut self, steps: u64) -> Result<()> {
+        if steps == 0 {
+            return Ok(());
+        }
+        if !matches!(self.pending, Pending::Idle) {
+            self.flush_pending()?;
+            self.pending = Pending::Idle;
+            self.block_start = self.next_step;
+        }
+        self.idle_run += steps;
+        self.next_step += steps;
+        Ok(())
+    }
+
+    /// Append one step carrying sub-`dt` microstructure: each event is
+    /// `count` whole requests for `agent` at absolute time `t_s`, with
+    /// `floor(t_s / dt)` equal to the step being pushed. Events are
+    /// sorted into canonical `(t_s, agent)` order. An empty event list
+    /// is an idle step.
+    pub fn push_burst_step(&mut self, events: &[BurstEvent])
+                           -> Result<()> {
+        if events.is_empty() {
+            return self.push_idle(1);
+        }
+        let step = self.next_step;
+        for ev in events {
+            if ev.agent as usize >= self.n_agents {
+                return Err(Error::Trace(format!(
+                    "step {step}: burst agent {} out of range (n={})",
+                    ev.agent, self.n_agents)));
+            }
+            if !ev.count.is_finite() || ev.count < 1.0
+                || ev.count.fract() != 0.0
+            {
+                return Err(Error::Trace(format!(
+                    "step {step}: burst count {} must be a positive \
+                     whole number", ev.count)));
+            }
+            if !ev.t_s.is_finite() || ev.t_s < 0.0
+                || (ev.t_s / self.dt).floor() as u64 != step
+            {
+                return Err(Error::Trace(format!(
+                    "step {step}: burst timestamp {} lies outside the \
+                     step (dt={})", ev.t_s, self.dt)));
+            }
+        }
+        if !matches!(self.pending, Pending::Bursts) {
+            self.flush_pending()?;
+            self.pending = Pending::Bursts;
+            self.block_start = self.next_step;
+        }
+        let off = (self.next_step - self.block_start) as u32;
+        let at = self.bursts.len();
+        self.bursts.extend(events.iter().map(|ev| (off, *ev)));
+        self.bursts[at..].sort_by(|(_, a), (_, b)| {
+            a.t_s.total_cmp(&b.t_s).then(a.agent.cmp(&b.agent))
+        });
+        self.burst_steps += 1;
+        self.next_step += 1;
+        if self.burst_steps >= BLOCK_STEPS {
+            self.flush_pending()?;
+        }
+        Ok(())
+    }
+
+    /// Flush every pending block and the underlying writer, returning
+    /// it. Must be called — dropping the writer loses buffered blocks.
+    pub fn finish(mut self) -> Result<W> {
+        self.flush_pending()?;
+        self.out.flush()?;
+        Ok(self.out)
+    }
+
+    fn flush_pending(&mut self) -> Result<()> {
+        match self.pending {
+            Pending::None => {}
+            Pending::Rows => self.flush_rows()?,
+            Pending::Bursts => self.flush_bursts()?,
+            Pending::Idle => self.flush_idle()?,
+        }
+        self.pending = Pending::None;
+        Ok(())
+    }
+
+    fn flush_rows(&mut self) -> Result<()> {
+        let n_events =
+            self.rows.iter().filter(|c| **c != 0.0).count();
+        let dense_bytes = self.rows.len() * 8;
+        let sparse_bytes = 4 + n_events * SPARSE_EVENT_BYTES;
+        if sparse_bytes < dense_bytes {
+            self.out.write_all(&[TAG_SPARSE])?;
+            self.out.write_all(&self.block_start.to_le_bytes())?;
+            self.out.write_all(&self.row_steps.to_le_bytes())?;
+            self.out.write_all(&(n_events as u32).to_le_bytes())?;
+            for (i, c) in self.rows.iter().enumerate() {
+                if *c == 0.0 {
+                    continue;
+                }
+                let off = (i / self.n_agents) as u32;
+                let agent = (i % self.n_agents) as u32;
+                self.out.write_all(&off.to_le_bytes())?;
+                self.out.write_all(&agent.to_le_bytes())?;
+                self.out.write_all(&c.to_le_bytes())?;
+            }
+        } else {
+            self.out.write_all(&[TAG_DENSE])?;
+            self.out.write_all(&self.block_start.to_le_bytes())?;
+            self.out.write_all(&self.row_steps.to_le_bytes())?;
+            for c in &self.rows {
+                self.out.write_all(&c.to_le_bytes())?;
+            }
+        }
+        self.rows.clear();
+        self.row_steps = 0;
+        Ok(())
+    }
+
+    fn flush_bursts(&mut self) -> Result<()> {
+        self.out.write_all(&[TAG_BURST])?;
+        self.out.write_all(&self.block_start.to_le_bytes())?;
+        self.out.write_all(&self.burst_steps.to_le_bytes())?;
+        self.out
+            .write_all(&(self.bursts.len() as u32).to_le_bytes())?;
+        for (off, ev) in &self.bursts {
+            self.out.write_all(&off.to_le_bytes())?;
+            self.out.write_all(&ev.agent.to_le_bytes())?;
+            self.out.write_all(&ev.count.to_le_bytes())?;
+            self.out.write_all(&ev.t_s.to_le_bytes())?;
+        }
+        self.bursts.clear();
+        self.burst_steps = 0;
+        Ok(())
+    }
+
+    fn flush_idle(&mut self) -> Result<()> {
+        let mut start = self.block_start;
+        let mut left = self.idle_run;
+        while left > 0 {
+            let k = left.min(u32::MAX as u64);
+            self.out.write_all(&[TAG_SPARSE])?;
+            self.out.write_all(&start.to_le_bytes())?;
+            self.out.write_all(&(k as u32).to_le_bytes())?;
+            self.out.write_all(&0u32.to_le_bytes())?;
+            start += k;
+            left -= k;
+        }
+        self.idle_run = 0;
+        Ok(())
+    }
+}
+
+/// Serialize an in-memory [`Trace`] to `path` in binary form. The
+/// writer's per-block size heuristic picks dense or sparse encoding;
+/// the result round-trips bit-equal through [`BinTrace::to_trace`].
+pub fn save_trace(trace: &Trace, path: &Path) -> Result<()> {
+    trace.validate()?;
+    let file = std::fs::File::create(path)?;
+    let mut w = BinTraceWriter::new(std::io::BufWriter::new(file),
+                                    &trace.agents, trace.dt)?;
+    for row in &trace.counts {
+        w.push_row(row)?;
+    }
+    w.finish()?;
+    Ok(())
+}
+
+/// [`save_trace`] into an in-memory byte buffer.
+pub fn trace_to_bytes(trace: &Trace) -> Result<Vec<u8>> {
+    trace.validate()?;
+    let mut w =
+        BinTraceWriter::new(Vec::new(), &trace.agents, trace.dt)?;
+    for row in &trace.counts {
+        w.push_row(row)?;
+    }
+    w.finish()
+}
+
+// ---------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+struct Block {
+    first_step: u64,
+    n_steps: u32,
+    tag: u8,
+    n_events: u32,
+    /// Payload byte offset into `BinTrace::data`.
+    payload: usize,
+}
+
+/// Zero-copy reader for the `ATRB` format: the file is held as one
+/// flat byte buffer and rows/events decode on demand straight from it
+/// — the full `Vec<Vec<f64>>` matrix is never materialized. Every
+/// structural invariant (magic, version, block contiguity, event
+/// bounds and ordering, NaN/negative counts, timestamps inside their
+/// step) is validated once at open, so replay reads are unchecked
+/// offset arithmetic.
+#[derive(Debug, Clone)]
+pub struct BinTrace {
+    agents: Vec<String>,
+    dt: f64,
+    steps: u64,
+    data: Vec<u8>,
+    blocks: Vec<Block>,
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.b.len() - self.at < n {
+            return Err(Error::Trace(format!(
+                "truncated binary trace: {what} needs {n} bytes at \
+                 offset {}, file has {}", self.at, self.b.len())));
+        }
+        let s = &self.b[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+}
+
+impl BinTrace {
+    /// Open and validate a binary trace file.
+    pub fn open(path: &Path) -> Result<BinTrace> {
+        BinTrace::from_bytes(std::fs::read(path)?).map_err(
+            |e| Error::Trace(format!("{}: {e}", path.display())))
+    }
+
+    /// Validate an in-memory byte buffer as a binary trace.
+    pub fn from_bytes(data: Vec<u8>) -> Result<BinTrace> {
+        let mut cur = Cursor { b: &data, at: 0 };
+        let magic = cur.take(4, "magic")?;
+        if magic != MAGIC {
+            return Err(Error::Trace(
+                "not a binary trace (bad magic)".into()));
+        }
+        let version = cur.u16("version")?;
+        if version != VERSION {
+            return Err(Error::Trace(format!(
+                "binary trace version {version} unsupported \
+                 (expected {VERSION})")));
+        }
+        let flags = cur.u16("flags")?;
+        if flags != 0 {
+            return Err(Error::Trace(format!(
+                "reserved flags must be zero, got {flags:#x}")));
+        }
+        let dt = cur.f64("dt")?;
+        check_dt(dt)?;
+        let n_agents = cur.u32("agent count")? as usize;
+        if n_agents == 0 {
+            return Err(Error::Trace("no agent columns".into()));
+        }
+        let mut agents = Vec::with_capacity(n_agents);
+        for i in 0..n_agents {
+            let len = cur.u16("agent name length")? as usize;
+            let bytes = cur.take(len, "agent name")?;
+            let name = std::str::from_utf8(bytes).map_err(
+                |e| Error::Trace(format!(
+                    "agent {i} name is not UTF-8: {e}")))?;
+            agents.push(name.to_string());
+        }
+
+        let mut blocks = Vec::new();
+        let mut expected_step = 0u64;
+        while cur.at < cur.b.len() {
+            let tag = cur.u8("block tag")?;
+            let first_step = cur.u64("block first_step")?;
+            let n_steps = cur.u32("block n_steps")?;
+            if first_step != expected_step {
+                return Err(Error::Trace(format!(
+                    "block at offset {} starts at step {first_step}, \
+                     expected {expected_step}", cur.at)));
+            }
+            if n_steps == 0 {
+                return Err(Error::Trace(format!(
+                    "block at step {first_step} covers zero steps")));
+            }
+            let block = match tag {
+                TAG_DENSE => {
+                    let payload = cur.at;
+                    let cells = n_steps as usize * n_agents;
+                    for i in 0..cells {
+                        let c = cur.f64("dense count")?;
+                        if !c.is_finite() || c < 0.0 {
+                            return Err(Error::Trace(format!(
+                                "step {}, agent {}: count {c} must be \
+                                 finite and non-negative",
+                                first_step + (i / n_agents) as u64,
+                                i % n_agents)));
+                        }
+                    }
+                    Block { first_step, n_steps, tag, n_events: 0,
+                            payload }
+                }
+                TAG_SPARSE | TAG_BURST => {
+                    let n_events = cur.u32("block n_events")?;
+                    let payload = cur.at;
+                    let mut prev: Option<(u32, f64, u32)> = None;
+                    for _ in 0..n_events {
+                        let off = cur.u32("event step_off")?;
+                        let agent = cur.u32("event agent")?;
+                        let count = cur.f64("event count")?;
+                        if off >= n_steps {
+                            return Err(Error::Trace(format!(
+                                "event step offset {off} outside block \
+                                 of {n_steps} steps at step \
+                                 {first_step}")));
+                        }
+                        if agent as usize >= n_agents {
+                            return Err(Error::Trace(format!(
+                                "step {}: agent {agent} out of range \
+                                 (n={n_agents})",
+                                first_step + off as u64)));
+                        }
+                        if !count.is_finite() || count <= 0.0 {
+                            return Err(Error::Trace(format!(
+                                "step {}, agent {agent}: count {count} \
+                                 must be finite and positive",
+                                first_step + off as u64)));
+                        }
+                        let t_s = if tag == TAG_BURST {
+                            let t = cur.f64("event t_s")?;
+                            if count.fract() != 0.0 {
+                                return Err(Error::Trace(format!(
+                                    "step {}: burst count {count} must \
+                                     be a whole number",
+                                    first_step + off as u64)));
+                            }
+                            if !t.is_finite() || t < 0.0
+                                || (t / dt).floor() as u64
+                                    != first_step + off as u64
+                            {
+                                return Err(Error::Trace(format!(
+                                    "step {}: burst timestamp {t} lies \
+                                     outside the step (dt={dt})",
+                                    first_step + off as u64)));
+                            }
+                            t
+                        } else {
+                            0.0
+                        };
+                        if let Some((po, pt, pa)) = prev {
+                            let ordered = match off.cmp(&po) {
+                                std::cmp::Ordering::Greater => true,
+                                std::cmp::Ordering::Less => false,
+                                std::cmp::Ordering::Equal => {
+                                    if tag == TAG_BURST {
+                                        match t_s.total_cmp(&pt) {
+                                            std::cmp::Ordering::Greater
+                                                => true,
+                                            std::cmp::Ordering::Less
+                                                => false,
+                                            std::cmp::Ordering::Equal
+                                                => agent > pa,
+                                        }
+                                    } else {
+                                        agent > pa
+                                    }
+                                }
+                            };
+                            if !ordered {
+                                return Err(Error::Trace(format!(
+                                    "events out of order in block at \
+                                     step {first_step}")));
+                            }
+                        }
+                        prev = Some((off, t_s, agent));
+                    }
+                    Block { first_step, n_steps, tag, n_events,
+                            payload }
+                }
+                other => {
+                    return Err(Error::Trace(format!(
+                        "unknown block tag {other} at step \
+                         {first_step}")));
+                }
+            };
+            expected_step = first_step + n_steps as u64;
+            blocks.push(block);
+        }
+
+        Ok(BinTrace { agents, dt, steps: expected_step, data, blocks })
+    }
+
+    /// Agent names defining column order.
+    pub fn agents(&self) -> &[String] {
+        &self.agents
+    }
+
+    /// Total file size in bytes.
+    pub fn byte_len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Total arrival count across the whole trace (bursts included).
+    pub fn total_arrivals(&self) -> f64 {
+        let mut total = 0.0;
+        for b in &self.blocks {
+            match b.tag {
+                TAG_DENSE => {
+                    let cells =
+                        b.n_steps as usize * self.agents.len();
+                    for i in 0..cells {
+                        total += self.f64_at(b.payload + i * 8);
+                    }
+                }
+                _ => {
+                    let sz = event_bytes(b.tag);
+                    for i in 0..b.n_events as usize {
+                        total +=
+                            self.f64_at(b.payload + i * sz + 8);
+                    }
+                }
+            }
+        }
+        total
+    }
+
+    /// Materialize the full dense matrix as an in-memory [`Trace`]
+    /// (burst steps collapse by summation) — the CSV-export side of
+    /// `agentsrv trace convert`.
+    pub fn to_trace(&self) -> Result<Trace> {
+        let n = self.agents.len();
+        let mut counts = Vec::with_capacity(self.steps as usize);
+        let mut row = vec![0.0; n];
+        for step in 0..self.steps {
+            self.fill_row(step, &mut row);
+            counts.push(row.clone());
+        }
+        Trace::new(self.agents.clone(), self.dt, counts)
+    }
+
+    fn f64_at(&self, at: usize) -> f64 {
+        f64::from_le_bytes(self.data[at..at + 8].try_into().unwrap())
+    }
+
+    fn u32_at(&self, at: usize) -> u32 {
+        u32::from_le_bytes(self.data[at..at + 4].try_into().unwrap())
+    }
+
+    /// Index of the block containing `step`, if any.
+    fn block_of(&self, step: u64) -> Option<usize> {
+        let i = self.blocks.partition_point(
+            |b| b.first_step + b.n_steps as u64 <= step);
+        (i < self.blocks.len() && self.blocks[i].first_step <= step)
+            .then_some(i)
+    }
+
+    /// Event range `[lo, hi)` of `step_off` within a sparse or burst
+    /// block (events are sorted by `step_off`).
+    fn event_range(&self, b: &Block, step_off: u32) -> (usize, usize) {
+        let sz = event_bytes(b.tag);
+        let n = b.n_events as usize;
+        let off_of = |i: usize| self.u32_at(b.payload + i * sz);
+        let mut lo = 0usize;
+        let mut hi = n;
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if off_of(mid) < step_off {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        let first = lo;
+        hi = n;
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if off_of(mid) <= step_off {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        (first, lo)
+    }
+
+    /// First step `>= from` inside block `b` with any arrivals.
+    fn first_busy_in(&self, b: &Block, from: u64) -> Option<u64> {
+        let n = self.agents.len();
+        let start_off = from.saturating_sub(b.first_step) as usize;
+        match b.tag {
+            TAG_DENSE => {
+                for s in start_off..b.n_steps as usize {
+                    let at = b.payload + s * n * 8;
+                    for a in 0..n {
+                        if self.f64_at(at + a * 8) != 0.0 {
+                            return Some(b.first_step + s as u64);
+                        }
+                    }
+                }
+                None
+            }
+            _ => {
+                // Events all carry positive counts: the first event at
+                // or past `from` marks the next busy step.
+                let sz = event_bytes(b.tag);
+                let n_ev = b.n_events as usize;
+                let off_of = |i: usize| self.u32_at(b.payload + i * sz);
+                let mut lo = 0usize;
+                let mut hi = n_ev;
+                while lo < hi {
+                    let mid = (lo + hi) / 2;
+                    if (off_of(mid) as usize) < start_off {
+                        lo = mid + 1;
+                    } else {
+                        hi = mid;
+                    }
+                }
+                (lo < n_ev)
+                    .then(|| b.first_step + off_of(lo) as u64)
+            }
+        }
+    }
+}
+
+fn event_bytes(tag: u8) -> usize {
+    if tag == TAG_BURST {
+        BURST_EVENT_BYTES
+    } else {
+        SPARSE_EVENT_BYTES
+    }
+}
+
+impl TraceSource for BinTrace {
+    fn agent_names(&self) -> &[String] {
+        &self.agents
+    }
+
+    fn dt(&self) -> f64 {
+        self.dt
+    }
+
+    fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    fn fill_row(&self, step: u64, counts: &mut [f64]) {
+        let Some(bi) = self.block_of(step) else {
+            counts.fill(0.0);
+            return;
+        };
+        let b = &self.blocks[bi];
+        let n = self.agents.len();
+        match b.tag {
+            TAG_DENSE => {
+                let at = b.payload
+                    + (step - b.first_step) as usize * n * 8;
+                for (a, c) in counts.iter_mut().enumerate() {
+                    *c = self.f64_at(at + a * 8);
+                }
+            }
+            tag => {
+                counts.fill(0.0);
+                let sz = event_bytes(tag);
+                let (lo, hi) =
+                    self.event_range(b, (step - b.first_step) as u32);
+                for i in lo..hi {
+                    let at = b.payload + i * sz;
+                    let agent = self.u32_at(at + 4) as usize;
+                    counts[agent] += self.f64_at(at + 8);
+                }
+            }
+        }
+    }
+
+    fn idle_until(&self, step: u64) -> Option<u64> {
+        let mut bi = match self.block_of(step) {
+            Some(bi) => bi,
+            None => return Some(u64::MAX),
+        };
+        let mut from = step;
+        while bi < self.blocks.len() {
+            let b = self.blocks[bi];
+            if let Some(busy) = self.first_busy_in(&b, from) {
+                return if busy == step { None } else { Some(busy) };
+            }
+            from = b.first_step + b.n_steps as u64;
+            bi += 1;
+        }
+        Some(u64::MAX)
+    }
+
+    fn step_bursts(&self, step: u64, out: &mut Vec<BurstEvent>)
+                   -> bool {
+        let Some(bi) = self.block_of(step) else {
+            return false;
+        };
+        let b = &self.blocks[bi];
+        if b.tag != TAG_BURST {
+            return false;
+        }
+        out.clear();
+        let (lo, hi) =
+            self.event_range(b, (step - b.first_step) as u32);
+        for i in lo..hi {
+            let at = b.payload + i * BURST_EVENT_BYTES;
+            out.push(BurstEvent {
+                agent: self.u32_at(at + 4),
+                count: self.f64_at(at + 8),
+                t_s: self.f64_at(at + 16),
+            });
+        }
+        true
+    }
+}
+
+// ---------------------------------------------------------------------
+// Recorder
+// ---------------------------------------------------------------------
+
+/// Capture side of the burst format: collects per-request enqueue
+/// timestamps (one `record` call per accepted request) and dumps them
+/// as a burst-encoded binary trace. [`ServingCore`] holds one behind
+/// an `Option`, so recording disabled costs a single `None` check per
+/// enqueue.
+///
+/// Timestamps are stored verbatim; replaying the dump through
+/// [`ServingSimulator`](crate::server::ServingSimulator) injects
+/// bit-identical arrival times.
+///
+/// [`ServingCore`]: crate::server::ServingCore
+#[derive(Debug, Clone)]
+pub struct TraceRecorder {
+    agents: Vec<String>,
+    dt: f64,
+    /// `(step, t_s, agent)` in arrival order — sorted at dump time.
+    events: Vec<(u64, f64, u32)>,
+}
+
+impl TraceRecorder {
+    /// Recorder for the given agent columns at step duration `dt`.
+    pub fn new(agents: Vec<String>, dt: f64) -> Result<TraceRecorder> {
+        check_dt(dt)?;
+        if agents.is_empty() {
+            return Err(Error::Trace(
+                "recorder needs >= 1 agent column".into()));
+        }
+        Ok(TraceRecorder { agents, dt, events: Vec::new() })
+    }
+
+    /// Record one request for `agent` enqueued at `t_s` seconds.
+    /// Non-finite or negative timestamps are clamped to zero (the
+    /// wall-clock and virtual-clock callers never produce them).
+    pub fn record(&mut self, agent: usize, t_s: f64) {
+        debug_assert!(agent < self.agents.len());
+        let t = if t_s.is_finite() && t_s >= 0.0 { t_s } else { 0.0 };
+        let step = (t / self.dt).floor() as u64;
+        self.events.push((step, t, agent as u32));
+    }
+
+    /// Step duration the recorder quantizes into (seconds).
+    pub fn dt(&self) -> f64 {
+        self.dt
+    }
+
+    /// Requests recorded so far.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when nothing was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Serialize as a burst-encoded binary trace covering at least
+    /// `steps` steps (extended if an event lands past the end).
+    /// Identical `(t_s, agent)` arrivals coalesce into one event with
+    /// a summed count.
+    pub fn to_bytes(&self, steps: u64) -> Result<Vec<u8>> {
+        let mut evs = self.events.clone();
+        evs.sort_by(|a, b| {
+            a.0.cmp(&b.0)
+                .then(a.1.total_cmp(&b.1))
+                .then(a.2.cmp(&b.2))
+        });
+        let total =
+            steps.max(evs.last().map(|e| e.0 + 1).unwrap_or(0));
+        let mut w =
+            BinTraceWriter::new(Vec::new(), &self.agents, self.dt)?;
+        let mut step_events: Vec<BurstEvent> = Vec::new();
+        let mut next = 0u64;
+        let mut i = 0usize;
+        while i < evs.len() {
+            let step = evs[i].0;
+            if step > next {
+                w.push_idle(step - next)?;
+            }
+            step_events.clear();
+            while i < evs.len() && evs[i].0 == step {
+                let (_, t, agent) = evs[i];
+                match step_events.last_mut() {
+                    Some(last)
+                        if last.t_s == t && last.agent == agent =>
+                    {
+                        last.count += 1.0;
+                    }
+                    _ => step_events.push(BurstEvent {
+                        agent,
+                        count: 1.0,
+                        t_s: t,
+                    }),
+                }
+                i += 1;
+            }
+            w.push_burst_step(&step_events)?;
+            next = step + 1;
+        }
+        if total > next {
+            w.push_idle(total - next)?;
+        }
+        w.finish()
+    }
+
+    /// [`TraceRecorder::to_bytes`] parsed back into a validated
+    /// in-memory [`BinTrace`], ready for replay.
+    pub fn to_bintrace(&self, steps: u64) -> Result<BinTrace> {
+        BinTrace::from_bytes(self.to_bytes(steps)?)
+    }
+
+    /// Dump the recording to `path` as a binary trace file.
+    pub fn save(&self, path: &Path, steps: u64) -> Result<()> {
+        std::fs::write(path, self.to_bytes(steps)?)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn header_bytes(agents: &[&str], dt: f64) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&MAGIC);
+        b.extend_from_slice(&VERSION.to_le_bytes());
+        b.extend_from_slice(&0u16.to_le_bytes());
+        b.extend_from_slice(&dt.to_le_bytes());
+        b.extend_from_slice(&(agents.len() as u32).to_le_bytes());
+        for a in agents {
+            b.extend_from_slice(&(a.len() as u16).to_le_bytes());
+            b.extend_from_slice(a.as_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn trace_round_trips_bit_equal() {
+        let trace = Trace::paper_poisson(200, 7);
+        let bin =
+            BinTrace::from_bytes(trace_to_bytes(&trace).unwrap())
+                .unwrap();
+        assert_eq!(bin.steps(), 200);
+        assert_eq!(bin.agents(), &trace.agents[..]);
+        assert_eq!(bin.dt(), trace.dt);
+        assert_eq!(bin.to_trace().unwrap(), trace);
+    }
+
+    #[test]
+    fn file_round_trip_and_open_label() {
+        let trace = Trace::paper_poisson(50, 3);
+        let dir = crate::util::TempDir::new("bt").unwrap();
+        let path = dir.path().join("t.atrb");
+        save_trace(&trace, &path).unwrap();
+        let bin = BinTrace::open(&path).unwrap();
+        assert_eq!(bin.to_trace().unwrap(), trace);
+
+        std::fs::write(&path, b"garbage").unwrap();
+        let err = BinTrace::open(&path).unwrap_err();
+        assert!(err.to_string().contains("t.atrb"), "{err}");
+    }
+
+    #[test]
+    fn header_only_file_is_an_empty_trace() {
+        let bytes = header_bytes(&["a", "b"], 0.5);
+        let bin = BinTrace::from_bytes(bytes).unwrap();
+        assert_eq!(bin.steps(), 0);
+        assert_eq!(bin.agents().len(), 2);
+        assert!(bin.to_trace().unwrap().is_empty());
+        assert_eq!(bin.idle_until(0), Some(u64::MAX));
+    }
+
+    #[test]
+    fn single_agent_trace_round_trips() {
+        let trace = Trace::new(
+            vec!["solo".into()], 2.0,
+            vec![vec![1.0], vec![0.0], vec![3.5]]).unwrap();
+        let bin =
+            BinTrace::from_bytes(trace_to_bytes(&trace).unwrap())
+                .unwrap();
+        assert_eq!(bin.to_trace().unwrap(), trace);
+    }
+
+    #[test]
+    fn truncated_frame_block_is_rejected() {
+        let trace = Trace::paper_poisson(100, 1);
+        let bytes = trace_to_bytes(&trace).unwrap();
+        let cut = bytes.len() - 11;
+        let err =
+            BinTrace::from_bytes(bytes[..cut].to_vec()).unwrap_err();
+        match err {
+            Error::Trace(msg) => {
+                assert!(msg.contains("truncated"), "{msg}")
+            }
+            other => panic!("expected Error::Trace, got {other}"),
+        }
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let mut bytes =
+            trace_to_bytes(&Trace::paper_poisson(5, 1)).unwrap();
+        bytes[4..6].copy_from_slice(&2u16.to_le_bytes());
+        let err = BinTrace::from_bytes(bytes).unwrap_err();
+        assert!(err.to_string().contains("version 2"), "{err}");
+    }
+
+    #[test]
+    fn bad_magic_is_rejected() {
+        let mut bytes =
+            trace_to_bytes(&Trace::paper_poisson(5, 1)).unwrap();
+        bytes[0] = b'X';
+        let err = BinTrace::from_bytes(bytes).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn nan_and_negative_counts_are_rejected() {
+        // Writer side.
+        let agents = vec!["a".to_string()];
+        let mut w =
+            BinTraceWriter::new(Vec::new(), &agents, 1.0).unwrap();
+        assert!(w.push_row(&[f64::NAN]).is_err());
+        assert!(w.push_row(&[-1.0]).is_err());
+
+        // Reader side: a hand-built dense block with a NaN cell.
+        let mut bytes = header_bytes(&["a"], 1.0);
+        bytes.push(1u8); // dense
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&f64::NAN.to_le_bytes());
+        assert!(BinTrace::from_bytes(bytes).is_err());
+
+        let mut bytes = header_bytes(&["a"], 1.0);
+        bytes.push(1u8);
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&(-2.0f64).to_le_bytes());
+        assert!(BinTrace::from_bytes(bytes).is_err());
+    }
+
+    #[test]
+    fn reader_inherits_dt_validation() {
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let bytes = header_bytes(&["a"], bad);
+            let err = BinTrace::from_bytes(bytes).unwrap_err();
+            assert!(err.to_string().contains("dt"), "{err}");
+        }
+        assert!(
+            BinTraceWriter::new(Vec::new(), &["a".to_string()], 0.0)
+                .is_err());
+    }
+
+    #[test]
+    fn idle_runs_collapse_into_tiny_files() {
+        // 10_000 idle steps bracketed by two busy ones.
+        let agents = vec!["a".to_string(), "b".to_string()];
+        let mut w =
+            BinTraceWriter::new(Vec::new(), &agents, 1.0).unwrap();
+        w.push_row(&[1.0, 0.0]).unwrap();
+        w.push_idle(10_000).unwrap();
+        w.push_row(&[0.0, 2.0]).unwrap();
+        let bytes = w.finish().unwrap();
+        assert!(bytes.len() < 200, "idle run must not be dense: {}",
+                bytes.len());
+        let bin = BinTrace::from_bytes(bytes).unwrap();
+        assert_eq!(bin.steps(), 10_002);
+        assert_eq!(bin.idle_until(0), None);
+        assert_eq!(bin.idle_until(1), Some(10_001));
+        assert_eq!(bin.idle_until(10_001), None);
+        let mut row = vec![0.0; 2];
+        bin.fill_row(10_001, &mut row);
+        assert_eq!(row, vec![0.0, 2.0]);
+        bin.fill_row(5_000, &mut row);
+        assert_eq!(row, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn sparse_encoding_wins_on_sparse_rows() {
+        // 4096 agents, one nonzero cell per step: sparse events are
+        // 16 bytes vs a 32 KiB dense row.
+        let agents: Vec<String> =
+            (0..4096).map(|i| format!("a{i}")).collect();
+        let mut w =
+            BinTraceWriter::new(Vec::new(), &agents, 1.0).unwrap();
+        let mut row = vec![0.0; 4096];
+        for s in 0..10 {
+            row[s * 7] = 1.0;
+            w.push_row(&row).unwrap();
+            row[s * 7] = 0.0;
+        }
+        let bytes = w.finish().unwrap();
+        assert!(bytes.len() < 4096 * 8,
+                "sparse block expected, got {} bytes", bytes.len());
+        let bin = BinTrace::from_bytes(bytes).unwrap();
+        let mut got = vec![0.0; 4096];
+        bin.fill_row(3, &mut got);
+        assert_eq!(got[21], 1.0);
+        assert_eq!(got.iter().sum::<f64>(), 1.0);
+    }
+
+    #[test]
+    fn idle_oracle_matches_the_in_memory_trace() {
+        let trace = Trace::paper_poisson(120, 11);
+        let bin =
+            BinTrace::from_bytes(trace_to_bytes(&trace).unwrap())
+                .unwrap();
+        for step in 0..120 {
+            assert_eq!(bin.idle_until(step), trace.idle_until(step),
+                       "step {step}");
+        }
+    }
+
+    #[test]
+    fn recorder_round_trips_timestamps_verbatim() {
+        let agents = vec!["a".to_string(), "b".to_string()];
+        let mut rec = TraceRecorder::new(agents, 0.5).unwrap();
+        let stamps =
+            [(0, 0.1), (1, 0.123456789), (0, 0.9), (1, 2.25)];
+        for (agent, t) in stamps {
+            rec.record(agent, t);
+        }
+        assert_eq!(rec.len(), 4);
+        let bin = rec.to_bintrace(10).unwrap();
+        assert_eq!(bin.steps(), 10);
+        assert_eq!(bin.total_arrivals(), 4.0);
+
+        let mut out = Vec::new();
+        assert!(bin.step_bursts(0, &mut out));
+        assert_eq!(out, vec![
+            BurstEvent { agent: 0, count: 1.0, t_s: 0.1 },
+            BurstEvent { agent: 1, count: 1.0, t_s: 0.123456789 },
+        ]);
+        assert!(bin.step_bursts(1, &mut out));
+        assert_eq!(out,
+                   vec![BurstEvent { agent: 0, count: 1.0, t_s: 0.9 }]);
+        assert!(bin.step_bursts(4, &mut out));
+        assert_eq!(out,
+                   vec![BurstEvent { agent: 1, count: 1.0, t_s: 2.25 }]);
+        // Idle steps inside the covered range still answer as bursts
+        // of nothing only via fill_row — step 2 sits in an idle block.
+        assert!(!bin.step_bursts(2, &mut out));
+        let mut row = vec![0.0; 2];
+        bin.fill_row(2, &mut row);
+        assert_eq!(row, vec![0.0, 0.0]);
+
+        // Fluid collapse: per-step sums.
+        bin.fill_row(0, &mut row);
+        assert_eq!(row, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn recorder_coalesces_identical_arrivals() {
+        let mut rec =
+            TraceRecorder::new(vec!["a".to_string()], 1.0).unwrap();
+        for _ in 0..3 {
+            rec.record(0, 1.5);
+        }
+        let bin = rec.to_bintrace(2).unwrap();
+        let mut out = Vec::new();
+        assert!(bin.step_bursts(1, &mut out));
+        assert_eq!(out,
+                   vec![BurstEvent { agent: 0, count: 3.0, t_s: 1.5 }]);
+        let mut row = vec![0.0];
+        bin.fill_row(1, &mut row);
+        assert_eq!(row, vec![3.0]);
+    }
+
+    #[test]
+    fn burst_collapse_matches_dense_totals() {
+        // A burst trace and a dense trace with the same per-step sums
+        // must produce identical fill_row outputs.
+        let mut rec = TraceRecorder::new(
+            vec!["a".to_string(), "b".to_string()], 1.0).unwrap();
+        rec.record(0, 0.25);
+        rec.record(0, 0.75);
+        rec.record(1, 0.5);
+        rec.record(1, 2.1);
+        let bin = rec.to_bintrace(3).unwrap();
+        let dense = Trace::new(
+            vec!["a".into(), "b".into()], 1.0,
+            vec![vec![2.0, 1.0], vec![0.0, 0.0], vec![0.0, 1.0]])
+            .unwrap();
+        let mut a = vec![0.0; 2];
+        let mut b = vec![0.0; 2];
+        for step in 0..3 {
+            bin.fill_row(step, &mut a);
+            dense.fill_row(step, &mut b);
+            assert_eq!(a, b, "step {step}");
+        }
+        assert_eq!(bin.to_trace().unwrap(), dense);
+    }
+
+    #[test]
+    fn writer_rejects_malformed_burst_events() {
+        let agents = vec!["a".to_string()];
+        let mut w =
+            BinTraceWriter::new(Vec::new(), &agents, 1.0).unwrap();
+        // Agent out of range.
+        let ev = BurstEvent { agent: 1, count: 1.0, t_s: 0.5 };
+        assert!(w.push_burst_step(&[ev]).is_err());
+        // Fractional count.
+        let ev = BurstEvent { agent: 0, count: 0.5, t_s: 0.5 };
+        assert!(w.push_burst_step(&[ev]).is_err());
+        // Timestamp outside the step being pushed (step 0 here).
+        let ev = BurstEvent { agent: 0, count: 1.0, t_s: 3.5 };
+        assert!(w.push_burst_step(&[ev]).is_err());
+    }
+
+    #[test]
+    fn blocks_must_be_contiguous() {
+        let mut bytes = header_bytes(&["a"], 1.0);
+        bytes.push(2u8); // sparse
+        bytes.extend_from_slice(&5u64.to_le_bytes()); // step 5 != 0
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        let err = BinTrace::from_bytes(bytes).unwrap_err();
+        assert!(err.to_string().contains("expected 0"), "{err}");
+    }
+
+    #[test]
+    fn fuzzed_round_trips_are_bit_equal() {
+        // Mixed dense/sparse/idle shapes across seeds and dts.
+        for seed in 1..=6u64 {
+            let mut trace = Trace::paper_poisson(97, seed);
+            trace.dt = [0.25, 0.5, 1.0][seed as usize % 3];
+            // Punch idle windows so the writer mixes block kinds.
+            for row in trace.counts
+                .iter_mut().skip((seed % 5) as usize * 9).take(20)
+            {
+                row.fill(0.0);
+            }
+            let bin =
+                BinTrace::from_bytes(trace_to_bytes(&trace).unwrap())
+                    .unwrap();
+            assert_eq!(bin.to_trace().unwrap(), trace, "seed {seed}");
+        }
+    }
+}

@@ -3,16 +3,40 @@
 //! The paper evaluates a steady §IV.A workload (constant mean rates with a
 //! fixed random seed) plus three robustness scenarios (§V.B): 3× overload,
 //! 10× spike, and 90 % single-agent dominance. [`WorkloadGenerator`]
-//! produces all of them, and [`trace`] records/replays arrival traces as
-//! CSV so serving runs are reproducible end-to-end. [`workflow`] adds
+//! produces all of them, and the trace layer records/replays arrival
+//! streams so serving runs are reproducible end-to-end. [`workflow`] adds
 //! the collaborative-reasoning axis: multi-stage workflow-DAG tasks
 //! ([`WorkflowSpec`]) released by a seeded [`WorkflowTracker`] instead
 //! of independent per-agent streams.
+//!
+//! The trace layer itself is two formats behind one replay trait:
+//!
+//! ```text
+//!   WorkloadGenerator ──record──▶ trace::Trace     (CSV, dense matrix)
+//!   ServingCore ──TraceRecorder──▶ bintrace::BinTrace  (binary, zero-
+//!         (per-request enqueues)     copy frames + burst timestamps)
+//!                    │                        │
+//!                    └──── TraceSource ◀──────┘
+//!                               │
+//!          Simulator / ClusterSimulator / ServingSimulator
+//!          (fluid engines collapse bursts by summation; the
+//!           serving engine injects burst timestamps natively)
+//! ```
+//!
+//! [`trace`] holds the CSV side ([`trace::Trace`], [`trace::TraceCorpus`]);
+//! [`bintrace`] holds the compact binary format (`ATRB`), its streaming
+//! writer/zero-copy reader, the [`TraceSource`] trait every engine
+//! replays through, and the [`TraceRecorder`] the serving layer dumps
+//! live timelines with. `agentsrv trace convert` translates between the
+//! two, corpus-wide.
 
+pub mod bintrace;
 mod generator;
 pub mod trace;
 mod workflow;
 
+pub use bintrace::{BinTrace, BinTraceWriter, BurstEvent, TraceRecorder,
+                   TraceSource};
 pub use generator::{ArrivalProcess, WorkloadGenerator, WorkloadKind};
 pub use workflow::{WorkflowSpec, WorkflowStage, WorkflowStats,
                    WorkflowTracker, WorkflowWorkload};

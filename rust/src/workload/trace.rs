@@ -41,12 +41,19 @@ impl Trace {
         Ok(trace)
     }
 
-    /// Check row-width consistency: every step's row must cover every
-    /// agent. Returns a labelled [`Error::Trace`] naming the first
-    /// offending row. The replay engines call this before touching any
-    /// run state, so a ragged trace fails fast instead of panicking
-    /// mid-run.
+    /// Check `dt` and row-width consistency: the step duration must be
+    /// positive and finite (a zero or negative `dt` would corrupt every
+    /// `count / dt` rate downstream), and every step's row must cover
+    /// every agent. Returns a labelled [`Error::Trace`] naming the
+    /// offense. The replay engines call this before touching any run
+    /// state, so a malformed trace fails fast instead of panicking (or
+    /// silently emitting garbage rates) mid-run.
     pub fn validate(&self) -> Result<()> {
+        if !(self.dt > 0.0) || !self.dt.is_finite() {
+            return Err(Error::Trace(format!(
+                "trace dt must be positive and finite, got {}",
+                self.dt)));
+        }
         let n = self.agents.len();
         for (step, row) in self.counts.iter().enumerate() {
             if row.len() != n {
@@ -97,15 +104,22 @@ impl Trace {
     }
 
     /// Serialize as CSV: header `# dt=<dt>` then `step,<agent...>` rows.
+    /// The file handle is buffered and cells stream through `write!`
+    /// directly — no per-row `Vec<String>` + `join` allocations, which
+    /// used to dominate corpus-save time on large traces.
     pub fn save(&self, path: &Path) -> Result<()> {
-        let mut f = std::fs::File::create(path)?;
+        let mut f =
+            std::io::BufWriter::new(std::fs::File::create(path)?);
         writeln!(f, "# dt={}", self.dt)?;
         writeln!(f, "step,{}", self.agents.join(","))?;
         for (t, row) in self.counts.iter().enumerate() {
-            let cells: Vec<String> =
-                row.iter().map(|c| format!("{c}")).collect();
-            writeln!(f, "{t},{}", cells.join(","))?;
+            write!(f, "{t}")?;
+            for c in row {
+                write!(f, ",{c}")?;
+            }
+            writeln!(f)?;
         }
+        f.flush()?;
         Ok(())
     }
 
@@ -149,7 +163,10 @@ impl Trace {
             counts.push(row.map_err(
                 |e| Error::Trace(format!("row {lineno}: {e}")))?);
         }
-        Ok(Trace { agents, dt, counts })
+        // Through the validated constructor, so a file carrying a
+        // zero/negative dt (or a ragged body) is rejected here rather
+        // than surviving into replay.
+        Trace::new(agents, dt, counts)
     }
 }
 
@@ -364,6 +381,30 @@ mod tests {
         let err = trace.validate().unwrap_err();
         assert!(matches!(err, Error::Trace(_)), "{err}");
         assert!(err.to_string().contains("row 3"), "{err}");
+    }
+
+    #[test]
+    fn zero_or_negative_dt_is_rejected_everywhere() {
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let err = Trace::new(vec!["a".into()], bad,
+                                 vec![vec![1.0]]).unwrap_err();
+            match err {
+                Error::Trace(msg) => assert!(msg.contains("dt"), "{msg}"),
+                other => panic!("expected Error::Trace, got {other}"),
+            }
+            let mut trace = Trace::paper_poisson(3, 1);
+            trace.dt = bad;
+            assert!(trace.validate().is_err(), "dt={bad}");
+        }
+
+        // And via load(): a zero-dt file parses but must not survive.
+        let dir = crate::util::TempDir::new("t").unwrap();
+        let path = dir.path().join("zero_dt.csv");
+        std::fs::write(&path, "# dt=0\nstep,a\n0,1\n").unwrap();
+        let err = Trace::load(&path).unwrap_err();
+        assert!(matches!(err, Error::Trace(_)), "{err}");
+        std::fs::write(&path, "# dt=-2\nstep,a\n0,1\n").unwrap();
+        assert!(Trace::load(&path).is_err());
     }
 
     #[test]

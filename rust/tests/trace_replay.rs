@@ -1,13 +1,18 @@
 //! Integration: trace record → replay equivalence, corpus round-trips
-//! through a directory, and the Eq. 2 objective.
+//! through a directory, CSV ↔ `.atrb` binary round-trips and
+//! cross-engine binary-replay equivalence, and the Eq. 2 objective.
 
 use agentsrv::agents::{AgentProfile, AgentRegistry};
 use agentsrv::allocator::{AdaptivePolicy, PolicyKind, StaticEqualPolicy};
+use agentsrv::cluster::{ClusterSimulator, Rebalancer};
+use agentsrv::server::{ServingConfig, ServingSimulator};
 use agentsrv::sim::batch::{run_sweep, TraceScenario};
 use agentsrv::sim::{SimConfig, Simulator};
-use agentsrv::util::TempDir;
+use agentsrv::util::{Rng, TempDir};
+use agentsrv::workload::bintrace::{save_trace, trace_to_bytes};
 use agentsrv::workload::trace::{Trace, TraceCorpus};
-use agentsrv::workload::WorkloadGenerator;
+use agentsrv::workload::{BinTrace, BinTraceWriter, BurstEvent,
+                         TraceSource, WorkloadGenerator};
 use agentsrv::Error;
 
 #[test]
@@ -142,6 +147,150 @@ fn malformed_corpus_file_surfaces_labelled_trace_error() {
     }
     // With the malformed files gone, the survivor loads fine.
     assert_eq!(TraceCorpus::load_dir(dir.path()).unwrap().len(), 1);
+}
+
+#[test]
+fn fuzzed_traces_roundtrip_binary_bit_equal() {
+    // Seeded random corpora with idle runs (the sparse/idle encoder
+    // paths), dense stretches, and varying shapes: every trace must
+    // survive Trace -> binary -> Trace in memory, and the CSV ->
+    // binary -> CSV file chain the `trace convert` CLI moves.
+    for seed in 1u64..=8 {
+        let mut rng = Rng::new(seed);
+        let n_agents = 1 + (seed as usize % 4);
+        let agents: Vec<String> =
+            (0..n_agents).map(|i| format!("a{i}")).collect();
+        let dt = 0.25 * seed as f64;
+        let steps = 50 + seed * 17;
+        let counts: Vec<Vec<f64>> = (0..steps).map(|_| {
+            if rng.uniform() < 0.4 {
+                vec![0.0; n_agents]
+            } else {
+                (0..n_agents)
+                    .map(|_| (rng.uniform() * 4.0).floor())
+                    .collect()
+            }
+        }).collect();
+        let trace = Trace::new(agents, dt, counts).unwrap();
+
+        let bin = BinTrace::from_bytes(trace_to_bytes(&trace).unwrap())
+            .unwrap();
+        assert_eq!(bin.to_trace().unwrap(), trace, "seed {seed}");
+
+        let dir = TempDir::new("fuzz").unwrap();
+        let csv = dir.path().join("t.csv");
+        let atrb = dir.path().join("t.atrb");
+        trace.save(&csv).unwrap();
+        save_trace(&Trace::load(&csv).unwrap(), &atrb).unwrap();
+        let back = BinTrace::open(&atrb).unwrap().to_trace().unwrap();
+        let csv2 = dir.path().join("t2.csv");
+        back.save(&csv2).unwrap();
+        assert_eq!(Trace::load(&csv2).unwrap(), trace, "seed {seed}");
+    }
+}
+
+#[test]
+fn fluid_and_cluster_binary_replay_match_csv_replay() {
+    let trace = Trace::paper_poisson(120, 7);
+    let bin = BinTrace::from_bytes(trace_to_bytes(&trace).unwrap())
+        .unwrap();
+
+    // Fluid single-GPU: the binary source (skip-idle and dense paths
+    // both) replays bit-identically to the CSV trace.
+    let sim = Simulator::new(SimConfig::paper_poisson(),
+                             AgentProfile::paper_agents());
+    let want = sim.run_trace(&mut AdaptivePolicy::default(), &trace);
+    for got in [
+        sim.run_source(&mut AdaptivePolicy::default(), &bin),
+        sim.run_source_dense(&mut AdaptivePolicy::default(), &bin),
+        sim.run_source(&mut AdaptivePolicy::default(), &trace),
+    ] {
+        assert_eq!(got.mean_latency(), want.mean_latency());
+        assert_eq!(got.total_throughput(), want.total_throughput());
+        assert_eq!(got.cost_dollars, want.cost_dollars);
+    }
+
+    // Cluster: same contract through the multi-GPU engine.
+    let cluster = ClusterSimulator::new(
+        SimConfig::paper(), AgentRegistry::paper(), 2, 1.0,
+        Rebalancer::Static).unwrap();
+    let want = cluster.run_source(&trace).unwrap();
+    assert_eq!(cluster.run_source(&bin).unwrap(), want);
+    assert_eq!(cluster.run_source_dense(&bin).unwrap(), want);
+}
+
+#[test]
+fn burst_encoded_traces_collapse_bit_exactly_in_fluid_engines() {
+    // A hand-built .atrb with all three frame kinds: a dense row, an
+    // idle run, and burst steps carrying sub-dt timestamps.
+    let agents: Vec<String> = AgentProfile::paper_agents().iter()
+        .map(|p| p.name.clone()).collect();
+    let dt = 0.5;
+    let mut w = BinTraceWriter::new(Vec::new(), &agents, dt).unwrap();
+    w.push_row(&[2.0, 0.0, 1.0, 0.0]).unwrap();
+    w.push_idle(5).unwrap();
+    for step in 6u64..30 {
+        let t0 = step as f64 * dt;
+        w.push_burst_step(&[
+            BurstEvent { agent: (step % 4) as u32, count: 2.0,
+                         t_s: t0 + 0.1 },
+            BurstEvent { agent: ((step + 1) % 4) as u32, count: 1.0,
+                         t_s: t0 + 0.4 },
+        ]).unwrap();
+    }
+    w.push_row(&[0.0, 3.0, 0.0, 1.0]).unwrap();
+    let bin = BinTrace::from_bytes(w.finish().unwrap()).unwrap();
+    assert_eq!(bin.steps(), 31);
+
+    // The dense collapse sums each burst step's counts.
+    let collapsed = bin.to_trace().unwrap();
+    let mut row = vec![0.0; 4];
+    collapsed.fill_row(6, &mut row);
+    assert_eq!(row, [0.0, 0.0, 2.0, 1.0]);
+
+    // Fluid engines consume bursts by summation, so replaying the
+    // binary form is bit-identical to replaying its dense collapse.
+    let sim = Simulator::new(SimConfig::paper(),
+                             AgentProfile::paper_agents());
+    let want = sim.run_trace(&mut AdaptivePolicy::default(), &collapsed);
+    for got in [
+        sim.run_source(&mut AdaptivePolicy::default(), &bin),
+        sim.run_source_dense(&mut AdaptivePolicy::default(), &bin),
+    ] {
+        assert_eq!(got.mean_latency(), want.mean_latency());
+        assert_eq!(got.total_throughput(), want.total_throughput());
+        assert_eq!(got.cost_dollars, want.cost_dollars);
+    }
+
+    let cluster = ClusterSimulator::new(
+        SimConfig::paper(), AgentRegistry::paper(), 2, 1.0,
+        Rebalancer::Static).unwrap();
+    assert_eq!(cluster.run_source(&bin).unwrap(),
+               cluster.run_source(&collapsed).unwrap());
+}
+
+#[test]
+fn serving_replay_matches_across_formats_and_is_deterministic() {
+    let mut cfg = ServingConfig::paper();
+    cfg.duration_s = 3.0;
+    let sim = ServingSimulator::with_registry(cfg,
+                                              AgentRegistry::paper());
+
+    // A dense recorded trace replays identically from CSV and binary.
+    let trace = Trace::paper_poisson(30, 11);
+    let bin = BinTrace::from_bytes(trace_to_bytes(&trace).unwrap())
+        .unwrap();
+    let want = sim.run_trace(&mut PolicyKind::adaptive(), &trace);
+    assert_eq!(sim.run_source(&mut PolicyKind::adaptive(), &bin), want);
+
+    // A live run's burst-timestamped recording replays bit-identically,
+    // and deterministically so.
+    let (original, recorded) =
+        sim.run_recording(&mut PolicyKind::adaptive());
+    let a = sim.run_source(&mut PolicyKind::adaptive(), &recorded);
+    let b = sim.run_source(&mut PolicyKind::adaptive(), &recorded);
+    assert_eq!(a, b, "replay must be deterministic");
+    assert_eq!(a, original, "replay must reproduce the live run");
 }
 
 #[test]
